@@ -1,0 +1,166 @@
+"""AOT compile path: lower the split-network part functions to HLO *text*
+artifacts that the rust runtime loads via PJRT.
+
+Interchange format is HLO text, NOT serialized HloModuleProto: jax ≥ 0.5
+emits protos with 64-bit instruction ids which the xla crate's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Outputs, per architecture (default: vgg_mini and resnet_mini):
+
+    artifacts/<arch>/<fn>.hlo.txt      six part functions (see model.py)
+    artifacts/<arch>/manifest.json     flattened I/O signatures + cuts
+    artifacts/<arch>/init/<part>_<k>.bin   initial params, raw f32 LE
+
+Python runs ONCE at build time (`make artifacts`); the rust binary is
+self-contained afterwards.
+
+Usage: python -m compile.aot [--out-dir ../artifacts] [--archs vgg_mini,resnet_mini]
+       [--batch 16] [--check]
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+DEFAULT_BATCH = 16
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def leaf_specs(tree):
+    """Flatten a pytree into [(path, shape, dtype)] in jax flatten order."""
+    paths = jax.tree_util.tree_flatten_with_path(tree)[0]
+    specs = []
+    for path, leaf in paths:
+        name = "".join(str(p) for p in path)
+        arr = np.asarray(leaf)
+        specs.append({"path": name, "shape": list(arr.shape), "dtype": str(arr.dtype)})
+    return specs
+
+
+def export_arch(arch: str, out_dir: str, batch: int, check: bool) -> dict:
+    os.makedirs(os.path.join(out_dir, arch, "init"), exist_ok=True)
+    spec = model.ARCHS[arch]
+    cuts = spec["default_cuts"]
+    fns = model.make_part_fns(arch, cuts, use_pallas=True)
+    params = model.init_params(arch, seed=0)
+    p1, p2, p3 = model.split_params(arch, params, cuts)
+
+    # Example args (shapes fix the HLO signature).
+    x = jnp.zeros((batch, *model.INPUT_SHAPE), jnp.float32)
+    y = jnp.zeros((batch,), jnp.int32)
+    a1 = fns["part1_fwd"](p1, x)
+    a2 = fns["part2_fwd"](p2, a1)
+    g_a2 = jnp.zeros_like(a2)
+    g_a1 = jnp.zeros_like(a1)
+
+    exports = {
+        "part1_fwd": (fns["part1_fwd"], (p1, x)),
+        "part2_fwd": (fns["part2_fwd"], (p2, a1)),
+        "part3_loss": (fns["part3_loss"], (p3, a2, y)),
+        "part3_bwd": (fns["part3_bwd"], (p3, a2, y)),
+        "part2_bwd": (fns["part2_bwd"], (p2, a1, g_a2)),
+        "part1_bwd": (fns["part1_bwd"], (p1, x, g_a1)),
+    }
+
+    manifest = {
+        "arch": arch,
+        "batch": batch,
+        "cuts": list(cuts),
+        "input_shape": list(model.INPUT_SHAPE),
+        "num_classes": model.NUM_CLASSES,
+        "functions": {},
+        "params": {},
+    }
+
+    # Dump initial params per part (raw f32 little-endian in leaf order).
+    for part_name, part in [("p1", p1), ("p2", p2), ("p3", p3)]:
+        specs = leaf_specs(part)
+        files = []
+        for k, leaf in enumerate(jax.tree_util.tree_leaves(part)):
+            fname = f"init/{part_name}_{k}.bin"
+            np.asarray(leaf, np.float32).tofile(os.path.join(out_dir, arch, fname))
+            files.append(fname)
+        manifest["params"][part_name] = {
+            "leaves": specs,
+            "files": files,
+            "n_elements": int(sum(int(np.prod(s["shape"])) if s["shape"] else 1 for s in specs)),
+        }
+
+    for name, (fn, args) in exports.items():
+        lowered = jax.jit(fn).lower(*args)
+        text = to_hlo_text(lowered)
+        path = os.path.join(out_dir, arch, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        in_specs = []
+        for a in jax.tree_util.tree_leaves(args):
+            arr = np.asarray(a)
+            in_specs.append({"shape": list(arr.shape), "dtype": str(arr.dtype)})
+        out_example = jax.eval_shape(fn, *args)
+        out_specs = [
+            {"shape": list(s.shape), "dtype": str(s.dtype)}
+            for s in jax.tree_util.tree_leaves(out_example)
+        ]
+        manifest["functions"][name] = {
+            "hlo": f"{name}.hlo.txt",
+            "inputs": in_specs,
+            "outputs": out_specs,
+        }
+        if check:
+            _check_finite(fn, args, name)
+        print(
+            f"[aot] {arch}/{name}: {len(in_specs)} inputs, {len(out_specs)} outputs, "
+            f"{len(text)//1024} KiB hlo"
+        )
+
+    mpath = os.path.join(out_dir, arch, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    return manifest
+
+
+def _check_finite(fn, args, name: str):
+    """Build-time numerics gate: reference outputs must be finite. (The
+    full HLO-vs-jax cross-check runs on the rust side in cargo tests.)"""
+    out = jax.tree_util.tree_leaves(fn(*args))
+    assert all(np.all(np.isfinite(np.asarray(e))) for e in out), f"{name}: non-finite output"
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument(
+        "--out-dir", default=os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+    )
+    ap.add_argument("--archs", default="vgg_mini,resnet_mini")
+    ap.add_argument("--batch", type=int, default=DEFAULT_BATCH)
+    ap.add_argument("--check", action="store_true", help="verify reference outputs are finite")
+    args = ap.parse_args()
+    out_dir = os.path.abspath(args.out_dir)
+    os.makedirs(out_dir, exist_ok=True)
+    archs = [a.strip() for a in args.archs.split(",") if a.strip()]
+    for arch in archs:
+        export_arch(arch, out_dir, args.batch, args.check)
+    # Top-level index for the rust artifact registry.
+    with open(os.path.join(out_dir, "index.json"), "w") as f:
+        json.dump({"archs": archs, "batch": args.batch}, f, indent=2, sort_keys=True)
+    print(f"[aot] wrote artifacts to {out_dir}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,139 @@
+"""L2 perf surface: static cost analysis of the exported HLO artifacts.
+
+Parses the HLO text (no execution) and reports, per artifact:
+  * op histogram (dot/convolution/while/elementwise/...)
+  * ENTRY parameter byte totals,
+  * estimated FLOPs of the dot ops (out_numel x contracting dim, x2),
+  * arithmetic intensity (FLOPs / param bytes) — the roofline x-axis,
+plus the L1 kernel's VMEM/MXU tile estimates (fused_block helpers).
+
+Used by the §Perf pass (EXPERIMENTS.md) to verify that the Pallas-
+interpret matmuls survived lowering as real `dot` ops and that no
+artifact recomputes what it should reuse.
+Usage: python -m compile.aot_report [--artifacts ../artifacts]
+"""
+
+import argparse
+import json
+import os
+import re
+
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?([\w.\-]+)\s*=\s*f32\[([\d,]*)\]")
+_OP_RE = re.compile(r"^\s*(?:ROOT\s+)?[\w.\-]+\s*=\s*\S+\s+([\w\-]+)\(", re.M)
+_DOT_LINE_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?[\w.\-]+\s*=\s*f32\[([\d,]*)\][^=]*\bdot\(([\w.\-]+),\s*([\w.\-]+)\),"
+    r"\s*lhs_contracting_dims=\{([\d,]+)\}",
+    re.M,
+)
+
+
+def _numel(dims: str) -> int:
+    if not dims:
+        return 1
+    out = 1
+    for d in dims.split(","):
+        out *= int(d)
+    return out
+
+
+def analyze_hlo(text: str) -> dict:
+    """Static analysis of one HLO module text."""
+    ops = {}
+    for m in _OP_RE.finditer(text):
+        op = m.group(1)
+        ops[op] = ops.get(op, 0) + 1
+
+    # Symbol table: instruction name -> dims string.
+    shapes = {}
+    for line in text.splitlines():
+        m = _DEF_RE.match(line)
+        if m:
+            shapes[m.group(1)] = m.group(2)
+
+    # FLOPs: per dot, 2 * numel(out) * K where K = product of the lhs
+    # contracting dims. Dots inside while-loop bodies (the Pallas grid)
+    # appear once; scale by the loop trip count is not recoverable
+    # statically, so this is a per-iteration lower bound (noted in
+    # EXPERIMENTS.md).
+    flops = 0
+    for m in _DOT_LINE_RE.finditer(text):
+        out_dims, lhs_name, _rhs, contract = m.group(1), m.group(2), m.group(3), m.group(4)
+        lhs_dims = shapes.get(lhs_name, "")
+        if not lhs_dims:
+            continue
+        dims = [int(d) for d in lhs_dims.split(",") if d]
+        k = 1
+        for c in contract.split(","):
+            ci = int(c)
+            if ci < len(dims):
+                k *= dims[ci]
+        flops += 2 * _numel(out_dims) * k
+
+    # ENTRY parameters only.
+    param_bytes = 0
+    entry = text[text.find("ENTRY"):] if "ENTRY" in text else text
+    for line in entry.splitlines():
+        if "parameter(" in line:
+            m = _DEF_RE.match(line)
+            if m:
+                param_bytes += 4 * _numel(m.group(2))
+
+    return {
+        "ops": ops,
+        "n_instructions": sum(ops.values()),
+        "whiles": ops.get("while", 0),
+        "dots": ops.get("dot", 0),
+        "flops_est": flops,
+        "param_bytes": param_bytes,
+        "intensity": flops / max(1, param_bytes),
+    }
+
+
+def report(artifacts_dir: str) -> dict:
+    out = {}
+    for arch in sorted(os.listdir(artifacts_dir)):
+        mpath = os.path.join(artifacts_dir, arch, "manifest.json")
+        if not os.path.isfile(mpath):
+            continue
+        with open(mpath) as f:
+            manifest = json.load(f)
+        arch_report = {}
+        for name, fn in manifest["functions"].items():
+            with open(os.path.join(artifacts_dir, arch, fn["hlo"])) as f:
+                arch_report[name] = analyze_hlo(f.read())
+        out[arch] = arch_report
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--artifacts", default=os.path.join(os.path.dirname(__file__), "..", "..", "artifacts"))
+    args = ap.parse_args()
+    rep = report(os.path.abspath(args.artifacts))
+    for arch, fns in rep.items():
+        print(f"\n== {arch} ==")
+        print(f"{'fn':<12} {'instrs':>7} {'whiles':>7} {'dots':>5} {'MFLOP/it':>9} {'paramMB':>8} {'F/B':>6}")
+        for name, r in sorted(fns.items()):
+            print(
+                f"{name:<12} {r['n_instructions']:>7} {r['whiles']:>7} {r['dots']:>5} "
+                f"{r['flops_est']/1e6:>9.2f} {r['param_bytes']/1e6:>8.2f} {r['intensity']:>6.1f}"
+            )
+    # Kernel tile accounting (DESIGN.md §Perf inputs).
+    from .kernels import fused_block
+
+    print("\n== L1 kernel tile accounting (part-2 conv shapes, batch 16) ==")
+    shapes = [
+        ("conv 16→32 @16x16", 16 * 16 * 16, 9 * 16, 32),
+        ("conv 32→32 @16x16", 16 * 16 * 16, 9 * 32, 32),
+        ("conv 32→64 @8x8", 16 * 8 * 8, 9 * 32, 64),
+        ("conv 64→64 @8x8", 16 * 8 * 8, 9 * 64, 64),
+    ]
+    print(f"{'shape':<20} {'M':>6} {'K':>5} {'N':>4} {'VMEM KiB':>9} {'MXU est':>8}")
+    for label, m, k, n in shapes:
+        vmem = fused_block.vmem_bytes_per_instance(m, k, n) / 1024
+        mxu = fused_block.mxu_utilization_estimate(m, k, n)
+        print(f"{label:<20} {m:>6} {k:>5} {n:>4} {vmem:>9.1f} {mxu:>8.2f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,42 @@
+"""Synthetic CIFAR-10-like dataset (build-time / test-time).
+
+CIFAR-10 itself is not downloadable in this image, and the paper's
+orchestration layer is explicitly accuracy-oblivious (§III: "the resulting
+model accuracy is not affected"), so the end-to-end training example only
+needs a dataset on which the split pipeline demonstrably *learns*. We use
+class-conditional signals: each class k has a deterministic low-frequency
+template; samples are template + Gaussian noise. A linear-ish model
+separates them, and the loss curve of the split pipeline must fall.
+
+The rust runtime embeds the same generator (rust/src/data/synth.rs) so the
+request path never touches python.
+"""
+
+import numpy as np
+
+NUM_CLASSES = 10
+SHAPE = (32, 32, 3)
+
+
+def class_template(k: int) -> np.ndarray:
+    """Deterministic template for class k: 2-D sinusoid mixtures whose
+    frequencies/phases are simple functions of k (matches synth.rs)."""
+    h, w, c = SHAPE
+    yy, xx = np.meshgrid(np.arange(h), np.arange(w), indexing="ij")
+    out = np.zeros(SHAPE, np.float32)
+    for ch in range(c):
+        fx = 1.0 + (k % 5)
+        fy = 1.0 + ((k + ch) % 3)
+        phase = 0.7 * k + 1.3 * ch
+        out[:, :, ch] = np.sin(2 * np.pi * fx * xx / w + phase) * np.cos(
+            2 * np.pi * fy * yy / h + 0.5 * phase
+        )
+    return 0.5 * out
+
+
+def make_batch(rng: np.random.Generator, batch: int, noise: float = 0.35):
+    """Returns (x float32 (B,32,32,3), y int32 (B,))."""
+    y = rng.integers(0, NUM_CLASSES, size=batch).astype(np.int32)
+    x = np.stack([class_template(int(k)) for k in y]).astype(np.float32)
+    x += noise * rng.standard_normal(x.shape).astype(np.float32)
+    return x, y

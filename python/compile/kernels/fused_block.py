@@ -1,0 +1,167 @@
+"""L1 — Pallas kernels for the helper-side hot spot.
+
+The helper executes part-2 of the split network: stacks of 3x3 conv +
+bias + ReLU blocks. On TPU the profitable mapping is conv-as-im2col-matmul
+feeding the MXU systolic array, with bias and ReLU fused in VMEM so the
+activation tensor makes a single HBM round trip per block (see DESIGN.md
+§Hardware-Adaptation). We express exactly that:
+
+* ``fused_matmul_bias_act`` — tiled (M, K) x (K, N) matmul with fused bias
+  add and optional ReLU. The grid tiles M and N; each program instance
+  holds an (TM, K) A-slab and a (K, TN) B-slab in VMEM and writes one
+  (TM, TN) output tile. K is the im2col contraction (9·C_in ≤ 1152 for our
+  models) and fits VMEM comfortably; the accumulation happens in fp32 on
+  the MXU via ``jnp.dot`` with ``preferred_element_type``.
+* ``fused_conv3x3_relu`` — the conv block: XLA-level im2col patch
+  extraction (a pure data-movement gather that XLA fuses with the
+  surrounding HLO) followed by the Pallas matmul kernel.
+
+Kernels are lowered with ``interpret=True``: this CPU image's PJRT cannot
+execute Mosaic custom-calls, and interpret mode lowers to plain HLO that
+the rust runtime executes. Block-shape choices for a real TPU are recorded
+in DESIGN.md (TM=128/TN=128 MXU tiles; VMEM budget per instance =
+TM·K + K·TN + TM·TN floats).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# MXU-shaped default tiles; shrunk automatically for small problems.
+TILE_M = 128
+TILE_N = 128
+
+
+def _matmul_kernel(a_ref, b_ref, bias_ref, o_ref, *, activation: str):
+    """One (TM, TN) output tile: o = act(a @ b + bias)."""
+    acc = jnp.dot(a_ref[...], b_ref[...], preferred_element_type=jnp.float32)
+    acc = acc + bias_ref[...][None, :]
+    if activation == "relu":
+        acc = jnp.maximum(acc, 0.0)
+    o_ref[...] = acc.astype(o_ref.dtype)
+
+
+def _pick_tile(dim: int, tile: int) -> int:
+    """Largest divisor of ``dim`` that is ≤ tile (prefer powers of two)."""
+    t = min(tile, dim)
+    while dim % t != 0:
+        t -= 1
+    return max(t, 1)
+
+
+def _pallas_matmul(a, b, bias, activation: str):
+    """Raw kernel invocation (no autodiff rules)."""
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, f"contraction mismatch {k} vs {k2}"
+    assert bias.shape == (n,), f"bias shape {bias.shape} != ({n},)"
+    tm = _pick_tile(m, TILE_M)
+    tn = _pick_tile(n, TILE_N)
+    grid = (m // tm, n // tn)
+    return pl.pallas_call(
+        functools.partial(_matmul_kernel, activation=activation),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, tn), lambda i, j: (0, j)),
+            pl.BlockSpec((tn,), lambda i, j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((tm, tn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(a, b, bias)
+
+
+# Pallas calls (interpret mode included) do not carry reverse-mode autodiff
+# rules, but part-2's *backward* task must flow gradients through the
+# kernel. We register the analytic VJP and express the two backward
+# matmuls through the same Pallas kernel, so fwd AND bwd HLO both contain
+# the tiled fused kernel (this is what the helper executes).
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def _fused(a, b, bias, activation):
+    return _pallas_matmul(a, b, bias, activation)
+
+
+def _fused_fwd(a, b, bias, activation):
+    out = _pallas_matmul(a, b, bias, activation)
+    return out, (a, b, out)
+
+
+def _fused_bwd(activation, res, g):
+    a, b, out = res
+    if activation == "relu":
+        g = g * (out > 0.0).astype(g.dtype)
+    k = b.shape[0]
+    n = b.shape[1]
+    g_a = _pallas_matmul(g, b.T, jnp.zeros((k,), jnp.float32), "none")
+    g_b = _pallas_matmul(a.T, g, jnp.zeros((n,), jnp.float32), "none")
+    g_bias = g.sum(axis=0)
+    return g_a, g_b, g_bias
+
+
+_fused.defvjp(_fused_fwd, _fused_bwd)
+
+
+@functools.partial(jax.jit, static_argnames=("activation",))
+def fused_matmul_bias_act(a, b, bias, activation: str = "relu"):
+    """act(a @ b + bias) as a tiled Pallas kernel (differentiable).
+
+    a: (M, K) float32; b: (K, N) float32; bias: (N,) float32.
+    Returns (M, N) float32.
+    """
+    # Shape checks happen eagerly (outside the traced call) for clear errors.
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, f"contraction mismatch {k} vs {k2}"
+    assert bias.shape == (n,), f"bias shape {bias.shape} != ({n},)"
+    return _fused(a, b, bias, activation)
+
+
+def im2col_3x3(x):
+    """Extract 3x3 'SAME' patches: (B, H, W, C) → (B·H·W, 9·C).
+
+    Pure data movement; XLA fuses the pad+gather into the surrounding HLO.
+    Patch channel order: (dy, dx, c) row-major — the weight reshape in
+    ``fused_conv3x3_relu`` matches it.
+    """
+    b, h, w, c = x.shape
+    xp = jnp.pad(x, ((0, 0), (1, 1), (1, 1), (0, 0)))
+    cols = [xp[:, dy : dy + h, dx : dx + w, :] for dy in range(3) for dx in range(3)]
+    patches = jnp.stack(cols, axis=3)  # (B, H, W, 9, C)
+    return patches.reshape(b * h * w, 9 * c)
+
+
+def fused_conv3x3_relu(x, w, bias, activation: str = "relu"):
+    """3x3 SAME conv + bias + activation via im2col + the Pallas matmul.
+
+    x: (B, H, W, Cin); w: (3, 3, Cin, Cout); bias: (Cout,).
+    Returns (B, H, W, Cout).
+    """
+    b, h, wd, cin = x.shape
+    assert w.shape[:3] == (3, 3, cin), f"weight shape {w.shape}"
+    cout = w.shape[3]
+    patches = im2col_3x3(x)  # (B·H·W, 9·Cin)
+    wmat = w.reshape(9 * cin, cout)
+    out = fused_matmul_bias_act(patches, wmat, bias, activation=activation)
+    return out.reshape(b, h, wd, cout)
+
+
+def vmem_bytes_per_instance(m: int, k: int, n: int, tile_m: int = TILE_M, tile_n: int = TILE_N) -> int:
+    """Estimated VMEM footprint (bytes) of one kernel instance — used for
+    the DESIGN.md §Perf roofline accounting (fp32)."""
+    tm = _pick_tile(m, tile_m)
+    tn = _pick_tile(n, tile_n)
+    return 4 * (tm * k + k * tn + tm * tn + tn)
+
+
+def mxu_utilization_estimate(m: int, k: int, n: int, tile_m: int = TILE_M, tile_n: int = TILE_N) -> float:
+    """Fraction of 128x128 MXU lanes busy for the chosen tiles: how well
+    the tile shape fills the systolic array (1.0 = perfectly aligned)."""
+    tm = _pick_tile(m, tile_m)
+    tn = _pick_tile(n, tile_n)
+    fill = (min(tm, 128) / 128.0) * (min(tn, 128) / 128.0)
+    # K dimension streams through the array; short K underfills the pipe.
+    k_fill = min(k, 128) / 128.0
+    return fill * (0.5 + 0.5 * k_fill)

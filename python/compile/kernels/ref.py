@@ -1,0 +1,30 @@
+"""Pure-jnp oracles for the Pallas kernels — the build-time correctness
+reference. Every kernel in ``fused_block`` must match these to float32
+tolerance under pytest/hypothesis sweeps (python/tests/test_kernel.py)."""
+
+import jax.numpy as jnp
+
+
+def matmul_bias_act(a, b, bias, activation: str = "relu"):
+    """Reference for fused_matmul_bias_act."""
+    out = a @ b + bias[None, :]
+    if activation == "relu":
+        out = jnp.maximum(out, 0.0)
+    return out.astype(jnp.float32)
+
+
+def conv3x3_relu(x, w, bias, activation: str = "relu"):
+    """Reference 3x3 SAME conv + bias + activation via lax.conv."""
+    import jax.lax as lax
+
+    out = lax.conv_general_dilated(
+        x,
+        w,
+        window_strides=(1, 1),
+        padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    out = out + bias[None, None, None, :]
+    if activation == "relu":
+        out = jnp.maximum(out, 0.0)
+    return out.astype(jnp.float32)

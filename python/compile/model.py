@@ -1,0 +1,287 @@
+"""L2 — the split neural network (SplitNet) in JAX.
+
+The paper trains ResNet101 / VGG19 on CIFAR-10 split into three parts at
+cut layers (σ1, σ2): part-1 and part-3 run on the client, part-2 on the
+helper. The *optimization* layer only consumes profiled delays (embedded
+in the rust profile bank); this module provides the *executable* model for
+the end-to-end split-learning runtime: miniature VGG- and ResNet-style
+families whose part-2 conv blocks run through the L1 Pallas kernel
+(``kernels.fused_block``), so the kernel lowers into the exported HLO.
+
+Everything here is build-time only. ``aot.py`` lowers the part functions
+below to HLO text artifacts; the rust runtime executes them via PJRT.
+
+Model structure: a list of layers, each a dict with a type tag; cutting at
+(σ1, σ2) yields parts as index ranges (1-based cut semantics matching the
+paper: part-1 = layers [1..σ1], part-2 = (σ1..σ2], part-3 = (σ2..L]).
+
+Split-learning contract (one batch update, client j ↔ helper i):
+    a1                    = part1_fwd(p1, x)
+    a2                    = part2_fwd(p2, a1)
+    loss, g3, g_a2        = part3_bwd(p3, a2, y)
+    g2, g_a1              = part2_bwd(p2, a1, g_a2)
+    g1                    = part1_bwd(p1, x, g_a1)
+followed by SGD on (p1, p2, p3) — done natively in rust (elementwise).
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import fused_block
+
+# ---------------------------------------------------------------------------
+# Layer zoo
+# ---------------------------------------------------------------------------
+
+
+def _conv_layer(cout):
+    return {"kind": "conv", "cout": cout}
+
+
+def _pool_layer():
+    return {"kind": "pool"}
+
+
+def _flatten_layer():
+    return {"kind": "flatten"}
+
+
+def _dense_layer(n, act="relu"):
+    return {"kind": "dense", "n": n, "act": act}
+
+
+def _res_layer(cout, stride=1):
+    return {"kind": "res", "cout": cout, "stride": stride}
+
+
+ARCHS = {
+    # 11 layers; default cuts (2, 8): part-2 holds the conv bulk.
+    "vgg_mini": {
+        "layers": [
+            _conv_layer(16),
+            _conv_layer(16),
+            _pool_layer(),
+            _conv_layer(32),
+            _conv_layer(32),
+            _pool_layer(),
+            _conv_layer(64),
+            _conv_layer(64),
+            _flatten_layer(),
+            _dense_layer(128),
+            _dense_layer(10, act="none"),
+        ],
+        "default_cuts": (2, 8),
+    },
+    # 9 layers; default cuts (1, 7).
+    "resnet_mini": {
+        "layers": [
+            _conv_layer(16),
+            _res_layer(16),
+            _res_layer(32, stride=2),
+            _res_layer(32),
+            _res_layer(64, stride=2),
+            _res_layer(64),
+            _flatten_layer(),
+            _dense_layer(64),
+            _dense_layer(10, act="none"),
+        ],
+        "default_cuts": (1, 7),
+    },
+}
+
+INPUT_SHAPE = (32, 32, 3)  # CIFAR-10-like
+NUM_CLASSES = 10
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+
+def init_params(arch: str, seed: int = 0):
+    """He-init parameters for every layer; returns a list (one entry per
+    layer, possibly an empty dict for parameterless layers)."""
+    spec = ARCHS[arch]
+    key = jax.random.PRNGKey(seed)
+    params = []
+    h, w, c = INPUT_SHAPE
+    flat = None
+    for layer in spec["layers"]:
+        kind = layer["kind"]
+        if kind == "conv":
+            key, k1 = jax.random.split(key)
+            cout = layer["cout"]
+            std = (2.0 / (9 * c)) ** 0.5
+            params.append({
+                "w": jax.random.normal(k1, (3, 3, c, cout), jnp.float32) * std,
+                "b": jnp.zeros((cout,), jnp.float32),
+            })
+            c = cout
+        elif kind == "res":
+            key, k1, k2, k3 = jax.random.split(key, 4)
+            cout = layer["cout"]
+            std1 = (2.0 / (9 * c)) ** 0.5
+            std2 = (2.0 / (9 * cout)) ** 0.5
+            p = {
+                "w1": jax.random.normal(k1, (3, 3, c, cout), jnp.float32) * std1,
+                "b1": jnp.zeros((cout,), jnp.float32),
+                "w2": jax.random.normal(k2, (3, 3, cout, cout), jnp.float32) * std2,
+                "b2": jnp.zeros((cout,), jnp.float32),
+            }
+            if layer["stride"] != 1 or cout != c:
+                p["wskip"] = jax.random.normal(k3, (1, 1, c, cout), jnp.float32) * (2.0 / c) ** 0.5
+            params.append(p)
+            if layer["stride"] == 2:
+                h, w = h // 2, w // 2
+            c = cout
+        elif kind == "pool":
+            params.append({})
+            h, w = h // 2, w // 2
+        elif kind == "flatten":
+            params.append({})
+            flat = h * w * c
+        elif kind == "dense":
+            key, k1 = jax.random.split(key)
+            n = layer["n"]
+            fan_in = flat
+            params.append({
+                "w": jax.random.normal(k1, (fan_in, n), jnp.float32) * (2.0 / fan_in) ** 0.5,
+                "b": jnp.zeros((n,), jnp.float32),
+            })
+            flat = n
+        else:
+            raise ValueError(kind)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+
+def _apply_layer(layer, p, x, use_pallas: bool):
+    kind = layer["kind"]
+    if kind == "conv":
+        if use_pallas:
+            return fused_block.fused_conv3x3_relu(x, p["w"], p["b"])
+        from .kernels import ref
+
+        return ref.conv3x3_relu(x, p["w"], p["b"])
+    if kind == "res":
+        import jax.lax as lax
+
+        def conv(v, w, b, stride):
+            out = lax.conv_general_dilated(
+                v, w, (stride, stride), "SAME", dimension_numbers=("NHWC", "HWIO", "NHWC")
+            )
+            return out + b[None, None, None, :]
+
+        stride = layer["stride"]
+        h = jnp.maximum(conv(x, p["w1"], p["b1"], stride), 0.0)
+        h = conv(h, p["w2"], p["b2"], 1)
+        skip = x
+        if "wskip" in p:
+            skip = lax.conv_general_dilated(
+                x, p["wskip"], (stride, stride), "SAME", dimension_numbers=("NHWC", "HWIO", "NHWC")
+            )
+        return jnp.maximum(h + skip, 0.0)
+    if kind == "pool":
+        b, h, w, c = x.shape
+        return x.reshape(b, h // 2, 2, w // 2, 2, c).max(axis=(2, 4))
+    if kind == "flatten":
+        return x.reshape(x.shape[0], -1)
+    if kind == "dense":
+        out = x @ p["w"] + p["b"][None, :]
+        if layer["act"] == "relu":
+            out = jnp.maximum(out, 0.0)
+        return out
+    raise ValueError(kind)
+
+
+def forward_range(arch: str, params_slice, x, lo: int, hi: int, use_pallas: bool = True):
+    """Apply layers lo..hi (0-based, hi exclusive) given that
+    ``params_slice`` holds exactly those layers' params."""
+    layers = ARCHS[arch]["layers"][lo:hi]
+    assert len(layers) == len(params_slice)
+    for layer, p in zip(layers, params_slice):
+        x = _apply_layer(layer, p, x, use_pallas)
+    return x
+
+
+def full_forward(arch: str, params, x, use_pallas: bool = True):
+    return forward_range(arch, params, x, 0, len(ARCHS[arch]["layers"]), use_pallas)
+
+
+def split_params(arch: str, params, cuts=None):
+    """Split a full param list at 1-based cut layers (σ1, σ2)."""
+    s1, s2 = cuts or ARCHS[arch]["default_cuts"]
+    return params[:s1], params[s1:s2], params[s2:]
+
+
+def loss_fn(logits, y):
+    """Mean softmax cross-entropy; y: int32 labels."""
+    logz = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.take_along_axis(logz, y[:, None], axis=1).mean()
+
+
+# ---------------------------------------------------------------------------
+# Split-learning part functions (the AOT export surface)
+# ---------------------------------------------------------------------------
+
+
+def make_part_fns(arch: str, cuts=None, use_pallas: bool = True):
+    """Build the six part functions for the SL batch-update contract.
+
+    Each returned fn takes/returns *pytrees of arrays*; aot.py flattens
+    them into the positional HLO signature recorded in the manifest.
+    """
+    spec = ARCHS[arch]
+    n = len(spec["layers"])
+    s1, s2 = cuts or spec["default_cuts"]
+    assert 1 <= s1 < s2 < n, f"bad cuts ({s1},{s2}) for {arch}"
+
+    def part1_fwd(p1, x):
+        return forward_range(arch, p1, x, 0, s1, use_pallas)
+
+    def part2_fwd(p2, a1):
+        return forward_range(arch, p2, a1, s1, s2, use_pallas)
+
+    def part3_loss(p3, a2, y):
+        logits = forward_range(arch, p3, a2, s2, n, use_pallas)
+        return loss_fn(logits, y)
+
+    def part3_bwd(p3, a2, y):
+        loss, (g3, g_a2) = jax.value_and_grad(part3_loss, argnums=(0, 1))(p3, a2, y)
+        return loss, g3, g_a2
+
+    def part2_bwd(p2, a1, g_a2):
+        _, vjp = jax.vjp(lambda p, a: part2_fwd(p, a), p2, a1)
+        g2, g_a1 = vjp(g_a2)
+        return g2, g_a1
+
+    def part1_bwd(p1, x, g_a1):
+        _, vjp = jax.vjp(lambda p: part1_fwd(p, x), p1)
+        (g1,) = vjp(g_a1)
+        return g1
+
+    return {
+        "part1_fwd": part1_fwd,
+        "part2_fwd": part2_fwd,
+        "part3_loss": part3_loss,
+        "part3_bwd": part3_bwd,
+        "part2_bwd": part2_bwd,
+        "part1_bwd": part1_bwd,
+        "cuts": (s1, s2),
+    }
+
+
+def reference_train_step(arch: str, params, x, y, lr: float, use_pallas: bool = False):
+    """Monolithic train step (loss + SGD) — the oracle the split pipeline
+    must match exactly (python/tests/test_model.py)."""
+
+    def full_loss(ps):
+        return loss_fn(full_forward(arch, ps, x, use_pallas), y)
+
+    loss, grads = jax.value_and_grad(full_loss)(params)
+    new_params = jax.tree_util.tree_map(lambda p, g: p - lr * g, params, grads)
+    return loss, new_params

@@ -1,0 +1,44 @@
+"""HLO static analysis sanity (compile.aot_report)."""
+
+import os
+
+import pytest
+
+from compile import aot_report
+
+ARTIFACTS = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "..", "artifacts"))
+
+
+def test_analyze_hlo_counts_ops():
+    hlo = """
+HloModule test
+ENTRY %main (p0: f32[4,8], p1: f32[8,16]) -> f32[4,16] {
+  p0 = f32[4,8]{1,0} parameter(0)
+  p1 = f32[8,16]{1,0} parameter(1)
+  ROOT d = f32[4,16]{1,0} dot(p0, p1), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+}
+"""
+    r = aot_report.analyze_hlo(hlo)
+    assert r["dots"] == 1
+    assert r["ops"]["parameter"] == 2
+    # 2*M*N*K = 2*4*16*8 = 1024 FLOPs.
+    assert r["flops_est"] == 2 * 4 * 16 * 8
+    assert r["param_bytes"] == 4 * (4 * 8 + 8 * 16)
+
+
+@pytest.mark.skipif(not os.path.isdir(os.path.join(ARTIFACTS, "vgg_mini")), reason="run `make artifacts` first")
+def test_exported_artifacts_contain_dot_work():
+    rep = aot_report.report(ARTIFACTS)
+    assert "vgg_mini" in rep
+    fns = rep["vgg_mini"]
+    # part2 fwd must carry the conv matmuls (the Pallas kernel's dots;
+    # convs sharing a tile shape fold into shared loop bodies, so ≥4).
+    assert fns["part2_fwd"]["dots"] >= 4, fns["part2_fwd"]["ops"]
+    assert fns["part2_fwd"]["flops_est"] > 1e6
+    # bwd carries ~2-3x the fwd dots (dA and dW per conv, custom VJP).
+    assert fns["part2_bwd"]["dots"] >= 2 * fns["part2_fwd"]["dots"]
+    # Every artifact parses and has instructions.
+    for name, r in fns.items():
+        assert r["n_instructions"] > 3, name
+    # resnet_mini's part-2 uses lax convolutions instead of the kernel.
+    assert rep["resnet_mini"]["part2_fwd"]["ops"].get("convolution", 0) >= 6

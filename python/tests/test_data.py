@@ -1,0 +1,62 @@
+"""Synthetic dataset sanity + cross-language contract with
+rust/src/data/synth.rs (same template family; exact template parity is
+asserted structurally — frequencies/phases are functions of (k, ch))."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import data
+
+
+def test_templates_deterministic_and_distinct():
+    a = data.class_template(0)
+    b = data.class_template(0)
+    np.testing.assert_array_equal(a, b)
+    for k in range(1, data.NUM_CLASSES):
+        assert np.abs(data.class_template(k) - a).sum() > 10.0
+
+
+def test_template_range_bounded():
+    for k in range(data.NUM_CLASSES):
+        t = data.class_template(k)
+        assert np.all(np.abs(t) <= 0.5 + 1e-6)
+        assert t.shape == data.SHAPE
+        assert t.dtype == np.float32
+
+
+@settings(max_examples=10, deadline=None)
+@given(batch=st.integers(1, 64), seed=st.integers(0, 1000))
+def test_batch_shapes_and_labels(batch, seed):
+    rng = np.random.default_rng(seed)
+    x, y = data.make_batch(rng, batch)
+    assert x.shape == (batch, 32, 32, 3)
+    assert y.shape == (batch,)
+    assert y.dtype == np.int32
+    assert np.all((0 <= y) & (y < data.NUM_CLASSES))
+    assert np.isfinite(x).all()
+
+
+def test_noise_scales():
+    rng1 = np.random.default_rng(0)
+    rng2 = np.random.default_rng(0)
+    x_lo, y1 = data.make_batch(rng1, 16, noise=0.01)
+    x_hi, y2 = data.make_batch(rng2, 16, noise=1.0)
+    np.testing.assert_array_equal(y1, y2)
+    # Residual energy after subtracting templates scales with noise.
+    res = lambda x, y: np.mean([(x[b] - data.class_template(int(y[b]))) ** 2 for b in range(len(y))])
+    assert res(x_hi, y2) > 50 * res(x_lo, y1)
+
+
+def test_classes_linearly_separable_enough():
+    """A trivial nearest-template classifier must beat chance by a lot —
+    the property the e2e loss-curve relies on."""
+    rng = np.random.default_rng(3)
+    x, y = data.make_batch(rng, 200, noise=0.35)
+    templates = np.stack([data.class_template(k) for k in range(10)])
+    preds = []
+    for b in range(len(y)):
+        d = ((templates - x[b]) ** 2).sum(axis=(1, 2, 3))
+        preds.append(int(d.argmin()))
+    acc = float(np.mean(np.asarray(preds) == y))
+    assert acc > 0.9, f"nearest-template accuracy {acc}"

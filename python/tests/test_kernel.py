@@ -1,0 +1,167 @@
+"""L1 correctness: the Pallas kernels vs the pure-jnp oracle.
+
+Hypothesis sweeps shapes; fixed cases pin the shapes the exported
+artifacts actually use. This is the CORE build-time correctness signal —
+if these fail, `make artifacts` must not ship.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import fused_block, ref
+
+
+def rand(key, shape):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# fused_matmul_bias_act
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("activation", ["relu", "none"])
+@pytest.mark.parametrize(
+    "m,k,n",
+    [
+        (8, 16, 8),
+        (128, 144, 16),  # conv1 shape class (9*16 channels)
+        (256, 288, 32),
+        (64, 576, 64),  # conv 64->64 im2col
+        (1, 9, 1),
+        (33, 7, 5),  # deliberately tile-unfriendly
+    ],
+)
+def test_matmul_matches_ref(m, k, n, activation):
+    a, b = rand(1, (m, k)), rand(2, (k, n))
+    bias = rand(3, (n,))
+    got = fused_block.fused_matmul_bias_act(a, b, bias, activation=activation)
+    want = ref.matmul_bias_act(a, b, bias, activation=activation)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.integers(1, 96),
+    k=st.integers(1, 64),
+    n=st.integers(1, 48),
+    act=st.sampled_from(["relu", "none"]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matmul_hypothesis_sweep(m, k, n, act, seed):
+    key = jax.random.PRNGKey(seed)
+    ka, kb, kc = jax.random.split(key, 3)
+    a = jax.random.normal(ka, (m, k), jnp.float32)
+    b = jax.random.normal(kb, (k, n), jnp.float32)
+    bias = jax.random.normal(kc, (n,), jnp.float32)
+    got = fused_block.fused_matmul_bias_act(a, b, bias, activation=act)
+    want = ref.matmul_bias_act(a, b, bias, activation=act)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+def test_matmul_rejects_bad_shapes():
+    with pytest.raises(AssertionError):
+        fused_block.fused_matmul_bias_act(rand(1, (4, 5)), rand(2, (6, 3)), rand(3, (3,)))
+    with pytest.raises(AssertionError):
+        fused_block.fused_matmul_bias_act(rand(1, (4, 5)), rand(2, (5, 3)), rand(3, (4,)))
+
+
+def test_relu_actually_clamps():
+    a = -jnp.ones((4, 4), jnp.float32)
+    b = jnp.eye(4, dtype=jnp.float32)
+    bias = jnp.zeros((4,), jnp.float32)
+    out = fused_block.fused_matmul_bias_act(a, b, bias, activation="relu")
+    assert np.all(np.asarray(out) == 0.0)
+    out2 = fused_block.fused_matmul_bias_act(a, b, bias, activation="none")
+    assert np.all(np.asarray(out2) == -1.0)
+
+
+# ---------------------------------------------------------------------------
+# fused_conv3x3_relu
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize(
+    "b,h,w,cin,cout",
+    [
+        (2, 8, 8, 3, 16),
+        (1, 32, 32, 3, 16),  # part-1 entry shape
+        (2, 16, 16, 16, 32),
+        (1, 4, 4, 8, 8),
+    ],
+)
+def test_conv_matches_lax(b, h, w, cin, cout):
+    x = rand(4, (b, h, w, cin))
+    wgt = rand(5, (3, 3, cin, cout)) * 0.2
+    bias = rand(6, (cout,)) * 0.1
+    got = fused_block.fused_conv3x3_relu(x, wgt, bias)
+    want = ref.conv3x3_relu(x, wgt, bias)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    b=st.integers(1, 3),
+    hw=st.sampled_from([4, 6, 8, 12]),
+    cin=st.sampled_from([1, 3, 8, 16]),
+    cout=st.sampled_from([4, 8, 16]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_conv_hypothesis_sweep(b, hw, cin, cout, seed):
+    key = jax.random.PRNGKey(seed)
+    kx, kw, kb = jax.random.split(key, 3)
+    x = jax.random.normal(kx, (b, hw, hw, cin), jnp.float32)
+    wgt = jax.random.normal(kw, (3, 3, cin, cout), jnp.float32) * 0.2
+    bias = jax.random.normal(kb, (cout,), jnp.float32) * 0.1
+    got = fused_block.fused_conv3x3_relu(x, wgt, bias)
+    want = ref.conv3x3_relu(x, wgt, bias)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_im2col_patch_order_matches_weight_reshape():
+    # A 'delta' filter that picks patch position (dy, dx) must equal a
+    # shifted image — proves the (dy, dx, c) ordering contract.
+    x = rand(7, (1, 6, 6, 2))
+    for dy in range(3):
+        for dx in range(3):
+            w = np.zeros((3, 3, 2, 2), np.float32)
+            w[dy, dx, 0, 0] = 1.0
+            w[dy, dx, 1, 1] = 1.0
+            got = fused_block.fused_conv3x3_relu(x, jnp.asarray(w), jnp.zeros((2,), jnp.float32), activation="none")
+            want = ref.conv3x3_relu(x, jnp.asarray(w), jnp.zeros((2,), jnp.float32), activation="none")
+            np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+
+def test_kernel_is_jittable_and_grads_flow():
+    # The kernel must be differentiable (it sits inside part-2 bwd).
+    x = rand(8, (2, 4, 4, 3))
+    w = rand(9, (3, 3, 3, 4)) * 0.2
+    b = jnp.zeros((4,), jnp.float32)
+
+    def f(w):
+        return fused_block.fused_conv3x3_relu(x, w, b).sum()
+
+    g = jax.grad(f)(w)
+    assert np.all(np.isfinite(np.asarray(g)))
+    assert np.abs(np.asarray(g)).sum() > 0
+
+
+# ---------------------------------------------------------------------------
+# Roofline accounting helpers (DESIGN.md §Perf inputs)
+# ---------------------------------------------------------------------------
+
+
+def test_vmem_estimate_within_budget():
+    # The largest exported matmul: conv 64->64 at batch 16 on 8x8 maps to
+    # M=1024, K=576, N=64. One instance must fit a 16 MiB VMEM budget.
+    bytes_ = fused_block.vmem_bytes_per_instance(1024, 576, 64)
+    assert bytes_ < 16 * 1024 * 1024, f"VMEM estimate {bytes_}"
+
+
+def test_mxu_estimate_monotone_in_tile_fill():
+    low = fused_block.mxu_utilization_estimate(8, 9, 8)
+    high = fused_block.mxu_utilization_estimate(1024, 576, 128)
+    assert 0.0 < low < high <= 1.0

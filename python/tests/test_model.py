@@ -1,0 +1,125 @@
+"""L2 correctness: the split pipeline must equal the monolithic model.
+
+The decisive invariant: running the five-part split contract (part1_fwd →
+part2_fwd → part3_bwd → part2_bwd → part1_bwd) and applying SGD per part
+must produce *exactly* the same loss and updated parameters as
+`jax.value_and_grad` of the full model — i.e. split learning is a
+re-factoring of backprop, not an approximation (the paper's premise that
+the orchestration does not affect accuracy).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import data, model
+
+
+def _batch(batch=4, seed=0):
+    rng = np.random.default_rng(seed)
+    x, y = data.make_batch(rng, batch)
+    return jnp.asarray(x), jnp.asarray(y)
+
+
+@pytest.mark.parametrize("arch", ["vgg_mini", "resnet_mini"])
+def test_part_shapes_compose(arch):
+    params = model.init_params(arch)
+    p1, p2, p3 = model.split_params(arch, params)
+    fns = model.make_part_fns(arch, use_pallas=False)
+    x, y = _batch()
+    a1 = fns["part1_fwd"](p1, x)
+    a2 = fns["part2_fwd"](p2, a1)
+    loss = fns["part3_loss"](p3, a2, y)
+    assert a1.ndim == 4 and a2.ndim >= 2
+    assert np.isfinite(float(loss))
+
+
+@pytest.mark.parametrize("arch", ["vgg_mini", "resnet_mini"])
+def test_split_forward_equals_full_forward(arch):
+    params = model.init_params(arch)
+    p1, p2, p3 = model.split_params(arch, params)
+    fns = model.make_part_fns(arch, use_pallas=False)
+    x, _ = _batch()
+    n = len(model.ARCHS[arch]["layers"])
+    s2 = fns["cuts"][1]
+    a2 = fns["part2_fwd"](p2, fns["part1_fwd"](p1, x))
+    logits_split = model.forward_range(arch, p3, a2, s2, n, use_pallas=False)
+    logits_full = model.full_forward(arch, params, x, use_pallas=False)
+    np.testing.assert_allclose(logits_split, logits_full, rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("arch", ["vgg_mini", "resnet_mini"])
+def test_split_gradients_equal_full_gradients(arch):
+    """The split backprop chain == autodiff of the whole network."""
+    params = model.init_params(arch)
+    p1, p2, p3 = model.split_params(arch, params)
+    fns = model.make_part_fns(arch, use_pallas=False)
+    x, y = _batch()
+
+    a1 = fns["part1_fwd"](p1, x)
+    a2 = fns["part2_fwd"](p2, a1)
+    loss_split, g3, g_a2 = fns["part3_bwd"](p3, a2, y)
+    g2, g_a1 = fns["part2_bwd"](p2, a1, g_a2)
+    g1 = fns["part1_bwd"](p1, x, g_a1)
+
+    def full_loss(ps):
+        return model.loss_fn(model.full_forward(arch, ps, x, use_pallas=False), y)
+
+    loss_full, grads_full = jax.value_and_grad(full_loss)(params)
+    s1, s2 = fns["cuts"]
+    gf1, gf2, gf3 = grads_full[:s1], grads_full[s1:s2], grads_full[s2:]
+
+    np.testing.assert_allclose(float(loss_split), float(loss_full), rtol=1e-6)
+    for got_tree, want_tree, tag in [(g1, gf1, "p1"), (g2, gf2, "p2"), (g3, gf3, "p3")]:
+        got = jax.tree_util.tree_leaves(got_tree)
+        want = jax.tree_util.tree_leaves(want_tree)
+        assert len(got) == len(want), tag
+        for g, w in zip(got, want):
+            np.testing.assert_allclose(g, w, rtol=1e-4, atol=1e-5, err_msg=tag)
+
+
+def test_pallas_and_ref_paths_agree_through_part2():
+    """part2_fwd with the Pallas kernel == part2_fwd with lax.conv."""
+    arch = "vgg_mini"
+    params = model.init_params(arch)
+    _, p2, _ = model.split_params(arch, params)
+    x, _ = _batch()
+    p1, _, _ = model.split_params(arch, params)
+    fns_pl = model.make_part_fns(arch, use_pallas=True)
+    fns_ref = model.make_part_fns(arch, use_pallas=False)
+    a1 = fns_ref["part1_fwd"](p1, x)
+    out_pl = fns_pl["part2_fwd"](p2, a1)
+    out_ref = fns_ref["part2_fwd"](p2, a1)
+    np.testing.assert_allclose(out_pl, out_ref, rtol=1e-4, atol=1e-4)
+
+
+def test_loss_decreases_over_steps():
+    """A few SGD steps on the synthetic data must reduce the loss —
+    the build-time smoke of the training contract (the full few-hundred-
+    step run lives in examples/e2e_train.rs on the rust side)."""
+    arch = "vgg_mini"
+    params = model.init_params(arch)
+    rng = np.random.default_rng(7)
+    losses = []
+    for step in range(8):
+        x, y = data.make_batch(rng, 16)
+        loss, params = model.reference_train_step(arch, params, jnp.asarray(x), jnp.asarray(y), lr=0.05)
+        losses.append(float(loss))
+    assert losses[-1] < losses[0], f"loss did not fall: {losses}"
+
+
+def test_loss_fn_matches_manual_cross_entropy():
+    logits = jnp.asarray([[2.0, 0.0, -1.0], [0.5, 0.5, 0.5]])
+    y = jnp.asarray([0, 2], jnp.int32)
+    got = float(model.loss_fn(logits, y))
+    p = jax.nn.softmax(logits)
+    want = float(-(jnp.log(p[0, 0]) + jnp.log(p[1, 2])) / 2)
+    assert abs(got - want) < 1e-6
+
+
+@pytest.mark.parametrize("arch", ["vgg_mini", "resnet_mini"])
+def test_default_cuts_valid(arch):
+    n = len(model.ARCHS[arch]["layers"])
+    s1, s2 = model.ARCHS[arch]["default_cuts"]
+    assert 1 <= s1 < s2 < n

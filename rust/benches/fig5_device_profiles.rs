@@ -1,0 +1,65 @@
+//! TABLE I + FIGURE 5 reproduction: the testbed profile bank.
+//!
+//! Table I: whole-model batch-update times per device. Fig 5: profiled
+//! part-1 compute times (fwd and bwd separately — the asymmetry that
+//! motivates joint fwd/bwd optimization, §VII).
+//!
+//! Run: cargo bench --bench fig5_device_profiles
+
+use psl::bench::Report;
+use psl::instance::profiles::{Model, DEVICES};
+use psl::util::json::Json;
+
+fn main() {
+    let mut t1 = Report::new("table1_device_batch_times", &["device", "resnet101[s]", "vgg19[s]", "ram[GB]", "helper?"]);
+    for d in DEVICES {
+        let r = d.device.batch_ms(Model::ResNet101) / 1000.0;
+        let v = d.device.batch_ms(Model::Vgg19) / 1000.0;
+        t1.row(
+            vec![
+                d.name.into(),
+                format!("{r:.1}"),
+                format!("{v:.1}"),
+                format!("{:.0}", d.ram_gb),
+                if d.helper_capable { "yes".into() } else { "no".into() },
+            ],
+            Json::obj(vec![
+                ("device", Json::Str(d.name.into())),
+                ("resnet_s", Json::Num(r)),
+                ("vgg_s", Json::Num(v)),
+                ("ram_gb", Json::Num(d.ram_gb)),
+            ]),
+        );
+    }
+    t1.finish();
+    println!("paper Table I: RPi4 91.9/71.9s, Jetson(CPU) 143/396s, Jetson(GPU) 1.2/2.6s, VM 2/3.6s, M1 3.5/3.6s");
+
+    let mut f5 = Report::new("fig5_part1_times", &["model", "device", "fwd[ms]", "bwd[ms]", "bwd/fwd"]);
+    for model in [Model::ResNet101, Model::Vgg19] {
+        let prof = model.profile();
+        let (s1, _) = prof.default_cuts;
+        for d in DEVICES {
+            let (f, b) = d.device.range_fwd_bwd_ms(model, 1, s1);
+            f5.row(
+                vec![
+                    prof.name.into(),
+                    d.name.into(),
+                    format!("{f:.0}"),
+                    format!("{b:.0}"),
+                    format!("{:.2}", b / f.max(1e-9)),
+                ],
+                Json::obj(vec![
+                    ("model", Json::Str(prof.name.into())),
+                    ("device", Json::Str(d.name.into())),
+                    ("fwd_ms", Json::Num(f)),
+                    ("bwd_ms", Json::Num(b)),
+                ]),
+            );
+        }
+    }
+    f5.finish();
+    println!(
+        "\nexpected shape (Fig 5): bwd > fwd on every device; VGG19's bwd/fwd ratio larger than\n\
+         ResNet101's (the paper's asymmetry argument for joint fwd+bwd optimization)."
+    );
+}

@@ -1,0 +1,90 @@
+//! FIGURE 7 reproduction: batch makespan of the ADMM-based method,
+//! balanced-greedy and the random+FCFS baseline across both scenarios and
+//! models, for (J, I) ∈ {(10,2), (30,5), (50,5), (70,10), (100,10)}.
+//!
+//! Expected shape (Observation 3 + discussion): ADMM wins medium sizes
+//! (esp. Scenario 2, up to ~48% over balanced-greedy in the paper);
+//! balanced-greedy takes over for large homogeneous instances; the
+//! strategy (best of both) beats the baseline by up to ~52.3%, 23.4% on
+//! average.
+//!
+//! Run: cargo bench --bench fig7_method_comparison
+//! (PSL_FIG7_SEEDS to change averaging; default 3)
+
+use psl::bench::Report;
+use psl::instance::profiles::Model;
+use psl::instance::scenario::{Scenario, ScenarioCfg};
+use psl::solver::{admm, baseline, greedy};
+use psl::util::json::Json;
+use psl::util::rng::Rng;
+use psl::util::stats::mean;
+
+fn main() {
+    let n_seeds: u64 = std::env::var("PSL_FIG7_SEEDS").ok().and_then(|v| v.parse().ok()).unwrap_or(3);
+    let grid = [(10usize, 2usize), (30, 5), (50, 5), (70, 10), (100, 10)];
+    let mut report = Report::new(
+        "fig7_method_comparison",
+        &["scenario", "model", "J", "I", "admm[s]", "greedy[s]", "baseline[s]", "strategyΔ%", "winner"],
+    );
+    let mut all_gains = Vec::new();
+    for scenario in [Scenario::S1, Scenario::S2] {
+        for model in [Model::ResNet101, Model::Vgg19] {
+            let slot = model.profile().default_slot_ms;
+            for &(j, i) in &grid {
+                let mut admm_v = Vec::new();
+                let mut greedy_v = Vec::new();
+                let mut base_v = Vec::new();
+                for seed in 0..n_seeds {
+                    let inst = ScenarioCfg::new(scenario, model, j, i, 7_000 + seed).generate().quantize(slot);
+                    let a = admm::solve(&inst, &admm::AdmmCfg::default()).expect("admm").schedule.makespan(&inst);
+                    let g = greedy::solve(&inst).expect("greedy").makespan(&inst);
+                    let b = baseline::solve_mean_makespan(&inst, &mut Rng::seeded(900 + seed), 5);
+                    admm_v.push(a as f64 * slot / 1000.0);
+                    greedy_v.push(g as f64 * slot / 1000.0);
+                    base_v.push(b * slot / 1000.0);
+                }
+                let (a, g, b) = (mean(&admm_v), mean(&greedy_v), mean(&base_v));
+                let strat = a.min(g); // the strategy keeps the better tool
+                let gain = (b - strat) / b * 100.0;
+                all_gains.push(gain);
+                report.row(
+                    vec![
+                        scenario.name().into(),
+                        model.name().into(),
+                        j.to_string(),
+                        i.to_string(),
+                        format!("{a:.1}"),
+                        format!("{g:.1}"),
+                        format!("{b:.1}"),
+                        format!("{gain:.1}"),
+                        if a < g { "admm".into() } else { "greedy".into() },
+                    ],
+                    Json::obj(vec![
+                        ("scenario", Json::Str(scenario.name().into())),
+                        ("model", Json::Str(model.name().into())),
+                        ("j", Json::Num(j as f64)),
+                        ("i", Json::Num(i as f64)),
+                        ("admm_s", Json::Num(a)),
+                        ("greedy_s", Json::Num(g)),
+                        ("baseline_s", Json::Num(b)),
+                        ("strategy_gain_pct", Json::Num(gain)),
+                    ]),
+                );
+                eprintln!(
+                    "[fig7] {} {} (J={j},I={i}): admm {a:.1}s greedy {g:.1}s baseline {b:.1}s (gain {gain:.1}%)",
+                    scenario.name(),
+                    model.name()
+                );
+            }
+        }
+    }
+    report.finish();
+    let max_gain = all_gains.iter().cloned().fold(0.0, f64::max);
+    println!(
+        "\nstrategy vs baseline: mean gain {:.1}% | max gain {:.1}%\n\
+         paper: up to 52.3%, average 23.4% — the *shape* to match: gains largest in\n\
+         Scenario 2; ADMM preferred at medium sizes, balanced-greedy at J≳100 / homogeneous.",
+        mean(&all_gains),
+        max_gain
+    );
+}

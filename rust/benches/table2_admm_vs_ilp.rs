@@ -1,0 +1,106 @@
+//! TABLE II reproduction: suboptimality and speedup of the ADMM-based
+//! method compared to an exact solver, on the paper's grid:
+//! {ResNet101, VGG19} × {Scenario 1, Scenario 2} × (J, I) ∈
+//! {(10,2), (10,5), (15,5)}.
+//!
+//! The paper's exact reference is Gurobi on the time-indexed ILP; ours is
+//! the specialized anytime branch-and-bound (solver::exact) with a
+//! wall-clock budget (PSL_EXACT_BUDGET_S, default 20 s per cell). When
+//! the budget expires the incumbent is used and the row is marked with
+//! `*` (the paper's Gurobi also ran with gaps on bigger instances).
+//!
+//! Expected shape vs the paper: ADMM within ~0–15% of exact (they report
+//! ≤10.2% typical, one 14.9% corner), with a large solve-time speedup.
+//!
+//! Run: cargo bench --bench table2_admm_vs_ilp
+
+use psl::bench::{fmt_s, Report};
+use psl::instance::profiles::Model;
+use psl::instance::scenario::{Scenario, ScenarioCfg};
+use psl::solver::{admm, exact};
+use psl::util::json::Json;
+use std::time::{Duration, Instant};
+
+fn main() {
+    let budget_s: u64 = std::env::var("PSL_EXACT_BUDGET_S").ok().and_then(|v| v.parse().ok()).unwrap_or(20);
+    let seeds: Vec<u64> = vec![11, 12];
+    let mut report = Report::new(
+        "table2_admm_vs_ilp",
+        &["scenario", "model", "J", "I", "T", "subopt%", "speedup", "exact", "admm", "proven"],
+    );
+
+    for scenario in [Scenario::S1, Scenario::S2] {
+        for model in [Model::ResNet101, Model::Vgg19] {
+            for &(j, i) in &[(10usize, 2usize), (10, 5), (15, 5)] {
+                let slot = model.profile().default_slot_ms;
+                let mut subopts = Vec::new();
+                let mut speedups = Vec::new();
+                let mut exact_times = Vec::new();
+                let mut admm_times = Vec::new();
+                let mut t_slots = 0;
+                let mut proven_all = true;
+                for &seed in &seeds {
+                    let inst = ScenarioCfg::new(scenario, model, j, i, seed).generate().quantize(slot);
+                    t_slots = inst.horizon();
+
+                    let t0 = Instant::now();
+                    let a = admm::solve(&inst, &admm::AdmmCfg::default()).expect("admm");
+                    let admm_s = t0.elapsed().as_secs_f64();
+                    let admm_make = a.schedule.makespan(&inst);
+
+                    let ex = exact::solve(
+                        &inst,
+                        &exact::ExactCfg {
+                            time_budget: Duration::from_secs(budget_s),
+                            ..Default::default()
+                        },
+                    );
+                    proven_all &= ex.proven_optimal;
+                    let exact_s = ex.elapsed.as_secs_f64();
+                    subopts.push((admm_make as f64 - ex.makespan as f64) / ex.makespan as f64 * 100.0);
+                    speedups.push(exact_s / admm_s.max(1e-6));
+                    exact_times.push(exact_s);
+                    admm_times.push(admm_s);
+                }
+                let subopt = subopts.iter().sum::<f64>() / subopts.len() as f64;
+                let speedup = speedups.iter().sum::<f64>() / speedups.len() as f64;
+                let exact_mean = exact_times.iter().sum::<f64>() / exact_times.len() as f64;
+                let admm_mean = admm_times.iter().sum::<f64>() / admm_times.len() as f64;
+                report.row(
+                    vec![
+                        scenario.name().into(),
+                        model.name().into(),
+                        j.to_string(),
+                        i.to_string(),
+                        t_slots.to_string(),
+                        format!("{subopt:.1}"),
+                        format!("{speedup:.1}x"),
+                        fmt_s(exact_mean),
+                        fmt_s(admm_mean),
+                        if proven_all { "yes".into() } else { "*gap".into() },
+                    ],
+                    Json::obj(vec![
+                        ("scenario", Json::Str(scenario.name().into())),
+                        ("model", Json::Str(model.name().into())),
+                        ("j", Json::Num(j as f64)),
+                        ("i", Json::Num(i as f64)),
+                        ("t", Json::Num(t_slots as f64)),
+                        ("subopt_pct", Json::Num(subopt)),
+                        ("speedup", Json::Num(speedup)),
+                        ("proven", Json::Bool(proven_all)),
+                    ]),
+                );
+                eprintln!(
+                    "[table2] {} {} J={j} I={i}: subopt {subopt:.1}% speedup {speedup:.1}x proven={proven_all}",
+                    scenario.name(),
+                    model.name()
+                );
+            }
+        }
+    }
+    report.finish();
+    println!(
+        "\npaper reference: subopt 0–14.9% (typ. ≤10.2%), speedup 12.5–52x vs Gurobi;\n\
+         our exact solver is specialized, so speedups are measured against it honestly."
+    );
+}

@@ -1,0 +1,138 @@
+//! Mini benchmark harness (no `criterion` in this image): warmup +
+//! repeated timing with summary statistics, aligned table output, and a
+//! JSON dump per bench target under `target/psl-bench/`.
+
+use crate::util::json::Json;
+use crate::util::stats::Summary;
+use std::time::Instant;
+
+/// Time `f` for `iters` iterations after `warmup` runs; returns per-iter
+/// seconds.
+pub fn time_fn<F: FnMut()>(mut f: F, warmup: usize, iters: usize) -> Summary {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed().as_secs_f64());
+    }
+    Summary::of(&samples)
+}
+
+/// A report table under construction.
+pub struct Report {
+    pub name: String,
+    pub columns: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+    json_rows: Vec<Json>,
+}
+
+impl Report {
+    pub fn new(name: &str, columns: &[&str]) -> Report {
+        Report {
+            name: name.to_string(),
+            columns: columns.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+            json_rows: Vec::new(),
+        }
+    }
+
+    /// Add a row (stringified cells) plus its raw JSON record.
+    pub fn row(&mut self, cells: Vec<String>, record: Json) {
+        assert_eq!(cells.len(), self.columns.len(), "row width");
+        self.rows.push(cells);
+        self.json_rows.push(record);
+    }
+
+    /// Print the aligned table to stdout.
+    pub fn print(&self) {
+        println!("\n=== {} ===", self.name);
+        let mut widths: Vec<usize> = self.columns.iter().map(|c| c.len()).collect();
+        for row in &self.rows {
+            for (k, cell) in row.iter().enumerate() {
+                widths[k] = widths[k].max(cell.len());
+            }
+        }
+        let line = |cells: &[String]| {
+            let parts: Vec<String> = cells
+                .iter()
+                .enumerate()
+                .map(|(k, c)| format!("{:>w$}", c, w = widths[k]))
+                .collect();
+            println!("  {}", parts.join("  "));
+        };
+        line(&self.columns);
+        println!("  {}", widths.iter().map(|w| "-".repeat(*w)).collect::<Vec<_>>().join("  "));
+        for row in &self.rows {
+            line(row);
+        }
+    }
+
+    /// Persist the raw records for EXPERIMENTS.md and regression diffing.
+    pub fn save(&self) -> std::io::Result<std::path::PathBuf> {
+        let dir = std::path::Path::new("target/psl-bench");
+        std::fs::create_dir_all(dir)?;
+        let path = dir.join(format!("{}.json", self.name));
+        let doc = Json::obj(vec![
+            ("name", Json::Str(self.name.clone())),
+            ("columns", Json::Arr(self.columns.iter().map(|c| Json::Str(c.clone())).collect())),
+            ("rows", Json::Arr(self.json_rows.clone())),
+        ]);
+        std::fs::write(&path, doc.pretty())?;
+        Ok(path)
+    }
+
+    /// Print and save; logs the save path.
+    pub fn finish(&self) {
+        self.print();
+        match self.save() {
+            Ok(p) => println!("  [saved {}]", p.display()),
+            Err(e) => println!("  [save failed: {e}]"),
+        }
+    }
+}
+
+/// Format seconds human-readably.
+pub fn fmt_s(s: f64) -> String {
+    if s < 1e-3 {
+        format!("{:.1}µs", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.1}ms", s * 1e3)
+    } else {
+        format!("{:.2}s", s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timing_runs_expected_iterations() {
+        let mut count = 0;
+        let s = time_fn(|| count += 1, 2, 10);
+        assert_eq!(count, 12);
+        assert_eq!(s.n, 10);
+        assert!(s.mean >= 0.0);
+    }
+
+    #[test]
+    fn report_roundtrip() {
+        let mut r = Report::new("unit-test-report", &["a", "b"]);
+        r.row(vec!["1".into(), "x".into()], Json::obj(vec![("a", Json::Num(1.0))]));
+        r.print();
+        let path = r.save().unwrap();
+        let text = std::fs::read_to_string(path).unwrap();
+        let v = Json::parse(&text).unwrap();
+        assert_eq!(v.get("rows").as_arr().unwrap().len(), 1);
+    }
+
+    #[test]
+    fn fmt_units() {
+        assert!(fmt_s(0.0000005).ends_with("µs"));
+        assert!(fmt_s(0.005).ends_with("ms"));
+        assert!(fmt_s(2.0).ends_with("s"));
+    }
+}

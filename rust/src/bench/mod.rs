@@ -1,0 +1,7 @@
+//! Benchmark substrate used by the `rust/benches/*` targets (`cargo
+//! bench` with `harness = false`) — see DESIGN.md §4 for the table/figure
+//! mapping.
+
+pub mod harness;
+
+pub use harness::{fmt_s, time_fn, Report};

@@ -1,0 +1,147 @@
+//! Command-line interface (hand-rolled — no `clap` in this image).
+//!
+//! Subcommands:
+//!   psl profiles                      print the testbed bank (Table I / Fig 5)
+//!   psl gen   <scenario args>         generate an instance → JSON
+//!   psl solve <scenario args> [...]   solve + report (all methods)
+//!   psl train <fleet args>            end-to-end split training over PJRT
+//!   psl sweep-slots <scenario args>   Fig-6-style slot-length sweep
+//!
+//! Common scenario args: --scenario 1|2  --model resnet101|vgg19  -j N
+//! -i N  --seed S  --slot-ms X. Run `psl help` for the full list.
+
+use std::collections::HashMap;
+
+/// Parsed arguments: flags (`--key value` / `-j value`) + positionals.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub cmd: String,
+    pub flags: HashMap<String, String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse `argv[1..]`. Flags take exactly one value; `--flag` followed
+    /// by another flag or end-of-args is treated as boolean "true".
+    pub fn parse(argv: &[String]) -> Args {
+        let mut out = Args::default();
+        if argv.is_empty() {
+            return out;
+        }
+        out.cmd = argv[0].clone();
+        let mut k = 1;
+        while k < argv.len() {
+            let a = &argv[k];
+            if let Some(name) = a.strip_prefix("--").or_else(|| a.strip_prefix('-')) {
+                let has_value = k + 1 < argv.len() && !argv[k + 1].starts_with('-');
+                if has_value {
+                    out.flags.insert(name.to_string(), argv[k + 1].clone());
+                    k += 2;
+                } else {
+                    out.flags.insert(name.to_string(), "true".to_string());
+                    k += 1;
+                }
+            } else {
+                out.positional.push(a.clone());
+                k += 1;
+            }
+        }
+        out
+    }
+
+    pub fn str_of(&self, key: &str, default: &str) -> String {
+        self.flags.get(key).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    pub fn usize_of(&self, key: &str, default: usize) -> usize {
+        self.flags.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn u64_of(&self, key: &str, default: u64) -> u64 {
+        self.flags.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn f64_of(&self, key: &str, default: f64) -> f64 {
+        self.flags.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn bool_of(&self, key: &str) -> bool {
+        matches!(self.flags.get(key).map(|s| s.as_str()), Some("true") | Some("1") | Some("yes"))
+    }
+}
+
+pub const HELP: &str = "\
+psl — workflow optimization for parallel split learning (INFOCOM'24 repro)
+
+USAGE: psl <command> [flags]
+
+COMMANDS
+  profiles      Print the testbed profile bank (Table I) and per-part
+                compute times (Fig 5).
+  gen           Generate a scenario instance and print/save its JSON.
+  solve         Solve an instance with one or all methods and report
+                makespans, queuing delays and (optionally) a Gantt JSON.
+  train         Run real end-to-end split training over PJRT artifacts,
+                driven by an optimized schedule (needs `make artifacts`).
+  sweep-slots   Quantize the same system at several slot lengths and
+                compare nominal vs realized makespan (Fig 6 logic).
+  help          This text.
+
+SCENARIO FLAGS (gen/solve/sweep-slots)
+  --scenario 1|2        heterogeneity level            [default 1]
+  --model resnet101|vgg19                              [default resnet101]
+  -j N                  number of clients              [default 10]
+  -i N                  number of helpers              [default 2]
+  --seed S              RNG seed                       [default 42]
+  --slot-ms X           slot length |S_t| in ms        [default: model's]
+  --switch-cost MS      per-preemption cost (§VI)      [default 0]
+
+SOLVE FLAGS
+  --method admm|greedy|baseline|exact|strategy|all     [default all]
+  --gantt FILE          write the winning schedule's Gantt JSON
+  --replay              continuous-time replay of each schedule
+  --out FILE            (gen) write instance JSON to FILE
+
+TRAIN FLAGS
+  --arch vgg_mini|resnet_mini                          [default vgg_mini]
+  -j N / -i N           fleet size                     [default 4 / 2]
+  --rounds N            FedAvg rounds                  [default 3]
+  --batches N           batch updates per round        [default 4]
+  --lr X                learning rate                  [default 0.05]
+  --artifacts DIR       artifacts directory            [default artifacts]
+";
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &str) -> Vec<String> {
+        s.split_whitespace().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_flags_and_positionals() {
+        // NOTE: boolean flags absorb a following bare word as their value,
+        // so positionals must precede them (documented parser semantics).
+        let a = Args::parse(&argv("solve pos1 --scenario 2 -j 15 --replay"));
+        assert_eq!(a.cmd, "solve");
+        assert_eq!(a.str_of("scenario", "1"), "2");
+        assert_eq!(a.usize_of("j", 10), 15);
+        assert!(a.bool_of("replay"));
+        assert_eq!(a.positional, vec!["pos1"]);
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = Args::parse(&argv("gen"));
+        assert_eq!(a.usize_of("i", 2), 2);
+        assert_eq!(a.f64_of("slot-ms", 180.0), 180.0);
+        assert!(!a.bool_of("replay"));
+    }
+
+    #[test]
+    fn empty_argv() {
+        let a = Args::parse(&[]);
+        assert_eq!(a.cmd, "");
+    }
+}

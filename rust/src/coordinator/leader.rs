@@ -1,0 +1,136 @@
+//! The leader: resolves CLI-level requests into instances, solver runs and
+//! comparative reports. This is the orchestration entry the examples and
+//! the `psl` binary share.
+
+use crate::instance::profiles::Model;
+use crate::instance::scenario::{Scenario, ScenarioCfg};
+use crate::instance::{Instance, InstanceMs};
+use crate::sim;
+use crate::solver::{admm, baseline, exact, greedy, strategy};
+use crate::util::rng::Rng;
+use anyhow::{Context, Result};
+use std::time::Instant;
+
+/// A fully-specified solve request.
+#[derive(Clone, Debug)]
+pub struct SolveRequest {
+    pub scenario: Scenario,
+    pub model: Model,
+    pub n_clients: usize,
+    pub n_helpers: usize,
+    pub seed: u64,
+    /// None → the model's default |S_t| (§VII: 180 ms ResNet, 550 ms VGG).
+    pub slot_ms: Option<f64>,
+    pub switch_cost_ms: f64,
+}
+
+impl SolveRequest {
+    pub fn instance_ms(&self) -> InstanceMs {
+        ScenarioCfg::new(self.scenario, self.model, self.n_clients, self.n_helpers, self.seed)
+            .with_switch_cost(self.switch_cost_ms)
+            .generate()
+    }
+
+    pub fn slot_ms(&self) -> f64 {
+        self.slot_ms.unwrap_or(self.model.profile().default_slot_ms)
+    }
+
+    pub fn instance(&self) -> Instance {
+        self.instance_ms().quantize(self.slot_ms())
+    }
+}
+
+/// One method's outcome on an instance.
+#[derive(Clone, Debug)]
+pub struct MethodOutcome {
+    pub method: String,
+    pub makespan_slots: u32,
+    pub makespan_ms: f64,
+    pub realized_ms: Option<f64>,
+    pub solve_s: f64,
+    pub preemptions: u32,
+    pub feasible: bool,
+}
+
+/// Run `method` ("admm" | "greedy" | "baseline" | "exact" | "strategy")
+/// on the instance; optionally replay in continuous time.
+pub fn run_method(
+    ms: &InstanceMs,
+    inst: &Instance,
+    method: &str,
+    replay: bool,
+    seed: u64,
+) -> Result<MethodOutcome> {
+    let start = Instant::now();
+    let schedule = match method {
+        "admm" => admm::solve(inst, &admm::AdmmCfg::default()).context("admm infeasible")?.schedule,
+        "greedy" => greedy::solve(inst).context("greedy infeasible")?,
+        "baseline" => baseline::solve(inst, &mut Rng::seeded(seed ^ 0xBA5E)).context("baseline infeasible")?,
+        "exact" => exact::solve(inst, &exact::ExactCfg::default()).schedule,
+        "strategy" => strategy::solve(inst, &admm::AdmmCfg::default()).context("strategy infeasible")?.0,
+        other => anyhow::bail!("unknown method {other}"),
+    };
+    let solve_s = start.elapsed().as_secs_f64();
+    let makespan = schedule.makespan(inst);
+    let realized = if replay { Some(sim::replay(ms, &schedule, None).makespan_ms) } else { None };
+    Ok(MethodOutcome {
+        method: method.to_string(),
+        makespan_slots: makespan,
+        makespan_ms: makespan as f64 * inst.slot_ms,
+        realized_ms: realized,
+        solve_s,
+        preemptions: schedule.preemptions(),
+        feasible: schedule.is_feasible(inst),
+    })
+}
+
+/// Compare all practical methods on one request (the `psl solve` default).
+pub fn compare_methods(req: &SolveRequest, include_exact: bool, replay: bool) -> Result<Vec<MethodOutcome>> {
+    let ms = req.instance_ms();
+    let inst = ms.quantize(req.slot_ms());
+    let mut methods = vec!["strategy", "admm", "greedy", "baseline"];
+    if include_exact {
+        methods.push("exact");
+    }
+    methods
+        .into_iter()
+        .map(|m| run_method(&ms, &inst, m, replay, req.seed))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req() -> SolveRequest {
+        SolveRequest {
+            scenario: Scenario::S2,
+            model: Model::Vgg19,
+            n_clients: 8,
+            n_helpers: 2,
+            seed: 5,
+            slot_ms: None,
+            switch_cost_ms: 0.0,
+        }
+    }
+
+    #[test]
+    fn compare_produces_feasible_outcomes() {
+        let rows = compare_methods(&req(), false, true).unwrap();
+        assert_eq!(rows.len(), 4);
+        for r in &rows {
+            assert!(r.feasible, "{} infeasible", r.method);
+            assert!(r.makespan_slots > 0);
+            assert!(r.realized_ms.unwrap() <= r.makespan_ms + 1e-6);
+        }
+        // Strategy must not lose to the baseline.
+        let strat = rows.iter().find(|r| r.method == "strategy").unwrap();
+        let base = rows.iter().find(|r| r.method == "baseline").unwrap();
+        assert!(strat.makespan_slots <= base.makespan_slots);
+    }
+
+    #[test]
+    fn default_slot_is_models() {
+        assert_eq!(req().slot_ms(), 550.0);
+    }
+}

@@ -1,0 +1,9 @@
+//! The L3 leader: request resolution, method comparison, and training
+//! round orchestration — the glue between solvers, simulator and the SL
+//! runtime.
+
+pub mod leader;
+pub mod rounds;
+
+pub use leader::{compare_methods, run_method, MethodOutcome, SolveRequest};
+pub use rounds::{run as run_training, TrainOutcome, TrainRequest};

@@ -1,0 +1,5 @@
+//! Datasets for the executable split-learning runtime.
+
+pub mod synth;
+
+pub use synth::SynthDataset;

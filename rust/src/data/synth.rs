@@ -1,0 +1,112 @@
+//! Synthetic CIFAR-10-like dataset — the rust twin of
+//! `python/compile/data.py` (CIFAR-10 is not downloadable in this image;
+//! the paper's orchestration layer is accuracy-oblivious, §III).
+//!
+//! Class k has a deterministic low-frequency sinusoid template; samples
+//! are template + Gaussian noise. The split pipeline must drive the
+//! cross-entropy loss down on this data (examples/e2e_train.rs).
+
+use crate::runtime::tensor::Tensor;
+use crate::util::rng::Rng;
+
+pub const NUM_CLASSES: usize = 10;
+pub const HEIGHT: usize = 32;
+pub const WIDTH: usize = 32;
+pub const CHANNELS: usize = 3;
+
+/// Deterministic class template, shape (H, W, C) row-major — matches
+/// `data.class_template` in python.
+pub fn class_template(k: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; HEIGHT * WIDTH * CHANNELS];
+    for y in 0..HEIGHT {
+        for x in 0..WIDTH {
+            for ch in 0..CHANNELS {
+                let fx = 1.0 + (k % 5) as f32;
+                let fy = 1.0 + ((k + ch) % 3) as f32;
+                let phase = 0.7 * k as f32 + 1.3 * ch as f32;
+                let v = (2.0 * std::f32::consts::PI * fx * x as f32 / WIDTH as f32 + phase).sin()
+                    * (2.0 * std::f32::consts::PI * fy * y as f32 / HEIGHT as f32 + 0.5 * phase).cos();
+                out[(y * WIDTH + x) * CHANNELS + ch] = 0.5 * v;
+            }
+        }
+    }
+    out
+}
+
+/// A data source bound to one client (its local dataset shard).
+pub struct SynthDataset {
+    rng: Rng,
+    noise: f32,
+    templates: Vec<Vec<f32>>,
+}
+
+impl SynthDataset {
+    pub fn new(seed: u64, noise: f32) -> SynthDataset {
+        SynthDataset {
+            rng: Rng::seeded(seed),
+            noise,
+            templates: (0..NUM_CLASSES).map(class_template).collect(),
+        }
+    }
+
+    /// Draw a batch: (x: (B,32,32,3) f32, y: (B,) i32).
+    pub fn batch(&mut self, batch: usize) -> (Tensor, Tensor) {
+        let img = HEIGHT * WIDTH * CHANNELS;
+        let mut x = vec![0.0f32; batch * img];
+        let mut y = vec![0i32; batch];
+        for b in 0..batch {
+            let k = self.rng.below(NUM_CLASSES);
+            y[b] = k as i32;
+            let t = &self.templates[k];
+            for (dst, &src) in x[b * img..(b + 1) * img].iter_mut().zip(t.iter()) {
+                *dst = src + self.noise * self.rng.gauss() as f32;
+            }
+        }
+        (
+            Tensor::from_f32(&[batch, HEIGHT, WIDTH, CHANNELS], x).unwrap(),
+            Tensor::from_i32(&[batch], y).unwrap(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn batch_shapes() {
+        let mut ds = SynthDataset::new(1, 0.3);
+        let (x, y) = ds.batch(8);
+        assert_eq!(x.shape, vec![8, 32, 32, 3]);
+        assert_eq!(y.shape, vec![8]);
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let (x1, y1) = SynthDataset::new(7, 0.3).batch(4);
+        let (x2, y2) = SynthDataset::new(7, 0.3).batch(4);
+        assert_eq!(x1, x2);
+        assert_eq!(y1, y2);
+        let (x3, _) = SynthDataset::new(8, 0.3).batch(4);
+        assert_ne!(x1, x3);
+    }
+
+    #[test]
+    fn templates_distinct_between_classes() {
+        let a = class_template(0);
+        let b = class_template(1);
+        let diff: f32 = a.iter().zip(&b).map(|(p, q)| (p - q).abs()).sum();
+        assert!(diff > 10.0, "templates too similar: {diff}");
+    }
+
+    #[test]
+    fn labels_cover_classes() {
+        let mut ds = SynthDataset::new(3, 0.1);
+        let (_, y) = ds.batch(400);
+        let labels: std::collections::HashSet<i32> = match y.data {
+            crate::runtime::tensor::TensorData::I32(v) => v.into_iter().collect(),
+            _ => panic!(),
+        };
+        assert_eq!(labels.len(), NUM_CLASSES);
+    }
+}

@@ -1,0 +1,126 @@
+//! Minimal thread-actor kit (no tokio in this image): each actor owns a
+//! mailbox (mpsc channel) and a worker thread; requests carry a reply
+//! channel. Used by the SL runtime's threaded mode where each helper is an
+//! independent actor processing part-2 tasks in schedule order.
+
+use std::sync::mpsc;
+use std::thread;
+
+/// Handle to send messages into an actor.
+pub struct Mailbox<M: Send + 'static> {
+    tx: mpsc::Sender<M>,
+}
+
+impl<M: Send + 'static> Clone for Mailbox<M> {
+    fn clone(&self) -> Self {
+        Mailbox { tx: self.tx.clone() }
+    }
+}
+
+impl<M: Send + 'static> Mailbox<M> {
+    pub fn send(&self, msg: M) -> Result<(), mpsc::SendError<M>> {
+        self.tx.send(msg)
+    }
+}
+
+/// A running actor: mailbox + join handle. Dropping the last mailbox
+/// closes the channel; `join` then returns the actor's final state.
+pub struct Actor<M: Send + 'static, R> {
+    pub mailbox: Mailbox<M>,
+    handle: thread::JoinHandle<R>,
+}
+
+impl<M: Send + 'static, R> Actor<M, R> {
+    /// Wait for the actor to drain its mailbox and stop. Call after all
+    /// mailbox clones (including `self.mailbox`) are dropped.
+    pub fn join(self) -> thread::Result<R> {
+        drop(self.mailbox);
+        self.handle.join()
+    }
+}
+
+/// Spawn an actor: `f` receives the message stream and runs until the
+/// channel closes, returning its final state.
+pub fn spawn<M, R, F>(name: &str, f: F) -> Actor<M, R>
+where
+    M: Send + 'static,
+    R: Send + 'static,
+    F: FnOnce(mpsc::Receiver<M>) -> R + Send + 'static,
+{
+    let (tx, rx) = mpsc::channel();
+    let handle = thread::Builder::new()
+        .name(name.to_string())
+        .spawn(move || f(rx))
+        .expect("spawn actor thread");
+    Actor { mailbox: Mailbox { tx }, handle }
+}
+
+/// Request/reply convenience: a message carrying a oneshot reply channel.
+pub struct Request<Q, A> {
+    pub query: Q,
+    pub reply: mpsc::Sender<A>,
+}
+
+impl<Q, A> Request<Q, A> {
+    pub fn call(mailbox: &Mailbox<Request<Q, A>>, query: Q) -> Option<A>
+    where
+        Q: Send + 'static,
+        A: Send + 'static,
+    {
+        let (tx, rx) = mpsc::channel();
+        mailbox.send(Request { query, reply: tx }).ok()?;
+        rx.recv().ok()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn actor_processes_in_order_and_returns_state() {
+        let actor = spawn("adder", |rx: mpsc::Receiver<u32>| {
+            let mut sum = 0u64;
+            let mut order = Vec::new();
+            for m in rx {
+                sum += m as u64;
+                order.push(m);
+            }
+            (sum, order)
+        });
+        for k in 0..100u32 {
+            actor.mailbox.send(k).unwrap();
+        }
+        let (sum, order) = actor.join().unwrap();
+        assert_eq!(sum, 4950);
+        assert_eq!(order, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn request_reply() {
+        let actor = spawn("echo", |rx: mpsc::Receiver<Request<u32, u32>>| {
+            for req in rx {
+                let _ = req.reply.send(req.query * 2);
+            }
+        });
+        assert_eq!(Request::call(&actor.mailbox, 21), Some(42));
+        assert_eq!(Request::call(&actor.mailbox, 0), Some(0));
+        actor.join().unwrap();
+    }
+
+    #[test]
+    fn multiple_senders() {
+        let actor = spawn("count", |rx: mpsc::Receiver<u32>| rx.iter().count());
+        let m2 = actor.mailbox.clone();
+        let t = thread::spawn(move || {
+            for _ in 0..50 {
+                m2.send(1).unwrap();
+            }
+        });
+        for _ in 0..50 {
+            actor.mailbox.send(2).unwrap();
+        }
+        t.join().unwrap();
+        assert_eq!(actor.join().unwrap(), 100);
+    }
+}

@@ -1,0 +1,9 @@
+//! Thread substrate: actor kit ([`actor`]) and worker pool ([`pool`]).
+//! The image ships no async runtime, so the SL runtime's concurrency is
+//! built on plain threads + channels.
+
+pub mod actor;
+pub mod pool;
+
+pub use actor::{spawn, Actor, Mailbox, Request};
+pub use pool::run_parallel;

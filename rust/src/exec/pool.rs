@@ -1,0 +1,84 @@
+//! A small fixed-size worker pool for CPU-parallel solving (per-helper
+//! subproblems are independent — Theorem 2's parallelization point).
+//! On this 1-core image it degenerates gracefully to sequential execution.
+
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::thread;
+
+/// Run `jobs` across up to `workers` threads; returns results in job
+/// order. Each job is an independent closure.
+pub fn run_parallel<T, F>(workers: usize, jobs: Vec<F>) -> Vec<T>
+where
+    T: Send + 'static,
+    F: FnOnce() -> T + Send + 'static,
+{
+    let n = jobs.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let workers = workers.max(1).min(n);
+    if workers == 1 {
+        return jobs.into_iter().map(|f| f()).collect();
+    }
+    let queue: Arc<Mutex<Vec<(usize, F)>>> = Arc::new(Mutex::new(jobs.into_iter().enumerate().collect()));
+    let (tx, rx) = mpsc::channel::<(usize, T)>();
+    let mut handles = Vec::new();
+    for w in 0..workers {
+        let queue = Arc::clone(&queue);
+        let tx = tx.clone();
+        handles.push(
+            thread::Builder::new()
+                .name(format!("psl-pool-{w}"))
+                .spawn(move || loop {
+                    let job = queue.lock().unwrap().pop();
+                    match job {
+                        Some((idx, f)) => {
+                            let _ = tx.send((idx, f()));
+                        }
+                        None => break,
+                    }
+                })
+                .expect("spawn pool worker"),
+        );
+    }
+    drop(tx);
+    let mut out: Vec<Option<T>> = (0..n).map(|_| None).collect();
+    for (idx, v) in rx {
+        out[idx] = Some(v);
+    }
+    for h in handles {
+        h.join().expect("pool worker panicked");
+    }
+    out.into_iter().map(|v| v.expect("missing pool result")).collect()
+}
+
+/// Default worker count: available parallelism (≥ 1).
+pub fn default_workers() -> usize {
+    thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn results_in_job_order() {
+        let jobs: Vec<Box<dyn FnOnce() -> usize + Send>> =
+            (0..20usize).map(|k| Box::new(move || k * k) as _).collect();
+        let out = run_parallel(4, jobs);
+        assert_eq!(out, (0..20usize).map(|k| k * k).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn single_worker_sequential() {
+        let jobs: Vec<Box<dyn FnOnce() -> usize + Send>> = (0..5usize).map(|k| Box::new(move || k) as _).collect();
+        assert_eq!(run_parallel(1, jobs), vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn empty_jobs() {
+        let jobs: Vec<fn() -> u8> = vec![];
+        assert!(run_parallel(4, jobs).is_empty());
+    }
+}

@@ -1,0 +1,301 @@
+//! Problem instances for the joint assignment + scheduling problem ℙ.
+//!
+//! An [`InstanceMs`] carries the *continuous* (millisecond) delay
+//! parameters of the paper's system model (§III): per-edge (helper i,
+//! client j) delays r, p, l, l', p', r', per-client helper-memory
+//! footprints d_j and per-helper memory capacities m_i. Instances are
+//! produced by the scenario generators ([`scenario`]) from the testbed
+//! profile bank ([`profiles`]) and the link model ([`network`]).
+//!
+//! Solvers operate on a *slotted* [`Instance`] obtained via
+//! [`InstanceMs::quantize`] for a given slot length |S_t| — exactly the
+//! time-slotted model of §III. Keeping the ms-level truth separate from
+//! the slotted view lets the Fig-6 experiment quantize the *same* system
+//! at 200/150/50 ms and lets the simulator replay slotted schedules in
+//! continuous time.
+
+pub mod network;
+pub mod profiles;
+pub mod scenario;
+
+use crate::util::json::Json;
+
+/// Continuous-time (milliseconds) instance of the parallel-SL system.
+///
+/// Edge-indexed vectors are row-major by helper: index `i * n_clients + j`.
+#[derive(Clone, Debug)]
+pub struct InstanceMs {
+    pub n_clients: usize,
+    pub n_helpers: usize,
+    /// Client fwd part-1 + uplink of σ1 activations (release time), ms.
+    pub r_ms: Vec<f64>,
+    /// Downlink of σ2 activations + client part-3 fwd + loss, ms.
+    pub l_ms: Vec<f64>,
+    /// Client part-3 bwd + uplink of σ2 gradients, ms.
+    pub lp_ms: Vec<f64>,
+    /// Downlink of σ1 gradients + client part-1 bwd, ms.
+    pub rp_ms: Vec<f64>,
+    /// Helper part-2 fwd processing, ms.
+    pub p_ms: Vec<f64>,
+    /// Helper part-2 bwd processing, ms.
+    pub pp_ms: Vec<f64>,
+    /// Helper-memory footprint of client j's part-2 task, GB.
+    pub d_gb: Vec<f64>,
+    /// Helper memory capacity, GB.
+    pub mem_gb: Vec<f64>,
+    /// Per-helper task-switching (preemption) cost, ms (§VI extension).
+    pub mu_ms: Vec<f64>,
+    /// Human-readable provenance (scenario, model, seed).
+    pub label: String,
+}
+
+impl InstanceMs {
+    #[inline]
+    pub fn edge(&self, i: usize, j: usize) -> usize {
+        debug_assert!(i < self.n_helpers && j < self.n_clients);
+        i * self.n_clients + j
+    }
+
+    /// Quantize to integer slots of length `slot_ms` (paper §III/§VII).
+    /// Processing times are `ceil` (a task occupies whole slots) with a
+    /// 1-slot minimum; transmission/client-side delays are `ceil` and may
+    /// be 0 when negligible.
+    pub fn quantize(&self, slot_ms: f64) -> Instance {
+        assert!(slot_ms > 0.0);
+        let q = |v: &Vec<f64>, min1: bool| -> Vec<u32> {
+            v.iter()
+                .map(|&ms| {
+                    let s = (ms / slot_ms).ceil() as u32;
+                    if min1 { s.max(1) } else { s }
+                })
+                .collect()
+        };
+        Instance {
+            n_clients: self.n_clients,
+            n_helpers: self.n_helpers,
+            slot_ms,
+            r: q(&self.r_ms, false),
+            l: q(&self.l_ms, false),
+            lp: q(&self.lp_ms, false),
+            rp: q(&self.rp_ms, false),
+            p: q(&self.p_ms, true),
+            pp: q(&self.pp_ms, true),
+            d: self.d_gb.clone(),
+            mem: self.mem_gb.clone(),
+            mu: self.mu_ms.iter().map(|&ms| (ms / slot_ms).ceil() as u32).collect(),
+            label: self.label.clone(),
+        }
+    }
+
+    /// Serialize to JSON (for `psl gen --out` / golden files).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("n_clients", Json::Num(self.n_clients as f64)),
+            ("n_helpers", Json::Num(self.n_helpers as f64)),
+            ("r_ms", Json::arr_f64(&self.r_ms)),
+            ("l_ms", Json::arr_f64(&self.l_ms)),
+            ("lp_ms", Json::arr_f64(&self.lp_ms)),
+            ("rp_ms", Json::arr_f64(&self.rp_ms)),
+            ("p_ms", Json::arr_f64(&self.p_ms)),
+            ("pp_ms", Json::arr_f64(&self.pp_ms)),
+            ("d_gb", Json::arr_f64(&self.d_gb)),
+            ("mem_gb", Json::arr_f64(&self.mem_gb)),
+            ("mu_ms", Json::arr_f64(&self.mu_ms)),
+            ("label", Json::Str(self.label.clone())),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> anyhow::Result<InstanceMs> {
+        let vec_f64 = |key: &str| -> anyhow::Result<Vec<f64>> {
+            v.get(key)
+                .as_arr()
+                .ok_or_else(|| anyhow::anyhow!("missing array {key}"))?
+                .iter()
+                .map(|x| x.as_f64().ok_or_else(|| anyhow::anyhow!("non-number in {key}")))
+                .collect()
+        };
+        let inst = InstanceMs {
+            n_clients: v.get("n_clients").as_usize().ok_or_else(|| anyhow::anyhow!("n_clients"))?,
+            n_helpers: v.get("n_helpers").as_usize().ok_or_else(|| anyhow::anyhow!("n_helpers"))?,
+            r_ms: vec_f64("r_ms")?,
+            l_ms: vec_f64("l_ms")?,
+            lp_ms: vec_f64("lp_ms")?,
+            rp_ms: vec_f64("rp_ms")?,
+            p_ms: vec_f64("p_ms")?,
+            pp_ms: vec_f64("pp_ms")?,
+            d_gb: vec_f64("d_gb")?,
+            mem_gb: vec_f64("mem_gb")?,
+            mu_ms: vec_f64("mu_ms")?,
+            label: v.get("label").as_str().unwrap_or("").to_string(),
+        };
+        inst.validate()?;
+        Ok(inst)
+    }
+
+    /// Structural sanity: vector lengths, positivity, memory feasibility.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        let e = self.n_clients * self.n_helpers;
+        for (name, v) in [
+            ("r_ms", &self.r_ms),
+            ("l_ms", &self.l_ms),
+            ("lp_ms", &self.lp_ms),
+            ("rp_ms", &self.rp_ms),
+            ("p_ms", &self.p_ms),
+            ("pp_ms", &self.pp_ms),
+        ] {
+            anyhow::ensure!(v.len() == e, "{name}: len {} != {e}", v.len());
+            anyhow::ensure!(v.iter().all(|x| x.is_finite() && *x >= 0.0), "{name}: negative/NaN entry");
+        }
+        anyhow::ensure!(self.d_gb.len() == self.n_clients, "d_gb length");
+        anyhow::ensure!(self.mem_gb.len() == self.n_helpers, "mem_gb length");
+        anyhow::ensure!(self.mu_ms.len() == self.n_helpers, "mu_ms length");
+        anyhow::ensure!(self.p_ms.iter().all(|&x| x > 0.0), "p_ms must be positive");
+        anyhow::ensure!(self.pp_ms.iter().all(|&x| x > 0.0), "pp_ms must be positive");
+        // Every client must fit on at least one helper.
+        let max_mem = self.mem_gb.iter().cloned().fold(0.0, f64::max);
+        for (j, &d) in self.d_gb.iter().enumerate() {
+            anyhow::ensure!(d <= max_mem, "client {j} (d={d} GB) fits no helper (max m={max_mem})");
+        }
+        Ok(())
+    }
+}
+
+/// Slot-quantized instance: the solvers' world. All delays in integer
+/// slots of length `slot_ms`. Edge index: `i * n_clients + j`.
+#[derive(Clone, Debug)]
+pub struct Instance {
+    pub n_clients: usize,
+    pub n_helpers: usize,
+    pub slot_ms: f64,
+    pub r: Vec<u32>,
+    pub l: Vec<u32>,
+    pub lp: Vec<u32>,
+    pub rp: Vec<u32>,
+    pub p: Vec<u32>,
+    pub pp: Vec<u32>,
+    pub d: Vec<f64>,
+    pub mem: Vec<f64>,
+    pub mu: Vec<u32>,
+    pub label: String,
+}
+
+impl Instance {
+    #[inline]
+    pub fn edge(&self, i: usize, j: usize) -> usize {
+        debug_assert!(i < self.n_helpers && j < self.n_clients, "edge({i},{j})");
+        i * self.n_clients + j
+    }
+
+    /// The paper's horizon bound T (§III): worst-case client-side round
+    /// trip plus the sum over clients of the worst helper-processing time.
+    pub fn horizon(&self) -> u32 {
+        let mut worst_rt = 0u32;
+        for e in 0..self.r.len() {
+            worst_rt = worst_rt.max(self.r[e] + self.l[e] + self.lp[e] + self.rp[e]);
+        }
+        let mut sum_proc = 0u32;
+        for j in 0..self.n_clients {
+            let mut m = 0u32;
+            for i in 0..self.n_helpers {
+                let e = self.edge(i, j);
+                m = m.max(self.p[e] + self.pp[e]);
+            }
+            sum_proc += m;
+        }
+        worst_rt + sum_proc
+    }
+
+    /// Fwd-only horizon T_f (§V-A): max (r + l) + Σ_j max_i p_ij.
+    pub fn horizon_fwd(&self) -> u32 {
+        let mut worst = 0u32;
+        for e in 0..self.r.len() {
+            worst = worst.max(self.r[e] + self.l[e]);
+        }
+        let mut sum_p = 0u32;
+        for j in 0..self.n_clients {
+            let mut m = 0u32;
+            for i in 0..self.n_helpers {
+                m = m.max(self.p[self.edge(i, j)]);
+            }
+            sum_p += m;
+        }
+        worst + sum_p
+    }
+
+    /// Trivial makespan lower bound: every client must at least traverse
+    /// its best edge end-to-end; every helper's load is ≥ 0.
+    pub fn makespan_lower_bound(&self) -> u32 {
+        let mut lb = 0u32;
+        for j in 0..self.n_clients {
+            let mut best = u32::MAX;
+            for i in 0..self.n_helpers {
+                let e = self.edge(i, j);
+                best = best.min(self.r[e] + self.p[e] + self.l[e] + self.lp[e] + self.pp[e] + self.rp[e]);
+            }
+            lb = lb.max(best);
+        }
+        lb
+    }
+
+    /// Helpers that can hold client j alone (m_i ≥ d_j).
+    pub fn feasible_helpers(&self, j: usize) -> Vec<usize> {
+        (0..self.n_helpers).filter(|&i| self.mem[i] >= self.d[j]).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::scenario::{Scenario, ScenarioCfg};
+    use super::profiles::Model;
+
+    fn small() -> super::InstanceMs {
+        ScenarioCfg::new(Scenario::S1, Model::ResNet101, 6, 2, 42).generate()
+    }
+
+    #[test]
+    fn quantize_monotone_in_slot_len() {
+        let ms = small();
+        let a = ms.quantize(50.0);
+        let b = ms.quantize(200.0);
+        // Finer slots → more slots per task.
+        for e in 0..a.p.len() {
+            assert!(a.p[e] >= b.p[e]);
+        }
+        // But ms-equivalents bracket the true value from above.
+        for e in 0..a.p.len() {
+            assert!(a.p[e] as f64 * 50.0 >= ms.p_ms[e] - 1e-9);
+            assert!(b.p[e] as f64 * 200.0 >= ms.p_ms[e] - 1e-9);
+        }
+    }
+
+    #[test]
+    fn horizon_bounds_make_sense() {
+        let inst = small().quantize(180.0);
+        assert!(inst.horizon() >= inst.horizon_fwd());
+        assert!(inst.horizon() as u32 >= inst.makespan_lower_bound());
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let ms = small();
+        let j = ms.to_json();
+        let back = super::InstanceMs::from_json(&j).unwrap();
+        assert_eq!(back.n_clients, ms.n_clients);
+        assert_eq!(back.p_ms, ms.p_ms);
+        assert_eq!(back.mem_gb, ms.mem_gb);
+    }
+
+    #[test]
+    fn validate_catches_bad_lengths() {
+        let mut ms = small();
+        ms.p_ms.pop();
+        assert!(ms.validate().is_err());
+    }
+
+    #[test]
+    fn processing_slots_at_least_one() {
+        let inst = small().quantize(10_000.0);
+        assert!(inst.p.iter().all(|&x| x >= 1));
+        assert!(inst.pp.iter().all(|&x| x >= 1));
+    }
+}

@@ -1,0 +1,102 @@
+//! Wireless link model for the client↔helper bipartite network.
+//!
+//! The paper draws transmission times from "findings on Internet
+//! connectivity in France" (Akamai State-of-the-Internet Q4'16): average
+//! ~10-15 Mbps downstream with a heavy right tail, a few Mbps upstream.
+//! We model each (client, helper) link with a symmetric effective rate
+//! ω_ij (the paper assumes symmetric, non-interfering links) drawn from a
+//! lognormal around a scenario-dependent median, clamped to a plausible
+//! range. The delay to ship `mb` megabytes over link (i,j) is then
+//! `mb * 8 / rate_mbps * 1000` ms plus a small per-message RTT overhead.
+
+use crate::util::rng::Rng;
+
+/// Parameters of the link-rate distribution.
+#[derive(Clone, Copy, Debug)]
+pub struct LinkModel {
+    /// Median effective rate in Mbps.
+    pub median_mbps: f64,
+    /// Lognormal spread (σ of underlying normal). 0 = homogeneous links.
+    pub sigma_log: f64,
+    /// Clamp range, Mbps.
+    pub min_mbps: f64,
+    pub max_mbps: f64,
+    /// Fixed per-transfer overhead (connection/RTT), ms.
+    pub overhead_ms: f64,
+}
+
+impl LinkModel {
+    /// Akamai-France-like residential links (Scenario 1: modest spread).
+    pub fn france_q4_2016() -> LinkModel {
+        LinkModel { median_mbps: 10.8, sigma_log: 0.35, min_mbps: 2.0, max_mbps: 60.0, overhead_ms: 20.0 }
+    }
+
+    /// High-heterogeneity variant (Scenario 2: wider spread, slower tail).
+    pub fn heterogeneous() -> LinkModel {
+        LinkModel { median_mbps: 10.8, sigma_log: 0.8, min_mbps: 1.0, max_mbps: 100.0, overhead_ms: 20.0 }
+    }
+
+    /// Draw an I×J matrix of symmetric link rates (Mbps), row-major by
+    /// helper: `rates[i * n_clients + j]`.
+    pub fn draw_rates(&self, rng: &mut Rng, n_helpers: usize, n_clients: usize) -> Vec<f64> {
+        (0..n_helpers * n_clients)
+            .map(|_| self.draw_rate(rng))
+            .collect()
+    }
+
+    pub fn draw_rate(&self, rng: &mut Rng) -> f64 {
+        rng.lognormal_median(self.median_mbps, self.sigma_log).clamp(self.min_mbps, self.max_mbps)
+    }
+
+    /// Transfer time in ms for `mb` megabytes at `rate_mbps`.
+    pub fn transfer_ms(&self, mb: f64, rate_mbps: f64) -> f64 {
+        debug_assert!(rate_mbps > 0.0);
+        self.overhead_ms + mb * 8.0 / rate_mbps * 1000.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rates_within_clamp() {
+        let lm = LinkModel::heterogeneous();
+        let mut rng = Rng::seeded(3);
+        for _ in 0..5_000 {
+            let r = lm.draw_rate(&mut rng);
+            assert!(r >= lm.min_mbps && r <= lm.max_mbps);
+        }
+    }
+
+    #[test]
+    fn transfer_scales_linearly() {
+        let lm = LinkModel::france_q4_2016();
+        let t1 = lm.transfer_ms(10.0, 10.0) - lm.overhead_ms;
+        let t2 = lm.transfer_ms(20.0, 10.0) - lm.overhead_ms;
+        assert!((t2 - 2.0 * t1).abs() < 1e-9);
+        // 10 MB at 10 Mbps = 8 seconds.
+        assert!((t1 - 8000.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn scenario2_has_wider_spread() {
+        let mut rng1 = Rng::seeded(5);
+        let mut rng2 = Rng::seeded(5);
+        let draw = |lm: &LinkModel, rng: &mut Rng| -> f64 {
+            let xs: Vec<f64> = (0..2000).map(|_| lm.draw_rate(rng)).collect();
+            let m = xs.iter().sum::<f64>() / xs.len() as f64;
+            (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / xs.len() as f64).sqrt()
+        };
+        let s1 = draw(&LinkModel::france_q4_2016(), &mut rng1);
+        let s2 = draw(&LinkModel::heterogeneous(), &mut rng2);
+        assert!(s2 > s1);
+    }
+
+    #[test]
+    fn matrix_shape() {
+        let lm = LinkModel::france_q4_2016();
+        let mut rng = Rng::seeded(7);
+        assert_eq!(lm.draw_rates(&mut rng, 3, 5).len(), 15);
+    }
+}

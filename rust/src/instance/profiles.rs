@@ -1,0 +1,373 @@
+//! Testbed profile bank: devices (Table I) and model layer profiles
+//! (ResNet101 / VGG19 as the paper counts their indivisible "layers").
+//!
+//! The paper's optimization layer never touches gradients — it only
+//! consumes the profiled delay vectors r, p, l, l', p', r'. We embed the
+//! paper's published measurements (Table I batch-update times, Fig 5
+//! part-1 compute times) as data and derive per-part times from a
+//! per-layer cost model, so that changing the cut layers (σ1, σ2) changes
+//! the part times exactly the way it does on the real testbed.
+//!
+//! Units: milliseconds for time, megabytes for activations/params,
+//! gigabytes for device memory. All times are for one batch of 128
+//! samples (the paper's batch size).
+
+/// One indivisible NN layer: relative compute weight, activation output
+/// size (MB, for batch 128), and parameter size (MB).
+#[derive(Clone, Copy, Debug)]
+pub struct LayerProfile {
+    pub flops_weight: f64,
+    pub act_mb: f64,
+    pub param_mb: f64,
+}
+
+/// A model profile: the per-layer table plus measured whole-batch times.
+#[derive(Clone, Debug)]
+pub struct ModelProfile {
+    pub name: &'static str,
+    pub layers: Vec<LayerProfile>,
+    /// Default cut layers (σ1, σ2) used in Scenario 1 (paper §VII):
+    /// ResNet101 → (3, 33); VGG19 → (3, 23). 1-based, part-1 = [1..σ1].
+    pub default_cuts: (usize, usize),
+    /// Fraction of a layer's compute that is forward (rest is backward).
+    /// Fig 5 shows fwd/bwd asymmetry; VGG's bwd is relatively heavier.
+    pub fwd_frac: f64,
+    /// Paper's default slot length |S_t| for this model (§VII): 180 ms for
+    /// ResNet101, 550 ms for VGG19.
+    pub default_slot_ms: f64,
+}
+
+/// Which NN the scenario trains.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Model {
+    ResNet101,
+    Vgg19,
+}
+
+impl Model {
+    pub fn name(self) -> &'static str {
+        match self {
+            Model::ResNet101 => "resnet101",
+            Model::Vgg19 => "vgg19",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Model> {
+        match s.to_ascii_lowercase().as_str() {
+            "resnet101" | "resnet" => Some(Model::ResNet101),
+            "vgg19" | "vgg" => Some(Model::Vgg19),
+            _ => None,
+        }
+    }
+
+    /// Build the per-layer profile table.
+    ///
+    /// The paper treats ResNet101 as 37 indivisible layers (stem + 33
+    /// bottleneck blocks + pool + fc + loss) and VGG19 as 25 (16 conv +
+    /// 5 pool grouped + 3 fc + loss → 25 entries). The tables below follow
+    /// the canonical architectures: compute weight ∝ FLOPs of the block on
+    /// 32×32 inputs (CIFAR-10), activation size = output tensor MB at
+    /// batch 128, params = weight MB.
+    pub fn profile(self) -> ModelProfile {
+        match self {
+            Model::ResNet101 => ModelProfile {
+                name: "resnet101",
+                layers: resnet101_layers(),
+                default_cuts: (3, 33),
+                fwd_frac: 0.38,
+                default_slot_ms: 180.0,
+            },
+            Model::Vgg19 => ModelProfile {
+                name: "vgg19",
+                layers: vgg19_layers(),
+                default_cuts: (3, 23),
+                fwd_frac: 0.30,
+                default_slot_ms: 550.0,
+            },
+        }
+    }
+}
+
+/// ResNet101 on 32×32: stem conv, then bottleneck stages [3, 4, 23, 3],
+/// then avgpool+fc. 1 (stem) + 33 (blocks) + 3 (pool, fc, loss) = 37.
+fn resnet101_layers() -> Vec<LayerProfile> {
+    let mut layers = Vec::with_capacity(37);
+    // Stem: conv3x3,64 on 32x32. act: 32*32*64*4B * 128 = 33.5 MB.
+    layers.push(LayerProfile { flops_weight: 1.2, act_mb: 33.5, param_mb: 0.007 });
+    // Stage conv2_x: 3 bottlenecks @ 32x32, width 64->256.
+    for k in 0..3 {
+        layers.push(LayerProfile {
+            flops_weight: if k == 0 { 2.4 } else { 2.2 },
+            act_mb: 134.2, // 32*32*256*4*128 / 1e6
+            param_mb: if k == 0 { 0.30 } else { 0.28 },
+        });
+    }
+    // Stage conv3_x: 4 bottlenecks @ 16x16, width 512.
+    for k in 0..4 {
+        layers.push(LayerProfile {
+            flops_weight: if k == 0 { 2.6 } else { 2.2 },
+            act_mb: 67.1,
+            param_mb: if k == 0 { 1.51 } else { 1.12 },
+        });
+    }
+    // Stage conv4_x: 23 bottlenecks @ 8x8, width 1024 (the bulk).
+    for k in 0..23 {
+        layers.push(LayerProfile {
+            flops_weight: if k == 0 { 2.6 } else { 2.2 },
+            act_mb: 33.5,
+            param_mb: if k == 0 { 6.03 } else { 4.47 },
+        });
+    }
+    // Stage conv5_x: 3 bottlenecks @ 4x4, width 2048.
+    for k in 0..3 {
+        layers.push(LayerProfile {
+            flops_weight: if k == 0 { 2.6 } else { 2.2 },
+            act_mb: 16.8,
+            param_mb: if k == 0 { 24.1 } else { 17.9 },
+        });
+    }
+    // avgpool, fc, loss.
+    layers.push(LayerProfile { flops_weight: 0.05, act_mb: 1.05, param_mb: 0.0 });
+    layers.push(LayerProfile { flops_weight: 0.05, act_mb: 0.005, param_mb: 0.082 });
+    layers.push(LayerProfile { flops_weight: 0.02, act_mb: 0.005, param_mb: 0.0 });
+    assert_eq!(layers.len(), 37);
+    layers
+}
+
+/// VGG19 on 32×32: 16 convs (with pools folded into the preceding conv
+/// entry, matching the paper's "25 layers" granularity: 16 conv + 5 pool
+/// + 3 fc + loss = 25).
+fn vgg19_layers() -> Vec<LayerProfile> {
+    // (flops_weight, act_mb, param_mb) per entry.
+    // conv weights ∝ out_ch * in_ch * H * W; acts at batch 128.
+    let spec: [(f64, f64, f64); 25] = [
+        (0.6, 33.5, 0.007),  // conv1_1 64@32x32
+        (6.2, 33.5, 0.148),  // conv1_2
+        (0.05, 8.4, 0.0),    // pool1
+        (3.1, 16.8, 0.295),  // conv2_1 128@16x16
+        (6.2, 16.8, 0.590),  // conv2_2
+        (0.05, 4.2, 0.0),    // pool2
+        (3.1, 8.4, 1.18),    // conv3_1 256@8x8
+        (6.2, 8.4, 2.36),    // conv3_2
+        (6.2, 8.4, 2.36),    // conv3_3
+        (6.2, 8.4, 2.36),    // conv3_4
+        (0.05, 2.1, 0.0),    // pool3
+        (3.1, 4.2, 4.72),    // conv4_1 512@4x4
+        (6.2, 4.2, 9.44),    // conv4_2
+        (6.2, 4.2, 9.44),    // conv4_3
+        (6.2, 4.2, 9.44),    // conv4_4
+        (0.05, 1.05, 0.0),   // pool4
+        (1.55, 1.05, 9.44),  // conv5_1 512@2x2
+        (1.55, 1.05, 9.44),  // conv5_2
+        (1.55, 1.05, 9.44),  // conv5_3
+        (1.55, 1.05, 9.44),  // conv5_4
+        (0.05, 0.26, 0.0),   // pool5
+        (0.4, 0.26, 8.39),   // fc1 (512->4096 on 32x32 variant)
+        (0.3, 0.26, 16.8),   // fc2
+        (0.05, 0.005, 0.04), // fc3 -> 10
+        (0.02, 0.005, 0.0),  // loss
+    ];
+    spec.iter()
+        .map(|&(w, a, p)| LayerProfile { flops_weight: w, act_mb: a, param_mb: p })
+        .collect()
+}
+
+impl ModelProfile {
+    pub fn n_layers(&self) -> usize {
+        self.layers.len()
+    }
+
+    pub fn total_weight(&self) -> f64 {
+        self.layers.iter().map(|l| l.flops_weight).sum()
+    }
+
+    /// Sum of compute weights over 1-based inclusive layer range [a, b].
+    pub fn weight_range(&self, a: usize, b: usize) -> f64 {
+        assert!(a >= 1 && b <= self.layers.len() && a <= b + 1, "bad layer range [{a},{b}]");
+        self.layers[a - 1..b].iter().map(|l| l.flops_weight).sum()
+    }
+
+    /// Activation size (MB) emitted by 1-based layer `k` (batch 128).
+    pub fn act_mb(&self, k: usize) -> f64 {
+        self.layers[k - 1].act_mb
+    }
+
+    /// Parameter MB over 1-based inclusive range [a, b].
+    pub fn param_mb_range(&self, a: usize, b: usize) -> f64 {
+        self.layers[a - 1..b].iter().map(|l| l.param_mb).sum()
+    }
+
+    /// Helper-side memory footprint d_j (GB) for a client with cuts
+    /// (σ1, σ2): part-2 params + optimizer state (x3) + stored activations
+    /// of the part-2 layers (needed for bwd) + the input activation buffer.
+    pub fn part2_footprint_gb(&self, cuts: (usize, usize)) -> f64 {
+        let (s1, s2) = cuts;
+        let params = self.param_mb_range(s1 + 1, s2);
+        let acts: f64 = self.layers[s1..s2].iter().map(|l| l.act_mb).sum();
+        let input = self.act_mb(s1);
+        (3.0 * params + acts + input) / 1024.0
+    }
+}
+
+/// Devices of the paper's testbed (Table I) plus their roles.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Device {
+    RPi4,
+    RPi3,
+    JetsonNanoCpu,
+    JetsonNanoGpu,
+    Vm8Core,
+    AppleM1,
+}
+
+/// Table I: measured batch-update (full model, batch 128) times in
+/// seconds, per model, plus RAM.
+#[derive(Clone, Copy, Debug)]
+pub struct DeviceProfile {
+    pub device: Device,
+    pub name: &'static str,
+    /// Full-model batch-update wall time (s): (ResNet101, VGG19).
+    /// None = cannot train (RPi3 runs out of memory — it can still run
+    /// *split* parts, which is the paper's point).
+    pub batch_s: Option<(f64, f64)>,
+    pub ram_gb: f64,
+    /// Can act as a helper in the paper's setup (VM, M1).
+    pub helper_capable: bool,
+}
+
+pub const DEVICES: [DeviceProfile; 6] = [
+    DeviceProfile { device: Device::RPi4, name: "RPi 4B (Cortex-A72)", batch_s: Some((91.9, 71.9)), ram_gb: 4.0, helper_capable: false },
+    // RPi3 cannot train the full model; for split parts we extrapolate its
+    // speed as ~2.6x slower than RPi4 (A53@1.4GHz vs A72@1.5GHz, 1GB RAM).
+    DeviceProfile { device: Device::RPi3, name: "RPi 3B+ (Cortex-A53)", batch_s: None, ram_gb: 1.0, helper_capable: false },
+    DeviceProfile { device: Device::JetsonNanoCpu, name: "Jetson Nano (CPU)", batch_s: Some((143.0, 396.0)), ram_gb: 4.0, helper_capable: false },
+    DeviceProfile { device: Device::JetsonNanoGpu, name: "Jetson Nano (GPU)", batch_s: Some((1.2, 2.6)), ram_gb: 4.0, helper_capable: false },
+    DeviceProfile { device: Device::Vm8Core, name: "VM 8-core vCPU", batch_s: Some((2.0, 3.6)), ram_gb: 16.0, helper_capable: true },
+    DeviceProfile { device: Device::AppleM1, name: "Apple M1 8-core", batch_s: Some((3.5, 3.6)), ram_gb: 16.0, helper_capable: true },
+];
+
+impl Device {
+    pub fn profile(self) -> &'static DeviceProfile {
+        DEVICES.iter().find(|d| d.device == self).unwrap()
+    }
+
+    /// Whole-model batch time (ms) for `model`; extrapolated for RPi3.
+    pub fn batch_ms(self, model: Model) -> f64 {
+        let p = self.profile();
+        let (r, v) = match p.batch_s {
+            Some(t) => t,
+            // RPi3 extrapolation (see DeviceProfile comment).
+            None => {
+                let rpi4 = Device::RPi4.profile().batch_s.unwrap();
+                (rpi4.0 * 2.6, rpi4.1 * 2.6)
+            }
+        };
+        1000.0 * match model {
+            Model::ResNet101 => r,
+            Model::Vgg19 => v,
+        }
+    }
+
+    /// Compute time (ms) to process (fwd+bwd) the 1-based layer range
+    /// [a, b] of `model` on this device: whole-batch time scaled by the
+    /// range's share of total FLOPs weight.
+    pub fn range_ms(self, model: Model, a: usize, b: usize) -> f64 {
+        let prof = model.profile();
+        self.batch_ms(model) * prof.weight_range(a, b) / prof.total_weight()
+    }
+
+    /// (fwd_ms, bwd_ms) split of `range_ms` using the model's fwd share.
+    pub fn range_fwd_bwd_ms(self, model: Model, a: usize, b: usize) -> (f64, f64) {
+        let total = self.range_ms(model, a, b);
+        let f = model.profile().fwd_frac;
+        (total * f, total * (1.0 - f))
+    }
+
+    /// Client-capable device pool (Scenario 1 draws clients uniformly).
+    pub fn client_pool() -> &'static [Device] {
+        &[Device::RPi4, Device::RPi3, Device::JetsonNanoCpu, Device::JetsonNanoGpu]
+    }
+
+    /// Helper-capable pool (VM and M1 in the paper).
+    pub fn helper_pool() -> &'static [Device] {
+        &[Device::Vm8Core, Device::AppleM1]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn layer_counts_match_paper() {
+        assert_eq!(Model::ResNet101.profile().n_layers(), 37);
+        assert_eq!(Model::Vgg19.profile().n_layers(), 25);
+    }
+
+    #[test]
+    fn default_cuts_in_range() {
+        for m in [Model::ResNet101, Model::Vgg19] {
+            let p = m.profile();
+            let (s1, s2) = p.default_cuts;
+            assert!(1 <= s1 && s1 < s2 && s2 < p.n_layers());
+        }
+    }
+
+    #[test]
+    fn weight_ranges_partition() {
+        for m in [Model::ResNet101, Model::Vgg19] {
+            let p = m.profile();
+            let (s1, s2) = p.default_cuts;
+            let total = p.weight_range(1, s1) + p.weight_range(s1 + 1, s2) + p.weight_range(s2 + 1, p.n_layers());
+            assert!((total - p.total_weight()).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn part2_dominates_compute() {
+        // The whole point of SL: the offloaded middle carries most FLOPs.
+        for m in [Model::ResNet101, Model::Vgg19] {
+            let p = m.profile();
+            let (s1, s2) = p.default_cuts;
+            let frac = p.weight_range(s1 + 1, s2) / p.total_weight();
+            assert!(frac > 0.6, "{}: part-2 share {frac}", p.name);
+        }
+    }
+
+    #[test]
+    fn table1_times_embedded() {
+        assert!((Device::RPi4.batch_ms(Model::ResNet101) - 91_900.0).abs() < 1.0);
+        assert!((Device::Vm8Core.batch_ms(Model::Vgg19) - 3_600.0).abs() < 1.0);
+        assert!((Device::JetsonNanoGpu.batch_ms(Model::ResNet101) - 1_200.0).abs() < 1.0);
+    }
+
+    #[test]
+    fn rpi3_extrapolated_slower_than_rpi4() {
+        assert!(Device::RPi3.batch_ms(Model::ResNet101) > Device::RPi4.batch_ms(Model::ResNet101));
+    }
+
+    #[test]
+    fn helpers_much_faster_than_clients() {
+        // Table I: VM/M1 are two orders of magnitude faster than RPis.
+        let vm = Device::Vm8Core.batch_ms(Model::ResNet101);
+        let rpi = Device::RPi4.batch_ms(Model::ResNet101);
+        assert!(rpi / vm > 20.0);
+    }
+
+    #[test]
+    fn footprint_positive_and_reasonable() {
+        for m in [Model::ResNet101, Model::Vgg19] {
+            let p = m.profile();
+            let d = p.part2_footprint_gb(p.default_cuts);
+            assert!(d > 0.1 && d < 16.0, "{}: d = {d} GB", p.name);
+        }
+    }
+
+    #[test]
+    fn fwd_bwd_split_sums() {
+        let (f, b) = Device::RPi4.range_fwd_bwd_ms(Model::Vgg19, 1, 3);
+        let total = Device::RPi4.range_ms(Model::Vgg19, 1, 3);
+        assert!((f + b - total).abs() < 1e-9);
+        assert!(b > f, "VGG bwd should dominate (Fig 5 asymmetry)");
+    }
+}

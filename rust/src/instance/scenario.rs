@@ -1,0 +1,354 @@
+//! Scenario generators reproducing the paper's two evaluation settings
+//! (§VII "Setup"):
+//!
+//! * **Scenario 1 (low heterogeneity)** — clients and helpers are drawn
+//!   uniformly from the testbed's device types (Table I); memory = RAM;
+//!   all clients share the same cut layers (ResNet101 → (3, 33), VGG19 →
+//!   (3, 23)); links follow the Akamai-France model.
+//! * **Scenario 2 (high heterogeneity)** — device speeds are *interpolated*
+//!   between the profiled devices (log-space), memory varies per entity
+//!   (upper-bounded by RAM, with a few very-low-memory helpers), clients
+//!   use *randomly selected* cut layers, and links have a wider spread.
+//!
+//! Each generated instance is deterministic in `(scenario, model, J, I,
+//! seed)` — every experiment records this tuple.
+
+use super::network::LinkModel;
+use super::profiles::{Device, Model};
+use super::InstanceMs;
+use crate::util::rng::Rng;
+
+/// Scenario identifier (paper §VII).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Scenario {
+    S1,
+    S2,
+}
+
+impl Scenario {
+    pub fn name(self) -> &'static str {
+        match self {
+            Scenario::S1 => "scenario1",
+            Scenario::S2 => "scenario2",
+        }
+    }
+    pub fn parse(s: &str) -> Option<Scenario> {
+        match s.to_ascii_lowercase().as_str() {
+            "1" | "s1" | "scenario1" => Some(Scenario::S1),
+            "2" | "s2" | "scenario2" => Some(Scenario::S2),
+            _ => None,
+        }
+    }
+}
+
+/// Generator configuration.
+#[derive(Clone, Debug)]
+pub struct ScenarioCfg {
+    pub scenario: Scenario,
+    pub model: Model,
+    pub n_clients: usize,
+    pub n_helpers: usize,
+    pub seed: u64,
+    /// Activation wire-size factor: fraction of the raw fp32 activation
+    /// tensor actually shipped (fp16 + activation compression on the
+    /// testbed). Calibrated so horizons land near the paper's reported
+    /// range (T≈294 for ResNet101 J=10 at |S_t|=180ms; T≈176 for VGG19
+    /// at 550ms) — see DESIGN.md substitution table.
+    pub wire_factor: f64,
+    /// Multiplicative jitter (lognormal σ) applied to every profiled time.
+    pub jitter_sigma: f64,
+    /// Per-helper preemption switching cost, ms (0 = paper's base model).
+    pub switch_cost_ms: f64,
+}
+
+impl ScenarioCfg {
+    pub fn new(scenario: Scenario, model: Model, n_clients: usize, n_helpers: usize, seed: u64) -> Self {
+        ScenarioCfg {
+            scenario,
+            model,
+            n_clients,
+            n_helpers,
+            seed,
+            wire_factor: 0.10,
+            jitter_sigma: match scenario {
+                Scenario::S1 => 0.08,
+                Scenario::S2 => 0.15,
+            },
+            switch_cost_ms: 0.0,
+        }
+    }
+
+    pub fn with_switch_cost(mut self, ms: f64) -> Self {
+        self.switch_cost_ms = ms;
+        self
+    }
+
+    /// Generate the instance.
+    pub fn generate(&self) -> InstanceMs {
+        let mut rng = Rng::seeded(self.seed ^ fnv(self.scenario.name()) ^ fnv(self.model.name()));
+        let prof = self.model.profile();
+        let n_layers = prof.n_layers();
+        let (j_n, i_n) = (self.n_clients, self.n_helpers);
+
+        // --- per-client cut layers -------------------------------------
+        let cuts: Vec<(usize, usize)> = (0..j_n)
+            .map(|_| match self.scenario {
+                Scenario::S1 => prof.default_cuts,
+                Scenario::S2 => {
+                    // Random cuts: σ1 early (keep part-1 cheap enough for the
+                    // device), σ2 near the end but leaving a real part-3.
+                    let s1 = rng.range_usize(2, 5.min(n_layers / 3));
+                    let hi = n_layers - 2;
+                    let lo = (n_layers * 2 / 3).max(s1 + 2).min(hi);
+                    let s2 = rng.range_usize(lo, hi);
+                    (s1, s2)
+                }
+            })
+            .collect();
+
+        // --- device speed factors ---------------------------------------
+        // For each entity we derive a whole-model batch time (ms). S1 picks
+        // a concrete testbed device; S2 interpolates between the pool's
+        // fastest and slowest in log space (paper: "interpolating the time
+        // measurements of the profiled devices").
+        let client_pool = Device::client_pool();
+        let helper_pool = Device::helper_pool();
+        let model = self.model;
+        // S2 interpolates device speeds in log space ("interpolating the
+        // time measurements of the profiled devices"). The helper pool
+        // (VM, M1) spans a narrow 2–3.6 s band, so for helpers we widen
+        // the continuum by 2× on both ends — S2 must be *more*
+        // heterogeneous than S1's two fixed helper types (§VII explicitly
+        // has "a few helpers with very limited" capabilities in S2).
+        let log_interp = |rng: &mut Rng, pool: &[Device], widen: f64| -> f64 {
+            let times: Vec<f64> = pool.iter().map(|d| d.batch_ms(model)).collect();
+            let lo = (times.iter().cloned().fold(f64::MAX, f64::min) / widen).ln();
+            let hi = (times.iter().cloned().fold(0.0f64, f64::max) * widen).ln();
+            (rng.range_f64(lo, hi)).exp()
+        };
+        let client_batch_ms: Vec<f64> = (0..j_n)
+            .map(|_| match self.scenario {
+                Scenario::S1 => rng.choice(client_pool).batch_ms(model),
+                Scenario::S2 => log_interp(&mut rng, client_pool, 1.0),
+            })
+            .collect();
+        let helper_batch_ms: Vec<f64> = (0..i_n)
+            .map(|_| match self.scenario {
+                Scenario::S1 => rng.choice(helper_pool).batch_ms(model),
+                Scenario::S2 => log_interp(&mut rng, helper_pool, 2.0),
+            })
+            .collect();
+
+        // --- memory -------------------------------------------------------
+        let d_gb: Vec<f64> = cuts.iter().map(|&c| prof.part2_footprint_gb(c)).collect();
+        let helper_ram: Vec<f64> = (0..i_n)
+            .map(|k| match self.scenario {
+                Scenario::S1 => helper_pool[k % helper_pool.len()].profile().ram_gb,
+                Scenario::S2 => {
+                    // "can vary from device to device, upper-bounded by RAM";
+                    // a few helpers end up with very limited memory (§VII).
+                    let ram = helper_pool[k % helper_pool.len()].profile().ram_gb;
+                    rng.range_f64(0.15 * ram, ram)
+                }
+            })
+            .collect();
+        let mem_gb = repair_memory(&d_gb, helper_ram);
+
+        // --- links ---------------------------------------------------------
+        let link = match self.scenario {
+            Scenario::S1 => LinkModel::france_q4_2016(),
+            Scenario::S2 => LinkModel::heterogeneous(),
+        };
+        let rates = link.draw_rates(&mut rng, i_n, j_n);
+
+        // --- per-edge delay vectors ----------------------------------------
+        let total_w = prof.total_weight();
+        let e_n = i_n * j_n;
+        let (mut r_ms, mut l_ms, mut lp_ms, mut rp_ms, mut p_ms, mut pp_ms) = (
+            vec![0.0; e_n],
+            vec![0.0; e_n],
+            vec![0.0; e_n],
+            vec![0.0; e_n],
+            vec![0.0; e_n],
+            vec![0.0; e_n],
+        );
+        let jit = |rng: &mut Rng, x: f64, sigma: f64| rng.lognormal_median(x, sigma);
+        for j in 0..j_n {
+            let (s1, s2) = cuts[j];
+            // Client-side compute (whole-batch time scaled by part share,
+            // then split fwd/bwd by the model's fwd fraction).
+            let share = |a: usize, b: usize| if a > b { 0.0 } else { prof.weight_range(a, b) / total_w };
+            let f = prof.fwd_frac;
+            let part1 = client_batch_ms[j] * share(1, s1);
+            let part3 = client_batch_ms[j] * share(s2 + 1, n_layers);
+            let (p1_f, p1_b) = (part1 * f, part1 * (1.0 - f));
+            let (p3_f, p3_b) = (part3 * f, part3 * (1.0 - f));
+            // Wire sizes (MB): activations at σ1 and σ2 (grad ≈ act size).
+            let a1_mb = prof.act_mb(s1) * self.wire_factor;
+            let a2_mb = prof.act_mb(s2) * self.wire_factor;
+            for i in 0..i_n {
+                let e = i * j_n + j;
+                let rate = rates[e];
+                let up1 = link.transfer_ms(a1_mb, rate);
+                let dn2 = link.transfer_ms(a2_mb, rate);
+                let up2 = link.transfer_ms(a2_mb, rate);
+                let dn1 = link.transfer_ms(a1_mb, rate);
+                let part2 = helper_batch_ms[i] * share(s1 + 1, s2);
+                let s = self.jitter_sigma;
+                r_ms[e] = jit(&mut rng, p1_f + up1, s);
+                l_ms[e] = jit(&mut rng, dn2 + p3_f, s);
+                lp_ms[e] = jit(&mut rng, p3_b + up2, s);
+                rp_ms[e] = jit(&mut rng, dn1 + p1_b, s);
+                p_ms[e] = jit(&mut rng, (part2 * f).max(1.0), s);
+                pp_ms[e] = jit(&mut rng, (part2 * (1.0 - f)).max(1.0), s);
+            }
+        }
+
+        let inst = InstanceMs {
+            n_clients: j_n,
+            n_helpers: i_n,
+            r_ms,
+            l_ms,
+            lp_ms,
+            rp_ms,
+            p_ms,
+            pp_ms,
+            d_gb,
+            mem_gb,
+            mu_ms: vec![self.switch_cost_ms; i_n],
+            label: format!(
+                "{}/{} J={} I={} seed={}",
+                self.scenario.name(),
+                self.model.name(),
+                j_n,
+                i_n,
+                self.seed
+            ),
+        };
+        inst.validate().expect("generator produced invalid instance");
+        inst
+    }
+}
+
+/// Ensure a memory-feasible assignment exists: total capacity must cover
+/// total demand with slack, and the largest client must fit somewhere.
+/// Scales capacities up minimally when violated (documents the testbed's
+/// implicit property that its helpers could host all clients).
+fn repair_memory(d_gb: &[f64], mut mem: Vec<f64>) -> Vec<f64> {
+    let demand: f64 = d_gb.iter().sum();
+    let max_d = d_gb.iter().cloned().fold(0.0, f64::max);
+    let cap: f64 = mem.iter().sum();
+    if cap < 1.15 * demand {
+        let scale = 1.15 * demand / cap.max(1e-9);
+        for m in &mut mem {
+            *m *= scale;
+        }
+    }
+    let max_m = mem.iter().cloned().fold(0.0, f64::max);
+    if max_m < max_d {
+        let k = mem
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(k, _)| k)
+            .unwrap();
+        mem[k] = max_d * 1.05;
+    }
+    mem
+}
+
+fn fnv(s: &str) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for b in s.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn deterministic() {
+        let cfg = ScenarioCfg::new(Scenario::S2, Model::Vgg19, 12, 4, 7);
+        let a = cfg.generate();
+        let b = cfg.generate();
+        assert_eq!(a.p_ms, b.p_ms);
+        assert_eq!(a.mem_gb, b.mem_gb);
+    }
+
+    #[test]
+    fn seeds_differ() {
+        let a = ScenarioCfg::new(Scenario::S1, Model::ResNet101, 10, 2, 1).generate();
+        let b = ScenarioCfg::new(Scenario::S1, Model::ResNet101, 10, 2, 2).generate();
+        assert_ne!(a.p_ms, b.p_ms);
+    }
+
+    #[test]
+    fn scenario1_horizon_in_paper_ballpark() {
+        // Paper Table II: ResNet101, J=10 → T=294 at |S_t|=180ms;
+        // VGG19, J=10 → T=176 at 550ms. Accept the right order of magnitude.
+        let t_avg = |model: Model, slot: f64| -> f64 {
+            let mut acc = 0.0;
+            for seed in 0..5u64 {
+                let inst = ScenarioCfg::new(Scenario::S1, model, 10, 2, 1000 + seed).generate().quantize(slot);
+                acc += inst.horizon() as f64;
+            }
+            acc / 5.0
+        };
+        let t_res = t_avg(Model::ResNet101, 180.0);
+        assert!((120.0..750.0).contains(&t_res), "T(resnet)={t_res}");
+        let t_vgg = t_avg(Model::Vgg19, 550.0);
+        assert!((40.0..450.0).contains(&t_vgg), "T(vgg)={t_vgg}");
+    }
+
+    #[test]
+    fn memory_always_repairable() {
+        prop::check(60, |rng| {
+            let j = rng.range_usize(1, 40);
+            let i = rng.range_usize(1, 8);
+            let scen = if rng.chance(0.5) { Scenario::S1 } else { Scenario::S2 };
+            let model = if rng.chance(0.5) { Model::ResNet101 } else { Model::Vgg19 };
+            let inst = ScenarioCfg::new(scen, model, j, i, rng.next_u64()).generate();
+            // validate() ran inside generate(); check capacity slack too.
+            let demand: f64 = inst.d_gb.iter().sum();
+            let cap: f64 = inst.mem_gb.iter().sum();
+            prop::assert_prop(cap >= 1.1 * demand, "capacity covers demand");
+        });
+    }
+
+    #[test]
+    fn scenario2_more_heterogeneous_than_scenario1() {
+        // Coefficient of variation of p_ms should be larger in S2.
+        let cv = |scen: Scenario| -> f64 {
+            let mut cvs = vec![];
+            for seed in 0..8u64 {
+                let inst = ScenarioCfg::new(scen, Model::ResNet101, 20, 5, 77 + seed).generate();
+                let m = inst.p_ms.iter().sum::<f64>() / inst.p_ms.len() as f64;
+                let v = inst.p_ms.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / inst.p_ms.len() as f64;
+                cvs.push(v.sqrt() / m);
+            }
+            cvs.iter().sum::<f64>() / cvs.len() as f64
+        };
+        assert!(cv(Scenario::S2) > cv(Scenario::S1));
+    }
+
+    #[test]
+    fn scenario2_random_cuts_vary_footprints() {
+        let inst = ScenarioCfg::new(Scenario::S2, Model::ResNet101, 20, 5, 3).generate();
+        let min = inst.d_gb.iter().cloned().fold(f64::MAX, f64::min);
+        let max = inst.d_gb.iter().cloned().fold(0.0, f64::max);
+        assert!(max > min * 1.05, "footprints should differ: {min}..{max}");
+    }
+
+    #[test]
+    fn switch_cost_propagates() {
+        let inst = ScenarioCfg::new(Scenario::S1, Model::Vgg19, 4, 2, 9)
+            .with_switch_cost(120.0)
+            .generate();
+        assert!(inst.mu_ms.iter().all(|&m| (m - 120.0).abs() < 1e-9));
+    }
+}

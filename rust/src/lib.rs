@@ -1,0 +1,55 @@
+//! # psl — Workflow Optimization for Parallel Split Learning
+//!
+//! A production-grade reproduction of *"Workflow Optimization for Parallel
+//! Split Learning"* (Tirana, Tsigkari, Iosifidis, Chatzopoulos — IEEE
+//! INFOCOM 2024): joint client→helper assignment and preemptive
+//! time-slotted scheduling that minimizes the batch-training makespan of
+//! parallel split learning, plus the full substrate needed to evaluate it
+//! (testbed profile bank, scenario generators, an exact reference solver,
+//! a discrete-event simulator, and a real rust+JAX+Pallas split-learning
+//! runtime over PJRT).
+//!
+//! ## Layers
+//!
+//! * **L3 (this crate)** — the coordinator: solvers
+//!   ([`solver::admm`], [`solver::greedy`], [`solver::exact`], …),
+//!   simulator ([`sim`]), SL execution runtime ([`slexec`]), metrics, CLI.
+//! * **L2 (python/compile/model.py)** — the split NN (part-1/2/3) in JAX,
+//!   AOT-lowered to HLO text artifacts.
+//! * **L1 (python/compile/kernels/)** — the helper-side Pallas kernel
+//!   (fused conv-as-matmul block), interpret-mode on CPU.
+//!
+//! Python never runs at request time: the [`runtime`] module loads the HLO
+//! artifacts through PJRT (`xla` crate) and [`slexec`] drives real training
+//! from Rust according to the optimized schedules.
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use psl::instance::scenario::{Scenario, ScenarioCfg};
+//! use psl::instance::profiles::Model;
+//! use psl::solver::{admm, greedy, strategy};
+//!
+//! let inst = ScenarioCfg::new(Scenario::S2, Model::ResNet101, 20, 5, 42)
+//!     .generate()
+//!     .quantize(180.0);
+//! let (schedule, method) = strategy::solve(&inst, &admm::AdmmCfg::default()).unwrap();
+//! println!("method {:?}: makespan {} slots ({:.1} s)",
+//!     method,
+//!     schedule.makespan(&inst),
+//!     schedule.makespan(&inst) as f64 * inst.slot_ms / 1000.0);
+//! let g = greedy::solve(&inst).unwrap();
+//! assert!(schedule.makespan(&inst) <= g.makespan(&inst));
+//! ```
+
+pub mod bench;
+pub mod cli;
+pub mod coordinator;
+pub mod data;
+pub mod exec;
+pub mod instance;
+pub mod runtime;
+pub mod sim;
+pub mod slexec;
+pub mod solver;
+pub mod util;

@@ -1,0 +1,195 @@
+//! `psl` — the leader binary: CLI over the coordinator.
+//! See `psl help` (or [`psl::cli::HELP`]).
+
+use anyhow::{Context, Result};
+use psl::cli::{Args, HELP};
+use psl::coordinator::{compare_methods, SolveRequest, TrainRequest};
+use psl::instance::profiles::{Device, Model, DEVICES};
+use psl::instance::scenario::Scenario;
+use psl::sim;
+use psl::slexec::TrainCfg;
+use psl::solver::admm::AdmmCfg;
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = Args::parse(&argv);
+    let code = match dispatch(&args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+fn solve_request(args: &Args) -> Result<SolveRequest> {
+    let scenario = Scenario::parse(&args.str_of("scenario", "1")).context("bad --scenario")?;
+    let model = Model::parse(&args.str_of("model", "resnet101")).context("bad --model")?;
+    Ok(SolveRequest {
+        scenario,
+        model,
+        n_clients: args.usize_of("j", 10),
+        n_helpers: args.usize_of("i", 2),
+        seed: args.u64_of("seed", 42),
+        slot_ms: args.flags.get("slot-ms").and_then(|v| v.parse().ok()),
+        switch_cost_ms: args.f64_of("switch-cost", 0.0),
+    })
+}
+
+fn dispatch(args: &Args) -> Result<()> {
+    match args.cmd.as_str() {
+        "" | "help" | "--help" | "-h" => {
+            println!("{HELP}");
+            Ok(())
+        }
+        "profiles" => cmd_profiles(),
+        "gen" => cmd_gen(args),
+        "solve" => cmd_solve(args),
+        "sweep-slots" => cmd_sweep(args),
+        "train" => cmd_train(args),
+        other => anyhow::bail!("unknown command {other:?}; see `psl help`"),
+    }
+}
+
+fn cmd_profiles() -> Result<()> {
+    println!("Table I — testbed devices, whole-batch update time (batch 128):");
+    println!("  {:<28} {:>12} {:>10} {:>7} {:>7}", "device", "ResNet101[s]", "VGG19[s]", "RAM", "helper");
+    for d in DEVICES {
+        let r = d.device.batch_ms(Model::ResNet101) / 1000.0;
+        let v = d.device.batch_ms(Model::Vgg19) / 1000.0;
+        println!(
+            "  {:<28} {:>12.1} {:>10.1} {:>6.0}G {:>7}",
+            d.name,
+            r,
+            v,
+            d.ram_gb,
+            if d.helper_capable { "yes" } else { "no" }
+        );
+    }
+    println!("\nFig 5 — part-1 compute time per device (default cuts), fwd/bwd ms:");
+    for model in [Model::ResNet101, Model::Vgg19] {
+        let prof = model.profile();
+        let (s1, _) = prof.default_cuts;
+        println!("  {} (part-1 = layers 1..{s1}):", prof.name);
+        for d in DEVICES {
+            let (f, b) = d.device.range_fwd_bwd_ms(model, 1, s1);
+            println!("    {:<28} fwd {:>9.1}  bwd {:>9.1}", d.name, f, b);
+        }
+    }
+    let _ = Device::client_pool();
+    Ok(())
+}
+
+fn cmd_gen(args: &Args) -> Result<()> {
+    let req = solve_request(args)?;
+    let ms = req.instance_ms();
+    let json = ms.to_json().pretty();
+    match args.flags.get("out") {
+        Some(path) => {
+            std::fs::write(path, &json)?;
+            println!("wrote {} ({} clients, {} helpers)", path, ms.n_clients, ms.n_helpers);
+        }
+        None => println!("{json}"),
+    }
+    Ok(())
+}
+
+fn cmd_solve(args: &Args) -> Result<()> {
+    let req = solve_request(args)?;
+    let method = args.str_of("method", "all");
+    let replay = args.bool_of("replay");
+    let ms = req.instance_ms();
+    let inst = ms.quantize(req.slot_ms());
+    println!(
+        "instance: {} | T={} slots | slot {} ms | heterogeneity CV {:.2}",
+        inst.label,
+        inst.horizon(),
+        inst.slot_ms,
+        psl::solver::strategy::heterogeneity(&inst)
+    );
+    let rows = if method == "all" {
+        compare_methods(&req, args.bool_of("exact"), replay)?
+    } else {
+        vec![psl::coordinator::run_method(&ms, &inst, &method, replay, req.seed)?]
+    };
+    println!(
+        "  {:<10} {:>10} {:>12} {:>12} {:>9} {:>6}",
+        "method", "slots", "nominal[s]", "realized[s]", "solve", "preempt"
+    );
+    for r in &rows {
+        println!(
+            "  {:<10} {:>10} {:>12.1} {:>12} {:>9} {:>6}",
+            r.method,
+            r.makespan_slots,
+            r.makespan_ms / 1000.0,
+            r.realized_ms.map(|v| format!("{:.1}", v / 1000.0)).unwrap_or_else(|| "-".into()),
+            psl::bench::fmt_s(r.solve_s),
+            r.preemptions
+        );
+    }
+    if let Some(path) = args.flags.get("gantt") {
+        let best = rows.iter().min_by_key(|r| r.makespan_slots).context("no methods ran")?;
+        let schedule = match best.method.as_str() {
+            "greedy" => psl::solver::greedy::solve(&inst).unwrap(),
+            _ => psl::solver::strategy::solve(&inst, &AdmmCfg::default()).unwrap().0,
+        };
+        std::fs::write(path, sim::gantt_json(&inst, &schedule).pretty())?;
+        println!("gantt → {path}");
+    }
+    Ok(())
+}
+
+fn cmd_sweep(args: &Args) -> Result<()> {
+    let req = solve_request(args)?;
+    let ms = req.instance_ms();
+    let slots: Vec<f64> = args
+        .str_of("slots", "200,150,50")
+        .split(',')
+        .filter_map(|s| s.trim().parse().ok())
+        .collect();
+    let rows = sim::quantize::sweep_slot_lengths(&ms, &slots, &AdmmCfg::default());
+    println!("  {:>8} {:>8} {:>12} {:>13} {:>9} {:>8}", "slot[ms]", "T", "nominal[s]", "realized[s]", "solve", "preempt");
+    for r in rows {
+        println!(
+            "  {:>8.0} {:>8} {:>12.1} {:>13.1} {:>9} {:>8}",
+            r.slot_ms,
+            r.horizon,
+            r.nominal_ms / 1000.0,
+            r.realized_ms / 1000.0,
+            psl::bench::fmt_s(r.solve_s),
+            r.preemptions
+        );
+    }
+    Ok(())
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let req = TrainRequest {
+        arch: args.str_of("arch", "vgg_mini"),
+        artifacts_dir: args.str_of("artifacts", "artifacts").into(),
+        n_clients: args.usize_of("j", 4),
+        n_helpers: args.usize_of("i", 2),
+        seed: args.u64_of("seed", 7),
+        train: TrainCfg {
+            batches_per_round: args.usize_of("batches", 4),
+            rounds: args.usize_of("rounds", 3),
+            lr: args.f64_of("lr", 0.05) as f32,
+            seed: args.u64_of("seed", 7),
+        },
+    };
+    let outcome = psl::coordinator::run_training(&req)?;
+    println!(
+        "method={} makespan={} slots; {} steps in {:.1}s wall",
+        outcome.method, outcome.makespan_slots, outcome.report.steps, outcome.report.wall_s
+    );
+    println!("loss curve:");
+    for (k, l) in outcome.report.loss_curve.iter().enumerate() {
+        println!("  step {:>3}: {:.4}", k + 1, l);
+    }
+    println!("measured helper task times (ms):");
+    for (i, j, f, b) in &outcome.report.measured_ms {
+        println!("  helper {i} / client {j}: fwd {f:.1}  bwd {b:.1}");
+    }
+    Ok(())
+}

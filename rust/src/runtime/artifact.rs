@@ -1,0 +1,193 @@
+//! Artifact registry: parses the `manifest.json` emitted by
+//! `python/compile/aot.py` and exposes typed descriptions of every
+//! exported function and parameter bundle.
+
+use crate::util::json::Json;
+use anyhow::{Context, Result};
+use std::path::{Path, PathBuf};
+
+/// Shape + dtype of one tensor in an artifact signature.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorSpec {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl TensorSpec {
+    fn from_json(v: &Json) -> Result<TensorSpec> {
+        let shape = v
+            .get("shape")
+            .as_arr()
+            .context("spec.shape")?
+            .iter()
+            .map(|x| x.as_usize().context("shape dim"))
+            .collect::<Result<Vec<_>>>()?;
+        Ok(TensorSpec { shape, dtype: v.get("dtype").as_str().unwrap_or("float32").to_string() })
+    }
+
+    pub fn n_elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One exported function: HLO path + flattened I/O signature.
+#[derive(Clone, Debug)]
+pub struct FunctionSpec {
+    pub name: String,
+    pub hlo_path: PathBuf,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+/// One parameter bundle (p1/p2/p3): leaf specs + init files.
+#[derive(Clone, Debug)]
+pub struct ParamSpec {
+    pub leaves: Vec<TensorSpec>,
+    pub files: Vec<PathBuf>,
+}
+
+/// Parsed manifest for one architecture.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub arch: String,
+    pub batch: usize,
+    pub cuts: (usize, usize),
+    pub input_shape: Vec<usize>,
+    pub num_classes: usize,
+    pub functions: std::collections::BTreeMap<String, FunctionSpec>,
+    pub params: std::collections::BTreeMap<String, ParamSpec>,
+    pub dir: PathBuf,
+}
+
+impl Manifest {
+    /// Load `artifacts/<arch>/manifest.json`.
+    pub fn load(artifacts_dir: &Path, arch: &str) -> Result<Manifest> {
+        let dir = artifacts_dir.join(arch);
+        let text = std::fs::read_to_string(dir.join("manifest.json"))
+            .with_context(|| format!("read manifest for {arch} in {}", dir.display()))?;
+        let v = Json::parse(&text).context("parse manifest.json")?;
+        let mut functions = std::collections::BTreeMap::new();
+        for (name, f) in v.get("functions").as_obj().context("functions")? {
+            let inputs = f
+                .get("inputs")
+                .as_arr()
+                .context("inputs")?
+                .iter()
+                .map(TensorSpec::from_json)
+                .collect::<Result<Vec<_>>>()?;
+            let outputs = f
+                .get("outputs")
+                .as_arr()
+                .context("outputs")?
+                .iter()
+                .map(TensorSpec::from_json)
+                .collect::<Result<Vec<_>>>()?;
+            functions.insert(
+                name.clone(),
+                FunctionSpec {
+                    name: name.clone(),
+                    hlo_path: dir.join(f.get("hlo").as_str().context("hlo path")?),
+                    inputs,
+                    outputs,
+                },
+            );
+        }
+        let mut params = std::collections::BTreeMap::new();
+        for (name, p) in v.get("params").as_obj().context("params")? {
+            let leaves = p
+                .get("leaves")
+                .as_arr()
+                .context("leaves")?
+                .iter()
+                .map(TensorSpec::from_json)
+                .collect::<Result<Vec<_>>>()?;
+            let files = p
+                .get("files")
+                .as_arr()
+                .context("files")?
+                .iter()
+                .map(|x| Ok(dir.join(x.as_str().context("file")?)))
+                .collect::<Result<Vec<_>>>()?;
+            anyhow::ensure!(leaves.len() == files.len(), "params {name}: leaves/files mismatch");
+            params.insert(name.clone(), ParamSpec { leaves, files });
+        }
+        let cuts_arr = v.get("cuts").as_arr().context("cuts")?;
+        anyhow::ensure!(cuts_arr.len() == 2, "cuts must have 2 entries");
+        Ok(Manifest {
+            arch: v.get("arch").as_str().unwrap_or(arch).to_string(),
+            batch: v.get("batch").as_usize().context("batch")?,
+            cuts: (cuts_arr[0].as_usize().context("σ1")?, cuts_arr[1].as_usize().context("σ2")?),
+            input_shape: v
+                .get("input_shape")
+                .as_arr()
+                .context("input_shape")?
+                .iter()
+                .map(|x| x.as_usize().context("dim"))
+                .collect::<Result<Vec<_>>>()?,
+            num_classes: v.get("num_classes").as_usize().unwrap_or(10),
+            functions,
+            params,
+            dir,
+        })
+    }
+
+    pub fn function(&self, name: &str) -> Result<&FunctionSpec> {
+        self.functions.get(name).with_context(|| format!("function {name} not in manifest"))
+    }
+
+    /// Load a part's initial parameters from the init dumps.
+    pub fn load_init_params(&self, part: &str) -> Result<Vec<super::tensor::Tensor>> {
+        let spec = self.params.get(part).with_context(|| format!("params {part} not in manifest"))?;
+        spec.leaves
+            .iter()
+            .zip(&spec.files)
+            .map(|(leaf, file)| super::tensor::Tensor::load_f32_raw(file, &leaf.shape))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Write a miniature synthetic manifest for parser tests (the real
+    /// manifest round-trip is covered by the artifact-gated integration
+    /// tests in rust/tests/).
+    fn synthetic_manifest(dir: &Path) {
+        std::fs::create_dir_all(dir.join("toy/init")).unwrap();
+        let bytes: Vec<u8> = [1.0f32, 2.0, 3.0, 4.0].iter().flat_map(|x| x.to_le_bytes()).collect();
+        std::fs::write(dir.join("toy/init/p1_0.bin"), &bytes).unwrap();
+        let manifest = r#"{
+            "arch": "toy", "batch": 2, "cuts": [1, 3],
+            "input_shape": [4, 4, 1], "num_classes": 2,
+            "functions": {
+                "part1_fwd": {"hlo": "part1_fwd.hlo.txt",
+                    "inputs": [{"shape": [2, 2], "dtype": "float32"}],
+                    "outputs": [{"shape": [2, 2], "dtype": "float32"}]}
+            },
+            "params": {
+                "p1": {"leaves": [{"path": "w", "shape": [2, 2], "dtype": "float32"}],
+                        "files": ["init/p1_0.bin"], "n_elements": 4}
+            }
+        }"#;
+        std::fs::write(dir.join("toy/manifest.json"), manifest).unwrap();
+    }
+
+    #[test]
+    fn parses_synthetic_manifest() {
+        let dir = std::env::temp_dir().join(format!("psl-manifest-{}", std::process::id()));
+        synthetic_manifest(&dir);
+        let m = Manifest::load(&dir, "toy").unwrap();
+        assert_eq!(m.arch, "toy");
+        assert_eq!(m.cuts, (1, 3));
+        assert_eq!(m.batch, 2);
+        let f = m.function("part1_fwd").unwrap();
+        assert_eq!(f.inputs.len(), 1);
+        assert_eq!(f.inputs[0].shape, vec![2, 2]);
+        let p = m.load_init_params("p1").unwrap();
+        assert_eq!(p.len(), 1);
+        assert_eq!(p[0].as_f32().unwrap(), &[1.0, 2.0, 3.0, 4.0]);
+        assert!(m.function("missing").is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

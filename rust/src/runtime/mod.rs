@@ -1,0 +1,24 @@
+//! PJRT runtime: the bridge between the rust coordinator and the AOT
+//! artifacts produced by the python compile path.
+//!
+//! * [`tensor`] — host tensors + literal conversion + SGD/FedAvg math.
+//! * [`artifact`] — manifest parsing / initial parameter loading.
+//! * [`engine`] — compile-once execute-many PJRT wrapper.
+//!
+//! Python never runs here; after `make artifacts` the rust binary is
+//! self-contained.
+
+pub mod artifact;
+pub mod engine;
+pub mod tensor;
+
+pub use artifact::{FunctionSpec, Manifest, ParamSpec, TensorSpec};
+pub use engine::Engine;
+pub use tensor::{DType, Tensor, TensorData};
+
+/// Default artifacts directory (overridable via CLI / env PSL_ARTIFACTS).
+pub fn artifacts_dir() -> std::path::PathBuf {
+    std::env::var("PSL_ARTIFACTS")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|_| std::path::PathBuf::from("artifacts"))
+}

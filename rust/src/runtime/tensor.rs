@@ -1,0 +1,197 @@
+//! Host-side tensors and conversion to/from PJRT literals.
+//!
+//! The SL runtime keeps all training state (parameters, activations,
+//! gradients) as plain row-major host buffers; literals are created at the
+//! PJRT boundary only. f32 (data) and i32 (labels) cover the exported
+//! artifact signatures.
+
+use anyhow::{bail, Context, Result};
+
+/// Element type of a tensor.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+impl DType {
+    pub fn parse(s: &str) -> Result<DType> {
+        match s {
+            "float32" | "f32" => Ok(DType::F32),
+            "int32" | "i32" => Ok(DType::I32),
+            other => bail!("unsupported dtype {other}"),
+        }
+    }
+}
+
+/// A dense row-major host tensor.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: TensorData,
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum TensorData {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+impl Tensor {
+    pub fn zeros(shape: &[usize]) -> Tensor {
+        Tensor { shape: shape.to_vec(), data: TensorData::F32(vec![0.0; shape.iter().product()]) }
+    }
+
+    pub fn from_f32(shape: &[usize], data: Vec<f32>) -> Result<Tensor> {
+        let n: usize = shape.iter().product();
+        anyhow::ensure!(data.len() == n, "shape {shape:?} wants {n} elements, got {}", data.len());
+        Ok(Tensor { shape: shape.to_vec(), data: TensorData::F32(data) })
+    }
+
+    pub fn from_i32(shape: &[usize], data: Vec<i32>) -> Result<Tensor> {
+        let n: usize = shape.iter().product();
+        anyhow::ensure!(data.len() == n, "shape {shape:?} wants {n} elements, got {}", data.len());
+        Ok(Tensor { shape: shape.to_vec(), data: TensorData::I32(data) })
+    }
+
+    pub fn len(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn dtype(&self) -> DType {
+        match self.data {
+            TensorData::F32(_) => DType::F32,
+            TensorData::I32(_) => DType::I32,
+        }
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match &self.data {
+            TensorData::F32(v) => Ok(v),
+            _ => bail!("tensor is not f32"),
+        }
+    }
+
+    pub fn as_f32_mut(&mut self) -> Result<&mut [f32]> {
+        match &mut self.data {
+            TensorData::F32(v) => Ok(v),
+            _ => bail!("tensor is not f32"),
+        }
+    }
+
+    /// SGD step: self -= lr * grad (both f32, same shape).
+    pub fn sgd_step(&mut self, grad: &Tensor, lr: f32) -> Result<()> {
+        anyhow::ensure!(self.shape == grad.shape, "sgd shape mismatch {:?} vs {:?}", self.shape, grad.shape);
+        let g = grad.as_f32()?;
+        for (p, gi) in self.as_f32_mut()?.iter_mut().zip(g) {
+            *p -= lr * gi;
+        }
+        Ok(())
+    }
+
+    /// Weighted in-place accumulate: self += w * other (FedAvg building
+    /// block).
+    pub fn axpy(&mut self, w: f32, other: &Tensor) -> Result<()> {
+        anyhow::ensure!(self.shape == other.shape, "axpy shape mismatch");
+        let o = other.as_f32()?;
+        for (a, b) in self.as_f32_mut()?.iter_mut().zip(o) {
+            *a += w * b;
+        }
+        Ok(())
+    }
+
+    pub fn scale(&mut self, w: f32) -> Result<()> {
+        for a in self.as_f32_mut()? {
+            *a *= w;
+        }
+        Ok(())
+    }
+
+    /// Convert to a PJRT literal with the right shape.
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        let dims: Vec<i64> = self.shape.iter().map(|&d| d as i64).collect();
+        let lit = match &self.data {
+            TensorData::F32(v) => xla::Literal::vec1(v.as_slice()),
+            TensorData::I32(v) => xla::Literal::vec1(v.as_slice()),
+        };
+        // Scalars: vec1 of len 1 reshaped to rank-0.
+        lit.reshape(&dims).context("literal reshape")
+    }
+
+    /// Read a literal back into a host tensor.
+    pub fn from_literal(lit: &xla::Literal) -> Result<Tensor> {
+        let shape = lit.array_shape().context("literal shape")?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        match shape.ty() {
+            xla::ElementType::F32 => Tensor::from_f32(&dims, lit.to_vec::<f32>()?),
+            xla::ElementType::S32 => Tensor::from_i32(&dims, lit.to_vec::<i32>()?),
+            other => bail!("unsupported literal type {other:?}"),
+        }
+    }
+
+    /// Load raw little-endian f32 from a file (the aot.py init dumps).
+    pub fn load_f32_raw(path: &std::path::Path, shape: &[usize]) -> Result<Tensor> {
+        let bytes = std::fs::read(path).with_context(|| format!("read {}", path.display()))?;
+        anyhow::ensure!(bytes.len() % 4 == 0, "file not f32-aligned");
+        let data: Vec<f32> = bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        Tensor::from_f32(shape, data)
+    }
+
+    /// Mean of the elements (for loss scalars / diagnostics).
+    pub fn mean(&self) -> Result<f32> {
+        let v = self.as_f32()?;
+        anyhow::ensure!(!v.is_empty());
+        Ok(v.iter().sum::<f32>() / v.len() as f32)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construct_and_accessors() {
+        let t = Tensor::from_f32(&[2, 3], vec![1.0; 6]).unwrap();
+        assert_eq!(t.len(), 6);
+        assert_eq!(t.dtype(), DType::F32);
+        assert!(Tensor::from_f32(&[2, 3], vec![1.0; 5]).is_err());
+    }
+
+    #[test]
+    fn sgd_and_axpy() {
+        let mut p = Tensor::from_f32(&[3], vec![1.0, 2.0, 3.0]).unwrap();
+        let g = Tensor::from_f32(&[3], vec![1.0, 1.0, 1.0]).unwrap();
+        p.sgd_step(&g, 0.5).unwrap();
+        assert_eq!(p.as_f32().unwrap(), &[0.5, 1.5, 2.5]);
+        p.axpy(2.0, &g).unwrap();
+        assert_eq!(p.as_f32().unwrap(), &[2.5, 3.5, 4.5]);
+        let bad = Tensor::from_f32(&[2], vec![0.0; 2]).unwrap();
+        assert!(p.sgd_step(&bad, 0.1).is_err());
+    }
+
+    #[test]
+    fn raw_f32_roundtrip() {
+        let dir = std::env::temp_dir().join("psl-tensor-test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.bin");
+        let data: Vec<f32> = vec![0.25, -1.5, 3.0, 7.0];
+        let bytes: Vec<u8> = data.iter().flat_map(|x| x.to_le_bytes()).collect();
+        std::fs::write(&path, bytes).unwrap();
+        let t = Tensor::load_f32_raw(&path, &[2, 2]).unwrap();
+        assert_eq!(t.as_f32().unwrap(), data.as_slice());
+    }
+
+    #[test]
+    fn dtype_parse() {
+        assert_eq!(DType::parse("float32").unwrap(), DType::F32);
+        assert_eq!(DType::parse("int32").unwrap(), DType::I32);
+        assert!(DType::parse("bfloat16").is_err());
+    }
+}

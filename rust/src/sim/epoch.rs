@@ -1,0 +1,156 @@
+//! Epoch-level pipelined simulation.
+//!
+//! The paper optimizes a *single batch*'s makespan and argues (§III
+//! "Epochs & Aggregation") that the training process repeats it hundreds
+//! of times. Batches of the same client are serialized by the model-
+//! weight dependency, but a helper may start client A's batch k+1 fwd
+//! while client B is still in batch k — the steady state *pipelines*
+//! across batch boundaries. This module measures that steady state: the
+//! per-batch *period* of the pipelined schedule vs the single-batch
+//! makespan (period ≤ makespan; the gap is the pipelining win).
+
+use crate::instance::InstanceMs;
+use crate::solver::schedule::Schedule;
+
+/// Result of an epoch simulation.
+#[derive(Clone, Debug)]
+pub struct EpochReplay {
+    /// Completion time (ms) of the whole epoch.
+    pub epoch_ms: f64,
+    /// Single-batch realized makespan (ms), for reference.
+    pub batch_ms: f64,
+    /// Steady-state per-batch period (ms): (epoch - first batch) / (B-1).
+    pub period_ms: f64,
+}
+
+/// Replay `batches` consecutive batch updates: each helper repeats its
+/// segment stream; client j's batch b tasks release only after its batch
+/// b-1 completed (weight dependency) plus its client-side phases.
+pub fn replay_epoch(inst: &InstanceMs, schedule: &Schedule, batches: usize) -> EpochReplay {
+    assert!(batches >= 1);
+    let jn = inst.n_clients;
+    // Per-helper ordered segment streams (client, is_bwd, frac) like the
+    // single-batch engine.
+    #[derive(Clone, Copy)]
+    struct Seg {
+        client: usize,
+        is_bwd: bool,
+        first_slot: u32,
+        frac: f64,
+    }
+    let mut streams: Vec<Vec<Seg>> = vec![Vec::new(); inst.n_helpers];
+    for j in 0..jn {
+        let i = schedule.assignment.helper_of[j];
+        for (slots, is_bwd) in [(&schedule.fwd_slots[j], false), (&schedule.bwd_slots[j], true)] {
+            if slots.is_empty() {
+                continue;
+            }
+            let n = slots.len() as f64;
+            let mut run = 0usize;
+            for k in 1..=slots.len() {
+                if k == slots.len() || slots[k] != slots[k - 1] + 1 {
+                    streams[i].push(Seg { client: j, is_bwd, first_slot: slots[run], frac: (k - run) as f64 / n });
+                    run = k;
+                }
+            }
+        }
+    }
+    for s in streams.iter_mut() {
+        s.sort_by_key(|seg| (seg.first_slot, seg.client, seg.is_bwd));
+    }
+
+    // State carried across batches.
+    let mut batch_done = vec![0.0f64; jn]; // completion of client j's last batch
+    let mut first_batch_ms = 0.0;
+    let mut epoch_ms: f64 = 0.0;
+    let mut helper_clock = vec![0.0f64; inst.n_helpers];
+    for b in 0..batches {
+        let mut fwd_done = vec![0.0f64; jn];
+        let mut fwd_rem: Vec<f64> = (0..jn)
+            .map(|j| inst.p_ms[inst.edge(schedule.assignment.helper_of[j], j)])
+            .collect();
+        let mut bwd_rem: Vec<f64> = (0..jn)
+            .map(|j| inst.pp_ms[inst.edge(schedule.assignment.helper_of[j], j)])
+            .collect();
+        let mut batch_max = 0.0f64;
+        for i in 0..inst.n_helpers {
+            for seg in &streams[i] {
+                let j = seg.client;
+                let e = inst.edge(i, j);
+                // Release: client-side phases chained after its previous
+                // batch completion (weight dependency).
+                let ready = if seg.is_bwd {
+                    fwd_done[j] + inst.l_ms[e] + inst.lp_ms[e]
+                } else {
+                    batch_done[j] + inst.r_ms[e]
+                };
+                let start = helper_clock[i].max(ready);
+                let dur = if seg.is_bwd { bwd_rem[j].min(inst.pp_ms[e] * seg.frac) } else { fwd_rem[j].min(inst.p_ms[e] * seg.frac) };
+                helper_clock[i] = start + dur;
+                if seg.is_bwd {
+                    bwd_rem[j] -= dur;
+                    if bwd_rem[j] <= 1e-9 {
+                        let fin = helper_clock[i] + inst.rp_ms[e];
+                        batch_done[j] = fin;
+                        batch_max = batch_max.max(fin);
+                    }
+                } else {
+                    fwd_rem[j] -= dur;
+                    if fwd_rem[j] <= 1e-9 {
+                        fwd_done[j] = helper_clock[i];
+                    }
+                }
+            }
+        }
+        if b == 0 {
+            first_batch_ms = batch_max;
+        }
+        epoch_ms = epoch_ms.max(batch_max);
+    }
+    let period = if batches > 1 { (epoch_ms - first_batch_ms) / (batches - 1) as f64 } else { first_batch_ms };
+    EpochReplay { epoch_ms, batch_ms: first_batch_ms, period_ms: period }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::instance::profiles::Model;
+    use crate::instance::scenario::{Scenario, ScenarioCfg};
+    use crate::solver::{admm, greedy};
+
+    fn setup(seed: u64) -> (InstanceMs, crate::instance::Instance) {
+        let ms = ScenarioCfg::new(Scenario::S1, Model::ResNet101, 10, 2, seed).generate();
+        let inst = ms.quantize(180.0);
+        (ms, inst)
+    }
+
+    #[test]
+    fn single_batch_matches_engine() {
+        let (ms, inst) = setup(3);
+        let s = greedy::solve(&inst).unwrap();
+        let e = replay_epoch(&ms, &s, 1);
+        let single = crate::sim::replay(&ms, &s, None);
+        assert!((e.batch_ms - single.makespan_ms).abs() / single.makespan_ms < 0.05,
+            "epoch[1] {} vs single {}", e.batch_ms, single.makespan_ms);
+    }
+
+    #[test]
+    fn pipelining_period_not_longer_than_batch() {
+        for seed in 0..4 {
+            let (ms, inst) = setup(10 + seed);
+            let s = admm::solve(&inst, &admm::AdmmCfg::default()).unwrap().schedule;
+            let e = replay_epoch(&ms, &s, 8);
+            assert!(e.period_ms <= e.batch_ms * 1.35 + 1e-6, "period {} vs batch {}", e.period_ms, e.batch_ms);
+            assert!(e.epoch_ms >= e.batch_ms);
+        }
+    }
+
+    #[test]
+    fn epoch_grows_with_batches() {
+        let (ms, inst) = setup(8);
+        let s = greedy::solve(&inst).unwrap();
+        let e2 = replay_epoch(&ms, &s, 2);
+        let e6 = replay_epoch(&ms, &s, 6);
+        assert!(e6.epoch_ms > e2.epoch_ms);
+    }
+}

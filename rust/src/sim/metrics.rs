@@ -1,0 +1,126 @@
+//! Schedule/replay inspection: Gantt export (JSON) and summary metrics
+//! used by the CLI (`psl solve --gantt`) and the experiment reports.
+
+use crate::instance::Instance;
+use crate::solver::schedule::Schedule;
+use crate::util::json::Json;
+
+/// Summary of a slotted schedule.
+#[derive(Clone, Debug)]
+pub struct ScheduleMetrics {
+    pub makespan_slots: u32,
+    pub makespan_ms: f64,
+    pub fwd_makespan_slots: u32,
+    pub preemptions: u32,
+    pub mean_queuing_slots: f64,
+    pub max_queuing_slots: i64,
+    /// Per-helper busy-slot counts.
+    pub helper_load: Vec<u32>,
+    /// Per-helper utilization relative to the makespan.
+    pub helper_util: Vec<f64>,
+}
+
+pub fn summarize(inst: &Instance, s: &Schedule) -> ScheduleMetrics {
+    let makespan = s.makespan(inst);
+    let mut load = vec![0u32; inst.n_helpers];
+    for j in 0..inst.n_clients {
+        let i = s.assignment.helper_of[j];
+        load[i] += (s.fwd_slots[j].len() + s.bwd_slots[j].len()) as u32;
+    }
+    let queuing: Vec<i64> = (0..inst.n_clients).map(|j| s.queuing_delay(inst, j)).collect();
+    ScheduleMetrics {
+        makespan_slots: makespan,
+        makespan_ms: makespan as f64 * inst.slot_ms,
+        fwd_makespan_slots: s.fwd_makespan(inst),
+        preemptions: s.preemptions(),
+        mean_queuing_slots: queuing.iter().map(|&q| q.max(0) as f64).sum::<f64>() / inst.n_clients.max(1) as f64,
+        max_queuing_slots: queuing.iter().copied().max().unwrap_or(0),
+        helper_load: load.clone(),
+        helper_util: load
+            .iter()
+            .map(|&b| if makespan > 0 { b as f64 / makespan as f64 } else { 0.0 })
+            .collect(),
+    }
+}
+
+/// Export a schedule as a Gantt JSON document: one entry per contiguous
+/// segment, grouped by helper — renderable by any plotting tool.
+pub fn gantt_json(inst: &Instance, s: &Schedule) -> Json {
+    let mut rows = Vec::new();
+    for j in 0..inst.n_clients {
+        let i = s.assignment.helper_of[j];
+        for (slots, phase) in [(&s.fwd_slots[j], "fwd"), (&s.bwd_slots[j], "bwd")] {
+            if slots.is_empty() {
+                continue;
+            }
+            let mut run_start = 0usize;
+            for k in 1..=slots.len() {
+                if k == slots.len() || slots[k] != slots[k - 1] + 1 {
+                    rows.push(Json::obj(vec![
+                        ("helper", Json::Num(i as f64)),
+                        ("client", Json::Num(j as f64)),
+                        ("phase", Json::Str(phase.to_string())),
+                        ("start_slot", Json::Num(slots[run_start] as f64)),
+                        ("end_slot", Json::Num((slots[k - 1] + 1) as f64)),
+                        ("start_ms", Json::Num(slots[run_start] as f64 * inst.slot_ms)),
+                        ("end_ms", Json::Num((slots[k - 1] + 1) as f64 * inst.slot_ms)),
+                    ]));
+                    run_start = k;
+                }
+            }
+        }
+    }
+    Json::obj(vec![
+        ("slot_ms", Json::Num(inst.slot_ms)),
+        ("makespan_slots", Json::Num(s.makespan(inst) as f64)),
+        ("segments", Json::Arr(rows)),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::instance::profiles::Model;
+    use crate::instance::scenario::{Scenario, ScenarioCfg};
+    use crate::solver::greedy;
+
+    #[test]
+    fn metrics_consistent() {
+        let inst = ScenarioCfg::new(Scenario::S1, Model::ResNet101, 10, 2, 77).generate().quantize(180.0);
+        let s = greedy::solve(&inst).unwrap();
+        let m = summarize(&inst, &s);
+        assert_eq!(m.makespan_slots, s.makespan(&inst));
+        assert!((m.makespan_ms - m.makespan_slots as f64 * 180.0).abs() < 1e-9);
+        assert_eq!(m.preemptions, 0, "FCFS never preempts");
+        let total_load: u32 = m.helper_load.iter().sum();
+        let expected: u32 = (0..10)
+            .map(|j| {
+                let e = inst.edge(s.assignment.helper_of[j], j);
+                inst.p[e] + inst.pp[e]
+            })
+            .sum();
+        assert_eq!(total_load, expected);
+    }
+
+    #[test]
+    fn gantt_covers_all_work() {
+        let inst = ScenarioCfg::new(Scenario::S2, Model::Vgg19, 6, 2, 3).generate().quantize(550.0);
+        let s = greedy::solve(&inst).unwrap();
+        let g = gantt_json(&inst, &s);
+        let segs = g.get("segments").as_arr().unwrap();
+        let covered: f64 = segs
+            .iter()
+            .map(|seg| seg.get("end_slot").as_f64().unwrap() - seg.get("start_slot").as_f64().unwrap())
+            .sum();
+        let expected: u32 = (0..6)
+            .map(|j| {
+                let e = inst.edge(s.assignment.helper_of[j], j);
+                inst.p[e] + inst.pp[e]
+            })
+            .sum();
+        assert_eq!(covered as u32, expected);
+        // JSON parses back.
+        let txt = g.pretty();
+        assert!(crate::util::json::Json::parse(&txt).is_ok());
+    }
+}

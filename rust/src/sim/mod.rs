@@ -1,0 +1,12 @@
+//! Discrete-event simulation of the parallel-SL batch workflow:
+//! continuous-time replay of slotted schedules ([`engine`]), slot-length
+//! sweeps for the Fig-6 experiment ([`quantize`]) and schedule metrics /
+//! Gantt export ([`metrics`]).
+
+pub mod engine;
+pub mod epoch;
+pub mod metrics;
+pub mod quantize;
+
+pub use engine::{replay, Replay};
+pub use metrics::{gantt_json, summarize, ScheduleMetrics};

@@ -1,0 +1,72 @@
+//! The Fig-6 experiment machinery: the same continuous system quantized at
+//! different slot lengths |S_t|, solved, and replayed.
+//!
+//! Observation 2 of the paper: longer slots → coarser preemption and
+//! ceil-inflated processing times → larger (nominal) makespan, but a
+//! smaller time horizon T → faster solve. This module produces those rows.
+
+use super::engine;
+use crate::instance::InstanceMs;
+use crate::solver::admm::{self, AdmmCfg};
+use std::time::Instant;
+
+/// One row of the slot-length sweep.
+#[derive(Clone, Debug)]
+pub struct SlotRow {
+    pub slot_ms: f64,
+    /// Horizon T (number of slots) at this quantization.
+    pub horizon: u32,
+    /// Nominal makespan: slots × slot_ms.
+    pub nominal_ms: f64,
+    /// Realized makespan from the continuous replay.
+    pub realized_ms: f64,
+    /// Solver wall time (seconds).
+    pub solve_s: f64,
+    /// Preemption count in the solution.
+    pub preemptions: u32,
+}
+
+/// Solve the instance with the ADMM-based method at each slot length.
+pub fn sweep_slot_lengths(ms: &InstanceMs, slot_lengths: &[f64], cfg: &AdmmCfg) -> Vec<SlotRow> {
+    slot_lengths
+        .iter()
+        .map(|&slot_ms| {
+            let inst = ms.quantize(slot_ms);
+            let start = Instant::now();
+            let res = admm::solve(&inst, cfg).expect("feasible instance");
+            let solve_s = start.elapsed().as_secs_f64();
+            let rep = engine::replay(ms, &res.schedule, None);
+            SlotRow {
+                slot_ms,
+                horizon: inst.horizon(),
+                nominal_ms: res.schedule.makespan(&inst) as f64 * slot_ms,
+                realized_ms: rep.makespan_ms,
+                solve_s,
+                preemptions: res.schedule.preemptions(),
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::instance::profiles::Model;
+    use crate::instance::scenario::{Scenario, ScenarioCfg};
+
+    #[test]
+    fn horizon_shrinks_with_slot_length() {
+        let ms = ScenarioCfg::new(Scenario::S1, Model::ResNet101, 8, 2, 33).generate();
+        let rows = sweep_slot_lengths(&ms, &[50.0, 150.0, 200.0], &AdmmCfg::default());
+        assert!(rows[0].horizon > rows[1].horizon);
+        assert!(rows[1].horizon >= rows[2].horizon);
+    }
+
+    #[test]
+    fn nominal_dominates_realized() {
+        let ms = ScenarioCfg::new(Scenario::S1, Model::Vgg19, 8, 2, 21).generate();
+        for row in sweep_slot_lengths(&ms, &[550.0, 150.0], &AdmmCfg::default()) {
+            assert!(row.realized_ms <= row.nominal_ms + 1e-6, "{row:?}");
+        }
+    }
+}

@@ -1,0 +1,54 @@
+//! FedAvg aggregation (§III "Epochs & Aggregation"): at the end of each
+//! training round the model parts from every entity are averaged at the
+//! aggregator (node 0) and broadcast back — part-1/part-3 across clients,
+//! part-2 across the helpers' per-client copies.
+
+use crate::runtime::Tensor;
+use anyhow::Result;
+
+/// Average a set of equally-shaped parameter lists; panics on empty input.
+pub fn fedavg(copies: &[&[Tensor]]) -> Result<Vec<Tensor>> {
+    anyhow::ensure!(!copies.is_empty(), "fedavg of nothing");
+    let n = copies.len() as f32;
+    let mut acc: Vec<Tensor> = copies[0].iter().map(|t| {
+        let mut z = Tensor::zeros(&t.shape);
+        z.axpy(1.0 / n, t).unwrap();
+        z
+    }).collect();
+    for copy in &copies[1..] {
+        anyhow::ensure!(copy.len() == acc.len(), "leaf count mismatch in fedavg");
+        for (a, t) in acc.iter_mut().zip(copy.iter()) {
+            a.axpy(1.0 / n, t)?;
+        }
+    }
+    Ok(acc)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn averages_correctly() {
+        let a = vec![Tensor::from_f32(&[2], vec![1.0, 3.0]).unwrap()];
+        let b = vec![Tensor::from_f32(&[2], vec![3.0, 5.0]).unwrap()];
+        let avg = fedavg(&[&a, &b]).unwrap();
+        assert_eq!(avg[0].as_f32().unwrap(), &[2.0, 4.0]);
+    }
+
+    #[test]
+    fn single_copy_identity() {
+        let a = vec![Tensor::from_f32(&[3], vec![1.0, 2.0, 3.0]).unwrap()];
+        let avg = fedavg(&[&a]).unwrap();
+        for (x, y) in avg[0].as_f32().unwrap().iter().zip(a[0].as_f32().unwrap()) {
+            assert!((x - y).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        let a = vec![Tensor::zeros(&[2]), Tensor::zeros(&[2])];
+        let b = vec![Tensor::zeros(&[2])];
+        assert!(fedavg(&[&a, &b]).is_err());
+    }
+}

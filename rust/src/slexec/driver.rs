@@ -1,0 +1,210 @@
+//! The end-to-end split-learning driver: executes *real* batch updates
+//! (PJRT part functions) in the order dictated by an optimized schedule,
+//! with FedAvg aggregation between rounds.
+//!
+//! Execution model: one process emulates the whole fleet. Helper tasks run
+//! at their *completion* slot (an HLO call is atomic — preemption segments
+//! affect ordering, which is preserved); client-side steps run inline at
+//! their dependency points. Wall-clock per helper task is measured and
+//! recorded, giving profiled (p, p') values that can be fed back into the
+//! optimizer — closing the paper's profiling loop (§III: delays are
+//! "available through profiling").
+
+use super::aggregator::fedavg;
+use super::model::SplitModel;
+use super::state::{ClientState, HelperState};
+use crate::instance::Instance;
+use crate::runtime::Tensor;
+use crate::solver::schedule::Schedule;
+use anyhow::{Context, Result};
+use std::time::Instant;
+
+#[derive(Clone, Debug)]
+pub struct TrainCfg {
+    /// Batch updates per local epoch (per round).
+    pub batches_per_round: usize,
+    /// Training rounds (FedAvg at each round boundary).
+    pub rounds: usize,
+    pub lr: f32,
+    pub seed: u64,
+}
+
+impl Default for TrainCfg {
+    fn default() -> Self {
+        TrainCfg { batches_per_round: 4, rounds: 4, lr: 0.05, seed: 7 }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct TrainReport {
+    /// Mean client loss per batch step (the headline loss curve).
+    pub loss_curve: Vec<f64>,
+    /// Wall time of the whole run (seconds).
+    pub wall_s: f64,
+    /// Mean measured helper fwd/bwd task times (ms) per (helper, client).
+    pub measured_ms: Vec<(usize, usize, f64, f64)>,
+    /// Batch updates executed.
+    pub steps: usize,
+}
+
+/// One complete training run driven by `schedule`.
+pub struct Driver {
+    pub model: SplitModel,
+    pub clients: Vec<ClientState>,
+    pub helpers: Vec<HelperState>,
+    pub schedule: Schedule,
+}
+
+impl Driver {
+    /// Build the fleet: every client starts from the artifact's initial
+    /// parameters (identical across clients, as in FL round 0), every
+    /// helper admits its assigned clients' part-2 copies.
+    pub fn new(model: SplitModel, inst: &Instance, schedule: Schedule, seed: u64) -> Result<Driver> {
+        let p1 = model.manifest.load_init_params("p1")?;
+        let p2 = model.manifest.load_init_params("p2")?;
+        let p3 = model.manifest.load_init_params("p3")?;
+        let clients: Vec<ClientState> = (0..inst.n_clients)
+            .map(|j| ClientState::new(j, p1.clone(), p3.clone(), seed ^ (j as u64) << 16))
+            .collect();
+        let mut helpers: Vec<HelperState> = (0..inst.n_helpers).map(HelperState::new).collect();
+        for j in 0..inst.n_clients {
+            helpers[schedule.assignment.helper_of[j]].admit(j, p2.clone());
+        }
+        Ok(Driver { model, clients, helpers, schedule })
+    }
+
+    /// Execute one batch update for every client, respecting the
+    /// schedule's per-helper task order. Returns the mean loss.
+    pub fn batch_update(&mut self, lr: f32) -> Result<f64> {
+        let batch = self.model.manifest.batch;
+        // Client-side fwd of part-1 (the r_ij phase).
+        let mut a1_of: Vec<Option<Tensor>> = vec![None; self.clients.len()];
+        for c in self.clients.iter_mut() {
+            let (x, y) = c.dataset.batch(batch);
+            let a1 = self.model.part1_fwd(&c.p1, &x)?;
+            c.inflight = Some((x, y, a1.clone()));
+            a1_of[c.id] = Some(a1);
+        }
+
+        // Helper tasks in global slot order (cross-helper order is
+        // irrelevant — helpers are independent — but this mirrors the
+        // timeline and keeps the run deterministic).
+        #[derive(Clone, Copy)]
+        struct Task {
+            helper: usize,
+            client: usize,
+            is_bwd: bool,
+            completion_slot: u32,
+        }
+        let mut tasks: Vec<Task> = Vec::new();
+        for j in 0..self.clients.len() {
+            let i = self.schedule.assignment.helper_of[j];
+            if let Some(&last) = self.schedule.fwd_slots[j].last() {
+                tasks.push(Task { helper: i, client: j, is_bwd: false, completion_slot: last });
+            }
+            if let Some(&last) = self.schedule.bwd_slots[j].last() {
+                tasks.push(Task { helper: i, client: j, is_bwd: true, completion_slot: last });
+            }
+        }
+        tasks.sort_by_key(|t| (t.completion_slot, t.is_bwd, t.client));
+
+        let mut a2_of: Vec<Option<Tensor>> = vec![None; self.clients.len()];
+        let mut g_a2_of: Vec<Option<Tensor>> = vec![None; self.clients.len()];
+        let mut losses = vec![0.0f64; self.clients.len()];
+        for t in tasks {
+            let h = &mut self.helpers[t.helper];
+            let p2 = h.p2_of.get(&t.client).context("client admitted")?.clone();
+            if !t.is_bwd {
+                let a1 = a1_of[t.client].as_ref().context("a1 ready")?;
+                let start = Instant::now();
+                let a2 = self.model.part2_fwd(&p2, a1)?;
+                h.record(t.client, false, start.elapsed().as_secs_f64() * 1e3);
+                // Client-side part-3 turnaround (the l + l' phases).
+                let c = &mut self.clients[t.client];
+                let (_, y, _) = c.inflight.as_ref().context("inflight")?;
+                let (loss, g3, g_a2) = self.model.part3_bwd(&c.p3, &a2, y)?;
+                losses[t.client] = loss as f64;
+                let g3_refs = g3;
+                c.p3
+                    .iter_mut()
+                    .zip(&g3_refs)
+                    .try_for_each(|(p, g)| p.sgd_step(g, lr))?;
+                g_a2_of[t.client] = Some(g_a2);
+                a2_of[t.client] = Some(a2);
+            } else {
+                let a1 = a1_of[t.client].as_ref().context("a1 ready")?;
+                let g_a2 = g_a2_of[t.client].as_ref().context("g_a2 ready (precedence)")?;
+                let start = Instant::now();
+                let (g2, g_a1) = self.model.part2_bwd(&p2, a1, g_a2)?;
+                h.record(t.client, true, start.elapsed().as_secs_f64() * 1e3);
+                h.sgd(t.client, &g2, lr)?;
+                // Client finishes: part-1 bwd + SGD (the r'_ij phase).
+                let c = &mut self.clients[t.client];
+                let (x, _, _) = c.inflight.as_ref().context("inflight")?;
+                let g1 = self.model.part1_bwd(&c.p1, x, &g_a1)?;
+                c.p1.iter_mut().zip(&g1).try_for_each(|(p, g)| p.sgd_step(g, lr))?;
+                c.inflight = None;
+            }
+        }
+        Ok(losses.iter().sum::<f64>() / losses.len().max(1) as f64)
+    }
+
+    /// FedAvg round boundary: average p1/p3 across clients and p2 across
+    /// all per-client helper copies; broadcast back to everyone.
+    pub fn aggregate(&mut self) -> Result<()> {
+        let p1_copies: Vec<&[Tensor]> = self.clients.iter().map(|c| c.p1.as_slice()).collect();
+        let p3_copies: Vec<&[Tensor]> = self.clients.iter().map(|c| c.p3.as_slice()).collect();
+        let p1_avg = fedavg(&p1_copies)?;
+        let p3_avg = fedavg(&p3_copies)?;
+        let p2_copies: Vec<&[Tensor]> = self
+            .helpers
+            .iter()
+            .flat_map(|h| h.p2_of.values().map(|v| v.as_slice()))
+            .collect();
+        let p2_avg = fedavg(&p2_copies)?;
+        for c in self.clients.iter_mut() {
+            c.p1 = p1_avg.clone();
+            c.p3 = p3_avg.clone();
+        }
+        for h in self.helpers.iter_mut() {
+            for p2 in h.p2_of.values_mut() {
+                *p2 = p2_avg.clone();
+            }
+        }
+        Ok(())
+    }
+
+    /// Full training run.
+    pub fn train(&mut self, cfg: &TrainCfg) -> Result<TrainReport> {
+        let start = Instant::now();
+        self.model.warmup()?;
+        let mut loss_curve = Vec::new();
+        for round in 0..cfg.rounds {
+            for _ in 0..cfg.batches_per_round {
+                loss_curve.push(self.batch_update(cfg.lr)?);
+            }
+            self.aggregate()?;
+            crate::log_info!(
+                "round {}/{}: loss {:.4}",
+                round + 1,
+                cfg.rounds,
+                loss_curve.last().copied().unwrap_or(f64::NAN)
+            );
+        }
+        let mut measured = Vec::new();
+        for h in &self.helpers {
+            for &j in h.p2_of.keys() {
+                let (f, b) = h.measured_ms(j);
+                if let (Some(f), Some(b)) = (f, b) {
+                    measured.push((h.id, j, f, b));
+                }
+            }
+        }
+        Ok(TrainReport {
+            steps: loss_curve.len(),
+            loss_curve,
+            wall_s: start.elapsed().as_secs_f64(),
+            measured_ms: measured,
+        })
+    }
+}

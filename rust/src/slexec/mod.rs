@@ -1,0 +1,15 @@
+//! The executable parallel-SL runtime: real split training driven by the
+//! optimized schedules, entirely from rust (PJRT artifacts, no python).
+//!
+//! * [`model`] — typed wrappers over the six exported part functions.
+//! * [`state`] — client/helper training state (per-client part-2 copies).
+//! * [`aggregator`] — FedAvg round aggregation.
+//! * [`driver`] — schedule-ordered batch updates + rounds + measurements.
+
+pub mod aggregator;
+pub mod driver;
+pub mod model;
+pub mod state;
+
+pub use driver::{Driver, TrainCfg, TrainReport};
+pub use model::SplitModel;

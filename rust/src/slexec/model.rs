@@ -1,0 +1,126 @@
+//! Typed wrappers around the six exported part functions: the rust-side
+//! embodiment of the SL batch-update contract (see python/compile/model.py).
+//!
+//! Flattening convention: the HLO signature is the jax pytree flatten
+//! order — parameter leaves first (layer order, dict keys sorted), then
+//! activations/labels. The manifest records every input/output shape; we
+//! slice outputs by the part's leaf count.
+
+use crate::runtime::{Engine, Manifest, Tensor};
+use anyhow::{Context, Result};
+use std::sync::Arc;
+
+/// A split model bound to its artifacts.
+pub struct SplitModel {
+    pub manifest: Manifest,
+    pub engine: Arc<Engine>,
+}
+
+impl SplitModel {
+    pub fn load(engine: Arc<Engine>, artifacts_dir: &std::path::Path, arch: &str) -> Result<SplitModel> {
+        let manifest = Manifest::load(artifacts_dir, arch)?;
+        Ok(SplitModel { manifest, engine })
+    }
+
+    /// Eagerly compile all six functions (done once at startup so the
+    /// training hot path never compiles).
+    pub fn warmup(&self) -> Result<()> {
+        for f in self.manifest.functions.values() {
+            self.engine.load(&f.hlo_path)?;
+        }
+        Ok(())
+    }
+
+    fn call(&self, name: &str, inputs: Vec<Tensor>) -> Result<Vec<Tensor>> {
+        let f = self.manifest.function(name)?;
+        anyhow::ensure!(
+            inputs.len() == f.inputs.len(),
+            "{name}: {} inputs given, manifest wants {}",
+            inputs.len(),
+            f.inputs.len()
+        );
+        for (k, (t, spec)) in inputs.iter().zip(&f.inputs).enumerate() {
+            anyhow::ensure!(
+                t.shape == spec.shape,
+                "{name}: input {k} shape {:?} != manifest {:?}",
+                t.shape,
+                spec.shape
+            );
+        }
+        let out = self.engine.execute(&f.hlo_path, &inputs)?;
+        anyhow::ensure!(
+            out.len() == f.outputs.len(),
+            "{name}: {} outputs returned, manifest wants {}",
+            out.len(),
+            f.outputs.len()
+        );
+        Ok(out)
+    }
+
+    fn leaf_count(&self, part: &str) -> usize {
+        self.manifest.params.get(part).map(|p| p.leaves.len()).unwrap_or(0)
+    }
+
+    /// a1 = part1_fwd(p1, x)
+    pub fn part1_fwd(&self, p1: &[Tensor], x: &Tensor) -> Result<Tensor> {
+        let mut inputs: Vec<Tensor> = p1.to_vec();
+        inputs.push(x.clone());
+        let mut out = self.call("part1_fwd", inputs)?;
+        Ok(out.remove(0))
+    }
+
+    /// a2 = part2_fwd(p2, a1) — the helper's fwd-prop task (time p_ij).
+    pub fn part2_fwd(&self, p2: &[Tensor], a1: &Tensor) -> Result<Tensor> {
+        let mut inputs: Vec<Tensor> = p2.to_vec();
+        inputs.push(a1.clone());
+        let mut out = self.call("part2_fwd", inputs)?;
+        Ok(out.remove(0))
+    }
+
+    /// loss = part3_loss(p3, a2, y)
+    pub fn part3_loss(&self, p3: &[Tensor], a2: &Tensor, y: &Tensor) -> Result<f32> {
+        let mut inputs: Vec<Tensor> = p3.to_vec();
+        inputs.push(a2.clone());
+        inputs.push(y.clone());
+        let out = self.call("part3_loss", inputs)?;
+        out[0].mean().context("loss scalar")
+    }
+
+    /// (loss, g3, g_a2) = part3_bwd(p3, a2, y)
+    pub fn part3_bwd(&self, p3: &[Tensor], a2: &Tensor, y: &Tensor) -> Result<(f32, Vec<Tensor>, Tensor)> {
+        let mut inputs: Vec<Tensor> = p3.to_vec();
+        inputs.push(a2.clone());
+        inputs.push(y.clone());
+        let mut out = self.call("part3_bwd", inputs)?;
+        let n3 = self.leaf_count("p3");
+        anyhow::ensure!(out.len() == 1 + n3 + 1, "part3_bwd output arity");
+        let loss = out[0].mean()?;
+        let g_a2 = out.remove(out.len() - 1);
+        let g3 = out.split_off(1);
+        Ok((loss, g3, g_a2))
+    }
+
+    /// (g2, g_a1) = part2_bwd(p2, a1, g_a2) — the helper's bwd-prop task
+    /// (time p'_ij).
+    pub fn part2_bwd(&self, p2: &[Tensor], a1: &Tensor, g_a2: &Tensor) -> Result<(Vec<Tensor>, Tensor)> {
+        let mut inputs: Vec<Tensor> = p2.to_vec();
+        inputs.push(a1.clone());
+        inputs.push(g_a2.clone());
+        let mut out = self.call("part2_bwd", inputs)?;
+        let n2 = self.leaf_count("p2");
+        anyhow::ensure!(out.len() == n2 + 1, "part2_bwd output arity");
+        let g_a1 = out.remove(out.len() - 1);
+        Ok((out, g_a1))
+    }
+
+    /// g1 = part1_bwd(p1, x, g_a1)
+    pub fn part1_bwd(&self, p1: &[Tensor], x: &Tensor, g_a1: &Tensor) -> Result<Vec<Tensor>> {
+        let mut inputs: Vec<Tensor> = p1.to_vec();
+        inputs.push(x.clone());
+        inputs.push(g_a1.clone());
+        self.call("part1_bwd", inputs)
+    }
+}
+
+// Integration tests that exercise these against real artifacts live in
+// rust/tests/runtime_artifacts.rs (gated on `make artifacts` having run).

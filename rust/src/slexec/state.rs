@@ -1,0 +1,104 @@
+//! Training state of the parallel-SL entities.
+//!
+//! * [`ClientState`] — one client: part-1 and part-3 parameters plus its
+//!   local dataset shard (the paper: samples and labels never leave the
+//!   client).
+//! * [`HelperState`] — one helper: a *separate copy* of part-2 per
+//!   assigned client (parallel SL allocates d_j memory per client and
+//!   reuses it across fwd/bwd — the coupling that forces one helper per
+//!   client, §III).
+
+use crate::data::SynthDataset;
+use crate::runtime::Tensor;
+use anyhow::Result;
+use std::collections::BTreeMap;
+
+pub struct ClientState {
+    pub id: usize,
+    pub p1: Vec<Tensor>,
+    pub p3: Vec<Tensor>,
+    pub dataset: SynthDataset,
+    /// In-flight batch (x, y, a1) between fwd and bwd phases.
+    pub inflight: Option<(Tensor, Tensor, Tensor)>,
+}
+
+impl ClientState {
+    pub fn new(id: usize, p1: Vec<Tensor>, p3: Vec<Tensor>, seed: u64) -> ClientState {
+        ClientState { id, p1, p3, dataset: SynthDataset::new(seed, 0.35), inflight: None }
+    }
+
+    pub fn sgd(&mut self, g1: &[Tensor], g3: &[Tensor], lr: f32) -> Result<()> {
+        for (p, g) in self.p1.iter_mut().zip(g1) {
+            p.sgd_step(g, lr)?;
+        }
+        for (p, g) in self.p3.iter_mut().zip(g3) {
+            p.sgd_step(g, lr)?;
+        }
+        Ok(())
+    }
+}
+
+pub struct HelperState {
+    pub id: usize,
+    /// Per-client part-2 model copies (parallel SL).
+    pub p2_of: BTreeMap<usize, Vec<Tensor>>,
+    /// Measured task wall-times (ms): (client, is_bwd) → samples.
+    pub task_ms: BTreeMap<(usize, bool), Vec<f64>>,
+}
+
+impl HelperState {
+    pub fn new(id: usize) -> HelperState {
+        HelperState { id, p2_of: BTreeMap::new(), task_ms: BTreeMap::new() }
+    }
+
+    /// Allocate the client's part-2 copy (the d_j GB in the model).
+    pub fn admit(&mut self, client: usize, p2: Vec<Tensor>) {
+        self.p2_of.insert(client, p2);
+    }
+
+    pub fn sgd(&mut self, client: usize, g2: &[Tensor], lr: f32) -> Result<()> {
+        let p2 = self.p2_of.get_mut(&client).expect("client admitted");
+        for (p, g) in p2.iter_mut().zip(g2) {
+            p.sgd_step(g, lr)?;
+        }
+        Ok(())
+    }
+
+    pub fn record(&mut self, client: usize, is_bwd: bool, ms: f64) {
+        self.task_ms.entry((client, is_bwd)).or_default().push(ms);
+    }
+
+    /// Mean measured (fwd, bwd) ms for a client, if observed.
+    pub fn measured_ms(&self, client: usize) -> (Option<f64>, Option<f64>) {
+        let mean = |v: Option<&Vec<f64>>| v.filter(|v| !v.is_empty()).map(|v| v.iter().sum::<f64>() / v.len() as f64);
+        (mean(self.task_ms.get(&(client, false))), mean(self.task_ms.get(&(client, true))))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sgd_updates_all_leaves() {
+        let p = vec![Tensor::from_f32(&[2], vec![1.0, 1.0]).unwrap()];
+        let mut c = ClientState::new(0, p.clone(), p, 1);
+        let g = vec![Tensor::from_f32(&[2], vec![1.0, 2.0]).unwrap()];
+        c.sgd(&g, &g, 0.1).unwrap();
+        assert_eq!(c.p1[0].as_f32().unwrap(), &[0.9, 0.8]);
+        assert_eq!(c.p3[0].as_f32().unwrap(), &[0.9, 0.8]);
+    }
+
+    #[test]
+    fn helper_tracks_measurements() {
+        let mut h = HelperState::new(0);
+        h.admit(3, vec![Tensor::zeros(&[2])]);
+        h.record(3, false, 10.0);
+        h.record(3, false, 20.0);
+        h.record(3, true, 30.0);
+        let (f, b) = h.measured_ms(3);
+        assert_eq!(f, Some(15.0));
+        assert_eq!(b, Some(30.0));
+        assert_eq!(h.measured_ms(9), (None, None));
+    }
+}

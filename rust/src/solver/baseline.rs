@@ -1,0 +1,81 @@
+//! The paper's baseline scheme (§VII): client-helper assignments chosen
+//! uniformly at random (subject to memory feasibility), then FCFS
+//! scheduling — "a naive real-time implementation of parallel SL without
+//! proactive decisions on assignments or scheduling".
+
+use super::schedule::{fcfs_schedule, Assignment, Schedule};
+use crate::instance::Instance;
+use crate::util::rng::Rng;
+
+/// Random memory-feasible assignment. Clients are visited in random order
+/// and pick a uniformly random helper among those with enough remaining
+/// memory; a handful of restarts deals with unlucky packing orders.
+pub fn random_assignment(inst: &Instance, rng: &mut Rng) -> Option<Assignment> {
+    'restart: for _ in 0..64 {
+        let mut free = inst.mem.clone();
+        let mut helper_of = vec![usize::MAX; inst.n_clients];
+        let order = rng.permutation(inst.n_clients);
+        for j in order {
+            let feas: Vec<usize> = (0..inst.n_helpers).filter(|&i| free[i] >= inst.d[j]).collect();
+            if feas.is_empty() {
+                continue 'restart;
+            }
+            let i = *rng.choice(&feas);
+            free[i] -= inst.d[j];
+            helper_of[j] = i;
+        }
+        return Some(Assignment::new(helper_of));
+    }
+    None
+}
+
+/// Full baseline solve: random assignment + FCFS schedule.
+pub fn solve(inst: &Instance, rng: &mut Rng) -> Option<Schedule> {
+    Some(fcfs_schedule(inst, random_assignment(inst, rng)?))
+}
+
+/// The baseline averaged over `reps` random draws (the paper reports its
+/// expected behaviour; a single draw is noisy).
+pub fn solve_mean_makespan(inst: &Instance, rng: &mut Rng, reps: usize) -> f64 {
+    let mut acc = 0.0;
+    for _ in 0..reps {
+        let s = solve(inst, rng).expect("feasible instance");
+        acc += s.makespan(inst) as f64;
+    }
+    acc / reps as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::instance::profiles::Model;
+    use crate::instance::scenario::{Scenario, ScenarioCfg};
+    use crate::util::prop;
+
+    #[test]
+    fn feasible_and_memory_ok() {
+        prop::check(40, |rng| {
+            let inst = ScenarioCfg::new(Scenario::S2, Model::ResNet101, rng.range_usize(2, 25), rng.range_usize(1, 5), rng.next_u64())
+                .generate()
+                .quantize(180.0);
+            let s = solve(&inst, rng).expect("feasible");
+            prop::assert_prop(s.is_feasible(&inst), &format!("{:?}", s.violations(&inst)));
+        });
+    }
+
+    #[test]
+    fn randomness_spreads_assignments() {
+        let inst = ScenarioCfg::new(Scenario::S1, Model::Vgg19, 12, 4, 3).generate().quantize(550.0);
+        let mut rng = crate::util::rng::Rng::seeded(1);
+        let a = random_assignment(&inst, &mut rng).unwrap();
+        let b = random_assignment(&inst, &mut rng).unwrap();
+        assert_ne!(a.helper_of, b.helper_of, "two draws should differ (overwhelmingly)");
+    }
+
+    #[test]
+    fn mean_makespan_is_positive() {
+        let inst = ScenarioCfg::new(Scenario::S1, Model::ResNet101, 8, 2, 5).generate().quantize(180.0);
+        let mut rng = crate::util::rng::Rng::seeded(2);
+        assert!(solve_mean_makespan(&inst, &mut rng, 5) > 0.0);
+    }
+}

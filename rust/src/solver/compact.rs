@@ -1,0 +1,223 @@
+//! Schedule compaction for uneven datasets (§V-B, last paragraph):
+//!
+//! > "we can simply remove from the obtained schedules x* and z* the
+//! > clients whose samples are completely processed (after a number of
+//! > batch updates) and 'move' the remaining clients earlier in the
+//! > schedules (subject to availability of their tasks at the helpers).
+//! > Moreover, the assignments y* do not need to change since helpers
+//! > have already allocated memory for the model copies."
+//!
+//! We drop the inactive clients' slots and re-pack the survivors,
+//! preserving each helper's processing order (segment by segment) while
+//! respecting release times (1) and fwd→bwd precedence (2). Order
+//! preservation keeps the compaction O(work) and never reorders
+//! priorities decided by the solver.
+
+use super::schedule::Schedule;
+use crate::instance::Instance;
+
+/// Compact `schedule` to the subset of clients with `active[j] == true`.
+/// Inactive clients end up with empty slot lists; assignments (and thus
+/// helper memory reservations) are preserved verbatim.
+pub fn compact(inst: &Instance, schedule: &Schedule, active: &[bool]) -> Schedule {
+    assert_eq!(active.len(), inst.n_clients);
+    let mut fwd = vec![Vec::new(); inst.n_clients];
+    let mut bwd = vec![Vec::new(); inst.n_clients];
+
+    for i in 0..inst.n_helpers {
+        // Original segment stream of this helper, in slot order.
+        #[derive(Clone, Copy)]
+        struct Seg {
+            client: usize,
+            is_bwd: bool,
+            start: u32,
+            len: u32,
+        }
+        let mut segs: Vec<Seg> = Vec::new();
+        for j in 0..inst.n_clients {
+            if schedule.assignment.helper_of[j] != i || !active[j] {
+                continue;
+            }
+            for (slots, is_bwd) in [(&schedule.fwd_slots[j], false), (&schedule.bwd_slots[j], true)] {
+                let mut run = 0usize;
+                for k in 1..=slots.len() {
+                    if k == slots.len() || slots[k] != slots[k - 1] + 1 {
+                        segs.push(Seg { client: j, is_bwd, start: slots[run], len: (k - run) as u32 });
+                        run = k;
+                    }
+                }
+            }
+        }
+        segs.sort_by_key(|s| s.start);
+
+        // Re-pack: each segment starts at max(helper clock, its task's
+        // earliest legal slot). fwd ready at r_ij; bwd ready at
+        // (new) fwd finish + l + l'. Within a task, later segments are
+        // additionally constrained by the helper clock only (they already
+        // follow their predecessors in stream order).
+        let mut clock: u32 = 0;
+        for seg in &segs {
+            let e = inst.edge(i, seg.client);
+            let ready = if seg.is_bwd {
+                let fwd_fin = fwd[seg.client].last().map(|&t| t + 1).unwrap_or(0);
+                fwd_fin + inst.l[e] + inst.lp[e]
+            } else {
+                inst.r[e]
+            };
+            let start = clock.max(ready);
+            let out = if seg.is_bwd { &mut bwd[seg.client] } else { &mut fwd[seg.client] };
+            out.extend(start..start + seg.len);
+            clock = start + seg.len;
+        }
+    }
+    Schedule { assignment: schedule.assignment.clone(), fwd_slots: fwd, bwd_slots: bwd }
+}
+
+/// Simulate an uneven-dataset epoch: clients own `batches[j]` batches;
+/// after each batch update, finished clients drop out and the schedule is
+/// compacted. Returns the total epoch makespan in slots (sum of the
+/// per-phase makespans) and the number of compaction phases.
+pub fn uneven_epoch_makespan(inst: &Instance, schedule: &Schedule, batches: &[usize]) -> (u64, usize) {
+    assert_eq!(batches.len(), inst.n_clients);
+    let mut remaining: Vec<usize> = batches.to_vec();
+    let mut total: u64 = 0;
+    let mut phases = 0;
+    loop {
+        let active: Vec<bool> = remaining.iter().map(|&b| b > 0).collect();
+        if !active.iter().any(|&a| a) {
+            break;
+        }
+        let compacted = compact(inst, schedule, &active);
+        // Batch updates this phase: min remaining among active clients —
+        // the schedule repeats unchanged until the next client finishes.
+        let step = remaining.iter().filter(|&&b| b > 0).min().copied().unwrap();
+        let span = compacted.makespan(inst) as u64;
+        total += span * step as u64;
+        phases += 1;
+        for b in remaining.iter_mut() {
+            *b = b.saturating_sub(step);
+        }
+    }
+    (total, phases)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::instance::profiles::Model;
+    use crate::instance::scenario::{Scenario, ScenarioCfg};
+    use crate::solver::{admm, greedy};
+    use crate::util::prop;
+
+    fn setup(seed: u64) -> (Instance, Schedule) {
+        let inst = ScenarioCfg::new(Scenario::S2, Model::ResNet101, 12, 3, seed).generate().quantize(180.0);
+        let s = admm::solve(&inst, &admm::AdmmCfg::default()).unwrap().schedule;
+        (inst, s)
+    }
+
+    #[test]
+    fn all_active_is_feasible_and_not_worse() {
+        prop::check(12, |rng| {
+            let (inst, s) = setup(rng.next_u64());
+            let c = compact(&inst, &s, &vec![true; inst.n_clients]);
+            prop::assert_prop(c.is_feasible(&inst), &format!("{:?}", c.violations(&inst)));
+            prop::assert_prop(c.makespan(&inst) <= s.makespan(&inst), "compaction never hurts");
+        });
+    }
+
+    #[test]
+    fn dropping_clients_shrinks_makespan_monotonically() {
+        prop::check(10, |rng| {
+            let (inst, s) = setup(rng.next_u64());
+            let mut active = vec![true; inst.n_clients];
+            let full = compact(&inst, &s, &active).makespan(&inst);
+            // Drop a random half.
+            let mut dropped = 0;
+            for j in 0..inst.n_clients {
+                if rng.chance(0.5) && dropped + 1 < inst.n_clients {
+                    active[j] = false;
+                    dropped += 1;
+                }
+            }
+            let half = compact(&inst, &s, &active);
+            // Feasibility must hold on the surviving subset; inactive
+            // clients have no slots (checker sees count mismatch), so
+            // check manually: survivors only.
+            for j in 0..inst.n_clients {
+                if !active[j] {
+                    prop::assert_prop(half.fwd_slots[j].is_empty() && half.bwd_slots[j].is_empty(), "inactive cleared");
+                }
+            }
+            let surv_makespan = (0..inst.n_clients)
+                .filter(|&j| active[j])
+                .map(|j| half.completion(&inst, j))
+                .max()
+                .unwrap_or(0);
+            prop::assert_prop(surv_makespan <= full, "fewer clients, earlier finish");
+        });
+    }
+
+    #[test]
+    fn assignment_preserved() {
+        let (inst, s) = setup(5);
+        let mut active = vec![true; inst.n_clients];
+        active[0] = false;
+        let c = compact(&inst, &s, &active);
+        assert_eq!(c.assignment.helper_of, s.assignment.helper_of);
+    }
+
+    #[test]
+    fn survivors_respect_constraints() {
+        prop::check(10, |rng| {
+            let (inst, s) = setup(rng.next_u64());
+            let active: Vec<bool> = (0..inst.n_clients).map(|j| j % 2 == 0 || rng.chance(0.5)).collect();
+            let c = compact(&inst, &s, &active);
+            for j in 0..inst.n_clients {
+                if !active[j] {
+                    continue;
+                }
+                let i = c.assignment.helper_of[j];
+                let e = inst.edge(i, j);
+                prop::assert_prop(c.fwd_slots[j].len() == inst.p[e] as usize, "(6)");
+                prop::assert_prop(c.bwd_slots[j].len() == inst.pp[e] as usize, "(7)");
+                if let Some(&first) = c.fwd_slots[j].first() {
+                    prop::assert_prop(first >= inst.r[e], "(1)");
+                }
+                if let Some(&bfirst) = c.bwd_slots[j].first() {
+                    let ready = c.fwd_finish(j) + inst.l[e] + inst.lp[e];
+                    prop::assert_prop(bfirst >= ready, "(2)");
+                }
+            }
+            // (3): no helper slot double-booked among survivors.
+            let mut busy = std::collections::HashSet::new();
+            for j in 0..inst.n_clients {
+                let i = c.assignment.helper_of[j];
+                for &t in c.fwd_slots[j].iter().chain(c.bwd_slots[j].iter()) {
+                    prop::assert_prop(busy.insert((i, t)), "(3) overlap");
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn uneven_epoch_accounts_all_batches() {
+        let (inst, s) = setup(9);
+        let batches: Vec<usize> = (0..inst.n_clients).map(|j| 1 + j % 3).collect();
+        let (total, phases) = uneven_epoch_makespan(&inst, &s, &batches);
+        assert!(phases >= 1 && phases <= 3);
+        let single = s.makespan(&inst) as u64;
+        let max_batches = *batches.iter().max().unwrap() as u64;
+        assert!(total <= single * max_batches, "compaction saves vs naive repeat");
+        assert!(total >= single, "at least one full batch span");
+    }
+
+    #[test]
+    fn compaction_beats_naive_repeat_for_greedy_too() {
+        let inst = ScenarioCfg::new(Scenario::S1, Model::Vgg19, 10, 2, 3).generate().quantize(550.0);
+        let s = greedy::solve(&inst).unwrap();
+        let batches = vec![3, 1, 1, 2, 1, 3, 1, 2, 1, 1];
+        let (total, _) = uneven_epoch_makespan(&inst, &s, &batches);
+        let naive = s.makespan(&inst) as u64 * 3;
+        assert!(total <= naive);
+    }
+}

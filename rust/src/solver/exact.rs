@@ -1,0 +1,557 @@
+//! Exact (anytime) solver for ℙ — the reference optimum that plays the
+//! role of the paper's Gurobi baseline in Table II.
+//!
+//! Two nested branch-and-bound searches exploit the structure of ℙ:
+//!
+//! 1. **Outer:** DFS over memory-feasible client→helper assignments
+//!    (constraints (4)–(5)). Given a full assignment the problem
+//!    decomposes per helper (each helper is an independent single
+//!    machine — the same observation behind Theorem 2).
+//! 2. **Inner ([`helper_exact`]):** optimal preemptive schedule of one
+//!    helper's two-phase jobs (fwd: release r_j, work p_j; then a fixed
+//!    lag l_j + l'_j; bwd: work p'_j, tail r'_j), minimizing
+//!    max_j (φ_j + r'_j). Branching happens only at *decision points*
+//!    (releases and completions — sufficient for preemptive scheduling
+//!    with regular objectives) on which available operation to run next.
+//!
+//! Both layers carry admissible lower bounds; with a node cap the solver
+//! is *anytime*: it returns the incumbent, the proven lower bound and an
+//! optimality flag — exactly how the paper reports Gurobi (which also
+//! timed out with a 40% gap on J=20 after 14h).
+
+use super::admm::{self, AdmmCfg};
+use super::bwd;
+use super::greedy;
+use super::schedule::{Assignment, Schedule};
+use crate::instance::Instance;
+use std::time::{Duration, Instant};
+
+#[derive(Clone, Debug)]
+pub struct ExactCfg {
+    /// Outer-search node cap.
+    pub node_cap: usize,
+    /// Inner (per-helper) node cap per evaluation.
+    pub helper_node_cap: usize,
+    /// Wall-clock budget; the solver returns the incumbent when exceeded.
+    pub time_budget: Duration,
+}
+
+impl Default for ExactCfg {
+    fn default() -> Self {
+        ExactCfg { node_cap: 2_000_000, helper_node_cap: 400_000, time_budget: Duration::from_secs(120) }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct ExactResult {
+    pub schedule: Schedule,
+    pub makespan: u32,
+    /// Proven lower bound on the optimum (= makespan iff proven_optimal).
+    pub lower_bound: u32,
+    pub proven_optimal: bool,
+    pub nodes: usize,
+    pub elapsed: Duration,
+}
+
+/// Exact makespan of one helper processing `clients` (indices into the
+/// instance), with optimal preemptive two-phase scheduling. Returns
+/// (makespan contribution, fwd slots, bwd slots, proven) — slots indexed
+/// like `clients`.
+pub fn helper_exact(
+    inst: &Instance,
+    i: usize,
+    clients: &[usize],
+    node_cap: usize,
+) -> (u32, Vec<Vec<u32>>, Vec<Vec<u32>>, bool) {
+    let n = clients.len();
+    if n == 0 {
+        return (0, vec![], vec![], true);
+    }
+    // Pull per-job parameters.
+    let r: Vec<u32> = clients.iter().map(|&j| inst.r[inst.edge(i, j)]).collect();
+    let p: Vec<u32> = clients.iter().map(|&j| inst.p[inst.edge(i, j)]).collect();
+    let lag: Vec<u32> = clients
+        .iter()
+        .map(|&j| inst.l[inst.edge(i, j)] + inst.lp[inst.edge(i, j)])
+        .collect();
+    let pp: Vec<u32> = clients.iter().map(|&j| inst.pp[inst.edge(i, j)]).collect();
+    let tail: Vec<u32> = clients.iter().map(|&j| inst.rp[inst.edge(i, j)]).collect();
+
+    // Incumbent from the decomposition heuristic: optimal fwd (min max
+    // c^f) then optimal bwd (Algorithm 2). Often optimal already.
+    let (inc_cost, inc_f, inc_b) = decomposed_schedule(&r, &p, &lag, &pp, &tail);
+
+    struct Search<'a> {
+        r: &'a [u32],
+        lag: &'a [u32],
+        tail: &'a [u32],
+        best: u32,
+        best_f: Vec<Vec<u32>>,
+        best_b: Vec<Vec<u32>>,
+        nodes: usize,
+        cap: usize,
+        capped: bool,
+    }
+
+    #[derive(Clone)]
+    struct State {
+        t: u32,
+        rem_f: Vec<u32>,
+        rem_b: Vec<u32>,
+        /// fwd finish slot (valid when rem_f == 0).
+        fin_f: Vec<u32>,
+        /// cost of completed jobs so far.
+        done_max: u32,
+        /// (job, is_bwd, slot) log for schedule extraction.
+        log: Vec<(usize, bool, u32)>,
+    }
+
+    impl<'a> Search<'a> {
+        fn lower_bound(&self, s: &State) -> u32 {
+            let n = self.r.len();
+            let mut lb = s.done_max;
+            let mut total_rem: u32 = 0;
+            let mut min_tail_rem = u32::MAX;
+            for k in 0..n {
+                if s.rem_f[k] == 0 && s.rem_b[k] == 0 {
+                    continue;
+                }
+                // Earliest possible finish of job k from state s.
+                let bwd_release = if s.rem_f[k] > 0 {
+                    s.t.max(self.r[k]) + s.rem_f[k] + self.lag[k]
+                } else {
+                    s.fin_f[k] + self.lag[k]
+                };
+                let fin = bwd_release.max(s.t) + s.rem_b[k];
+                lb = lb.max(fin + self.tail[k]);
+                total_rem += s.rem_f[k] + s.rem_b[k];
+                min_tail_rem = min_tail_rem.min(self.tail[k]);
+            }
+            if total_rem > 0 {
+                // Machine-load bound: the machine needs total_rem more busy
+                // slots starting no earlier than t.
+                lb = lb.max(s.t + total_rem + min_tail_rem);
+            }
+            lb
+        }
+
+        fn dfs(&mut self, s: &mut State) {
+            self.nodes += 1;
+            if self.nodes > self.cap {
+                self.capped = true;
+                return;
+            }
+            if self.lower_bound(s) >= self.best {
+                return;
+            }
+            let n = self.r.len();
+            if (0..n).all(|k| s.rem_f[k] == 0 && s.rem_b[k] == 0) {
+                // done_max is the exact cost.
+                if s.done_max < self.best {
+                    self.best = s.done_max;
+                    let (f, b) = extract(n, &s.log);
+                    self.best_f = f;
+                    self.best_b = b;
+                }
+                return;
+            }
+            // Available operations at time t.
+            let mut avail: Vec<(usize, bool)> = Vec::new();
+            for k in 0..n {
+                if s.rem_f[k] > 0 && self.r[k] <= s.t {
+                    avail.push((k, false));
+                }
+                if s.rem_b[k] > 0 && s.rem_f[k] == 0 && s.t >= s.fin_f[k] + self.lag[k] {
+                    avail.push((k, true));
+                }
+            }
+            // Future event times (releases that may change the avail set).
+            let mut next_event = u32::MAX;
+            for k in 0..n {
+                if s.rem_f[k] > 0 && self.r[k] > s.t {
+                    next_event = next_event.min(self.r[k]);
+                }
+                if s.rem_b[k] > 0 && s.rem_f[k] == 0 {
+                    let br = s.fin_f[k] + self.lag[k];
+                    if br > s.t {
+                        next_event = next_event.min(br);
+                    }
+                }
+            }
+            if avail.is_empty() {
+                debug_assert!(next_event != u32::MAX, "deadlock in helper_exact");
+                let old_t = s.t;
+                s.t = next_event;
+                self.dfs(s);
+                s.t = old_t;
+                return;
+            }
+            // Order: bwd ops with large tails first (good incumbents early).
+            avail.sort_by_key(|&(k, is_bwd)| std::cmp::Reverse((self.tail[k], is_bwd as u32)));
+            for (k, is_bwd) in avail {
+                let rem = if is_bwd { s.rem_b[k] } else { s.rem_f[k] };
+                // Run until completion or the next release event.
+                let run = if next_event == u32::MAX { rem } else { rem.min(next_event - s.t) };
+                debug_assert!(run > 0);
+                // Apply.
+                let log_len = s.log.len();
+                for dt in 0..run {
+                    s.log.push((k, is_bwd, s.t + dt));
+                }
+                let old_t = s.t;
+                let old_done = s.done_max;
+                s.t += run;
+                if is_bwd {
+                    s.rem_b[k] -= run;
+                    if s.rem_b[k] == 0 {
+                        s.done_max = s.done_max.max(s.t + self.tail[k]);
+                    }
+                } else {
+                    s.rem_f[k] -= run;
+                    if s.rem_f[k] == 0 {
+                        s.fin_f[k] = s.t;
+                    }
+                }
+                self.dfs(s);
+                // Undo.
+                s.log.truncate(log_len);
+                s.t = old_t;
+                s.done_max = old_done;
+                if is_bwd {
+                    s.rem_b[k] += run;
+                } else {
+                    if s.rem_f[k] == 0 {
+                        s.fin_f[k] = 0;
+                    }
+                    s.rem_f[k] += run;
+                }
+            }
+        }
+    }
+
+    fn extract(n: usize, log: &[(usize, bool, u32)]) -> (Vec<Vec<u32>>, Vec<Vec<u32>>) {
+        let mut f = vec![Vec::new(); n];
+        let mut b = vec![Vec::new(); n];
+        for &(k, is_bwd, t) in log {
+            if is_bwd {
+                b[k].push(t);
+            } else {
+                f[k].push(t);
+            }
+        }
+        (f, b)
+    }
+
+    let mut search = Search {
+        r: &r,
+        lag: &lag,
+        tail: &tail,
+        best: inc_cost + 1, // strict improvement over the incumbent
+        best_f: inc_f,
+        best_b: inc_b,
+        nodes: 0,
+        cap: node_cap,
+        capped: false,
+    };
+    let mut state = State {
+        t: 0,
+        rem_f: p.clone(),
+        rem_b: pp.clone(),
+        fin_f: vec![0; n],
+        done_max: 0,
+        log: Vec::new(),
+    };
+    search.dfs(&mut state);
+    let best = search.best.min(inc_cost);
+    (best, search.best_f, search.best_b, !search.capped)
+}
+
+/// The ℙ_f → ℙ_b decomposition applied to a single helper: optimal fwd
+/// (Baker, tails l folded into the lag), then Algorithm 2 for bwd.
+/// Used as the inner incumbent and by `makespan_given_assignment`.
+fn decomposed_schedule(
+    r: &[u32],
+    p: &[u32],
+    lag: &[u32],
+    pp: &[u32],
+    tail: &[u32],
+) -> (u32, Vec<Vec<u32>>, Vec<Vec<u32>>) {
+    let n = r.len();
+    let fwd_jobs: Vec<bwd::Job> = (0..n)
+        .map(|k| bwd::Job { id: k, release: r[k], proc: p[k], tail: lag[k] })
+        .collect();
+    let fslots = bwd::preemptive_min_max_tail_contiguous(&fwd_jobs);
+
+    let mut busy: std::collections::HashSet<u32> = std::collections::HashSet::new();
+    for s in &fslots {
+        busy.extend(s.iter().copied());
+    }
+    let bwd_jobs: Vec<bwd::Job> = (0..n)
+        .map(|k| {
+            let fin = fslots[k].last().map(|&t| t + 1).unwrap_or(0);
+            bwd::Job { id: k, release: fin + lag[k], proc: pp[k], tail: tail[k] }
+        })
+        .collect();
+    let horizon_b = bwd_jobs.iter().map(|j| j.release).max().unwrap() + pp.iter().sum::<u32>() + busy.len() as u32 + 1;
+    let free_b = bwd::free_slots(horizon_b, &busy);
+    let bslots = bwd::preemptive_min_max_tail(&bwd_jobs, &free_b);
+    let cost = bwd::max_tail_cost(&bwd_jobs, &bslots);
+    (cost, fslots, bslots)
+}
+
+/// Exact makespan for a *fixed* assignment (per-helper exact search).
+/// Returns (schedule, makespan, proven).
+pub fn schedule_given_assignment(inst: &Instance, assignment: &Assignment, helper_cap: usize) -> (Schedule, u32, bool) {
+    let mut fwd = vec![Vec::new(); inst.n_clients];
+    let mut bwdv = vec![Vec::new(); inst.n_clients];
+    let mut makespan = 0;
+    let mut proven = true;
+    for i in 0..inst.n_helpers {
+        let clients = assignment.clients_of(i);
+        let (m, f, b, ok) = helper_exact(inst, i, &clients, helper_cap);
+        makespan = makespan.max(m);
+        proven &= ok;
+        for (k, &j) in clients.iter().enumerate() {
+            fwd[j] = f.get(k).cloned().unwrap_or_default();
+            bwdv[j] = b.get(k).cloned().unwrap_or_default();
+        }
+    }
+    (Schedule { assignment: assignment.clone(), fwd_slots: fwd, bwd_slots: bwdv }, makespan, proven)
+}
+
+/// Admissible per-client completion lower bound over a helper choice set.
+fn client_lb(inst: &Instance, j: usize, helpers: &[usize]) -> u32 {
+    helpers
+        .iter()
+        .map(|&i| {
+            let e = inst.edge(i, j);
+            inst.r[e] + inst.p[e] + inst.l[e] + inst.lp[e] + inst.pp[e] + inst.rp[e]
+        })
+        .min()
+        .unwrap_or(u32::MAX)
+}
+
+/// Lower bound for a helper's currently-assigned subset: load bound
+/// (earliest release + total work + smallest tail) and per-client bound.
+fn helper_lb(inst: &Instance, i: usize, clients: &[usize]) -> u32 {
+    if clients.is_empty() {
+        return 0;
+    }
+    let mut min_rel = u32::MAX;
+    let mut work = 0u32;
+    let mut min_tail = u32::MAX;
+    let mut per_client = 0u32;
+    for &j in clients {
+        let e = inst.edge(i, j);
+        min_rel = min_rel.min(inst.r[e]);
+        work += inst.p[e] + inst.pp[e];
+        min_tail = min_tail.min(inst.rp[e]);
+        per_client = per_client.max(inst.r[e] + inst.p[e] + inst.l[e] + inst.lp[e] + inst.pp[e] + inst.rp[e]);
+    }
+    per_client.max(min_rel + work + min_tail)
+}
+
+/// Full exact solve of ℙ.
+pub fn solve(inst: &Instance, cfg: &ExactCfg) -> ExactResult {
+    let start = Instant::now();
+    let jn = inst.n_clients;
+    let in_ = inst.n_helpers;
+
+    // Incumbent: best of balanced-greedy and ADMM, re-scheduled exactly
+    // per helper (the assignment is kept, the schedule is optimized).
+    let mut best_assignment: Option<Assignment> = None;
+    let mut best_make = u32::MAX;
+    let mut incumbents: Vec<Assignment> = Vec::new();
+    if let Some(g) = greedy::solve(inst) {
+        incumbents.push(g.assignment);
+    }
+    if let Some(a) = admm::solve(inst, &AdmmCfg::default()) {
+        incumbents.push(a.schedule.assignment);
+    }
+    for a in incumbents {
+        let (_, m, _) = schedule_given_assignment(inst, &a, cfg.helper_node_cap);
+        if m < best_make {
+            best_make = m;
+            best_assignment = Some(a);
+        }
+    }
+
+    // Root lower bound.
+    let all_helpers: Vec<usize> = (0..in_).collect();
+    let root_lb = (0..jn).map(|j| client_lb(inst, j, &all_helpers)).max().unwrap_or(0);
+
+    // Branch order: clients with the largest work first.
+    let mut order: Vec<usize> = (0..jn).collect();
+    order.sort_by_key(|&j| {
+        let w: u32 = (0..in_).map(|i| inst.p[inst.edge(i, j)] + inst.pp[inst.edge(i, j)]).min().unwrap_or(0);
+        std::cmp::Reverse(w)
+    });
+
+    struct Outer<'a> {
+        inst: &'a Instance,
+        cfg: &'a ExactCfg,
+        order: &'a [usize],
+        best: u32,
+        best_assignment: Option<Assignment>,
+        nodes: usize,
+        capped: bool,
+        start: Instant,
+    }
+    impl<'a> Outer<'a> {
+        fn dfs(&mut self, k: usize, helper_of: &mut Vec<usize>, per_helper: &mut Vec<Vec<usize>>, free: &mut Vec<f64>) {
+            self.nodes += 1;
+            if self.nodes > self.cfg.node_cap || self.start.elapsed() > self.cfg.time_budget {
+                self.capped = true;
+                return;
+            }
+            // Bound: per-helper LBs of the partial assignment + remaining
+            // clients' best-case completions.
+            let mut lb = (0..self.inst.n_helpers)
+                .map(|i| helper_lb(self.inst, i, &per_helper[i]))
+                .max()
+                .unwrap_or(0);
+            for &j in &self.order[k..] {
+                let allowed: Vec<usize> = (0..self.inst.n_helpers).filter(|&i| free[i] >= self.inst.d[j]).collect();
+                if allowed.is_empty() {
+                    return; // memory-infeasible branch
+                }
+                lb = lb.max(client_lb(self.inst, j, &allowed));
+            }
+            if lb >= self.best {
+                return;
+            }
+            if k == self.order.len() {
+                // Leaf: exact per-helper schedule.
+                let a = Assignment::new(helper_of.clone());
+                let (_, m, _) = schedule_given_assignment(self.inst, &a, self.cfg.helper_node_cap);
+                if m < self.best {
+                    self.best = m;
+                    self.best_assignment = Some(a);
+                }
+                return;
+            }
+            let j = self.order[k];
+            // Try helpers in order of the cheapest LB increase.
+            let mut choices: Vec<(u32, usize)> = (0..self.inst.n_helpers)
+                .filter(|&i| free[i] >= self.inst.d[j])
+                .map(|i| {
+                    per_helper[i].push(j);
+                    let b = helper_lb(self.inst, i, &per_helper[i]);
+                    per_helper[i].pop();
+                    (b, i)
+                })
+                .collect();
+            choices.sort();
+            for (_, i) in choices {
+                helper_of[j] = i;
+                per_helper[i].push(j);
+                free[i] -= self.inst.d[j];
+                self.dfs(k + 1, helper_of, per_helper, free);
+                free[i] += self.inst.d[j];
+                per_helper[i].pop();
+                if self.capped {
+                    return;
+                }
+            }
+        }
+    }
+
+    let mut outer = Outer {
+        inst,
+        cfg,
+        order: &order,
+        best: best_make,
+        best_assignment: best_assignment.clone(),
+        nodes: 0,
+        capped: false,
+        start,
+    };
+    let mut helper_of = vec![0usize; jn];
+    let mut per_helper = vec![Vec::new(); in_];
+    let mut free = inst.mem.clone();
+    outer.dfs(0, &mut helper_of, &mut per_helper, &mut free);
+
+    let assignment = outer.best_assignment.expect("at least the incumbent exists");
+    let (schedule, makespan, leaf_proven) = schedule_given_assignment(inst, &assignment, cfg.helper_node_cap);
+    let proven = !outer.capped && leaf_proven;
+    ExactResult {
+        schedule,
+        makespan,
+        lower_bound: if proven { makespan } else { root_lb.min(makespan) },
+        proven_optimal: proven,
+        nodes: outer.nodes,
+        elapsed: start.elapsed(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::instance::profiles::Model;
+    use crate::instance::scenario::{Scenario, ScenarioCfg};
+    use crate::util::prop;
+
+    #[test]
+    fn exact_beats_or_matches_heuristics() {
+        prop::check(15, |rng| {
+            let jn = rng.range_usize(2, 6);
+            let inst = crate::solver::schedule::tests::tiny_instance(rng, jn, 2);
+            let res = solve(&inst, &ExactCfg::default());
+            prop::assert_prop(res.schedule.is_feasible(&inst) || !res.schedule.assignment.memory_ok(&inst),
+                "exact schedule feasible");
+            let g = greedy::solve(&inst).map(|s| s.makespan(&inst)).unwrap_or(u32::MAX);
+            let a = admm::solve(&inst, &AdmmCfg::default()).map(|r| r.schedule.makespan(&inst)).unwrap_or(u32::MAX);
+            prop::assert_prop(res.makespan <= g.min(a), &format!("exact {} > min(greedy {g}, admm {a})", res.makespan));
+        });
+    }
+
+    #[test]
+    fn helper_exact_at_least_lb_and_feasible() {
+        prop::check(30, |rng| {
+            let inst = crate::solver::schedule::tests::tiny_instance(rng, 4, 1);
+            let clients: Vec<usize> = (0..4).collect();
+            let (m, f, b, proven) = helper_exact(&inst, 0, &clients, 1_000_000);
+            prop::assert_prop(proven, "tiny case should be proven");
+            prop::assert_prop(m >= helper_lb(&inst, 0, &clients), "makespan >= LB");
+            // Assemble and check.
+            let sched = Schedule {
+                assignment: Assignment::new(vec![0; 4]),
+                fwd_slots: f,
+                bwd_slots: b,
+            };
+            let hard: Vec<_> = sched.violations(&inst).into_iter().filter(|v| !v.starts_with("(5)")).collect();
+            prop::assert_prop(hard.is_empty(), &format!("{hard:?}"));
+            prop::assert_prop(sched.makespan(&inst) == m, "extracted schedule matches cost");
+        });
+    }
+
+    #[test]
+    fn helper_exact_never_worse_than_decomposition() {
+        prop::check(40, |rng| {
+            let inst = crate::solver::schedule::tests::tiny_instance(rng, 5, 1);
+            let clients: Vec<usize> = (0..5).collect();
+            let (m, _, _, _) = helper_exact(&inst, 0, &clients, 500_000);
+            let a = Assignment::new(vec![0; 5]);
+            let fwd = admm::schedule_fwd_given_assignment(&inst, &a.helper_of);
+            let dec = bwd::complete_with_optimal_bwd(&inst, a, fwd);
+            prop::assert_prop(m <= dec.makespan(&inst), "exact <= decomposed");
+        });
+    }
+
+    #[test]
+    fn proven_on_small_scenario_instance() {
+        let inst = ScenarioCfg::new(Scenario::S1, Model::Vgg19, 6, 2, 21).generate().quantize(550.0);
+        let res = solve(&inst, &ExactCfg { time_budget: Duration::from_secs(30), ..Default::default() });
+        assert!(res.makespan >= res.lower_bound);
+        assert!(res.schedule.is_feasible(&inst), "{:?}", res.schedule.violations(&inst));
+    }
+
+    #[test]
+    fn anytime_under_tight_caps() {
+        let inst = ScenarioCfg::new(Scenario::S2, Model::ResNet101, 12, 4, 8).generate().quantize(180.0);
+        let res = solve(&inst, &ExactCfg { node_cap: 50, helper_node_cap: 100, time_budget: Duration::from_secs(5) });
+        // Still returns a feasible incumbent.
+        assert!(res.schedule.is_feasible(&inst));
+        assert!(res.makespan > 0);
+    }
+}

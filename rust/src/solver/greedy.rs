@@ -1,0 +1,98 @@
+//! The paper's scalable heuristic, **balanced-greedy** (§VI): static load
+//! balancing for the assignments (helper with the fewest assigned clients
+//! among those with enough free memory), then non-preemptive FCFS
+//! scheduling at each helper. O(J·I) assignment + O(J log J) scheduling —
+//! the method of choice for very large and/or homogeneous scenarios.
+
+use super::schedule::{fcfs_schedule, Assignment, Schedule};
+use crate::instance::Instance;
+
+/// Balanced-greedy assignment (§VI step 1): clients in index order; each
+/// goes to the least-loaded helper among Q_j = {i : m_i − used_i ≥ d_j};
+/// load G_i = number of assigned clients. Returns None if some client fits
+/// no helper (generator guarantees this cannot happen for our scenarios).
+pub fn balanced_assignment(inst: &Instance) -> Option<Assignment> {
+    let mut free = inst.mem.clone();
+    let mut load = vec![0usize; inst.n_helpers];
+    let mut helper_of = Vec::with_capacity(inst.n_clients);
+    for j in 0..inst.n_clients {
+        let eta = (0..inst.n_helpers)
+            .filter(|&i| free[i] >= inst.d[j])
+            .min_by(|&a, &b| load[a].cmp(&load[b]).then(a.cmp(&b)))?;
+        free[eta] -= inst.d[j];
+        load[eta] += 1;
+        helper_of.push(eta);
+    }
+    Some(Assignment::new(helper_of))
+}
+
+/// Full balanced-greedy solve: assignment + FCFS schedule.
+pub fn solve(inst: &Instance) -> Option<Schedule> {
+    Some(fcfs_schedule(inst, balanced_assignment(inst)?))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::instance::profiles::Model;
+    use crate::instance::scenario::{Scenario, ScenarioCfg};
+    use crate::util::prop;
+
+    #[test]
+    fn feasible_on_scenarios() {
+        prop::check(40, |rng| {
+            let j = rng.range_usize(2, 30);
+            let i = rng.range_usize(1, 6);
+            let scen = if rng.chance(0.5) { Scenario::S1 } else { Scenario::S2 };
+            let model = if rng.chance(0.5) { Model::ResNet101 } else { Model::Vgg19 };
+            let inst = ScenarioCfg::new(scen, model, j, i, rng.next_u64()).generate().quantize(200.0);
+            let s = solve(&inst).expect("generator guarantees feasibility");
+            prop::assert_prop(s.is_feasible(&inst), &format!("violations: {:?}", s.violations(&inst)));
+        });
+    }
+
+    #[test]
+    fn loads_are_balanced_when_memory_is_loose() {
+        let inst = ScenarioCfg::new(Scenario::S1, Model::ResNet101, 20, 4, 9).generate().quantize(180.0);
+        let a = balanced_assignment(&inst).unwrap();
+        let mut counts = vec![0usize; inst.n_helpers];
+        for &i in &a.helper_of {
+            counts[i] += 1;
+        }
+        let max = *counts.iter().max().unwrap();
+        let min = *counts.iter().min().unwrap();
+        assert!(max - min <= 1, "loads {counts:?} not balanced");
+    }
+
+    #[test]
+    fn respects_memory() {
+        prop::check(40, |rng| {
+            let inst = ScenarioCfg::new(Scenario::S2, Model::Vgg19, rng.range_usize(2, 25), rng.range_usize(1, 5), rng.next_u64())
+                .generate()
+                .quantize(550.0);
+            let a = balanced_assignment(&inst).unwrap();
+            prop::assert_prop(a.memory_ok(&inst), "memory constraint");
+        });
+    }
+
+    #[test]
+    fn returns_none_when_truly_infeasible() {
+        use crate::instance::Instance;
+        let inst = Instance {
+            n_clients: 1,
+            n_helpers: 1,
+            slot_ms: 100.0,
+            r: vec![0],
+            l: vec![0],
+            lp: vec![0],
+            rp: vec![0],
+            p: vec![1],
+            pp: vec![1],
+            d: vec![10.0],
+            mem: vec![1.0],
+            mu: vec![0],
+            label: "infeasible".into(),
+        };
+        assert!(balanced_assignment(&inst).is_none());
+    }
+}

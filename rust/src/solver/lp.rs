@@ -1,0 +1,292 @@
+//! Dense-tableau simplex LP solver (substrate: the image has no LP/MILP
+//! library, and the paper's exact baseline was Gurobi).
+//!
+//! Scope: the time-indexed ILP relaxations built by [`super::model`] for
+//! *small* instances, used to cross-validate the specialized exact solver
+//! and to power the generic branch-and-bound in [`super::milp`]. This is
+//! a textbook two-phase-by-Big-M implementation with Bland's rule as the
+//! anti-cycling fallback — O(m·n) per pivot, dense storage; perfectly
+//! adequate for a few hundred variables, *not* intended for large models
+//! (that is exactly why the repo has the specialized solvers).
+
+/// Constraint sense.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Sense {
+    Le,
+    Ge,
+    Eq,
+}
+
+/// One linear constraint: Σ coeffs·x (sense) rhs.
+#[derive(Clone, Debug)]
+pub struct Constraint {
+    /// Sparse (var, coeff) pairs.
+    pub terms: Vec<(usize, f64)>,
+    pub sense: Sense,
+    pub rhs: f64,
+}
+
+/// An LP: minimize objective·x subject to constraints, 0 ≤ x ≤ upper.
+#[derive(Clone, Debug, Default)]
+pub struct Lp {
+    pub n_vars: usize,
+    pub objective: Vec<f64>,
+    pub constraints: Vec<Constraint>,
+    /// Optional per-var upper bound (None = +inf).
+    pub upper: Vec<Option<f64>>,
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum LpOutcome {
+    Optimal { x: Vec<f64>, obj: f64 },
+    Infeasible,
+    Unbounded,
+}
+
+impl Lp {
+    pub fn new(n_vars: usize) -> Lp {
+        Lp { n_vars, objective: vec![0.0; n_vars], constraints: Vec::new(), upper: vec![None; n_vars] }
+    }
+
+    pub fn add(&mut self, terms: Vec<(usize, f64)>, sense: Sense, rhs: f64) {
+        debug_assert!(terms.iter().all(|&(v, _)| v < self.n_vars));
+        self.constraints.push(Constraint { terms, sense, rhs });
+    }
+
+    /// Solve with the Big-M simplex. Upper bounds are handled by adding
+    /// explicit x ≤ u rows (dense tableau keeps the code simple).
+    pub fn solve(&self) -> LpOutcome {
+        const BIG_M: f64 = 1e7;
+        const EPS: f64 = 1e-7;
+
+        // Materialize upper bounds as rows.
+        let mut rows: Vec<Constraint> = self.constraints.clone();
+        for (v, u) in self.upper.iter().enumerate() {
+            if let Some(u) = u {
+                rows.push(Constraint { terms: vec![(v, 1.0)], sense: Sense::Le, rhs: *u });
+            }
+        }
+        // Normalize to nonnegative rhs.
+        for c in &mut rows {
+            if c.rhs < 0.0 {
+                c.rhs = -c.rhs;
+                for t in &mut c.terms {
+                    t.1 = -t.1;
+                }
+                c.sense = match c.sense {
+                    Sense::Le => Sense::Ge,
+                    Sense::Ge => Sense::Le,
+                    Sense::Eq => Sense::Eq,
+                };
+            }
+        }
+        let m = rows.len();
+        // Columns: structural | slack/surplus | artificial.
+        let n_slack = rows.iter().filter(|c| c.sense != Sense::Eq).count();
+        let n_art = rows.iter().filter(|c| c.sense != Sense::Le).count();
+        let n_total = self.n_vars + n_slack + n_art;
+        let mut tab = vec![vec![0.0f64; n_total + 1]; m];
+        let mut cost = vec![0.0f64; n_total];
+        cost[..self.n_vars].copy_from_slice(&self.objective);
+        let mut basis = vec![usize::MAX; m];
+        let (mut s_idx, mut a_idx) = (self.n_vars, self.n_vars + n_slack);
+        for (row, c) in rows.iter().enumerate() {
+            for &(v, coef) in &c.terms {
+                tab[row][v] += coef;
+            }
+            tab[row][n_total] = c.rhs;
+            match c.sense {
+                Sense::Le => {
+                    tab[row][s_idx] = 1.0;
+                    basis[row] = s_idx;
+                    s_idx += 1;
+                }
+                Sense::Ge => {
+                    tab[row][s_idx] = -1.0;
+                    s_idx += 1;
+                    tab[row][a_idx] = 1.0;
+                    cost[a_idx] = BIG_M;
+                    basis[row] = a_idx;
+                    a_idx += 1;
+                }
+                Sense::Eq => {
+                    tab[row][a_idx] = 1.0;
+                    cost[a_idx] = BIG_M;
+                    basis[row] = a_idx;
+                    a_idx += 1;
+                }
+            }
+        }
+
+        // Reduced costs z_j - c_j maintained via a price row.
+        let mut price = vec![0.0f64; n_total + 1];
+        for j in 0..=n_total {
+            let mut z = 0.0;
+            for row in 0..m {
+                z += cost[basis[row]] * tab[row][j];
+            }
+            price[j] = z - if j < n_total { cost[j] } else { 0.0 };
+        }
+
+        let mut iters = 0usize;
+        let max_iters = 200 * (m + n_total).max(50);
+        loop {
+            iters += 1;
+            if iters > max_iters {
+                // Numerical trouble; declare the worst.
+                return LpOutcome::Infeasible;
+            }
+            // Entering: most positive reduced cost (Dantzig); Bland after
+            // long stalls.
+            let bland = iters > max_iters / 2;
+            let mut enter = None;
+            if bland {
+                for j in 0..n_total {
+                    if price[j] > EPS {
+                        enter = Some(j);
+                        break;
+                    }
+                }
+            } else {
+                let mut best = EPS;
+                for j in 0..n_total {
+                    if price[j] > best {
+                        best = price[j];
+                        enter = Some(j);
+                    }
+                }
+            }
+            let Some(e) = enter else { break };
+            // Ratio test.
+            let mut leave = None;
+            let mut best_ratio = f64::INFINITY;
+            for row in 0..m {
+                if tab[row][e] > EPS {
+                    let ratio = tab[row][n_total] / tab[row][e];
+                    if ratio < best_ratio - EPS || (bland && (ratio - best_ratio).abs() <= EPS && leave.map(|l| basis[l] > basis[row]).unwrap_or(false)) {
+                        best_ratio = ratio;
+                        leave = Some(row);
+                    }
+                }
+            }
+            let Some(lv) = leave else {
+                return LpOutcome::Unbounded;
+            };
+            // Pivot.
+            let piv = tab[lv][e];
+            for j in 0..=n_total {
+                tab[lv][j] /= piv;
+            }
+            for row in 0..m {
+                if row != lv && tab[row][e].abs() > 1e-12 {
+                    let f = tab[row][e];
+                    for j in 0..=n_total {
+                        tab[row][j] -= f * tab[lv][j];
+                    }
+                }
+            }
+            let f = price[e];
+            for j in 0..=n_total {
+                price[j] -= f * tab[lv][j];
+            }
+            basis[lv] = e;
+        }
+
+        // Infeasible if an artificial stays basic at positive level.
+        for row in 0..m {
+            if basis[row] >= self.n_vars + n_slack && tab[row][n_total] > 1e-5 {
+                return LpOutcome::Infeasible;
+            }
+        }
+        let mut x = vec![0.0f64; self.n_vars];
+        for row in 0..m {
+            if basis[row] < self.n_vars {
+                x[basis[row]] = tab[row][n_total];
+            }
+        }
+        let obj = self.objective.iter().zip(&x).map(|(c, v)| c * v).sum();
+        LpOutcome::Optimal { x, obj }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn simple_2d() {
+        // min -x - 2y st x + y <= 4, x <= 3, y <= 2 → x=2? optimum at
+        // (2, 2): obj -6.
+        let mut lp = Lp::new(2);
+        lp.objective = vec![-1.0, -2.0];
+        lp.add(vec![(0, 1.0), (1, 1.0)], Sense::Le, 4.0);
+        lp.upper[0] = Some(3.0);
+        lp.upper[1] = Some(2.0);
+        match lp.solve() {
+            LpOutcome::Optimal { x, obj } => {
+                assert!((obj + 6.0).abs() < 1e-6, "obj {obj}");
+                assert!((x[0] - 2.0).abs() < 1e-6 && (x[1] - 2.0).abs() < 1e-6, "{x:?}");
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn equality_and_ge() {
+        // min x + y st x + y = 3, x >= 1 → obj 3 with x in [1,3].
+        let mut lp = Lp::new(2);
+        lp.objective = vec![1.0, 1.0];
+        lp.add(vec![(0, 1.0), (1, 1.0)], Sense::Eq, 3.0);
+        lp.add(vec![(0, 1.0)], Sense::Ge, 1.0);
+        match lp.solve() {
+            LpOutcome::Optimal { x, obj } => {
+                assert!((obj - 3.0).abs() < 1e-6);
+                assert!(x[0] >= 1.0 - 1e-6);
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn detects_infeasible() {
+        let mut lp = Lp::new(1);
+        lp.objective = vec![1.0];
+        lp.add(vec![(0, 1.0)], Sense::Ge, 5.0);
+        lp.upper[0] = Some(2.0);
+        assert_eq!(lp.solve(), LpOutcome::Infeasible);
+    }
+
+    #[test]
+    fn detects_unbounded() {
+        let mut lp = Lp::new(1);
+        lp.objective = vec![-1.0];
+        lp.add(vec![(0, 1.0)], Sense::Ge, 0.0);
+        assert_eq!(lp.solve(), LpOutcome::Unbounded);
+    }
+
+    #[test]
+    fn degenerate_does_not_cycle() {
+        // A classically degenerate LP (multiple optimal bases).
+        let mut lp = Lp::new(3);
+        lp.objective = vec![-0.75, 150.0, -0.02];
+        lp.add(vec![(0, 0.25), (1, -60.0), (2, -0.04)], Sense::Le, 0.0);
+        lp.add(vec![(0, 0.5), (1, -90.0), (2, -0.02)], Sense::Le, 0.0);
+        lp.add(vec![(2, 1.0)], Sense::Le, 1.0);
+        match lp.solve() {
+            LpOutcome::Optimal { .. } => {}
+            other => panic!("degenerate LP failed: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn negative_rhs_normalization() {
+        // min x st -x <= -2 (i.e. x >= 2).
+        let mut lp = Lp::new(1);
+        lp.objective = vec![1.0];
+        lp.add(vec![(0, -1.0)], Sense::Le, -2.0);
+        match lp.solve() {
+            LpOutcome::Optimal { x, .. } => assert!((x[0] - 2.0).abs() < 1e-6),
+            other => panic!("{other:?}"),
+        }
+    }
+}

@@ -1,0 +1,32 @@
+//! The paper's contribution: solution methods for the joint client-helper
+//! assignment + scheduling problem ℙ (minimize the batch-training
+//! makespan of parallel split learning).
+//!
+//! | Module | Paper artifact |
+//! |---|---|
+//! | [`schedule`] | decision variables x, z, y; constraints (1)–(9); FCFS |
+//! | [`admm`] | Algorithm 1 (ADMM-based ℙ_f) |
+//! | [`bwd`] | Algorithm 2 (optimal ℙ_b, Theorem 2) |
+//! | [`greedy`] | balanced-greedy heuristic (§VI) |
+//! | [`baseline`] | random + FCFS baseline (§VII) |
+//! | [`exact`] | the exact/anytime reference optimum (Gurobi's role) |
+//! | [`lp`], [`milp`], [`model`] | time-indexed ILP of §IV + own solver |
+//! | [`strategy`] | the scenario-dependent solution strategy (Obs. 3) |
+//! | [`preemption`] | §VI switching-cost extension |
+
+pub mod admm;
+pub mod baseline;
+pub mod bwd;
+pub mod compact;
+pub mod exact;
+pub mod greedy;
+pub mod lp;
+pub mod milp;
+pub mod model;
+pub mod preemption;
+pub mod schedule;
+pub mod strategy;
+
+pub use admm::{AdmmCfg, AdmmResult};
+pub use exact::{ExactCfg, ExactResult};
+pub use schedule::{Assignment, Schedule};

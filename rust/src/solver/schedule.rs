@@ -1,0 +1,405 @@
+//! Schedule/assignment types shared by every solution method, plus the
+//! feasibility checker that enforces the paper's constraints (1)–(9) and
+//! the FCFS (non-preemptive) scheduler used by balanced-greedy and the
+//! baseline.
+//!
+//! Representation: instead of dense x_ijt / z_ijt tensors we store, per
+//! client, the sorted list of slots where its fwd (x) and bwd (z) task
+//! runs on its assigned helper. This is equivalent (y fixes the helper,
+//! (4)) and keeps memory O(work) instead of O(|E|·T).
+
+use crate::instance::Instance;
+
+/// Client→helper assignment (the y variables; (4) one helper per client).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Assignment {
+    pub helper_of: Vec<usize>,
+}
+
+impl Assignment {
+    pub fn new(helper_of: Vec<usize>) -> Self {
+        Assignment { helper_of }
+    }
+
+    /// Clients assigned to helper i, in client order.
+    pub fn clients_of(&self, i: usize) -> Vec<usize> {
+        (0..self.helper_of.len()).filter(|&j| self.helper_of[j] == i).collect()
+    }
+
+    /// Memory feasibility (5): Σ_j y_ij d_j ≤ m_i.
+    pub fn memory_ok(&self, inst: &Instance) -> bool {
+        let mut used = vec![0.0f64; inst.n_helpers];
+        for (j, &i) in self.helper_of.iter().enumerate() {
+            used[i] += inst.d[j];
+        }
+        used.iter().zip(&inst.mem).all(|(u, m)| *u <= *m + 1e-9)
+    }
+
+    /// Per-helper memory slack (m_i − Σ d_j).
+    pub fn memory_slack(&self, inst: &Instance) -> Vec<f64> {
+        let mut slack = inst.mem.clone();
+        for (j, &i) in self.helper_of.iter().enumerate() {
+            slack[i] -= inst.d[j];
+        }
+        slack
+    }
+}
+
+/// A complete solution of ℙ: assignment + per-client fwd/bwd slot lists.
+#[derive(Clone, Debug)]
+pub struct Schedule {
+    pub assignment: Assignment,
+    /// Sorted slots where client j's fwd-prop task runs (x_ijt = 1).
+    pub fwd_slots: Vec<Vec<u32>>,
+    /// Sorted slots where client j's bwd-prop task runs (z_ijt = 1).
+    pub bwd_slots: Vec<Vec<u32>>,
+}
+
+impl Schedule {
+    /// φ^f_j: slot when fwd-prop finishes (last fwd slot + 1); (12).
+    pub fn fwd_finish(&self, j: usize) -> u32 {
+        self.fwd_slots[j].last().map(|&t| t + 1).unwrap_or(0)
+    }
+
+    /// c^f_j = φ^f_j + l_ij (13).
+    pub fn fwd_completion(&self, inst: &Instance, j: usize) -> u32 {
+        let e = inst.edge(self.assignment.helper_of[j], j);
+        self.fwd_finish(j) + inst.l[e]
+    }
+
+    /// φ_j: slot when bwd-prop finishes (8).
+    pub fn bwd_finish(&self, j: usize) -> u32 {
+        self.bwd_slots[j].last().map(|&t| t + 1).unwrap_or(0)
+    }
+
+    /// c_j = φ_j + r'_ij (9): overall batch completion of client j.
+    pub fn completion(&self, inst: &Instance, j: usize) -> u32 {
+        let e = inst.edge(self.assignment.helper_of[j], j);
+        self.bwd_finish(j) + inst.rp[e]
+    }
+
+    /// Batch makespan max_j c_j — the objective of ℙ.
+    pub fn makespan(&self, inst: &Instance) -> u32 {
+        (0..inst.n_clients).map(|j| self.completion(inst, j)).max().unwrap_or(0)
+    }
+
+    /// Fwd makespan max_j c^f_j — the objective of ℙ_f.
+    pub fn fwd_makespan(&self, inst: &Instance) -> u32 {
+        (0..inst.n_clients).map(|j| self.fwd_completion(inst, j)).max().unwrap_or(0)
+    }
+
+    /// Total queuing delay of client j (paper §IV): φ_j − Σ_i y_ij
+    /// (r+p+l+l'+p') — slots spent waiting at the helper.
+    pub fn queuing_delay(&self, inst: &Instance, j: usize) -> i64 {
+        let e = inst.edge(self.assignment.helper_of[j], j);
+        let ideal = inst.r[e] + inst.p[e] + inst.l[e] + inst.lp[e] + inst.pp[e];
+        self.bwd_finish(j) as i64 - ideal as i64
+    }
+
+    /// Number of maximal contiguous segments in a slot list — 1 means
+    /// non-preempted.
+    pub fn segments(slots: &[u32]) -> u32 {
+        if slots.is_empty() {
+            return 0;
+        }
+        1 + slots.windows(2).filter(|w| w[1] != w[0] + 1).count() as u32
+    }
+
+    /// Preemption count across all clients (segments beyond the first).
+    pub fn preemptions(&self) -> u32 {
+        (0..self.fwd_slots.len())
+            .map(|j| {
+                (Self::segments(&self.fwd_slots[j]).saturating_sub(1))
+                    + (Self::segments(&self.bwd_slots[j]).saturating_sub(1))
+            })
+            .sum()
+    }
+
+    /// Makespan with the §VI switching-cost extension: each client's
+    /// completion is inflated by μ_i · (switch transitions of its tasks),
+    /// where transitions = 2 × segments (on + off edges of every maximal
+    /// run, matching Σ_t |x_ijt − x_ij(t+1)| with x ≡ 0 outside the
+    /// horizon).
+    pub fn makespan_with_switch_cost(&self, inst: &Instance) -> u32 {
+        (0..inst.n_clients)
+            .map(|j| {
+                let i = self.assignment.helper_of[j];
+                let switches = 2 * (Self::segments(&self.fwd_slots[j]) + Self::segments(&self.bwd_slots[j]));
+                self.completion(inst, j) + inst.mu[i] * switches
+            })
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// Full feasibility check of the paper's constraints. Returns the list
+    /// of violated constraints (empty = feasible).
+    pub fn violations(&self, inst: &Instance) -> Vec<String> {
+        let mut errs = Vec::new();
+        let jn = inst.n_clients;
+        if self.assignment.helper_of.len() != jn || self.fwd_slots.len() != jn || self.bwd_slots.len() != jn {
+            errs.push("shape mismatch".into());
+            return errs;
+        }
+        // (5) memory.
+        if !self.assignment.memory_ok(inst) {
+            errs.push("(5) helper memory exceeded".into());
+        }
+        for j in 0..jn {
+            let i = self.assignment.helper_of[j];
+            if i >= inst.n_helpers {
+                errs.push(format!("client {j}: invalid helper {i}"));
+                continue;
+            }
+            let e = inst.edge(i, j);
+            // sortedness + uniqueness.
+            for w in self.fwd_slots[j].windows(2) {
+                if w[1] <= w[0] {
+                    errs.push(format!("client {j}: fwd slots not strictly sorted"));
+                    break;
+                }
+            }
+            for w in self.bwd_slots[j].windows(2) {
+                if w[1] <= w[0] {
+                    errs.push(format!("client {j}: bwd slots not strictly sorted"));
+                    break;
+                }
+            }
+            // (6)/(7) exact processing amounts on the assigned helper.
+            if self.fwd_slots[j].len() != inst.p[e] as usize {
+                errs.push(format!("(6) client {j}: {} fwd slots != p {}", self.fwd_slots[j].len(), inst.p[e]));
+            }
+            if self.bwd_slots[j].len() != inst.pp[e] as usize {
+                errs.push(format!("(7) client {j}: {} bwd slots != p' {}", self.bwd_slots[j].len(), inst.pp[e]));
+            }
+            // (1) release times.
+            if let Some(&first) = self.fwd_slots[j].first() {
+                if first < inst.r[e] {
+                    errs.push(format!("(1) client {j}: fwd starts at {first} < release {}", inst.r[e]));
+                }
+            }
+            // (2) precedence: bwd may start only l+l' after fwd completed.
+            if let Some(&bfirst) = self.bwd_slots[j].first() {
+                let ready = self.fwd_finish(j) + inst.l[e] + inst.lp[e];
+                if bfirst < ready {
+                    errs.push(format!("(2) client {j}: bwd starts at {bfirst} < ready {ready}"));
+                }
+            }
+        }
+        // (3) one task per helper per slot.
+        let mut busy: std::collections::HashMap<(usize, u32), usize> = std::collections::HashMap::new();
+        for j in 0..jn {
+            let i = self.assignment.helper_of[j];
+            for &t in self.fwd_slots[j].iter().chain(self.bwd_slots[j].iter()) {
+                if let Some(other) = busy.insert((i, t), j) {
+                    if other != j || self.fwd_slots[j].contains(&t) && self.bwd_slots[j].contains(&t) {
+                        errs.push(format!("(3) helper {i} slot {t}: clients {other} and {j} overlap"));
+                    }
+                }
+            }
+        }
+        errs
+    }
+
+    pub fn is_feasible(&self, inst: &Instance) -> bool {
+        self.violations(inst).is_empty()
+    }
+}
+
+/// Non-preemptive FCFS scheduling given an assignment (paper §VI step 2
+/// of balanced-greedy, also used by the baseline): fwd tasks run in
+/// release-time order back-to-back; bwd tasks in bwd-arrival order
+/// (c^f + l'), each in one contiguous run, interleaved with any remaining
+/// fwd tasks on the same helper in arrival order.
+///
+/// The helper's timeline is a single FCFS queue over *task arrivals*
+/// (fwd arrival = r_ij, bwd arrival = c^f_j + l'_ij = φ^f_j + l + l'),
+/// which is exactly a "naive real-time implementation without proactive
+/// decisions" (§VII baseline description).
+pub fn fcfs_schedule(inst: &Instance, assignment: Assignment) -> Schedule {
+    let jn = inst.n_clients;
+    let mut fwd_slots = vec![Vec::new(); jn];
+    let mut bwd_slots = vec![Vec::new(); jn];
+
+    for i in 0..inst.n_helpers {
+        let clients = assignment.clients_of(i);
+        // Event-driven FCFS: maintain helper clock; a queue of arrived
+        // tasks (fwd first by r, bwd arrives after its client-side turn-
+        // around). Non-preemptive: once started, a task runs p (or p')
+        // consecutive slots.
+        #[derive(Clone, Copy)]
+        struct Pending {
+            j: usize,
+            arrival: u32,
+            proc: u32,
+            is_bwd: bool,
+        }
+        let mut pending: Vec<Pending> = clients
+            .iter()
+            .map(|&j| {
+                let e = inst.edge(i, j);
+                Pending { j, arrival: inst.r[e], proc: inst.p[e], is_bwd: false }
+            })
+            .collect();
+        let mut clock: u32 = 0;
+        while !pending.is_empty() {
+            // FCFS: earliest arrival; ties by client id for determinism.
+            // (A task that arrived while another was processing waits.)
+            let (idx, _) = pending
+                .iter()
+                .enumerate()
+                .min_by_key(|(_, t)| (t.arrival, t.is_bwd, t.j))
+                .map(|(k, t)| (k, *t))
+                .unwrap();
+            let task = pending.swap_remove(idx);
+            let start = clock.max(task.arrival);
+            let slots: Vec<u32> = (start..start + task.proc).collect();
+            clock = start + task.proc;
+            let e = inst.edge(i, task.j);
+            if task.is_bwd {
+                bwd_slots[task.j] = slots;
+            } else {
+                fwd_slots[task.j] = slots;
+                // bwd arrives after downlink + part-3 fwd/bwd + uplink.
+                let bwd_arrival = clock + inst.l[e] + inst.lp[e];
+                pending.push(Pending { j: task.j, arrival: bwd_arrival, proc: inst.pp[e], is_bwd: true });
+            }
+        }
+    }
+    Schedule { assignment, fwd_slots, bwd_slots }
+}
+
+#[cfg(test)]
+pub(crate) mod tests {
+    use super::*;
+    use crate::instance::profiles::Model;
+    use crate::instance::scenario::{Scenario, ScenarioCfg};
+    use crate::util::prop;
+    use crate::util::rng::Rng;
+
+    pub(crate) fn tiny_instance(rng: &mut Rng, jn: usize, in_: usize) -> Instance {
+        // Direct random slotted instance for unit tests (small numbers).
+        let e = jn * in_;
+        let gen = |rng: &mut Rng, lo: u32, hi: u32| -> Vec<u32> {
+            (0..e).map(|_| rng.range_usize(lo as usize, hi as usize) as u32).collect()
+        };
+        Instance {
+            n_clients: jn,
+            n_helpers: in_,
+            slot_ms: 100.0,
+            r: gen(rng, 0, 6),
+            l: gen(rng, 0, 3),
+            lp: gen(rng, 0, 3),
+            rp: gen(rng, 0, 4),
+            p: gen(rng, 1, 4),
+            pp: gen(rng, 1, 5),
+            d: (0..jn).map(|_| rng.range_f64(0.5, 2.0)).collect(),
+            mem: (0..in_).map(|_| rng.range_f64(4.0, 16.0)).collect(),
+            mu: vec![0; in_],
+            label: "tiny".into(),
+        }
+    }
+
+    #[test]
+    fn fcfs_is_feasible_on_random_instances() {
+        prop::check(120, |rng| {
+            let jn = rng.range_usize(1, 12);
+            let in_ = rng.range_usize(1, 4);
+            let inst = tiny_instance(rng, jn, in_);
+            let assignment = Assignment::new((0..jn).map(|_| rng.below(in_)).collect());
+            let s = fcfs_schedule(&inst, assignment);
+            let v = s.violations(&inst);
+            // memory may be violated by the random assignment; ignore (5).
+            let hard: Vec<_> = v.iter().filter(|m| !m.starts_with("(5)")).collect();
+            prop::assert_prop(hard.is_empty(), &format!("fcfs violations: {hard:?}"));
+        });
+    }
+
+    #[test]
+    fn fcfs_nonpreemptive() {
+        prop::check(60, |rng| {
+            let inst = tiny_instance(rng, 8, 2);
+            let assignment = Assignment::new((0..8).map(|j| j % 2).collect());
+            let s = fcfs_schedule(&inst, assignment);
+            for j in 0..8 {
+                prop::assert_prop(Schedule::segments(&s.fwd_slots[j]) == 1, "fwd contiguous");
+                prop::assert_prop(Schedule::segments(&s.bwd_slots[j]) == 1, "bwd contiguous");
+            }
+            prop::assert_prop(s.preemptions() == 0, "no preemptions in FCFS");
+        });
+    }
+
+    #[test]
+    fn makespan_matches_components() {
+        let mut rng = Rng::seeded(5);
+        let inst = tiny_instance(&mut rng, 5, 2);
+        let a = Assignment::new(vec![0, 1, 0, 1, 0]);
+        let s = fcfs_schedule(&inst, a);
+        let m = s.makespan(&inst);
+        let by_hand = (0..5).map(|j| s.completion(&inst, j)).max().unwrap();
+        assert_eq!(m, by_hand);
+        assert!(m >= inst.makespan_lower_bound());
+    }
+
+    #[test]
+    fn segments_counts() {
+        assert_eq!(Schedule::segments(&[]), 0);
+        assert_eq!(Schedule::segments(&[3]), 1);
+        assert_eq!(Schedule::segments(&[3, 4, 5]), 1);
+        assert_eq!(Schedule::segments(&[1, 2, 5, 6, 9]), 3);
+    }
+
+    #[test]
+    fn violations_catch_bad_schedules() {
+        let mut rng = Rng::seeded(11);
+        let inst = tiny_instance(&mut rng, 3, 2);
+        let a = Assignment::new(vec![0, 0, 1]);
+        let mut s = fcfs_schedule(&inst, a);
+        // Break (1): start before release.
+        let e = inst.edge(0, 0);
+        if inst.r[e] > 0 {
+            s.fwd_slots[0] = (0..inst.p[e]).collect();
+            assert!(s.violations(&inst).iter().any(|v| v.starts_with("(1)")));
+        }
+        // Break (6): drop a slot.
+        let mut s2 = fcfs_schedule(&inst, Assignment::new(vec![0, 0, 1]));
+        s2.fwd_slots[1].pop();
+        assert!(s2.violations(&inst).iter().any(|v| v.starts_with("(6)")));
+        // Break (3): force overlap.
+        let mut s3 = fcfs_schedule(&inst, Assignment::new(vec![0, 0, 1]));
+        s3.fwd_slots[1] = s3.fwd_slots[0].clone();
+        assert!(!s3.violations(&inst).is_empty());
+    }
+
+    #[test]
+    fn queuing_delay_nonnegative_for_fcfs() {
+        prop::check(60, |rng| {
+            let inst = tiny_instance(rng, 6, 2);
+            let a = Assignment::new((0..6).map(|_| rng.below(2)).collect());
+            let s = fcfs_schedule(&inst, a);
+            for j in 0..6 {
+                prop::assert_prop(s.queuing_delay(&inst, j) >= 0, "queuing delay >= 0");
+            }
+        });
+    }
+
+    #[test]
+    fn switch_cost_zero_when_mu_zero() {
+        let mut rng = Rng::seeded(3);
+        let inst = tiny_instance(&mut rng, 5, 2);
+        let s = fcfs_schedule(&inst, Assignment::new(vec![0, 1, 0, 1, 0]));
+        assert_eq!(s.makespan(&inst), s.makespan_with_switch_cost(&inst));
+    }
+
+    #[test]
+    fn scenario_instances_schedule_feasibly() {
+        for (scen, model) in [(Scenario::S1, Model::ResNet101), (Scenario::S2, Model::Vgg19)] {
+            let inst = ScenarioCfg::new(scen, model, 10, 3, 5).generate().quantize(180.0);
+            // Round-robin over feasible helpers.
+            let a = Assignment::new((0..10).map(|j| inst.feasible_helpers(j)[j % inst.feasible_helpers(j).len()]).collect());
+            let s = fcfs_schedule(&inst, a);
+            let v = s.violations(&inst);
+            let hard: Vec<_> = v.iter().filter(|m| !m.starts_with("(5)")).collect();
+            assert!(hard.is_empty(), "{hard:?}");
+        }
+    }
+}

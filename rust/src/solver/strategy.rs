@@ -1,0 +1,102 @@
+//! The paper's *solution strategy* (§VII, Observation 3): pick the method
+//! by the scenario's size and heterogeneity.
+//!
+//! * Medium instances (≲ 50 clients) and/or high heterogeneity → the
+//!   ADMM-based method (it shapes assignments around the delay structure
+//!   and schedules preemptively).
+//! * Very large (≳ 100 clients) or large-and-homogeneous → balanced-greedy
+//!   (queuing dominates; load balancing wins and costs almost nothing).
+
+use super::admm::{self, AdmmCfg};
+use super::greedy;
+use super::schedule::Schedule;
+use crate::instance::Instance;
+
+/// Which method the strategy picked.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Method {
+    Admm,
+    BalancedGreedy,
+}
+
+/// Heterogeneity proxy: coefficient of variation of the helper processing
+/// times p (the paper's scenarios differ exactly in this dimension).
+pub fn heterogeneity(inst: &Instance) -> f64 {
+    let xs: Vec<f64> = inst.p.iter().map(|&v| v as f64).collect();
+    let m = xs.iter().sum::<f64>() / xs.len() as f64;
+    if m == 0.0 {
+        return 0.0;
+    }
+    let var = xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / xs.len() as f64;
+    var.sqrt() / m
+}
+
+/// Decide the method per §VII: balanced-greedy for very large scenarios
+/// (≥ 100 clients in the paper's setting) and for large homogeneous ones;
+/// ADMM otherwise.
+pub fn pick(inst: &Instance) -> Method {
+    let j = inst.n_clients;
+    let het = heterogeneity(inst);
+    if j >= 100 {
+        Method::BalancedGreedy
+    } else if j > 50 && het < 0.35 {
+        Method::BalancedGreedy
+    } else {
+        Method::Admm
+    }
+}
+
+/// Run the strategy. Returns the schedule and the method used.
+pub fn solve(inst: &Instance, admm_cfg: &AdmmCfg) -> Option<(Schedule, Method)> {
+    match pick(inst) {
+        Method::BalancedGreedy => greedy::solve(inst).map(|s| (s, Method::BalancedGreedy)),
+        Method::Admm => {
+            let a = admm::solve(inst, admm_cfg)?;
+            // Defensive: if greedy happens to beat ADMM here, take it —
+            // the strategy is free to keep the better of its two tools.
+            if let Some(g) = greedy::solve(inst) {
+                if g.makespan(inst) < a.schedule.makespan(inst) {
+                    return Some((g, Method::BalancedGreedy));
+                }
+            }
+            Some((a.schedule, Method::Admm))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::instance::profiles::Model;
+    use crate::instance::scenario::{Scenario, ScenarioCfg};
+
+    #[test]
+    fn picks_greedy_for_huge() {
+        let inst = ScenarioCfg::new(Scenario::S1, Model::ResNet101, 120, 10, 1).generate().quantize(180.0);
+        assert_eq!(pick(&inst), Method::BalancedGreedy);
+    }
+
+    #[test]
+    fn picks_admm_for_medium_heterogeneous() {
+        let inst = ScenarioCfg::new(Scenario::S2, Model::ResNet101, 20, 5, 1).generate().quantize(180.0);
+        assert_eq!(pick(&inst), Method::Admm);
+    }
+
+    #[test]
+    fn strategy_not_worse_than_either_tool_alone() {
+        for seed in 0..4u64 {
+            let inst = ScenarioCfg::new(Scenario::S2, Model::Vgg19, 15, 4, 60 + seed).generate().quantize(550.0);
+            let (s, _) = solve(&inst, &crate::solver::admm::AdmmCfg::default()).unwrap();
+            let g = crate::solver::greedy::solve(&inst).unwrap();
+            assert!(s.makespan(&inst) <= g.makespan(&inst));
+            assert!(s.is_feasible(&inst));
+        }
+    }
+
+    #[test]
+    fn heterogeneity_ordering() {
+        let s1 = ScenarioCfg::new(Scenario::S1, Model::ResNet101, 20, 5, 2).generate().quantize(180.0);
+        let s2 = ScenarioCfg::new(Scenario::S2, Model::ResNet101, 20, 5, 2).generate().quantize(180.0);
+        assert!(heterogeneity(&s2) > heterogeneity(&s1) * 0.8, "S2 should not be much less heterogeneous");
+    }
+}

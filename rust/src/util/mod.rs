@@ -1,0 +1,9 @@
+//! Foundational substrates: deterministic RNG, statistics, JSON, a
+//! property-testing kit and a logger. Everything here is dependency-free
+//! (the image's registry has no rand/serde/proptest/criterion).
+
+pub mod json;
+pub mod logger;
+pub mod prop;
+pub mod rng;
+pub mod stats;

@@ -1,0 +1,113 @@
+//! A tiny property-based testing kit (no `proptest` in this image).
+//!
+//! Usage inside a `#[test]`:
+//! ```ignore
+//! prop::check(256, |rng| {
+//!     let inst = Instance::random(rng, ...);
+//!     let sched = solve(&inst);
+//!     prop::assert_prop(sched.is_feasible(&inst), "schedule must be feasible");
+//! });
+//! ```
+//!
+//! Every case runs with an independent, *deterministic* RNG derived from a
+//! base seed and the case index, so a failure report (`case #k, seed s`)
+//! reproduces exactly. `PSL_PROP_SEED` overrides the base seed and
+//! `PSL_PROP_CASES` scales the number of cases (useful for a long fuzzing
+//! soak).
+
+use super::rng::Rng;
+
+/// The base seed; override with env `PSL_PROP_SEED`.
+pub fn base_seed() -> u64 {
+    std::env::var("PSL_PROP_SEED").ok().and_then(|s| s.parse().ok()).unwrap_or(0x5EED_CAFE)
+}
+
+/// Number-of-cases multiplier; override with env `PSL_PROP_CASES` (a float,
+/// e.g. `4` runs 4x more cases).
+pub fn case_multiplier() -> f64 {
+    std::env::var("PSL_PROP_CASES").ok().and_then(|s| s.parse().ok()).unwrap_or(1.0)
+}
+
+/// Run `f` over `cases` deterministic random cases. `f` receives a fresh
+/// RNG per case; panics are annotated with the case index and seed so the
+/// failing case can be replayed.
+pub fn check<F: Fn(&mut Rng) + std::panic::RefUnwindSafe>(cases: usize, f: F) {
+    let seed = base_seed();
+    let n = ((cases as f64) * case_multiplier()).ceil() as usize;
+    for k in 0..n {
+        let case_seed = seed ^ (k as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let result = std::panic::catch_unwind(|| {
+            let mut rng = Rng::seeded(case_seed);
+            f(&mut rng);
+        });
+        if let Err(e) = result {
+            let msg = e
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| e.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".to_string());
+            panic!("property failed at case #{k} (seed {case_seed:#x}, base {seed:#x}): {msg}");
+        }
+    }
+}
+
+/// Assertion helper carrying a property label.
+#[track_caller]
+pub fn assert_prop(cond: bool, label: &str) {
+    assert!(cond, "property violated: {label}");
+}
+
+/// Assert |a - b| <= tol with a labelled message.
+#[track_caller]
+pub fn assert_close(a: f64, b: f64, tol: f64, label: &str) {
+    assert!((a - b).abs() <= tol, "property violated: {label}: |{a} - {b}| > {tol}");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn runs_all_cases() {
+        let counter = std::sync::atomic::AtomicUsize::new(0);
+        check(16, |_| {
+            counter.fetch_add(1, std::sync::atomic::Ordering::SeqCst);
+        });
+        // >= because PSL_PROP_CASES may scale it up in a soak run.
+        assert!(counter.load(std::sync::atomic::Ordering::SeqCst) >= 16);
+    }
+
+    #[test]
+    fn failure_reports_case() {
+        let r = std::panic::catch_unwind(|| {
+            check(8, |rng| {
+                // Fails deterministically on some case.
+                assert!(rng.f64() < 0.5, "coin");
+            });
+        });
+        let msg = match r {
+            Err(e) => e.downcast_ref::<String>().cloned().unwrap_or_default(),
+            Ok(_) => panic!("expected failure"),
+        };
+        assert!(msg.contains("case #"), "got: {msg}");
+        assert!(msg.contains("seed"), "got: {msg}");
+    }
+
+    #[test]
+    fn deterministic_cases() {
+        let mut first: Vec<u64> = vec![];
+        check(4, |rng| {
+            let _ = rng; // values recorded below by replaying same seeds
+        });
+        // replay manually: same derivation must give same streams
+        let seed = base_seed();
+        for k in 0..4u64 {
+            let cs = seed ^ k.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+            first.push(Rng::seeded(cs).next_u64());
+        }
+        let second: Vec<u64> = (0..4u64)
+            .map(|k| Rng::seeded(seed ^ k.wrapping_mul(0x9E37_79B9_7F4A_7C15)).next_u64())
+            .collect();
+        assert_eq!(first, second);
+    }
+}

@@ -1,0 +1,86 @@
+//! End-to-end CLI smoke tests: run the actual `psl` binary.
+
+use std::process::Command;
+
+fn psl(args: &[&str]) -> (String, String, bool) {
+    let out = Command::new(env!("CARGO_BIN_EXE_psl"))
+        .args(args)
+        .output()
+        .expect("run psl binary");
+    (
+        String::from_utf8_lossy(&out.stdout).to_string(),
+        String::from_utf8_lossy(&out.stderr).to_string(),
+        out.status.success(),
+    )
+}
+
+#[test]
+fn help_prints_usage() {
+    let (stdout, _, ok) = psl(&["help"]);
+    assert!(ok);
+    assert!(stdout.contains("USAGE"));
+    assert!(stdout.contains("sweep-slots"));
+}
+
+#[test]
+fn unknown_command_fails() {
+    let (_, stderr, ok) = psl(&["frobnicate"]);
+    assert!(!ok);
+    assert!(stderr.contains("unknown command"));
+}
+
+#[test]
+fn profiles_prints_table1() {
+    let (stdout, _, ok) = psl(&["profiles"]);
+    assert!(ok, "{stdout}");
+    assert!(stdout.contains("RPi 4B"));
+    assert!(stdout.contains("91.9"));
+    assert!(stdout.contains("Fig 5"));
+}
+
+#[test]
+fn gen_roundtrips_through_json() {
+    let path = std::env::temp_dir().join(format!("psl-cli-gen-{}.json", std::process::id()));
+    let (stdout, stderr, ok) = psl(&[
+        "gen", "--scenario", "2", "--model", "vgg19", "-j", "6", "-i", "2", "--seed", "9", "--out",
+        path.to_str().unwrap(),
+    ]);
+    assert!(ok, "stdout={stdout} stderr={stderr}");
+    let text = std::fs::read_to_string(&path).unwrap();
+    let inst = psl::instance::InstanceMs::from_json(&psl::util::json::Json::parse(&text).unwrap()).unwrap();
+    assert_eq!(inst.n_clients, 6);
+    assert_eq!(inst.n_helpers, 2);
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn solve_reports_all_methods() {
+    let (stdout, stderr, ok) = psl(&["solve", "--scenario", "2", "-j", "8", "-i", "2", "--seed", "3", "--replay"]);
+    assert!(ok, "stdout={stdout} stderr={stderr}");
+    for m in ["strategy", "admm", "greedy", "baseline"] {
+        assert!(stdout.contains(m), "missing {m} in: {stdout}");
+    }
+    assert!(stdout.contains("T="));
+}
+
+#[test]
+fn solve_single_method_and_gantt() {
+    let path = std::env::temp_dir().join(format!("psl-cli-gantt-{}.json", std::process::id()));
+    let (stdout, _, ok) = psl(&[
+        "solve", "-j", "6", "-i", "2", "--method", "greedy", "--gantt", path.to_str().unwrap(),
+    ]);
+    assert!(ok, "{stdout}");
+    let g = psl::util::json::Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+    assert!(g.get("segments").as_arr().unwrap().len() >= 12, "6 clients x 2 phases");
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn sweep_slots_runs() {
+    let (stdout, stderr, ok) = psl(&[
+        "sweep-slots", "-j", "6", "-i", "2", "--model", "vgg19", "--slots", "600,300",
+    ]);
+    assert!(ok, "stdout={stdout} stderr={stderr}");
+    assert!(stdout.contains("600"));
+    assert!(stdout.contains("300"));
+}

@@ -1,0 +1,168 @@
+//! Cross-solver property invariants on randomized instances — the
+//! heavyweight fuzz layer (scale cases with PSL_PROP_CASES).
+
+use psl::instance::profiles::Model;
+use psl::instance::scenario::{Scenario, ScenarioCfg};
+use psl::instance::Instance;
+use psl::solver::{admm, baseline, bwd, exact, greedy};
+use psl::util::prop;
+use psl::util::rng::Rng;
+
+fn random_instance(rng: &mut Rng) -> Instance {
+    let scen = if rng.chance(0.5) { Scenario::S1 } else { Scenario::S2 };
+    let model = if rng.chance(0.5) { Model::ResNet101 } else { Model::Vgg19 };
+    let j = rng.range_usize(1, 18);
+    let i = rng.range_usize(1, 5);
+    let slot = rng.range_f64(100.0, 800.0);
+    ScenarioCfg::new(scen, model, j, i, rng.next_u64()).generate().quantize(slot)
+}
+
+#[test]
+fn every_solver_output_is_feasible() {
+    prop::check(25, |rng| {
+        let inst = random_instance(rng);
+        let schedules = vec![
+            ("greedy", greedy::solve(&inst).expect("greedy")),
+            ("baseline", baseline::solve(&inst, rng).expect("baseline")),
+            ("admm", admm::solve(&inst, &admm::AdmmCfg::default()).expect("admm").schedule),
+        ];
+        for (name, s) in schedules {
+            let v = s.violations(&inst);
+            prop::assert_prop(v.is_empty(), &format!("{name} on {}: {v:?}", inst.label));
+            prop::assert_prop(
+                s.makespan(&inst) >= inst.makespan_lower_bound(),
+                &format!("{name}: makespan below lower bound"),
+            );
+        }
+    });
+}
+
+#[test]
+fn makespan_dominance_chain() {
+    // exact ≤ decomposition(admm-assignment) and replaying Alg.2 on any
+    // feasible fwd schedule cannot hurt.
+    prop::check(10, |rng| {
+        let scen = if rng.chance(0.5) { Scenario::S1 } else { Scenario::S2 };
+        let inst = ScenarioCfg::new(scen, Model::Vgg19, rng.range_usize(2, 8), 2, rng.next_u64())
+            .generate()
+            .quantize(550.0);
+        let ex = exact::solve(
+            &inst,
+            &exact::ExactCfg {
+                node_cap: 200_000,
+                helper_node_cap: 100_000,
+                time_budget: std::time::Duration::from_secs(10),
+            },
+        );
+        let a = admm::solve(&inst, &admm::AdmmCfg::default()).unwrap().schedule;
+        prop::assert_prop(ex.makespan <= a.makespan(&inst), "exact dominates admm");
+        prop::assert_prop(ex.lower_bound <= ex.makespan, "bound sanity");
+
+        let g = greedy::solve(&inst).unwrap();
+        let improved = bwd::complete_with_optimal_bwd(&inst, g.assignment.clone(), g.fwd_slots.clone());
+        prop::assert_prop(improved.makespan(&inst) <= g.makespan(&inst), "Alg.2 never hurts");
+    });
+}
+
+#[test]
+fn admm_is_deterministic() {
+    prop::check(8, |rng| {
+        let inst = random_instance(rng);
+        let a = admm::solve(&inst, &admm::AdmmCfg::default()).unwrap();
+        let b = admm::solve(&inst, &admm::AdmmCfg::default()).unwrap();
+        prop::assert_prop(
+            a.schedule.makespan(&inst) == b.schedule.makespan(&inst),
+            "same input, same makespan",
+        );
+        prop::assert_prop(
+            a.schedule.assignment.helper_of == b.schedule.assignment.helper_of,
+            "same input, same assignment",
+        );
+    });
+}
+
+#[test]
+fn quantization_never_underestimates_work() {
+    prop::check(20, |rng| {
+        let scen = if rng.chance(0.5) { Scenario::S1 } else { Scenario::S2 };
+        let ms = ScenarioCfg::new(scen, Model::ResNet101, rng.range_usize(2, 12), rng.range_usize(1, 4), rng.next_u64())
+            .generate();
+        let fine = ms.quantize(50.0);
+        let coarse = ms.quantize(400.0);
+        for e in 0..fine.p.len() {
+            prop::assert_prop(
+                fine.p[e] as f64 * 50.0 + 50.0 > ms.p_ms[e],
+                "fine quantization brackets true time",
+            );
+            prop::assert_prop(
+                coarse.p[e] as f64 * 400.0 + 400.0 > ms.p_ms[e],
+                "coarse quantization brackets true time",
+            );
+        }
+        // Nominal coarse ≥ fine in ms terms per task (ceil property).
+        for e in 0..fine.p.len() {
+            prop::assert_prop(
+                coarse.p[e] as f64 * 400.0 + 1e-9 >= fine.p[e] as f64 * 50.0 - 50.0,
+                "coarse does not undercut fine by more than a slot",
+            );
+        }
+    });
+}
+
+#[test]
+fn gantt_json_roundtrips_for_all_methods() {
+    prop::check(10, |rng| {
+        let inst = random_instance(rng);
+        let s = greedy::solve(&inst).unwrap();
+        let doc = psl::sim::gantt_json(&inst, &s);
+        let parsed = psl::util::json::Json::parse(&doc.pretty()).expect("valid json");
+        prop::assert_prop(parsed.get("slot_ms").as_f64().is_some(), "slot_ms present");
+    });
+}
+
+#[test]
+fn replay_with_jitter_stays_feasible_in_expectation() {
+    // Failure injection: heavy jitter must never crash the replay engine
+    // or produce non-finite makespans.
+    prop::check(15, |rng| {
+        let scen = if rng.chance(0.5) { Scenario::S1 } else { Scenario::S2 };
+        let ms = ScenarioCfg::new(scen, Model::Vgg19, rng.range_usize(2, 10), rng.range_usize(1, 3), rng.next_u64())
+            .generate();
+        let inst = ms.quantize(550.0);
+        let s = greedy::solve(&inst).unwrap();
+        let rep = psl::sim::replay(&ms, &s, Some((rng, 0.6)));
+        prop::assert_prop(rep.makespan_ms.is_finite() && rep.makespan_ms > 0.0, "finite makespan");
+        prop::assert_prop(
+            rep.completion_ms.iter().all(|c| c.is_finite() && *c > 0.0),
+            "all clients complete under jitter",
+        );
+    });
+}
+
+#[test]
+fn memory_pressure_respected_under_tight_capacity() {
+    // Shrink helper memory towards the feasibility boundary; assignments
+    // must stay memory-feasible for every solver that returns Some.
+    prop::check(15, |rng| {
+        let mut inst = random_instance(rng);
+        let demand: f64 = inst.d.iter().sum();
+        let cap: f64 = inst.mem.iter().sum();
+        let scale = 1.05 * demand / cap;
+        if scale < 1.0 {
+            for m in inst.mem.iter_mut() {
+                *m *= scale.max(0.2);
+            }
+        }
+        let max_d = inst.d.iter().cloned().fold(0.0, f64::max);
+        let max_m = inst.mem.iter().cloned().fold(0.0, f64::max);
+        if max_m < max_d {
+            return; // generator boundary case: not repairable here
+        }
+        if let Some(g) = greedy::solve(&inst) {
+            prop::assert_prop(g.assignment.memory_ok(&inst), "greedy memory under pressure");
+        }
+        if let Some(b) = baseline::solve(&inst, rng) {
+            prop::assert_prop(b.assignment.memory_ok(&inst), "baseline memory under pressure");
+        }
+    });
+}

@@ -1,0 +1,144 @@
+//! Artifact-gated integration tests: the PJRT runtime and the SL
+//! execution driver against the real AOT artifacts (`make artifacts`).
+//! Each test skips (with a note) when artifacts/ is absent, so plain
+//! `cargo test` stays green in a fresh checkout.
+
+use psl::instance::profiles::Model;
+use psl::instance::scenario::{Scenario, ScenarioCfg};
+use psl::runtime::{Engine, Manifest, Tensor};
+use psl::slexec::{Driver, SplitModel, TrainCfg};
+use psl::solver::{admm, strategy};
+use std::sync::Arc;
+
+fn artifacts() -> Option<std::path::PathBuf> {
+    let dir = psl::runtime::artifacts_dir();
+    if dir.join("vgg_mini/manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("[skip] artifacts/ not built; run `make artifacts`");
+        None
+    }
+}
+
+#[test]
+fn manifest_loads_and_params_match_shapes() {
+    let Some(dir) = artifacts() else { return };
+    for arch in ["vgg_mini", "resnet_mini"] {
+        let m = Manifest::load(&dir, arch).unwrap();
+        assert_eq!(m.arch, arch);
+        assert_eq!(m.functions.len(), 6);
+        for part in ["p1", "p2", "p3"] {
+            let params = m.load_init_params(part).unwrap();
+            let spec = &m.params[part];
+            assert_eq!(params.len(), spec.leaves.len());
+            for (t, leaf) in params.iter().zip(&spec.leaves) {
+                assert_eq!(t.shape, leaf.shape, "{arch}/{part}");
+            }
+        }
+    }
+}
+
+#[test]
+fn part_functions_execute_and_compose() {
+    let Some(dir) = artifacts() else { return };
+    let engine = Arc::new(Engine::cpu().unwrap());
+    let model = SplitModel::load(engine, &dir, "vgg_mini").unwrap();
+    let batch = model.manifest.batch;
+    let p1 = model.manifest.load_init_params("p1").unwrap();
+    let p2 = model.manifest.load_init_params("p2").unwrap();
+    let p3 = model.manifest.load_init_params("p3").unwrap();
+
+    let mut ds = psl::data::SynthDataset::new(1, 0.35);
+    let (x, y) = ds.batch(batch);
+    let a1 = model.part1_fwd(&p1, &x).unwrap();
+    assert_eq!(a1.shape[0], batch);
+    let a2 = model.part2_fwd(&p2, &a1).unwrap();
+    let loss = model.part3_loss(&p3, &a2, &y).unwrap();
+    assert!(loss.is_finite() && loss > 0.0, "loss {loss}");
+    // Untrained 10-class model: loss ≈ ln(10) ≈ 2.30.
+    assert!((loss - 2.302).abs() < 0.8, "initial loss {loss} far from ln(10)");
+
+    let (loss2, g3, g_a2) = model.part3_bwd(&p3, &a2, &y).unwrap();
+    assert!((loss - loss2).abs() < 1e-5);
+    assert_eq!(g3.len(), p3.len());
+    assert_eq!(g_a2.shape, a2.shape);
+    let (g2, g_a1) = model.part2_bwd(&p2, &a1, &g_a2).unwrap();
+    assert_eq!(g2.len(), p2.len());
+    assert_eq!(g_a1.shape, a1.shape);
+    for (g, p) in g2.iter().zip(&p2) {
+        assert_eq!(g.shape, p.shape);
+    }
+    let g1 = model.part1_bwd(&p1, &x, &g_a1).unwrap();
+    assert_eq!(g1.len(), p1.len());
+    // Gradients flow: at least one non-zero leaf everywhere.
+    let nonzero = |ts: &[Tensor]| ts.iter().any(|t| t.as_f32().unwrap().iter().any(|v| v.abs() > 1e-12));
+    assert!(nonzero(&g1) && nonzero(&g2) && nonzero(&g3), "dead gradients");
+}
+
+#[test]
+fn sgd_on_parts_reduces_loss() {
+    let Some(dir) = artifacts() else { return };
+    let engine = Arc::new(Engine::cpu().unwrap());
+    let model = SplitModel::load(engine, &dir, "vgg_mini").unwrap();
+    let batch = model.manifest.batch;
+    let mut p1 = model.manifest.load_init_params("p1").unwrap();
+    let mut p2 = model.manifest.load_init_params("p2").unwrap();
+    let mut p3 = model.manifest.load_init_params("p3").unwrap();
+    let mut ds = psl::data::SynthDataset::new(3, 0.35);
+    let (x, y) = ds.batch(batch);
+    let mut losses = Vec::new();
+    for _ in 0..6 {
+        let a1 = model.part1_fwd(&p1, &x).unwrap();
+        let a2 = model.part2_fwd(&p2, &a1).unwrap();
+        let (loss, g3, g_a2) = model.part3_bwd(&p3, &a2, &y).unwrap();
+        losses.push(loss);
+        let (g2, g_a1) = model.part2_bwd(&p2, &a1, &g_a2).unwrap();
+        let g1 = model.part1_bwd(&p1, &x, &g_a1).unwrap();
+        let lr = 0.05;
+        for (p, g) in p1.iter_mut().zip(&g1) {
+            p.sgd_step(g, lr).unwrap();
+        }
+        for (p, g) in p2.iter_mut().zip(&g2) {
+            p.sgd_step(g, lr).unwrap();
+        }
+        for (p, g) in p3.iter_mut().zip(&g3) {
+            p.sgd_step(g, lr).unwrap();
+        }
+    }
+    assert!(
+        losses.last().unwrap() < losses.first().unwrap(),
+        "same-batch SGD must reduce loss: {losses:?}"
+    );
+}
+
+#[test]
+fn driver_trains_with_fedavg_and_schedule_order() {
+    let Some(dir) = artifacts() else { return };
+    let engine = Arc::new(Engine::cpu().unwrap());
+    let model = SplitModel::load(engine, &dir, "vgg_mini").unwrap();
+    let inst = ScenarioCfg::new(Scenario::S2, Model::Vgg19, 3, 2, 11).generate().quantize(550.0);
+    let (schedule, _) = strategy::solve(&inst, &admm::AdmmCfg::default()).unwrap();
+    let mut driver = Driver::new(model, &inst, schedule, 11).unwrap();
+    let report = driver
+        .train(&TrainCfg { batches_per_round: 3, rounds: 2, lr: 0.05, seed: 11 })
+        .unwrap();
+    assert_eq!(report.steps, 6);
+    assert!(report.loss_curve.iter().all(|l| l.is_finite()));
+    assert!(!report.measured_ms.is_empty(), "helper tasks must be measured");
+    // The trend over the run should be downward.
+    let first2 = (report.loss_curve[0] + report.loss_curve[1]) / 2.0;
+    let last2 = (report.loss_curve[4] + report.loss_curve[5]) / 2.0;
+    assert!(last2 < first2, "loss trend not downward: {:?}", report.loss_curve);
+}
+
+#[test]
+fn resnet_mini_artifacts_also_execute() {
+    let Some(dir) = artifacts() else { return };
+    let engine = Arc::new(Engine::cpu().unwrap());
+    let model = SplitModel::load(engine, &dir, "resnet_mini").unwrap();
+    let p1 = model.manifest.load_init_params("p1").unwrap();
+    let mut ds = psl::data::SynthDataset::new(5, 0.3);
+    let (x, _) = ds.batch(model.manifest.batch);
+    let a1 = model.part1_fwd(&p1, &x).unwrap();
+    assert_eq!(a1.shape[0], model.manifest.batch);
+}

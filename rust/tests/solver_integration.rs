@@ -1,0 +1,140 @@
+//! Integration tests across the solver stack: every method on shared
+//! scenario instances, cross-checked invariants (feasibility, ordering,
+//! paper observations) — no artifacts required.
+
+use psl::instance::profiles::Model;
+use psl::instance::scenario::{Scenario, ScenarioCfg};
+use psl::sim;
+use psl::solver::{admm, baseline, bwd, exact, greedy, strategy};
+use psl::util::rng::Rng;
+
+fn inst(scen: Scenario, model: Model, j: usize, i: usize, seed: u64) -> psl::instance::Instance {
+    let slot = model.profile().default_slot_ms;
+    ScenarioCfg::new(scen, model, j, i, seed).generate().quantize(slot)
+}
+
+#[test]
+fn all_methods_feasible_and_ordered_on_small_instance() {
+    // exact ≤ admm, exact ≤ greedy, and the strategy ≤ baseline.
+    let inst = inst(Scenario::S2, Model::Vgg19, 8, 2, 1);
+    let ex = exact::solve(&inst, &exact::ExactCfg { time_budget: std::time::Duration::from_secs(20), ..Default::default() });
+    let a = admm::solve(&inst, &admm::AdmmCfg::default()).unwrap().schedule;
+    let g = greedy::solve(&inst).unwrap();
+    let (s, _) = strategy::solve(&inst, &admm::AdmmCfg::default()).unwrap();
+    let b = baseline::solve(&inst, &mut Rng::seeded(5)).unwrap();
+    for (name, sched) in [("exact", &ex.schedule), ("admm", &a), ("greedy", &g), ("strategy", &s), ("baseline", &b)] {
+        assert!(sched.is_feasible(&inst), "{name}: {:?}", sched.violations(&inst));
+    }
+    assert!(ex.makespan <= a.makespan(&inst), "exact must not lose to admm");
+    assert!(ex.makespan <= g.makespan(&inst), "exact must not lose to greedy");
+    assert!(s.makespan(&inst) <= g.makespan(&inst), "strategy keeps the better tool");
+    assert!(ex.makespan as u32 >= inst.makespan_lower_bound());
+}
+
+#[test]
+fn admm_beats_baseline_on_average_scenario2() {
+    // Observation 3's direction: the optimizing methods beat random+FCFS
+    // on average in the heterogeneous scenario.
+    let mut admm_tot = 0.0;
+    let mut base_tot = 0.0;
+    let mut rng = Rng::seeded(77);
+    for seed in 0..5 {
+        let inst = inst(Scenario::S2, Model::ResNet101, 20, 5, 100 + seed);
+        let a = admm::solve(&inst, &admm::AdmmCfg::default()).unwrap().schedule.makespan(&inst) as f64;
+        admm_tot += a;
+        base_tot += baseline::solve_mean_makespan(&inst, &mut rng, 5);
+    }
+    assert!(
+        admm_tot < base_tot,
+        "ADMM ({admm_tot}) should beat baseline ({base_tot}) on average in Scenario 2"
+    );
+}
+
+#[test]
+fn helper_scaling_monotone_in_expectation() {
+    // Observation 4's direction: more helpers → shorter (or equal)
+    // makespan on average; the 1→2 jump is the largest.
+    let mean_at = |i: usize| -> f64 {
+        (0..4)
+            .map(|seed| {
+                let inst = inst(Scenario::S1, Model::ResNet101, 60, i, 200 + seed);
+                greedy::solve(&inst).unwrap().makespan(&inst) as f64
+            })
+            .sum::<f64>()
+            / 4.0
+    };
+    let m1 = mean_at(1);
+    let m2 = mean_at(2);
+    let m8 = mean_at(8);
+    assert!(m2 < m1, "second helper must help: {m1} -> {m2}");
+    assert!(m8 < m2, "more helpers keep helping: {m2} -> {m8}");
+    let first_gain = (m1 - m2) / m1;
+    assert!(first_gain > 0.2, "1→2 helper gain should be large, got {:.1}%", first_gain * 100.0);
+}
+
+#[test]
+fn optimal_bwd_improves_or_matches_fcfs_bwd() {
+    // Theorem 2's value: swapping a FCFS bwd schedule for Algorithm 2
+    // never hurts, keeping the same assignment and fwd schedule.
+    for seed in 0..6 {
+        let inst = inst(Scenario::S2, Model::Vgg19, 12, 3, 300 + seed);
+        let fcfs = greedy::solve(&inst).unwrap();
+        let improved = bwd::complete_with_optimal_bwd(&inst, fcfs.assignment.clone(), fcfs.fwd_slots.clone());
+        assert!(improved.is_feasible(&inst));
+        assert!(improved.makespan(&inst) <= fcfs.makespan(&inst));
+    }
+}
+
+#[test]
+fn replay_consistent_across_methods() {
+    let model = Model::ResNet101;
+    let ms = ScenarioCfg::new(Scenario::S2, model, 15, 4, 9).generate();
+    let slotted = ms.quantize(180.0);
+    for (name, sched) in [
+        ("admm", admm::solve(&slotted, &admm::AdmmCfg::default()).unwrap().schedule),
+        ("greedy", greedy::solve(&slotted).unwrap()),
+    ] {
+        let rep = sim::replay(&ms, &sched, None);
+        let nominal = sched.makespan(&slotted) as f64 * slotted.slot_ms;
+        assert!(rep.makespan_ms <= nominal + 1e-6, "{name}: replay exceeds nominal");
+        assert!(rep.makespan_ms > 0.0);
+        assert_eq!(rep.completion_ms.len(), 15);
+    }
+}
+
+#[test]
+fn exact_is_anytime_and_never_worse_than_incumbents() {
+    let inst = inst(Scenario::S2, Model::ResNet101, 14, 4, 4);
+    let quick = exact::solve(
+        &inst,
+        &exact::ExactCfg { node_cap: 200, helper_node_cap: 2_000, time_budget: std::time::Duration::from_secs(3) },
+    );
+    let a = admm::solve(&inst, &admm::AdmmCfg::default()).unwrap().schedule.makespan(&inst);
+    let g = greedy::solve(&inst).unwrap().makespan(&inst);
+    assert!(quick.makespan <= a.min(g), "anytime exact seeds from the heuristics");
+    assert!(quick.schedule.is_feasible(&inst));
+}
+
+#[test]
+fn scenario_strategy_picks_match_paper_rules() {
+    let huge = inst(Scenario::S1, Model::ResNet101, 120, 10, 1);
+    assert_eq!(strategy::pick(&huge), strategy::Method::BalancedGreedy);
+    let medium_het = inst(Scenario::S2, Model::Vgg19, 20, 5, 1);
+    assert_eq!(strategy::pick(&medium_het), strategy::Method::Admm);
+}
+
+#[test]
+fn switch_cost_extension_consistent() {
+    let slot = 180.0;
+    let inst = ScenarioCfg::new(Scenario::S2, Model::ResNet101, 10, 3, 6)
+        .with_switch_cost(2.0 * slot)
+        .generate()
+        .quantize(slot);
+    let res = admm::solve(&inst, &admm::AdmmCfg::default()).unwrap();
+    let plain = res.schedule.makespan(&inst);
+    let adjusted = res.schedule.makespan_with_switch_cost(&inst);
+    assert!(adjusted >= plain);
+    // With zero preemptions FCFS pays only the per-task start/stop edges.
+    let g = greedy::solve(&inst).unwrap();
+    assert_eq!(g.preemptions(), 0);
+}
