@@ -1,7 +1,10 @@
 //! Benchmark substrate used by the `rust/benches/*` targets (`cargo
 //! bench` with `harness = false`) — see DESIGN.md §4 for the table/figure
-//! mapping.
+//! mapping — plus the multi-threaded scenario × solver sweep runner
+//! behind `psl sweep` ([`sweep`]).
 
 pub mod harness;
+pub mod sweep;
 
 pub use harness::{fmt_s, time_fn, Report};
+pub use sweep::{SweepCfg, SweepRow};

@@ -1,0 +1,306 @@
+//! Multi-threaded scenario × solver sweep runner (`psl sweep`).
+//!
+//! Runs the full grid
+//! `scenarios × models × (J, I) sizes × seeds × methods`
+//! across a std::thread fan-out ([`crate::exec::pool`]) and merges the
+//! per-cell results back into deterministic grid order. Every cell is
+//! self-contained: its instance is regenerated from the `(scenario,
+//! model, J, I, seed)` tuple and any solver randomness is seeded from a
+//! per-cell hash of the cell coordinates — so the output is **byte
+//! identical regardless of thread count or scheduling order**.
+//!
+//! Rows deliberately exclude wall-clock timings (those go to stdout, not
+//! the JSON) to keep the artifact reproducible; diff two sweep JSONs to
+//! catch solver regressions.
+
+use crate::exec::pool;
+use crate::instance::profiles::Model;
+use crate::instance::scenario::{Scenario, ScenarioCfg};
+use crate::solver::{admm, baseline, greedy, strategy};
+use crate::util::json::Json;
+use crate::util::rng::{fnv64 as fnv, Rng};
+
+/// Sweep grid configuration.
+#[derive(Clone, Debug)]
+pub struct SweepCfg {
+    pub scenarios: Vec<Scenario>,
+    pub models: Vec<Model>,
+    /// (n_clients, n_helpers) cells.
+    pub sizes: Vec<(usize, usize)>,
+    pub seeds: Vec<u64>,
+    /// Solver names: "admm" | "greedy" | "baseline" | "strategy".
+    pub methods: Vec<String>,
+    /// None → each model's default |S_t|.
+    pub slot_ms: Option<f64>,
+    pub threads: usize,
+}
+
+impl Default for SweepCfg {
+    fn default() -> Self {
+        SweepCfg {
+            scenarios: vec![
+                Scenario::S1,
+                Scenario::S2,
+                Scenario::S3Clustered,
+                Scenario::S4StragglerTail,
+            ],
+            models: vec![Model::ResNet101],
+            sizes: vec![(10, 2), (20, 5)],
+            seeds: vec![42],
+            methods: vec!["admm".to_string(), "greedy".to_string()],
+            slot_ms: None,
+            threads: pool::default_workers(),
+        }
+    }
+}
+
+/// One grid cell (scenario, model, size, seed, method).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Cell {
+    pub scenario: Scenario,
+    pub model: Model,
+    pub n_clients: usize,
+    pub n_helpers: usize,
+    pub seed: u64,
+    pub method: String,
+}
+
+/// One deterministic result row.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SweepRow {
+    pub scenario: &'static str,
+    pub model: &'static str,
+    pub n_clients: usize,
+    pub n_helpers: usize,
+    pub seed: u64,
+    pub slot_ms: f64,
+    pub method: String,
+    /// The concrete method the strategy routed to (when method == "strategy").
+    pub picked: Option<&'static str>,
+    pub horizon: u32,
+    pub lower_bound: u32,
+    /// None when the solver found no feasible schedule.
+    pub makespan_slots: Option<u32>,
+    pub makespan_ms: Option<f64>,
+    pub preemptions: Option<u32>,
+    pub heterogeneity: f64,
+    pub placement_flexibility: f64,
+    pub tail_ratio: f64,
+}
+
+/// Enumerate the grid in canonical (deterministic) order:
+/// scenario → model → size → seed → method.
+pub fn cells(cfg: &SweepCfg) -> Vec<Cell> {
+    let mut out = Vec::new();
+    for &scenario in &cfg.scenarios {
+        for &model in &cfg.models {
+            for &(j, i) in &cfg.sizes {
+                for &seed in &cfg.seeds {
+                    for method in &cfg.methods {
+                        out.push(Cell {
+                            scenario,
+                            model,
+                            n_clients: j,
+                            n_helpers: i,
+                            seed,
+                            method: method.clone(),
+                        });
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+/// The cell's private solver-randomness seed: a pure function of the cell
+/// coordinates, never of execution order. (Instance generation already
+/// hashes scenario/model itself; this stream only feeds randomized
+/// solvers like the FCFS baseline.)
+pub fn cell_seed(c: &Cell) -> u64 {
+    c.seed
+        ^ fnv(c.scenario.name())
+        ^ fnv(c.model.name()).rotate_left(13)
+        ^ fnv(&c.method).rotate_left(29)
+        ^ (c.n_clients as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15)
+        ^ (c.n_helpers as u64).wrapping_mul(0xC2B2_AE3D_27D4_EB4F)
+}
+
+/// Solve one cell. Panics only on unknown method names (validated by the
+/// CLI before fan-out).
+pub fn run_cell(c: &Cell, slot_override: Option<f64>) -> SweepRow {
+    let ms = ScenarioCfg::new(c.scenario, c.model, c.n_clients, c.n_helpers, c.seed).generate();
+    let slot_ms = slot_override.unwrap_or(c.model.profile().default_slot_ms);
+    let inst = ms.quantize(slot_ms);
+    let sig = strategy::signals(&inst);
+
+    let mut picked: Option<&'static str> = None;
+    let schedule = match c.method.as_str() {
+        "admm" => admm::solve(&inst, &admm::AdmmCfg::default()).map(|r| r.schedule),
+        "greedy" => greedy::solve(&inst),
+        "baseline" => baseline::solve(&inst, &mut Rng::seeded(cell_seed(c))),
+        "strategy" => strategy::solve_with_signals(&inst, &admm::AdmmCfg::default(), &sig).map(|(s, m)| {
+            picked = Some(m.name());
+            s
+        }),
+        other => panic!("unknown sweep method {other:?} (admm|greedy|baseline|strategy)"),
+    };
+
+    let makespan_slots = schedule.as_ref().map(|s| s.makespan(&inst));
+    SweepRow {
+        scenario: c.scenario.name(),
+        model: c.model.name(),
+        n_clients: c.n_clients,
+        n_helpers: c.n_helpers,
+        seed: c.seed,
+        slot_ms,
+        method: c.method.clone(),
+        picked,
+        horizon: inst.horizon(),
+        lower_bound: inst.makespan_lower_bound(),
+        makespan_slots,
+        makespan_ms: makespan_slots.map(|m| m as f64 * slot_ms),
+        preemptions: schedule.as_ref().map(|s| s.preemptions()),
+        heterogeneity: sig.heterogeneity,
+        placement_flexibility: sig.placement_flexibility,
+        tail_ratio: sig.tail_ratio,
+    }
+}
+
+/// Run the whole grid across `cfg.threads` workers. The worker pool
+/// returns results in job order, so the merged output is the canonical
+/// grid order no matter how cells were scheduled.
+pub fn run(cfg: &SweepCfg) -> Vec<SweepRow> {
+    let grid = cells(cfg);
+    let slot = cfg.slot_ms;
+    let jobs: Vec<Box<dyn FnOnce() -> SweepRow + Send>> = grid
+        .into_iter()
+        .map(|c| Box::new(move || run_cell(&c, slot)) as Box<dyn FnOnce() -> SweepRow + Send>)
+        .collect();
+    pool::run_parallel(cfg.threads, jobs)
+}
+
+fn opt_u32(v: Option<u32>) -> Json {
+    v.map(|x| Json::Num(x as f64)).unwrap_or(Json::Null)
+}
+
+/// Serialize rows to the sweep JSON document (deterministic: BTreeMap
+/// keys, no timestamps, no wall-clock fields).
+pub fn rows_to_json(rows: &[SweepRow]) -> Json {
+    Json::obj(vec![
+        ("kind", Json::Str("psl-sweep".to_string())),
+        (
+            "rows",
+            Json::Arr(
+                rows.iter()
+                    .map(|r| {
+                        Json::obj(vec![
+                            ("scenario", Json::Str(r.scenario.to_string())),
+                            ("model", Json::Str(r.model.to_string())),
+                            ("n_clients", Json::Num(r.n_clients as f64)),
+                            ("n_helpers", Json::Num(r.n_helpers as f64)),
+                            // String, not Num: Json numbers are f64 and would
+                            // silently round seeds above 2^53 — the one field
+                            // that must replay exactly.
+                            ("seed", Json::Str(r.seed.to_string())),
+                            ("slot_ms", Json::Num(r.slot_ms)),
+                            ("method", Json::Str(r.method.clone())),
+                            (
+                                "picked",
+                                r.picked.map(|p| Json::Str(p.to_string())).unwrap_or(Json::Null),
+                            ),
+                            ("horizon", Json::Num(r.horizon as f64)),
+                            ("lower_bound", Json::Num(r.lower_bound as f64)),
+                            ("makespan_slots", opt_u32(r.makespan_slots)),
+                            (
+                                "makespan_ms",
+                                r.makespan_ms.map(Json::Num).unwrap_or(Json::Null),
+                            ),
+                            ("preemptions", opt_u32(r.preemptions)),
+                            ("heterogeneity", Json::Num(r.heterogeneity)),
+                            ("placement_flexibility", Json::Num(r.placement_flexibility)),
+                            ("tail_ratio", Json::Num(r.tail_ratio)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ])
+}
+
+/// Persist under `target/psl-bench/<name>.json` (same location the bench
+/// harness uses). Returns the path.
+pub fn save(rows: &[SweepRow], name: &str) -> std::io::Result<std::path::PathBuf> {
+    let dir = std::path::Path::new("target/psl-bench");
+    std::fs::create_dir_all(dir)?;
+    let path = dir.join(format!("{name}.json"));
+    std::fs::write(&path, rows_to_json(rows).pretty())?;
+    Ok(path)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_cfg(threads: usize) -> SweepCfg {
+        SweepCfg {
+            scenarios: vec![Scenario::S1, Scenario::S6MegaHomogeneous],
+            models: vec![Model::Vgg19],
+            sizes: vec![(4, 2)],
+            seeds: vec![11],
+            methods: vec!["greedy".to_string(), "baseline".to_string()],
+            slot_ms: Some(550.0),
+            threads,
+        }
+    }
+
+    #[test]
+    fn grid_enumeration_order() {
+        let cfg = tiny_cfg(1);
+        let cs = cells(&cfg);
+        assert_eq!(cs.len(), 4);
+        assert_eq!(cs[0].scenario, Scenario::S1);
+        assert_eq!(cs[0].method, "greedy");
+        assert_eq!(cs[1].method, "baseline");
+        assert_eq!(cs[2].scenario, Scenario::S6MegaHomogeneous);
+    }
+
+    #[test]
+    fn cell_seed_depends_on_every_coordinate() {
+        let cs = cells(&tiny_cfg(1));
+        let seeds: Vec<u64> = cs.iter().map(cell_seed).collect();
+        for a in 0..seeds.len() {
+            for b in (a + 1)..seeds.len() {
+                assert_ne!(seeds[a], seeds[b], "cells {a} and {b} share a seed");
+            }
+        }
+        let mut moved = cs[0].clone();
+        moved.n_clients += 1;
+        assert_ne!(cell_seed(&cs[0]), cell_seed(&moved));
+    }
+
+    #[test]
+    fn single_thread_matches_multi_thread() {
+        let a = run(&tiny_cfg(1));
+        let b = run(&tiny_cfg(4));
+        assert_eq!(a, b);
+        assert_eq!(rows_to_json(&a).pretty(), rows_to_json(&b).pretty());
+    }
+
+    #[test]
+    fn strategy_rows_record_pick() {
+        let cfg = SweepCfg {
+            scenarios: vec![Scenario::S1],
+            models: vec![Model::Vgg19],
+            sizes: vec![(4, 2)],
+            seeds: vec![3],
+            methods: vec!["strategy".to_string()],
+            slot_ms: Some(550.0),
+            threads: 1,
+        };
+        let rows = run(&cfg);
+        assert_eq!(rows.len(), 1);
+        assert!(rows[0].picked.is_some());
+        assert!(rows[0].makespan_slots.is_some());
+    }
+}

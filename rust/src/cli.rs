@@ -6,8 +6,9 @@
 //!   psl solve <scenario args> [...]   solve + report (all methods)
 //!   psl train <fleet args>            end-to-end split training over PJRT
 //!   psl sweep-slots <scenario args>   Fig-6-style slot-length sweep
+//!   psl sweep <grid args>             multi-threaded scenario × solver grid
 //!
-//! Common scenario args: --scenario 1|2  --model resnet101|vgg19  -j N
+//! Common scenario args: --scenario 1..6  --model resnet101|vgg19  -j N
 //! -i N  --seed S  --slot-ms X. Run `psl help` for the full list.
 
 use std::collections::HashMap;
@@ -85,16 +86,36 @@ COMMANDS
                 driven by an optimized schedule (needs `make artifacts`).
   sweep-slots   Quantize the same system at several slot lengths and
                 compare nominal vs realized makespan (Fig 6 logic).
+  sweep         Run the full scenario × solver grid across worker threads
+                and save deterministic JSON under target/psl-bench/.
   help          This text.
 
 SCENARIO FLAGS (gen/solve/sweep-slots)
-  --scenario 1|2        heterogeneity level            [default 1]
+  --scenario NAME       scenario family (see below)    [default 1]
   --model resnet101|vgg19                              [default resnet101]
   -j N                  number of clients              [default 10]
   -i N                  number of helpers              [default 2]
   --seed S              RNG seed                       [default 42]
   --slot-ms X           slot length |S_t| in ms        [default: model's]
   --switch-cost MS      per-preemption cost (§VI)      [default 0]
+
+SCENARIO FAMILIES
+  1|scenario1           paper §VII low heterogeneity
+  2|scenario2           paper §VII high heterogeneity
+  3|s3-clustered        clustered device tiers, cellular-like links
+  4|s4-straggler-tail   heavy straggler tail + client churn
+  5|s5-memory-starved   tight varied helper memory, random cuts
+  6|s6-mega-homogeneous huge identical fleet, uniform links
+
+SWEEP FLAGS
+  --scenarios LIST      comma list of families         [default 1,2,3,4]
+  --models LIST         comma list of models           [default resnet101]
+  --sizes LIST          comma list of JxI cells        [default 10x2,20x5]
+  --seeds LIST          comma list of seeds            [default 42]
+  --methods LIST        admm|greedy|baseline|strategy  [default admm,greedy]
+  --slot-ms X           override every model's |S_t|
+  --threads N           worker threads                 [default: all cores]
+  --out NAME            output name under target/psl-bench [default sweep]
 
 SOLVE FLAGS
   --method admm|greedy|baseline|exact|strategy|all     [default all]

@@ -132,6 +132,39 @@ impl InstanceMs {
         Ok(inst)
     }
 
+    /// Project the instance onto a subset of clients (churn rounds,
+    /// what-if analyses). `keep` holds original client indices, in the
+    /// order the projected instance should use. Helpers are unchanged.
+    pub fn restrict_clients(&self, keep: &[usize]) -> InstanceMs {
+        assert!(!keep.is_empty(), "restriction must keep at least one client");
+        assert!(keep.iter().all(|&j| j < self.n_clients), "client index out of range");
+        let pick = |v: &Vec<f64>| -> Vec<f64> {
+            let mut out = Vec::with_capacity(self.n_helpers * keep.len());
+            for i in 0..self.n_helpers {
+                for &j in keep {
+                    out.push(v[i * self.n_clients + j]);
+                }
+            }
+            out
+        };
+        let inst = InstanceMs {
+            n_clients: keep.len(),
+            n_helpers: self.n_helpers,
+            r_ms: pick(&self.r_ms),
+            l_ms: pick(&self.l_ms),
+            lp_ms: pick(&self.lp_ms),
+            rp_ms: pick(&self.rp_ms),
+            p_ms: pick(&self.p_ms),
+            pp_ms: pick(&self.pp_ms),
+            d_gb: keep.iter().map(|&j| self.d_gb[j]).collect(),
+            mem_gb: self.mem_gb.clone(),
+            mu_ms: self.mu_ms.clone(),
+            label: format!("{} [J'={}]", self.label, keep.len()),
+        };
+        inst.validate().expect("restriction preserves validity");
+        inst
+    }
+
     /// Structural sanity: vector lengths, positivity, memory feasibility.
     pub fn validate(&self) -> anyhow::Result<()> {
         let e = self.n_clients * self.n_helpers;
@@ -290,6 +323,28 @@ mod tests {
         let mut ms = small();
         ms.p_ms.pop();
         assert!(ms.validate().is_err());
+    }
+
+    #[test]
+    fn restrict_clients_projects_edges() {
+        let ms = small(); // 6 clients, 2 helpers
+        let sub = ms.restrict_clients(&[0, 2, 5]);
+        assert_eq!(sub.n_clients, 3);
+        assert_eq!(sub.n_helpers, 2);
+        for i in 0..2 {
+            for (jj, &j) in [0usize, 2, 5].iter().enumerate() {
+                assert_eq!(sub.p_ms[i * 3 + jj], ms.p_ms[i * 6 + j]);
+                assert_eq!(sub.r_ms[i * 3 + jj], ms.r_ms[i * 6 + j]);
+            }
+        }
+        assert_eq!(sub.d_gb, vec![ms.d_gb[0], ms.d_gb[2], ms.d_gb[5]]);
+        assert_eq!(sub.mem_gb, ms.mem_gb);
+    }
+
+    #[test]
+    #[should_panic]
+    fn restrict_clients_rejects_empty() {
+        small().restrict_clients(&[]);
     }
 
     #[test]

@@ -36,6 +36,18 @@ impl LinkModel {
         LinkModel { median_mbps: 10.8, sigma_log: 0.8, min_mbps: 1.0, max_mbps: 100.0, overhead_ms: 20.0 }
     }
 
+    /// Cellular-like regime (s3-clustered): lower median rate, moderate
+    /// spread, and a noticeably longer per-transfer RTT overhead.
+    pub fn cellular() -> LinkModel {
+        LinkModel { median_mbps: 6.0, sigma_log: 0.55, min_mbps: 0.5, max_mbps: 30.0, overhead_ms: 45.0 }
+    }
+
+    /// Every link at exactly `mbps` (σ = 0): the homogeneous limit used by
+    /// s6-mega-homogeneous.
+    pub fn uniform(mbps: f64) -> LinkModel {
+        LinkModel { median_mbps: mbps, sigma_log: 0.0, min_mbps: mbps, max_mbps: mbps, overhead_ms: 20.0 }
+    }
+
     /// Draw an I×J matrix of symmetric link rates (Mbps), row-major by
     /// helper: `rates[i * n_clients + j]`.
     pub fn draw_rates(&self, rng: &mut Rng, n_helpers: usize, n_clients: usize) -> Vec<f64> {
@@ -91,6 +103,23 @@ mod tests {
         let s1 = draw(&LinkModel::france_q4_2016(), &mut rng1);
         let s2 = draw(&LinkModel::heterogeneous(), &mut rng2);
         assert!(s2 > s1);
+    }
+
+    #[test]
+    fn uniform_links_have_zero_spread() {
+        let lm = LinkModel::uniform(12.0);
+        let mut rng = Rng::seeded(9);
+        for _ in 0..200 {
+            assert!((lm.draw_rate(&mut rng) - 12.0).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn cellular_slower_with_higher_overhead_than_france() {
+        let cell = LinkModel::cellular();
+        let fr = LinkModel::france_q4_2016();
+        assert!(cell.median_mbps < fr.median_mbps);
+        assert!(cell.overhead_ms > fr.overhead_ms);
     }
 
     #[test]

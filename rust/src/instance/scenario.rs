@@ -1,5 +1,7 @@
-//! Scenario generators reproducing the paper's two evaluation settings
-//! (§VII "Setup"):
+//! Composable scenario generation for the parallel-SL system.
+//!
+//! The paper's two evaluation settings (§VII "Setup") are kept as named
+//! presets of a composable [`ScenarioSpec`]:
 //!
 //! * **Scenario 1 (low heterogeneity)** — clients and helpers are drawn
 //!   uniformly from the testbed's device types (Table I); memory = RAM;
@@ -10,41 +12,403 @@
 //!   (upper-bounded by RAM, with a few very-low-memory helpers), clients
 //!   use *randomly selected* cut layers, and links have a wider spread.
 //!
+//! A spec composes orthogonal axes — device-mix distribution
+//! ([`DeviceMix`]), per-entity memory model ([`MemoryModel`]), link regime
+//! ([`LinkRegime`]), cut-layer policy ([`CutPolicy`]), delay jitter and a
+//! client-churn knob — so new workloads are one constructor away. Four
+//! additional named families ship out of the box:
+//!
+//! * **s3-clustered** — clustered device tiers (a fleet of a few hardware
+//!   generations) over cellular-like links;
+//! * **s4-straggler-tail** — a mostly-uniform fleet with a heavy straggler
+//!   tail and nonzero client churn (the MP-SL / wireless-SL regime);
+//! * **s5-memory-starved** — random cuts + helpers with tight, varied
+//!   memory: assignment feasibility is the binding constraint;
+//! * **s6-mega-homogeneous** — a huge identical fleet over uniform links:
+//!   the balanced-greedy end of the §VII strategy rule.
+//!
 //! Each generated instance is deterministic in `(scenario, model, J, I,
-//! seed)` — every experiment records this tuple.
+//! seed)` — every experiment records this tuple. The S1/S2 presets draw
+//! from the RNG in exactly the seed generator's order, so historical
+//! tuples reproduce byte-identical instances.
 
 use super::network::LinkModel;
-use super::profiles::{Device, Model};
+use super::profiles::{Device, Model, ModelProfile};
 use super::InstanceMs;
-use crate::util::rng::Rng;
+use crate::util::rng::{fnv64 as fnv, Rng};
 
-/// Scenario identifier (paper §VII).
+/// Named scenario family (the paper's §VII settings plus the grown ones).
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum Scenario {
     S1,
     S2,
+    S3Clustered,
+    S4StragglerTail,
+    S5MemoryStarved,
+    S6MegaHomogeneous,
 }
 
 impl Scenario {
+    /// Every named family, in canonical order (sweep grids iterate this).
+    pub const ALL: [Scenario; 6] = [
+        Scenario::S1,
+        Scenario::S2,
+        Scenario::S3Clustered,
+        Scenario::S4StragglerTail,
+        Scenario::S5MemoryStarved,
+        Scenario::S6MegaHomogeneous,
+    ];
+
     pub fn name(self) -> &'static str {
         match self {
             Scenario::S1 => "scenario1",
             Scenario::S2 => "scenario2",
+            Scenario::S3Clustered => "s3-clustered",
+            Scenario::S4StragglerTail => "s4-straggler-tail",
+            Scenario::S5MemoryStarved => "s5-memory-starved",
+            Scenario::S6MegaHomogeneous => "s6-mega-homogeneous",
         }
     }
+
     pub fn parse(s: &str) -> Option<Scenario> {
         match s.to_ascii_lowercase().as_str() {
             "1" | "s1" | "scenario1" => Some(Scenario::S1),
             "2" | "s2" | "scenario2" => Some(Scenario::S2),
+            "3" | "s3" | "s3-clustered" | "clustered" => Some(Scenario::S3Clustered),
+            "4" | "s4" | "s4-straggler-tail" | "straggler-tail" | "stragglers" => Some(Scenario::S4StragglerTail),
+            "5" | "s5" | "s5-memory-starved" | "memory-starved" => Some(Scenario::S5MemoryStarved),
+            "6" | "s6" | "s6-mega-homogeneous" | "mega-homogeneous" => Some(Scenario::S6MegaHomogeneous),
             _ => None,
+        }
+    }
+
+    /// The composable spec behind this named family.
+    pub fn spec(self) -> ScenarioSpec {
+        match self {
+            Scenario::S1 => ScenarioSpec::s1(),
+            Scenario::S2 => ScenarioSpec::s2(),
+            Scenario::S3Clustered => ScenarioSpec::s3_clustered(),
+            Scenario::S4StragglerTail => ScenarioSpec::s4_straggler_tail(),
+            Scenario::S5MemoryStarved => ScenarioSpec::s5_memory_starved(),
+            Scenario::S6MegaHomogeneous => ScenarioSpec::s6_mega_homogeneous(),
         }
     }
 }
 
-/// Generator configuration.
+/// How entity speeds (whole-model batch times) are drawn from a device
+/// pool. Each variant documents its RNG draw count per entity — presets
+/// must keep the seed generator's draw order.
+#[derive(Clone, Debug, PartialEq)]
+pub enum DeviceMix {
+    /// Uniform draw from the concrete pool (Scenario 1). One draw/entity.
+    Pool,
+    /// Log-space interpolation across the pool's speed continuum, widened
+    /// by `widen` on both ends (Scenario 2). One draw/entity.
+    LogInterp { widen: f64 },
+    /// Clustered hardware tiers along the pool's log-speed continuum:
+    /// a tier is picked by `weights`, centered at `centers[t]` (fraction
+    /// of the log range, 0 = fastest end), with lognormal spread
+    /// `sigma_log` inside the tier. `weights.len() == centers.len()`.
+    Tiers { weights: Vec<f64>, centers: Vec<f64>, sigma_log: f64 },
+    /// Uniform pool draw, but with probability `tail_frac` the entity is a
+    /// straggler running `slow_factor`× slower (heavy right tail).
+    StragglerTail { tail_frac: f64, slow_factor: f64 },
+    /// Every entity is the same pool device (index into the pool); no
+    /// draws — the fully homogeneous limit.
+    Fixed { index: usize },
+}
+
+/// (ln(min/widen), ln(max·widen)) over the pool's batch times.
+fn log_bounds(pool: &[Device], model: Model, widen: f64) -> (f64, f64) {
+    let times: Vec<f64> = pool.iter().map(|d| d.batch_ms(model)).collect();
+    let lo = (times.iter().cloned().fold(f64::MAX, f64::min) / widen).ln();
+    let hi = (times.iter().cloned().fold(0.0f64, f64::max) * widen).ln();
+    (lo, hi)
+}
+
+impl DeviceMix {
+    /// Draw one entity's whole-model batch time (ms).
+    pub fn draw_batch_ms(&self, rng: &mut Rng, pool: &[Device], model: Model) -> f64 {
+        match self {
+            DeviceMix::Pool => rng.choice(pool).batch_ms(model),
+            DeviceMix::LogInterp { widen } => {
+                let (lo, hi) = log_bounds(pool, model, *widen);
+                rng.range_f64(lo, hi).exp()
+            }
+            DeviceMix::Tiers { weights, centers, sigma_log } => {
+                debug_assert_eq!(weights.len(), centers.len(), "tier tables must align");
+                let (lo, hi) = log_bounds(pool, model, 1.0);
+                let t = rng.weighted_choice(weights);
+                let center = lo + centers[t].clamp(0.0, 1.0) * (hi - lo);
+                (center + rng.normal(0.0, *sigma_log)).exp()
+            }
+            DeviceMix::StragglerTail { tail_frac, slow_factor } => {
+                let base = rng.choice(pool).batch_ms(model);
+                if rng.chance(*tail_frac) {
+                    base * slow_factor
+                } else {
+                    base
+                }
+            }
+            DeviceMix::Fixed { index } => pool[index % pool.len()].batch_ms(model),
+        }
+    }
+}
+
+/// Per-client cut-layer policy (σ1, σ2).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum CutPolicy {
+    /// The model's default cuts for every client (Scenario 1); no draws.
+    Default,
+    /// Per-client random cuts, σ1 early / σ2 late (Scenario 2); two
+    /// draws/client: σ1 early enough that part-1 stays cheap, σ2 near the
+    /// end but leaving a real part-3.
+    RandomWide,
+    /// The same explicit cuts for every client; no draws.
+    Fixed(usize, usize),
+}
+
+impl CutPolicy {
+    fn draw(&self, rng: &mut Rng, prof: &ModelProfile) -> (usize, usize) {
+        match *self {
+            CutPolicy::Default => prof.default_cuts,
+            CutPolicy::RandomWide => {
+                let n_layers = prof.n_layers();
+                let s1 = rng.range_usize(2, 5.min(n_layers / 3));
+                let hi = n_layers - 2;
+                let lo = (n_layers * 2 / 3).max(s1 + 2).min(hi);
+                let s2 = rng.range_usize(lo, hi);
+                (s1, s2)
+            }
+            CutPolicy::Fixed(a, b) => (a, b),
+        }
+    }
+}
+
+/// Per-helper memory-capacity model (as a function of the backing
+/// device's RAM).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum MemoryModel {
+    /// Capacity = the device's full RAM (Scenario 1); no draws.
+    FullRam,
+    /// Uniform in [lo·RAM, hi·RAM] (Scenario 2 uses lo=0.15, hi=1.0:
+    /// "can vary from device to device, upper-bounded by RAM"); one
+    /// draw/helper.
+    UniformFraction { lo: f64, hi: f64 },
+}
+
+impl MemoryModel {
+    fn draw(&self, rng: &mut Rng, ram_gb: f64) -> f64 {
+        match *self {
+            MemoryModel::FullRam => ram_gb,
+            MemoryModel::UniformFraction { lo, hi } => rng.range_f64(lo * ram_gb, hi * ram_gb),
+        }
+    }
+}
+
+/// Link-rate regime for the client↔helper bipartite network.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum LinkRegime {
+    /// Akamai State-of-the-Internet France Q4'16 (Scenario 1).
+    AkamaiFrance,
+    /// Wider spread with a slower tail (Scenario 2).
+    WideSpread,
+    /// Cellular-like: lower median, longer RTT overhead.
+    CellularLike,
+    /// Every link at exactly `mbps` (homogeneous limit).
+    UniformFixed { mbps: f64 },
+}
+
+impl LinkRegime {
+    pub fn model(self) -> LinkModel {
+        match self {
+            LinkRegime::AkamaiFrance => LinkModel::france_q4_2016(),
+            LinkRegime::WideSpread => LinkModel::heterogeneous(),
+            LinkRegime::CellularLike => LinkModel::cellular(),
+            LinkRegime::UniformFixed { mbps } => LinkModel::uniform(mbps),
+        }
+    }
+}
+
+/// A composable scenario: who the devices are, how much memory helpers
+/// have, what the links look like, where the cuts go, how noisy the
+/// delays are, and how flaky the clients are.
+#[derive(Clone, Debug)]
+pub struct ScenarioSpec {
+    /// Family name; mixed into the RNG seed and recorded in every
+    /// instance label (presets keep the seed generator's names so
+    /// historical tuples reproduce).
+    pub name: String,
+    pub client_mix: DeviceMix,
+    pub helper_mix: DeviceMix,
+    pub cut_policy: CutPolicy,
+    pub memory: MemoryModel,
+    pub link: LinkRegime,
+    /// Multiplicative jitter (lognormal σ) applied to every profiled time.
+    pub jitter_sigma: f64,
+    /// Per-round probability that a client drops out (consumed by
+    /// [`ScenarioCfg::generate_rounds`]; `generate` ignores it).
+    pub churn: f64,
+    /// When true, memory repair additionally guarantees *wedge-free
+    /// sequential packing*: total capacity ≥ total demand + I·max_d, which
+    /// makes **any** sequential feasible-choice assignment (balanced
+    /// greedy, the random baseline, ADMM's y-subproblem) succeed
+    /// unconditionally. The legacy presets keep the seed generator's
+    /// weaker aggregate-slack repair so historical `(scenario, model, J,
+    /// I, seed)` tuples stay byte-identical.
+    pub packable: bool,
+}
+
+impl ScenarioSpec {
+    /// Paper Scenario 1 (low heterogeneity).
+    pub fn s1() -> ScenarioSpec {
+        ScenarioSpec {
+            name: "scenario1".to_string(),
+            client_mix: DeviceMix::Pool,
+            helper_mix: DeviceMix::Pool,
+            cut_policy: CutPolicy::Default,
+            memory: MemoryModel::FullRam,
+            link: LinkRegime::AkamaiFrance,
+            jitter_sigma: 0.08,
+            churn: 0.0,
+            packable: false,
+        }
+    }
+
+    /// Paper Scenario 2 (high heterogeneity). The helper pool (VM, M1)
+    /// spans a narrow 2–3.6 s band, so helper speeds widen the continuum
+    /// by 2× on both ends — S2 must be *more* heterogeneous than S1's two
+    /// fixed helper types (§VII explicitly has "a few helpers with very
+    /// limited" capabilities).
+    pub fn s2() -> ScenarioSpec {
+        ScenarioSpec {
+            name: "scenario2".to_string(),
+            client_mix: DeviceMix::LogInterp { widen: 1.0 },
+            helper_mix: DeviceMix::LogInterp { widen: 2.0 },
+            cut_policy: CutPolicy::RandomWide,
+            memory: MemoryModel::UniformFraction { lo: 0.15, hi: 1.0 },
+            link: LinkRegime::WideSpread,
+            jitter_sigma: 0.15,
+            churn: 0.0,
+            packable: false,
+        }
+    }
+
+    /// Clustered hardware generations over cellular-like links: half the
+    /// fleet is slow, a third mid-range, a sixth fast.
+    pub fn s3_clustered() -> ScenarioSpec {
+        ScenarioSpec {
+            name: "s3-clustered".to_string(),
+            client_mix: DeviceMix::Tiers {
+                weights: vec![0.5, 0.35, 0.15],
+                centers: vec![0.85, 0.5, 0.1],
+                sigma_log: 0.06,
+            },
+            helper_mix: DeviceMix::Tiers {
+                weights: vec![0.6, 0.4],
+                centers: vec![0.3, 0.8],
+                sigma_log: 0.05,
+            },
+            cut_policy: CutPolicy::Default,
+            memory: MemoryModel::FullRam,
+            link: LinkRegime::CellularLike,
+            jitter_sigma: 0.10,
+            churn: 0.0,
+            packable: true,
+        }
+    }
+
+    /// Mostly-uniform fleet with a heavy straggler tail and client churn.
+    pub fn s4_straggler_tail() -> ScenarioSpec {
+        ScenarioSpec {
+            name: "s4-straggler-tail".to_string(),
+            client_mix: DeviceMix::StragglerTail { tail_frac: 0.12, slow_factor: 8.0 },
+            helper_mix: DeviceMix::StragglerTail { tail_frac: 0.08, slow_factor: 4.0 },
+            cut_policy: CutPolicy::Default,
+            memory: MemoryModel::FullRam,
+            link: LinkRegime::AkamaiFrance,
+            jitter_sigma: 0.10,
+            churn: 0.15,
+            packable: true,
+        }
+    }
+
+    /// Tight, varied helper memory with per-client random cuts: the
+    /// assignment-feasibility stress family.
+    pub fn s5_memory_starved() -> ScenarioSpec {
+        ScenarioSpec {
+            name: "s5-memory-starved".to_string(),
+            client_mix: DeviceMix::Pool,
+            helper_mix: DeviceMix::Pool,
+            cut_policy: CutPolicy::RandomWide,
+            memory: MemoryModel::UniformFraction { lo: 0.06, hi: 0.30 },
+            link: LinkRegime::AkamaiFrance,
+            jitter_sigma: 0.08,
+            churn: 0.0,
+            packable: true,
+        }
+    }
+
+    /// A huge identical fleet over uniform links: the balanced-greedy end
+    /// of the §VII strategy rule.
+    pub fn s6_mega_homogeneous() -> ScenarioSpec {
+        ScenarioSpec {
+            name: "s6-mega-homogeneous".to_string(),
+            client_mix: DeviceMix::Fixed { index: 0 },
+            helper_mix: DeviceMix::Fixed { index: 0 },
+            cut_policy: CutPolicy::Default,
+            memory: MemoryModel::FullRam,
+            link: LinkRegime::UniformFixed { mbps: 12.0 },
+            jitter_sigma: 0.02,
+            churn: 0.0,
+            packable: true,
+        }
+    }
+
+    // ---- builder-style composition --------------------------------------
+
+    pub fn named(mut self, name: &str) -> ScenarioSpec {
+        self.name = name.to_string();
+        self
+    }
+    pub fn with_link(mut self, link: LinkRegime) -> ScenarioSpec {
+        self.link = link;
+        self
+    }
+    pub fn with_memory(mut self, memory: MemoryModel) -> ScenarioSpec {
+        self.memory = memory;
+        self
+    }
+    pub fn with_cuts(mut self, cut_policy: CutPolicy) -> ScenarioSpec {
+        self.cut_policy = cut_policy;
+        self
+    }
+    pub fn with_client_mix(mut self, mix: DeviceMix) -> ScenarioSpec {
+        self.client_mix = mix;
+        self
+    }
+    pub fn with_helper_mix(mut self, mix: DeviceMix) -> ScenarioSpec {
+        self.helper_mix = mix;
+        self
+    }
+    pub fn with_jitter(mut self, sigma: f64) -> ScenarioSpec {
+        self.jitter_sigma = sigma;
+        self
+    }
+    pub fn with_churn(mut self, p: f64) -> ScenarioSpec {
+        self.churn = p;
+        self
+    }
+    pub fn with_packable(mut self, packable: bool) -> ScenarioSpec {
+        self.packable = packable;
+        self
+    }
+}
+
+/// Generator configuration: a spec plus the experiment tuple.
 #[derive(Clone, Debug)]
 pub struct ScenarioCfg {
-    pub scenario: Scenario,
+    pub spec: ScenarioSpec,
     pub model: Model,
     pub n_clients: usize,
     pub n_helpers: usize,
@@ -55,25 +419,24 @@ pub struct ScenarioCfg {
     /// range (T≈294 for ResNet101 J=10 at |S_t|=180ms; T≈176 for VGG19
     /// at 550ms) — see DESIGN.md substitution table.
     pub wire_factor: f64,
-    /// Multiplicative jitter (lognormal σ) applied to every profiled time.
-    pub jitter_sigma: f64,
     /// Per-helper preemption switching cost, ms (0 = paper's base model).
     pub switch_cost_ms: f64,
 }
 
 impl ScenarioCfg {
     pub fn new(scenario: Scenario, model: Model, n_clients: usize, n_helpers: usize, seed: u64) -> Self {
+        Self::from_spec(scenario.spec(), model, n_clients, n_helpers, seed)
+    }
+
+    /// Build from a custom composed spec.
+    pub fn from_spec(spec: ScenarioSpec, model: Model, n_clients: usize, n_helpers: usize, seed: u64) -> Self {
         ScenarioCfg {
-            scenario,
+            spec,
             model,
             n_clients,
             n_helpers,
             seed,
             wire_factor: 0.10,
-            jitter_sigma: match scenario {
-                Scenario::S1 => 0.08,
-                Scenario::S2 => 0.15,
-            },
             switch_cost_ms: 0.0,
         }
     }
@@ -85,80 +448,43 @@ impl ScenarioCfg {
 
     /// Generate the instance.
     pub fn generate(&self) -> InstanceMs {
-        let mut rng = Rng::seeded(self.seed ^ fnv(self.scenario.name()) ^ fnv(self.model.name()));
+        let mut rng = Rng::seeded(self.seed ^ fnv(&self.spec.name) ^ fnv(self.model.name()));
         let prof = self.model.profile();
         let n_layers = prof.n_layers();
         let (j_n, i_n) = (self.n_clients, self.n_helpers);
 
         // --- per-client cut layers -------------------------------------
-        let cuts: Vec<(usize, usize)> = (0..j_n)
-            .map(|_| match self.scenario {
-                Scenario::S1 => prof.default_cuts,
-                Scenario::S2 => {
-                    // Random cuts: σ1 early (keep part-1 cheap enough for the
-                    // device), σ2 near the end but leaving a real part-3.
-                    let s1 = rng.range_usize(2, 5.min(n_layers / 3));
-                    let hi = n_layers - 2;
-                    let lo = (n_layers * 2 / 3).max(s1 + 2).min(hi);
-                    let s2 = rng.range_usize(lo, hi);
-                    (s1, s2)
-                }
-            })
-            .collect();
+        let cuts: Vec<(usize, usize)> = (0..j_n).map(|_| self.spec.cut_policy.draw(&mut rng, &prof)).collect();
 
         // --- device speed factors ---------------------------------------
-        // For each entity we derive a whole-model batch time (ms). S1 picks
-        // a concrete testbed device; S2 interpolates between the pool's
-        // fastest and slowest in log space (paper: "interpolating the time
-        // measurements of the profiled devices").
+        // For each entity we derive a whole-model batch time (ms) from the
+        // spec's device mix over the role's pool.
         let client_pool = Device::client_pool();
         let helper_pool = Device::helper_pool();
         let model = self.model;
-        // S2 interpolates device speeds in log space ("interpolating the
-        // time measurements of the profiled devices"). The helper pool
-        // (VM, M1) spans a narrow 2–3.6 s band, so for helpers we widen
-        // the continuum by 2× on both ends — S2 must be *more*
-        // heterogeneous than S1's two fixed helper types (§VII explicitly
-        // has "a few helpers with very limited" capabilities in S2).
-        let log_interp = |rng: &mut Rng, pool: &[Device], widen: f64| -> f64 {
-            let times: Vec<f64> = pool.iter().map(|d| d.batch_ms(model)).collect();
-            let lo = (times.iter().cloned().fold(f64::MAX, f64::min) / widen).ln();
-            let hi = (times.iter().cloned().fold(0.0f64, f64::max) * widen).ln();
-            (rng.range_f64(lo, hi)).exp()
-        };
         let client_batch_ms: Vec<f64> = (0..j_n)
-            .map(|_| match self.scenario {
-                Scenario::S1 => rng.choice(client_pool).batch_ms(model),
-                Scenario::S2 => log_interp(&mut rng, client_pool, 1.0),
-            })
+            .map(|_| self.spec.client_mix.draw_batch_ms(&mut rng, client_pool, model))
             .collect();
         let helper_batch_ms: Vec<f64> = (0..i_n)
-            .map(|_| match self.scenario {
-                Scenario::S1 => rng.choice(helper_pool).batch_ms(model),
-                Scenario::S2 => log_interp(&mut rng, helper_pool, 2.0),
-            })
+            .map(|_| self.spec.helper_mix.draw_batch_ms(&mut rng, helper_pool, model))
             .collect();
 
         // --- memory -------------------------------------------------------
         let d_gb: Vec<f64> = cuts.iter().map(|&c| prof.part2_footprint_gb(c)).collect();
         let helper_ram: Vec<f64> = (0..i_n)
-            .map(|k| match self.scenario {
-                Scenario::S1 => helper_pool[k % helper_pool.len()].profile().ram_gb,
-                Scenario::S2 => {
-                    // "can vary from device to device, upper-bounded by RAM";
-                    // a few helpers end up with very limited memory (§VII).
-                    let ram = helper_pool[k % helper_pool.len()].profile().ram_gb;
-                    rng.range_f64(0.15 * ram, ram)
-                }
+            .map(|k| {
+                let ram = helper_pool[k % helper_pool.len()].profile().ram_gb;
+                self.spec.memory.draw(&mut rng, ram)
             })
             .collect();
-        let mem_gb = repair_memory(&d_gb, helper_ram);
+        let mem_gb = if self.spec.packable {
+            repair_memory_packable(&d_gb, helper_ram)
+        } else {
+            repair_memory(&d_gb, helper_ram)
+        };
 
         // --- links ---------------------------------------------------------
-        let link = match self.scenario {
-            Scenario::S1 => LinkModel::france_q4_2016(),
-            Scenario::S2 => LinkModel::heterogeneous(),
-        };
+        let link = self.spec.link.model();
         let rates = link.draw_rates(&mut rng, i_n, j_n);
 
         // --- per-edge delay vectors ----------------------------------------
@@ -194,7 +520,7 @@ impl ScenarioCfg {
                 let up2 = link.transfer_ms(a2_mb, rate);
                 let dn1 = link.transfer_ms(a1_mb, rate);
                 let part2 = helper_batch_ms[i] * share(s1 + 1, s2);
-                let s = self.jitter_sigma;
+                let s = self.spec.jitter_sigma;
                 r_ms[e] = jit(&mut rng, p1_f + up1, s);
                 l_ms[e] = jit(&mut rng, dn2 + p3_f, s);
                 lp_ms[e] = jit(&mut rng, p3_b + up2, s);
@@ -218,7 +544,7 @@ impl ScenarioCfg {
             mu_ms: vec![self.switch_cost_ms; i_n],
             label: format!(
                 "{}/{} J={} I={} seed={}",
-                self.scenario.name(),
+                self.spec.name,
                 self.model.name(),
                 j_n,
                 i_n,
@@ -227,6 +553,30 @@ impl ScenarioCfg {
         };
         inst.validate().expect("generator produced invalid instance");
         inst
+    }
+
+    /// Generate a churn round sequence: the base instance projected onto
+    /// the clients that stayed for each round. With `spec.churn == 0`
+    /// every round is the full instance. Deterministic in the tuple —
+    /// the churn stream is derived from the same seed, independent of the
+    /// instance stream.
+    pub fn generate_rounds(&self, rounds: usize) -> Vec<InstanceMs> {
+        let base = self.generate();
+        if self.spec.churn <= 0.0 || base.n_clients <= 1 {
+            return vec![base; rounds];
+        }
+        let mut rng = Rng::seeded(self.seed ^ fnv(&self.spec.name) ^ fnv("churn"));
+        (0..rounds)
+            .map(|round| {
+                let mut keep: Vec<usize> = (0..base.n_clients).filter(|_| !rng.chance(self.spec.churn)).collect();
+                if keep.is_empty() {
+                    keep.push(rng.below(base.n_clients));
+                }
+                let mut inst = base.restrict_clients(&keep);
+                inst.label = format!("{} round={round} J'={}", base.label, keep.len());
+                inst
+            })
+            .collect()
     }
 }
 
@@ -257,13 +607,26 @@ fn repair_memory(d_gb: &[f64], mut mem: Vec<f64>) -> Vec<f64> {
     mem
 }
 
-fn fnv(s: &str) -> u64 {
-    let mut h: u64 = 0xcbf29ce484222325;
-    for b in s.bytes() {
-        h ^= b as u64;
-        h = h.wrapping_mul(0x100000001b3);
+/// Strong repair for the grown families: on top of [`repair_memory`]'s
+/// invariants, guarantee total capacity ≥ total demand + I·max_d. At any
+/// point of any sequential packing, total free ≥ I·max_d + d_j, so some
+/// helper has free ≥ max_d ≥ d_j — **no** feasible-choice assignment
+/// procedure (balanced greedy, random baseline, ADMM's y-subproblem) can
+/// ever wedge. Uniform scaling preserves the capacity *spread* that makes
+/// starved families interesting.
+fn repair_memory_packable(d_gb: &[f64], mem: Vec<f64>) -> Vec<f64> {
+    let mut mem = repair_memory(d_gb, mem);
+    let demand: f64 = d_gb.iter().sum();
+    let max_d = d_gb.iter().cloned().fold(0.0, f64::max);
+    let need = demand + mem.len() as f64 * max_d;
+    let cap: f64 = mem.iter().sum();
+    if cap < need {
+        let scale = need / cap.max(1e-9) * 1.001;
+        for m in &mut mem {
+            *m *= scale;
+        }
     }
-    h
+    mem
 }
 
 #[cfg(test)]
@@ -310,7 +673,7 @@ mod tests {
         prop::check(60, |rng| {
             let j = rng.range_usize(1, 40);
             let i = rng.range_usize(1, 8);
-            let scen = if rng.chance(0.5) { Scenario::S1 } else { Scenario::S2 };
+            let scen = Scenario::ALL[rng.below(Scenario::ALL.len())];
             let model = if rng.chance(0.5) { Model::ResNet101 } else { Model::Vgg19 };
             let inst = ScenarioCfg::new(scen, model, j, i, rng.next_u64()).generate();
             // validate() ran inside generate(); check capacity slack too.
@@ -350,5 +713,163 @@ mod tests {
             .with_switch_cost(120.0)
             .generate();
         assert!(inst.mu_ms.iter().all(|&m| (m - 120.0).abs() < 1e-9));
+    }
+
+    // ---- composable-spec / new-family coverage --------------------------
+
+    #[test]
+    fn every_family_generates_valid_and_deterministic() {
+        for scen in Scenario::ALL {
+            for model in [Model::ResNet101, Model::Vgg19] {
+                let cfg = ScenarioCfg::new(scen, model, 9, 3, 1234);
+                let a = cfg.generate(); // validate() runs inside
+                let b = cfg.generate();
+                assert_eq!(a.p_ms, b.p_ms, "{} must be deterministic", scen.name());
+                assert_eq!(a.mem_gb, b.mem_gb, "{} memory must be deterministic", scen.name());
+                assert!(a.label.contains(scen.name()));
+            }
+        }
+    }
+
+    #[test]
+    fn family_names_roundtrip_through_parse() {
+        for scen in Scenario::ALL {
+            assert_eq!(Scenario::parse(scen.name()), Some(scen), "{}", scen.name());
+        }
+        assert_eq!(Scenario::parse("nope"), None);
+    }
+
+    #[test]
+    fn families_differ_from_presets() {
+        let base = ScenarioCfg::new(Scenario::S1, Model::ResNet101, 12, 3, 5).generate();
+        for scen in [Scenario::S3Clustered, Scenario::S4StragglerTail, Scenario::S5MemoryStarved, Scenario::S6MegaHomogeneous] {
+            let inst = ScenarioCfg::new(scen, Model::ResNet101, 12, 3, 5).generate();
+            assert_ne!(inst.p_ms, base.p_ms, "{} should not clone scenario1", scen.name());
+        }
+    }
+
+    #[test]
+    fn mega_homogeneous_is_least_heterogeneous() {
+        let cv = |scen: Scenario| -> f64 {
+            let mut acc = 0.0;
+            for seed in 0..6u64 {
+                let inst = ScenarioCfg::new(scen, Model::ResNet101, 20, 5, 900 + seed).generate();
+                let m = inst.p_ms.iter().sum::<f64>() / inst.p_ms.len() as f64;
+                let v = inst.p_ms.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / inst.p_ms.len() as f64;
+                acc += v.sqrt() / m;
+            }
+            acc / 6.0
+        };
+        assert!(cv(Scenario::S6MegaHomogeneous) < cv(Scenario::S1), "s6 must be flatter than s1");
+        assert!(cv(Scenario::S6MegaHomogeneous) < cv(Scenario::S2), "s6 must be flatter than s2");
+    }
+
+    #[test]
+    fn memory_starved_varies_capacities_where_s1_does_not() {
+        let mem_cv = |scen: Scenario| -> f64 {
+            let mut acc = 0.0;
+            for seed in 0..5u64 {
+                let inst = ScenarioCfg::new(scen, Model::ResNet101, 12, 6, 40 + seed).generate();
+                let m = inst.mem_gb.iter().sum::<f64>() / inst.mem_gb.len() as f64;
+                let v = inst.mem_gb.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / inst.mem_gb.len() as f64;
+                acc += v.sqrt() / m;
+            }
+            acc / 5.0
+        };
+        // S1 helpers all carry identical (full-RAM) capacity; repair scales
+        // uniformly, so the spread stays zero. S5 draws tight varied
+        // fractions.
+        assert!(mem_cv(Scenario::S1) < 1e-9);
+        assert!(mem_cv(Scenario::S5MemoryStarved) > 0.03);
+    }
+
+    #[test]
+    fn straggler_tail_mix_has_heavy_tail() {
+        let mix = DeviceMix::StragglerTail { tail_frac: 0.12, slow_factor: 8.0 };
+        let mut rng = Rng::seeded(17);
+        let pool = Device::client_pool();
+        let mut xs: Vec<f64> = (0..400).map(|_| mix.draw_batch_ms(&mut rng, pool, Model::ResNet101)).collect();
+        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let median = xs[xs.len() / 2];
+        let max = *xs.last().unwrap();
+        assert!(max / median > 4.0, "tail not heavy: median {median}, max {max}");
+        // Draws stay within the straggler-inflated pool envelope.
+        let pool_max = pool.iter().map(|d| d.batch_ms(Model::ResNet101)).fold(0.0f64, f64::max);
+        assert!(max <= pool_max * 8.0 + 1e-6);
+    }
+
+    #[test]
+    fn tier_mix_draws_stay_in_pool_envelope() {
+        let mix = DeviceMix::Tiers { weights: vec![0.5, 0.35, 0.15], centers: vec![0.85, 0.5, 0.1], sigma_log: 0.06 };
+        let mut rng = Rng::seeded(23);
+        let pool = Device::client_pool();
+        let lo = pool.iter().map(|d| d.batch_ms(Model::Vgg19)).fold(f64::MAX, f64::min);
+        let hi = pool.iter().map(|d| d.batch_ms(Model::Vgg19)).fold(0.0f64, f64::max);
+        for _ in 0..500 {
+            let x = mix.draw_batch_ms(&mut rng, pool, Model::Vgg19);
+            // centers are inside [0,1]; sigma 0.06 keeps draws within ~30%
+            // of the envelope.
+            assert!(x > lo * 0.5 && x < hi * 2.0, "tier draw {x} far outside [{lo}, {hi}]");
+        }
+    }
+
+    #[test]
+    fn grown_families_guarantee_wedge_free_packing() {
+        // The strong repair: cap ≥ demand + I·max_d, so no sequential
+        // feasible-choice assignment can wedge on these families.
+        for scen in [Scenario::S3Clustered, Scenario::S4StragglerTail, Scenario::S5MemoryStarved, Scenario::S6MegaHomogeneous] {
+            for seed in 0..6u64 {
+                let inst = ScenarioCfg::new(scen, Model::Vgg19, 11, 4, 600 + seed).generate();
+                let demand: f64 = inst.d_gb.iter().sum();
+                let max_d = inst.d_gb.iter().cloned().fold(0.0, f64::max);
+                let cap: f64 = inst.mem_gb.iter().sum();
+                assert!(
+                    cap + 1e-9 >= demand + inst.n_helpers as f64 * max_d,
+                    "{} seed {seed}: cap {cap} < demand {demand} + I*max_d",
+                    scen.name()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn custom_spec_composition_generates() {
+        let spec = ScenarioSpec::s1()
+            .named("custom-wide-links")
+            .with_link(LinkRegime::WideSpread)
+            .with_jitter(0.2)
+            .with_churn(0.1);
+        let cfg = ScenarioCfg::from_spec(spec, Model::Vgg19, 8, 2, 3);
+        let inst = cfg.generate();
+        assert!(inst.label.contains("custom-wide-links"));
+        // Different name → different RNG stream than the s1 preset.
+        let s1 = ScenarioCfg::new(Scenario::S1, Model::Vgg19, 8, 2, 3).generate();
+        assert_ne!(inst.p_ms, s1.p_ms);
+    }
+
+    #[test]
+    fn churn_rounds_deterministic_and_never_empty() {
+        let cfg = ScenarioCfg::new(Scenario::S4StragglerTail, Model::Vgg19, 10, 2, 8);
+        let a = cfg.generate_rounds(6);
+        let b = cfg.generate_rounds(6);
+        assert_eq!(a.len(), 6);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.n_clients, y.n_clients);
+            assert_eq!(x.p_ms, y.p_ms, "churn rounds must be deterministic");
+            assert!(x.n_clients >= 1 && x.n_clients <= 10);
+        }
+        // With churn on, at least one round should differ from the base.
+        assert!(a.iter().any(|r| r.n_clients < 10), "churn 0.15 over 6 rounds should drop someone");
+    }
+
+    #[test]
+    fn zero_churn_rounds_are_identical() {
+        let cfg = ScenarioCfg::new(Scenario::S1, Model::ResNet101, 6, 2, 4);
+        let rounds = cfg.generate_rounds(3);
+        assert_eq!(rounds.len(), 3);
+        for r in &rounds {
+            assert_eq!(r.n_clients, 6);
+            assert_eq!(r.p_ms, rounds[0].p_ms);
+        }
     }
 }

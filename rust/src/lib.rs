@@ -20,8 +20,21 @@
 //!   (fused conv-as-matmul block), interpret-mode on CPU.
 //!
 //! Python never runs at request time: the [`runtime`] module loads the HLO
-//! artifacts through PJRT (`xla` crate) and [`slexec`] drives real training
-//! from Rust according to the optimized schedules.
+//! artifacts through PJRT (`xla` crate, behind the `pjrt` cargo feature)
+//! and [`slexec`] drives real training from Rust according to the
+//! optimized schedules.
+//!
+//! ## Scenarios
+//!
+//! Workloads come from the composable
+//! [`ScenarioSpec`](instance::scenario::ScenarioSpec): device-mix
+//! distributions, per-entity memory models, link regimes, cut-layer
+//! policies and client-churn knobs. Six named families ship as presets —
+//! the paper's `scenario1`/`scenario2` plus `s3-clustered`,
+//! `s4-straggler-tail`, `s5-memory-starved` and `s6-mega-homogeneous` —
+//! and `psl sweep` ([`bench::sweep`]) runs the full scenario × solver
+//! grid across worker threads with deterministic, thread-count-independent
+//! JSON output.
 //!
 //! ## Quickstart
 //!

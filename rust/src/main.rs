@@ -47,6 +47,7 @@ fn dispatch(args: &Args) -> Result<()> {
         "gen" => cmd_gen(args),
         "solve" => cmd_solve(args),
         "sweep-slots" => cmd_sweep(args),
+        "sweep" => cmd_sweep_grid(args),
         "train" => cmd_train(args),
         other => anyhow::bail!("unknown command {other:?}; see `psl help`"),
     }
@@ -161,6 +162,104 @@ fn cmd_sweep(args: &Args) -> Result<()> {
             r.preemptions
         );
     }
+    Ok(())
+}
+
+fn cmd_sweep_grid(args: &Args) -> Result<()> {
+    let list = |key: &str, default: &str| -> Vec<String> {
+        args.str_of(key, default)
+            .split(',')
+            .map(|s| s.trim().to_string())
+            .filter(|s| !s.is_empty())
+            .collect()
+    };
+    let scenarios = list("scenarios", "1,2,3,4")
+        .iter()
+        .map(|s| Scenario::parse(s).with_context(|| format!("bad scenario {s:?} in --scenarios")))
+        .collect::<Result<Vec<_>>>()?;
+    let models = list("models", "resnet101")
+        .iter()
+        .map(|s| Model::parse(s).with_context(|| format!("bad model {s:?} in --models")))
+        .collect::<Result<Vec<_>>>()?;
+    let sizes = list("sizes", "10x2,20x5")
+        .iter()
+        .map(|s| {
+            let (j, i) = s.split_once('x').with_context(|| format!("size {s:?} is not JxI"))?;
+            let j = j.trim().parse::<usize>().ok().with_context(|| format!("bad J in {s:?}"))?;
+            let i = i.trim().parse::<usize>().ok().with_context(|| format!("bad I in {s:?}"))?;
+            anyhow::ensure!(j >= 1 && i >= 1, "size {s:?} needs J >= 1 and I >= 1");
+            Ok((j, i))
+        })
+        .collect::<Result<Vec<_>>>()?;
+    let seeds = list("seeds", "42")
+        .iter()
+        .map(|s| s.parse::<u64>().ok().with_context(|| format!("bad seed {s:?}")))
+        .collect::<Result<Vec<_>>>()?;
+    let methods = list("methods", "admm,greedy");
+    for m in &methods {
+        anyhow::ensure!(
+            matches!(m.as_str(), "admm" | "greedy" | "baseline" | "strategy"),
+            "unknown method {m:?} (admm|greedy|baseline|strategy)"
+        );
+    }
+    let slot_ms = match args.flags.get("slot-ms") {
+        None => None,
+        Some(v) => {
+            let ms: f64 = v.parse().ok().with_context(|| format!("bad --slot-ms {v:?}"))?;
+            anyhow::ensure!(ms > 0.0, "--slot-ms must be positive, got {ms}");
+            Some(ms)
+        }
+    };
+    let cfg = psl::bench::sweep::SweepCfg {
+        scenarios,
+        models,
+        sizes,
+        seeds,
+        methods,
+        slot_ms,
+        threads: args.usize_of("threads", psl::exec::pool::default_workers()),
+    };
+    let n_cells = psl::bench::sweep::cells(&cfg).len();
+    println!(
+        "sweep: {} scenarios x {} models x {} sizes x {} seeds x {} methods = {} cells on {} threads",
+        cfg.scenarios.len(),
+        cfg.models.len(),
+        cfg.sizes.len(),
+        cfg.seeds.len(),
+        cfg.methods.len(),
+        n_cells,
+        cfg.threads
+    );
+    let start = std::time::Instant::now();
+    let rows = psl::bench::sweep::run(&cfg);
+    let wall = start.elapsed().as_secs_f64();
+    println!(
+        "  {:<20} {:<10} {:>5} {:>3} {:>6} {:<10} {:>8} {:>12} {:>5} {:>6}",
+        "scenario", "model", "J", "I", "seed", "method", "slots", "makespan[s]", "het", "flex"
+    );
+    for r in &rows {
+        println!(
+            "  {:<20} {:<10} {:>5} {:>3} {:>6} {:<10} {:>8} {:>12} {:>5.2} {:>6.2}",
+            r.scenario,
+            r.model,
+            r.n_clients,
+            r.n_helpers,
+            r.seed,
+            r.method,
+            r.makespan_slots.map(|m| m.to_string()).unwrap_or_else(|| "-".into()),
+            r.makespan_ms.map(|m| format!("{:.1}", m / 1000.0)).unwrap_or_else(|| "-".into()),
+            r.heterogeneity,
+            r.placement_flexibility
+        );
+    }
+    let path = psl::bench::sweep::save(&rows, &args.str_of("out", "sweep"))?;
+    println!(
+        "{} rows -> {} in {} ({} threads)",
+        rows.len(),
+        path.display(),
+        psl::bench::fmt_s(wall),
+        cfg.threads
+    );
     Ok(())
 }
 

@@ -111,7 +111,9 @@ impl Tensor {
         Ok(())
     }
 
-    /// Convert to a PJRT literal with the right shape.
+    /// Convert to a PJRT literal with the right shape (needs the `pjrt`
+    /// feature — see runtime::engine).
+    #[cfg(feature = "pjrt")]
     pub fn to_literal(&self) -> Result<xla::Literal> {
         let dims: Vec<i64> = self.shape.iter().map(|&d| d as i64).collect();
         let lit = match &self.data {
@@ -122,7 +124,8 @@ impl Tensor {
         lit.reshape(&dims).context("literal reshape")
     }
 
-    /// Read a literal back into a host tensor.
+    /// Read a literal back into a host tensor (needs the `pjrt` feature).
+    #[cfg(feature = "pjrt")]
     pub fn from_literal(lit: &xla::Literal) -> Result<Tensor> {
         let shape = lit.array_shape().context("literal shape")?;
         let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();

@@ -11,8 +11,12 @@
 //! | [`baseline`] | random + FCFS baseline (§VII) |
 //! | [`exact`] | the exact/anytime reference optimum (Gurobi's role) |
 //! | [`lp`], [`milp`], [`model`] | time-indexed ILP of §IV + own solver |
-//! | [`strategy`] | the scenario-dependent solution strategy (Obs. 3) |
+//! | [`strategy`] | the signal-driven solution strategy (Obs. 3): picks a method from instance shape — size, heterogeneity, placement flexibility, straggler tail ([`strategy::Signals`]) — never from the scenario label |
 //! | [`preemption`] | §VI switching-cost extension |
+//!
+//! The scenario × solver evaluation grid behind `psl sweep` lives in
+//! [`crate::bench::sweep`]; its rows record each instance's
+//! [`strategy::Signals`] next to every method's makespan.
 
 pub mod admm;
 pub mod baseline;

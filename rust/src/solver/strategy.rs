@@ -1,11 +1,19 @@
 //! The paper's *solution strategy* (§VII, Observation 3): pick the method
-//! by the scenario's size and heterogeneity.
+//! from the instance's **shape signals** — never from the scenario label,
+//! so custom [`ScenarioSpec`](crate::instance::scenario::ScenarioSpec)
+//! compositions route exactly like the named families.
 //!
 //! * Medium instances (≲ 50 clients) and/or high heterogeneity → the
 //!   ADMM-based method (it shapes assignments around the delay structure
 //!   and schedules preemptively).
 //! * Very large (≳ 100 clients) or large-and-homogeneous → balanced-greedy
 //!   (queuing dominates; load balancing wins and costs almost nothing).
+//! * Memory-starved shapes (few helpers can host a typical client) →
+//!   ADMM regardless of size: assignment feasibility is the binding
+//!   constraint and load balancing alone can wedge.
+//!
+//! The raw signals are exposed as [`Signals`] so sweeps and reports can
+//! record *why* a method was picked.
 
 use super::admm::{self, AdmmCfg};
 use super::greedy;
@@ -19,10 +27,39 @@ pub enum Method {
     BalancedGreedy,
 }
 
+impl Method {
+    pub fn name(self) -> &'static str {
+        match self {
+            Method::Admm => "admm",
+            Method::BalancedGreedy => "balanced-greedy",
+        }
+    }
+}
+
+/// Instance-shape signals consumed by the §VII pick rule (and recorded in
+/// sweep rows).
+#[derive(Clone, Copy, Debug)]
+pub struct Signals {
+    pub n_clients: usize,
+    pub n_helpers: usize,
+    /// Coefficient of variation of the helper processing times p — the
+    /// paper's heterogeneity axis.
+    pub heterogeneity: f64,
+    /// Mean over clients of the fraction of helpers whose memory can host
+    /// them (1.0 = any client fits anywhere; low = starved).
+    pub placement_flexibility: f64,
+    /// p95 / median of the per-client best-edge end-to-end times — a
+    /// straggler-tail diagnostic.
+    pub tail_ratio: f64,
+}
+
 /// Heterogeneity proxy: coefficient of variation of the helper processing
 /// times p (the paper's scenarios differ exactly in this dimension).
 pub fn heterogeneity(inst: &Instance) -> f64 {
     let xs: Vec<f64> = inst.p.iter().map(|&v| v as f64).collect();
+    if xs.is_empty() {
+        return 0.0;
+    }
     let m = xs.iter().sum::<f64>() / xs.len() as f64;
     if m == 0.0 {
         return 0.0;
@@ -31,24 +68,86 @@ pub fn heterogeneity(inst: &Instance) -> f64 {
     var.sqrt() / m
 }
 
-/// Decide the method per §VII: balanced-greedy for very large scenarios
-/// (≥ 100 clients in the paper's setting) and for large homogeneous ones;
-/// ADMM otherwise.
-pub fn pick(inst: &Instance) -> Method {
-    let j = inst.n_clients;
-    let het = heterogeneity(inst);
-    if j >= 100 {
-        Method::BalancedGreedy
-    } else if j > 50 && het < 0.35 {
-        Method::BalancedGreedy
-    } else {
-        Method::Admm
+/// Compute all pick-rule signals for an instance.
+pub fn signals(inst: &Instance) -> Signals {
+    if inst.n_clients == 0 || inst.n_helpers == 0 {
+        // Degenerate instances carry no shape information; report neutral
+        // signals instead of indexing empty percentile vectors.
+        return Signals {
+            n_clients: inst.n_clients,
+            n_helpers: inst.n_helpers,
+            heterogeneity: 0.0,
+            placement_flexibility: 1.0,
+            tail_ratio: 1.0,
+        };
     }
+    let j_n = inst.n_clients;
+    let i_n = inst.n_helpers;
+    let mut flex = 0.0;
+    for j in 0..j_n {
+        flex += inst.feasible_helpers(j).len() as f64 / i_n as f64;
+    }
+    let placement_flexibility = flex / j_n as f64;
+
+    let mut best: Vec<f64> = (0..inst.n_clients)
+        .map(|j| {
+            (0..inst.n_helpers)
+                .map(|i| {
+                    let e = inst.edge(i, j);
+                    (inst.r[e] + inst.p[e] + inst.l[e] + inst.lp[e] + inst.pp[e] + inst.rp[e]) as f64
+                })
+                .fold(f64::MAX, f64::min)
+        })
+        .collect();
+    best.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let median = best[best.len() / 2].max(1.0);
+    let p95 = best[((best.len() - 1) as f64 * 0.95).round() as usize];
+    let tail_ratio = p95 / median;
+
+    Signals {
+        n_clients: inst.n_clients,
+        n_helpers: inst.n_helpers,
+        heterogeneity: heterogeneity(inst),
+        placement_flexibility,
+        tail_ratio,
+    }
+}
+
+/// Decide the method per §VII from the instance's signals:
+/// balanced-greedy for very large scenarios (≥ 100 clients in the paper's
+/// setting) and for large homogeneous ones; ADMM otherwise — and always
+/// ADMM when placement flexibility is low (memory-starved shapes), where
+/// the assignment subproblem is what matters.
+pub fn pick(inst: &Instance) -> Method {
+    let s = signals(inst);
+    pick_from_signals(&s)
+}
+
+/// The pick rule on precomputed signals (kept separate so sweeps can
+/// record the signals alongside the decision without recomputing).
+pub fn pick_from_signals(s: &Signals) -> Method {
+    if s.placement_flexibility < 0.35 {
+        return Method::Admm;
+    }
+    if s.n_clients >= 100 {
+        return Method::BalancedGreedy;
+    }
+    if s.n_clients > 50 && s.heterogeneity < 0.35 {
+        return Method::BalancedGreedy;
+    }
+    Method::Admm
 }
 
 /// Run the strategy. Returns the schedule and the method used.
 pub fn solve(inst: &Instance, admm_cfg: &AdmmCfg) -> Option<(Schedule, Method)> {
-    match pick(inst) {
+    solve_with_signals(inst, admm_cfg, &signals(inst))
+}
+
+/// [`solve`] on precomputed signals — callers that already computed
+/// [`signals`] for reporting (the sweep runner) avoid the second
+/// O(J·I) scan.
+pub fn solve_with_signals(inst: &Instance, admm_cfg: &AdmmCfg, s: &Signals) -> Option<(Schedule, Method)> {
+    match pick_from_signals(s) {
         Method::BalancedGreedy => greedy::solve(inst).map(|s| (s, Method::BalancedGreedy)),
         Method::Admm => {
             let a = admm::solve(inst, admm_cfg)?;
@@ -98,5 +197,73 @@ mod tests {
         let s1 = ScenarioCfg::new(Scenario::S1, Model::ResNet101, 20, 5, 2).generate().quantize(180.0);
         let s2 = ScenarioCfg::new(Scenario::S2, Model::ResNet101, 20, 5, 2).generate().quantize(180.0);
         assert!(heterogeneity(&s2) > heterogeneity(&s1) * 0.8, "S2 should not be much less heterogeneous");
+    }
+
+    #[test]
+    fn signals_full_flexibility_when_memory_loose() {
+        // S1: every helper carries full RAM and every client fits anywhere.
+        let inst = ScenarioCfg::new(Scenario::S1, Model::ResNet101, 12, 4, 3).generate().quantize(180.0);
+        let s = signals(&inst);
+        assert!((s.placement_flexibility - 1.0).abs() < 1e-9, "flex {}", s.placement_flexibility);
+        assert_eq!(s.n_clients, 12);
+        assert_eq!(s.n_helpers, 4);
+        assert!(s.tail_ratio >= 1.0);
+    }
+
+    #[test]
+    fn starved_placement_routes_to_admm_even_when_large() {
+        // Force low flexibility by shrinking all but one helper below every
+        // client's footprint: only 1/4 of helpers can host anyone.
+        let mut inst = ScenarioCfg::new(Scenario::S1, Model::ResNet101, 60, 4, 5).generate().quantize(180.0);
+        let max_d = inst.d.iter().cloned().fold(0.0, f64::max);
+        for m in inst.mem.iter_mut() {
+            *m = max_d * 0.5;
+        }
+        inst.mem[0] = max_d * 2.0;
+        let s = signals(&inst);
+        assert!(s.placement_flexibility < 0.35, "flex {}", s.placement_flexibility);
+        assert_eq!(pick(&inst), Method::Admm);
+    }
+
+    #[test]
+    fn pick_consumes_signals_not_labels() {
+        // The same signals give the same pick regardless of which scenario
+        // family produced the instance.
+        let inst = ScenarioCfg::new(Scenario::S6MegaHomogeneous, Model::ResNet101, 120, 8, 2)
+            .generate()
+            .quantize(180.0);
+        let s = signals(&inst);
+        assert_eq!(pick(&inst), pick_from_signals(&s));
+        assert_eq!(pick(&inst), Method::BalancedGreedy, "huge homogeneous fleet routes to greedy");
+    }
+
+    #[test]
+    fn signals_tolerate_degenerate_instances() {
+        // A zero-client grid cell must not panic inside a sweep worker.
+        let inst = Instance {
+            n_clients: 0,
+            n_helpers: 2,
+            slot_ms: 100.0,
+            r: vec![],
+            l: vec![],
+            lp: vec![],
+            rp: vec![],
+            p: vec![],
+            pp: vec![],
+            d: vec![],
+            mem: vec![1.0, 1.0],
+            mu: vec![0, 0],
+            label: "empty".into(),
+        };
+        let s = signals(&inst);
+        assert_eq!(s.tail_ratio, 1.0);
+        assert_eq!(s.heterogeneity, 0.0);
+        assert_eq!(pick(&inst), Method::Admm);
+    }
+
+    #[test]
+    fn method_names_stable() {
+        assert_eq!(Method::Admm.name(), "admm");
+        assert_eq!(Method::BalancedGreedy.name(), "balanced-greedy");
     }
 }

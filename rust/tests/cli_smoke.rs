@@ -76,6 +76,53 @@ fn solve_single_method_and_gantt() {
 }
 
 #[test]
+fn sweep_grid_runs_and_saves_deterministic_json() {
+    let args = |threads: &str, out: &str| {
+        vec![
+            "sweep", "--scenarios", "1,5,6", "--models", "vgg19", "--sizes", "4x2", "--seeds", "9",
+            "--methods", "greedy,baseline", "--slot-ms", "550", "--threads", threads, "--out", out,
+        ]
+    };
+    let (stdout, stderr, ok) = psl(&args("2", "cli-smoke-sweep-a"));
+    assert!(ok, "stdout={stdout} stderr={stderr}");
+    assert!(stdout.contains("6 cells"), "3 scenarios x 2 methods: {stdout}");
+    assert!(stdout.contains("s5-memory-starved"));
+    let (stdout2, stderr2, ok2) = psl(&args("1", "cli-smoke-sweep-b"));
+    assert!(ok2, "stdout={stdout2} stderr={stderr2}");
+    let a = std::fs::read_to_string("target/psl-bench/cli-smoke-sweep-a.json").unwrap();
+    let b = std::fs::read_to_string("target/psl-bench/cli-smoke-sweep-b.json").unwrap();
+    assert_eq!(a, b, "sweep JSON must not depend on thread count");
+    let doc = psl::util::json::Json::parse(&a).unwrap();
+    assert_eq!(doc.get("rows").as_arr().unwrap().len(), 6);
+    std::fs::remove_file("target/psl-bench/cli-smoke-sweep-a.json").ok();
+    std::fs::remove_file("target/psl-bench/cli-smoke-sweep-b.json").ok();
+}
+
+#[test]
+fn sweep_rejects_unknown_scenario() {
+    let (_, stderr, ok) = psl(&["sweep", "--scenarios", "nope"]);
+    assert!(!ok);
+    assert!(stderr.contains("bad scenario"), "{stderr}");
+}
+
+#[test]
+fn sweep_rejects_malformed_slot_ms_and_zero_sizes() {
+    let (_, stderr, ok) = psl(&["sweep", "--scenarios", "1", "--slot-ms", "55O"]);
+    assert!(!ok, "typo'd --slot-ms must not silently fall back to defaults");
+    assert!(stderr.contains("bad --slot-ms"), "{stderr}");
+    let (_, stderr2, ok2) = psl(&["sweep", "--scenarios", "1", "--sizes", "0x2"]);
+    assert!(!ok2);
+    assert!(stderr2.contains("J >= 1"), "{stderr2}");
+}
+
+#[test]
+fn gen_accepts_new_families() {
+    let (stdout, stderr, ok) = psl(&["gen", "--scenario", "s4-straggler-tail", "-j", "4", "-i", "2", "--seed", "2"]);
+    assert!(ok, "stdout={stdout} stderr={stderr}");
+    assert!(stdout.contains("s4-straggler-tail"), "{stdout}");
+}
+
+#[test]
 fn sweep_slots_runs() {
     let (stdout, stderr, ok) = psl(&[
         "sweep-slots", "-j", "6", "-i", "2", "--model", "vgg19", "--slots", "600,300",

@@ -8,8 +8,15 @@ use psl::solver::{admm, baseline, bwd, exact, greedy};
 use psl::util::prop;
 use psl::util::rng::Rng;
 
+/// Uniform draw over every named scenario family — the fuzz layer must
+/// exercise the grown families (clustered tiers, straggler tails, starved
+/// memory, mega-homogeneous) exactly like the paper presets.
+fn any_scenario(rng: &mut Rng) -> Scenario {
+    Scenario::ALL[rng.below(Scenario::ALL.len())]
+}
+
 fn random_instance(rng: &mut Rng) -> Instance {
-    let scen = if rng.chance(0.5) { Scenario::S1 } else { Scenario::S2 };
+    let scen = any_scenario(rng);
     let model = if rng.chance(0.5) { Model::ResNet101 } else { Model::Vgg19 };
     let j = rng.range_usize(1, 18);
     let i = rng.range_usize(1, 5);
@@ -42,7 +49,7 @@ fn makespan_dominance_chain() {
     // exact ≤ decomposition(admm-assignment) and replaying Alg.2 on any
     // feasible fwd schedule cannot hurt.
     prop::check(10, |rng| {
-        let scen = if rng.chance(0.5) { Scenario::S1 } else { Scenario::S2 };
+        let scen = any_scenario(rng);
         let inst = ScenarioCfg::new(scen, Model::Vgg19, rng.range_usize(2, 8), 2, rng.next_u64())
             .generate()
             .quantize(550.0);
@@ -84,7 +91,7 @@ fn admm_is_deterministic() {
 #[test]
 fn quantization_never_underestimates_work() {
     prop::check(20, |rng| {
-        let scen = if rng.chance(0.5) { Scenario::S1 } else { Scenario::S2 };
+        let scen = any_scenario(rng);
         let ms = ScenarioCfg::new(scen, Model::ResNet101, rng.range_usize(2, 12), rng.range_usize(1, 4), rng.next_u64())
             .generate();
         let fine = ms.quantize(50.0);
@@ -125,7 +132,7 @@ fn replay_with_jitter_stays_feasible_in_expectation() {
     // Failure injection: heavy jitter must never crash the replay engine
     // or produce non-finite makespans.
     prop::check(15, |rng| {
-        let scen = if rng.chance(0.5) { Scenario::S1 } else { Scenario::S2 };
+        let scen = any_scenario(rng);
         let ms = ScenarioCfg::new(scen, Model::Vgg19, rng.range_usize(2, 10), rng.range_usize(1, 3), rng.next_u64())
             .generate();
         let inst = ms.quantize(550.0);
@@ -165,4 +172,25 @@ fn memory_pressure_respected_under_tight_capacity() {
             prop::assert_prop(b.assignment.memory_ok(&inst), "baseline memory under pressure");
         }
     });
+}
+
+#[test]
+fn every_named_family_is_solvable_end_to_end() {
+    // Exhaustive (non-random) pass: every family × model must generate,
+    // quantize, and yield a feasible greedy schedule above the lower bound.
+    for scen in Scenario::ALL {
+        for model in [Model::ResNet101, Model::Vgg19] {
+            let slot = model.profile().default_slot_ms;
+            let inst = ScenarioCfg::new(scen, model, 8, 3, 2026).generate().quantize(slot);
+            let g = greedy::solve(&inst)
+                .unwrap_or_else(|| panic!("{}/{}: greedy found no schedule", scen.name(), model.name()));
+            assert!(g.is_feasible(&inst), "{}/{}: infeasible schedule", scen.name(), model.name());
+            assert!(
+                g.makespan(&inst) >= inst.makespan_lower_bound(),
+                "{}/{}: makespan below lower bound",
+                scen.name(),
+                model.name()
+            );
+        }
+    }
 }

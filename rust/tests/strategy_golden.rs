@@ -1,0 +1,74 @@
+//! Golden snapshot of the §VII solution-strategy pick rule over a fixed
+//! scenario × (J, I) grid. Every cell below sits well inside one side of
+//! the rule's thresholds, so a change in the chosen `Method` means the
+//! pick rule itself regressed (thresholds moved, a signal changed
+//! definition, or a scenario family drifted) — not sampling noise.
+
+use psl::instance::profiles::Model;
+use psl::instance::scenario::{Scenario, ScenarioCfg};
+use psl::solver::strategy::{self, Method};
+
+/// (scenario, J, I, expected method) — the golden grid.
+///
+/// Rationale per cell:
+/// * J ≤ 50 always routes to ADMM (size branch can't fire), independent
+///   of heterogeneity or memory signals.
+/// * J ≥ 100 with loose memory routes to balanced-greedy; S1 and
+///   s6-mega-homogeneous keep full-RAM helpers, so flexibility is 1.0.
+const GOLDEN: &[(Scenario, usize, usize, Method)] = &[
+    (Scenario::S1, 10, 2, Method::Admm),
+    (Scenario::S1, 20, 5, Method::Admm),
+    (Scenario::S1, 120, 10, Method::BalancedGreedy),
+    (Scenario::S2, 20, 5, Method::Admm),
+    (Scenario::S2, 40, 8, Method::Admm),
+    (Scenario::S3Clustered, 24, 6, Method::Admm),
+    (Scenario::S4StragglerTail, 16, 4, Method::Admm),
+    (Scenario::S5MemoryStarved, 12, 4, Method::Admm),
+    (Scenario::S6MegaHomogeneous, 120, 8, Method::BalancedGreedy),
+    (Scenario::S6MegaHomogeneous, 200, 10, Method::BalancedGreedy),
+];
+
+const GOLDEN_SEED: u64 = 7_042;
+const GOLDEN_SLOT_MS: f64 = 180.0;
+
+fn snapshot() -> String {
+    GOLDEN
+        .iter()
+        .map(|&(scen, j, i, _)| {
+            let inst = ScenarioCfg::new(scen, Model::ResNet101, j, i, GOLDEN_SEED)
+                .generate()
+                .quantize(GOLDEN_SLOT_MS);
+            format!("{} J={j} I={i} -> {}", scen.name(), strategy::pick(&inst).name())
+        })
+        .collect::<Vec<_>>()
+        .join("\n")
+}
+
+#[test]
+fn pick_rule_matches_golden_grid() {
+    let expected = GOLDEN
+        .iter()
+        .map(|&(scen, j, i, m)| format!("{} J={j} I={i} -> {}", scen.name(), m.name()))
+        .collect::<Vec<_>>()
+        .join("\n");
+    assert_eq!(snapshot(), expected, "strategy pick rule diverged from the golden grid");
+}
+
+#[test]
+fn golden_picks_stable_across_seeds() {
+    // The margins are wide enough that the pick must not depend on the
+    // instance seed.
+    for seed in [1u64, 99, 12_345] {
+        for &(scen, j, i, expected) in GOLDEN {
+            let inst = ScenarioCfg::new(scen, Model::ResNet101, j, i, seed)
+                .generate()
+                .quantize(GOLDEN_SLOT_MS);
+            assert_eq!(
+                strategy::pick(&inst),
+                expected,
+                "{} J={j} I={i} seed={seed}",
+                scen.name()
+            );
+        }
+    }
+}

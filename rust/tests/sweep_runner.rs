@@ -1,0 +1,121 @@
+//! Integration tests for the multi-threaded sweep runner: deterministic
+//! per-cell seeding (same grid + seed ⇒ byte-identical JSON regardless of
+//! thread count) and canonical merge order.
+
+use psl::bench::sweep::{cell_seed, cells, rows_to_json, run, SweepCfg};
+use psl::instance::profiles::Model;
+use psl::instance::scenario::Scenario;
+
+fn grid_cfg(threads: usize) -> SweepCfg {
+    SweepCfg {
+        scenarios: vec![
+            Scenario::S1,
+            Scenario::S3Clustered,
+            Scenario::S5MemoryStarved,
+            Scenario::S6MegaHomogeneous,
+        ],
+        models: vec![Model::Vgg19],
+        sizes: vec![(4, 2), (6, 2)],
+        seeds: vec![7, 8],
+        methods: vec!["greedy".to_string(), "baseline".to_string()],
+        slot_ms: Some(550.0),
+        threads,
+    }
+}
+
+#[test]
+fn json_byte_identical_across_thread_counts() {
+    let one = rows_to_json(&run(&grid_cfg(1))).pretty();
+    let four = rows_to_json(&run(&grid_cfg(4))).pretty();
+    let eight = rows_to_json(&run(&grid_cfg(8))).pretty();
+    assert_eq!(one, four, "1-thread and 4-thread sweeps must serialize identically");
+    assert_eq!(one, eight, "1-thread and 8-thread sweeps must serialize identically");
+}
+
+#[test]
+fn rows_merge_in_canonical_grid_order() {
+    let cfg = grid_cfg(4);
+    let grid = cells(&cfg);
+    let rows = run(&cfg);
+    assert_eq!(rows.len(), grid.len());
+    assert_eq!(rows.len(), 4 * 1 * 2 * 2 * 2, "4 scenarios x 1 model x 2 sizes x 2 seeds x 2 methods");
+    for (row, cell) in rows.iter().zip(&grid) {
+        assert_eq!(row.scenario, cell.scenario.name());
+        assert_eq!(row.model, cell.model.name());
+        assert_eq!(row.n_clients, cell.n_clients);
+        assert_eq!(row.n_helpers, cell.n_helpers);
+        assert_eq!(row.seed, cell.seed);
+        assert_eq!(row.method, cell.method);
+    }
+    // Canonical order: all of scenario1's cells precede s3-clustered's.
+    let s1_last = rows.iter().rposition(|r| r.scenario == "scenario1").unwrap();
+    let s3_first = rows.iter().position(|r| r.scenario == "s3-clustered").unwrap();
+    assert!(s1_last < s3_first);
+}
+
+#[test]
+fn per_cell_seeds_are_order_independent() {
+    // The baseline's RNG stream is a function of the cell coordinates
+    // only, so permuting the grid definition must not change any cell's
+    // result row.
+    let forward = run(&grid_cfg(2));
+    let mut reversed_cfg = grid_cfg(2);
+    reversed_cfg.scenarios.reverse();
+    reversed_cfg.seeds.reverse();
+    let reversed = run(&reversed_cfg);
+    for row in &forward {
+        let twin = reversed
+            .iter()
+            .find(|r| {
+                r.scenario == row.scenario
+                    && r.seed == row.seed
+                    && r.n_clients == row.n_clients
+                    && r.n_helpers == row.n_helpers
+                    && r.method == row.method
+            })
+            .expect("every cell exists in the permuted sweep");
+        assert_eq!(twin, row, "cell result depends on grid position");
+    }
+}
+
+#[test]
+fn changing_the_seed_changes_the_outcome_stream() {
+    let mut a_cfg = grid_cfg(1);
+    a_cfg.seeds = vec![7];
+    let mut b_cfg = grid_cfg(1);
+    b_cfg.seeds = vec![8];
+    let a = rows_to_json(&run(&a_cfg)).pretty();
+    let b = rows_to_json(&run(&b_cfg)).pretty();
+    assert_ne!(a, b, "different base seeds must produce different sweeps");
+    // And cell seeds differ per-coordinate.
+    let ca = cells(&a_cfg);
+    let cb = cells(&b_cfg);
+    assert_ne!(cell_seed(&ca[0]), cell_seed(&cb[0]));
+}
+
+#[test]
+fn full_family_strategy_sweep_is_deterministic() {
+    // The acceptance-criteria shape: >= 4 families x >= 2 solvers across
+    // multiple threads, with the strategy method recording its pick.
+    let cfg = SweepCfg {
+        scenarios: vec![
+            Scenario::S1,
+            Scenario::S2,
+            Scenario::S4StragglerTail,
+            Scenario::S6MegaHomogeneous,
+        ],
+        models: vec![Model::Vgg19],
+        sizes: vec![(5, 2)],
+        seeds: vec![21],
+        methods: vec!["strategy".to_string(), "greedy".to_string()],
+        slot_ms: Some(550.0),
+        threads: 3,
+    };
+    let a = run(&cfg);
+    let b = run(&cfg);
+    assert_eq!(a, b);
+    for r in a.iter().filter(|r| r.method == "strategy") {
+        assert!(r.picked.is_some(), "{}: strategy row missing pick", r.scenario);
+        assert!(r.makespan_slots.unwrap() >= r.lower_bound);
+    }
+}
