@@ -1,0 +1,259 @@
+//! Multi-threaded fleet-orchestration grid (`psl fleet --grid`): run
+//! `scenarios × churn-rates × policies × seeds` fleet simulations across
+//! the worker pool and merge per-cell summaries back into canonical grid
+//! order — the dataset that answers *when does incremental repair beat
+//! full re-solving*.
+//!
+//! Like [`super::sweep`], every cell is self-contained (its world, event
+//! stream and round loop derive from the cell coordinates alone), so the
+//! output JSON is byte-identical regardless of thread count.
+
+use crate::exec::pool;
+use crate::fleet::events::ChurnCfg;
+use crate::fleet::orchestrator::{self, FleetCfg, Policy};
+use crate::instance::profiles::Model;
+use crate::instance::scenario::{Scenario, ScenarioCfg};
+use crate::util::json::Json;
+
+/// Fleet grid configuration.
+#[derive(Clone, Debug)]
+pub struct FleetGridCfg {
+    pub scenarios: Vec<Scenario>,
+    pub model: Model,
+    /// (base clients, helpers).
+    pub size: (usize, usize),
+    /// Per-round departure probability; arrivals balance at `rate × J`
+    /// so the expected roster stays stationary.
+    pub churn_rates: Vec<f64>,
+    pub policies: Vec<Policy>,
+    pub seeds: Vec<u64>,
+    pub rounds: usize,
+    /// None → the model's default |S_t|.
+    pub slot_ms: Option<f64>,
+    pub threads: usize,
+}
+
+impl Default for FleetGridCfg {
+    fn default() -> Self {
+        FleetGridCfg {
+            scenarios: vec![Scenario::S1, Scenario::S4StragglerTail],
+            model: Model::ResNet101,
+            size: (10, 2),
+            churn_rates: vec![0.05, 0.15, 0.3],
+            policies: vec![Policy::Incremental, Policy::FullEveryRound],
+            seeds: vec![42],
+            rounds: 8,
+            slot_ms: None,
+            threads: pool::default_workers(),
+        }
+    }
+}
+
+/// One grid cell.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FleetCell {
+    pub scenario: Scenario,
+    pub churn_rate: f64,
+    pub policy: Policy,
+    pub seed: u64,
+}
+
+/// One deterministic summary row.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FleetGridRow {
+    pub scenario: &'static str,
+    pub model: &'static str,
+    pub n_clients: usize,
+    pub n_helpers: usize,
+    pub churn_rate: f64,
+    pub policy: &'static str,
+    pub seed: u64,
+    pub rounds: usize,
+    pub full_rounds: usize,
+    pub repair_rounds: usize,
+    pub empty_rounds: usize,
+    pub mean_makespan_ms: f64,
+    pub mean_period_ms: f64,
+    pub total_work_units: u64,
+}
+
+/// Enumerate the grid in canonical order:
+/// scenario → churn rate → policy → seed.
+pub fn cells(cfg: &FleetGridCfg) -> Vec<FleetCell> {
+    let mut out = Vec::new();
+    for &scenario in &cfg.scenarios {
+        for &churn_rate in &cfg.churn_rates {
+            for &policy in &cfg.policies {
+                for &seed in &cfg.seeds {
+                    out.push(FleetCell { scenario, churn_rate, policy, seed });
+                }
+            }
+        }
+    }
+    out
+}
+
+/// The orchestrator config behind one cell: the stationary defaults at
+/// the cell's churn rate (departures at `rate`, arrivals at `rate × J`).
+pub fn cell_cfg(grid: &FleetGridCfg, c: &FleetCell) -> FleetCfg {
+    let (j, i) = grid.size;
+    let scen = ScenarioCfg::new(c.scenario, grid.model, j, i, c.seed);
+    let mut churn = ChurnCfg::stationary(j);
+    churn.rounds = grid.rounds;
+    churn.departure_prob = c.churn_rate;
+    churn.arrival_rate = c.churn_rate * j as f64;
+    let mut cfg = FleetCfg::new(scen, churn, c.policy);
+    cfg.slot_ms = grid.slot_ms;
+    cfg
+}
+
+/// Run one cell: a full fleet simulation, summarized.
+pub fn run_cell(grid: &FleetGridCfg, c: &FleetCell) -> FleetGridRow {
+    let report = orchestrator::run(&cell_cfg(grid, c));
+    FleetGridRow {
+        scenario: c.scenario.name(),
+        model: grid.model.name(),
+        n_clients: grid.size.0,
+        n_helpers: grid.size.1,
+        churn_rate: c.churn_rate,
+        policy: c.policy.name(),
+        seed: c.seed,
+        rounds: report.rounds.len(),
+        full_rounds: report.full_rounds(),
+        repair_rounds: report.repair_rounds(),
+        empty_rounds: report.empty_rounds(),
+        mean_makespan_ms: report.mean_makespan_ms(),
+        mean_period_ms: report.mean_period_ms(),
+        total_work_units: report.total_work_units(),
+    }
+}
+
+/// Run the whole grid across `cfg.threads` workers; results merge in
+/// canonical grid order regardless of scheduling.
+pub fn run(cfg: &FleetGridCfg) -> Vec<FleetGridRow> {
+    let grid = cells(cfg);
+    let jobs: Vec<Box<dyn FnOnce() -> FleetGridRow + Send>> = grid
+        .into_iter()
+        .map(|c| {
+            let cfg = cfg.clone();
+            Box::new(move || run_cell(&cfg, &c)) as Box<dyn FnOnce() -> FleetGridRow + Send>
+        })
+        .collect();
+    pool::run_parallel(cfg.threads, jobs)
+}
+
+/// Serialize rows to the deterministic fleet-grid JSON document.
+pub fn rows_to_json(rows: &[FleetGridRow]) -> Json {
+    Json::obj(vec![
+        ("kind", Json::Str("psl-fleet-grid".to_string())),
+        (
+            "rows",
+            Json::Arr(
+                rows.iter()
+                    .map(|r| {
+                        Json::obj(vec![
+                            ("scenario", Json::Str(r.scenario.to_string())),
+                            ("model", Json::Str(r.model.to_string())),
+                            ("n_clients", Json::Num(r.n_clients as f64)),
+                            ("n_helpers", Json::Num(r.n_helpers as f64)),
+                            ("churn_rate", Json::Num(r.churn_rate)),
+                            ("policy", Json::Str(r.policy.to_string())),
+                            // Seeds replay exactly → string (sweep precedent).
+                            ("seed", Json::Str(r.seed.to_string())),
+                            ("rounds", Json::Num(r.rounds as f64)),
+                            ("full_rounds", Json::Num(r.full_rounds as f64)),
+                            ("repair_rounds", Json::Num(r.repair_rounds as f64)),
+                            ("empty_rounds", Json::Num(r.empty_rounds as f64)),
+                            ("mean_makespan_ms", Json::Num(r.mean_makespan_ms)),
+                            ("mean_period_ms", Json::Num(r.mean_period_ms)),
+                            ("total_work_units", Json::Str(r.total_work_units.to_string())),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ])
+}
+
+/// Persist under `target/psl-bench/<name>.json`. Returns the path.
+pub fn save(rows: &[FleetGridRow], name: &str) -> std::io::Result<std::path::PathBuf> {
+    super::save_artifact(name, &rows_to_json(rows))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny(threads: usize) -> FleetGridCfg {
+        FleetGridCfg {
+            scenarios: vec![Scenario::S1, Scenario::S4StragglerTail],
+            model: Model::Vgg19,
+            size: (6, 2),
+            churn_rates: vec![0.1, 0.25],
+            policies: vec![Policy::Incremental, Policy::FullEveryRound],
+            seeds: vec![7],
+            rounds: 5,
+            slot_ms: Some(550.0),
+            threads,
+        }
+    }
+
+    #[test]
+    fn canonical_cell_order() {
+        let cs = cells(&tiny(1));
+        assert_eq!(cs.len(), 8);
+        assert_eq!(cs[0], FleetCell { scenario: Scenario::S1, churn_rate: 0.1, policy: Policy::Incremental, seed: 7 });
+        assert_eq!(cs[1].policy, Policy::FullEveryRound);
+        assert_eq!(cs[2].churn_rate, 0.25);
+        assert_eq!(cs[4].scenario, Scenario::S4StragglerTail);
+    }
+
+    #[test]
+    fn thread_count_invariant() {
+        let a = rows_to_json(&run(&tiny(1))).pretty();
+        let b = rows_to_json(&run(&tiny(4))).pretty();
+        assert_eq!(a, b, "fleet grid must not depend on thread count");
+    }
+
+    #[test]
+    fn rows_align_with_cells() {
+        let cfg = tiny(2);
+        let rows = run(&cfg);
+        let grid = cells(&cfg);
+        assert_eq!(rows.len(), grid.len());
+        for (row, cell) in rows.iter().zip(&grid) {
+            assert_eq!(row.scenario, cell.scenario.name());
+            assert_eq!(row.policy, cell.policy.name());
+            assert_eq!(row.seed, cell.seed);
+            assert_eq!(row.rounds, 5);
+            assert_eq!(row.full_rounds + row.repair_rounds + row.empty_rounds, row.rounds);
+        }
+    }
+
+    #[test]
+    fn full_policy_rows_have_no_repairs() {
+        for row in run(&tiny(2)).iter().filter(|r| r.policy == "full") {
+            assert_eq!(row.repair_rounds, 0, "{row:?}");
+            assert!(row.full_rounds >= 1);
+        }
+    }
+
+    #[test]
+    fn incremental_spends_less_work_than_full() {
+        // The headline claim of the subsystem: at moderate churn the
+        // incremental policy's deterministic cost proxy is below the
+        // full-every-round arm on the same (scenario, churn, seed) cell.
+        let rows = run(&tiny(1));
+        let pair = |scenario: &str, churn: f64| {
+            let find = |p: &str| {
+                rows.iter()
+                    .find(|r| r.scenario == scenario && (r.churn_rate - churn).abs() < 1e-12 && r.policy == p)
+                    .unwrap()
+                    .total_work_units
+            };
+            (find("incremental"), find("full"))
+        };
+        let (inc, full) = pair("scenario1", 0.1);
+        assert!(inc < full, "incremental {inc} !< full {full}");
+    }
+}

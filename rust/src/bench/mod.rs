@@ -1,10 +1,24 @@
 //! Benchmark substrate used by the `rust/benches/*` targets (`cargo
 //! bench` with `harness = false`) — see DESIGN.md §4 for the table/figure
 //! mapping — plus the multi-threaded scenario × solver sweep runner
-//! behind `psl sweep` ([`sweep`]).
+//! behind `psl sweep` ([`sweep`]) and the fleet-orchestration grid behind
+//! `psl fleet --grid` ([`fleet`]).
 
+pub mod fleet;
 pub mod harness;
 pub mod sweep;
 
+pub use fleet::{FleetGridCfg, FleetGridRow};
 pub use harness::{fmt_s, time_fn, Report};
 pub use sweep::{SweepCfg, SweepRow};
+
+/// Write a deterministic JSON artifact under
+/// `target/psl-bench/<name>.json` (the single location every runner —
+/// sweep, fleet, fleet grid — persists to). Returns the path.
+pub fn save_artifact(name: &str, doc: &crate::util::json::Json) -> std::io::Result<std::path::PathBuf> {
+    let dir = std::path::Path::new("target/psl-bench");
+    std::fs::create_dir_all(dir)?;
+    let path = dir.join(format!("{name}.json"));
+    std::fs::write(&path, doc.pretty())?;
+    Ok(path)
+}

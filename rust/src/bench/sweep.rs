@@ -228,14 +228,104 @@ pub fn rows_to_json(rows: &[SweepRow]) -> Json {
     ])
 }
 
-/// Persist under `target/psl-bench/<name>.json` (same location the bench
-/// harness uses). Returns the path.
+/// Persist under `target/psl-bench/<name>.json`. Returns the path.
 pub fn save(rows: &[SweepRow], name: &str) -> std::io::Result<std::path::PathBuf> {
-    let dir = std::path::Path::new("target/psl-bench");
-    std::fs::create_dir_all(dir)?;
-    let path = dir.join(format!("{name}.json"));
-    std::fs::write(&path, rows_to_json(rows).pretty())?;
-    Ok(path)
+    super::save_artifact(name, &rows_to_json(rows))
+}
+
+// ---- sweep artifact diff (`psl sweep --diff`) ---------------------------
+
+/// One per-cell makespan regression found by [`diff_documents`].
+#[derive(Clone, Debug, PartialEq)]
+pub struct Regression {
+    /// Human-readable cell key (scenario/model/JxI/seed/slot/method).
+    pub cell: String,
+    /// `makespan_ms` in the old artifact (None = infeasible there).
+    pub old_ms: Option<f64>,
+    /// `makespan_ms` in the new artifact (None = infeasible now).
+    pub new_ms: Option<f64>,
+}
+
+/// Cell-by-cell comparison of two sweep artifacts.
+#[derive(Clone, Debug, Default)]
+pub struct DiffReport {
+    /// Cells present in both artifacts.
+    pub compared: usize,
+    /// Cells whose new makespan exceeds old × (1 + tol), or that lost
+    /// feasibility.
+    pub regressions: Vec<Regression>,
+    /// Cells whose new makespan improved beyond the tolerance.
+    pub improved: usize,
+    /// Cells only in the old / only in the new artifact (grid drift —
+    /// reported, not failed).
+    pub only_old: usize,
+    pub only_new: usize,
+}
+
+/// Index a sweep document's rows by their cell coordinates.
+fn index_rows(doc: &Json) -> anyhow::Result<std::collections::BTreeMap<String, Option<f64>>> {
+    // Other target/psl-bench artifacts (fleet, fleet-grid) also carry a
+    // rows[]/detail array; diffing one here would silently compare
+    // nothing, so pin the kind.
+    let kind = doc.get("kind").as_str().unwrap_or("");
+    anyhow::ensure!(kind == "psl-sweep", "not a sweep artifact (kind {kind:?}, expected \"psl-sweep\")");
+    let rows = doc.get("rows").as_arr().ok_or_else(|| anyhow::anyhow!("not a sweep artifact: missing rows[]"))?;
+    let mut out = std::collections::BTreeMap::new();
+    for r in rows {
+        let key = format!(
+            "{}/{} {}x{} seed={} slot={} {}",
+            r.get("scenario").as_str().unwrap_or("?"),
+            r.get("model").as_str().unwrap_or("?"),
+            r.get("n_clients").as_f64().unwrap_or(-1.0),
+            r.get("n_helpers").as_f64().unwrap_or(-1.0),
+            r.get("seed").as_str().unwrap_or("?"),
+            r.get("slot_ms").as_f64().unwrap_or(-1.0),
+            r.get("method").as_str().unwrap_or("?"),
+        );
+        out.insert(key, r.get("makespan_ms").as_f64());
+    }
+    Ok(out)
+}
+
+/// Compare two sweep artifacts cell-by-cell: a cell regresses when its
+/// new `makespan_ms` exceeds the old by more than `tol` (relative), or
+/// when a previously feasible cell became infeasible. Cells present in
+/// only one artifact are counted but do not fail the diff.
+pub fn diff_documents(old: &Json, new: &Json, tol: f64) -> anyhow::Result<DiffReport> {
+    let old_rows = index_rows(old)?;
+    let new_rows = index_rows(new)?;
+    let mut report = DiffReport::default();
+    for (key, old_ms) in &old_rows {
+        match new_rows.get(key) {
+            None => report.only_old += 1,
+            Some(new_ms) => {
+                report.compared += 1;
+                match (old_ms, new_ms) {
+                    (Some(o), Some(n)) => {
+                        if *n > o * (1.0 + tol) {
+                            report.regressions.push(Regression {
+                                cell: key.clone(),
+                                old_ms: Some(*o),
+                                new_ms: Some(*n),
+                            });
+                        } else if *n < o * (1.0 - tol) {
+                            report.improved += 1;
+                        }
+                    }
+                    (Some(o), None) => report.regressions.push(Regression {
+                        cell: key.clone(),
+                        old_ms: Some(*o),
+                        new_ms: None,
+                    }),
+                    // Newly feasible counts as an improvement.
+                    (None, Some(_)) => report.improved += 1,
+                    (None, None) => {}
+                }
+            }
+        }
+    }
+    report.only_new = new_rows.keys().filter(|k| !old_rows.contains_key(*k)).count();
+    Ok(report)
 }
 
 #[cfg(test)]
@@ -285,6 +375,66 @@ mod tests {
         let b = run(&tiny_cfg(4));
         assert_eq!(a, b);
         assert_eq!(rows_to_json(&a).pretty(), rows_to_json(&b).pretty());
+    }
+
+    #[test]
+    fn diff_self_is_clean() {
+        let doc = rows_to_json(&run(&tiny_cfg(1)));
+        let d = diff_documents(&doc, &doc, 0.02).unwrap();
+        assert_eq!(d.compared, 4);
+        assert!(d.regressions.is_empty());
+        assert_eq!(d.improved, 0);
+        assert_eq!(d.only_old + d.only_new, 0);
+    }
+
+    #[test]
+    fn diff_flags_regressions_and_respects_tolerance() {
+        let rows = run(&tiny_cfg(1));
+        let old = rows_to_json(&rows);
+        let mut worse = rows.clone();
+        // Degrade one cell by 10%.
+        let m = worse[0].makespan_ms.unwrap();
+        worse[0].makespan_ms = Some(m * 1.10);
+        let new = rows_to_json(&worse);
+        let d = diff_documents(&old, &new, 0.02).unwrap();
+        assert_eq!(d.regressions.len(), 1, "{:?}", d.regressions);
+        assert!(d.regressions[0].cell.contains("scenario1"));
+        // A 20% tolerance swallows the same delta.
+        let loose = diff_documents(&old, &new, 0.2).unwrap();
+        assert!(loose.regressions.is_empty());
+        // The reverse direction is an improvement, not a regression.
+        let rev = diff_documents(&new, &old, 0.02).unwrap();
+        assert!(rev.regressions.is_empty());
+        assert_eq!(rev.improved, 1);
+    }
+
+    #[test]
+    fn diff_counts_lost_feasibility_and_grid_drift() {
+        let rows = run(&tiny_cfg(1));
+        let old = rows_to_json(&rows);
+        let mut changed = rows.clone();
+        changed[1].makespan_ms = None;
+        changed[1].makespan_slots = None;
+        changed.pop();
+        let new = rows_to_json(&changed);
+        let d = diff_documents(&old, &new, 0.02).unwrap();
+        assert_eq!(d.regressions.len(), 1, "lost feasibility is a regression");
+        assert_eq!(d.regressions[0].new_ms, None);
+        assert_eq!(d.only_old, 1, "dropped cell is reported as grid drift");
+    }
+
+    #[test]
+    fn diff_rejects_non_sweep_documents() {
+        let doc = rows_to_json(&run(&tiny_cfg(1)));
+        assert!(diff_documents(&Json::Num(3.0), &doc, 0.02).is_err());
+        // A different psl-bench artifact kind with a rows[] array must be
+        // rejected, not silently compared as zero cells.
+        let fleet_grid = Json::obj(vec![
+            ("kind", Json::Str("psl-fleet-grid".to_string())),
+            ("rows", Json::Arr(vec![])),
+        ]);
+        let err = diff_documents(&fleet_grid, &doc, 0.02).unwrap_err();
+        assert!(err.to_string().contains("psl-fleet-grid"), "{err}");
     }
 
     #[test]

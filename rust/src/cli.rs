@@ -7,6 +7,8 @@
 //!   psl train <fleet args>            end-to-end split training over PJRT
 //!   psl sweep-slots <scenario args>   Fig-6-style slot-length sweep
 //!   psl sweep <grid args>             multi-threaded scenario × solver grid
+//!   psl sweep --diff <old> <new>      compare two sweep artifacts
+//!   psl fleet <churn args>            multi-round churn orchestration
 //!
 //! Common scenario args: --scenario 1..6  --model resnet101|vgg19  -j N
 //! -i N  --seed S  --slot-ms X. Run `psl help` for the full list.
@@ -88,6 +90,14 @@ COMMANDS
                 compare nominal vs realized makespan (Fig 6 logic).
   sweep         Run the full scenario × solver grid across worker threads
                 and save deterministic JSON under target/psl-bench/.
+                With --diff OLD NEW: compare two sweep artifacts cell by
+                cell and exit non-zero on makespan regressions.
+  fleet         Run a seeded multi-round churn simulation: clients arrive
+                and depart between rounds; the orchestrator repairs the
+                previous assignment incrementally and falls back to a
+                full re-solve on drift. Deterministic JSON report under
+                target/psl-bench/. With --grid: the scenario x churn-rate
+                x policy grid across worker threads.
   help          This text.
 
 SCENARIO FLAGS (gen/solve/sweep-slots)
@@ -116,6 +126,25 @@ SWEEP FLAGS
   --slot-ms X           override every model's |S_t|
   --threads N           worker threads                 [default: all cores]
   --out NAME            output name under target/psl-bench [default sweep]
+  --diff OLD NEW        diff two sweep JSONs instead of running a grid
+  --tol X               relative regression tolerance  [default 0.02]
+
+FLEET FLAGS (plus --scenario/--model/-j/-i/--seed/--slot-ms; scenario
+defaults to s4-straggler-tail)
+  --rounds N            training rounds                [default 8]
+  --depart-prob P       per-client departure prob      [default 0.12]
+  --arrival-rate R      expected arrivals per round    [default P*J]
+  --max-clients N       roster-size cap                [default 2*J]
+  --policy NAME         incremental|full|repair-only   [default incremental]
+  --churn-threshold F   full re-solve when membership delta > F  [0.35]
+  --gap-threshold F     full re-solve when repair gap > F x last full [1.75]
+  --batches B           batches for the epoch period metric      [8]
+  --out NAME            output name under target/psl-bench [default fleet]
+  --grid                run the scenario x churn-rate x policy grid
+                        (--scenarios, --churn-rates, --policies, --seeds,
+                        --threads as in sweep; --out default fleet-grid;
+                        single-run knobs like --policy/--depart-prob are
+                        rejected — cells use stationary defaults)
 
 SOLVE FLAGS
   --method admm|greedy|baseline|exact|strategy|all     [default all]

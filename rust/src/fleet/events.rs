@@ -1,0 +1,232 @@
+//! Deterministic arrival/departure event streams for multi-round fleets.
+//!
+//! Round 0 is the base population (ids `0..J`). Between consecutive
+//! rounds each present client departs with probability `departure_prob`
+//! and `Poisson(arrival_rate)` new clients arrive (capped so the roster
+//! never exceeds `max_clients`, the bound the [`FleetWorld`]'s memory
+//! repair was sized for). Arrival ids continue the sequence and are never
+//! reused, so a client's identity — and every draw behind it — is stable
+//! across the whole run.
+//!
+//! The stream is a pure function of `(base population, churn knobs,
+//! seed)`: replaying a fleet run with the same tuple reproduces the exact
+//! same membership history, independent of thread count or wall clock.
+//!
+//! [`FleetWorld`]: crate::instance::scenario::FleetWorld
+
+use crate::util::rng::{fnv64 as fnv, Rng};
+
+/// Churn-process knobs for a fleet run.
+#[derive(Clone, Debug)]
+pub struct ChurnCfg {
+    /// Number of training rounds to simulate (≥ 1).
+    pub rounds: usize,
+    /// Expected arrivals per round (Poisson rate).
+    pub arrival_rate: f64,
+    /// Per-client per-round departure probability.
+    pub departure_prob: f64,
+    /// Hard roster-size cap; arrivals beyond it are deferred (dropped
+    /// from this round's admission, the rate keeps pressure up). A base
+    /// population larger than the cap raises the effective cap to the
+    /// base size — the initial fleet is never evicted to fit (the
+    /// [`FleetWorld`] memory repair applies the same `max(base)` rule).
+    ///
+    /// [`FleetWorld`]: crate::instance::scenario::FleetWorld
+    pub max_clients: usize,
+}
+
+impl ChurnCfg {
+    /// Stationary default for a base population of `j`: departures at
+    /// rate 0.12 balanced by 0.12·J expected arrivals, roster capped at
+    /// 2·J.
+    pub fn stationary(j: usize) -> ChurnCfg {
+        ChurnCfg {
+            rounds: 8,
+            arrival_rate: 0.12 * j as f64,
+            departure_prob: 0.12,
+            max_clients: (2 * j).max(1),
+        }
+    }
+}
+
+/// Membership delta and resulting roster for one round.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct RoundEvents {
+    pub round: usize,
+    /// Ids departing before this round (subset of the previous roster).
+    pub departures: Vec<u64>,
+    /// Ids arriving before this round (freshly minted, strictly above
+    /// every id seen so far).
+    pub arrivals: Vec<u64>,
+    /// Membership for this round, sorted by id.
+    pub roster: Vec<u64>,
+}
+
+impl RoundEvents {
+    /// Fraction of the previous roster that changed (arrivals +
+    /// departures over the previous size) — the orchestrator's churn
+    /// drift signal.
+    pub fn churn_fraction(&self, prev_roster_len: usize) -> f64 {
+        (self.arrivals.len() + self.departures.len()) as f64 / prev_roster_len.max(1) as f64
+    }
+}
+
+/// Knuth's Poisson sampler (λ small — per-round arrival rates).
+fn poisson(rng: &mut Rng, lambda: f64) -> usize {
+    if lambda <= 0.0 {
+        return 0;
+    }
+    let l = (-lambda).exp();
+    let mut k = 0usize;
+    let mut p = 1.0;
+    loop {
+        p *= rng.f64();
+        if p <= l || k >= 10_000 {
+            return k;
+        }
+        k += 1;
+    }
+}
+
+/// Generate the full event stream for a run. `base_clients` are ids
+/// `0..J` present in round 0; `seed` should already mix the scenario
+/// tuple (the orchestrator passes `cfg.seed ^ fnv(spec.name)`); the
+/// stream label is mixed in here.
+pub fn generate(base_clients: usize, churn: &ChurnCfg, seed: u64) -> Vec<RoundEvents> {
+    assert!(churn.rounds >= 1, "a fleet run needs at least one round");
+    let cap = churn.max_clients.max(base_clients);
+    let mut rng = Rng::seeded(seed ^ fnv("fleet-events"));
+    let mut roster: Vec<u64> = (0..base_clients as u64).collect();
+    let mut next_id = base_clients as u64;
+    let mut out = Vec::with_capacity(churn.rounds);
+    out.push(RoundEvents { round: 0, departures: vec![], arrivals: vec![], roster: roster.clone() });
+    for round in 1..churn.rounds {
+        let mut departures = Vec::new();
+        let mut stayed = Vec::with_capacity(roster.len());
+        for &id in &roster {
+            if rng.chance(churn.departure_prob) {
+                departures.push(id);
+            } else {
+                stayed.push(id);
+            }
+        }
+        let want = poisson(&mut rng, churn.arrival_rate);
+        let admit = want.min(cap.saturating_sub(stayed.len()));
+        let arrivals: Vec<u64> = (0..admit as u64).map(|k| next_id + k).collect();
+        next_id += admit as u64;
+        roster = stayed;
+        roster.extend(&arrivals);
+        roster.sort_unstable();
+        out.push(RoundEvents { round, departures, arrivals, roster: roster.clone() });
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn churn() -> ChurnCfg {
+        ChurnCfg { rounds: 12, arrival_rate: 1.5, departure_prob: 0.2, max_clients: 20 }
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a = generate(10, &churn(), 7);
+        let b = generate(10, &churn(), 7);
+        assert_eq!(a, b);
+        let c = generate(10, &churn(), 8);
+        assert_ne!(a, c, "different seeds must yield different streams");
+    }
+
+    #[test]
+    fn round0_is_base_population() {
+        let ev = generate(6, &churn(), 3);
+        assert_eq!(ev[0].roster, vec![0, 1, 2, 3, 4, 5]);
+        assert!(ev[0].arrivals.is_empty() && ev[0].departures.is_empty());
+    }
+
+    #[test]
+    fn ids_never_reused_and_monotone() {
+        let ev = generate(8, &churn(), 11);
+        let mut seen: std::collections::BTreeSet<u64> = ev[0].roster.iter().copied().collect();
+        for r in &ev[1..] {
+            for &id in &r.arrivals {
+                assert!(id >= seen.iter().max().map(|&m| m + 1).unwrap_or(0), "arrival id {id} not fresh");
+                assert!(seen.insert(id), "id {id} reused");
+            }
+        }
+    }
+
+    #[test]
+    fn roster_evolution_consistent() {
+        let ev = generate(8, &churn(), 5);
+        for w in ev.windows(2) {
+            let (prev, next) = (&w[0], &w[1]);
+            let mut expect: Vec<u64> = prev.roster.iter().copied().filter(|id| !next.departures.contains(id)).collect();
+            expect.extend(&next.arrivals);
+            expect.sort_unstable();
+            assert_eq!(next.roster, expect, "round {}", next.round);
+            assert!(next.departures.iter().all(|id| prev.roster.contains(id)));
+        }
+    }
+
+    #[test]
+    fn max_clients_respected() {
+        let cfg = ChurnCfg { rounds: 30, arrival_rate: 5.0, departure_prob: 0.01, max_clients: 12 };
+        for r in generate(10, &cfg, 4) {
+            assert!(r.roster.len() <= 12, "round {} roster {}", r.round, r.roster.len());
+        }
+    }
+
+    #[test]
+    fn base_population_larger_than_cap_is_never_evicted() {
+        // The cap governs admission, not eviction: a base fleet bigger
+        // than max_clients stays whole, and no arrivals are admitted
+        // until departures open headroom under the raised cap.
+        let cfg = ChurnCfg { rounds: 5, arrival_rate: 3.0, departure_prob: 0.0, max_clients: 4 };
+        let ev = generate(10, &cfg, 6);
+        assert_eq!(ev[0].roster.len(), 10);
+        for r in &ev {
+            assert_eq!(r.roster.len(), 10, "effective cap = base size");
+            assert!(r.arrivals.is_empty(), "no headroom below the raised cap");
+        }
+    }
+
+    #[test]
+    fn zero_churn_keeps_roster_static() {
+        let cfg = ChurnCfg { rounds: 6, arrival_rate: 0.0, departure_prob: 0.0, max_clients: 10 };
+        let ev = generate(5, &cfg, 9);
+        for r in &ev {
+            assert_eq!(r.roster, ev[0].roster);
+            assert!(r.arrivals.is_empty() && r.departures.is_empty());
+        }
+    }
+
+    #[test]
+    fn full_departure_rounds_are_representable() {
+        // With certain departure and no arrivals the roster empties and
+        // stays empty — the stream itself never panics.
+        let cfg = ChurnCfg { rounds: 4, arrival_rate: 0.0, departure_prob: 1.0, max_clients: 10 };
+        let ev = generate(3, &cfg, 2);
+        assert_eq!(ev[1].departures.len(), 3);
+        assert!(ev[1].roster.is_empty());
+        assert!(ev[3].roster.is_empty());
+    }
+
+    #[test]
+    fn churn_fraction_counts_both_directions() {
+        let r = RoundEvents { round: 1, departures: vec![0, 1], arrivals: vec![9], roster: vec![2, 9] };
+        assert!((r.churn_fraction(3) - 1.0).abs() < 1e-12);
+        assert!((r.churn_fraction(0) - 3.0).abs() < 1e-12, "empty previous roster guards the division");
+    }
+
+    #[test]
+    fn poisson_mean_in_ballpark() {
+        let mut rng = Rng::seeded(13);
+        let n = 20_000;
+        let total: usize = (0..n).map(|_| poisson(&mut rng, 2.5)).sum();
+        let mean = total as f64 / n as f64;
+        assert!((mean - 2.5).abs() < 0.1, "poisson mean {mean}");
+    }
+}

@@ -1,0 +1,34 @@
+//! Online fleet orchestration: multi-round churn simulation with
+//! incremental warm-started re-solving.
+//!
+//! The paper optimizes a *single batch*'s makespan; §III notes training
+//! repeats that workflow hundreds of times over a fleet whose membership
+//! shifts. This subsystem closes the loop: a seeded, deterministic
+//! multi-round run where clients arrive and depart between rounds
+//! ([`events`]), the orchestrator re-solves each round *incrementally* —
+//! warm-started repair of the previous round's assignment with a
+//! drift-triggered full re-solve fallback ([`orchestrator`]) — and every
+//! round's decision, cost proxy, makespan and epoch-pipelined period is
+//! recorded in a deterministic JSON report ([`report`]).
+//!
+//! | Module | Role |
+//! |---|---|
+//! | [`events`] | seeded arrival/departure stream, stable client ids, roster cap |
+//! | [`orchestrator`] | round loop, warm-start repair, churn/gap fallback policy |
+//! | [`report`] | per-round + summary JSON under `target/psl-bench/` |
+//!
+//! Clients are minted by the
+//! [`FleetWorld`](crate::instance::scenario::FleetWorld) factory from the
+//! scenario's `DeviceMix`/`LinkRegime`, so arrivals follow the same
+//! distributions as the base population and every client reproduces from
+//! `(scenario tuple, id)` alone. The `psl fleet` subcommand drives a
+//! single run; [`crate::bench::fleet`] fans a scenario × churn-rate ×
+//! policy grid across worker threads like `psl sweep`.
+
+pub mod events;
+pub mod orchestrator;
+pub mod report;
+
+pub use events::{ChurnCfg, RoundEvents};
+pub use orchestrator::{run, Decision, FleetCfg, Policy};
+pub use report::{FleetReport, RoundReport};

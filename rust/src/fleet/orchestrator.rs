@@ -1,0 +1,514 @@
+//! The multi-round fleet orchestrator: round loop + warm-started
+//! incremental repair + full re-solve fallback policy.
+//!
+//! Each round the orchestrator materializes the roster's instance from
+//! the [`FleetWorld`] client factory and produces a schedule one of two
+//! ways:
+//!
+//! * **Full re-solve** — run [`strategy`] (the §VII signal-driven pick
+//!   rule) from scratch. Always used for round 0, for the
+//!   `full-every-round` policy, and as the *fallback* when a drift signal
+//!   fires.
+//! * **Incremental repair** — keep the previous round's [`Assignment`]:
+//!   survivors stay on their helper, departures are evicted, arrivals are
+//!   placed greedily (least-loaded memory-feasible helper), and only
+//!   *overloaded* helpers are rebalanced by local moves. The repaired
+//!   assignment is then FCFS-scheduled.
+//!
+//! Two drift signals can force the fallback under the `incremental`
+//! policy: the round's **churn fraction** (membership delta over the
+//! previous roster) and the repaired schedule's **makespan gap** against
+//! the fresh instance lower bound, normalized by the gap the last full
+//! solve achieved — absolute gaps are scenario-shaped (a straggler tail
+//! inflates every round's gap), the *relative drift* is not. The
+//! `repair-only` policy disables both (the no-fallback ablation arm in
+//! the fleet grid).
+//!
+//! Everything is deterministic in the scenario tuple + churn knobs: no
+//! wall-clock enters any decision, and re-solve cost is reported as a
+//! deterministic work proxy (candidate evaluations) instead of seconds.
+//!
+//! [`FleetWorld`]: crate::instance::scenario::FleetWorld
+
+use super::events::{self, ChurnCfg, RoundEvents};
+use super::report::{FleetReport, RoundReport};
+use crate::instance::scenario::{FleetClient, FleetWorld, ScenarioCfg};
+use crate::instance::Instance;
+use crate::sim::epoch::replay_epoch;
+use crate::solver::admm::AdmmCfg;
+use crate::solver::greedy;
+use crate::solver::schedule::{fcfs_schedule, Assignment, Schedule};
+use crate::solver::strategy;
+use crate::util::rng::fnv64 as fnv;
+use std::collections::BTreeMap;
+
+/// Re-orchestration policy for non-initial rounds.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Policy {
+    /// Warm-started repair with drift-triggered full re-solve fallback.
+    Incremental,
+    /// Full re-solve every round (the cold-start reference arm).
+    FullEveryRound,
+    /// Repair always, never fall back (the no-fallback ablation arm).
+    RepairOnly,
+}
+
+impl Policy {
+    pub const ALL: [Policy; 3] = [Policy::Incremental, Policy::FullEveryRound, Policy::RepairOnly];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Policy::Incremental => "incremental",
+            Policy::FullEveryRound => "full",
+            Policy::RepairOnly => "repair-only",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Policy> {
+        match s.to_ascii_lowercase().as_str() {
+            "incremental" | "inc" => Some(Policy::Incremental),
+            "full" | "full-every-round" => Some(Policy::FullEveryRound),
+            "repair-only" | "repair" => Some(Policy::RepairOnly),
+            _ => None,
+        }
+    }
+}
+
+/// A fully-specified fleet run.
+#[derive(Clone, Debug)]
+pub struct FleetCfg {
+    /// Scenario tuple (spec, model, base J, I, seed).
+    pub scenario: ScenarioCfg,
+    /// None → the model's default |S_t|.
+    pub slot_ms: Option<f64>,
+    pub churn: ChurnCfg,
+    pub policy: Policy,
+    /// Membership-delta fraction above which `incremental` falls back to
+    /// a full re-solve before repairing.
+    pub churn_threshold: f64,
+    /// Relative drift above which `incremental` discards the repair and
+    /// re-solves: fall back when (repaired makespan / fresh lower bound)
+    /// exceeds `gap_threshold` × the same ratio at the last full solve.
+    pub gap_threshold: f64,
+    /// Batches replayed per round for the epoch-pipelined period metric.
+    pub epoch_batches: usize,
+}
+
+impl FleetCfg {
+    pub fn new(scenario: ScenarioCfg, churn: ChurnCfg, policy: Policy) -> FleetCfg {
+        FleetCfg {
+            scenario,
+            slot_ms: None,
+            churn,
+            policy,
+            churn_threshold: 0.35,
+            // Mild degradation is the price warm starts pay by design
+            // (FCFS repair vs a preemptive full solve); the fallback is
+            // for *severe* drift. The fleet grid quantifies the tradeoff.
+            gap_threshold: 1.75,
+            epoch_batches: 8,
+        }
+    }
+
+    pub fn slot_ms(&self) -> f64 {
+        self.slot_ms.unwrap_or(self.scenario.model.profile().default_slot_ms)
+    }
+}
+
+/// How a round's schedule was obtained (recorded per round in the
+/// report). The `Full*` variants carry the §VII method the strategy
+/// routed to.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Decision {
+    /// Round 0 has no warm state.
+    FullInitial,
+    /// The `full-every-round` policy.
+    FullPolicy,
+    /// Churn fraction crossed `churn_threshold`.
+    FullChurn,
+    /// Repaired makespan drifted past `gap_threshold` × the last full
+    /// solve's lower-bound gap.
+    FullGap,
+    /// Repair could not place an arrival (defensively unreachable under
+    /// the wedge-free world) — distinct from gap drift so decision
+    /// analyses stay clean.
+    FullInfeasible,
+    /// Warm-started incremental repair was kept.
+    Repair,
+    /// Empty roster: nothing to schedule.
+    Empty,
+}
+
+impl Decision {
+    pub fn name(self) -> &'static str {
+        match self {
+            Decision::FullInitial => "full-initial",
+            Decision::FullPolicy => "full-policy",
+            Decision::FullChurn => "full-churn",
+            Decision::FullGap => "full-gap",
+            Decision::FullInfeasible => "full-infeasible",
+            Decision::Repair => "repair",
+            Decision::Empty => "empty",
+        }
+    }
+
+    pub fn is_full(self) -> bool {
+        matches!(
+            self,
+            Decision::FullInitial
+                | Decision::FullPolicy
+                | Decision::FullChurn
+                | Decision::FullGap
+                | Decision::FullInfeasible
+        )
+    }
+}
+
+/// Outcome of the incremental repair pass. Candidate-evaluation counts
+/// (the deterministic work proxy) accumulate into the caller's `work`
+/// out-param.
+struct Repaired {
+    assignment: Assignment,
+    moves: usize,
+    placed: usize,
+}
+
+/// Warm-start repair: survivors keep their helper, arrivals are placed on
+/// the least-loaded memory-feasible helper, then local moves drain only
+/// overloaded helpers. `prev` maps stable client id → helper of the
+/// previous round. Returns None only if an arrival fits no helper (cannot
+/// happen under the world's wedge-free repair and roster cap, but the
+/// caller falls back to a full solve defensively).
+fn repair_assignment(
+    inst: &Instance,
+    roster_ids: &[u64],
+    prev: &BTreeMap<u64, usize>,
+    work: &mut u64,
+) -> Option<Repaired> {
+    let i_n = inst.n_helpers;
+    let mut free = inst.mem.clone();
+    let mut count = vec![0usize; i_n];
+    let mut load = vec![0f64; i_n]; // estimated slot-load Σ (p + pp)
+    let mut helper_of: Vec<Option<usize>> = vec![None; roster_ids.len()];
+    for (j, id) in roster_ids.iter().enumerate() {
+        if let Some(&i) = prev.get(id) {
+            helper_of[j] = Some(i);
+            free[i] -= inst.d[j];
+            count[i] += 1;
+            let e = inst.edge(i, j);
+            load[i] += (inst.p[e] + inst.pp[e]) as f64;
+        }
+    }
+    // Greedy placement of arrivals (id order == roster order).
+    let mut placed = 0usize;
+    for (j, slot) in helper_of.iter_mut().enumerate() {
+        if slot.is_some() {
+            continue;
+        }
+        *work += i_n as u64;
+        let i = (0..i_n)
+            .filter(|&i| free[i] >= inst.d[j])
+            .min_by(|&a, &b| {
+                load[a]
+                    .partial_cmp(&load[b])
+                    .unwrap()
+                    .then(count[a].cmp(&count[b]))
+                    .then(a.cmp(&b))
+            })?;
+        *slot = Some(i);
+        free[i] -= inst.d[j];
+        count[i] += 1;
+        let e = inst.edge(i, j);
+        load[i] += (inst.p[e] + inst.pp[e]) as f64;
+        placed += 1;
+    }
+    let mut helper_of: Vec<usize> = helper_of.into_iter().map(|s| s.expect("all placed")).collect();
+
+    // Rebalance only overloaded helpers: while the max estimated load
+    // exceeds the mean by > 15%, move the best client off the argmax
+    // helper if that strictly lowers the local max. Bounded by roster
+    // size so repair stays O(J²·I) worst case and terminates.
+    let mut moves = 0usize;
+    while moves < roster_ids.len() {
+        // Recompute each iteration: moves change per-edge weights, so
+        // the total (and mean) drifts as clients relocate.
+        let mean = load.iter().sum::<f64>() / i_n.max(1) as f64;
+        let imax = (0..i_n).max_by(|&a, &b| load[a].partial_cmp(&load[b]).unwrap().then(b.cmp(&a)))?;
+        if load[imax] <= 1.15 * mean + 1e-9 {
+            break;
+        }
+        let mut best: Option<(f64, usize, usize)> = None; // (new local max, j, dst)
+        for j in 0..roster_ids.len() {
+            if helper_of[j] != imax {
+                continue;
+            }
+            let w_src = (inst.p[inst.edge(imax, j)] + inst.pp[inst.edge(imax, j)]) as f64;
+            for dst in 0..i_n {
+                if dst == imax || free[dst] < inst.d[j] {
+                    continue;
+                }
+                *work += 1;
+                let w_dst = (inst.p[inst.edge(dst, j)] + inst.pp[inst.edge(dst, j)]) as f64;
+                let after = (load[imax] - w_src).max(load[dst] + w_dst);
+                if best.map_or(true, |(b, bj, bd)| (after, j, dst) < (b, bj, bd)) {
+                    best = Some((after, j, dst));
+                }
+            }
+        }
+        match best {
+            Some((after, j, dst)) if after + 1e-9 < load[imax] => {
+                let w_src = (inst.p[inst.edge(imax, j)] + inst.pp[inst.edge(imax, j)]) as f64;
+                let w_dst = (inst.p[inst.edge(dst, j)] + inst.pp[inst.edge(dst, j)]) as f64;
+                helper_of[j] = dst;
+                free[imax] += inst.d[j];
+                free[dst] -= inst.d[j];
+                load[imax] -= w_src;
+                load[dst] += w_dst;
+                moves += 1;
+            }
+            _ => break,
+        }
+    }
+    Some(Repaired { assignment: Assignment::new(helper_of), moves, placed })
+}
+
+/// Deterministic work proxy for a full strategy solve: every method at
+/// least scans all edges; ADMM additionally iterates up to `max_iters`
+/// times over them.
+fn full_work(inst: &Instance, method: strategy::Method, admm: &AdmmCfg) -> u64 {
+    let edges = (inst.n_clients * inst.n_helpers) as u64;
+    match method {
+        strategy::Method::Admm => edges * admm.max_iters as u64,
+        strategy::Method::BalancedGreedy => edges,
+    }
+}
+
+/// Run the fleet: generate the event stream, loop rounds, repair or
+/// re-solve, and collect the per-round report.
+pub fn run(cfg: &FleetCfg) -> FleetReport {
+    let world = cfg.scenario.fleet_world(cfg.churn.max_clients);
+    let stream = events::generate(
+        world.base_clients(),
+        &cfg.churn,
+        cfg.scenario.seed ^ fnv(&cfg.scenario.spec.name),
+    );
+    run_on_stream(cfg, &world, &stream)
+}
+
+/// [`run`] on a pre-generated event stream (tests inject hand-crafted
+/// churn histories through this entry).
+pub fn run_on_stream(cfg: &FleetCfg, world: &FleetWorld, stream: &[RoundEvents]) -> FleetReport {
+    let admm_cfg = AdmmCfg::default();
+    let slot_ms = cfg.slot_ms();
+    let mut minted: BTreeMap<u64, FleetClient> = BTreeMap::new();
+    let mut prev_assign: BTreeMap<u64, usize> = BTreeMap::new();
+    let mut prev_roster_len = 0usize;
+    // Lower-bound gap of the last full solve — the drift baseline.
+    let mut last_full_gap = f64::MAX;
+    let mut rounds = Vec::with_capacity(stream.len());
+
+    for ev in stream {
+        for &id in &ev.roster {
+            minted.entry(id).or_insert_with(|| world.mint_client(id));
+        }
+        let roster: Vec<&FleetClient> = ev.roster.iter().map(|id| &minted[id]).collect();
+        let ms = world.instance(&roster);
+        let inst = ms.quantize(slot_ms);
+        let churn_frac = ev.churn_fraction(prev_roster_len);
+        let lb_raw = inst.makespan_lower_bound();
+        let lb = lb_raw.max(1);
+        let full_solve = |work_base: u64| -> ((Schedule, Option<strategy::Method>), u64) {
+            // The wedge-free world guarantees a greedy assignment exists,
+            // so a full solve can never come up empty.
+            let (s, m) = strategy::solve(&inst, &admm_cfg)
+                .or_else(|| greedy::solve(&inst).map(|s| (s, strategy::Method::BalancedGreedy)))
+                .expect("wedge-free world must admit a greedy assignment");
+            let w = work_base + full_work(&inst, m, &admm_cfg);
+            ((s, Some(m)), w)
+        };
+
+        let (decision, schedule, repair_moves, placed, work) = if roster.is_empty() {
+            (Decision::Empty, None, 0, 0, 0u64)
+        } else if ev.round == 0 || cfg.policy == Policy::FullEveryRound {
+            let d = if ev.round == 0 { Decision::FullInitial } else { Decision::FullPolicy };
+            let (s, w) = full_solve(0);
+            (d, Some(s), 0, 0, w)
+        } else if cfg.policy == Policy::Incremental && churn_frac > cfg.churn_threshold {
+            let (s, w) = full_solve(0);
+            (Decision::FullChurn, Some(s), 0, 0, w)
+        } else {
+            let mut work = 0u64;
+            match repair_assignment(&inst, &ev.roster, &prev_assign, &mut work) {
+                Some(rep) => {
+                    let s = fcfs_schedule(&inst, rep.assignment);
+                    let gap = s.makespan(&inst) as f64 / lb as f64;
+                    if cfg.policy == Policy::Incremental && gap > cfg.gap_threshold * last_full_gap {
+                        // The repair is discarded: report no repair stats
+                        // for the kept schedule, but its effort still
+                        // counts in the work proxy (it was spent).
+                        let (s, w) = full_solve(work);
+                        (Decision::FullGap, Some(s), 0, 0, w)
+                    } else {
+                        (Decision::Repair, Some((s, None)), rep.moves, rep.placed, work)
+                    }
+                }
+                // Defensive: the wedge-free world makes this unreachable,
+                // but an unplaceable arrival must trigger a full solve,
+                // not a panic.
+                None => {
+                    let (s, w) = full_solve(work);
+                    (Decision::FullInfeasible, Some(s), 0, 0, w)
+                }
+            }
+        };
+        if decision.is_full() {
+            if let Some((s, _)) = &schedule {
+                last_full_gap = s.makespan(&inst) as f64 / lb as f64;
+            }
+        }
+
+        let (makespan_slots, preemptions, period_ms, method) = match &schedule {
+            Some((s, m)) => {
+                debug_assert!(s.is_feasible(&inst), "round {} schedule infeasible", ev.round);
+                let e = replay_epoch(&ms, s, cfg.epoch_batches.max(1));
+                (s.makespan(&inst), s.preemptions(), e.period_ms, m.map(|m| m.name()))
+            }
+            None => (0, 0, 0.0, None),
+        };
+
+        rounds.push(RoundReport {
+            round: ev.round,
+            n_clients: roster.len(),
+            arrivals: ev.arrivals.len(),
+            departures: ev.departures.len(),
+            decision: decision.name(),
+            method,
+            makespan_slots,
+            makespan_ms: makespan_slots as f64 * slot_ms,
+            lower_bound: lb_raw,
+            churn_frac,
+            repair_moves,
+            placed_arrivals: placed,
+            work_units: work,
+            period_ms,
+            preemptions,
+        });
+
+        prev_assign = match &schedule {
+            Some((s, _)) => roster.iter().zip(&s.assignment.helper_of).map(|(c, &i)| (c.id, i)).collect(),
+            None => BTreeMap::new(),
+        };
+        prev_roster_len = roster.len();
+    }
+
+    FleetReport::new(
+        format!(
+            "fleet:{}/{} J={} I={} seed={}",
+            cfg.scenario.spec.name,
+            cfg.scenario.model.name(),
+            cfg.scenario.n_clients,
+            cfg.scenario.n_helpers,
+            cfg.scenario.seed
+        ),
+        cfg.policy.name().to_string(),
+        slot_ms,
+        rounds,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::instance::profiles::Model;
+    use crate::instance::scenario::Scenario;
+
+    fn cfg(policy: Policy) -> FleetCfg {
+        let scen = ScenarioCfg::new(Scenario::S4StragglerTail, Model::Vgg19, 10, 3, 7);
+        let mut churn = ChurnCfg::stationary(10);
+        churn.rounds = 8;
+        FleetCfg::new(scen, churn, policy)
+    }
+
+    #[test]
+    fn deterministic_report() {
+        let a = run(&cfg(Policy::Incremental));
+        let b = run(&cfg(Policy::Incremental));
+        assert_eq!(a.to_json().pretty(), b.to_json().pretty());
+    }
+
+    #[test]
+    fn default_run_mixes_repair_and_full() {
+        let r = run(&cfg(Policy::Incremental));
+        assert_eq!(r.rounds.len(), 8);
+        assert!(r.rounds.iter().any(|x| x.decision == "repair"), "no repaired round");
+        assert!(r.rounds.iter().any(|x| x.decision.starts_with("full")), "no full round");
+        assert_eq!(r.rounds[0].decision, "full-initial");
+    }
+
+    #[test]
+    fn full_policy_always_full() {
+        let r = run(&cfg(Policy::FullEveryRound));
+        for x in &r.rounds {
+            assert!(x.decision.starts_with("full") || x.decision == "empty", "{}", x.decision);
+            assert!(x.n_clients == 0 || x.method.is_some(), "full rounds record the picked method");
+        }
+    }
+
+    #[test]
+    fn repair_only_never_falls_back() {
+        let r = run(&cfg(Policy::RepairOnly));
+        for x in r.rounds.iter().skip(1) {
+            assert!(x.decision == "repair" || x.decision == "empty", "round {}: {}", x.round, x.decision);
+        }
+    }
+
+    #[test]
+    fn makespan_bounded_by_lower_bound() {
+        let r = run(&cfg(Policy::Incremental));
+        for x in &r.rounds {
+            if x.n_clients > 0 {
+                assert!(x.makespan_slots >= x.lower_bound, "round {}", x.round);
+                assert!(x.period_ms > 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn full_departure_round_is_empty_not_fatal() {
+        let scen = ScenarioCfg::new(Scenario::S1, Model::ResNet101, 4, 2, 3);
+        let world = scen.fleet_world(8);
+        let stream = vec![
+            RoundEvents { round: 0, departures: vec![], arrivals: vec![], roster: vec![0, 1, 2, 3] },
+            RoundEvents { round: 1, departures: vec![0, 1, 2, 3], arrivals: vec![], roster: vec![] },
+            RoundEvents { round: 2, departures: vec![], arrivals: vec![4, 5], roster: vec![4, 5] },
+        ];
+        let churn = ChurnCfg { rounds: 3, arrival_rate: 0.0, departure_prob: 0.0, max_clients: 8 };
+        let r = run_on_stream(&FleetCfg::new(scen, churn, Policy::Incremental), &world, &stream);
+        assert_eq!(r.rounds[1].decision, "empty");
+        assert_eq!(r.rounds[1].makespan_slots, 0);
+        // The fleet recovers: round 2 reschedules the fresh arrivals.
+        assert!(r.rounds[2].makespan_slots > 0);
+    }
+
+    #[test]
+    fn big_churn_spike_triggers_full_churn() {
+        let scen = ScenarioCfg::new(Scenario::S1, Model::ResNet101, 6, 2, 5);
+        let world = scen.fleet_world(12);
+        // Round 1 replaces most of the fleet → churn fraction 1.0 > 0.35.
+        let stream = vec![
+            RoundEvents { round: 0, departures: vec![], arrivals: vec![], roster: vec![0, 1, 2, 3, 4, 5] },
+            RoundEvents { round: 1, departures: vec![0, 1, 2], arrivals: vec![6, 7, 8], roster: vec![3, 4, 5, 6, 7, 8] },
+        ];
+        let churn = ChurnCfg { rounds: 2, arrival_rate: 0.0, departure_prob: 0.0, max_clients: 12 };
+        let r = run_on_stream(&FleetCfg::new(scen, churn, Policy::Incremental), &world, &stream);
+        assert_eq!(r.rounds[1].decision, "full-churn");
+    }
+
+    #[test]
+    fn policy_parse_roundtrip() {
+        for p in Policy::ALL {
+            assert_eq!(Policy::parse(p.name()), Some(p), "{}", p.name());
+        }
+        assert_eq!(Policy::parse("nope"), None);
+    }
+}

@@ -1,0 +1,216 @@
+//! Per-round fleet reports: what the orchestrator decided, what it cost,
+//! and what the fleet achieved — serialized to the same deterministic
+//! JSON shape as the sweep artifacts (BTreeMap keys, no wall-clock, seeds
+//! as strings), so `target/psl-bench/` fleet files diff cleanly across
+//! machines and thread counts.
+
+use crate::util::json::Json;
+
+/// One orchestration round.
+#[derive(Clone, Debug, PartialEq)]
+pub struct RoundReport {
+    pub round: usize,
+    pub n_clients: usize,
+    pub arrivals: usize,
+    pub departures: usize,
+    /// "full-initial" | "full-policy" | "full-churn" | "full-gap" |
+    /// "full-infeasible" | "repair" | "empty" (see
+    /// `orchestrator::Decision`).
+    pub decision: &'static str,
+    /// §VII method the strategy routed to on full rounds (None for
+    /// repaired / empty rounds).
+    pub method: Option<&'static str>,
+    pub makespan_slots: u32,
+    pub makespan_ms: f64,
+    pub lower_bound: u32,
+    /// Membership delta over the previous roster size.
+    pub churn_frac: f64,
+    /// Rebalance moves behind the *kept* repaired assignment (0 on full
+    /// and empty rounds — a discarded repair's effort still counts in
+    /// `work_units`).
+    pub repair_moves: usize,
+    /// Arrivals placed by the kept repair's greedy warm-start step (0 on
+    /// full and empty rounds).
+    pub placed_arrivals: usize,
+    /// Deterministic re-solve cost proxy (candidate evaluations; full
+    /// solves count edge scans × ADMM iteration cap).
+    pub work_units: u64,
+    /// Epoch-pipelined steady-state period (ms) via
+    /// [`crate::sim::epoch::replay_epoch`].
+    pub period_ms: f64,
+    pub preemptions: u32,
+}
+
+/// A whole fleet run.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FleetReport {
+    pub label: String,
+    pub policy: String,
+    pub slot_ms: f64,
+    pub rounds: Vec<RoundReport>,
+}
+
+impl FleetReport {
+    pub fn new(label: String, policy: String, slot_ms: f64, rounds: Vec<RoundReport>) -> FleetReport {
+        FleetReport { label, policy, slot_ms, rounds }
+    }
+
+    // ---- summary accessors ----------------------------------------------
+
+    pub fn full_rounds(&self) -> usize {
+        self.rounds.iter().filter(|r| r.decision.starts_with("full")).count()
+    }
+
+    pub fn repair_rounds(&self) -> usize {
+        self.rounds.iter().filter(|r| r.decision == "repair").count()
+    }
+
+    pub fn empty_rounds(&self) -> usize {
+        self.rounds.iter().filter(|r| r.decision == "empty").count()
+    }
+
+    /// Mean makespan (ms) over non-empty rounds (0.0 if all empty).
+    pub fn mean_makespan_ms(&self) -> f64 {
+        let xs: Vec<f64> = self.rounds.iter().filter(|r| r.n_clients > 0).map(|r| r.makespan_ms).collect();
+        if xs.is_empty() {
+            0.0
+        } else {
+            xs.iter().sum::<f64>() / xs.len() as f64
+        }
+    }
+
+    /// Mean epoch-pipelined period (ms) over non-empty rounds.
+    pub fn mean_period_ms(&self) -> f64 {
+        let xs: Vec<f64> = self.rounds.iter().filter(|r| r.n_clients > 0).map(|r| r.period_ms).collect();
+        if xs.is_empty() {
+            0.0
+        } else {
+            xs.iter().sum::<f64>() / xs.len() as f64
+        }
+    }
+
+    /// Total deterministic solve-cost proxy across the run.
+    pub fn total_work_units(&self) -> u64 {
+        self.rounds.iter().map(|r| r.work_units).sum()
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("kind", Json::Str("psl-fleet".to_string())),
+            ("label", Json::Str(self.label.clone())),
+            ("policy", Json::Str(self.policy.clone())),
+            ("slot_ms", Json::Num(self.slot_ms)),
+            (
+                "summary",
+                Json::obj(vec![
+                    ("rounds", Json::Num(self.rounds.len() as f64)),
+                    ("full_rounds", Json::Num(self.full_rounds() as f64)),
+                    ("repair_rounds", Json::Num(self.repair_rounds() as f64)),
+                    ("empty_rounds", Json::Num(self.empty_rounds() as f64)),
+                    ("mean_makespan_ms", Json::Num(self.mean_makespan_ms())),
+                    ("mean_period_ms", Json::Num(self.mean_period_ms())),
+                    // String, not Num: u64 work totals can exceed 2^53.
+                    ("total_work_units", Json::Str(self.total_work_units().to_string())),
+                ]),
+            ),
+            (
+                "rounds_detail",
+                Json::Arr(
+                    self.rounds
+                        .iter()
+                        .map(|r| {
+                            Json::obj(vec![
+                                ("round", Json::Num(r.round as f64)),
+                                ("n_clients", Json::Num(r.n_clients as f64)),
+                                ("arrivals", Json::Num(r.arrivals as f64)),
+                                ("departures", Json::Num(r.departures as f64)),
+                                ("decision", Json::Str(r.decision.to_string())),
+                                (
+                                    "method",
+                                    r.method.map(|m| Json::Str(m.to_string())).unwrap_or(Json::Null),
+                                ),
+                                ("makespan_slots", Json::Num(r.makespan_slots as f64)),
+                                ("makespan_ms", Json::Num(r.makespan_ms)),
+                                ("lower_bound", Json::Num(r.lower_bound as f64)),
+                                ("churn_frac", Json::Num(r.churn_frac)),
+                                ("repair_moves", Json::Num(r.repair_moves as f64)),
+                                ("placed_arrivals", Json::Num(r.placed_arrivals as f64)),
+                                ("work_units", Json::Str(r.work_units.to_string())),
+                                ("period_ms", Json::Num(r.period_ms)),
+                                ("preemptions", Json::Num(r.preemptions as f64)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    /// Persist under `target/psl-bench/<name>.json` (the sweep runner's
+    /// location). Returns the path.
+    pub fn save(&self, name: &str) -> std::io::Result<std::path::PathBuf> {
+        crate::bench::save_artifact(name, &self.to_json())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn round(round: usize, decision: &'static str, makespan_ms: f64, work: u64) -> RoundReport {
+        RoundReport {
+            round,
+            n_clients: if decision == "empty" { 0 } else { 4 },
+            arrivals: 1,
+            departures: 1,
+            decision,
+            method: if decision.starts_with("full") { Some("admm") } else { None },
+            makespan_slots: (makespan_ms / 100.0) as u32,
+            makespan_ms,
+            lower_bound: 3,
+            churn_frac: 0.25,
+            repair_moves: 1,
+            placed_arrivals: 1,
+            work_units: work,
+            period_ms: makespan_ms * 0.8,
+            preemptions: 0,
+        }
+    }
+
+    fn report() -> FleetReport {
+        FleetReport::new(
+            "fleet:test".into(),
+            "incremental".into(),
+            100.0,
+            vec![
+                round(0, "full-initial", 1000.0, 500),
+                round(1, "repair", 1100.0, 30),
+                round(2, "empty", 0.0, 0),
+                round(3, "full-gap", 900.0, 480),
+            ],
+        )
+    }
+
+    #[test]
+    fn summary_counts() {
+        let r = report();
+        assert_eq!(r.full_rounds(), 2);
+        assert_eq!(r.repair_rounds(), 1);
+        assert_eq!(r.empty_rounds(), 1);
+        assert_eq!(r.total_work_units(), 1010);
+        assert!((r.mean_makespan_ms() - 1000.0).abs() < 1e-9, "empty rounds excluded");
+    }
+
+    #[test]
+    fn json_shape_and_determinism() {
+        let r = report();
+        let a = r.to_json().pretty();
+        let b = r.to_json().pretty();
+        assert_eq!(a, b);
+        let doc = Json::parse(&a).unwrap();
+        assert_eq!(doc.get("kind").as_str(), Some("psl-fleet"));
+        assert_eq!(doc.get("rounds_detail").as_arr().unwrap().len(), 4);
+        assert_eq!(doc.get("summary").get("repair_rounds").as_usize(), Some(1));
+        assert_eq!(doc.get("summary").get("total_work_units").as_str(), Some("1010"));
+    }
+}

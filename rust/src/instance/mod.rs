@@ -135,8 +135,9 @@ impl InstanceMs {
     /// Project the instance onto a subset of clients (churn rounds,
     /// what-if analyses). `keep` holds original client indices, in the
     /// order the projected instance should use. Helpers are unchanged.
+    /// An empty `keep` yields a valid zero-client instance — full-
+    /// departure fleet rounds must not abort a run.
     pub fn restrict_clients(&self, keep: &[usize]) -> InstanceMs {
-        assert!(!keep.is_empty(), "restriction must keep at least one client");
         assert!(keep.iter().all(|&j| j < self.n_clients), "client index out of range");
         let pick = |v: &Vec<f64>| -> Vec<f64> {
             let mut out = Vec::with_capacity(self.n_helpers * keep.len());
@@ -342,9 +343,16 @@ mod tests {
     }
 
     #[test]
-    #[should_panic]
-    fn restrict_clients_rejects_empty() {
-        small().restrict_clients(&[]);
+    fn restrict_clients_empty_is_valid() {
+        // Full-departure fleet rounds project onto zero clients; that must
+        // be a valid (empty) instance, not a panic.
+        let sub = small().restrict_clients(&[]);
+        assert_eq!(sub.n_clients, 0);
+        assert_eq!(sub.n_helpers, 2);
+        assert!(sub.p_ms.is_empty() && sub.d_gb.is_empty());
+        assert_eq!(sub.mem_gb, small().mem_gb, "helpers unchanged");
+        assert!(sub.validate().is_ok());
+        assert_eq!(sub.quantize(180.0).horizon(), 0);
     }
 
     #[test]

@@ -450,7 +450,6 @@ impl ScenarioCfg {
     pub fn generate(&self) -> InstanceMs {
         let mut rng = Rng::seeded(self.seed ^ fnv(&self.spec.name) ^ fnv(self.model.name()));
         let prof = self.model.profile();
-        let n_layers = prof.n_layers();
         let (j_n, i_n) = (self.n_clients, self.n_helpers);
 
         // --- per-client cut layers -------------------------------------
@@ -488,7 +487,6 @@ impl ScenarioCfg {
         let rates = link.draw_rates(&mut rng, i_n, j_n);
 
         // --- per-edge delay vectors ----------------------------------------
-        let total_w = prof.total_weight();
         let e_n = i_n * j_n;
         let (mut r_ms, mut l_ms, mut lp_ms, mut rp_ms, mut p_ms, mut pp_ms) = (
             vec![0.0; e_n],
@@ -498,35 +496,17 @@ impl ScenarioCfg {
             vec![0.0; e_n],
             vec![0.0; e_n],
         );
-        let jit = |rng: &mut Rng, x: f64, sigma: f64| rng.lognormal_median(x, sigma);
         for j in 0..j_n {
-            let (s1, s2) = cuts[j];
-            // Client-side compute (whole-batch time scaled by part share,
-            // then split fwd/bwd by the model's fwd fraction).
-            let share = |a: usize, b: usize| if a > b { 0.0 } else { prof.weight_range(a, b) / total_w };
-            let f = prof.fwd_frac;
-            let part1 = client_batch_ms[j] * share(1, s1);
-            let part3 = client_batch_ms[j] * share(s2 + 1, n_layers);
-            let (p1_f, p1_b) = (part1 * f, part1 * (1.0 - f));
-            let (p3_f, p3_b) = (part3 * f, part3 * (1.0 - f));
-            // Wire sizes (MB): activations at σ1 and σ2 (grad ≈ act size).
-            let a1_mb = prof.act_mb(s1) * self.wire_factor;
-            let a2_mb = prof.act_mb(s2) * self.wire_factor;
+            let dm = ClientDelayModel::new(&prof, cuts[j], client_batch_ms[j], self.wire_factor);
             for i in 0..i_n {
                 let e = i * j_n + j;
-                let rate = rates[e];
-                let up1 = link.transfer_ms(a1_mb, rate);
-                let dn2 = link.transfer_ms(a2_mb, rate);
-                let up2 = link.transfer_ms(a2_mb, rate);
-                let dn1 = link.transfer_ms(a1_mb, rate);
-                let part2 = helper_batch_ms[i] * share(s1 + 1, s2);
-                let s = self.spec.jitter_sigma;
-                r_ms[e] = jit(&mut rng, p1_f + up1, s);
-                l_ms[e] = jit(&mut rng, dn2 + p3_f, s);
-                lp_ms[e] = jit(&mut rng, p3_b + up2, s);
-                rp_ms[e] = jit(&mut rng, dn1 + p1_b, s);
-                p_ms[e] = jit(&mut rng, (part2 * f).max(1.0), s);
-                pp_ms[e] = jit(&mut rng, (part2 * (1.0 - f)).max(1.0), s);
+                let d = dm.draw_edge(&mut rng, &link, helper_batch_ms[i], rates[e], self.spec.jitter_sigma);
+                r_ms[e] = d[0];
+                l_ms[e] = d[1];
+                lp_ms[e] = d[2];
+                rp_ms[e] = d[3];
+                p_ms[e] = d[4];
+                pp_ms[e] = d[5];
             }
         }
 
@@ -577,6 +557,294 @@ impl ScenarioCfg {
                 inst
             })
             .collect()
+    }
+}
+
+/// Per-client parameters of the §III delay model — the ONE copy shared by
+/// the batch generator ([`ScenarioCfg::generate`]) and the fleet client
+/// factory ([`FleetWorld::mint_client`]), so minted arrivals can never
+/// drift from base-scenario instances. Construction does no RNG draws;
+/// [`ClientDelayModel::draw_edge`] performs exactly the seed generator's
+/// six jitter draws per edge, in its order.
+struct ClientDelayModel {
+    /// Client part-1 fwd / bwd compute (ms).
+    p1_f: f64,
+    p1_b: f64,
+    /// Client part-3 fwd / bwd compute (ms).
+    p3_f: f64,
+    p3_b: f64,
+    /// Wire sizes (MB): activations at σ1 and σ2 (grad ≈ act size).
+    a1_mb: f64,
+    a2_mb: f64,
+    /// Part-2 weight share (scales the helper's whole-batch time).
+    part2_share: f64,
+    fwd_frac: f64,
+}
+
+impl ClientDelayModel {
+    fn new(prof: &ModelProfile, cut: (usize, usize), batch_ms: f64, wire_factor: f64) -> ClientDelayModel {
+        let n_layers = prof.n_layers();
+        let total_w = prof.total_weight();
+        // Whole-batch time scaled by part share, then split fwd/bwd by
+        // the model's fwd fraction.
+        let share = |a: usize, b: usize| if a > b { 0.0 } else { prof.weight_range(a, b) / total_w };
+        let f = prof.fwd_frac;
+        let (s1, s2) = cut;
+        let part1 = batch_ms * share(1, s1);
+        let part3 = batch_ms * share(s2 + 1, n_layers);
+        ClientDelayModel {
+            p1_f: part1 * f,
+            p1_b: part1 * (1.0 - f),
+            p3_f: part3 * f,
+            p3_b: part3 * (1.0 - f),
+            a1_mb: prof.act_mb(s1) * wire_factor,
+            a2_mb: prof.act_mb(s2) * wire_factor,
+            part2_share: share(s1 + 1, s2),
+            fwd_frac: f,
+        }
+    }
+
+    /// Draw one (helper, client) edge's six delay entries
+    /// (r, l, l', r', p, p'), in the seed generator's draw order.
+    fn draw_edge(&self, rng: &mut Rng, link: &LinkModel, helper_batch_ms: f64, rate: f64, sigma: f64) -> [f64; 6] {
+        let up1 = link.transfer_ms(self.a1_mb, rate);
+        let dn2 = link.transfer_ms(self.a2_mb, rate);
+        let up2 = link.transfer_ms(self.a2_mb, rate);
+        let dn1 = link.transfer_ms(self.a1_mb, rate);
+        let part2 = helper_batch_ms * self.part2_share;
+        let f = self.fwd_frac;
+        [
+            rng.lognormal_median(self.p1_f + up1, sigma),
+            rng.lognormal_median(dn2 + self.p3_f, sigma),
+            rng.lognormal_median(self.p3_b + up2, sigma),
+            rng.lognormal_median(dn1 + self.p1_b, sigma),
+            rng.lognormal_median((part2 * f).max(1.0), sigma),
+            rng.lognormal_median((part2 * (1.0 - f)).max(1.0), sigma),
+        ]
+    }
+}
+
+// ---- fleet world: persistent helpers + a stable-id client factory -------
+
+/// One fleet client minted by a [`FleetWorld`]: its stable id, the draws
+/// that define it (cut layers, whole-model batch time, per-helper link
+/// rates) and the fully materialized per-helper delay columns. A client's
+/// draws depend only on `(scenario tuple, id)` — never on when it arrives
+/// or who else is in the fleet — so multi-round rosters stay reproducible
+/// under any churn history.
+#[derive(Clone, Debug)]
+pub struct FleetClient {
+    /// Stable fleet-wide id (base clients are `0..J`; arrivals continue
+    /// the sequence and ids are never reused).
+    pub id: u64,
+    pub cut: (usize, usize),
+    /// Whole-model batch time drawn from the spec's client [`DeviceMix`].
+    pub batch_ms: f64,
+    /// Helper-memory footprint (GB), capped at the world's admission
+    /// limit [`FleetWorld::d_cap`].
+    pub d_gb: f64,
+    /// Symmetric link rate to each helper (Mbps), drawn from the spec's
+    /// [`LinkRegime`].
+    pub rates_mbps: Vec<f64>,
+    /// Per-helper delay columns (len = `n_helpers` each), same semantics
+    /// as the corresponding [`InstanceMs`] vectors.
+    pub r_ms: Vec<f64>,
+    pub l_ms: Vec<f64>,
+    pub lp_ms: Vec<f64>,
+    pub rp_ms: Vec<f64>,
+    pub p_ms: Vec<f64>,
+    pub pp_ms: Vec<f64>,
+}
+
+/// A persistent multi-round fleet: fixed helpers (speeds, memory, switch
+/// costs) plus a deterministic client factory. Where [`ScenarioCfg::
+/// generate`] draws one closed instance, a world mints clients *by stable
+/// id* from the same spec distributions, so clients can arrive and depart
+/// between rounds while every minted client reproduces byte-identically
+/// from the `(scenario, model, J, I, seed, id)` tuple alone.
+#[derive(Clone, Debug)]
+pub struct FleetWorld {
+    cfg: ScenarioCfg,
+    link: LinkModel,
+    helper_batch_ms: Vec<f64>,
+    /// Helper memory capacities (GB), repaired once so that **any** roster
+    /// of at most `max_clients` admitted clients packs wedge-free:
+    /// total capacity ≥ (max_clients + I)·d_cap, hence at every point of
+    /// any incremental placement some helper has free ≥ d_cap ≥ d_j.
+    pub mem_gb: Vec<f64>,
+    /// Admission footprint cap: the largest raw footprint over the base
+    /// population. Arrivals requesting more are admitted at this cap (the
+    /// orchestrator's admission policy), keeping the wedge-free guarantee
+    /// independent of the cut-draw tail.
+    pub d_cap: f64,
+    /// Roster-size cap the memory repair was sized for.
+    pub max_clients: usize,
+}
+
+impl ScenarioCfg {
+    /// Build the persistent fleet world behind this tuple. `max_clients`
+    /// bounds the roster size the world's memory repair must support (the
+    /// churn process enforces the same cap on arrivals).
+    pub fn fleet_world(&self, max_clients: usize) -> FleetWorld {
+        let max_clients = max_clients.max(self.n_clients).max(1);
+        let mut rng = Rng::seeded(
+            self.seed ^ fnv(&self.spec.name) ^ fnv(self.model.name()).rotate_left(13) ^ fnv("fleet-helpers"),
+        );
+        let helper_pool = Device::helper_pool();
+        let i_n = self.n_helpers;
+        let helper_batch_ms: Vec<f64> = (0..i_n)
+            .map(|_| self.spec.helper_mix.draw_batch_ms(&mut rng, helper_pool, self.model))
+            .collect();
+        let helper_ram: Vec<f64> = (0..i_n)
+            .map(|k| {
+                let ram = helper_pool[k % helper_pool.len()].profile().ram_gb;
+                self.spec.memory.draw(&mut rng, ram)
+            })
+            .collect();
+        let mut world = FleetWorld {
+            cfg: self.clone(),
+            link: self.spec.link.model(),
+            helper_batch_ms,
+            mem_gb: helper_ram,
+            d_cap: f64::MAX,
+            max_clients,
+        };
+        // Admission cap = the largest raw footprint over the base
+        // population (ids 0..J). Minting with d_cap = MAX leaves base
+        // footprints unclamped.
+        let d_cap = (0..self.n_clients as u64)
+            .map(|id| world.mint_client(id).d_gb)
+            .fold(0.0f64, f64::max)
+            .max(self.model.profile().part2_footprint_gb(self.model.profile().default_cuts));
+        world.d_cap = d_cap;
+        // Wedge-free repair for every roster up to max_clients (cf.
+        // `repair_memory_packable`): placed ≤ max_clients·d_cap at any
+        // point, so free ≥ I·d_cap and some helper fits any admitted d.
+        let need = (max_clients + i_n) as f64 * d_cap;
+        let cap: f64 = world.mem_gb.iter().sum();
+        if cap < need {
+            let scale = need / cap.max(1e-9) * 1.001;
+            for m in &mut world.mem_gb {
+                *m *= scale;
+            }
+        }
+        let max_m = world.mem_gb.iter().cloned().fold(0.0, f64::max);
+        if max_m < d_cap {
+            let k = world
+                .mem_gb
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .map(|(k, _)| k)
+                .unwrap();
+            world.mem_gb[k] = d_cap * 1.05;
+        }
+        world
+    }
+}
+
+impl FleetWorld {
+    pub fn n_helpers(&self) -> usize {
+        self.cfg.n_helpers
+    }
+
+    pub fn base_clients(&self) -> usize {
+        self.cfg.n_clients
+    }
+
+    /// The client's private draw stream: a pure function of the scenario
+    /// tuple and the stable id (mirrors `bench::sweep::cell_seed`'s
+    /// label-mixing idiom).
+    fn client_seed(&self, id: u64) -> u64 {
+        self.cfg.seed
+            ^ fnv(&self.cfg.spec.name)
+            ^ fnv(self.cfg.model.name()).rotate_left(13)
+            ^ fnv("fleet-client").rotate_left(29)
+            ^ (id + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15)
+    }
+
+    /// Mint the client with stable id `id`: cut draw, device-mix batch
+    /// time, per-helper link rates and jittered delay columns, all from
+    /// the client's private stream.
+    pub fn mint_client(&self, id: u64) -> FleetClient {
+        let mut rng = Rng::seeded(self.client_seed(id));
+        let spec = &self.cfg.spec;
+        let prof = self.cfg.model.profile();
+        let i_n = self.cfg.n_helpers;
+        let cut = spec.cut_policy.draw(&mut rng, &prof);
+        let batch_ms = spec.client_mix.draw_batch_ms(&mut rng, Device::client_pool(), self.cfg.model);
+        let d_gb = prof.part2_footprint_gb(cut).min(self.d_cap);
+        let rates_mbps: Vec<f64> = (0..i_n).map(|_| self.link.draw_rate(&mut rng)).collect();
+
+        let dm = ClientDelayModel::new(&prof, cut, batch_ms, self.cfg.wire_factor);
+        let (mut r_ms, mut l_ms, mut lp_ms, mut rp_ms, mut p_ms, mut pp_ms) = (
+            vec![0.0; i_n],
+            vec![0.0; i_n],
+            vec![0.0; i_n],
+            vec![0.0; i_n],
+            vec![0.0; i_n],
+            vec![0.0; i_n],
+        );
+        for i in 0..i_n {
+            let d = dm.draw_edge(&mut rng, &self.link, self.helper_batch_ms[i], rates_mbps[i], spec.jitter_sigma);
+            r_ms[i] = d[0];
+            l_ms[i] = d[1];
+            lp_ms[i] = d[2];
+            rp_ms[i] = d[3];
+            p_ms[i] = d[4];
+            pp_ms[i] = d[5];
+        }
+        FleetClient { id, cut, batch_ms, d_gb, rates_mbps, r_ms, l_ms, lp_ms, rp_ms, p_ms, pp_ms }
+    }
+
+    /// Assemble the instance for a roster of minted clients (columns in
+    /// roster order; callers keep rosters sorted by id for canonical
+    /// layouts). Accepts owned clients or references (the orchestrator
+    /// passes `&[&FleetClient]` straight out of its mint cache). An empty
+    /// roster yields a valid empty instance — full-departure rounds must
+    /// not abort a fleet run.
+    pub fn instance<C: std::borrow::Borrow<FleetClient>>(&self, roster: &[C]) -> InstanceMs {
+        let j_n = roster.len();
+        let i_n = self.cfg.n_helpers;
+        let e_n = i_n * j_n;
+        let collect = |col: fn(&FleetClient) -> &Vec<f64>| -> Vec<f64> {
+            let mut out = Vec::with_capacity(e_n);
+            for i in 0..i_n {
+                for c in roster {
+                    out.push(col(c.borrow())[i]);
+                }
+            }
+            out
+        };
+        let inst = InstanceMs {
+            n_clients: j_n,
+            n_helpers: i_n,
+            r_ms: collect(|c| &c.r_ms),
+            l_ms: collect(|c| &c.l_ms),
+            lp_ms: collect(|c| &c.lp_ms),
+            rp_ms: collect(|c| &c.rp_ms),
+            p_ms: collect(|c| &c.p_ms),
+            pp_ms: collect(|c| &c.pp_ms),
+            d_gb: roster
+                .iter()
+                .map(|c| {
+                    let c: &FleetClient = c.borrow();
+                    c.d_gb
+                })
+                .collect(),
+            mem_gb: self.mem_gb.clone(),
+            mu_ms: vec![self.cfg.switch_cost_ms; i_n],
+            label: format!(
+                "fleet:{}/{} J={} I={} seed={}",
+                self.cfg.spec.name,
+                self.cfg.model.name(),
+                j_n,
+                i_n,
+                self.cfg.seed
+            ),
+        };
+        inst.validate().expect("fleet world produced invalid instance");
+        inst
     }
 }
 
@@ -860,6 +1128,111 @@ mod tests {
         }
         // With churn on, at least one round should differ from the base.
         assert!(a.iter().any(|r| r.n_clients < 10), "churn 0.15 over 6 rounds should drop someone");
+    }
+
+    // ---- fleet world -----------------------------------------------------
+
+    #[test]
+    fn fleet_mint_deterministic_and_order_free() {
+        let cfg = ScenarioCfg::new(Scenario::S2, Model::Vgg19, 8, 3, 11);
+        let w = cfg.fleet_world(16);
+        let a = w.mint_client(13);
+        let b = w.mint_client(13);
+        assert_eq!(a.p_ms, b.p_ms);
+        assert_eq!(a.cut, b.cut);
+        assert_eq!(a.rates_mbps, b.rates_mbps);
+        // Minting other clients in between changes nothing.
+        let _ = w.mint_client(5);
+        let c = w.mint_client(13);
+        assert_eq!(a.p_ms, c.p_ms);
+        // Distinct ids get distinct streams.
+        assert_ne!(a.p_ms, w.mint_client(14).p_ms);
+    }
+
+    #[test]
+    fn fleet_instance_valid_for_any_roster() {
+        let cfg = ScenarioCfg::new(Scenario::S5MemoryStarved, Model::ResNet101, 6, 3, 4);
+        let w = cfg.fleet_world(12);
+        // validate() runs inside instance(); exercise base, mixed and
+        // arrival-heavy rosters plus the empty one.
+        for ids in [vec![0, 1, 2, 3, 4, 5], vec![2, 4, 9, 10], vec![11], vec![]] {
+            let roster: Vec<FleetClient> = ids.iter().map(|&id| w.mint_client(id)).collect();
+            let inst = w.instance(&roster);
+            assert_eq!(inst.n_clients, ids.len());
+            assert_eq!(inst.mem_gb, w.mem_gb, "helper capacities are fixed across rosters");
+        }
+    }
+
+    #[test]
+    fn fleet_instance_columns_match_mint() {
+        let cfg = ScenarioCfg::new(Scenario::S1, Model::ResNet101, 4, 2, 9);
+        let w = cfg.fleet_world(8);
+        let roster: Vec<FleetClient> = [0u64, 2, 5].iter().map(|&id| w.mint_client(id)).collect();
+        let inst = w.instance(&roster);
+        for i in 0..2 {
+            for (jj, c) in roster.iter().enumerate() {
+                assert_eq!(inst.p_ms[i * 3 + jj], c.p_ms[i]);
+                assert_eq!(inst.r_ms[i * 3 + jj], c.r_ms[i]);
+            }
+        }
+        assert_eq!(inst.d_gb, vec![roster[0].d_gb, roster[1].d_gb, roster[2].d_gb]);
+    }
+
+    #[test]
+    fn fleet_arrivals_draw_from_pool_distribution() {
+        // S1's client mix is a uniform pool draw: every minted batch time
+        // must be an exact member of the concrete pool.
+        let cfg = ScenarioCfg::new(Scenario::S1, Model::ResNet101, 6, 2, 21);
+        let w = cfg.fleet_world(64);
+        let pool: Vec<f64> = Device::client_pool().iter().map(|d| d.batch_ms(Model::ResNet101)).collect();
+        for id in 0..60u64 {
+            let c = w.mint_client(id);
+            assert!(
+                pool.iter().any(|&p| (p - c.batch_ms).abs() < 1e-9),
+                "client {id} batch {} not in pool {pool:?}",
+                c.batch_ms
+            );
+        }
+    }
+
+    #[test]
+    fn fleet_arrivals_draw_from_link_regime() {
+        // s6's links are UniformFixed: every minted rate is exactly mbps.
+        let cfg = ScenarioCfg::new(Scenario::S6MegaHomogeneous, Model::Vgg19, 4, 2, 2);
+        let w = cfg.fleet_world(20);
+        for id in 0..16u64 {
+            for &r in &w.mint_client(id).rates_mbps {
+                assert!((r - 12.0).abs() < 1e-9, "uniform regime rate {r}");
+            }
+        }
+        // And a clamped lognormal regime stays within its clamp range.
+        let cfg2 = ScenarioCfg::new(Scenario::S2, Model::Vgg19, 4, 2, 2);
+        let w2 = cfg2.fleet_world(20);
+        for id in 0..16u64 {
+            for &r in &w2.mint_client(id).rates_mbps {
+                assert!((1.0..=100.0).contains(&r), "rate {r} outside WideSpread clamp");
+            }
+        }
+    }
+
+    #[test]
+    fn fleet_world_wedge_free_up_to_cap() {
+        for scen in [Scenario::S2, Scenario::S5MemoryStarved] {
+            let cfg = ScenarioCfg::new(scen, Model::ResNet101, 8, 3, 6);
+            let max_clients = 16;
+            let w = cfg.fleet_world(max_clients);
+            let cap: f64 = w.mem_gb.iter().sum();
+            assert!(
+                cap + 1e-9 >= (max_clients + 3) as f64 * w.d_cap,
+                "{}: cap {cap} < (max_clients + I) * d_cap {}",
+                scen.name(),
+                w.d_cap
+            );
+            // Every admissible client fits under the cap.
+            for id in 0..max_clients as u64 {
+                assert!(w.mint_client(id).d_gb <= w.d_cap + 1e-12);
+            }
+        }
     }
 
     #[test]

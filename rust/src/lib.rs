@@ -36,6 +36,16 @@
 //! grid across worker threads with deterministic, thread-count-independent
 //! JSON output.
 //!
+//! ## Fleets
+//!
+//! [`fleet`] turns the one-shot solver into a long-running orchestration
+//! system: seeded multi-round churn (arrivals minted from the scenario's
+//! distributions with stable client ids, departures evicted), warm-started
+//! incremental re-solving with a drift-triggered full-solve fallback, and
+//! per-round reports (makespan, re-solve cost proxy, epoch-pipelined
+//! period). `psl fleet` drives a single run; [`bench::fleet`] runs the
+//! scenario × churn-rate × policy grid.
+//!
 //! ## Quickstart
 //!
 //! ```no_run
@@ -60,6 +70,7 @@ pub mod cli;
 pub mod coordinator;
 pub mod data;
 pub mod exec;
+pub mod fleet;
 pub mod instance;
 pub mod runtime;
 pub mod sim;

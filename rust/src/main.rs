@@ -48,6 +48,7 @@ fn dispatch(args: &Args) -> Result<()> {
         "solve" => cmd_solve(args),
         "sweep-slots" => cmd_sweep(args),
         "sweep" => cmd_sweep_grid(args),
+        "fleet" => cmd_fleet(args),
         "train" => cmd_train(args),
         other => anyhow::bail!("unknown command {other:?}; see `psl help`"),
     }
@@ -165,14 +166,65 @@ fn cmd_sweep(args: &Args) -> Result<()> {
     Ok(())
 }
 
-fn cmd_sweep_grid(args: &Args) -> Result<()> {
-    let list = |key: &str, default: &str| -> Vec<String> {
-        args.str_of(key, default)
-            .split(',')
-            .map(|s| s.trim().to_string())
-            .filter(|s| !s.is_empty())
-            .collect()
+/// `psl sweep --diff <old.json> <new.json>`: cell-by-cell makespan
+/// comparison of two sweep artifacts; non-zero exit on any regression
+/// beyond `--tol` (relative, default 2%).
+fn cmd_sweep_diff(args: &Args, old_path: &str) -> Result<()> {
+    let new_path = args
+        .positional
+        .first()
+        .context("usage: psl sweep --diff <old.json> <new.json> [--tol X]")?;
+    let tol: f64 = parsed_flag(args, "tol", 0.02)?;
+    anyhow::ensure!(tol >= 0.0, "--tol must be non-negative, got {tol}");
+    let load = |path: &str| -> Result<psl::util::json::Json> {
+        let text = std::fs::read_to_string(path).with_context(|| format!("read {path}"))?;
+        psl::util::json::Json::parse(&text).with_context(|| format!("parse {path}"))
     };
+    let report = psl::bench::sweep::diff_documents(&load(old_path)?, &load(new_path)?, tol)?;
+    println!(
+        "sweep diff: {} cells compared (tol {:.1}%) | {} improved | {} only-old | {} only-new",
+        report.compared,
+        tol * 100.0,
+        report.improved,
+        report.only_old,
+        report.only_new
+    );
+    for r in &report.regressions {
+        let fmt = |v: Option<f64>| v.map(|x| format!("{:.1}", x / 1000.0)).unwrap_or_else(|| "infeasible".into());
+        println!("  REGRESSION {}: {} s -> {} s", r.cell, fmt(r.old_ms), fmt(r.new_ms));
+    }
+    if report.regressions.is_empty() {
+        println!("no regressions");
+        Ok(())
+    } else {
+        anyhow::bail!("{} cell(s) regressed beyond {:.1}% tolerance", report.regressions.len(), tol * 100.0)
+    }
+}
+
+/// Parse an optional flag strictly: absent → default, present-but-
+/// malformed → error (a typo'd value must not silently fall back).
+fn parsed_flag<T: std::str::FromStr>(args: &Args, key: &str, default: T) -> Result<T> {
+    match args.flags.get(key) {
+        None => Ok(default),
+        Some(v) => v.parse().ok().with_context(|| format!("bad --{key} {v:?}")),
+    }
+}
+
+/// Parse a comma-separated list flag (`--scenarios 1,2,3`) into trimmed,
+/// non-empty items.
+fn csv_list(args: &Args, key: &str, default: &str) -> Vec<String> {
+    args.str_of(key, default)
+        .split(',')
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .collect()
+}
+
+fn cmd_sweep_grid(args: &Args) -> Result<()> {
+    if let Some(old_path) = args.flags.get("diff") {
+        return cmd_sweep_diff(args, old_path);
+    }
+    let list = |key: &str, default: &str| csv_list(args, key, default);
     let scenarios = list("scenarios", "1,2,3,4")
         .iter()
         .map(|s| Scenario::parse(s).with_context(|| format!("bad scenario {s:?} in --scenarios")))
@@ -260,6 +312,197 @@ fn cmd_sweep_grid(args: &Args) -> Result<()> {
         psl::bench::fmt_s(wall),
         cfg.threads
     );
+    Ok(())
+}
+
+/// `psl fleet`: one deterministic multi-round churn run (or, with
+/// `--grid`, the scenario × churn-rate × policy grid across threads).
+fn cmd_fleet(args: &Args) -> Result<()> {
+    use psl::fleet::{ChurnCfg, FleetCfg, Policy};
+    if args.bool_of("grid") {
+        return cmd_fleet_grid(args);
+    }
+    let scenario = Scenario::parse(&args.str_of("scenario", "4")).context("bad --scenario")?;
+    let model = Model::parse(&args.str_of("model", "resnet101")).context("bad --model")?;
+    let j = args.usize_of("j", 10);
+    let i = args.usize_of("i", 2);
+    anyhow::ensure!(j >= 1 && i >= 1, "fleet needs -j >= 1 and -i >= 1");
+    let rounds: usize = parsed_flag(args, "rounds", 8)?;
+    anyhow::ensure!(rounds >= 1, "--rounds must be >= 1");
+    let policy = Policy::parse(&args.str_of("policy", "incremental"))
+        .context("bad --policy (incremental|full|repair-only)")?;
+    // Start from the tested stationary defaults, then apply overrides.
+    let mut churn = ChurnCfg::stationary(j);
+    churn.rounds = rounds;
+    churn.departure_prob = parsed_flag(args, "depart-prob", churn.departure_prob)?;
+    anyhow::ensure!(
+        (0.0..=1.0).contains(&churn.departure_prob),
+        "--depart-prob must be in [0, 1], got {}",
+        churn.departure_prob
+    );
+    churn.arrival_rate = match args.flags.get("arrival-rate") {
+        Some(v) => v.parse().ok().with_context(|| format!("bad --arrival-rate {v:?}"))?,
+        // Stationary default: expected arrivals balance expected departures.
+        None => churn.departure_prob * j as f64,
+    };
+    anyhow::ensure!(
+        churn.arrival_rate >= 0.0 && churn.arrival_rate.is_finite(),
+        "--arrival-rate must be finite and >= 0, got {}",
+        churn.arrival_rate
+    );
+    churn.max_clients = parsed_flag(args, "max-clients", churn.max_clients)?;
+    let scen = psl::instance::scenario::ScenarioCfg::new(scenario, model, j, i, args.u64_of("seed", 42));
+    let mut cfg = FleetCfg::new(scen, churn, policy);
+    cfg.slot_ms = match args.flags.get("slot-ms") {
+        None => None,
+        Some(v) => {
+            let ms: f64 = v.parse().ok().with_context(|| format!("bad --slot-ms {v:?}"))?;
+            anyhow::ensure!(ms > 0.0, "--slot-ms must be positive, got {ms}");
+            Some(ms)
+        }
+    };
+    cfg.churn_threshold = parsed_flag(args, "churn-threshold", cfg.churn_threshold)?;
+    cfg.gap_threshold = parsed_flag(args, "gap-threshold", cfg.gap_threshold)?;
+    cfg.epoch_batches = parsed_flag(args, "batches", cfg.epoch_batches)?;
+
+    let report = psl::fleet::run(&cfg);
+    println!("{} | policy {} | slot {} ms | {} rounds", report.label, report.policy, report.slot_ms, rounds);
+    println!(
+        "  {:>5} {:>3} {:>4} {:>4} {:<13} {:<8} {:>8} {:>12} {:>11} {:>6} {:>10}",
+        "round", "J", "arr", "dep", "decision", "method", "slots", "makespan[s]", "period[s]", "moves", "work"
+    );
+    for r in &report.rounds {
+        println!(
+            "  {:>5} {:>3} {:>4} {:>4} {:<13} {:<8} {:>8} {:>12.1} {:>11.1} {:>6} {:>10}",
+            r.round,
+            r.n_clients,
+            r.arrivals,
+            r.departures,
+            r.decision,
+            r.method.unwrap_or("-"),
+            r.makespan_slots,
+            r.makespan_ms / 1000.0,
+            r.period_ms / 1000.0,
+            r.repair_moves,
+            r.work_units
+        );
+    }
+    println!(
+        "summary: {} full / {} repair / {} empty | mean makespan {:.1} s | mean period {:.1} s | total work {}",
+        report.full_rounds(),
+        report.repair_rounds(),
+        report.empty_rounds(),
+        report.mean_makespan_ms() / 1000.0,
+        report.mean_period_ms() / 1000.0,
+        report.total_work_units()
+    );
+    let path = report.save(&args.str_of("out", "fleet"))?;
+    println!("report -> {}", path.display());
+    Ok(())
+}
+
+/// `psl fleet --grid`: the scenario × churn-rate × policy grid over the
+/// worker pool (thread-count-independent JSON like `psl sweep`).
+fn cmd_fleet_grid(args: &Args) -> Result<()> {
+    use psl::bench::fleet as grid;
+    use psl::fleet::Policy;
+    // Grid cells run the tested stationary defaults over the grid axes;
+    // reject single-run knobs (including the singular --scenario/--seed
+    // spellings) instead of silently ignoring them.
+    for key in [
+        "policy",
+        "depart-prob",
+        "arrival-rate",
+        "max-clients",
+        "churn-threshold",
+        "gap-threshold",
+        "batches",
+        "scenario",
+        "seed",
+    ] {
+        anyhow::ensure!(
+            !args.flags.contains_key(key),
+            "--{key} applies to single fleet runs, not --grid (grid axes: --scenarios/--churn-rates/--policies/--seeds)"
+        );
+    }
+    let list = |key: &str, default: &str| csv_list(args, key, default);
+    let scenarios = list("scenarios", "1,4")
+        .iter()
+        .map(|s| Scenario::parse(s).with_context(|| format!("bad scenario {s:?} in --scenarios")))
+        .collect::<Result<Vec<_>>>()?;
+    let model = Model::parse(&args.str_of("model", "resnet101")).context("bad --model")?;
+    let churn_rates = list("churn-rates", "0.05,0.15,0.3")
+        .iter()
+        .map(|s| {
+            let c: f64 = s.parse().ok().with_context(|| format!("bad churn rate {s:?}"))?;
+            anyhow::ensure!((0.0..=1.0).contains(&c), "churn rate {c} outside [0, 1]");
+            Ok(c)
+        })
+        .collect::<Result<Vec<_>>>()?;
+    let policies = list("policies", "incremental,full")
+        .iter()
+        .map(|s| Policy::parse(s).with_context(|| format!("bad policy {s:?} (incremental|full|repair-only)")))
+        .collect::<Result<Vec<_>>>()?;
+    let seeds = list("seeds", "42")
+        .iter()
+        .map(|s| s.parse::<u64>().ok().with_context(|| format!("bad seed {s:?}")))
+        .collect::<Result<Vec<_>>>()?;
+    let j = args.usize_of("j", 10);
+    let i = args.usize_of("i", 2);
+    anyhow::ensure!(j >= 1 && i >= 1, "fleet grid needs -j >= 1 and -i >= 1");
+    let rounds: usize = parsed_flag(args, "rounds", 8)?;
+    anyhow::ensure!(rounds >= 1, "--rounds must be >= 1");
+    let slot_ms = match args.flags.get("slot-ms") {
+        None => None,
+        Some(v) => {
+            let ms: f64 = v.parse().ok().with_context(|| format!("bad --slot-ms {v:?}"))?;
+            anyhow::ensure!(ms > 0.0, "--slot-ms must be positive, got {ms}");
+            Some(ms)
+        }
+    };
+    let cfg = grid::FleetGridCfg {
+        scenarios,
+        model,
+        size: (j, i),
+        churn_rates,
+        policies,
+        seeds,
+        rounds,
+        slot_ms,
+        threads: args.usize_of("threads", psl::exec::pool::default_workers()),
+    };
+    let n = grid::cells(&cfg).len();
+    println!(
+        "fleet grid: {} scenarios x {} churn rates x {} policies x {} seeds = {} cells on {} threads",
+        cfg.scenarios.len(),
+        cfg.churn_rates.len(),
+        cfg.policies.len(),
+        cfg.seeds.len(),
+        n,
+        cfg.threads
+    );
+    let rows = grid::run(&cfg);
+    println!(
+        "  {:<20} {:>6} {:<12} {:>6} {:>5} {:>7} {:>6} {:>13} {:>11} {:>12}",
+        "scenario", "churn", "policy", "seed", "full", "repair", "empty", "makespan[s]", "period[s]", "work"
+    );
+    for r in &rows {
+        println!(
+            "  {:<20} {:>6.2} {:<12} {:>6} {:>5} {:>7} {:>6} {:>13.1} {:>11.1} {:>12}",
+            r.scenario,
+            r.churn_rate,
+            r.policy,
+            r.seed,
+            r.full_rounds,
+            r.repair_rounds,
+            r.empty_rounds,
+            r.mean_makespan_ms / 1000.0,
+            r.mean_period_ms / 1000.0,
+            r.total_work_units
+        );
+    }
+    let path = grid::save(&rows, &args.str_of("out", "fleet-grid"))?;
+    println!("{} rows -> {}", rows.len(), path.display());
     Ok(())
 }
 

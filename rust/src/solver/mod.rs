@@ -17,6 +17,12 @@
 //! The scenario × solver evaluation grid behind `psl sweep` lives in
 //! [`crate::bench::sweep`]; its rows record each instance's
 //! [`strategy::Signals`] next to every method's makespan.
+//!
+//! [`crate::fleet`] consumes these solvers online: its orchestrator
+//! warm-starts from the previous round's [`Assignment`] (greedy arrival
+//! placement + overload rebalancing + [`schedule::fcfs_schedule`]) and
+//! falls back to a full [`strategy`] re-solve when churn or the
+//! lower-bound gap drifts.
 
 pub mod admm;
 pub mod baseline;

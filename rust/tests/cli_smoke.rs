@@ -123,6 +123,109 @@ fn gen_accepts_new_families() {
 }
 
 #[test]
+fn fleet_runs_and_is_byte_identical_across_runs() {
+    let args = |out: &str| {
+        vec![
+            "fleet", "--scenario", "4", "--model", "vgg19", "-j", "6", "-i", "2", "--seed", "5",
+            "--rounds", "6", "--out", out,
+        ]
+    };
+    let (stdout, stderr, ok) = psl(&args("cli-smoke-fleet-a"));
+    assert!(ok, "stdout={stdout} stderr={stderr}");
+    assert!(stdout.contains("full-initial"), "{stdout}");
+    assert!(stdout.contains("summary:"), "{stdout}");
+    let (stdout2, stderr2, ok2) = psl(&args("cli-smoke-fleet-b"));
+    assert!(ok2, "stdout={stdout2} stderr={stderr2}");
+    assert_eq!(stdout, stdout2, "fleet stdout must be deterministic (no wall-clock)");
+    let a = std::fs::read_to_string("target/psl-bench/cli-smoke-fleet-a.json").unwrap();
+    let b = std::fs::read_to_string("target/psl-bench/cli-smoke-fleet-b.json").unwrap();
+    assert_eq!(a, b, "fleet JSON must be byte-identical across runs");
+    let doc = psl::util::json::Json::parse(&a).unwrap();
+    assert_eq!(doc.get("kind").as_str(), Some("psl-fleet"));
+    assert_eq!(doc.get("rounds_detail").as_arr().unwrap().len(), 6);
+    // The default churn scenario exercises both paths of the tentpole:
+    // at least one warm-start repair and at least one full re-solve.
+    let decisions: Vec<String> = doc
+        .get("rounds_detail")
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|r| r.get("decision").as_str().unwrap().to_string())
+        .collect();
+    assert!(decisions.iter().any(|d| d == "repair"), "no repaired round in {decisions:?}");
+    assert!(decisions.iter().any(|d| d.starts_with("full")), "no full round in {decisions:?}");
+    std::fs::remove_file("target/psl-bench/cli-smoke-fleet-a.json").ok();
+    std::fs::remove_file("target/psl-bench/cli-smoke-fleet-b.json").ok();
+}
+
+#[test]
+fn fleet_grid_thread_count_invariant() {
+    let args = |threads: &str, out: &str| {
+        vec![
+            "fleet", "--grid", "--scenarios", "1,4", "--model", "vgg19", "-j", "5", "-i", "2",
+            "--churn-rates", "0.1,0.3", "--policies", "incremental,full", "--seeds", "3",
+            "--rounds", "4", "--threads", threads, "--out", out,
+        ]
+    };
+    let (stdout, stderr, ok) = psl(&args("2", "cli-smoke-fleet-grid-a"));
+    assert!(ok, "stdout={stdout} stderr={stderr}");
+    assert!(stdout.contains("8 cells"), "2 scenarios x 2 churn x 2 policies: {stdout}");
+    let (stdout2, stderr2, ok2) = psl(&args("1", "cli-smoke-fleet-grid-b"));
+    assert!(ok2, "stdout={stdout2} stderr={stderr2}");
+    let a = std::fs::read_to_string("target/psl-bench/cli-smoke-fleet-grid-a.json").unwrap();
+    let b = std::fs::read_to_string("target/psl-bench/cli-smoke-fleet-grid-b.json").unwrap();
+    assert_eq!(a, b, "fleet grid JSON must not depend on thread count");
+    let doc = psl::util::json::Json::parse(&a).unwrap();
+    assert_eq!(doc.get("rows").as_arr().unwrap().len(), 8);
+    std::fs::remove_file("target/psl-bench/cli-smoke-fleet-grid-a.json").ok();
+    std::fs::remove_file("target/psl-bench/cli-smoke-fleet-grid-b.json").ok();
+}
+
+#[test]
+fn fleet_rejects_bad_policy_and_probability() {
+    let (_, stderr, ok) = psl(&["fleet", "--policy", "yolo"]);
+    assert!(!ok);
+    assert!(stderr.contains("bad --policy"), "{stderr}");
+    let (_, stderr2, ok2) = psl(&["fleet", "--depart-prob", "1.5"]);
+    assert!(!ok2);
+    assert!(stderr2.contains("depart-prob"), "{stderr2}");
+}
+
+#[test]
+fn sweep_diff_self_passes_and_regression_fails() {
+    // Build a tiny artifact, then diff it against itself (exit 0) and
+    // against a doctored copy (non-zero exit, regression listed).
+    let out = "cli-smoke-diff-base";
+    let (stdout, stderr, ok) = psl(&[
+        "sweep", "--scenarios", "1", "--models", "vgg19", "--sizes", "4x2", "--seeds", "9",
+        "--methods", "greedy", "--slot-ms", "550", "--threads", "1", "--out", out,
+    ]);
+    assert!(ok, "stdout={stdout} stderr={stderr}");
+    let base = format!("target/psl-bench/{out}.json");
+    let (stdout, stderr, ok) = psl(&["sweep", "--diff", &base, &base]);
+    assert!(ok, "self-diff must exit 0: stdout={stdout} stderr={stderr}");
+    assert!(stdout.contains("no regressions"), "{stdout}");
+
+    // Doctor the artifact: inflate every makespan_ms 2x.
+    let text = std::fs::read_to_string(&base).unwrap();
+    let doc = psl::util::json::Json::parse(&text).unwrap();
+    let old_ms = doc.get("rows").as_arr().unwrap()[0].get("makespan_ms").as_f64().unwrap();
+    let doctored = text.replace(&format!("\"makespan_ms\": {old_ms}"), &format!("\"makespan_ms\": {}", old_ms * 2.0));
+    assert_ne!(text, doctored, "doctoring must change the artifact");
+    let worse = "target/psl-bench/cli-smoke-diff-worse.json";
+    std::fs::write(worse, &doctored).unwrap();
+    let (stdout, stderr, ok) = psl(&["sweep", "--diff", &base, worse]);
+    assert!(!ok, "regression must exit non-zero: stdout={stdout}");
+    assert!(stdout.contains("REGRESSION"), "{stdout}");
+    assert!(stderr.contains("regressed"), "{stderr}");
+    // The reverse direction (new is faster) passes.
+    let (stdout, _, ok) = psl(&["sweep", "--diff", worse, &base]);
+    assert!(ok, "{stdout}");
+    std::fs::remove_file(&base).ok();
+    std::fs::remove_file(worse).ok();
+}
+
+#[test]
 fn sweep_slots_runs() {
     let (stdout, stderr, ok) = psl(&[
         "sweep-slots", "-j", "6", "-i", "2", "--model", "vgg19", "--slots", "600,300",

@@ -1,0 +1,153 @@
+//! Property tests for the fleet-orchestration churn invariants:
+//! deterministic event streams, stable client ids, arrivals drawn from
+//! the scenario's device/link distributions, and memory-feasible repaired
+//! assignments on every round.
+
+use psl::fleet::events::{self, ChurnCfg};
+use psl::fleet::orchestrator::{run_on_stream, FleetCfg, Policy};
+use psl::fleet::{run, RoundEvents};
+use psl::instance::profiles::{Device, Model};
+use psl::instance::scenario::{Scenario, ScenarioCfg};
+use psl::util::prop;
+
+fn random_churn(rng: &mut psl::util::rng::Rng) -> ChurnCfg {
+    ChurnCfg {
+        rounds: rng.range_usize(2, 10),
+        arrival_rate: rng.range_f64(0.0, 3.0),
+        departure_prob: rng.range_f64(0.0, 0.5),
+        max_clients: rng.range_usize(4, 24),
+    }
+}
+
+#[test]
+fn event_streams_deterministic_per_seed() {
+    prop::check(40, |rng| {
+        let base = rng.range_usize(1, 12);
+        let churn = random_churn(rng);
+        let seed = rng.next_u64();
+        let a = events::generate(base, &churn, seed);
+        let b = events::generate(base, &churn, seed);
+        prop::assert_prop(a == b, "same (population, churn, seed) must replay identically");
+    });
+}
+
+#[test]
+fn client_ids_stable_across_rounds() {
+    prop::check(40, |rng| {
+        let base = rng.range_usize(1, 12);
+        let churn = random_churn(rng);
+        let stream = events::generate(base, &churn, rng.next_u64());
+        let mut ever_seen: std::collections::BTreeSet<u64> = stream[0].roster.iter().copied().collect();
+        for w in stream.windows(2) {
+            let (prev, next) = (&w[0], &w[1]);
+            for &id in &next.departures {
+                prop::assert_prop(prev.roster.contains(&id), "departure of a present client");
+            }
+            for &id in &next.arrivals {
+                prop::assert_prop(!ever_seen.contains(&id), "arrival ids are never reused");
+                ever_seen.insert(id);
+            }
+            // Survivors keep their ids: every non-departed previous member
+            // is still present under the same id.
+            for &id in &prev.roster {
+                prop::assert_prop(
+                    next.roster.contains(&id) == !next.departures.contains(&id),
+                    "survivor membership is exactly (previous minus departures)",
+                );
+            }
+            prop::assert_prop(
+                next.roster.len() <= churn.max_clients.max(base),
+                "roster cap (raised to the base size if smaller) holds",
+            );
+        }
+    });
+}
+
+#[test]
+fn arrivals_draw_from_device_and_link_distributions() {
+    // S1: client device mix is a uniform pool draw and links are clamped
+    // lognormals — every minted client (base or arrival) must land inside
+    // both supports.
+    let pool: Vec<f64> = Device::client_pool().iter().map(|d| d.batch_ms(Model::ResNet101)).collect();
+    prop::check(20, |rng| {
+        let cfg = ScenarioCfg::new(Scenario::S1, Model::ResNet101, rng.range_usize(2, 8), rng.range_usize(1, 4), rng.next_u64());
+        let world = cfg.fleet_world(24);
+        for id in 0..24u64 {
+            let c = world.mint_client(id);
+            prop::assert_prop(
+                pool.iter().any(|&p| (p - c.batch_ms).abs() < 1e-9),
+                "minted batch time is a concrete pool member (S1 DeviceMix::Pool)",
+            );
+            for &r in &c.rates_mbps {
+                prop::assert_prop((2.0..=60.0).contains(&r), "minted rate inside the Akamai-France clamp");
+            }
+            prop::assert_prop(c.d_gb <= world.d_cap + 1e-12, "admitted footprint respects the cap");
+        }
+    });
+}
+
+#[test]
+fn repaired_assignments_always_satisfy_memory() {
+    // The core safety property: whatever the churn history, every round's
+    // schedule — repaired or fully re-solved — is feasible, including the
+    // helper-memory constraint (5).
+    prop::check(12, |rng| {
+        let scen = Scenario::ALL[rng.below(Scenario::ALL.len())];
+        let model = if rng.chance(0.5) { Model::ResNet101 } else { Model::Vgg19 };
+        let j = rng.range_usize(2, 10);
+        let i = rng.range_usize(1, 4);
+        let cfg = ScenarioCfg::new(scen, model, j, i, rng.next_u64());
+        let mut churn = random_churn(rng);
+        churn.rounds = rng.range_usize(3, 6);
+        churn.max_clients = churn.max_clients.max(j);
+        let policy = [Policy::Incremental, Policy::RepairOnly][rng.below(2)];
+        let fleet_cfg = FleetCfg::new(cfg, churn, policy);
+        // run() debug-asserts per-round schedule feasibility (memory
+        // included) before reporting; reaching the report is the property.
+        let report = run(&fleet_cfg);
+        for r in &report.rounds {
+            prop::assert_prop(
+                r.n_clients == 0 || r.makespan_slots >= r.lower_bound,
+                "round makespan respects the fresh lower bound",
+            );
+            prop::assert_prop(
+                r.n_clients > 0 || r.makespan_slots == 0,
+                "empty rounds schedule nothing",
+            );
+        }
+    });
+}
+
+#[test]
+fn fleet_runs_deterministic_end_to_end() {
+    let cfg = || {
+        let scen = ScenarioCfg::new(Scenario::S4StragglerTail, Model::Vgg19, 8, 2, 31);
+        let mut churn = ChurnCfg::stationary(8);
+        churn.rounds = 6;
+        FleetCfg::new(scen, churn, Policy::Incremental)
+    };
+    let a = run(&cfg()).to_json().pretty();
+    let b = run(&cfg()).to_json().pretty();
+    assert_eq!(a, b, "fleet report must replay byte-identically");
+}
+
+#[test]
+fn injected_total_churn_recovers() {
+    // Kill the whole fleet, then refill it purely with arrivals: every
+    // arrival is minted from the scenario distributions and the
+    // orchestrator reschedules from an empty warm state.
+    let scen = ScenarioCfg::new(Scenario::S2, Model::ResNet101, 5, 2, 17);
+    let world = scen.fleet_world(10);
+    let stream = vec![
+        RoundEvents { round: 0, departures: vec![], arrivals: vec![], roster: vec![0, 1, 2, 3, 4] },
+        RoundEvents { round: 1, departures: vec![0, 1, 2, 3, 4], arrivals: vec![], roster: vec![] },
+        RoundEvents { round: 2, departures: vec![], arrivals: vec![5, 6, 7], roster: vec![5, 6, 7] },
+        RoundEvents { round: 3, departures: vec![5], arrivals: vec![8], roster: vec![6, 7, 8] },
+    ];
+    let churn = ChurnCfg { rounds: 4, arrival_rate: 0.0, departure_prob: 0.0, max_clients: 10 };
+    let report = run_on_stream(&FleetCfg::new(scen, churn, Policy::Incremental), &world, &stream);
+    assert_eq!(report.rounds[1].decision, "empty");
+    assert!(report.rounds[2].makespan_slots > 0, "fresh arrivals get scheduled");
+    assert!(report.rounds[3].makespan_slots > 0);
+    assert_eq!(report.empty_rounds(), 1);
+}
