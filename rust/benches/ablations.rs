@@ -47,7 +47,7 @@ fn main() {
             .iter()
             .map(|inst| {
                 let g = greedy::solve(inst).unwrap();
-                bwd::complete_with_optimal_bwd(inst, g.assignment.clone(), g.fwd_slots.clone())
+                bwd::complete_with_optimal_bwd(inst, g.assignment.clone(), g.fwd.clone())
                     .makespan(inst) as f64
                     * slot
                     / 1000.0

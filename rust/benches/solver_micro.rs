@@ -45,9 +45,13 @@ fn main() {
         })
         .collect();
     let total: u32 = jobs.iter().map(|j| j.proc).sum();
-    let free: Vec<u32> = (0..(400 + total)).collect();
+    let free = psl::solver::schedule::SlotRuns::one(0, 400 + total);
     add("baker_block_64jobs", 3, 50, &mut || {
         let _ = bwd::preemptive_min_max_tail(&jobs, &free);
+    });
+    let mut scratch = bwd::CostScratch::default();
+    add("ldt_cost_64jobs", 3, 200, &mut || {
+        let _ = bwd::preemptive_cost_contiguous(&jobs, &mut scratch);
     });
 
     // FCFS scheduling at J=100.

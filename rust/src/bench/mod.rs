@@ -1,15 +1,18 @@
 //! Benchmark substrate used by the `rust/benches/*` targets (`cargo
 //! bench` with `harness = false`) — see DESIGN.md §4 for the table/figure
 //! mapping — plus the multi-threaded scenario × solver sweep runner
-//! behind `psl sweep` ([`sweep`]) and the fleet-orchestration grid behind
-//! `psl fleet --grid` ([`fleet`]).
+//! behind `psl sweep` ([`sweep`]), the fleet-orchestration grid behind
+//! `psl fleet --grid` ([`fleet`]), and the solve/check/replay perf
+//! trajectory behind `psl perf` ([`perf`]).
 
 pub mod fleet;
 pub mod harness;
+pub mod perf;
 pub mod sweep;
 
 pub use fleet::{FleetGridCfg, FleetGridRow};
 pub use harness::{fmt_s, time_fn, Report};
+pub use perf::{PerfCfg, PerfRow};
 pub use sweep::{SweepCfg, SweepRow};
 
 /// Write a deterministic JSON artifact under

@@ -9,6 +9,7 @@
 //!   psl sweep <grid args>             multi-threaded scenario × solver grid
 //!   psl sweep --diff <old> <new>      compare two sweep artifacts
 //!   psl fleet <churn args>            multi-round churn orchestration
+//!   psl perf [--smoke]                solve/check/replay perf trajectory
 //!
 //! Common scenario args: --scenario 1..6  --model resnet101|vgg19  -j N
 //! -i N  --seed S  --slot-ms X. Run `psl help` for the full list.
@@ -96,8 +97,14 @@ COMMANDS
                 and depart between rounds; the orchestrator repairs the
                 previous assignment incrementally and falls back to a
                 full re-solve on drift. Deterministic JSON report under
-                target/psl-bench/. With --grid: the scenario x churn-rate
-                x policy grid across worker threads.
+                target/psl-bench/, plus a round-by-round JSONL stream
+                (<out>.rounds.jsonl) written as rounds finish. With
+                --grid: the scenario x churn-rate x policy grid across
+                worker threads.
+  perf          Time the solver/checker/replay hot paths across scenario
+                families and sizes, compare the run-length schedule
+                representation against the dense baseline, and write the
+                perf-trajectory artifact target/psl-bench/perf.json.
   help          This text.
 
 SCENARIO FLAGS (gen/solve/sweep-slots)
@@ -145,6 +152,15 @@ defaults to s4-straggler-tail)
                         --threads as in sweep; --out default fleet-grid;
                         single-run knobs like --policy/--depart-prob are
                         rejected — cells use stationary defaults)
+
+PERF FLAGS
+  --scenarios LIST      comma list of families         [default 1,2,6]
+  --sizes LIST          comma list of JxI cells        [default 32x4,256x16]
+  --model NAME          resnet101|vgg19                [default resnet101]
+  --seed S              RNG seed                       [default 42]
+  --iters N             timed reps per phase           [default 3]
+  --smoke               tiny CI grid (8x2, 1 rep)
+  --out NAME            output name under target/psl-bench [default perf]
 
 SOLVE FLAGS
   --method admm|greedy|baseline|exact|strategy|all     [default all]

@@ -22,13 +22,15 @@
 //! scenario's `DeviceMix`/`LinkRegime`, so arrivals follow the same
 //! distributions as the base population and every client reproduces from
 //! `(scenario tuple, id)` alone. The `psl fleet` subcommand drives a
-//! single run; [`crate::bench::fleet`] fans a scenario × churn-rate ×
-//! policy grid across worker threads like `psl sweep`.
+//! single run — streaming each finished round as a JSONL line next to the
+//! final JSON via [`orchestrator::run_streaming`] — while
+//! [`crate::bench::fleet`] fans a scenario × churn-rate × policy grid
+//! across worker threads like `psl sweep`.
 
 pub mod events;
 pub mod orchestrator;
 pub mod report;
 
 pub use events::{ChurnCfg, RoundEvents};
-pub use orchestrator::{run, Decision, FleetCfg, Policy};
+pub use orchestrator::{run, run_streaming, Decision, FleetCfg, Policy};
 pub use report::{FleetReport, RoundReport};

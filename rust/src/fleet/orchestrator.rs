@@ -286,18 +286,36 @@ fn full_work(inst: &Instance, method: strategy::Method, admm: &AdmmCfg) -> u64 {
 /// Run the fleet: generate the event stream, loop rounds, repair or
 /// re-solve, and collect the per-round report.
 pub fn run(cfg: &FleetCfg) -> FleetReport {
+    run_streaming(cfg, &mut |_| {})
+}
+
+/// [`run`] with a per-round sink: the callback receives each
+/// [`RoundReport`] the moment its round finishes, *before* the next round
+/// solves — long-horizon runs can stream a JSONL sidecar instead of
+/// waiting for the final report.
+pub fn run_streaming(cfg: &FleetCfg, sink: &mut dyn FnMut(&RoundReport)) -> FleetReport {
     let world = cfg.scenario.fleet_world(cfg.churn.max_clients);
     let stream = events::generate(
         world.base_clients(),
         &cfg.churn,
         cfg.scenario.seed ^ fnv(&cfg.scenario.spec.name),
     );
-    run_on_stream(cfg, &world, &stream)
+    run_on_stream_streaming(cfg, &world, &stream, sink)
 }
 
 /// [`run`] on a pre-generated event stream (tests inject hand-crafted
 /// churn histories through this entry).
 pub fn run_on_stream(cfg: &FleetCfg, world: &FleetWorld, stream: &[RoundEvents]) -> FleetReport {
+    run_on_stream_streaming(cfg, world, stream, &mut |_| {})
+}
+
+/// [`run_on_stream`] with a per-round sink (see [`run_streaming`]).
+pub fn run_on_stream_streaming(
+    cfg: &FleetCfg,
+    world: &FleetWorld,
+    stream: &[RoundEvents],
+    sink: &mut dyn FnMut(&RoundReport),
+) -> FleetReport {
     let admm_cfg = AdmmCfg::default();
     let slot_ms = cfg.slot_ms();
     let mut minted: BTreeMap<u64, FleetClient> = BTreeMap::new();
@@ -376,7 +394,7 @@ pub fn run_on_stream(cfg: &FleetCfg, world: &FleetWorld, stream: &[RoundEvents])
             None => (0, 0, 0.0, None),
         };
 
-        rounds.push(RoundReport {
+        let round_report = RoundReport {
             round: ev.round,
             n_clients: roster.len(),
             arrivals: ev.arrivals.len(),
@@ -392,7 +410,9 @@ pub fn run_on_stream(cfg: &FleetCfg, world: &FleetWorld, stream: &[RoundEvents])
             work_units: work,
             period_ms,
             preemptions,
-        });
+        };
+        sink(&round_report);
+        rounds.push(round_report);
 
         prev_assign = match &schedule {
             Some((s, _)) => roster.iter().zip(&s.assignment.helper_of).map(|(c, &i)| (c.id, i)).collect(),
@@ -502,6 +522,17 @@ mod tests {
         let churn = ChurnCfg { rounds: 2, arrival_rate: 0.0, departure_prob: 0.0, max_clients: 12 };
         let r = run_on_stream(&FleetCfg::new(scen, churn, Policy::Incremental), &world, &stream);
         assert_eq!(r.rounds[1].decision, "full-churn");
+    }
+
+    #[test]
+    fn streaming_sink_sees_every_round_in_order() {
+        let mut streamed = Vec::new();
+        let r = run_streaming(&cfg(Policy::Incremental), &mut |round| streamed.push(round.clone()));
+        assert_eq!(streamed.len(), r.rounds.len());
+        assert_eq!(streamed, r.rounds, "sink receives exactly the final report's rounds");
+        // And the sink-less entry point produces the identical report.
+        let plain = run(&cfg(Policy::Incremental));
+        assert_eq!(plain.to_json().pretty(), r.to_json().pretty());
     }
 
     #[test]

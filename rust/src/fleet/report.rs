@@ -41,6 +41,40 @@ pub struct RoundReport {
     pub preemptions: u32,
 }
 
+impl RoundReport {
+    /// The round's JSON object — one entry of `rounds_detail`, and one
+    /// line of the streamed `<out>.rounds.jsonl` sidecar (same shape, so
+    /// the JSONL concatenation is exactly the final report's detail
+    /// array).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("round", Json::Num(self.round as f64)),
+            ("n_clients", Json::Num(self.n_clients as f64)),
+            ("arrivals", Json::Num(self.arrivals as f64)),
+            ("departures", Json::Num(self.departures as f64)),
+            ("decision", Json::Str(self.decision.to_string())),
+            (
+                "method",
+                self.method.map(|m| Json::Str(m.to_string())).unwrap_or(Json::Null),
+            ),
+            ("makespan_slots", Json::Num(self.makespan_slots as f64)),
+            ("makespan_ms", Json::Num(self.makespan_ms)),
+            ("lower_bound", Json::Num(self.lower_bound as f64)),
+            ("churn_frac", Json::Num(self.churn_frac)),
+            ("repair_moves", Json::Num(self.repair_moves as f64)),
+            ("placed_arrivals", Json::Num(self.placed_arrivals as f64)),
+            ("work_units", Json::Str(self.work_units.to_string())),
+            ("period_ms", Json::Num(self.period_ms)),
+            ("preemptions", Json::Num(self.preemptions as f64)),
+        ])
+    }
+
+    /// Single-line JSON for round-by-round streaming (JSONL).
+    pub fn jsonl_line(&self) -> String {
+        self.to_json().dump()
+    }
+}
+
 /// A whole fleet run.
 #[derive(Clone, Debug, PartialEq)]
 pub struct FleetReport {
@@ -115,33 +149,7 @@ impl FleetReport {
             ),
             (
                 "rounds_detail",
-                Json::Arr(
-                    self.rounds
-                        .iter()
-                        .map(|r| {
-                            Json::obj(vec![
-                                ("round", Json::Num(r.round as f64)),
-                                ("n_clients", Json::Num(r.n_clients as f64)),
-                                ("arrivals", Json::Num(r.arrivals as f64)),
-                                ("departures", Json::Num(r.departures as f64)),
-                                ("decision", Json::Str(r.decision.to_string())),
-                                (
-                                    "method",
-                                    r.method.map(|m| Json::Str(m.to_string())).unwrap_or(Json::Null),
-                                ),
-                                ("makespan_slots", Json::Num(r.makespan_slots as f64)),
-                                ("makespan_ms", Json::Num(r.makespan_ms)),
-                                ("lower_bound", Json::Num(r.lower_bound as f64)),
-                                ("churn_frac", Json::Num(r.churn_frac)),
-                                ("repair_moves", Json::Num(r.repair_moves as f64)),
-                                ("placed_arrivals", Json::Num(r.placed_arrivals as f64)),
-                                ("work_units", Json::Str(r.work_units.to_string())),
-                                ("period_ms", Json::Num(r.period_ms)),
-                                ("preemptions", Json::Num(r.preemptions as f64)),
-                            ])
-                        })
-                        .collect(),
-                ),
+                Json::Arr(self.rounds.iter().map(|r| r.to_json()).collect()),
             ),
         ])
     }
@@ -199,6 +207,19 @@ mod tests {
         assert_eq!(r.empty_rounds(), 1);
         assert_eq!(r.total_work_units(), 1010);
         assert!((r.mean_makespan_ms() - 1000.0).abs() < 1e-9, "empty rounds excluded");
+    }
+
+    #[test]
+    fn jsonl_lines_match_rounds_detail() {
+        let r = report();
+        let detail = r.to_json();
+        let detail_rows = detail.get("rounds_detail").as_arr().unwrap();
+        for (round, row) in r.rounds.iter().zip(detail_rows) {
+            let line = round.jsonl_line();
+            assert!(!line.contains('\n'), "JSONL lines are single-line");
+            let parsed = Json::parse(&line).unwrap();
+            assert_eq!(parsed.pretty(), row.pretty(), "JSONL line equals the detail entry");
+        }
     }
 
     #[test]

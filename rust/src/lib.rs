@@ -43,8 +43,18 @@
 //! distributions with stable client ids, departures evicted), warm-started
 //! incremental re-solving with a drift-triggered full-solve fallback, and
 //! per-round reports (makespan, re-solve cost proxy, epoch-pipelined
-//! period). `psl fleet` drives a single run; [`bench::fleet`] runs the
-//! scenario × churn-rate × policy grid.
+//! period). `psl fleet` drives a single run (streaming a round-by-round
+//! JSONL sidecar); [`bench::fleet`] runs the scenario × churn-rate ×
+//! policy grid.
+//!
+//! ## Performance
+//!
+//! Schedules are run-length encoded ([`solver::schedule::SlotRuns`]):
+//! checker, replay and fleet costs scale with preemption runs, not total
+//! processing slots, and the ADMM local search evaluates moves
+//! allocation-free. `psl perf` ([`bench::perf`]) times these hot paths
+//! against the dense baseline and writes the repo's perf trajectory to
+//! `target/psl-bench/perf.json`.
 //!
 //! ## Quickstart
 //!

@@ -49,6 +49,7 @@ fn dispatch(args: &Args) -> Result<()> {
         "sweep-slots" => cmd_sweep(args),
         "sweep" => cmd_sweep_grid(args),
         "fleet" => cmd_fleet(args),
+        "perf" => cmd_perf(args),
         "train" => cmd_train(args),
         other => anyhow::bail!("unknown command {other:?}; see `psl help`"),
     }
@@ -365,7 +366,30 @@ fn cmd_fleet(args: &Args) -> Result<()> {
     cfg.gap_threshold = parsed_flag(args, "gap-threshold", cfg.gap_threshold)?;
     cfg.epoch_batches = parsed_flag(args, "batches", cfg.epoch_batches)?;
 
-    let report = psl::fleet::run(&cfg);
+    // Stream each finished round as a JSONL line next to the final JSON,
+    // so long-horizon runs leave a usable trace even if interrupted.
+    let out_name = args.str_of("out", "fleet");
+    let jsonl_dir = std::path::Path::new("target/psl-bench");
+    std::fs::create_dir_all(jsonl_dir)?;
+    let jsonl_path = jsonl_dir.join(format!("{out_name}.rounds.jsonl"));
+    let jsonl_file = std::fs::File::create(&jsonl_path)
+        .with_context(|| format!("create {}", jsonl_path.display()))?;
+    let mut writer = std::io::BufWriter::new(jsonl_file);
+    let mut io_err: Option<std::io::Error> = None;
+    let report = psl::fleet::run_streaming(&cfg, &mut |round| {
+        use std::io::Write;
+        if io_err.is_none() {
+            let res = writeln!(writer, "{}", round.jsonl_line()).and_then(|_| writer.flush());
+            if let Err(e) = res {
+                io_err = Some(e);
+            }
+        }
+    });
+    // The sidecar is a convenience trace: a write failure must not throw
+    // away the completed run — warn and still save the final report.
+    if let Some(e) = &io_err {
+        eprintln!("warning: rounds stream {} truncated: {e}", jsonl_path.display());
+    }
     println!("{} | policy {} | slot {} ms | {} rounds", report.label, report.policy, report.slot_ms, rounds);
     println!(
         "  {:>5} {:>3} {:>4} {:>4} {:<13} {:<8} {:>8} {:>12} {:>11} {:>6} {:>10}",
@@ -396,8 +420,109 @@ fn cmd_fleet(args: &Args) -> Result<()> {
         report.mean_period_ms() / 1000.0,
         report.total_work_units()
     );
-    let path = report.save(&args.str_of("out", "fleet"))?;
+    let path = report.save(&out_name)?;
     println!("report -> {}", path.display());
+    if io_err.is_none() {
+        println!("rounds stream -> {}", jsonl_path.display());
+    }
+    Ok(())
+}
+
+/// `psl perf`: time the solve/check/replay hot paths across scenario
+/// families and sizes, compare against the dense-representation
+/// baselines, and append a point to the perf trajectory
+/// (`target/psl-bench/<out>.json`). Non-zero exit on non-finite timings
+/// or dense/run replay divergence.
+fn cmd_perf(args: &Args) -> Result<()> {
+    use psl::bench::perf;
+    let mut cfg = if args.bool_of("smoke") { perf::PerfCfg::smoke() } else { perf::PerfCfg::default() };
+    if args.flags.contains_key("scenarios") {
+        cfg.scenarios = csv_list(args, "scenarios", "")
+            .iter()
+            .map(|s| Scenario::parse(s).with_context(|| format!("bad scenario {s:?} in --scenarios")))
+            .collect::<Result<Vec<_>>>()?;
+        anyhow::ensure!(!cfg.scenarios.is_empty(), "--scenarios must name at least one family");
+    }
+    if args.flags.contains_key("sizes") {
+        cfg.sizes = csv_list(args, "sizes", "")
+            .iter()
+            .map(|s| {
+                let (j, i) = s.split_once('x').with_context(|| format!("size {s:?} is not JxI"))?;
+                let j = j.trim().parse::<usize>().ok().with_context(|| format!("bad J in {s:?}"))?;
+                let i = i.trim().parse::<usize>().ok().with_context(|| format!("bad I in {s:?}"))?;
+                anyhow::ensure!(j >= 1 && i >= 1, "size {s:?} needs J >= 1 and I >= 1");
+                Ok((j, i))
+            })
+            .collect::<Result<Vec<_>>>()?;
+        anyhow::ensure!(!cfg.sizes.is_empty(), "--sizes must name at least one JxI cell");
+    }
+    cfg.model = Model::parse(&args.str_of("model", cfg.model.name())).context("bad --model")?;
+    cfg.seed = parsed_flag(args, "seed", cfg.seed)?;
+    cfg.iters = parsed_flag(args, "iters", cfg.iters)?;
+    anyhow::ensure!(cfg.iters >= 1, "--iters must be >= 1");
+
+    println!(
+        "perf: {} scenarios x {} sizes, {} timed iters (model {})",
+        cfg.scenarios.len(),
+        cfg.sizes.len(),
+        cfg.iters,
+        cfg.model.name()
+    );
+    let rows = perf::run(&cfg);
+    perf::validate(&rows).context("perf timings failed validation")?;
+    println!(
+        "  {:<20} {:>5} {:>3} {:<13} {:>10} {:>10} {:>8} {:>9} {:>10}",
+        "scenario", "J", "I", "phase", "mean", "p50", "slots", "runs", "makespan"
+    );
+    for r in &rows {
+        println!(
+            "  {:<20} {:>5} {:>3} {:<13} {:>10} {:>10} {:>8} {:>9} {:>10}",
+            r.scenario,
+            r.n_clients,
+            r.n_helpers,
+            r.phase,
+            psl::bench::fmt_s(r.mean_s),
+            psl::bench::fmt_s(r.p50_s),
+            r.total_slots,
+            r.total_runs,
+            r.makespan_slots
+        );
+    }
+    // Headline: run-length vs dense on the hot read paths, per cell.
+    let mean_of = |scenario: &str, j: usize, i: usize, phase: &str| -> Option<f64> {
+        rows.iter()
+            .find(|r| r.scenario == scenario && r.n_clients == j && r.n_helpers == i && r.phase == phase)
+            .map(|r| r.mean_s)
+    };
+    for &scen in &cfg.scenarios {
+        for &(j, i) in &cfg.sizes {
+            let (Some(c), Some(cd), Some(rp), Some(rpd)) = (
+                mean_of(scen.name(), j, i, "check"),
+                mean_of(scen.name(), j, i, "check-dense"),
+                mean_of(scen.name(), j, i, "replay"),
+                mean_of(scen.name(), j, i, "replay-dense"),
+            ) else {
+                continue;
+            };
+            let speedup = |dense: f64, runs: f64| -> String {
+                if runs > 0.0 { format!("{:.1}x", dense / runs) } else { "-".into() }
+            };
+            println!(
+                "  {}/{}x{}: check {} vs dense {} ({}) | replay {} vs dense {} ({})",
+                scen.name(),
+                j,
+                i,
+                psl::bench::fmt_s(c),
+                psl::bench::fmt_s(cd),
+                speedup(cd, c),
+                psl::bench::fmt_s(rp),
+                psl::bench::fmt_s(rpd),
+                speedup(rpd, rp)
+            );
+        }
+    }
+    let path = perf::save(&rows, &args.str_of("out", "perf"))?;
+    println!("{} rows -> {}", rows.len(), path.display());
     Ok(())
 }
 

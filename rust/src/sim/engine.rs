@@ -9,14 +9,17 @@
 //! be able to start processing the next task before the end of the 3rd
 //! slot"). This engine measures the realized makespan.
 //!
-//! Mechanics: each client's fwd/bwd slot list is split into maximal
-//! contiguous *segments*; a segment of k slots out of the task's n total
+//! Mechanics: each client's fwd/bwd run set already *is* the maximal
+//! contiguous segment list (the [`SlotRuns`](crate::solver::schedule::SlotRuns)
+//! representation); a segment of k slots out of the task's n total
 //! carries k/n of the task's true processing time. Per helper, segments
-//! execute in slot order; a segment may start only when the previous
-//! segment on that helper finished AND its task is ready (fwd: after r_ms;
-//! bwd: after the client-side turnaround l_ms + l'_ms following fwd
+//! execute in slot order ([`super::segments::streams`], shared with the
+//! epoch engine); a segment may start only when the previous segment on
+//! that helper finished AND its task is ready (fwd: after r_ms; bwd:
+//! after the client-side turnaround l_ms + l'_ms following fwd
 //! completion). Completion of client j = bwd finish + r'_ms.
 
+use super::segments;
 use crate::instance::InstanceMs;
 use crate::solver::schedule::Schedule;
 use crate::util::rng::Rng;
@@ -34,16 +37,6 @@ pub struct Replay {
     pub helper_util: Vec<f64>,
     /// Per-client queuing delay (ms): completion − ideal unqueued path.
     pub queuing_ms: Vec<f64>,
-}
-
-/// One executable segment on a helper.
-#[derive(Clone, Copy, Debug)]
-struct Segment {
-    client: usize,
-    is_bwd: bool,
-    first_slot: u32,
-    /// Fraction of the task's true duration carried by this segment.
-    frac: f64,
 }
 
 /// Replay `schedule` against the continuous instance. `jitter` optionally
@@ -64,34 +57,18 @@ pub fn replay(inst: &InstanceMs, schedule: &Schedule, mut jitter: Option<(&mut R
         }
     };
 
+    let members = schedule.assignment.members_by_helper(inst.n_helpers);
+    let streams = segments::streams(inst.n_helpers, schedule);
+    // Per-client slot in the per-helper state vectors (rebuilt per helper).
+    let mut k_of = vec![usize::MAX; jn];
     for i in 0..inst.n_helpers {
-        let clients: Vec<usize> = (0..jn).filter(|&j| schedule.assignment.helper_of[j] == i).collect();
+        let clients = &members[i];
         if clients.is_empty() {
             continue;
         }
-        // Build the segment list in slot order.
-        let mut segments: Vec<Segment> = Vec::new();
-        for &j in &clients {
-            for (slots, is_bwd) in [(&schedule.fwd_slots[j], false), (&schedule.bwd_slots[j], true)] {
-                if slots.is_empty() {
-                    continue;
-                }
-                let n = slots.len() as f64;
-                let mut run_start = 0usize;
-                for k in 1..=slots.len() {
-                    if k == slots.len() || slots[k] != slots[k - 1] + 1 {
-                        segments.push(Segment {
-                            client: j,
-                            is_bwd,
-                            first_slot: slots[run_start],
-                            frac: (k - run_start) as f64 / n,
-                        });
-                        run_start = k;
-                    }
-                }
-            }
+        for (k, &j) in clients.iter().enumerate() {
+            k_of[j] = k;
         }
-        segments.sort_by_key(|s| (s.first_slot, s.client, s.is_bwd));
 
         // True durations (possibly jittered once per task, split by frac).
         let true_ms: Vec<(f64, f64)> = clients
@@ -101,20 +78,14 @@ pub fn replay(inst: &InstanceMs, schedule: &Schedule, mut jitter: Option<(&mut R
                 (jit(inst.p_ms[e]), jit(inst.pp_ms[e]))
             })
             .collect();
-        let idx_of = |j: usize| clients.iter().position(|&c| c == j).unwrap();
 
         // Execute.
         let mut clock = 0.0f64;
         let mut fwd_done = vec![0.0f64; clients.len()];
-        let mut fwd_rem = vec![0.0f64; clients.len()];
-        let mut bwd_rem = vec![0.0f64; clients.len()];
-        for (k, &j) in clients.iter().enumerate() {
-            let _ = j;
-            fwd_rem[k] = true_ms[k].0;
-            bwd_rem[k] = true_ms[k].1;
-        }
-        for seg in &segments {
-            let k = idx_of(seg.client);
+        let mut fwd_rem: Vec<f64> = true_ms.iter().map(|t| t.0).collect();
+        let mut bwd_rem: Vec<f64> = true_ms.iter().map(|t| t.1).collect();
+        for seg in &streams[i] {
+            let k = k_of[seg.client];
             let e = inst.edge(i, seg.client);
             let ready = if seg.is_bwd {
                 fwd_done[k] + inst.l_ms[e] + inst.lp_ms[e]

@@ -9,6 +9,7 @@
 //! per-batch *period* of the pipelined schedule vs the single-batch
 //! makespan (period ≤ makespan; the gap is the pipelining win).
 
+use super::segments;
 use crate::instance::InstanceMs;
 use crate::solver::schedule::Schedule;
 
@@ -29,35 +30,9 @@ pub struct EpochReplay {
 pub fn replay_epoch(inst: &InstanceMs, schedule: &Schedule, batches: usize) -> EpochReplay {
     assert!(batches >= 1);
     let jn = inst.n_clients;
-    // Per-helper ordered segment streams (client, is_bwd, frac) like the
-    // single-batch engine.
-    #[derive(Clone, Copy)]
-    struct Seg {
-        client: usize,
-        is_bwd: bool,
-        first_slot: u32,
-        frac: f64,
-    }
-    let mut streams: Vec<Vec<Seg>> = vec![Vec::new(); inst.n_helpers];
-    for j in 0..jn {
-        let i = schedule.assignment.helper_of[j];
-        for (slots, is_bwd) in [(&schedule.fwd_slots[j], false), (&schedule.bwd_slots[j], true)] {
-            if slots.is_empty() {
-                continue;
-            }
-            let n = slots.len() as f64;
-            let mut run = 0usize;
-            for k in 1..=slots.len() {
-                if k == slots.len() || slots[k] != slots[k - 1] + 1 {
-                    streams[i].push(Seg { client: j, is_bwd, first_slot: slots[run], frac: (k - run) as f64 / n });
-                    run = k;
-                }
-            }
-        }
-    }
-    for s in streams.iter_mut() {
-        s.sort_by_key(|seg| (seg.first_slot, seg.client, seg.is_bwd));
-    }
+    // Per-helper ordered segment streams — the same shared projection the
+    // single-batch engine uses ([`segments::streams`]).
+    let streams = segments::streams(inst.n_helpers, schedule);
 
     // State carried across batches.
     let mut batch_done = vec![0.0f64; jn]; // completion of client j's last batch

@@ -25,7 +25,7 @@ pub fn summarize(inst: &Instance, s: &Schedule) -> ScheduleMetrics {
     let mut load = vec![0u32; inst.n_helpers];
     for j in 0..inst.n_clients {
         let i = s.assignment.helper_of[j];
-        load[i] += (s.fwd_slots[j].len() + s.bwd_slots[j].len()) as u32;
+        load[i] += s.fwd[j].len() + s.bwd[j].len();
     }
     let queuing: Vec<i64> = (0..inst.n_clients).map(|j| s.queuing_delay(inst, j)).collect();
     ScheduleMetrics {
@@ -44,29 +44,24 @@ pub fn summarize(inst: &Instance, s: &Schedule) -> ScheduleMetrics {
 }
 
 /// Export a schedule as a Gantt JSON document: one entry per contiguous
-/// segment, grouped by helper — renderable by any plotting tool.
+/// segment, grouped by helper — renderable by any plotting tool. The
+/// run-length representation already stores exactly these segments.
 pub fn gantt_json(inst: &Instance, s: &Schedule) -> Json {
     let mut rows = Vec::new();
     for j in 0..inst.n_clients {
         let i = s.assignment.helper_of[j];
-        for (slots, phase) in [(&s.fwd_slots[j], "fwd"), (&s.bwd_slots[j], "bwd")] {
-            if slots.is_empty() {
-                continue;
-            }
-            let mut run_start = 0usize;
-            for k in 1..=slots.len() {
-                if k == slots.len() || slots[k] != slots[k - 1] + 1 {
-                    rows.push(Json::obj(vec![
-                        ("helper", Json::Num(i as f64)),
-                        ("client", Json::Num(j as f64)),
-                        ("phase", Json::Str(phase.to_string())),
-                        ("start_slot", Json::Num(slots[run_start] as f64)),
-                        ("end_slot", Json::Num((slots[k - 1] + 1) as f64)),
-                        ("start_ms", Json::Num(slots[run_start] as f64 * inst.slot_ms)),
-                        ("end_ms", Json::Num((slots[k - 1] + 1) as f64 * inst.slot_ms)),
-                    ]));
-                    run_start = k;
-                }
+        for (runs, phase) in [(&s.fwd[j], "fwd"), (&s.bwd[j], "bwd")] {
+            for &(start, len) in runs.runs() {
+                let end = start + len;
+                rows.push(Json::obj(vec![
+                    ("helper", Json::Num(i as f64)),
+                    ("client", Json::Num(j as f64)),
+                    ("phase", Json::Str(phase.to_string())),
+                    ("start_slot", Json::Num(start as f64)),
+                    ("end_slot", Json::Num(end as f64)),
+                    ("start_ms", Json::Num(start as f64 * inst.slot_ms)),
+                    ("end_ms", Json::Num(end as f64 * inst.slot_ms)),
+                ]));
             }
         }
     }

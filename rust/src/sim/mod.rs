@@ -1,12 +1,22 @@
 //! Discrete-event simulation of the parallel-SL batch workflow:
-//! continuous-time replay of slotted schedules ([`engine`]), slot-length
-//! sweeps for the Fig-6 experiment ([`quantize`]) and schedule metrics /
-//! Gantt export ([`metrics`]).
+//! continuous-time replay of slotted schedules ([`engine`]), epoch-level
+//! pipelined replay ([`epoch`]), slot-length sweeps for the Fig-6
+//! experiment ([`quantize`]) and schedule metrics / Gantt export
+//! ([`metrics`]).
+//!
+//! Both replay engines execute the same object: per-helper streams of
+//! contiguous task segments, projected once from the run-length-encoded
+//! schedule by [`segments::streams`] — O(#preemption runs), never
+//! O(total slots). The `psl perf` harness ([`crate::bench::perf`]) times
+//! these paths against a dense-representation baseline to keep the
+//! speedup on the record.
 
 pub mod engine;
 pub mod epoch;
 pub mod metrics;
 pub mod quantize;
+pub mod segments;
 
 pub use engine::{replay, Replay};
 pub use metrics::{gantt_json, summarize, ScheduleMetrics};
+pub use segments::{streams, TaskSeg};

@@ -1,0 +1,83 @@
+//! The one place schedule runs become executable segment streams.
+//!
+//! Both replay engines ([`crate::sim::engine`] single-batch and
+//! [`crate::sim::epoch`] pipelined) execute the same object: per helper,
+//! the time-ordered stream of contiguous task segments, each carrying the
+//! fraction of its task's true duration. Before the run-length refactor
+//! each engine re-derived segments slot-by-slot from dense lists; now the
+//! schedule *is* the segment list ([`SlotRuns`]), and this module is the
+//! single shared projection onto per-helper streams.
+
+use crate::solver::schedule::{Schedule, SlotRuns};
+
+/// One executable segment of a task on its helper.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct TaskSeg {
+    pub client: usize,
+    pub is_bwd: bool,
+    /// First slot of the contiguous run (ordering key within the helper).
+    pub start: u32,
+    /// Slots in the run.
+    pub len: u32,
+    /// Fraction of the task's true duration carried by this segment
+    /// (len / total task slots).
+    pub frac: f64,
+}
+
+fn push_task(stream: &mut Vec<TaskSeg>, client: usize, is_bwd: bool, runs: &SlotRuns) {
+    let total = runs.len();
+    if total == 0 {
+        return;
+    }
+    for &(start, len) in runs.runs() {
+        stream.push(TaskSeg { client, is_bwd, start, len, frac: len as f64 / total as f64 });
+    }
+}
+
+/// Per-helper segment streams in execution order (slot order; ties broken
+/// by client id then phase for determinism on degenerate schedules).
+/// O(#runs log #runs) — independent of slot counts.
+pub fn streams(inst_helpers: usize, schedule: &Schedule) -> Vec<Vec<TaskSeg>> {
+    let mut out: Vec<Vec<TaskSeg>> = vec![Vec::new(); inst_helpers];
+    for j in 0..schedule.fwd.len() {
+        let i = schedule.assignment.helper_of[j];
+        push_task(&mut out[i], j, false, &schedule.fwd[j]);
+        push_task(&mut out[i], j, true, &schedule.bwd[j]);
+    }
+    for s in out.iter_mut() {
+        s.sort_by_key(|seg| (seg.start, seg.client, seg.is_bwd));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::solver::schedule::{Assignment, Schedule};
+
+    #[test]
+    fn fracs_sum_to_one_per_task_and_order_is_by_start() {
+        let s = Schedule {
+            assignment: Assignment::new(vec![0, 0]),
+            fwd: vec![SlotRuns::from_slots(&[0, 1, 4]), SlotRuns::from_slots(&[2, 3])],
+            bwd: vec![SlotRuns::from_slots(&[6]), SlotRuns::from_slots(&[7, 8])],
+        };
+        let st = streams(1, &s);
+        assert_eq!(st.len(), 1);
+        let stream = &st[0];
+        // client 0 fwd splits into 2 segments (slots 0-1 and 4).
+        let c0_fwd: Vec<&TaskSeg> = stream.iter().filter(|x| x.client == 0 && !x.is_bwd).collect();
+        assert_eq!(c0_fwd.len(), 2);
+        assert!((c0_fwd.iter().map(|x| x.frac).sum::<f64>() - 1.0).abs() < 1e-12);
+        assert!((c0_fwd[0].frac - 2.0 / 3.0).abs() < 1e-12);
+        // Stream sorted by start.
+        assert!(stream.windows(2).all(|w| w[0].start <= w[1].start));
+        // Empty tasks produce no segments.
+        let empty = Schedule {
+            assignment: Assignment::new(vec![0]),
+            fwd: vec![SlotRuns::new()],
+            bwd: vec![SlotRuns::new()],
+        };
+        assert!(streams(1, &empty)[0].is_empty());
+    }
+}

@@ -99,10 +99,10 @@ impl Driver {
         let mut tasks: Vec<Task> = Vec::new();
         for j in 0..self.clients.len() {
             let i = self.schedule.assignment.helper_of[j];
-            if let Some(&last) = self.schedule.fwd_slots[j].last() {
+            if let Some(last) = self.schedule.fwd[j].last_slot() {
                 tasks.push(Task { helper: i, client: j, is_bwd: false, completion_slot: last });
             }
-            if let Some(&last) = self.schedule.bwd_slots[j].last() {
+            if let Some(last) = self.schedule.bwd[j].last_slot() {
                 tasks.push(Task { helper: i, client: j, is_bwd: true, completion_slot: last });
             }
         }

@@ -20,18 +20,22 @@
 //! * **w-subproblem.** Constraint (20) pins each client's full fwd
 //!   processing to (effectively) one helper, so w decomposes into a
 //!   per-client helper choice κ_j plus per-helper preemptive fwd
-//!   scheduling. For a fixed κ the optimal fwd schedule per helper is the
-//!   Baker block algorithm with tails l_ij (min max c^f — the same
-//!   machinery as Algorithm 2, see [`super::bwd`]). Over κ we run greedy
-//!   insertion + steepest-descent local search on the exact evaluation.
+//!   scheduling. For a fixed κ the optimal fwd objective per helper is
+//!   evaluated by the preemptive LDT rule
+//!   ([`bwd::preemptive_cost_contiguous`]) — cost-only, allocation-free.
+//!   Over κ we run greedy insertion + steepest-descent local search on an
+//!   **incrementally maintained per-helper membership structure**
+//!   ([`Members`]): a candidate move rebuilds only the two touched
+//!   helpers' job lists in a reusable scratch buffer, O(move) instead of
+//!   the former O(J) full-fleet scans per candidate.
 //! * **y-subproblem.** Separable per client given the schedule volumes
 //!   n_ij = Σ_t x_ijt, under the knapsack-style memory constraint (5):
 //!   a generalized assignment problem, solved by depth-first
 //!   branch-and-bound with a min-cost completion bound (exact for the
 //!   paper's sizes; falls back to its own greedy incumbent on node-cap).
 
-use super::bwd;
-use super::schedule::{Assignment, Schedule};
+use super::bwd::{self, CostScratch};
+use super::schedule::{Assignment, Schedule, SlotRuns};
 use crate::instance::Instance;
 
 /// Algorithm 1 inputs (paper notation in comments).
@@ -73,14 +77,14 @@ pub struct AdmmResult {
 
 /// Entry point: Algorithm 1 then Algorithm 2 (ℙ_b) for the bwd direction.
 pub fn solve(inst: &Instance, cfg: &AdmmCfg) -> Option<AdmmResult> {
-    let (assignment, fwd_slots, iters, converged, fwd_history) = solve_fwd(inst, cfg)?;
-    let schedule = bwd::complete_with_optimal_bwd(inst, assignment, fwd_slots);
+    let (assignment, fwd, iters, converged, fwd_history) = solve_fwd(inst, cfg)?;
+    let schedule = bwd::complete_with_optimal_bwd(inst, assignment, fwd);
     Some(AdmmResult { schedule, iters, converged, fwd_history })
 }
 
 /// Algorithm 1 proper: returns (y*, x*) plus diagnostics.
 #[allow(clippy::type_complexity)]
-pub fn solve_fwd(inst: &Instance, cfg: &AdmmCfg) -> Option<(Assignment, Vec<Vec<u32>>, usize, bool, Vec<u32>)> {
+pub fn solve_fwd(inst: &Instance, cfg: &AdmmCfg) -> Option<(Assignment, Vec<SlotRuns>, usize, bool, Vec<u32>)> {
     let jn = inst.n_clients;
     let in_ = inst.n_helpers;
     let ne = jn * in_;
@@ -92,12 +96,13 @@ pub fn solve_fwd(inst: &Instance, cfg: &AdmmCfg) -> Option<(Assignment, Vec<Vec<
     let mut iters = 0;
     let mut converged = false;
     let mut prev_obj: Option<u32> = None;
+    let mut scratch = WScratch::default();
 
     for _tau in 0..cfg.max_iters {
         iters += 1;
         // --- line 2: w-subproblem --------------------------------------
-        kappa = solve_w(inst, cfg, &lambda, &y);
-        let (fwd_obj, _) = eval_fwd(inst, &kappa);
+        kappa = solve_w(inst, cfg, &lambda, &y, &mut scratch);
+        let fwd_obj = eval_fwd(inst, &kappa, &mut scratch);
         fwd_history.push(fwd_obj);
 
         // --- line 3: y-subproblem ----------------------------------------
@@ -133,8 +138,8 @@ pub fn solve_fwd(inst: &Instance, cfg: &AdmmCfg) -> Option<(Assignment, Vec<Vec<
     // happen: solve_y enforces (5)); assert in debug builds.
     let assignment = Assignment::new(final_assignment);
     debug_assert!(assignment.memory_ok(inst), "y-subproblem must enforce memory");
-    let fwd_slots = schedule_fwd_given_assignment(inst, &assignment.helper_of);
-    Some((assignment, fwd_slots, iters, converged, fwd_history))
+    let fwd = schedule_fwd_given_assignment(inst, &assignment.helper_of);
+    Some((assignment, fwd, iters, converged, fwd_history))
 }
 
 // ---------------------------------------------------------------------------
@@ -158,27 +163,104 @@ fn w_edge_cost(inst: &Instance, lambda: &[f64], y: &[Option<usize>], i: usize, j
     }
 }
 
-/// Evaluate a helper-choice vector κ: optimal per-helper preemptive fwd
-/// schedules (Baker, tails = l_ij) → (max_j c^f_j, per-client c^f).
-fn eval_fwd(inst: &Instance, kappa: &[usize]) -> (u32, Vec<u32>) {
-    let slots = schedule_fwd_given_assignment(inst, kappa);
-    let mut cf = vec![0u32; inst.n_clients];
-    let mut obj = 0;
-    for j in 0..inst.n_clients {
-        let e = inst.edge(kappa[j], j);
-        cf[j] = slots[j].last().map(|&t| t + 1).unwrap_or(0) + inst.l[e];
-        obj = obj.max(cf[j]);
+/// Incrementally maintained per-helper membership: O(1) insert/remove
+/// (swap-remove via a per-client position index), so a local-search move
+/// touches only the two helpers involved — never the whole fleet. Member
+/// order within a helper is irrelevant: every evaluator re-sorts jobs by
+/// (release, id) internally.
+struct Members {
+    lists: Vec<Vec<usize>>,
+    pos: Vec<usize>,
+}
+
+impl Members {
+    fn new(n_helpers: usize, n_clients: usize) -> Members {
+        Members { lists: vec![Vec::new(); n_helpers], pos: vec![usize::MAX; n_clients] }
     }
-    (obj, cf)
+
+    fn insert(&mut self, i: usize, j: usize) {
+        self.pos[j] = self.lists[i].len();
+        self.lists[i].push(j);
+    }
+
+    fn remove(&mut self, i: usize, j: usize) {
+        let k = self.pos[j];
+        debug_assert_eq!(self.lists[i][k], j);
+        self.lists[i].swap_remove(k);
+        if let Some(&moved) = self.lists[i].get(k) {
+            self.pos[moved] = k;
+        }
+        self.pos[j] = usize::MAX;
+    }
+
+    fn move_client(&mut self, j: usize, from: usize, to: usize) {
+        self.remove(from, j);
+        self.insert(to, j);
+    }
+}
+
+/// Reusable buffers for the w-subproblem's candidate evaluations.
+#[derive(Default)]
+struct WScratch {
+    jobs: Vec<bwd::Job>,
+    cost: CostScratch,
+}
+
+impl WScratch {
+    /// Fill the job buffer from `clients` on helper `i`, optionally
+    /// skipping one client and/or appending an extra one.
+    fn fill_jobs(&mut self, inst: &Instance, i: usize, clients: &[usize], skip: Option<usize>, extra: Option<usize>) {
+        self.jobs.clear();
+        for &j in clients {
+            if Some(j) == skip {
+                continue;
+            }
+            let e = inst.edge(i, j);
+            self.jobs.push(bwd::Job { id: j, release: inst.r[e], proc: inst.p[e], tail: inst.l[e] });
+        }
+        if let Some(j) = extra {
+            let e = inst.edge(i, j);
+            self.jobs.push(bwd::Job { id: j, release: inst.r[e], proc: inst.p[e], tail: inst.l[e] });
+        }
+    }
+}
+
+/// max c^f over one helper's client set (exact optimal value via the
+/// preemptive LDT rule — allocation-free).
+fn helper_fwd_obj(
+    inst: &Instance,
+    i: usize,
+    clients: &[usize],
+    skip: Option<usize>,
+    extra: Option<usize>,
+    scratch: &mut WScratch,
+) -> u32 {
+    scratch.fill_jobs(inst, i, clients, skip, extra);
+    if scratch.jobs.is_empty() {
+        return 0;
+    }
+    let (jobs, cost) = (&scratch.jobs, &mut scratch.cost);
+    bwd::preemptive_cost_contiguous(jobs, cost)
+}
+
+/// Evaluate a helper-choice vector κ: optimal per-helper preemptive fwd
+/// objective (max_j c^f_j).
+fn eval_fwd(inst: &Instance, kappa: &[usize], scratch: &mut WScratch) -> u32 {
+    let members = Assignment::new(kappa.to_vec()).members_by_helper(inst.n_helpers);
+    let mut obj = 0;
+    for (i, clients) in members.iter().enumerate() {
+        obj = obj.max(helper_fwd_obj(inst, i, clients, None, None, scratch));
+    }
+    obj
 }
 
 /// Optimal preemptive fwd schedule for a fixed assignment: per helper,
 /// Baker's block algorithm with release r_ij, proc p_ij, tail l_ij
 /// (minimizes max c^f on that helper — optimal for ℙ_f given y).
-pub fn schedule_fwd_given_assignment(inst: &Instance, helper_of: &[usize]) -> Vec<Vec<u32>> {
-    let mut out = vec![Vec::new(); inst.n_clients];
-    for i in 0..inst.n_helpers {
-        let clients: Vec<usize> = (0..inst.n_clients).filter(|&j| helper_of[j] == i).collect();
+pub fn schedule_fwd_given_assignment(inst: &Instance, helper_of: &[usize]) -> Vec<SlotRuns> {
+    let mut out = vec![SlotRuns::new(); inst.n_clients];
+    let members = Assignment::new(helper_of.to_vec()).members_by_helper(inst.n_helpers);
+    for (i, clients) in members.iter().enumerate() {
         if clients.is_empty() {
             continue;
         }
@@ -199,8 +281,9 @@ pub fn schedule_fwd_given_assignment(inst: &Instance, helper_of: &[usize]) -> Ve
 
 /// w-subproblem: choose κ minimizing max_j c^f + Σ_j w_edge_cost(κ_j, j).
 /// Greedy insertion (clients by descending p on their fastest helper) then
-/// steepest-descent relocation sweeps with exact incremental evaluation.
-fn solve_w(inst: &Instance, cfg: &AdmmCfg, lambda: &[f64], y: &[Option<usize>]) -> Vec<usize> {
+/// steepest-descent relocation sweeps with exact incremental evaluation
+/// over the [`Members`] structure.
+fn solve_w(inst: &Instance, cfg: &AdmmCfg, lambda: &[f64], y: &[Option<usize>], scratch: &mut WScratch) -> Vec<usize> {
     let jn = inst.n_clients;
     let in_ = inst.n_helpers;
 
@@ -210,29 +293,27 @@ fn solve_w(inst: &Instance, cfg: &AdmmCfg, lambda: &[f64], y: &[Option<usize>]) 
         let w: u32 = (0..in_).map(|i| inst.p[inst.edge(i, j)]).min().unwrap_or(0);
         std::cmp::Reverse(w)
     });
-    // Per-helper running job lists; evaluate insertion exactly per helper.
-    let mut per_helper: Vec<Vec<usize>> = vec![Vec::new(); in_];
+    // Per-helper running membership; evaluate insertion exactly per helper.
+    let mut members = Members::new(in_, jn);
     let mut helper_cf: Vec<u32> = vec![0; in_]; // max c^f on that helper
     let mut kappa = vec![0usize; jn];
     for &j in &order {
         let mut best: Option<(f64, usize, u32)> = None;
         for i in 0..in_ {
-            per_helper[i].push(j);
-            let cf_i = helper_fwd_obj(inst, i, &per_helper[i]);
-            per_helper[i].pop();
+            let cf_i = helper_fwd_obj(inst, i, &members.lists[i], None, Some(j), scratch);
             let global = helper_cf
                 .iter()
                 .enumerate()
                 .map(|(k, &v)| if k == i { cf_i } else { v })
                 .max()
                 .unwrap_or(0);
-            let cost = global as f64 + penalty_total_delta(inst, lambda, y, cfg.rho, &kappa, &per_helper, j, i);
+            let cost = global as f64 + w_edge_cost(inst, lambda, y, i, j, cfg.rho);
             if best.map(|(b, _, _)| cost < b).unwrap_or(true) {
                 best = Some((cost, i, cf_i));
             }
         }
         let (_, i, cf_i) = best.unwrap();
-        per_helper[i].push(j);
+        members.insert(i, j);
         helper_cf[i] = cf_i;
         kappa[j] = i;
     }
@@ -242,10 +323,7 @@ fn solve_w(inst: &Instance, cfg: &AdmmCfg, lambda: &[f64], y: &[Option<usize>]) 
     // helpers, so we keep per-helper max-c^f values and per-client
     // penalties and recompute exactly two helpers per candidate.
     let mut helper_cf: Vec<u32> = (0..in_)
-        .map(|i| {
-            let members: Vec<usize> = (0..jn).filter(|&j| kappa[j] == i).collect();
-            helper_fwd_obj(inst, i, &members)
-        })
+        .map(|i| helper_fwd_obj(inst, i, &members.lists[i], None, None, scratch))
         .collect();
     let mut penalty: Vec<f64> = (0..jn).map(|j| w_edge_cost(inst, lambda, y, kappa[j], j, cfg.rho)).collect();
     let total = |helper_cf: &[u32], penalty: &[f64]| -> f64 {
@@ -257,15 +335,15 @@ fn solve_w(inst: &Instance, cfg: &AdmmCfg, lambda: &[f64], y: &[Option<usize>]) 
         for j in 0..jn {
             let orig = kappa[j];
             let mut best: (f64, usize, u32, u32) = (cur, orig, helper_cf[orig], 0);
-            let src_members: Vec<usize> = (0..jn).filter(|&q| kappa[q] == orig && q != j).collect();
-            let src_cf = helper_fwd_obj(inst, orig, &src_members);
+            let src_cf = helper_fwd_obj(inst, orig, &members.lists[orig], Some(j), None, scratch);
+            // Σ penalties in client-index order (kept as one pass per j so
+            // float rounding matches the pre-refactor evaluation exactly).
+            let psum: f64 = penalty.iter().sum();
             for i in 0..in_ {
                 if i == orig {
                     continue;
                 }
-                let mut dst_members: Vec<usize> = (0..jn).filter(|&q| kappa[q] == i).collect();
-                dst_members.push(j);
-                let dst_cf = helper_fwd_obj(inst, i, &dst_members);
+                let dst_cf = helper_fwd_obj(inst, i, &members.lists[i], None, Some(j), scratch);
                 let max_cf = (0..in_)
                     .map(|h| {
                         if h == orig {
@@ -278,7 +356,7 @@ fn solve_w(inst: &Instance, cfg: &AdmmCfg, lambda: &[f64], y: &[Option<usize>]) 
                     })
                     .max()
                     .unwrap_or(0);
-                let v = max_cf as f64 + penalty.iter().sum::<f64>() - penalty[j]
+                let v = max_cf as f64 + psum - penalty[j]
                     + w_edge_cost(inst, lambda, y, i, j, cfg.rho);
                 if v + 1e-9 < best.0 {
                     best = (v, i, src_cf, dst_cf);
@@ -289,6 +367,7 @@ fn solve_w(inst: &Instance, cfg: &AdmmCfg, lambda: &[f64], y: &[Option<usize>]) 
                 helper_cf[orig] = src_cf;
                 helper_cf[i] = dst_cf;
                 penalty[j] = w_edge_cost(inst, lambda, y, i, j, cfg.rho);
+                members.move_client(j, orig, i);
                 kappa[j] = i;
                 cur = v;
                 improved = true;
@@ -299,37 +378,6 @@ fn solve_w(inst: &Instance, cfg: &AdmmCfg, lambda: &[f64], y: &[Option<usize>]) 
         }
     }
     kappa
-}
-
-/// max c^f over one helper's client set (exact, via Baker).
-fn helper_fwd_obj(inst: &Instance, i: usize, clients: &[usize]) -> u32 {
-    if clients.is_empty() {
-        return 0;
-    }
-    let jobs: Vec<bwd::Job> = clients
-        .iter()
-        .map(|&j| {
-            let e = inst.edge(i, j);
-            bwd::Job { id: j, release: inst.r[e], proc: inst.p[e], tail: inst.l[e] }
-        })
-        .collect();
-    let slots = bwd::preemptive_min_max_tail_contiguous(&jobs);
-    bwd::max_tail_cost(&jobs, &slots)
-}
-
-/// Penalty part of inserting client j on helper i (the other clients'
-/// penalties are unaffected by this insertion).
-fn penalty_total_delta(
-    inst: &Instance,
-    lambda: &[f64],
-    y: &[Option<usize>],
-    rho: f64,
-    _kappa: &[usize],
-    _per_helper: &[Vec<usize>],
-    j: usize,
-    i: usize,
-) -> f64 {
-    w_edge_cost(inst, lambda, y, i, j, rho)
 }
 
 // ---------------------------------------------------------------------------
@@ -544,10 +592,48 @@ mod tests {
         let assignment = Assignment::new(helper_of.clone());
         let fcfs = crate::solver::schedule::fcfs_schedule(&inst, assignment);
         let cf_opt = (0..6)
-            .map(|j| slots[j].last().unwrap() + 1 + inst.l[inst.edge(0, j)])
+            .map(|j| slots[j].finish() + inst.l[inst.edge(0, j)])
             .max()
             .unwrap();
         let cf_fcfs = fcfs.fwd_makespan(&inst);
         assert!(cf_opt <= cf_fcfs, "opt fwd {cf_opt} > fcfs {cf_fcfs}");
+    }
+
+    #[test]
+    fn members_structure_tracks_moves() {
+        let mut m = Members::new(3, 5);
+        for j in 0..5 {
+            m.insert(j % 3, j);
+        }
+        assert_eq!(m.lists[0], vec![0, 3]);
+        m.move_client(0, 0, 2);
+        assert_eq!(m.lists[0], vec![3]);
+        assert!(m.lists[2].contains(&0) && m.lists[2].contains(&2));
+        m.move_client(3, 0, 1);
+        assert!(m.lists[0].is_empty());
+        assert_eq!(m.pos[3], m.lists[1].iter().position(|&x| x == 3).unwrap());
+    }
+
+    #[test]
+    fn cost_only_eval_matches_materialized_schedule() {
+        // helper_fwd_obj (LDT, cost-only) must equal the max c^f of the
+        // materialized Baker schedule for the same member set.
+        prop::check(40, |rng| {
+            let jn = rng.range_usize(1, 10);
+            let inst = crate::solver::schedule::tests::tiny_instance(rng, jn, 2);
+            let helper_of: Vec<usize> = (0..jn).map(|_| rng.below(2)).collect();
+            let slots = schedule_fwd_given_assignment(&inst, &helper_of);
+            let mut scratch = WScratch::default();
+            for i in 0..2 {
+                let clients: Vec<usize> = (0..jn).filter(|&j| helper_of[j] == i).collect();
+                let cost = helper_fwd_obj(&inst, i, &clients, None, None, &mut scratch);
+                let want = clients
+                    .iter()
+                    .map(|&j| slots[j].finish() + inst.l[inst.edge(i, j)])
+                    .max()
+                    .unwrap_or(0);
+                prop::assert_prop(cost == want, &format!("cost {cost} != materialized {want}"));
+            }
+        });
     }
 }

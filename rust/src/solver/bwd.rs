@@ -3,8 +3,8 @@
 //! polynomial-time solution of ℙ_b (Theorem 2), based on the block
 //! decomposition of Baker, Lawler, Lenstra & Rinnooy Kan (Oper. Res. '83).
 //!
-//! We implement it generically over a *free-slot list* (the machine may be
-//! pre-occupied by fwd-prop slots — constraint (3) couples the two
+//! We implement it generically over a *free-run list* (the machine may be
+//! pre-occupied by fwd-prop runs — constraint (3) couples the two
 //! directions), with cost functions of the form `finish + tail`:
 //!
 //! * **bwd-prop** (the paper's use): job j has release `φ^f_j + l + l'`
@@ -18,6 +18,24 @@
 //! *blocks*; within each block pick ℓ = argmin_{j∈β} (e(β) + tail_j),
 //! schedule the remaining jobs FCFS (forming sub-blocks, recursed on) and
 //! let ℓ soak up the leftover slots, finishing at e(β).
+//!
+//! Everything operates on run-length-encoded slot sets ([`SlotRuns`]):
+//! blocks, sub-blocks and job schedules are `(start, len)` interval lists,
+//! and the simulation advances in *chunks* (to the next release,
+//! completion, or free-run boundary) instead of slot by slot — O(jobs +
+//! runs) work per block rather than O(total processing slots).
+//!
+//! For hot loops that only need the optimal *objective value* (the ADMM
+//! w-subproblem evaluates thousands of candidate assignments per solve),
+//! [`preemptive_cost_contiguous`] computes it by the preemptive
+//! largest-delivery-time rule (Jackson/Schrage; optimal for
+//! 1|r_j, pmtn|max(C_j + q_j), the same optimum the block algorithm
+//! attains) without materializing any schedule — no allocations beyond a
+//! reusable [`CostScratch`].
+
+use super::schedule::SlotRuns;
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
 
 /// One schedulable task.
 #[derive(Clone, Copy, Debug)]
@@ -32,12 +50,11 @@ pub struct Job {
     pub tail: u32,
 }
 
-/// Schedule `jobs` preemptively over the sorted free-slot list `free`,
-/// minimizing `max_j (finish_j + tail_j)`. Returns the slot list per job
-/// (indexed like `jobs`). Panics if `free` has too few slots ≥ releases.
-pub fn preemptive_min_max_tail(jobs: &[Job], free: &[u32]) -> Vec<Vec<u32>> {
-    debug_assert!(free.windows(2).all(|w| w[1] > w[0]), "free slots must be sorted");
-    let mut out = vec![Vec::new(); jobs.len()];
+/// Schedule `jobs` preemptively over the free runs `free`, minimizing
+/// `max_j (finish_j + tail_j)`. Returns the run set per job (indexed like
+/// `jobs`). Panics if `free` has too few slots ≥ releases.
+pub fn preemptive_min_max_tail(jobs: &[Job], free: &SlotRuns) -> Vec<SlotRuns> {
+    let mut out = vec![SlotRuns::new(); jobs.len()];
     if jobs.is_empty() {
         return out;
     }
@@ -47,34 +64,56 @@ pub fn preemptive_min_max_tail(jobs: &[Job], free: &[u32]) -> Vec<Vec<u32>> {
 
     // --- Phase 1: FCFS simulation to find blocks --------------------------
     // A block is a maximal group of jobs processed with no (voluntary)
-    // idle slot in between; blocks are independent (Baker et al.).
-    let mut blocks: Vec<(Vec<usize>, Vec<u32>)> = Vec::new(); // (job idxs, slots used)
-    let mut cursor = 0usize; // index into `free`
+    // idle slot in between; blocks are independent (Baker et al.). The
+    // scan walks the free runs once, consuming chunks bounded by the next
+    // job release (absorption points) and run boundaries.
+    let runs = free.runs();
+    let mut blocks: Vec<(Vec<usize>, SlotRuns)> = Vec::new(); // (job idxs, runs used)
+    let mut ri = 0usize; // current free run index
+    let mut pos = 0u32; // next candidate slot within runs[ri]
     let mut k = 0usize;
     while k < order.len() {
         // Start a new block at the first free slot ≥ this job's release.
-        let mut members = Vec::new();
-        let mut slots = Vec::new();
-        let mut remaining: u32 = 0;
         let first_rel = jobs[order[k]].release;
-        while cursor < free.len() && free[cursor] < first_rel {
-            cursor += 1;
+        loop {
+            assert!(ri < runs.len(), "free-slot list exhausted (horizon too small)");
+            let (s, l) = runs[ri];
+            let lo = pos.max(s).max(first_rel);
+            if lo < s + l {
+                pos = lo;
+                break;
+            }
+            ri += 1;
+            pos = 0;
         }
-        members.push(order[k]);
-        remaining += jobs[order[k]].proc;
+        let mut members = vec![order[k]];
+        let mut remaining: u32 = jobs[order[k]].proc;
         k += 1;
+        let mut slots = SlotRuns::new();
         while remaining > 0 {
-            assert!(cursor < free.len(), "free-slot list exhausted (horizon too small)");
-            let t = free[cursor];
-            // Absorb any job released by slot t into the running block.
-            while k < order.len() && jobs[order[k]].release <= t {
+            assert!(ri < runs.len(), "free-slot list exhausted (horizon too small)");
+            let (s, l) = runs[ri];
+            if pos < s {
+                pos = s;
+            }
+            // Absorb any job released by the current slot into the block.
+            while k < order.len() && jobs[order[k]].release <= pos {
                 members.push(order[k]);
                 remaining += jobs[order[k]].proc;
                 k += 1;
             }
-            slots.push(t);
-            remaining -= 1;
-            cursor += 1;
+            let run_end = s + l;
+            // The chunk may not cross the next absorption point.
+            let next_rel = if k < order.len() { jobs[order[k]].release } else { u32::MAX };
+            let cap = run_end.min(next_rel);
+            let chunk = remaining.min(cap - pos);
+            slots.push_run(pos, chunk);
+            remaining -= chunk;
+            pos += chunk;
+            if pos == run_end {
+                ri += 1;
+                pos = 0;
+            }
         }
         blocks.push((members, slots));
     }
@@ -86,12 +125,15 @@ pub fn preemptive_min_max_tail(jobs: &[Job], free: &[u32]) -> Vec<Vec<u32>> {
     out
 }
 
-/// Recursively schedule `members` (indices into `jobs`) over exactly
-/// `slots` (|slots| = Σ proc), writing the per-job slot lists into `out`.
-fn schedule_block(jobs: &[Job], members: &[usize], slots: &[u32], out: &mut Vec<Vec<u32>>) {
-    debug_assert_eq!(slots.len() as u64, members.iter().map(|&k| jobs[k].proc as u64).sum::<u64>());
+/// Recursively schedule `members` (indices into `jobs`) over exactly the
+/// runs `block_runs` (Σ len = Σ proc), writing per-job run sets into `out`.
+fn schedule_block(jobs: &[Job], members: &[usize], block_runs: &SlotRuns, out: &mut Vec<SlotRuns>) {
+    debug_assert_eq!(
+        block_runs.len() as u64,
+        members.iter().map(|&k| jobs[k].proc as u64).sum::<u64>()
+    );
     if members.len() == 1 {
-        out[members[0]] = slots.to_vec();
+        out[members[0]] = block_runs.clone();
         return;
     }
     // ℓ = argmin_{j ∈ β} (e(β) + tail_j): since e(β) is common, the job
@@ -101,56 +143,67 @@ fn schedule_block(jobs: &[Job], members: &[usize], slots: &[u32], out: &mut Vec<
         .min_by_key(|&&k| (jobs[k].tail, jobs[k].id))
         .unwrap();
 
-    // FCFS the remaining jobs over the block's slots; untaken slots go to ℓ.
+    // FCFS the remaining jobs over the block's runs; untaken spans go to ℓ.
     let mut rest: Vec<usize> = members.iter().copied().filter(|&k| k != ell).collect();
     rest.sort_by_key(|&k| (jobs[k].release, jobs[k].id));
-    let mut ell_slots: Vec<u32> = Vec::new();
-    // Sub-blocks of `rest`: maximal runs of slots where some rest-job runs.
-    let mut sub: Vec<(Vec<usize>, Vec<u32>)> = Vec::new();
+    let mut ell_runs = SlotRuns::new();
+    // Sub-blocks of `rest`: maximal spans where some rest-job runs.
+    let mut sub: Vec<(Vec<usize>, SlotRuns)> = Vec::new();
     let mut cur_members: Vec<usize> = Vec::new();
-    let mut cur_slots: Vec<u32> = Vec::new();
+    let mut cur_runs = SlotRuns::new();
     let mut queue: std::collections::VecDeque<usize> = std::collections::VecDeque::new();
     let mut next = 0usize; // next rest job to arrive
     let mut rem: Vec<u32> = jobs.iter().map(|j| j.proc).collect();
-    for &t in slots {
-        while next < rest.len() && jobs[rest[next]].release <= t {
-            queue.push_back(rest[next]);
-            next += 1;
-        }
-        if let Some(&front) = queue.front() {
-            if !cur_members.contains(&front) {
-                cur_members.push(front);
+    for &(s, l) in block_runs.runs() {
+        let run_end = s + l;
+        let mut t = s;
+        while t < run_end {
+            while next < rest.len() && jobs[rest[next]].release <= t {
+                queue.push_back(rest[next]);
+                next += 1;
             }
-            cur_slots.push(t);
-            rem[front] -= 1;
-            if rem[front] == 0 {
-                queue.pop_front();
-            }
-        } else {
-            // ℓ runs here; any in-flight sub-block is closed.
-            ell_slots.push(t);
-            if !cur_members.is_empty() {
-                sub.push((std::mem::take(&mut cur_members), std::mem::take(&mut cur_slots)));
+            if let Some(&front) = queue.front() {
+                // The front job owns the machine until it completes or the
+                // free run ends; releases meanwhile only append behind it.
+                let chunk = rem[front].min(run_end - t);
+                if !cur_members.contains(&front) {
+                    cur_members.push(front);
+                }
+                cur_runs.push_run(t, chunk);
+                rem[front] -= chunk;
+                t += chunk;
+                if rem[front] == 0 {
+                    queue.pop_front();
+                }
+            } else {
+                // ℓ runs until the next rest release (or the run ends);
+                // any in-flight sub-block is closed.
+                let next_rel = if next < rest.len() { jobs[rest[next]].release } else { u32::MAX };
+                let span_end = run_end.min(next_rel);
+                ell_runs.push_run(t, span_end - t);
+                if !cur_members.is_empty() {
+                    sub.push((std::mem::take(&mut cur_members), std::mem::take(&mut cur_runs)));
+                }
+                t = span_end;
             }
         }
     }
     if !cur_members.is_empty() {
-        sub.push((cur_members, cur_slots));
+        sub.push((cur_members, cur_runs));
     }
-    debug_assert_eq!(ell_slots.len(), jobs[ell].proc as usize);
-    out[ell] = ell_slots;
+    debug_assert_eq!(ell_runs.len(), jobs[ell].proc);
+    out[ell] = ell_runs;
     for (m, s) in sub {
         schedule_block(jobs, &m, &s, out);
     }
 }
 
 /// Fast path for a fully-free machine (no busy mask): block boundaries
-/// are computed arithmetically instead of scanning a free-slot list, so
-/// the cost is O(n log n + Σ proc) independent of the horizon. This is
-/// the ADMM w-subproblem's hot loop (fwd scheduling is always on an
-/// empty machine).
-pub fn preemptive_min_max_tail_contiguous(jobs: &[Job]) -> Vec<Vec<u32>> {
-    let mut out = vec![Vec::new(); jobs.len()];
+/// are computed arithmetically, so the cost is O(n log n + #runs)
+/// independent of the horizon. Used wherever fwd scheduling happens on an
+/// empty machine (ADMM's final schedule, the exact solver's incumbent).
+pub fn preemptive_min_max_tail_contiguous(jobs: &[Job]) -> Vec<SlotRuns> {
+    let mut out = vec![SlotRuns::new(); jobs.len()];
     if jobs.is_empty() {
         return out;
     }
@@ -167,24 +220,73 @@ pub fn preemptive_min_max_tail_contiguous(jobs: &[Job]) -> Vec<Vec<u32>> {
             members.push(order[k]);
             k += 1;
         }
-        let slots: Vec<u32> = (s..e).collect();
-        schedule_block(jobs, &members, &slots, &mut out);
+        schedule_block(jobs, &members, &SlotRuns::one(s, e - s), &mut out);
     }
     out
 }
 
-/// Objective value of a per-job slot listing: max_j (finish + tail).
-pub fn max_tail_cost(jobs: &[Job], slots: &[Vec<u32>]) -> u32 {
-    jobs.iter()
-        .zip(slots)
-        .map(|(j, s)| s.last().map(|&t| t + 1).unwrap_or(j.release) + j.tail)
-        .max()
-        .unwrap_or(0)
+/// Reusable buffers for [`preemptive_cost_contiguous`] — keep one per
+/// worker and the hot loop allocates nothing.
+#[derive(Default)]
+pub struct CostScratch {
+    order: Vec<usize>,
+    rem: Vec<u32>,
+    heap: BinaryHeap<(u32, Reverse<usize>)>,
 }
 
-/// Build the sorted free-slot list `[0, horizon)` minus `busy`.
-pub fn free_slots(horizon: u32, busy: &std::collections::HashSet<u32>) -> Vec<u32> {
-    (0..horizon).filter(|t| !busy.contains(t)).collect()
+/// Optimal objective value `max_j (finish_j + tail_j)` of preemptively
+/// scheduling `jobs` on a fully-free machine — the preemptive
+/// largest-delivery-time (Jackson) rule: at every instant run the
+/// released job with the largest tail. Matches the block algorithm's
+/// optimum exactly (both are optimal for this problem) but computes it in
+/// O(n log n) with no schedule materialization and no allocation (beyond
+/// the scratch). This is the ADMM w-subproblem's per-candidate evaluator.
+pub fn preemptive_cost_contiguous(jobs: &[Job], scratch: &mut CostScratch) -> u32 {
+    let n = jobs.len();
+    if n == 0 {
+        return 0;
+    }
+    scratch.order.clear();
+    scratch.order.extend(0..n);
+    scratch.order.sort_by_key(|&k| (jobs[k].release, jobs[k].id));
+    scratch.rem.clear();
+    scratch.rem.extend(jobs.iter().map(|j| j.proc));
+    scratch.heap.clear();
+
+    let mut t = 0u32;
+    let mut next = 0usize;
+    let mut cost = 0u32;
+    while next < n || !scratch.heap.is_empty() {
+        if scratch.heap.is_empty() {
+            t = t.max(jobs[scratch.order[next]].release);
+        }
+        while next < n && jobs[scratch.order[next]].release <= t {
+            let k = scratch.order[next];
+            scratch.heap.push((jobs[k].tail, Reverse(k)));
+            next += 1;
+        }
+        let (tail, Reverse(k)) = scratch.heap.pop().unwrap();
+        let next_rel = if next < n { jobs[scratch.order[next]].release } else { u32::MAX };
+        // Run until completion or the next release (which may preempt).
+        let run = if next_rel == u32::MAX { scratch.rem[k] } else { scratch.rem[k].min(next_rel - t) };
+        t += run;
+        scratch.rem[k] -= run;
+        if scratch.rem[k] == 0 {
+            cost = cost.max(t + tail);
+        } else {
+            scratch.heap.push((tail, Reverse(k)));
+        }
+    }
+    cost
+}
+
+/// Objective value of a per-job run listing: max_j (finish + tail).
+pub fn max_tail_cost(jobs: &[Job], slots: &[SlotRuns]) -> u32 {
+    jobs.iter()
+        .zip(slots)
+        .map(|(j, s)| s.last_slot().map(|t| t + 1).unwrap_or(j.release) + j.tail)
+        .max()
+        .unwrap_or(0)
 }
 
 // ----------------------------------------------------------------------------
@@ -194,29 +296,24 @@ pub fn free_slots(horizon: u32, busy: &std::collections::HashSet<u32>) -> Vec<u3
 use super::schedule::{Assignment, Schedule};
 use crate::instance::Instance;
 
-/// Solve ℙ_b: given the assignment and the fwd slots, compute the optimal
+/// Solve ℙ_b: given the assignment and the fwd runs, compute the optimal
 /// preemptive bwd schedule per helper (in parallel across helpers in the
 /// paper; sequentially here — each helper is independent).
-pub fn optimal_bwd(inst: &Instance, assignment: &Assignment, fwd_slots: &[Vec<u32>]) -> Vec<Vec<u32>> {
-    let mut bwd = vec![Vec::new(); inst.n_clients];
-    for i in 0..inst.n_helpers {
-        let clients = assignment.clients_of(i);
+pub fn optimal_bwd(inst: &Instance, assignment: &Assignment, fwd: &[SlotRuns]) -> Vec<SlotRuns> {
+    let mut bwd = vec![SlotRuns::new(); inst.n_clients];
+    for (i, clients) in assignment.members_by_helper(inst.n_helpers).into_iter().enumerate() {
         if clients.is_empty() {
             continue;
         }
-        let mut busy: std::collections::HashSet<u32> = std::collections::HashSet::new();
-        for &j in &clients {
-            busy.extend(fwd_slots[j].iter().copied());
-        }
+        let busy = SlotRuns::union_of(clients.iter().map(|&j| &fwd[j]));
         let jobs: Vec<Job> = clients
             .iter()
             .map(|&j| {
                 let e = inst.edge(i, j);
-                let phi_f = fwd_slots[j].last().map(|&t| t + 1).unwrap_or(0);
                 Job {
                     id: j,
                     // gradients arrive l + l' after fwd finishes (constraint (2)).
-                    release: phi_f + inst.l[e] + inst.lp[e],
+                    release: fwd[j].finish() + inst.l[e] + inst.lp[e],
                     proc: inst.pp[e],
                     tail: inst.rp[e],
                 }
@@ -225,8 +322,8 @@ pub fn optimal_bwd(inst: &Instance, assignment: &Assignment, fwd_slots: &[Vec<u3
         // Horizon: everything fits within max release + total work + busy.
         let max_rel = jobs.iter().map(|j| j.release).max().unwrap_or(0);
         let total: u32 = jobs.iter().map(|j| j.proc).sum();
-        let horizon = max_rel + total + fwd_slots.iter().map(|s| s.len() as u32).sum::<u32>() + 1;
-        let free = free_slots(horizon, &busy);
+        let horizon = max_rel + total + busy.len() + 1;
+        let free = busy.complement(horizon);
         let solved = preemptive_min_max_tail(&jobs, &free);
         for (k, &j) in clients.iter().enumerate() {
             bwd[j] = solved[k].clone();
@@ -235,11 +332,11 @@ pub fn optimal_bwd(inst: &Instance, assignment: &Assignment, fwd_slots: &[Vec<u3
     bwd
 }
 
-/// Convenience: assemble a full [`Schedule`] from assignment + fwd slots by
+/// Convenience: assemble a full [`Schedule`] from assignment + fwd runs by
 /// optimally scheduling the bwd direction (the ℙ_f → ℙ_b pipeline).
-pub fn complete_with_optimal_bwd(inst: &Instance, assignment: Assignment, fwd_slots: Vec<Vec<u32>>) -> Schedule {
-    let bwd_slots = optimal_bwd(inst, &assignment, &fwd_slots);
-    Schedule { assignment, fwd_slots, bwd_slots }
+pub fn complete_with_optimal_bwd(inst: &Instance, assignment: Assignment, fwd: Vec<SlotRuns>) -> Schedule {
+    let bwd = optimal_bwd(inst, &assignment, &fwd);
+    Schedule { assignment, fwd, bwd }
 }
 
 #[cfg(test)]
@@ -308,10 +405,6 @@ mod tests {
         // 5 clients, 1 helper. Releases/procs/tails chosen to match Fig 4:
         // blocks β1 = {1,4,2,3} (s=0, e=8), β2 = {5} (s=9, e=10);
         // ℓ(β1) = client 4 (min tail: e+r' = 8+1 = 9), final makespan 14.
-        // Client ids 1..5 → indices 0..4; tails r' = {5, 3, 8, 1, 1}? —
-        // reconstruct from the example: min{8+5, 8+3, 8+8, 8+1} = 9 at
-        // client 4; within β12, ℓ' = 2 since min{7+3, 7+8} = 10; client 3
-        // finishes last: makespan 14 (= φ_3 + r'_3).
         let jobs = [
             Job { id: 1, release: 0, proc: 2, tail: 5 },
             Job { id: 2, release: 3, proc: 2, tail: 3 },
@@ -319,10 +412,11 @@ mod tests {
             Job { id: 4, release: 1, proc: 2, tail: 1 },
             Job { id: 5, release: 9, proc: 1, tail: 1 },
         ];
-        let free: Vec<u32> = (0..20).collect();
+        let free = SlotRuns::one(0, 20);
         let slots = preemptive_min_max_tail(&jobs, &free);
         let cost = max_tail_cost(&jobs, &slots);
-        assert_eq!(cost, brute_force(&jobs, &free), "block algorithm must be optimal");
+        let dense_free: Vec<u32> = (0..20).collect();
+        assert_eq!(cost, brute_force(&jobs, &dense_free), "block algorithm must be optimal");
         // Client 3 (index 2) drives the makespan: finish 6, cost 14.
         assert_eq!(cost, 14);
     }
@@ -339,10 +433,10 @@ mod tests {
                     tail: rng.below(6) as u32,
                 })
                 .collect();
-            let free: Vec<u32> = (0..24).collect();
-            let slots = preemptive_min_max_tail(&jobs, &free);
+            let slots = preemptive_min_max_tail(&jobs, &SlotRuns::one(0, 24));
             let got = max_tail_cost(&jobs, &slots);
-            let want = brute_force(&jobs, &free);
+            let dense_free: Vec<u32> = (0..24).collect();
+            let want = brute_force(&jobs, &dense_free);
             prop::assert_prop(got == want, &format!("block alg {got} != brute {want} for {jobs:?}"));
         });
     }
@@ -360,14 +454,15 @@ mod tests {
                 })
                 .collect();
             // Knock out ~1/3 of slots.
-            let free: Vec<u32> = (0..30).filter(|_| !rng.chance(0.33)).collect();
+            let dense_free: Vec<u32> = (0..30).filter(|_| !rng.chance(0.33)).collect();
             let total: u32 = jobs.iter().map(|j| j.proc).sum();
-            if (free.len() as u32) < total + 10 {
+            if (dense_free.len() as u32) < total + 10 {
                 return; // not enough room; skip case
             }
+            let free = SlotRuns::from_slots(&dense_free);
             let slots = preemptive_min_max_tail(&jobs, &free);
             let got = max_tail_cost(&jobs, &slots);
-            let want = brute_force(&jobs, &free);
+            let want = brute_force(&jobs, &dense_free);
             prop::assert_prop(got == want, &format!("masked {got} != brute {want}"));
         });
     }
@@ -384,13 +479,15 @@ mod tests {
                     tail: rng.below(8) as u32,
                 })
                 .collect();
-            let free: Vec<u32> = (0..60).filter(|_| !rng.chance(0.2)).collect();
+            let dense_free: Vec<u32> = (0..60).filter(|_| !rng.chance(0.2)).collect();
+            let free = SlotRuns::from_slots(&dense_free);
             let slots = preemptive_min_max_tail(&jobs, &free);
-            let free_set: std::collections::HashSet<u32> = free.iter().copied().collect();
+            let free_set: std::collections::HashSet<u32> = dense_free.iter().copied().collect();
             let mut used = std::collections::HashSet::new();
             for (k, s) in slots.iter().enumerate() {
-                prop::assert_prop(s.len() == jobs[k].proc as usize, "full processing");
-                for &t in s {
+                prop::assert_prop(s.is_normalized(), "output runs normalized");
+                prop::assert_prop(s.len() == jobs[k].proc, "full processing");
+                for t in s.iter_slots() {
                     prop::assert_prop(t >= jobs[k].release, "release respected");
                     prop::assert_prop(free_set.contains(&t), "only free slots used");
                     prop::assert_prop(used.insert(t), "no slot reused");
@@ -413,16 +510,47 @@ mod tests {
                 .collect();
             let total: u32 = jobs.iter().map(|j| j.proc).sum();
             let horizon = 20 + total + 1;
-            let free: Vec<u32> = (0..horizon).collect();
-            let a = preemptive_min_max_tail(&jobs, &free);
+            let a = preemptive_min_max_tail(&jobs, &SlotRuns::one(0, horizon));
             let b = preemptive_min_max_tail_contiguous(&jobs);
             prop::assert_prop(
                 max_tail_cost(&jobs, &a) == max_tail_cost(&jobs, &b),
                 &format!("fast path cost mismatch on {jobs:?}"),
             );
-            // Slot sets must be identical (same deterministic algorithm).
-            prop::assert_prop(a == b, "fast path slots differ");
+            // Run sets must be identical (same deterministic algorithm).
+            prop::assert_prop(a == b, "fast path runs differ");
         });
+    }
+
+    #[test]
+    fn ldt_cost_matches_block_algorithm() {
+        // The cost-only evaluator must agree with the materializing block
+        // algorithm on every input (both are optimal; the values coincide).
+        let mut scratch = CostScratch::default();
+        prop::check(200, |rng| {
+            let n = rng.range_usize(0, 9);
+            let jobs: Vec<Job> = (0..n)
+                .map(|id| Job {
+                    id,
+                    release: rng.below(25) as u32,
+                    proc: rng.range_usize(1, 6) as u32,
+                    tail: rng.below(12) as u32,
+                })
+                .collect();
+            let slots = preemptive_min_max_tail_contiguous(&jobs);
+            let want = max_tail_cost(&jobs, &slots);
+            let mut local = CostScratch::default();
+            let got = preemptive_cost_contiguous(&jobs, &mut local);
+            prop::assert_prop(got == want, &format!("LDT {got} != block {want} on {jobs:?}"));
+        });
+        // Scratch reuse across calls gives the same answers.
+        let jobs = [
+            Job { id: 0, release: 0, proc: 3, tail: 4 },
+            Job { id: 1, release: 1, proc: 2, tail: 9 },
+        ];
+        let a = preemptive_cost_contiguous(&jobs, &mut scratch);
+        let b = preemptive_cost_contiguous(&jobs, &mut scratch);
+        assert_eq!(a, b);
+        assert_eq!(a, max_tail_cost(&jobs, &preemptive_min_max_tail_contiguous(&jobs)));
     }
 
     #[test]
@@ -433,7 +561,7 @@ mod tests {
             let a = Assignment::new((0..8).map(|_| rng.below(2)).collect());
             // Take the FCFS fwd schedule, re-optimize bwd via Alg. 2.
             let fcfs = fcfs_schedule(&inst, a.clone());
-            let opt = complete_with_optimal_bwd(&inst, a, fcfs.fwd_slots.clone());
+            let opt = complete_with_optimal_bwd(&inst, a, fcfs.fwd.clone());
             let hard: Vec<_> = opt
                 .violations(&inst)
                 .into_iter()

@@ -13,18 +13,20 @@
 //! preservation keeps the compaction O(work) and never reorders
 //! priorities decided by the solver.
 
-use super::schedule::Schedule;
+use super::schedule::{Schedule, SlotRuns};
 use crate::instance::Instance;
 
 /// Compact `schedule` to the subset of clients with `active[j] == true`.
-/// Inactive clients end up with empty slot lists; assignments (and thus
-/// helper memory reservations) are preserved verbatim.
+/// Inactive clients end up with empty run sets; assignments (and thus
+/// helper memory reservations) are preserved verbatim. The segment stream
+/// is read straight off the run-length representation — no slot-by-slot
+/// re-derivation — so compaction is O(#runs log #runs) per helper.
 pub fn compact(inst: &Instance, schedule: &Schedule, active: &[bool]) -> Schedule {
     assert_eq!(active.len(), inst.n_clients);
-    let mut fwd = vec![Vec::new(); inst.n_clients];
-    let mut bwd = vec![Vec::new(); inst.n_clients];
+    let mut fwd = vec![SlotRuns::new(); inst.n_clients];
+    let mut bwd = vec![SlotRuns::new(); inst.n_clients];
 
-    for i in 0..inst.n_helpers {
+    for (i, clients) in schedule.assignment.members_by_helper(inst.n_helpers).into_iter().enumerate() {
         // Original segment stream of this helper, in slot order.
         #[derive(Clone, Copy)]
         struct Seg {
@@ -34,17 +36,13 @@ pub fn compact(inst: &Instance, schedule: &Schedule, active: &[bool]) -> Schedul
             len: u32,
         }
         let mut segs: Vec<Seg> = Vec::new();
-        for j in 0..inst.n_clients {
-            if schedule.assignment.helper_of[j] != i || !active[j] {
+        for &j in &clients {
+            if !active[j] {
                 continue;
             }
-            for (slots, is_bwd) in [(&schedule.fwd_slots[j], false), (&schedule.bwd_slots[j], true)] {
-                let mut run = 0usize;
-                for k in 1..=slots.len() {
-                    if k == slots.len() || slots[k] != slots[k - 1] + 1 {
-                        segs.push(Seg { client: j, is_bwd, start: slots[run], len: (k - run) as u32 });
-                        run = k;
-                    }
+            for (runs, is_bwd) in [(&schedule.fwd[j], false), (&schedule.bwd[j], true)] {
+                for &(start, len) in runs.runs() {
+                    segs.push(Seg { client: j, is_bwd, start, len });
                 }
             }
         }
@@ -59,18 +57,17 @@ pub fn compact(inst: &Instance, schedule: &Schedule, active: &[bool]) -> Schedul
         for seg in &segs {
             let e = inst.edge(i, seg.client);
             let ready = if seg.is_bwd {
-                let fwd_fin = fwd[seg.client].last().map(|&t| t + 1).unwrap_or(0);
-                fwd_fin + inst.l[e] + inst.lp[e]
+                fwd[seg.client].finish() + inst.l[e] + inst.lp[e]
             } else {
                 inst.r[e]
             };
             let start = clock.max(ready);
             let out = if seg.is_bwd { &mut bwd[seg.client] } else { &mut fwd[seg.client] };
-            out.extend(start..start + seg.len);
+            out.push_run(start, seg.len);
             clock = start + seg.len;
         }
     }
-    Schedule { assignment: schedule.assignment.clone(), fwd_slots: fwd, bwd_slots: bwd }
+    Schedule { assignment: schedule.assignment.clone(), fwd, bwd }
 }
 
 /// Simulate an uneven-dataset epoch: clients own `batches[j]` batches;
@@ -145,7 +142,7 @@ mod tests {
             // check manually: survivors only.
             for j in 0..inst.n_clients {
                 if !active[j] {
-                    prop::assert_prop(half.fwd_slots[j].is_empty() && half.bwd_slots[j].is_empty(), "inactive cleared");
+                    prop::assert_prop(half.fwd[j].is_empty() && half.bwd[j].is_empty(), "inactive cleared");
                 }
             }
             let surv_makespan = (0..inst.n_clients)
@@ -178,12 +175,12 @@ mod tests {
                 }
                 let i = c.assignment.helper_of[j];
                 let e = inst.edge(i, j);
-                prop::assert_prop(c.fwd_slots[j].len() == inst.p[e] as usize, "(6)");
-                prop::assert_prop(c.bwd_slots[j].len() == inst.pp[e] as usize, "(7)");
-                if let Some(&first) = c.fwd_slots[j].first() {
+                prop::assert_prop(c.fwd[j].len() == inst.p[e], "(6)");
+                prop::assert_prop(c.bwd[j].len() == inst.pp[e], "(7)");
+                if let Some(first) = c.fwd[j].first_slot() {
                     prop::assert_prop(first >= inst.r[e], "(1)");
                 }
-                if let Some(&bfirst) = c.bwd_slots[j].first() {
+                if let Some(bfirst) = c.bwd[j].first_slot() {
                     let ready = c.fwd_finish(j) + inst.l[e] + inst.lp[e];
                     prop::assert_prop(bfirst >= ready, "(2)");
                 }
@@ -192,7 +189,7 @@ mod tests {
             let mut busy = std::collections::HashSet::new();
             for j in 0..inst.n_clients {
                 let i = c.assignment.helper_of[j];
-                for &t in c.fwd_slots[j].iter().chain(c.bwd_slots[j].iter()) {
+                for t in c.fwd[j].iter_slots().chain(c.bwd[j].iter_slots()) {
                     prop::assert_prop(busy.insert((i, t)), "(3) overlap");
                 }
             }

@@ -22,7 +22,7 @@
 use super::admm::{self, AdmmCfg};
 use super::bwd;
 use super::greedy;
-use super::schedule::{Assignment, Schedule};
+use super::schedule::{Assignment, Schedule, SlotRuns};
 use crate::instance::Instance;
 use std::time::{Duration, Instant};
 
@@ -55,14 +55,14 @@ pub struct ExactResult {
 
 /// Exact makespan of one helper processing `clients` (indices into the
 /// instance), with optimal preemptive two-phase scheduling. Returns
-/// (makespan contribution, fwd slots, bwd slots, proven) — slots indexed
+/// (makespan contribution, fwd runs, bwd runs, proven) — runs indexed
 /// like `clients`.
 pub fn helper_exact(
     inst: &Instance,
     i: usize,
     clients: &[usize],
     node_cap: usize,
-) -> (u32, Vec<Vec<u32>>, Vec<Vec<u32>>, bool) {
+) -> (u32, Vec<SlotRuns>, Vec<SlotRuns>, bool) {
     let n = clients.len();
     if n == 0 {
         return (0, vec![], vec![], true);
@@ -86,8 +86,8 @@ pub fn helper_exact(
         lag: &'a [u32],
         tail: &'a [u32],
         best: u32,
-        best_f: Vec<Vec<u32>>,
-        best_b: Vec<Vec<u32>>,
+        best_f: Vec<SlotRuns>,
+        best_b: Vec<SlotRuns>,
         nodes: usize,
         cap: usize,
         capped: bool,
@@ -102,8 +102,9 @@ pub fn helper_exact(
         fin_f: Vec<u32>,
         /// cost of completed jobs so far.
         done_max: u32,
-        /// (job, is_bwd, slot) log for schedule extraction.
-        log: Vec<(usize, bool, u32)>,
+        /// (job, is_bwd, start, len) chunk log for schedule extraction —
+        /// one entry per contiguous run, not per slot.
+        log: Vec<(usize, bool, u32, u32)>,
     }
 
     impl<'a> Search<'a> {
@@ -193,11 +194,9 @@ pub fn helper_exact(
                 // Run until completion or the next release event.
                 let run = if next_event == u32::MAX { rem } else { rem.min(next_event - s.t) };
                 debug_assert!(run > 0);
-                // Apply.
+                // Apply (one chunk entry, not one entry per slot).
                 let log_len = s.log.len();
-                for dt in 0..run {
-                    s.log.push((k, is_bwd, s.t + dt));
-                }
+                s.log.push((k, is_bwd, s.t, run));
                 let old_t = s.t;
                 let old_done = s.done_max;
                 s.t += run;
@@ -229,14 +228,16 @@ pub fn helper_exact(
         }
     }
 
-    fn extract(n: usize, log: &[(usize, bool, u32)]) -> (Vec<Vec<u32>>, Vec<Vec<u32>>) {
-        let mut f = vec![Vec::new(); n];
-        let mut b = vec![Vec::new(); n];
-        for &(k, is_bwd, t) in log {
+    // The log is in time order along the DFS path, so per-job chunks
+    // arrive start-sorted and push_run normalizes/merges them directly.
+    fn extract(n: usize, log: &[(usize, bool, u32, u32)]) -> (Vec<SlotRuns>, Vec<SlotRuns>) {
+        let mut f = vec![SlotRuns::new(); n];
+        let mut b = vec![SlotRuns::new(); n];
+        for &(k, is_bwd, start, len) in log {
             if is_bwd {
-                b[k].push(t);
+                b[k].push_run(start, len);
             } else {
-                f[k].push(t);
+                f[k].push_run(start, len);
             }
         }
         (f, b)
@@ -275,39 +276,32 @@ fn decomposed_schedule(
     lag: &[u32],
     pp: &[u32],
     tail: &[u32],
-) -> (u32, Vec<Vec<u32>>, Vec<Vec<u32>>) {
+) -> (u32, Vec<SlotRuns>, Vec<SlotRuns>) {
     let n = r.len();
     let fwd_jobs: Vec<bwd::Job> = (0..n)
         .map(|k| bwd::Job { id: k, release: r[k], proc: p[k], tail: lag[k] })
         .collect();
-    let fslots = bwd::preemptive_min_max_tail_contiguous(&fwd_jobs);
+    let fruns = bwd::preemptive_min_max_tail_contiguous(&fwd_jobs);
 
-    let mut busy: std::collections::HashSet<u32> = std::collections::HashSet::new();
-    for s in &fslots {
-        busy.extend(s.iter().copied());
-    }
+    let busy = SlotRuns::union_of(fruns.iter());
     let bwd_jobs: Vec<bwd::Job> = (0..n)
-        .map(|k| {
-            let fin = fslots[k].last().map(|&t| t + 1).unwrap_or(0);
-            bwd::Job { id: k, release: fin + lag[k], proc: pp[k], tail: tail[k] }
-        })
+        .map(|k| bwd::Job { id: k, release: fruns[k].finish() + lag[k], proc: pp[k], tail: tail[k] })
         .collect();
-    let horizon_b = bwd_jobs.iter().map(|j| j.release).max().unwrap() + pp.iter().sum::<u32>() + busy.len() as u32 + 1;
-    let free_b = bwd::free_slots(horizon_b, &busy);
-    let bslots = bwd::preemptive_min_max_tail(&bwd_jobs, &free_b);
-    let cost = bwd::max_tail_cost(&bwd_jobs, &bslots);
-    (cost, fslots, bslots)
+    let horizon_b = bwd_jobs.iter().map(|j| j.release).max().unwrap() + pp.iter().sum::<u32>() + busy.len() + 1;
+    let free_b = busy.complement(horizon_b);
+    let bruns = bwd::preemptive_min_max_tail(&bwd_jobs, &free_b);
+    let cost = bwd::max_tail_cost(&bwd_jobs, &bruns);
+    (cost, fruns, bruns)
 }
 
 /// Exact makespan for a *fixed* assignment (per-helper exact search).
 /// Returns (schedule, makespan, proven).
 pub fn schedule_given_assignment(inst: &Instance, assignment: &Assignment, helper_cap: usize) -> (Schedule, u32, bool) {
-    let mut fwd = vec![Vec::new(); inst.n_clients];
-    let mut bwdv = vec![Vec::new(); inst.n_clients];
+    let mut fwd = vec![SlotRuns::new(); inst.n_clients];
+    let mut bwdv = vec![SlotRuns::new(); inst.n_clients];
     let mut makespan = 0;
     let mut proven = true;
-    for i in 0..inst.n_helpers {
-        let clients = assignment.clients_of(i);
+    for (i, clients) in assignment.members_by_helper(inst.n_helpers).into_iter().enumerate() {
         let (m, f, b, ok) = helper_exact(inst, i, &clients, helper_cap);
         makespan = makespan.max(m);
         proven &= ok;
@@ -316,7 +310,7 @@ pub fn schedule_given_assignment(inst: &Instance, assignment: &Assignment, helpe
             bwdv[j] = b.get(k).cloned().unwrap_or_default();
         }
     }
-    (Schedule { assignment: assignment.clone(), fwd_slots: fwd, bwd_slots: bwdv }, makespan, proven)
+    (Schedule { assignment: assignment.clone(), fwd, bwd: bwdv }, makespan, proven)
 }
 
 /// Admissible per-client completion lower bound over a helper choice set.
@@ -516,8 +510,8 @@ mod tests {
             // Assemble and check.
             let sched = Schedule {
                 assignment: Assignment::new(vec![0; 4]),
-                fwd_slots: f,
-                bwd_slots: b,
+                fwd: f,
+                bwd: b,
             };
             let hard: Vec<_> = sched.violations(&inst).into_iter().filter(|v| !v.starts_with("(5)")).collect();
             prop::assert_prop(hard.is_empty(), &format!("{hard:?}"));

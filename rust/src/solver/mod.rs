@@ -4,15 +4,23 @@
 //!
 //! | Module | Paper artifact |
 //! |---|---|
-//! | [`schedule`] | decision variables x, z, y; constraints (1)–(9); FCFS |
-//! | [`admm`] | Algorithm 1 (ADMM-based ℙ_f) |
-//! | [`bwd`] | Algorithm 2 (optimal ℙ_b, Theorem 2) |
+//! | [`schedule`] | decision variables x, z, y as run-length [`schedule::SlotRuns`]; constraints (1)–(9) with an interval-sweep checker; FCFS |
+//! | [`admm`] | Algorithm 1 (ADMM-based ℙ_f); allocation-free w-subproblem over an incremental membership structure |
+//! | [`bwd`] | Algorithm 2 (optimal ℙ_b, Theorem 2) over free *runs*, plus the cost-only preemptive-LDT evaluator |
 //! | [`greedy`] | balanced-greedy heuristic (§VI) |
 //! | [`baseline`] | random + FCFS baseline (§VII) |
 //! | [`exact`] | the exact/anytime reference optimum (Gurobi's role) |
 //! | [`lp`], [`milp`], [`model`] | time-indexed ILP of §IV + own solver |
 //! | [`strategy`] | the signal-driven solution strategy (Obs. 3): picks a method from instance shape — size, heterogeneity, placement flexibility, straggler tail ([`strategy::Signals`]) — never from the scenario label |
 //! | [`preemption`] | §VI switching-cost extension |
+//!
+//! **Schedule representation.** Every schedule stores per-client sorted
+//! `(start, len)` intervals ([`schedule::SlotRuns`]; preemption = more
+//! than one run) instead of one entry per occupied slot, so checker,
+//! replay and fleet costs scale with the number of preemption runs, not
+//! with total processing slots. `psl perf` ([`crate::bench::perf`])
+//! times these hot paths against the dense baseline and records the
+//! repo's perf trajectory under `target/psl-bench/perf.json`.
 //!
 //! The scenario × solver evaluation grid behind `psl sweep` lives in
 //! [`crate::bench::sweep`]; its rows record each instance's
@@ -39,4 +47,4 @@ pub mod strategy;
 
 pub use admm::{AdmmCfg, AdmmResult};
 pub use exact::{ExactCfg, ExactResult};
-pub use schedule::{Assignment, Schedule};
+pub use schedule::{Assignment, Schedule, SlotRuns};

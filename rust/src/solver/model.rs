@@ -11,7 +11,7 @@
 
 use super::lp::{Lp, Sense};
 use super::milp::{Milp, MilpCfg, MilpOutcome};
-use super::schedule::{Assignment, Schedule};
+use super::schedule::{Assignment, Schedule, SlotRuns};
 use crate::instance::Instance;
 
 /// Variable layout for the time-indexed model.
@@ -170,21 +170,23 @@ impl TimeIndexedModel {
                 }
             }
         }
-        let mut fwd = vec![Vec::new(); self.n_clients];
-        let mut bwd = vec![Vec::new(); self.n_clients];
+        let mut fwd = vec![SlotRuns::new(); self.n_clients];
+        let mut bwd = vec![SlotRuns::new(); self.n_clients];
         for j in 0..self.n_clients {
             let i = helper_of[j];
             let e = inst.edge(i, j);
+            // Dense extraction is inherent to the time-indexed model; the
+            // slots arrive in time order so run-length encoding is free.
             for t in 0..t_n {
                 if x[self.x0 + e * t_n + t] > 0.5 {
-                    fwd[j].push(t as u32);
+                    fwd[j].push_slot(t as u32);
                 }
                 if x[self.z0 + e * t_n + t] > 0.5 {
-                    bwd[j].push(t as u32);
+                    bwd[j].push_slot(t as u32);
                 }
             }
         }
-        let s = Schedule { assignment: Assignment::new(helper_of), fwd_slots: fwd, bwd_slots: bwd };
+        let s = Schedule { assignment: Assignment::new(helper_of), fwd, bwd };
         let m = s.makespan(inst);
         let _ = (self.phi0, self.c0, self.xi, self.n_edges);
         Some((s, m, proven))

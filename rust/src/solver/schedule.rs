@@ -3,12 +3,172 @@
 //! the FCFS (non-preemptive) scheduler used by balanced-greedy and the
 //! baseline.
 //!
-//! Representation: instead of dense x_ijt / z_ijt tensors we store, per
-//! client, the sorted list of slots where its fwd (x) and bwd (z) task
-//! runs on its assigned helper. This is equivalent (y fixes the helper,
-//! (4)) and keeps memory O(work) instead of O(|E|·T).
+//! Representation: instead of dense x_ijt / z_ijt tensors — or even dense
+//! per-slot lists — we store, per client, the **run-length-encoded** slot
+//! set where its fwd (x) and bwd (z) task runs on its assigned helper
+//! ([`SlotRuns`]: sorted maximal `(start, len)` intervals; preemption =
+//! more than one run). This is equivalent (y fixes the helper, (4)) and
+//! keeps memory O(#preemption runs) instead of O(total processing slots):
+//! a non-preempted task is exactly one run no matter how many slots its
+//! processing time quantizes to, which is what makes the checker, the
+//! replay engines and the fleet loop scale to `s6-mega-homogeneous`-sized
+//! fleets.
 
 use crate::instance::Instance;
+
+/// Run-length-encoded slot set: sorted, disjoint, **maximal** `(start,
+/// len)` intervals with `len ≥ 1` (adjacent runs are always merged, so
+/// the number of runs equals the number of contiguous execution
+/// segments). The append API ([`push_run`](SlotRuns::push_run) /
+/// [`push_slot`](SlotRuns::push_slot)) requires nondecreasing-start
+/// appends and merges adjacency automatically — every producer in this
+/// crate emits runs in time order, so normalization is free.
+#[derive(Clone, Debug, PartialEq, Eq, Default)]
+pub struct SlotRuns {
+    runs: Vec<(u32, u32)>,
+}
+
+impl SlotRuns {
+    pub fn new() -> SlotRuns {
+        SlotRuns { runs: Vec::new() }
+    }
+
+    /// A single contiguous run `[start, start+len)`; empty when `len = 0`.
+    pub fn one(start: u32, len: u32) -> SlotRuns {
+        let mut s = SlotRuns::new();
+        s.push_run(start, len);
+        s
+    }
+
+    /// Wrap an already-normalized run list (debug-asserted).
+    pub fn from_runs(runs: Vec<(u32, u32)>) -> SlotRuns {
+        let s = SlotRuns { runs };
+        debug_assert!(s.is_normalized(), "runs not normalized: {:?}", s.runs);
+        s
+    }
+
+    /// Encode a strictly-sorted dense slot list (the pre-refactor
+    /// representation; kept for ILP extraction and tests).
+    pub fn from_slots(slots: &[u32]) -> SlotRuns {
+        let mut s = SlotRuns::new();
+        for &t in slots {
+            s.push_slot(t);
+        }
+        s
+    }
+
+    /// Append a run, merging with the last when exactly adjacent. Appends
+    /// must be in time order (`start` ≥ end of the last run).
+    pub fn push_run(&mut self, start: u32, len: u32) {
+        if len == 0 {
+            return;
+        }
+        if let Some(last) = self.runs.last_mut() {
+            debug_assert!(start >= last.0 + last.1, "out-of-order run append");
+            if last.0 + last.1 == start {
+                last.1 += len;
+                return;
+            }
+        }
+        self.runs.push((start, len));
+    }
+
+    /// Append a single slot (merging with the last run when adjacent).
+    pub fn push_slot(&mut self, t: u32) {
+        self.push_run(t, 1);
+    }
+
+    pub fn clear(&mut self) {
+        self.runs.clear();
+    }
+
+    /// The normalized `(start, len)` intervals, in time order.
+    pub fn runs(&self) -> &[(u32, u32)] {
+        &self.runs
+    }
+
+    /// Total number of occupied slots (Σ len).
+    pub fn len(&self) -> u32 {
+        self.runs.iter().map(|&(_, l)| l).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.runs.is_empty()
+    }
+
+    /// Number of maximal contiguous segments — 1 means non-preempted.
+    pub fn segments(&self) -> u32 {
+        self.runs.len() as u32
+    }
+
+    pub fn first_slot(&self) -> Option<u32> {
+        self.runs.first().map(|&(s, _)| s)
+    }
+
+    pub fn last_slot(&self) -> Option<u32> {
+        self.runs.last().map(|&(s, l)| s + l - 1)
+    }
+
+    /// Finish slot index: last occupied slot + 1, or 0 when empty.
+    pub fn finish(&self) -> u32 {
+        self.runs.last().map(|&(s, l)| s + l).unwrap_or(0)
+    }
+
+    /// Sorted, disjoint, maximal, and every run non-empty.
+    pub fn is_normalized(&self) -> bool {
+        self.runs.iter().all(|&(_, l)| l >= 1)
+            && self.runs.windows(2).all(|w| w[1].0 > w[0].0 + w[0].1)
+    }
+
+    /// Iterate the individual slots (dense decode; O(total slots) — for
+    /// tests and boundary conversions only, never hot paths).
+    pub fn iter_slots(&self) -> impl Iterator<Item = u32> + '_ {
+        self.runs.iter().flat_map(|&(s, l)| s..s + l)
+    }
+
+    /// Dense decode into the pre-refactor sorted slot list.
+    pub fn to_slots(&self) -> Vec<u32> {
+        self.iter_slots().collect()
+    }
+
+    /// Union of many disjoint-or-overlapping run sets (used to build a
+    /// helper's busy mask from its clients' fwd runs). O(R log R).
+    pub fn union_of<'a, I: IntoIterator<Item = &'a SlotRuns>>(sets: I) -> SlotRuns {
+        let mut all: Vec<(u32, u32)> = sets.into_iter().flat_map(|s| s.runs.iter().copied()).collect();
+        all.sort_unstable();
+        let mut out = SlotRuns::new();
+        for (s, l) in all {
+            match out.runs.last_mut() {
+                Some(last) if s <= last.0 + last.1 => {
+                    let end = (s + l).max(last.0 + last.1);
+                    last.1 = end - last.0;
+                }
+                _ => out.runs.push((s, l)),
+            }
+        }
+        out
+    }
+
+    /// Complement within `[0, horizon)`: the free-slot runs of a machine
+    /// whose busy set is `self`.
+    pub fn complement(&self, horizon: u32) -> SlotRuns {
+        let mut out = SlotRuns::new();
+        let mut cursor = 0u32;
+        for &(s, l) in &self.runs {
+            if s >= horizon {
+                break;
+            }
+            if s > cursor {
+                out.push_run(cursor, s - cursor);
+            }
+            cursor = cursor.max(s + l);
+        }
+        if cursor < horizon {
+            out.push_run(cursor, horizon - cursor);
+        }
+        out
+    }
+}
 
 /// Client→helper assignment (the y variables; (4) one helper per client).
 #[derive(Clone, Debug, PartialEq, Eq)]
@@ -21,9 +181,17 @@ impl Assignment {
         Assignment { helper_of }
     }
 
-    /// Clients assigned to helper i, in client order.
-    pub fn clients_of(&self, i: usize) -> Vec<usize> {
-        (0..self.helper_of.len()).filter(|&j| self.helper_of[j] == i).collect()
+    /// Per-helper membership lists (clients in index order), built in one
+    /// O(J + I) pass — replaces the old per-helper `clients_of` scan that
+    /// cost O(J) per call and allocated per helper.
+    pub fn members_by_helper(&self, n_helpers: usize) -> Vec<Vec<usize>> {
+        let mut out = vec![Vec::new(); n_helpers];
+        for (j, &i) in self.helper_of.iter().enumerate() {
+            if i < n_helpers {
+                out[i].push(j);
+            }
+        }
+        out
     }
 
     /// Memory feasibility (5): Σ_j y_ij d_j ≤ m_i.
@@ -45,20 +213,22 @@ impl Assignment {
     }
 }
 
-/// A complete solution of ℙ: assignment + per-client fwd/bwd slot lists.
+/// A complete solution of ℙ: assignment + per-client fwd/bwd run sets.
 #[derive(Clone, Debug)]
 pub struct Schedule {
     pub assignment: Assignment,
-    /// Sorted slots where client j's fwd-prop task runs (x_ijt = 1).
-    pub fwd_slots: Vec<Vec<u32>>,
-    /// Sorted slots where client j's bwd-prop task runs (z_ijt = 1).
-    pub bwd_slots: Vec<Vec<u32>>,
+    /// Run-length-encoded slots where client j's fwd-prop task runs
+    /// (x_ijt = 1).
+    pub fwd: Vec<SlotRuns>,
+    /// Run-length-encoded slots where client j's bwd-prop task runs
+    /// (z_ijt = 1).
+    pub bwd: Vec<SlotRuns>,
 }
 
 impl Schedule {
     /// φ^f_j: slot when fwd-prop finishes (last fwd slot + 1); (12).
     pub fn fwd_finish(&self, j: usize) -> u32 {
-        self.fwd_slots[j].last().map(|&t| t + 1).unwrap_or(0)
+        self.fwd[j].finish()
     }
 
     /// c^f_j = φ^f_j + l_ij (13).
@@ -69,7 +239,7 @@ impl Schedule {
 
     /// φ_j: slot when bwd-prop finishes (8).
     pub fn bwd_finish(&self, j: usize) -> u32 {
-        self.bwd_slots[j].last().map(|&t| t + 1).unwrap_or(0)
+        self.bwd[j].finish()
     }
 
     /// c_j = φ_j + r'_ij (9): overall batch completion of client j.
@@ -96,23 +266,23 @@ impl Schedule {
         self.bwd_finish(j) as i64 - ideal as i64
     }
 
-    /// Number of maximal contiguous segments in a slot list — 1 means
-    /// non-preempted.
-    pub fn segments(slots: &[u32]) -> u32 {
-        if slots.is_empty() {
-            return 0;
-        }
-        1 + slots.windows(2).filter(|w| w[1] != w[0] + 1).count() as u32
-    }
-
     /// Preemption count across all clients (segments beyond the first).
     pub fn preemptions(&self) -> u32 {
-        (0..self.fwd_slots.len())
+        (0..self.fwd.len())
             .map(|j| {
-                (Self::segments(&self.fwd_slots[j]).saturating_sub(1))
-                    + (Self::segments(&self.bwd_slots[j]).saturating_sub(1))
+                self.fwd[j].segments().saturating_sub(1) + self.bwd[j].segments().saturating_sub(1)
             })
             .sum()
+    }
+
+    /// Total number of runs stored (the schedule's O(memory) footprint).
+    pub fn total_runs(&self) -> usize {
+        self.fwd.iter().chain(self.bwd.iter()).map(|r| r.runs().len()).sum()
+    }
+
+    /// Total number of occupied slots (the pre-refactor O(memory)).
+    pub fn total_slots(&self) -> u64 {
+        self.fwd.iter().chain(self.bwd.iter()).map(|r| r.len() as u64).sum()
     }
 
     /// Makespan with the §VI switching-cost extension: each client's
@@ -124,7 +294,7 @@ impl Schedule {
         (0..inst.n_clients)
             .map(|j| {
                 let i = self.assignment.helper_of[j];
-                let switches = 2 * (Self::segments(&self.fwd_slots[j]) + Self::segments(&self.bwd_slots[j]));
+                let switches = 2 * (self.fwd[j].segments() + self.bwd[j].segments());
                 self.completion(inst, j) + inst.mu[i] * switches
             })
             .max()
@@ -133,10 +303,16 @@ impl Schedule {
 
     /// Full feasibility check of the paper's constraints. Returns the list
     /// of violated constraints (empty = feasible).
+    ///
+    /// Constraint (3) — one task per helper per slot — is verified by an
+    /// interval sweep over the run endpoints (sort all of a helper's runs
+    /// by start, adjacent pairs may not overlap): O(R log R) in the number
+    /// of runs, replacing the per-`(helper, slot)` hash map that cost
+    /// O(total slots).
     pub fn violations(&self, inst: &Instance) -> Vec<String> {
         let mut errs = Vec::new();
         let jn = inst.n_clients;
-        if self.assignment.helper_of.len() != jn || self.fwd_slots.len() != jn || self.bwd_slots.len() != jn {
+        if self.assignment.helper_of.len() != jn || self.fwd.len() != jn || self.bwd.len() != jn {
             errs.push("shape mismatch".into());
             return errs;
         }
@@ -151,50 +327,57 @@ impl Schedule {
                 continue;
             }
             let e = inst.edge(i, j);
-            // sortedness + uniqueness.
-            for w in self.fwd_slots[j].windows(2) {
-                if w[1] <= w[0] {
-                    errs.push(format!("client {j}: fwd slots not strictly sorted"));
-                    break;
-                }
+            // run-list well-formedness (the dense checker's sortedness).
+            if !self.fwd[j].is_normalized() {
+                errs.push(format!("client {j}: fwd slots not strictly sorted"));
             }
-            for w in self.bwd_slots[j].windows(2) {
-                if w[1] <= w[0] {
-                    errs.push(format!("client {j}: bwd slots not strictly sorted"));
-                    break;
-                }
+            if !self.bwd[j].is_normalized() {
+                errs.push(format!("client {j}: bwd slots not strictly sorted"));
             }
             // (6)/(7) exact processing amounts on the assigned helper.
-            if self.fwd_slots[j].len() != inst.p[e] as usize {
-                errs.push(format!("(6) client {j}: {} fwd slots != p {}", self.fwd_slots[j].len(), inst.p[e]));
+            if self.fwd[j].len() != inst.p[e] {
+                errs.push(format!("(6) client {j}: {} fwd slots != p {}", self.fwd[j].len(), inst.p[e]));
             }
-            if self.bwd_slots[j].len() != inst.pp[e] as usize {
-                errs.push(format!("(7) client {j}: {} bwd slots != p' {}", self.bwd_slots[j].len(), inst.pp[e]));
+            if self.bwd[j].len() != inst.pp[e] {
+                errs.push(format!("(7) client {j}: {} bwd slots != p' {}", self.bwd[j].len(), inst.pp[e]));
             }
             // (1) release times.
-            if let Some(&first) = self.fwd_slots[j].first() {
+            if let Some(first) = self.fwd[j].first_slot() {
                 if first < inst.r[e] {
                     errs.push(format!("(1) client {j}: fwd starts at {first} < release {}", inst.r[e]));
                 }
             }
             // (2) precedence: bwd may start only l+l' after fwd completed.
-            if let Some(&bfirst) = self.bwd_slots[j].first() {
+            if let Some(bfirst) = self.bwd[j].first_slot() {
                 let ready = self.fwd_finish(j) + inst.l[e] + inst.lp[e];
                 if bfirst < ready {
                     errs.push(format!("(2) client {j}: bwd starts at {bfirst} < ready {ready}"));
                 }
             }
         }
-        // (3) one task per helper per slot.
-        let mut busy: std::collections::HashMap<(usize, u32), usize> = std::collections::HashMap::new();
+        // (3) one task per helper per slot: interval sweep per helper.
+        let mut spans: Vec<(usize, u32, u32, usize)> = Vec::new(); // (helper, start, end, client)
         for j in 0..jn {
             let i = self.assignment.helper_of[j];
-            for &t in self.fwd_slots[j].iter().chain(self.bwd_slots[j].iter()) {
-                if let Some(other) = busy.insert((i, t), j) {
-                    if other != j || self.fwd_slots[j].contains(&t) && self.bwd_slots[j].contains(&t) {
-                        errs.push(format!("(3) helper {i} slot {t}: clients {other} and {j} overlap"));
+            for runs in [&self.fwd[j], &self.bwd[j]] {
+                for &(s, l) in runs.runs() {
+                    spans.push((i, s, s + l, j));
+                }
+            }
+        }
+        spans.sort_unstable();
+        let mut active: Option<(usize, u32, usize)> = None; // (helper, max end so far, its client)
+        for &(hi, s, e, j) in &spans {
+            match active {
+                Some((ha, end, ja)) if ha == hi => {
+                    if s < end {
+                        errs.push(format!("(3) helper {hi} slot {s}: clients {ja} and {j} overlap"));
+                    }
+                    if e > end {
+                        active = Some((hi, e, j));
                     }
                 }
+                _ => active = Some((hi, e, j)),
             }
         }
         errs
@@ -214,14 +397,14 @@ impl Schedule {
 /// The helper's timeline is a single FCFS queue over *task arrivals*
 /// (fwd arrival = r_ij, bwd arrival = c^f_j + l'_ij = φ^f_j + l + l'),
 /// which is exactly a "naive real-time implementation without proactive
-/// decisions" (§VII baseline description).
+/// decisions" (§VII baseline description). Each task produces exactly one
+/// run, so the schedule is O(J) memory regardless of task lengths.
 pub fn fcfs_schedule(inst: &Instance, assignment: Assignment) -> Schedule {
     let jn = inst.n_clients;
-    let mut fwd_slots = vec![Vec::new(); jn];
-    let mut bwd_slots = vec![Vec::new(); jn];
+    let mut fwd = vec![SlotRuns::new(); jn];
+    let mut bwd = vec![SlotRuns::new(); jn];
 
-    for i in 0..inst.n_helpers {
-        let clients = assignment.clients_of(i);
+    for (i, clients) in assignment.members_by_helper(inst.n_helpers).into_iter().enumerate() {
         // Event-driven FCFS: maintain helper clock; a queue of arrived
         // tasks (fwd first by r, bwd arrives after its client-side turn-
         // around). Non-preemptive: once started, a task runs p (or p')
@@ -252,20 +435,19 @@ pub fn fcfs_schedule(inst: &Instance, assignment: Assignment) -> Schedule {
                 .unwrap();
             let task = pending.swap_remove(idx);
             let start = clock.max(task.arrival);
-            let slots: Vec<u32> = (start..start + task.proc).collect();
             clock = start + task.proc;
             let e = inst.edge(i, task.j);
             if task.is_bwd {
-                bwd_slots[task.j] = slots;
+                bwd[task.j] = SlotRuns::one(start, task.proc);
             } else {
-                fwd_slots[task.j] = slots;
+                fwd[task.j] = SlotRuns::one(start, task.proc);
                 // bwd arrives after downlink + part-3 fwd/bwd + uplink.
                 let bwd_arrival = clock + inst.l[e] + inst.lp[e];
                 pending.push(Pending { j: task.j, arrival: bwd_arrival, proc: inst.pp[e], is_bwd: true });
             }
         }
     }
-    Schedule { assignment, fwd_slots, bwd_slots }
+    Schedule { assignment, fwd, bwd }
 }
 
 #[cfg(test)]
@@ -300,6 +482,51 @@ pub(crate) mod tests {
     }
 
     #[test]
+    fn slot_runs_roundtrip_and_merge() {
+        let dense = vec![1, 2, 5, 6, 9];
+        let r = SlotRuns::from_slots(&dense);
+        assert_eq!(r.runs(), &[(1, 2), (5, 2), (9, 1)]);
+        assert_eq!(r.to_slots(), dense);
+        assert_eq!(r.len(), 5);
+        assert_eq!(r.segments(), 3);
+        assert_eq!(r.first_slot(), Some(1));
+        assert_eq!(r.last_slot(), Some(9));
+        assert_eq!(r.finish(), 10);
+        assert!(r.is_normalized());
+
+        let mut m = SlotRuns::new();
+        m.push_run(0, 3);
+        m.push_run(3, 2); // adjacent → merged
+        m.push_run(7, 1);
+        assert_eq!(m.runs(), &[(0, 5), (7, 1)]);
+        assert_eq!(SlotRuns::new().finish(), 0);
+        assert!(SlotRuns::new().is_empty());
+        assert_eq!(SlotRuns::one(4, 0), SlotRuns::new());
+    }
+
+    #[test]
+    fn slot_runs_union_and_complement() {
+        let a = SlotRuns::from_runs(vec![(0, 2), (5, 2)]);
+        let b = SlotRuns::from_runs(vec![(2, 1), (6, 3)]);
+        let u = SlotRuns::union_of([&a, &b]);
+        assert_eq!(u.runs(), &[(0, 3), (5, 4)]);
+        let free = u.complement(12);
+        assert_eq!(free.runs(), &[(3, 2), (9, 3)]);
+        // Complement of empty is the full horizon; of full is empty.
+        assert_eq!(SlotRuns::new().complement(4).runs(), &[(0, 4)]);
+        assert_eq!(SlotRuns::one(0, 4).complement(4).runs(), &[] as &[(u32, u32)]);
+        // Dense cross-check on random masks.
+        prop::check(60, |rng| {
+            let slots: Vec<u32> = (0..30u32).filter(|_| rng.chance(0.4)).collect();
+            let runs = SlotRuns::from_slots(&slots);
+            prop::assert_prop(runs.to_slots() == slots, "roundtrip");
+            let free = runs.complement(30);
+            let dense_free: Vec<u32> = (0..30u32).filter(|t| !slots.contains(t)).collect();
+            prop::assert_prop(free.to_slots() == dense_free, "complement matches dense");
+        });
+    }
+
+    #[test]
     fn fcfs_is_feasible_on_random_instances() {
         prop::check(120, |rng| {
             let jn = rng.range_usize(1, 12);
@@ -321,8 +548,8 @@ pub(crate) mod tests {
             let assignment = Assignment::new((0..8).map(|j| j % 2).collect());
             let s = fcfs_schedule(&inst, assignment);
             for j in 0..8 {
-                prop::assert_prop(Schedule::segments(&s.fwd_slots[j]) == 1, "fwd contiguous");
-                prop::assert_prop(Schedule::segments(&s.bwd_slots[j]) == 1, "bwd contiguous");
+                prop::assert_prop(s.fwd[j].segments() == 1, "fwd contiguous");
+                prop::assert_prop(s.bwd[j].segments() == 1, "bwd contiguous");
             }
             prop::assert_prop(s.preemptions() == 0, "no preemptions in FCFS");
         });
@@ -342,10 +569,17 @@ pub(crate) mod tests {
 
     #[test]
     fn segments_counts() {
-        assert_eq!(Schedule::segments(&[]), 0);
-        assert_eq!(Schedule::segments(&[3]), 1);
-        assert_eq!(Schedule::segments(&[3, 4, 5]), 1);
-        assert_eq!(Schedule::segments(&[1, 2, 5, 6, 9]), 3);
+        assert_eq!(SlotRuns::from_slots(&[]).segments(), 0);
+        assert_eq!(SlotRuns::from_slots(&[3]).segments(), 1);
+        assert_eq!(SlotRuns::from_slots(&[3, 4, 5]).segments(), 1);
+        assert_eq!(SlotRuns::from_slots(&[1, 2, 5, 6, 9]).segments(), 3);
+    }
+
+    #[test]
+    fn members_by_helper_groups_in_client_order() {
+        let a = Assignment::new(vec![1, 0, 1, 1, 0]);
+        let m = a.members_by_helper(3);
+        assert_eq!(m, vec![vec![1, 4], vec![0, 2, 3], vec![]]);
     }
 
     #[test]
@@ -357,17 +591,20 @@ pub(crate) mod tests {
         // Break (1): start before release.
         let e = inst.edge(0, 0);
         if inst.r[e] > 0 {
-            s.fwd_slots[0] = (0..inst.p[e]).collect();
+            s.fwd[0] = SlotRuns::one(0, inst.p[e]);
             assert!(s.violations(&inst).iter().any(|v| v.starts_with("(1)")));
         }
         // Break (6): drop a slot.
         let mut s2 = fcfs_schedule(&inst, Assignment::new(vec![0, 0, 1]));
-        s2.fwd_slots[1].pop();
+        let mut short = s2.fwd[1].to_slots();
+        short.pop();
+        s2.fwd[1] = SlotRuns::from_slots(&short);
         assert!(s2.violations(&inst).iter().any(|v| v.starts_with("(6)")));
         // Break (3): force overlap.
         let mut s3 = fcfs_schedule(&inst, Assignment::new(vec![0, 0, 1]));
-        s3.fwd_slots[1] = s3.fwd_slots[0].clone();
+        s3.fwd[1] = s3.fwd[0].clone();
         assert!(!s3.violations(&inst).is_empty());
+        assert!(s3.violations(&inst).iter().any(|v| v.starts_with("(3)")));
     }
 
     #[test]

@@ -136,7 +136,11 @@ fn fleet_runs_and_is_byte_identical_across_runs() {
     assert!(stdout.contains("summary:"), "{stdout}");
     let (stdout2, stderr2, ok2) = psl(&args("cli-smoke-fleet-b"));
     assert!(ok2, "stdout={stdout2} stderr={stderr2}");
-    assert_eq!(stdout, stdout2, "fleet stdout must be deterministic (no wall-clock)");
+    // Output paths embed the --out name; everything else must match.
+    let strip = |s: &str| -> String {
+        s.lines().filter(|l| !l.contains("-> target/psl-bench/")).collect::<Vec<_>>().join("\n")
+    };
+    assert_eq!(strip(&stdout), strip(&stdout2), "fleet stdout must be deterministic (no wall-clock)");
     let a = std::fs::read_to_string("target/psl-bench/cli-smoke-fleet-a.json").unwrap();
     let b = std::fs::read_to_string("target/psl-bench/cli-smoke-fleet-b.json").unwrap();
     assert_eq!(a, b, "fleet JSON must be byte-identical across runs");
@@ -154,8 +158,47 @@ fn fleet_runs_and_is_byte_identical_across_runs() {
         .collect();
     assert!(decisions.iter().any(|d| d == "repair"), "no repaired round in {decisions:?}");
     assert!(decisions.iter().any(|d| d.starts_with("full")), "no full round in {decisions:?}");
+    // The JSONL stream sits next to the final JSON: one line per round,
+    // each line equal to the corresponding rounds_detail entry.
+    let jsonl = std::fs::read_to_string("target/psl-bench/cli-smoke-fleet-a.rounds.jsonl").unwrap();
+    let lines: Vec<&str> = jsonl.lines().collect();
+    assert_eq!(lines.len(), 6, "one JSONL line per round");
+    for (line, detail) in lines.iter().zip(doc.get("rounds_detail").as_arr().unwrap()) {
+        let parsed = psl::util::json::Json::parse(line).unwrap();
+        assert_eq!(parsed.pretty(), detail.pretty(), "JSONL line == rounds_detail entry");
+    }
     std::fs::remove_file("target/psl-bench/cli-smoke-fleet-a.json").ok();
     std::fs::remove_file("target/psl-bench/cli-smoke-fleet-b.json").ok();
+    std::fs::remove_file("target/psl-bench/cli-smoke-fleet-a.rounds.jsonl").ok();
+    std::fs::remove_file("target/psl-bench/cli-smoke-fleet-b.rounds.jsonl").ok();
+}
+
+#[test]
+fn perf_smoke_writes_artifact() {
+    let (stdout, stderr, ok) = psl(&["perf", "--smoke", "--out", "cli-smoke-perf"]);
+    assert!(ok, "stdout={stdout} stderr={stderr}");
+    assert!(stdout.contains("check-dense"), "dense baseline rows present: {stdout}");
+    assert!(stdout.contains("vs dense"), "speedup summary present: {stdout}");
+    let text = std::fs::read_to_string("target/psl-bench/cli-smoke-perf.json").unwrap();
+    let doc = psl::util::json::Json::parse(&text).unwrap();
+    assert_eq!(doc.get("kind").as_str(), Some("psl-perf"));
+    let rows = doc.get("rows").as_arr().unwrap();
+    assert_eq!(rows.len(), 15, "3 scenarios x 1 size x 5 phases");
+    for r in rows {
+        let mean = r.get("mean_s").as_f64().unwrap();
+        assert!(mean.is_finite() && mean >= 0.0, "finite timings in artifact");
+    }
+    std::fs::remove_file("target/psl-bench/cli-smoke-perf.json").ok();
+}
+
+#[test]
+fn perf_rejects_bad_flags() {
+    let (_, stderr, ok) = psl(&["perf", "--smoke", "--sizes", "0x2"]);
+    assert!(!ok);
+    assert!(stderr.contains("J >= 1"), "{stderr}");
+    let (_, stderr2, ok2) = psl(&["perf", "--smoke", "--scenarios", "nope"]);
+    assert!(!ok2);
+    assert!(stderr2.contains("bad scenario"), "{stderr2}");
 }
 
 #[test]

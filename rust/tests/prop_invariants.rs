@@ -66,7 +66,7 @@ fn makespan_dominance_chain() {
         prop::assert_prop(ex.lower_bound <= ex.makespan, "bound sanity");
 
         let g = greedy::solve(&inst).unwrap();
-        let improved = bwd::complete_with_optimal_bwd(&inst, g.assignment.clone(), g.fwd_slots.clone());
+        let improved = bwd::complete_with_optimal_bwd(&inst, g.assignment.clone(), g.fwd.clone());
         prop::assert_prop(improved.makespan(&inst) <= g.makespan(&inst), "Alg.2 never hurts");
     });
 }

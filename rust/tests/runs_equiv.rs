@@ -1,0 +1,426 @@
+//! Representation-equivalence property tests for the run-length schedule
+//! refactor: for random schedules across all six scenario families (and
+//! deliberately corrupted variants), the [`SlotRuns`] representation must
+//! reproduce the pre-refactor dense slot-list semantics exactly —
+//! checker verdicts, fwd/bwd finishes and completions, segment streams,
+//! and replay makespans. The dense reference implementations live only in
+//! this file (and, as timed baselines, in `bench::perf`).
+
+use psl::instance::profiles::Model;
+use psl::instance::scenario::{Scenario, ScenarioCfg};
+use psl::instance::{Instance, InstanceMs};
+use psl::sim;
+use psl::solver::schedule::{Schedule, SlotRuns};
+use psl::solver::{admm, baseline, greedy};
+use psl::util::prop;
+use psl::util::rng::Rng;
+
+// ---------------------------------------------------------------------------
+// Dense reference encoder + pre-refactor semantics
+// ---------------------------------------------------------------------------
+
+/// Dense decode of a schedule (the pre-refactor representation).
+fn to_dense(s: &Schedule) -> (Vec<Vec<u32>>, Vec<Vec<u32>>) {
+    (
+        s.fwd.iter().map(|r| r.to_slots()).collect(),
+        s.bwd.iter().map(|r| r.to_slots()).collect(),
+    )
+}
+
+/// Dense encode back into a schedule (exercises `from_slots`).
+fn from_dense(helper_of: Vec<usize>, fwd: &[Vec<u32>], bwd: &[Vec<u32>]) -> Schedule {
+    Schedule {
+        assignment: psl::solver::schedule::Assignment::new(helper_of),
+        fwd: fwd.iter().map(|s| SlotRuns::from_slots(s)).collect(),
+        bwd: bwd.iter().map(|s| SlotRuns::from_slots(s)).collect(),
+    }
+}
+
+/// The pre-refactor checker, verbatim semantics: per-slot loops plus the
+/// per-(helper, slot) hash map for (3). Returns the violated-constraint
+/// messages.
+fn violations_dense(inst: &Instance, helper_of: &[usize], fwd: &[Vec<u32>], bwd: &[Vec<u32>]) -> Vec<String> {
+    let mut errs = Vec::new();
+    let jn = inst.n_clients;
+    if helper_of.len() != jn || fwd.len() != jn || bwd.len() != jn {
+        errs.push("shape mismatch".into());
+        return errs;
+    }
+    {
+        let mut used = vec![0.0f64; inst.n_helpers];
+        for (j, &i) in helper_of.iter().enumerate() {
+            used[i] += inst.d[j];
+        }
+        if !used.iter().zip(&inst.mem).all(|(u, m)| *u <= *m + 1e-9) {
+            errs.push("(5) helper memory exceeded".into());
+        }
+    }
+    for j in 0..jn {
+        let i = helper_of[j];
+        if i >= inst.n_helpers {
+            errs.push(format!("client {j}: invalid helper {i}"));
+            continue;
+        }
+        let e = inst.edge(i, j);
+        for w in fwd[j].windows(2) {
+            if w[1] <= w[0] {
+                errs.push(format!("client {j}: fwd slots not strictly sorted"));
+                break;
+            }
+        }
+        for w in bwd[j].windows(2) {
+            if w[1] <= w[0] {
+                errs.push(format!("client {j}: bwd slots not strictly sorted"));
+                break;
+            }
+        }
+        if fwd[j].len() != inst.p[e] as usize {
+            errs.push(format!("(6) client {j}"));
+        }
+        if bwd[j].len() != inst.pp[e] as usize {
+            errs.push(format!("(7) client {j}"));
+        }
+        if let Some(&first) = fwd[j].first() {
+            if first < inst.r[e] {
+                errs.push(format!("(1) client {j}"));
+            }
+        }
+        if let Some(&bfirst) = bwd[j].first() {
+            let ready = fwd[j].last().map(|&t| t + 1).unwrap_or(0) + inst.l[e] + inst.lp[e];
+            if bfirst < ready {
+                errs.push(format!("(2) client {j}"));
+            }
+        }
+    }
+    let mut busy: std::collections::HashMap<(usize, u32), usize> = std::collections::HashMap::new();
+    for j in 0..jn {
+        let i = helper_of[j];
+        for &t in fwd[j].iter().chain(bwd[j].iter()) {
+            if let Some(other) = busy.insert((i, t), j) {
+                if other != j || fwd[j].contains(&t) && bwd[j].contains(&t) {
+                    errs.push(format!("(3) helper {i} slot {t}"));
+                }
+            }
+        }
+    }
+    errs
+}
+
+/// Constraint tag of a violation message: the "(N)" prefix, or the first
+/// word for untagged messages. Overlap *verdicts* must agree; the exact
+/// per-slot message multiplicity may legally differ between the sweep
+/// checker and the hash-map checker.
+fn tags(errs: &[String]) -> std::collections::BTreeSet<String> {
+    errs.iter()
+        .map(|m| {
+            if m.starts_with('(') {
+                m[..3].to_string()
+            } else if let Some(rest) = m.strip_prefix("client ") {
+                // "client j: ..." well-formedness messages: keep the kind.
+                let kind = if rest.contains("invalid helper") {
+                    "invalid-helper"
+                } else if rest.contains("fwd") {
+                    "fwd-sorted"
+                } else {
+                    "bwd-sorted"
+                };
+                kind.to_string()
+            } else {
+                m.clone()
+            }
+        })
+        .collect()
+}
+
+/// The pre-refactor segment derivation (slot-by-slot splitting), for
+/// stream equivalence.
+#[derive(Debug, PartialEq)]
+struct DenseSeg {
+    client: usize,
+    is_bwd: bool,
+    start: u32,
+    len: u32,
+    frac: f64,
+}
+
+fn dense_streams(n_helpers: usize, helper_of: &[usize], fwd: &[Vec<u32>], bwd: &[Vec<u32>]) -> Vec<Vec<DenseSeg>> {
+    let mut out: Vec<Vec<DenseSeg>> = vec![Vec::new(); n_helpers];
+    for j in 0..helper_of.len() {
+        let i = helper_of[j];
+        for (slots, is_bwd) in [(&fwd[j], false), (&bwd[j], true)] {
+            if slots.is_empty() {
+                continue;
+            }
+            let n = slots.len() as f64;
+            let mut run = 0usize;
+            for k in 1..=slots.len() {
+                if k == slots.len() || slots[k] != slots[k - 1] + 1 {
+                    out[i].push(DenseSeg {
+                        client: j,
+                        is_bwd,
+                        start: slots[run],
+                        len: (k - run) as u32,
+                        frac: (k - run) as f64 / n,
+                    });
+                    run = k;
+                }
+            }
+        }
+    }
+    for s in out.iter_mut() {
+        s.sort_by_key(|seg| (seg.start, seg.client, seg.is_bwd));
+    }
+    out
+}
+
+/// The pre-refactor continuous replay (dense lists, per-helper execution),
+/// returning the realized makespan.
+fn replay_dense_makespan(ms: &InstanceMs, helper_of: &[usize], fwd: &[Vec<u32>], bwd: &[Vec<u32>]) -> f64 {
+    let streams = dense_streams(ms.n_helpers, helper_of, fwd, bwd);
+    let jn = ms.n_clients;
+    let mut makespan = 0.0f64;
+    for i in 0..ms.n_helpers {
+        let clients: Vec<usize> = (0..jn).filter(|&j| helper_of[j] == i).collect();
+        if clients.is_empty() {
+            continue;
+        }
+        let idx_of = |j: usize| clients.iter().position(|&c| c == j).unwrap();
+        let mut clock = 0.0f64;
+        let mut fwd_done = vec![0.0f64; clients.len()];
+        let mut fwd_rem: Vec<f64> = clients.iter().map(|&j| ms.p_ms[ms.edge(i, j)]).collect();
+        let mut bwd_rem: Vec<f64> = clients.iter().map(|&j| ms.pp_ms[ms.edge(i, j)]).collect();
+        for seg in &streams[i] {
+            let k = idx_of(seg.client);
+            let e = ms.edge(i, seg.client);
+            let ready = if seg.is_bwd {
+                fwd_done[k] + ms.l_ms[e] + ms.lp_ms[e]
+            } else {
+                ms.r_ms[e]
+            };
+            let start = clock.max(ready);
+            let dur = if seg.is_bwd { ms.pp_ms[e] * seg.frac } else { ms.p_ms[e] * seg.frac };
+            clock = start + dur;
+            if seg.is_bwd {
+                bwd_rem[k] -= dur;
+                if bwd_rem[k] <= 1e-9 {
+                    makespan = makespan.max(clock + ms.rp_ms[e]);
+                }
+            } else {
+                fwd_rem[k] -= dur;
+                if fwd_rem[k] <= 1e-9 {
+                    fwd_done[k] = clock;
+                }
+            }
+        }
+    }
+    makespan
+}
+
+// ---------------------------------------------------------------------------
+// Schedule generators
+// ---------------------------------------------------------------------------
+
+fn any_scenario(rng: &mut Rng) -> Scenario {
+    Scenario::ALL[rng.below(Scenario::ALL.len())]
+}
+
+fn random_case(rng: &mut Rng) -> (InstanceMs, Instance, Schedule) {
+    let scen = any_scenario(rng);
+    let model = if rng.chance(0.5) { Model::ResNet101 } else { Model::Vgg19 };
+    let j = rng.range_usize(2, 14);
+    let i = rng.range_usize(1, 4);
+    let ms = ScenarioCfg::new(scen, model, j, i, rng.next_u64()).generate();
+    let inst = ms.quantize(model.profile().default_slot_ms);
+    let schedule = match rng.below(3) {
+        0 => greedy::solve(&inst).expect("greedy"),
+        1 => baseline::solve(&inst, rng).expect("baseline"),
+        _ => admm::solve(&inst, &admm::AdmmCfg::default()).expect("admm").schedule,
+    };
+    (ms, inst, schedule)
+}
+
+/// Corrupt the dense lists in one of several constraint-violating ways.
+fn corrupt(rng: &mut Rng, inst: &Instance, helper_of: &[usize], fwd: &mut [Vec<u32>], bwd: &mut [Vec<u32>]) {
+    let j = rng.below(inst.n_clients);
+    match rng.below(4) {
+        0 => {
+            // (1)/(3)-ish: shift the fwd task to start at slot 0.
+            let e = inst.edge(helper_of[j], j);
+            fwd[j] = (0..inst.p[e]).collect();
+        }
+        1 => {
+            // (6): drop a slot.
+            fwd[j].pop();
+        }
+        2 => {
+            // (3): copy another client's slots.
+            let other = rng.below(inst.n_clients);
+            if other != j && helper_of[other] == helper_of[j] && !fwd[other].is_empty() {
+                fwd[j] = fwd[other].clone();
+            } else {
+                bwd[j] = fwd[j].clone(); // same-client fwd/bwd collision
+            }
+        }
+        _ => {
+            // (2): pull the bwd task to right after the fwd finish.
+            let fin = fwd[j].last().map(|&t| t + 1).unwrap_or(0);
+            let n = bwd[j].len() as u32;
+            bwd[j] = (fin..fin + n).collect();
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Properties
+// ---------------------------------------------------------------------------
+
+#[test]
+fn dense_roundtrip_is_lossless() {
+    prop::check(30, |rng| {
+        let (_, _, s) = random_case(rng);
+        let (df, db) = to_dense(&s);
+        let back = from_dense(s.assignment.helper_of.clone(), &df, &db);
+        prop::assert_prop(back.fwd == s.fwd && back.bwd == s.bwd, "to_slots/from_slots roundtrip");
+    });
+}
+
+#[test]
+fn checker_verdicts_match_dense_reference_on_solver_output() {
+    prop::check(30, |rng| {
+        let (_, inst, s) = random_case(rng);
+        let (df, db) = to_dense(&s);
+        let dense = violations_dense(&inst, &s.assignment.helper_of, &df, &db);
+        let runs = s.violations(&inst);
+        prop::assert_prop(
+            dense.is_empty() == runs.is_empty(),
+            &format!("feasibility verdict diverged: dense {dense:?} vs runs {runs:?}"),
+        );
+        prop::assert_prop(
+            tags(&dense) == tags(&runs),
+            &format!("constraint tags diverged: dense {:?} vs runs {:?}", tags(&dense), tags(&runs)),
+        );
+    });
+}
+
+#[test]
+fn checker_verdicts_match_dense_reference_on_corrupted_schedules() {
+    prop::check(60, |rng| {
+        let (_, inst, s) = random_case(rng);
+        let (mut df, mut db) = to_dense(&s);
+        corrupt(rng, &inst, &s.assignment.helper_of, &mut df, &mut db);
+        let bad = from_dense(s.assignment.helper_of.clone(), &df, &db);
+        let dense = violations_dense(&inst, &s.assignment.helper_of, &df, &db);
+        let runs = bad.violations(&inst);
+        prop::assert_prop(
+            dense.is_empty() == runs.is_empty(),
+            &format!("feasibility verdict diverged after corruption: dense {dense:?} vs runs {runs:?}"),
+        );
+        prop::assert_prop(
+            tags(&dense) == tags(&runs),
+            &format!("tags diverged after corruption: dense {:?} vs runs {:?}", tags(&dense), tags(&runs)),
+        );
+    });
+}
+
+#[test]
+fn finishes_completions_and_makespan_match_dense() {
+    prop::check(40, |rng| {
+        let (_, inst, s) = random_case(rng);
+        let (df, db) = to_dense(&s);
+        for j in 0..inst.n_clients {
+            let fwd_fin = df[j].last().map(|&t| t + 1).unwrap_or(0);
+            let bwd_fin = db[j].last().map(|&t| t + 1).unwrap_or(0);
+            prop::assert_prop(s.fwd_finish(j) == fwd_fin, "fwd_finish");
+            prop::assert_prop(s.bwd_finish(j) == bwd_fin, "bwd_finish");
+            let e = inst.edge(s.assignment.helper_of[j], j);
+            prop::assert_prop(s.fwd_completion(&inst, j) == fwd_fin + inst.l[e], "fwd completion");
+            prop::assert_prop(s.completion(&inst, j) == bwd_fin + inst.rp[e], "completion");
+            // Segment counts: run count == dense maximal-run count.
+            let dense_segs = |slots: &[u32]| -> u32 {
+                if slots.is_empty() {
+                    0
+                } else {
+                    1 + slots.windows(2).filter(|w| w[1] != w[0] + 1).count() as u32
+                }
+            };
+            prop::assert_prop(s.fwd[j].segments() == dense_segs(&df[j]), "fwd segments");
+            prop::assert_prop(s.bwd[j].segments() == dense_segs(&db[j]), "bwd segments");
+        }
+        let dense_makespan = (0..inst.n_clients)
+            .map(|j| db[j].last().map(|&t| t + 1).unwrap_or(0) + inst.rp[inst.edge(s.assignment.helper_of[j], j)])
+            .max()
+            .unwrap_or(0);
+        prop::assert_prop(s.makespan(&inst) == dense_makespan, "makespan");
+    });
+}
+
+#[test]
+fn segment_streams_match_dense_derivation() {
+    prop::check(40, |rng| {
+        let (_, inst, s) = random_case(rng);
+        let (df, db) = to_dense(&s);
+        let dense = dense_streams(inst.n_helpers, &s.assignment.helper_of, &df, &db);
+        let runs = sim::streams(inst.n_helpers, &s);
+        prop::assert_prop(dense.len() == runs.len(), "stream count");
+        for (d, r) in dense.iter().zip(&runs) {
+            prop::assert_prop(d.len() == r.len(), "segments per helper");
+            for (ds, rs) in d.iter().zip(r) {
+                prop::assert_prop(
+                    ds.client == rs.client
+                        && ds.is_bwd == rs.is_bwd
+                        && ds.start == rs.start
+                        && ds.len == rs.len
+                        && ds.frac == rs.frac,
+                    &format!("segment diverged: dense {ds:?} vs runs {rs:?}"),
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn replay_makespan_matches_dense_replay() {
+    prop::check(40, |rng| {
+        let (ms, _, s) = random_case(rng);
+        let (df, db) = to_dense(&s);
+        let dense = replay_dense_makespan(&ms, &s.assignment.helper_of, &df, &db);
+        let runs = sim::replay(&ms, &s, None).makespan_ms;
+        // Same segment streams + same arithmetic order → bitwise equal.
+        prop::assert_prop(dense == runs, &format!("replay diverged: dense {dense} vs runs {runs}"));
+    });
+}
+
+#[test]
+fn epoch_replay_stays_consistent_with_single_batch() {
+    // The pipelined engine consumes the same shared streams; its 1-batch
+    // case must track the single-batch realized makespan.
+    prop::check(15, |rng| {
+        let (ms, _, s) = random_case(rng);
+        let single = sim::replay(&ms, &s, None).makespan_ms;
+        let epoch = psl::sim::epoch::replay_epoch(&ms, &s, 1);
+        prop::assert_prop(
+            (epoch.batch_ms - single).abs() <= 0.05 * single + 1e-9,
+            &format!("epoch[1] {} vs single {}", epoch.batch_ms, single),
+        );
+    });
+}
+
+#[test]
+fn schedule_memory_is_runs_not_slots() {
+    // The acceptance claim made testable: on the mega-homogeneous family
+    // (FCFS via strategy → zero preemptions) the stored representation is
+    // exactly 2 runs per client while the slot count is orders larger.
+    // Fine quantization: many slots per task, but still one run per task.
+    let inst = ScenarioCfg::new(Scenario::S6MegaHomogeneous, Model::ResNet101, 64, 8, 7)
+        .generate()
+        .quantize(50.0);
+    let s = greedy::solve(&inst).unwrap();
+    assert_eq!(s.preemptions(), 0);
+    assert_eq!(s.total_runs(), 2 * 64, "one run per task");
+    assert!(
+        s.total_slots() > 4 * s.total_runs() as u64,
+        "slots {} should dwarf runs {}",
+        s.total_slots(),
+        s.total_runs()
+    );
+}

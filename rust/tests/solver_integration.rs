@@ -79,7 +79,7 @@ fn optimal_bwd_improves_or_matches_fcfs_bwd() {
     for seed in 0..6 {
         let inst = inst(Scenario::S2, Model::Vgg19, 12, 3, 300 + seed);
         let fcfs = greedy::solve(&inst).unwrap();
-        let improved = bwd::complete_with_optimal_bwd(&inst, fcfs.assignment.clone(), fcfs.fwd_slots.clone());
+        let improved = bwd::complete_with_optimal_bwd(&inst, fcfs.assignment.clone(), fcfs.fwd.clone());
         assert!(improved.is_feasible(&inst));
         assert!(improved.makespan(&inst) <= fcfs.makespan(&inst));
     }
