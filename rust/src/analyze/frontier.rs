@@ -1,0 +1,193 @@
+//! The churn-rate **policy frontier**: where full re-solving overtakes
+//! incremental repair, per scenario family × fleet size.
+//!
+//! The paper's §VII strategy is built the same way — run the methods over
+//! measured scenarios, record where each wins, encode the boundary as a
+//! rule. Here the two "methods" are the fleet orchestrator's arms
+//! (`incremental` warm-started repair vs `full` re-solve every round),
+//! the axis is the grid's churn rate — with the crossover reported in
+//! the *observed* per-round churn-fraction unit the orchestrator
+//! compares against — and the win criterion is the
+//! **work-discounted makespan** ([`score`](super::grid::RegimeCell::score)): full wins a
+//! regime only when the makespan it recovers justifies the solve work it
+//! spends. The output is a [`PolicyTable`] the `auto` policy consults at
+//! run time — measured thresholds instead of the hard-coded 0.35.
+
+use super::grid::RegimeTable;
+use crate::fleet::policy::{PolicyEntry, PolicyTable};
+
+/// Outcome of the frontier scan for one regime table.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Frontier {
+    pub scenario: String,
+    pub n_clients: usize,
+    pub n_helpers: usize,
+    /// The *observed* per-round churn fraction at the lowest measured
+    /// rate where `full` beats `incremental` on score — the same unit
+    /// the orchestrator's per-round `churn_frac` signal uses, so the
+    /// `auto` policy compares like with like (the grid's stationary rate
+    /// axis is ≈ half this value: departures and arrivals both count
+    /// toward the membership delta). `None` = incremental won at every
+    /// rate that had both arms.
+    pub crossover: Option<f64>,
+    /// Churn rates where both arms were measured (the frontier's
+    /// resolution — a single-rate grid gives a very coarse frontier).
+    pub rates_compared: usize,
+}
+
+/// Scan one regime table for the crossover. Rates missing either arm are
+/// skipped (they carry no comparison); the crossover is taken at the
+/// *first* rate, ascending, where full's score is strictly lower — the
+/// conservative choice if the measured scores are non-monotone — and is
+/// reported as that rate's observed churn fraction (both arms replay the
+/// same policy-independent event stream, so their observed fractions
+/// agree; the mean is taken for robustness to partial grids).
+pub fn frontier(table: &RegimeTable) -> Frontier {
+    let mut crossover = None;
+    let mut rates_compared = 0;
+    for rate in table.churn_rates() {
+        let (Some(inc), Some(full)) = (table.cell(rate, "incremental"), table.cell(rate, "full")) else {
+            continue;
+        };
+        rates_compared += 1;
+        if crossover.is_none() && full.score < inc.score {
+            crossover = Some((inc.mean_churn_frac + full.mean_churn_frac) / 2.0);
+        }
+    }
+    Frontier {
+        scenario: table.scenario.clone(),
+        n_clients: table.n_clients,
+        n_helpers: table.n_helpers,
+        crossover,
+        rates_compared,
+    }
+}
+
+/// Compute frontiers for every regime table that compared the two arms at
+/// least once; tables with no comparable rate (e.g. a repair-only-vs-full
+/// grid) are dropped — they say nothing about this frontier.
+pub fn frontiers(tables: &[RegimeTable]) -> Vec<Frontier> {
+    tables.iter().map(frontier).filter(|f| f.rates_compared > 0).collect()
+}
+
+/// Frontiers → a serializable [`PolicyTable`] (`source` records
+/// provenance, e.g. the artifact filename). Takes the computed
+/// [`frontiers`] so a caller that also prints them ([`psl analyze`])
+/// serializes provably the same scan it displayed.
+///
+/// [`psl analyze`]: crate::analyze
+pub fn compute_policy_table(frontiers: Vec<Frontier>, source: &str) -> PolicyTable {
+    let entries = frontiers
+        .into_iter()
+        .map(|f| PolicyEntry {
+            scenario: f.scenario,
+            n_clients: f.n_clients,
+            n_helpers: f.n_helpers,
+            frontier_churn: f.crossover,
+        })
+        .collect();
+    PolicyTable::new(source.to_string(), entries)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analyze::grid::{regime_tables, tests::row, GridRow};
+
+    /// A synthetic hand-built grid with a known crossover: incremental
+    /// wins at 0.05 and 0.15, full wins at 0.3.
+    fn synthetic() -> Vec<GridRow> {
+        let mut rows = Vec::new();
+        for seed in [1u64, 2] {
+            // score = makespan × work. incremental: cheap but degrading
+            // with churn; full: constant cost, constant makespan.
+            rows.push(row("scenario1", 0.05, "incremental", seed, 1000.0, 100));
+            rows.push(row("scenario1", 0.05, "full", seed, 950.0, 900));
+            rows.push(row("scenario1", 0.15, "incremental", seed, 1100.0, 300));
+            rows.push(row("scenario1", 0.15, "full", seed, 950.0, 900));
+            rows.push(row("scenario1", 0.3, "incremental", seed, 1400.0, 700));
+            rows.push(row("scenario1", 0.3, "full", seed, 950.0, 900));
+        }
+        rows
+    }
+
+    #[test]
+    fn synthetic_crossover_lands_where_designed() {
+        // 0.05: inc 1000×100 = 1e5 < full 950×900 = 8.55e5 → inc wins.
+        // 0.15: inc 1100×300 = 3.3e5 < 8.55e5 → inc wins.
+        // 0.3:  inc 1400×700 = 9.8e5 > 8.55e5 → full wins. The frontier
+        // is reported in *observed* churn-fraction units: 2 × 0.3 = 0.6.
+        let tables = regime_tables(&synthetic());
+        let f = frontier(&tables[0]);
+        assert_eq!(f.crossover, Some(0.6));
+        assert_eq!(f.rates_compared, 3);
+    }
+
+    fn table_of(rows: &[GridRow], source: &str) -> PolicyTable {
+        compute_policy_table(frontiers(&regime_tables(rows)), source)
+    }
+
+    #[test]
+    fn frontier_is_deterministic() {
+        let rows = synthetic();
+        let a = table_of(&rows, "synthetic");
+        let b = table_of(&rows, "synthetic");
+        assert_eq!(a, b);
+        assert_eq!(a.to_json().pretty(), b.to_json().pretty(), "byte-identical table artifact");
+        // Row order must not matter either.
+        let mut shuffled = rows.clone();
+        shuffled.reverse();
+        assert_eq!(table_of(&shuffled, "synthetic"), a);
+    }
+
+    #[test]
+    fn incremental_sweeping_every_rate_yields_open_frontier() {
+        let rows = vec![
+            row("scenario1", 0.1, "incremental", 1, 1000.0, 100),
+            row("scenario1", 0.1, "full", 1, 990.0, 900),
+            row("scenario1", 0.3, "incremental", 1, 1050.0, 150),
+            row("scenario1", 0.3, "full", 1, 990.0, 900),
+        ];
+        let f = frontier(&regime_tables(&rows)[0]);
+        assert_eq!(f.crossover, None, "incremental won everywhere");
+        assert_eq!(f.rates_compared, 2);
+    }
+
+    #[test]
+    fn rates_missing_an_arm_are_skipped() {
+        let rows = vec![
+            row("scenario1", 0.1, "incremental", 1, 1000.0, 100),
+            // 0.2 has only the full arm → no comparison there.
+            row("scenario1", 0.2, "full", 1, 1.0, 1),
+            row("scenario1", 0.3, "incremental", 1, 2000.0, 900),
+            row("scenario1", 0.3, "full", 1, 900.0, 800),
+        ];
+        let f = frontier(&regime_tables(&rows)[0]);
+        assert_eq!(f.rates_compared, 1);
+        assert_eq!(f.crossover, Some(0.6), "observed fraction at the winning rate");
+    }
+
+    #[test]
+    fn tables_without_both_arms_are_dropped_from_the_policy_table() {
+        let rows = vec![
+            row("scenario1", 0.1, "repair-only", 1, 1000.0, 100),
+            row("scenario1", 0.1, "full", 1, 900.0, 900),
+            row("s4-straggler-tail", 0.1, "incremental", 1, 1500.0, 100),
+            row("s4-straggler-tail", 0.1, "full", 1, 900.0, 900),
+        ];
+        let t = table_of(&rows, "partial");
+        assert_eq!(t.entries.len(), 1, "only s4 compared both arms");
+        assert_eq!(t.entries[0].scenario, "s4-straggler-tail");
+        assert_eq!(t.source, "partial");
+    }
+
+    #[test]
+    fn ties_go_to_incremental() {
+        // Strictly-lower is required: equal scores keep the cheap arm.
+        let rows = vec![
+            row("scenario1", 0.2, "incremental", 1, 900.0, 900),
+            row("scenario1", 0.2, "full", 1, 900.0, 900),
+        ];
+        assert_eq!(frontier(&regime_tables(&rows)[0]).crossover, None);
+    }
+}

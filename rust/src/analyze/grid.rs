@@ -1,0 +1,356 @@
+//! Typed loading and aggregation of `psl fleet --grid` artifacts.
+//!
+//! The grid runner writes one summary row per (scenario, churn rate,
+//! policy, seed) cell; this module parses those rows back into a typed
+//! form through the artifact registry and collapses them into per-
+//! (family × fleet size) **regime tables**: one aggregate per
+//! (churn rate, policy) with seeds averaged out, scored by the
+//! work-discounted makespan the frontier computation compares.
+
+use crate::bench::artifact::{self, ArtifactKind};
+use crate::util::json::Json;
+use anyhow::{Context, Result};
+use std::collections::BTreeMap;
+
+/// One fleet-grid row, parsed back from the artifact.
+#[derive(Clone, Debug, PartialEq)]
+pub struct GridRow {
+    pub scenario: String,
+    pub model: String,
+    pub n_clients: usize,
+    pub n_helpers: usize,
+    pub churn_rate: f64,
+    pub policy: String,
+    pub seed: String,
+    pub rounds: usize,
+    pub full_rounds: usize,
+    pub repair_rounds: usize,
+    pub empty_rounds: usize,
+    pub mean_makespan_ms: f64,
+    pub mean_period_ms: f64,
+    /// Mean *observed* membership-churn fraction of the cell's rounds —
+    /// the unit the frontier (and the `auto` policy's per-round
+    /// comparison) is measured in, ≈ 2× the stationary `churn_rate` axis.
+    pub mean_churn_frac: f64,
+    pub total_work_units: u64,
+}
+
+/// Parse a fleet-grid document's rows. Validates the registry envelope
+/// and every field each row needs downstream.
+pub fn rows_from_doc(doc: &Json) -> Result<Vec<GridRow>> {
+    artifact::expect_kind(doc, ArtifactKind::FleetGrid)?;
+    let rows = doc.get("rows").as_arr().context("fleet-grid artifact missing rows[]")?;
+    let mut out = Vec::with_capacity(rows.len());
+    for (k, r) in rows.iter().enumerate() {
+        let str_field = |name: &str| -> Result<String> {
+            r.get(name).as_str().map(str::to_string).with_context(|| format!("row {k}: missing/bad {name}"))
+        };
+        let num = |name: &str| -> Result<f64> {
+            r.get(name).as_f64().with_context(|| format!("row {k}: missing/bad {name}"))
+        };
+        let count = |name: &str| -> Result<usize> {
+            r.get(name).as_usize().with_context(|| format!("row {k}: missing/bad {name}"))
+        };
+        let churn_rate = num("churn_rate")?;
+        anyhow::ensure!(
+            churn_rate.is_finite() && (0.0..=1.0).contains(&churn_rate),
+            "row {k}: churn_rate {churn_rate} outside [0, 1]"
+        );
+        let mean_makespan_ms = num("mean_makespan_ms")?;
+        let mean_period_ms = num("mean_period_ms")?;
+        // Absent (not just malformed) means a pre-v2 artifact: say so,
+        // rather than surfacing a generic field error.
+        let mean_churn_frac = match r.get("mean_churn_frac") {
+            Json::Null => anyhow::bail!(
+                "row {k}: no mean_churn_frac — this fleet-grid artifact predates schema v{} \
+                 (re-run `psl fleet --grid` with this build)",
+                artifact::SCHEMA_VERSION
+            ),
+            v => v.as_f64().with_context(|| format!("row {k}: bad mean_churn_frac {v}"))?,
+        };
+        // A NaN here would poison every score comparison downstream and
+        // read as "incremental wins everywhere" — reject it loudly.
+        for (name, v) in [
+            ("mean_makespan_ms", mean_makespan_ms),
+            ("mean_period_ms", mean_period_ms),
+            ("mean_churn_frac", mean_churn_frac),
+        ] {
+            anyhow::ensure!(v.is_finite() && v >= 0.0, "row {k}: non-finite/negative {name} {v}");
+        }
+        let work = str_field("total_work_units")?;
+        out.push(GridRow {
+            scenario: str_field("scenario")?,
+            model: str_field("model")?,
+            n_clients: count("n_clients")?,
+            n_helpers: count("n_helpers")?,
+            churn_rate,
+            policy: str_field("policy")?,
+            seed: str_field("seed")?,
+            rounds: count("rounds")?,
+            full_rounds: count("full_rounds")?,
+            repair_rounds: count("repair_rounds")?,
+            empty_rounds: count("empty_rounds")?,
+            mean_makespan_ms,
+            mean_period_ms,
+            mean_churn_frac,
+            total_work_units: work.parse().with_context(|| format!("row {k}: bad total_work_units {work:?}"))?,
+        });
+    }
+    Ok(out)
+}
+
+/// One aggregated (churn rate, policy) arm of a regime table.
+#[derive(Clone, Debug, PartialEq)]
+pub struct RegimeCell {
+    pub churn_rate: f64,
+    pub policy: String,
+    /// Seeds averaged into this cell.
+    pub seeds: usize,
+    /// Seed-averaged *observed* churn fraction — the frontier's unit.
+    pub mean_churn_frac: f64,
+    pub mean_makespan_ms: f64,
+    pub mean_work_units: f64,
+    /// Work-discounted makespan: `mean_makespan_ms × max(mean_work, 1)`.
+    /// Lower is better — a policy only wins a regime if whatever makespan
+    /// it buys justifies the solve effort it spends, which is exactly the
+    /// §VII trade the frontier encodes. All-empty runs (work 0) clamp to
+    /// the makespan alone instead of collapsing the score to zero.
+    pub score: f64,
+}
+
+/// All measured (churn rate, policy) arms for one scenario family at one
+/// fleet size, in ascending (churn rate, policy) order.
+#[derive(Clone, Debug, PartialEq)]
+pub struct RegimeTable {
+    pub scenario: String,
+    pub n_clients: usize,
+    pub n_helpers: usize,
+    pub cells: Vec<RegimeCell>,
+}
+
+impl RegimeTable {
+    /// The table's churn rates, ascending and deduplicated.
+    pub fn churn_rates(&self) -> Vec<f64> {
+        let mut rates: Vec<f64> = self.cells.iter().map(|c| c.churn_rate).collect();
+        rates.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        rates.dedup();
+        rates
+    }
+
+    /// The aggregated arm for (churn rate, policy), if measured.
+    pub fn cell(&self, churn_rate: f64, policy: &str) -> Option<&RegimeCell> {
+        self.cells.iter().find(|c| c.churn_rate == churn_rate && c.policy == policy)
+    }
+}
+
+/// Collapse grid rows into regime tables: group by (scenario, J, I), then
+/// average seeds within each (churn rate, policy) arm. Ordering is fully
+/// deterministic (BTreeMap on bit-exact churn keys), so the same artifact
+/// always yields the same tables.
+pub fn regime_tables(rows: &[GridRow]) -> Vec<RegimeTable> {
+    // Churn rates come verbatim from one artifact, so bit-exact f64 keys
+    // group correctly (no arithmetic touches them between rows).
+    let mut groups: BTreeMap<(String, usize, usize), BTreeMap<(u64, String), Vec<&GridRow>>> = BTreeMap::new();
+    for r in rows {
+        groups
+            .entry((r.scenario.clone(), r.n_clients, r.n_helpers))
+            .or_default()
+            .entry((r.churn_rate.to_bits(), r.policy.clone()))
+            .or_default()
+            .push(r);
+    }
+    groups
+        .into_iter()
+        .map(|((scenario, n_clients, n_helpers), arms)| {
+            let cells = arms
+                .into_iter()
+                .map(|((churn_bits, policy), members)| {
+                    let n = members.len() as f64;
+                    let mean_makespan_ms = members.iter().map(|m| m.mean_makespan_ms).sum::<f64>() / n;
+                    let mean_work_units = members.iter().map(|m| m.total_work_units as f64).sum::<f64>() / n;
+                    let mean_churn_frac = members.iter().map(|m| m.mean_churn_frac).sum::<f64>() / n;
+                    RegimeCell {
+                        churn_rate: f64::from_bits(churn_bits),
+                        policy,
+                        seeds: members.len(),
+                        mean_churn_frac,
+                        mean_makespan_ms,
+                        mean_work_units,
+                        score: mean_makespan_ms * mean_work_units.max(1.0),
+                    }
+                })
+                .collect();
+            RegimeTable { scenario, n_clients, n_helpers, cells }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+pub(crate) mod tests {
+    use super::*;
+
+    /// Shared across analyze test modules: a hand-built grid row. The
+    /// observed churn fraction follows the stationary mapping (≈ 2× the
+    /// rate axis), like the real grid runner produces.
+    pub(crate) fn row(scenario: &str, churn: f64, policy: &str, seed: u64, makespan: f64, work: u64) -> GridRow {
+        GridRow {
+            scenario: scenario.to_string(),
+            model: "resnet101".to_string(),
+            n_clients: 10,
+            n_helpers: 2,
+            churn_rate: churn,
+            policy: policy.to_string(),
+            seed: seed.to_string(),
+            rounds: 8,
+            full_rounds: if policy == "full" { 8 } else { 1 },
+            repair_rounds: if policy == "full" { 0 } else { 7 },
+            empty_rounds: 0,
+            mean_makespan_ms: makespan,
+            mean_period_ms: makespan * 0.8,
+            mean_churn_frac: churn * 2.0,
+            total_work_units: work,
+        }
+    }
+
+    #[test]
+    fn aggregation_averages_seeds() {
+        let rows = vec![
+            row("scenario1", 0.1, "incremental", 1, 1000.0, 100),
+            row("scenario1", 0.1, "incremental", 2, 1200.0, 300),
+            row("scenario1", 0.1, "full", 1, 900.0, 1000),
+        ];
+        let tables = regime_tables(&rows);
+        assert_eq!(tables.len(), 1);
+        let t = &tables[0];
+        assert_eq!((t.scenario.as_str(), t.n_clients, t.n_helpers), ("scenario1", 10, 2));
+        let inc = t.cell(0.1, "incremental").unwrap();
+        assert_eq!(inc.seeds, 2);
+        assert!((inc.mean_makespan_ms - 1100.0).abs() < 1e-9);
+        assert!((inc.mean_work_units - 200.0).abs() < 1e-9);
+        assert!((inc.mean_churn_frac - 0.2).abs() < 1e-9, "observed fraction averaged");
+        assert!((inc.score - 1100.0 * 200.0).abs() < 1e-6);
+        assert_eq!(t.cell(0.1, "full").unwrap().seeds, 1);
+        assert!(t.cell(0.2, "incremental").is_none());
+    }
+
+    #[test]
+    fn zero_work_clamps_score_to_makespan() {
+        let tables = regime_tables(&[row("scenario1", 0.1, "incremental", 1, 500.0, 0)]);
+        assert!((tables[0].cells[0].score - 500.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn tables_split_by_family_and_size() {
+        let mut rows = vec![row("scenario1", 0.1, "full", 1, 900.0, 10), row("s4-straggler-tail", 0.1, "full", 1, 900.0, 10)];
+        rows.push(GridRow { n_clients: 20, ..rows[0].clone() });
+        let tables = regime_tables(&rows);
+        assert_eq!(tables.len(), 3);
+        // BTreeMap order: s4 sorts after scenario1; sizes ascend within.
+        assert_eq!(tables[0].n_clients, 10);
+        assert_eq!(tables[1].n_clients, 20);
+        assert_eq!(tables[2].scenario, "s4-straggler-tail");
+    }
+
+    #[test]
+    fn churn_rates_sorted_and_deduped() {
+        let rows = vec![
+            row("scenario1", 0.3, "full", 1, 1.0, 1),
+            row("scenario1", 0.1, "full", 1, 1.0, 1),
+            row("scenario1", 0.1, "incremental", 1, 1.0, 1),
+        ];
+        assert_eq!(regime_tables(&rows)[0].churn_rates(), vec![0.1, 0.3]);
+    }
+
+    #[test]
+    fn roundtrip_through_real_grid_artifact() {
+        // The registry writer and this reader must agree field-for-field.
+        let cfg = crate::bench::fleet::FleetGridCfg {
+            scenarios: vec![crate::instance::scenario::Scenario::S1],
+            model: crate::instance::profiles::Model::Vgg19,
+            size: (4, 2),
+            churn_rates: vec![0.2],
+            policies: vec![crate::fleet::Policy::Incremental],
+            seeds: vec![3],
+            rounds: 3,
+            slot_ms: Some(550.0),
+            policy_table: None,
+            threads: 1,
+        };
+        let grid_rows = crate::bench::fleet::run(&cfg);
+        let doc = crate::bench::fleet::rows_to_json(&grid_rows);
+        let parsed = rows_from_doc(&Json::parse(&doc.pretty()).unwrap()).unwrap();
+        assert_eq!(parsed.len(), 1);
+        assert_eq!(parsed[0].scenario, "scenario1");
+        assert_eq!(parsed[0].rounds, 3);
+        assert_eq!(parsed[0].total_work_units, grid_rows[0].total_work_units);
+        assert!((parsed[0].mean_makespan_ms - grid_rows[0].mean_makespan_ms).abs() < 1e-9);
+        assert_eq!(parsed[0].mean_churn_frac, grid_rows[0].mean_churn_frac, "observed churn roundtrips");
+    }
+
+    #[test]
+    fn rejects_non_finite_metrics() {
+        let mut bad = row("scenario1", 0.1, "incremental", 1, 1000.0, 100);
+        bad.mean_makespan_ms = f64::NAN;
+        // Rebuild the artifact shape by hand around the poisoned row.
+        let doc = crate::bench::artifact::envelope(ArtifactKind::FleetGrid, vec![(
+            "rows",
+            Json::Arr(vec![Json::obj(vec![
+                ("scenario", Json::Str(bad.scenario.clone())),
+                ("model", Json::Str(bad.model.clone())),
+                ("n_clients", Json::Num(bad.n_clients as f64)),
+                ("n_helpers", Json::Num(bad.n_helpers as f64)),
+                ("churn_rate", Json::Num(bad.churn_rate)),
+                ("policy", Json::Str(bad.policy.clone())),
+                ("seed", Json::Str(bad.seed.clone())),
+                ("rounds", Json::Num(bad.rounds as f64)),
+                ("full_rounds", Json::Num(bad.full_rounds as f64)),
+                ("repair_rounds", Json::Num(bad.repair_rounds as f64)),
+                ("empty_rounds", Json::Num(bad.empty_rounds as f64)),
+                ("mean_makespan_ms", Json::Num(bad.mean_makespan_ms)),
+                ("mean_period_ms", Json::Num(bad.mean_period_ms)),
+                ("mean_churn_frac", Json::Num(bad.mean_churn_frac)),
+                ("total_work_units", Json::Str(bad.total_work_units.to_string())),
+            ])]),
+        )]);
+        let err = rows_from_doc(&doc).unwrap_err().to_string();
+        assert!(err.contains("mean_makespan_ms"), "{err}");
+    }
+
+    #[test]
+    fn pre_v2_artifact_gets_a_regenerate_error() {
+        // A v1 fleet-grid row (no mean_churn_frac) must fail with a
+        // message naming the schema change, not a generic field error.
+        let doc = crate::bench::artifact::envelope(ArtifactKind::FleetGrid, vec![(
+            "rows",
+            Json::Arr(vec![Json::obj(vec![
+                ("scenario", Json::Str("scenario1".into())),
+                ("model", Json::Str("resnet101".into())),
+                ("n_clients", Json::Num(10.0)),
+                ("n_helpers", Json::Num(2.0)),
+                ("churn_rate", Json::Num(0.1)),
+                ("policy", Json::Str("incremental".into())),
+                ("seed", Json::Str("1".into())),
+                ("rounds", Json::Num(8.0)),
+                ("full_rounds", Json::Num(1.0)),
+                ("repair_rounds", Json::Num(7.0)),
+                ("empty_rounds", Json::Num(0.0)),
+                ("mean_makespan_ms", Json::Num(1000.0)),
+                ("mean_period_ms", Json::Num(800.0)),
+                ("total_work_units", Json::Str("100".into())),
+            ])]),
+        )]);
+        let err = rows_from_doc(&doc).unwrap_err().to_string();
+        assert!(err.contains("predates schema"), "{err}");
+    }
+
+    #[test]
+    fn rejects_wrong_kind_and_bad_rows() {
+        let sweep = crate::bench::artifact::envelope(ArtifactKind::Sweep, vec![("rows", Json::Arr(vec![]))]);
+        assert!(rows_from_doc(&sweep).is_err());
+        let bad = crate::bench::artifact::envelope(ArtifactKind::FleetGrid, vec![(
+            "rows",
+            Json::Arr(vec![Json::obj(vec![("scenario", Json::Str("s".into()))])]),
+        )]);
+        assert!(rows_from_doc(&bad).is_err());
+    }
+}

@@ -1,0 +1,35 @@
+//! Artifact analytics (`psl analyze`): the consumer side of everything
+//! the runners persist under `target/psl-bench/`.
+//!
+//! The paper's §VII builds its solution *strategy* empirically — run the
+//! methods over measured scenarios, record where each wins, encode the
+//! boundary as a rule. This subsystem does the same with the repo's own
+//! artifacts: load any registry kind ([`crate::bench::artifact`]),
+//! aggregate fleet-grid cells into per-family **regime tables**
+//! ([`grid`]), find the churn-rate **policy frontier** where full
+//! re-solving overtakes incremental repair and serialize it as the
+//! [`PolicyTable`](crate::fleet::policy::PolicyTable) the fleet `auto`
+//! policy consults ([`frontier`]), diff perf-trajectory points across
+//! PRs ([`perfdiff`]), and summarize a fleet run's streamed
+//! `.rounds.jsonl` sidecar per decision ([`rounds`]).
+//!
+//! | Module | Role |
+//! |---|---|
+//! | [`grid`] | typed fleet-grid rows, per-(family × size) regime tables |
+//! | [`frontier`] | churn-rate crossover scan → `PolicyTable` |
+//! | [`perfdiff`] | `--perf-diff` gate on solve/check/replay timings |
+//! | [`rounds`] | `--rounds` per-decision summary of `.rounds.jsonl` sidecars |
+//!
+//! Everything is deterministic: the same artifact bytes always produce
+//! the same tables, frontiers and `PolicyTable` bytes, so analysis
+//! outputs are themselves diffable artifacts.
+
+pub mod frontier;
+pub mod grid;
+pub mod perfdiff;
+pub mod rounds;
+
+pub use frontier::{compute_policy_table, frontiers, Frontier};
+pub use grid::{regime_tables, rows_from_doc, GridRow, RegimeCell, RegimeTable};
+pub use perfdiff::{PerfDiffReport, PerfRegression};
+pub use rounds::{summarize, DecisionSummary, RoundRow};

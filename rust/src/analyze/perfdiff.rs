@@ -1,0 +1,205 @@
+//! Perf-trajectory diffs (`psl analyze --perf-diff old.json new.json`):
+//! compare two `psl perf` artifacts cell-by-cell and fail on hot-path
+//! slowdowns, mirroring `sweep --diff` for timings.
+//!
+//! Only the product phases — `solve`, `check`, `replay` — gate: the
+//! `check-dense`/`replay-dense` rows are the frozen pre-refactor
+//! reference and their drift is not a product regression (they still
+//! show up in `only_*` counts when the grid shape moves). The compared
+//! statistic is `min_s`, the standard low-noise benchmark statistic —
+//! means absorb scheduler jitter that would flap CI.
+
+use crate::bench::artifact::{self, ArtifactKind};
+use crate::util::json::Json;
+use anyhow::{Context, Result};
+use std::collections::BTreeMap;
+
+/// Phases whose slowdown fails the diff.
+pub const GATED_PHASES: [&str; 3] = ["solve", "check", "replay"];
+
+/// One per-cell timing regression.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PerfRegression {
+    /// Human-readable cell key (scenario/model/JxI/seed/slot/phase).
+    pub cell: String,
+    pub old_s: f64,
+    pub new_s: f64,
+}
+
+/// Cell-by-cell comparison of two perf artifacts.
+#[derive(Clone, Debug, Default)]
+pub struct PerfDiffReport {
+    /// Gated cells present in both artifacts.
+    pub compared: usize,
+    /// Gated cells whose new `min_s` exceeds old × (1 + tol).
+    pub regressions: Vec<PerfRegression>,
+    /// Gated cells that sped up beyond the tolerance.
+    pub improved: usize,
+    /// Cells (gated or not) present in only one artifact — grid drift,
+    /// reported but never failed.
+    pub only_old: usize,
+    pub only_new: usize,
+}
+
+/// Index a perf document's rows by cell key → (`min_s`, gated), keeping
+/// every phase (so grid drift on dense baselines is still visible). The
+/// gated flag comes from the row's `phase` field directly — the display
+/// key is never re-parsed.
+fn index_rows(doc: &Json) -> Result<BTreeMap<String, (f64, bool)>> {
+    artifact::expect_kind(doc, ArtifactKind::Perf)?;
+    let rows = doc.get("rows").as_arr().context("perf artifact missing rows[]")?;
+    let mut out = BTreeMap::new();
+    for (k, r) in rows.iter().enumerate() {
+        let phase = r.get("phase").as_str().unwrap_or("?");
+        let key = format!(
+            "{}/{} {}x{} seed={} slot={} {}",
+            r.get("scenario").as_str().unwrap_or("?"),
+            r.get("model").as_str().unwrap_or("?"),
+            r.get("n_clients").as_f64().unwrap_or(-1.0),
+            r.get("n_helpers").as_f64().unwrap_or(-1.0),
+            r.get("seed").as_str().unwrap_or("?"),
+            r.get("slot_ms").as_f64().unwrap_or(-1.0),
+            phase,
+        );
+        let min_s = r.get("min_s").as_f64().with_context(|| format!("row {k}: missing/bad min_s"))?;
+        anyhow::ensure!(min_s.is_finite() && min_s >= 0.0, "row {k}: non-finite min_s {min_s}");
+        let gated = GATED_PHASES.contains(&phase);
+        // A silently-overwritten duplicate would shadow a row from the
+        // comparison entirely (e.g. `--scenarios 1,1`): reject instead.
+        anyhow::ensure!(
+            out.insert(key.clone(), (min_s, gated)).is_none(),
+            "duplicate perf cell {key:?} in artifact"
+        );
+    }
+    Ok(out)
+}
+
+/// Compare two perf artifacts: a gated cell regresses when its new
+/// `min_s` exceeds the old by more than `tol` (relative). Cells present
+/// in only one artifact are counted but do not fail the diff.
+pub fn diff_documents(old: &Json, new: &Json, tol: f64) -> Result<PerfDiffReport> {
+    let old_rows = index_rows(old)?;
+    let new_rows = index_rows(new)?;
+    let mut report = PerfDiffReport::default();
+    for (key, (old_s, gated)) in &old_rows {
+        match new_rows.get(key) {
+            None => report.only_old += 1,
+            Some((new_s, _)) if *gated => {
+                report.compared += 1;
+                if *new_s > old_s * (1.0 + tol) {
+                    report.regressions.push(PerfRegression { cell: key.clone(), old_s: *old_s, new_s: *new_s });
+                } else if *new_s < old_s * (1.0 - tol) {
+                    report.improved += 1;
+                }
+            }
+            Some(_) => {}
+        }
+    }
+    report.only_new = new_rows.keys().filter(|k| !old_rows.contains_key(*k)).count();
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bench::perf::{rows_to_json, PerfRow};
+
+    fn perf_row(scenario: &'static str, phase: &'static str, min_s: f64) -> PerfRow {
+        PerfRow {
+            scenario,
+            model: "resnet101",
+            n_clients: 8,
+            n_helpers: 2,
+            seed: 42,
+            slot_ms: 180.0,
+            phase,
+            iters: 3,
+            mean_s: min_s * 1.1,
+            p50_s: min_s * 1.05,
+            min_s,
+            max_s: min_s * 1.3,
+            makespan_slots: 40,
+            total_runs: 16,
+            total_slots: 200,
+        }
+    }
+
+    fn doc(solve: f64, check: f64) -> Json {
+        rows_to_json(&[
+            perf_row("scenario1", "solve", solve),
+            perf_row("scenario1", "check", check),
+            perf_row("scenario1", "check-dense", 0.5),
+        ])
+    }
+
+    #[test]
+    fn self_diff_is_clean() {
+        let d = doc(0.1, 0.01);
+        let r = diff_documents(&d, &d, 0.25).unwrap();
+        assert_eq!(r.compared, 2, "dense baseline rows are not gated");
+        assert!(r.regressions.is_empty());
+        assert_eq!(r.improved + r.only_old + r.only_new, 0);
+    }
+
+    #[test]
+    fn slowdown_beyond_tol_regresses_and_speedup_improves() {
+        let old = doc(0.1, 0.01);
+        let new = doc(0.2, 0.004);
+        let r = diff_documents(&old, &new, 0.25).unwrap();
+        assert_eq!(r.regressions.len(), 1, "{:?}", r.regressions);
+        assert!(r.regressions[0].cell.ends_with(" solve"), "{}", r.regressions[0].cell);
+        assert_eq!(r.improved, 1, "check sped up beyond tolerance");
+        // A huge tolerance swallows the slowdown.
+        assert!(diff_documents(&old, &new, 2.0).unwrap().regressions.is_empty());
+    }
+
+    #[test]
+    fn dense_baseline_drift_never_fails() {
+        let old = doc(0.1, 0.01);
+        let mut rows = vec![
+            perf_row("scenario1", "solve", 0.1),
+            perf_row("scenario1", "check", 0.01),
+            perf_row("scenario1", "check-dense", 50.0), // 100× slower — ignored
+        ];
+        let r = diff_documents(&old, &rows_to_json(&rows), 0.25).unwrap();
+        assert!(r.regressions.is_empty(), "dense phases are reference-only");
+        // Dropping the dense row entirely is drift, not failure.
+        rows.pop();
+        let r2 = diff_documents(&old, &rows_to_json(&rows), 0.25).unwrap();
+        assert_eq!(r2.only_old, 1);
+        assert!(r2.regressions.is_empty());
+    }
+
+    #[test]
+    fn duplicate_cells_are_rejected() {
+        // `perf --scenarios 1,1` would write two rows with the same cell
+        // key; the diff must refuse rather than shadow one of them.
+        let d = rows_to_json(&[perf_row("scenario1", "solve", 0.1), perf_row("scenario1", "solve", 0.2)]);
+        let err = diff_documents(&d, &d, 0.25).unwrap_err().to_string();
+        assert!(err.contains("duplicate"), "{err}");
+    }
+
+    #[test]
+    fn rejects_non_perf_documents() {
+        let sweep = artifact::envelope(ArtifactKind::Sweep, vec![("rows", Json::Arr(vec![]))]);
+        let err = diff_documents(&sweep, &sweep, 0.25).unwrap_err().to_string();
+        assert!(err.contains("psl-sweep"), "{err}");
+    }
+
+    #[test]
+    fn real_smoke_artifact_self_diffs_clean() {
+        let rows = crate::bench::perf::run(&crate::bench::perf::PerfCfg {
+            scenarios: vec![crate::instance::scenario::Scenario::S1],
+            model: crate::instance::profiles::Model::Vgg19,
+            sizes: vec![(4, 2)],
+            seed: 11,
+            iters: 1,
+            warmup: 0,
+        });
+        let d = rows_to_json(&rows);
+        let parsed = Json::parse(&d.pretty()).unwrap();
+        let r = diff_documents(&parsed, &parsed, 0.0).unwrap();
+        assert_eq!(r.compared, 3, "solve/check/replay gated");
+        assert!(r.regressions.is_empty(), "self-diff at zero tolerance is clean");
+    }
+}

@@ -1,0 +1,163 @@
+//! Typed loading and summarization of the fleet `.rounds.jsonl` sidecar
+//! (`psl analyze --rounds <file>`).
+//!
+//! `psl fleet` streams one JSON line per finished round, each line equal
+//! to the corresponding `rounds_detail` entry of the final report — so a
+//! run interrupted mid-horizon still leaves a usable trace. This module
+//! parses that stream back into typed rows and collapses it into a
+//! per-decision summary: how often each decision fired (`repair`,
+//! `full-auto`, `full-gap`, …), at what observed churn, and what it cost
+//! — the quickest way to audit what a long-horizon orchestrator run
+//! actually did.
+
+use crate::util::json::Json;
+use anyhow::{Context, Result};
+use std::collections::BTreeMap;
+
+/// One streamed round, parsed back from its JSONL line.
+#[derive(Clone, Debug, PartialEq)]
+pub struct RoundRow {
+    pub round: usize,
+    pub n_clients: usize,
+    pub decision: String,
+    pub method: Option<String>,
+    pub makespan_ms: f64,
+    pub churn_frac: f64,
+    pub period_ms: f64,
+    pub work_units: u64,
+}
+
+/// Parse a `.rounds.jsonl` stream (blank lines ignored). Errors name the
+/// offending 1-based line.
+pub fn rows_from_jsonl(text: &str) -> Result<Vec<RoundRow>> {
+    let mut out = Vec::new();
+    for (idx, line) in text.lines().enumerate() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        let n = idx + 1;
+        let doc = Json::parse(line).with_context(|| format!("line {n}: not valid JSON"))?;
+        let num = |name: &str| -> Result<f64> {
+            let v = doc.get(name).as_f64().with_context(|| format!("line {n}: missing/bad {name}"))?;
+            anyhow::ensure!(v.is_finite() && v >= 0.0, "line {n}: non-finite/negative {name} {v}");
+            Ok(v)
+        };
+        let work = doc
+            .get("work_units")
+            .as_str()
+            .with_context(|| format!("line {n}: missing/bad work_units"))?;
+        out.push(RoundRow {
+            round: doc.get("round").as_usize().with_context(|| format!("line {n}: missing/bad round"))?,
+            n_clients: doc.get("n_clients").as_usize().with_context(|| format!("line {n}: missing/bad n_clients"))?,
+            decision: doc
+                .get("decision")
+                .as_str()
+                .with_context(|| format!("line {n}: missing/bad decision"))?
+                .to_string(),
+            method: doc.get("method").as_str().map(str::to_string),
+            makespan_ms: num("makespan_ms")?,
+            churn_frac: num("churn_frac")?,
+            period_ms: num("period_ms")?,
+            work_units: work.parse().with_context(|| format!("line {n}: bad work_units {work:?}"))?,
+        });
+    }
+    Ok(out)
+}
+
+/// Aggregate view of every round that reached one decision.
+#[derive(Clone, Debug, PartialEq)]
+pub struct DecisionSummary {
+    pub decision: String,
+    pub rounds: usize,
+    pub mean_churn_frac: f64,
+    pub mean_makespan_ms: f64,
+    pub mean_period_ms: f64,
+    pub total_work_units: u64,
+}
+
+/// Collapse rows into per-decision summaries, in decision-name order
+/// (BTreeMap — deterministic for the same stream).
+pub fn summarize(rows: &[RoundRow]) -> Vec<DecisionSummary> {
+    let mut groups: BTreeMap<&str, Vec<&RoundRow>> = BTreeMap::new();
+    for r in rows {
+        groups.entry(&r.decision).or_default().push(r);
+    }
+    groups
+        .into_iter()
+        .map(|(decision, members)| {
+            let n = members.len() as f64;
+            DecisionSummary {
+                decision: decision.to_string(),
+                rounds: members.len(),
+                mean_churn_frac: members.iter().map(|m| m.churn_frac).sum::<f64>() / n,
+                mean_makespan_ms: members.iter().map(|m| m.makespan_ms).sum::<f64>() / n,
+                mean_period_ms: members.iter().map(|m| m.period_ms).sum::<f64>() / n,
+                total_work_units: members.iter().map(|m| m.work_units).sum(),
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fleet::report::RoundReport;
+
+    /// Build lines through the real producer so the reader is pinned to
+    /// the exact shape `psl fleet` streams.
+    fn line(round: usize, decision: &'static str, churn: f64, makespan: f64, work: u64) -> String {
+        RoundReport {
+            round,
+            n_clients: if decision == "empty" { 0 } else { 5 },
+            arrivals: 1,
+            departures: 0,
+            decision,
+            method: if decision.starts_with("full") { Some("admm") } else { None },
+            makespan_slots: (makespan / 100.0) as u32,
+            makespan_ms: makespan,
+            lower_bound: 2,
+            churn_frac: churn,
+            repair_moves: 0,
+            placed_arrivals: 1,
+            work_units: work,
+            period_ms: makespan * 0.8,
+            preemptions: 0,
+        }
+        .jsonl_line()
+    }
+
+    #[test]
+    fn parses_producer_lines_and_summarizes_by_decision() {
+        let text = [
+            line(0, "full-initial", 0.0, 1000.0, 500),
+            String::new(), // blank lines tolerated (trailing newline etc.)
+            line(1, "repair", 0.2, 1100.0, 30),
+            line(2, "repair", 0.4, 1200.0, 40),
+            line(3, "full-auto", 0.6, 950.0, 480),
+        ]
+        .join("\n");
+        let rows = rows_from_jsonl(&text).unwrap();
+        assert_eq!(rows.len(), 4);
+        assert_eq!(rows[1].decision, "repair");
+        assert_eq!(rows[1].method, None);
+        assert_eq!(rows[3].work_units, 480);
+        let summary = summarize(&rows);
+        // BTreeMap order: full-auto, full-initial, repair.
+        assert_eq!(summary.len(), 3);
+        assert_eq!(summary[0].decision, "full-auto");
+        assert_eq!(summary[2].decision, "repair");
+        assert_eq!(summary[2].rounds, 2);
+        assert!((summary[2].mean_churn_frac - 0.3).abs() < 1e-9);
+        assert!((summary[2].mean_makespan_ms - 1150.0).abs() < 1e-9);
+        assert_eq!(summary[2].total_work_units, 70);
+    }
+
+    #[test]
+    fn rejects_malformed_lines_with_line_numbers() {
+        let good = line(0, "repair", 0.1, 500.0, 10);
+        let err = rows_from_jsonl(&format!("{good}\nnot json")).unwrap_err().to_string();
+        assert!(err.contains("line 2"), "{err}");
+        let missing = rows_from_jsonl("{\"round\": 1}").unwrap_err().to_string();
+        assert!(missing.contains("line 1"), "{missing}");
+    }
+}

@@ -1,0 +1,213 @@
+//! The `target/psl-bench` artifact registry: every JSON document the
+//! runners persist — sweep grids, fleet runs, fleet grids, perf
+//! trajectories, policy tables — carries the same envelope (`kind` tag +
+//! `schema_version`), and every consumer loads through the same
+//! schema-checked entry point instead of ad-hoc per-file parsing.
+//!
+//! Writers build their document with [`envelope`]; readers call [`load`]
+//! (path → validated document) or [`expect_kind`] (document already in
+//! hand). Validation is deliberately shallow — kind tag known, schema
+//! version supported — so old artifacts keep loading; per-kind row
+//! validation stays with the module that owns the rows (e.g.
+//! [`crate::analyze::grid`] for fleet-grid rows).
+
+use crate::util::json::Json;
+use anyhow::{Context, Result};
+
+/// Version stamped into every artifact this build writes.
+///
+/// History: v1 = the pre-registry shapes (artifacts from older builds
+/// carry no `schema_version` field and are read as v1); v2 added the
+/// per-row `mean_churn_frac` field to `psl-fleet-grid` rows (the
+/// observed-churn unit the analyze frontier is measured in). Readers
+/// accept anything ≤ the current version; kind-specific readers give a
+/// "re-generate with this build" error when a field their version needs
+/// is absent.
+pub const SCHEMA_VERSION: u32 = 2;
+
+/// Every artifact kind the repo persists under `target/psl-bench/`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ArtifactKind {
+    /// `psl sweep` — scenario × solver grid rows.
+    Sweep,
+    /// `psl fleet` — one multi-round churn run (summary + rounds_detail;
+    /// the `.rounds.jsonl` sidecar streams the same detail entries).
+    Fleet,
+    /// `psl fleet --grid` — scenario × churn-rate × policy summaries.
+    FleetGrid,
+    /// `psl perf` — solve/check/replay timing trajectory rows.
+    Perf,
+    /// `psl analyze` — per-(family, size) churn-rate frontier table
+    /// consumed by the fleet `auto` policy.
+    PolicyTable,
+}
+
+impl ArtifactKind {
+    pub const ALL: [ArtifactKind; 5] = [
+        ArtifactKind::Sweep,
+        ArtifactKind::Fleet,
+        ArtifactKind::FleetGrid,
+        ArtifactKind::Perf,
+        ArtifactKind::PolicyTable,
+    ];
+
+    /// The `kind` tag written into the document.
+    pub fn tag(self) -> &'static str {
+        match self {
+            ArtifactKind::Sweep => "psl-sweep",
+            ArtifactKind::Fleet => "psl-fleet",
+            ArtifactKind::FleetGrid => "psl-fleet-grid",
+            ArtifactKind::Perf => "psl-perf",
+            ArtifactKind::PolicyTable => "psl-policy-table",
+        }
+    }
+
+    pub fn from_tag(s: &str) -> Option<ArtifactKind> {
+        ArtifactKind::ALL.into_iter().find(|k| k.tag() == s)
+    }
+}
+
+/// Build an artifact document: the shared envelope (`kind`,
+/// `schema_version`) plus the kind's own fields. Key order in the output
+/// is alphabetical regardless (BTreeMap), so the envelope adds no
+/// ordering constraints on callers.
+pub fn envelope(kind: ArtifactKind, fields: Vec<(&str, Json)>) -> Json {
+    let mut pairs = vec![
+        ("kind", Json::Str(kind.tag().to_string())),
+        ("schema_version", Json::Num(SCHEMA_VERSION as f64)),
+    ];
+    pairs.extend(fields);
+    Json::obj(pairs)
+}
+
+/// Validate the envelope of an in-memory document: known `kind` tag and
+/// a supported `schema_version` (absent = 1, the pre-registry shape).
+/// Returns the kind so callers can dispatch.
+pub fn validate(doc: &Json) -> Result<ArtifactKind> {
+    let tag = doc
+        .get("kind")
+        .as_str()
+        .context("not a psl-bench artifact: missing \"kind\" tag")?;
+    let kind = ArtifactKind::from_tag(tag)
+        .with_context(|| format!("unknown artifact kind {tag:?}"))?;
+    let version = match doc.get("schema_version") {
+        Json::Null => 1,
+        v => v
+            .as_usize()
+            .with_context(|| format!("bad schema_version {v} (expected a non-negative integer)"))?,
+    };
+    anyhow::ensure!(
+        version <= SCHEMA_VERSION as usize,
+        "artifact schema version {version} is newer than this build supports ({SCHEMA_VERSION})"
+    );
+    Ok(kind)
+}
+
+/// Validate the envelope *and* pin the kind — the guard every consumer
+/// uses so a fleet-grid document can never be silently diffed as a sweep
+/// (and vice versa).
+pub fn expect_kind(doc: &Json, want: ArtifactKind) -> Result<()> {
+    let kind = validate(doc)?;
+    anyhow::ensure!(
+        kind == want,
+        "not a {} artifact (kind {:?}, expected {:?})",
+        want.tag(),
+        kind.tag(),
+        want.tag()
+    );
+    Ok(())
+}
+
+/// Read + parse + validate an artifact file. Returns the kind and the
+/// document.
+pub fn load(path: &str) -> Result<(ArtifactKind, Json)> {
+    let text = std::fs::read_to_string(path).with_context(|| format!("read {path}"))?;
+    let doc = Json::parse(&text).with_context(|| format!("parse {path}"))?;
+    let kind = validate(&doc).with_context(|| format!("validate {path}"))?;
+    Ok((kind, doc))
+}
+
+/// [`load`] pinned to one kind.
+pub fn load_expecting(path: &str, want: ArtifactKind) -> Result<Json> {
+    let (_, doc) = load(path)?;
+    expect_kind(&doc, want).with_context(|| format!("validate {path}"))?;
+    Ok(doc)
+}
+
+/// Write a deterministic JSON artifact under
+/// `target/psl-bench/<name>.json` (the single location every runner —
+/// sweep, fleet, fleet grid, perf, analyze — persists to). Returns the
+/// path.
+pub fn save(name: &str, doc: &Json) -> std::io::Result<std::path::PathBuf> {
+    let dir = std::path::Path::new("target/psl-bench");
+    std::fs::create_dir_all(dir)?;
+    let path = dir.join(format!("{name}.json"));
+    std::fs::write(&path, doc.pretty())?;
+    Ok(path)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tags_roundtrip() {
+        for k in ArtifactKind::ALL {
+            assert_eq!(ArtifactKind::from_tag(k.tag()), Some(k), "{}", k.tag());
+        }
+        assert_eq!(ArtifactKind::from_tag("psl-unknown"), None);
+    }
+
+    #[test]
+    fn envelope_carries_kind_and_version() {
+        let doc = envelope(ArtifactKind::Sweep, vec![("rows", Json::Arr(vec![]))]);
+        assert_eq!(doc.get("kind").as_str(), Some("psl-sweep"));
+        assert_eq!(doc.get("schema_version").as_usize(), Some(SCHEMA_VERSION as usize));
+        assert_eq!(validate(&doc).unwrap(), ArtifactKind::Sweep);
+        assert!(expect_kind(&doc, ArtifactKind::Sweep).is_ok());
+    }
+
+    #[test]
+    fn expect_kind_rejects_mismatch_naming_both_kinds() {
+        let doc = envelope(ArtifactKind::FleetGrid, vec![("rows", Json::Arr(vec![]))]);
+        let err = expect_kind(&doc, ArtifactKind::Sweep).unwrap_err().to_string();
+        assert!(err.contains("psl-fleet-grid"), "{err}");
+        assert!(err.contains("psl-sweep"), "{err}");
+    }
+
+    #[test]
+    fn pre_registry_documents_read_as_version_one() {
+        // Artifacts written before the registry existed have a kind tag
+        // but no schema_version field.
+        let doc = Json::obj(vec![
+            ("kind", Json::Str("psl-perf".to_string())),
+            ("rows", Json::Arr(vec![])),
+        ]);
+        assert_eq!(validate(&doc).unwrap(), ArtifactKind::Perf);
+    }
+
+    #[test]
+    fn rejects_unknown_kind_missing_kind_and_future_version() {
+        assert!(validate(&Json::Num(3.0)).is_err());
+        let unknown = Json::obj(vec![("kind", Json::Str("psl-nope".to_string()))]);
+        assert!(validate(&unknown).unwrap_err().to_string().contains("psl-nope"));
+        let future = Json::obj(vec![
+            ("kind", Json::Str("psl-sweep".to_string())),
+            ("schema_version", Json::Num(999.0)),
+        ]);
+        let err = validate(&future).unwrap_err().to_string();
+        assert!(err.contains("newer"), "{err}");
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let doc = envelope(ArtifactKind::PolicyTable, vec![("entries", Json::Arr(vec![]))]);
+        let name = format!("artifact-roundtrip-{}", std::process::id());
+        let path = save(&name, &doc).unwrap();
+        let (kind, loaded) = load(path.to_str().unwrap()).unwrap();
+        assert_eq!(kind, ArtifactKind::PolicyTable);
+        assert_eq!(loaded, doc);
+        assert!(load_expecting(path.to_str().unwrap(), ArtifactKind::Sweep).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+}

@@ -30,6 +30,10 @@ pub struct FleetGridCfg {
     pub rounds: usize,
     /// None → the model's default |S_t|.
     pub slot_ms: Option<f64>,
+    /// Frontier table consulted by `auto` cells (None → the builtin) —
+    /// lets a measured table be evaluated in the very grid that will
+    /// re-measure it.
+    pub policy_table: Option<crate::fleet::policy::PolicyTable>,
     pub threads: usize,
 }
 
@@ -44,6 +48,7 @@ impl Default for FleetGridCfg {
             seeds: vec![42],
             rounds: 8,
             slot_ms: None,
+            policy_table: None,
             threads: pool::default_workers(),
         }
     }
@@ -74,6 +79,10 @@ pub struct FleetGridRow {
     pub empty_rounds: usize,
     pub mean_makespan_ms: f64,
     pub mean_period_ms: f64,
+    /// Mean *observed* membership-churn fraction (rounds after the
+    /// first) — the unit the analyze frontier is measured in, ≈ 2× this
+    /// cell's stationary `churn_rate` axis value.
+    pub mean_churn_frac: f64,
     pub total_work_units: u64,
 }
 
@@ -104,6 +113,7 @@ pub fn cell_cfg(grid: &FleetGridCfg, c: &FleetCell) -> FleetCfg {
     churn.arrival_rate = c.churn_rate * j as f64;
     let mut cfg = FleetCfg::new(scen, churn, c.policy);
     cfg.slot_ms = grid.slot_ms;
+    cfg.policy_table = grid.policy_table.clone();
     cfg
 }
 
@@ -124,6 +134,7 @@ pub fn run_cell(grid: &FleetGridCfg, c: &FleetCell) -> FleetGridRow {
         empty_rounds: report.empty_rounds(),
         mean_makespan_ms: report.mean_makespan_ms(),
         mean_period_ms: report.mean_period_ms(),
+        mean_churn_frac: report.mean_churn_frac(),
         total_work_units: report.total_work_units(),
     }
 }
@@ -142,10 +153,10 @@ pub fn run(cfg: &FleetGridCfg) -> Vec<FleetGridRow> {
     pool::run_parallel(cfg.threads, jobs)
 }
 
-/// Serialize rows to the deterministic fleet-grid JSON document.
+/// Serialize rows to the deterministic fleet-grid JSON document under
+/// the registry envelope ([`super::artifact::envelope`]).
 pub fn rows_to_json(rows: &[FleetGridRow]) -> Json {
-    Json::obj(vec![
-        ("kind", Json::Str("psl-fleet-grid".to_string())),
+    super::artifact::envelope(super::artifact::ArtifactKind::FleetGrid, vec![
         (
             "rows",
             Json::Arr(
@@ -166,6 +177,7 @@ pub fn rows_to_json(rows: &[FleetGridRow]) -> Json {
                             ("empty_rounds", Json::Num(r.empty_rounds as f64)),
                             ("mean_makespan_ms", Json::Num(r.mean_makespan_ms)),
                             ("mean_period_ms", Json::Num(r.mean_period_ms)),
+                            ("mean_churn_frac", Json::Num(r.mean_churn_frac)),
                             ("total_work_units", Json::Str(r.total_work_units.to_string())),
                         ])
                     })
@@ -194,8 +206,20 @@ mod tests {
             seeds: vec![7],
             rounds: 5,
             slot_ms: Some(550.0),
+            policy_table: None,
             threads,
         }
+    }
+
+    #[test]
+    fn grid_propagates_policy_table_to_auto_cells() {
+        let mut cfg = tiny(1);
+        cfg.policies = vec![Policy::Auto];
+        cfg.policy_table = Some(crate::fleet::policy::PolicyTable::builtin());
+        let cs = cells(&cfg);
+        let cell = cell_cfg(&cfg, &cs[0]);
+        assert_eq!(cell.policy, Policy::Auto);
+        assert_eq!(cell.policy_table, cfg.policy_table);
     }
 
     #[test]
@@ -227,7 +251,11 @@ mod tests {
             assert_eq!(row.seed, cell.seed);
             assert_eq!(row.rounds, 5);
             assert_eq!(row.full_rounds + row.repair_rounds + row.empty_rounds, row.rounds);
+            assert!(row.mean_churn_frac.is_finite() && row.mean_churn_frac >= 0.0, "{row:?}");
         }
+        // The event stream is policy-independent, so both arms of the same
+        // (scenario, churn, seed) cell observe identical churn fractions.
+        assert_eq!(rows[0].mean_churn_frac, rows[1].mean_churn_frac);
     }
 
     #[test]

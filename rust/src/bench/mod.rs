@@ -2,26 +2,24 @@
 //! bench` with `harness = false`) — see DESIGN.md §4 for the table/figure
 //! mapping — plus the multi-threaded scenario × solver sweep runner
 //! behind `psl sweep` ([`sweep`]), the fleet-orchestration grid behind
-//! `psl fleet --grid` ([`fleet`]), and the solve/check/replay perf
-//! trajectory behind `psl perf` ([`perf`]).
+//! `psl fleet --grid` ([`fleet`]), the solve/check/replay perf trajectory
+//! behind `psl perf` ([`perf`]), and the shared `target/psl-bench`
+//! artifact registry ([`artifact`]) every writer and reader goes through.
 
+pub mod artifact;
 pub mod fleet;
 pub mod harness;
 pub mod perf;
 pub mod sweep;
 
+pub use artifact::{ArtifactKind, SCHEMA_VERSION};
 pub use fleet::{FleetGridCfg, FleetGridRow};
 pub use harness::{fmt_s, time_fn, Report};
 pub use perf::{PerfCfg, PerfRow};
 pub use sweep::{SweepCfg, SweepRow};
 
-/// Write a deterministic JSON artifact under
-/// `target/psl-bench/<name>.json` (the single location every runner —
-/// sweep, fleet, fleet grid — persists to). Returns the path.
+/// Write a deterministic JSON artifact under `target/psl-bench/<name>.json`
+/// (delegates to [`artifact::save`], kept as the historical entry point).
 pub fn save_artifact(name: &str, doc: &crate::util::json::Json) -> std::io::Result<std::path::PathBuf> {
-    let dir = std::path::Path::new("target/psl-bench");
-    std::fs::create_dir_all(dir)?;
-    let path = dir.join(format!("{name}.json"));
-    std::fs::write(&path, doc.pretty())?;
-    Ok(path)
+    artifact::save(name, doc)
 }

@@ -58,6 +58,29 @@ impl Default for PerfCfg {
 }
 
 impl PerfCfg {
+    /// The extended grid behind `psl perf --full`: a strict superset of
+    /// the default grid (every default cell stays, so a `--full` point
+    /// still diffs cleanly against earlier default-grid points) plus the
+    /// heterogeneous families at an ADMM-heavy size — (48, 6) keeps
+    /// every family under the §VII greedy cutoff, so the preemptive ADMM
+    /// solve path is what gets timed — and a J=512 cell that stresses
+    /// the O(runs)-vs-O(slots) read paths beyond the default 256.
+    pub fn full() -> PerfCfg {
+        PerfCfg {
+            scenarios: vec![
+                Scenario::S1,
+                Scenario::S2,
+                Scenario::S3Clustered,
+                Scenario::S6MegaHomogeneous,
+            ],
+            model: Model::ResNet101,
+            sizes: vec![(32, 4), (48, 6), (256, 16), (512, 32)],
+            seed: 42,
+            iters: 3,
+            warmup: 1,
+        }
+    }
+
     /// Tiny grid for CI: one rep, small fleets, still exercises every
     /// phase (including the dense baselines and the equivalence assert).
     pub fn smoke() -> PerfCfg {
@@ -357,10 +380,10 @@ pub fn validate(rows: &[PerfRow]) -> anyhow::Result<()> {
     Ok(())
 }
 
-/// Serialize to the perf artifact (kind "psl-perf").
+/// Serialize to the perf artifact (kind "psl-perf") under the registry
+/// envelope ([`super::artifact::envelope`]).
 pub fn rows_to_json(rows: &[PerfRow]) -> Json {
-    Json::obj(vec![
-        ("kind", Json::Str("psl-perf".to_string())),
+    super::artifact::envelope(super::artifact::ArtifactKind::Perf, vec![
         (
             "rows",
             Json::Arr(
@@ -428,6 +451,32 @@ mod tests {
         assert!(schedule.is_feasible(&inst));
         let (df, db) = to_dense(&schedule);
         assert_eq!(violations_dense(&inst, &schedule.assignment.helper_of, &df, &db), 0);
+    }
+
+    #[test]
+    fn full_grid_is_a_strict_superset_of_the_default() {
+        let full = PerfCfg::full();
+        let dflt = PerfCfg::default();
+        for size in &dflt.sizes {
+            assert!(full.sizes.contains(size), "default cell {size:?} must stay in --full");
+        }
+        for scenario in &dflt.scenarios {
+            assert!(full.scenarios.contains(scenario), "default family {scenario:?} must stay in --full");
+        }
+        assert!(full.sizes.contains(&(48, 6)), "the ADMM-heavy size");
+        assert!(full.sizes.contains(&(512, 32)), "the new large cell");
+        assert!(full.scenarios.contains(&Scenario::S3Clustered), "heterogeneous family added");
+        assert_eq!(full.seed, dflt.seed, "same seed as the default trajectory");
+    }
+
+    #[test]
+    fn full_grid_admm_heavy_cell_routes_to_admm() {
+        // (48, 6) sits under the §VII greedy cutoff, so the heterogeneous
+        // families exercise the preemptive ADMM solve path in `--full`.
+        for scenario in [Scenario::S2, Scenario::S3Clustered] {
+            let inst = ScenarioCfg::new(scenario, Model::ResNet101, 48, 6, 42).generate().quantize(180.0);
+            assert_eq!(strategy::pick(&inst), strategy::Method::Admm, "{}", scenario.name());
+        }
     }
 
     #[test]

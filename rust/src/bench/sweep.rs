@@ -185,10 +185,10 @@ fn opt_u32(v: Option<u32>) -> Json {
 }
 
 /// Serialize rows to the sweep JSON document (deterministic: BTreeMap
-/// keys, no timestamps, no wall-clock fields).
+/// keys, no timestamps, no wall-clock fields) under the registry
+/// envelope ([`super::artifact::envelope`]).
 pub fn rows_to_json(rows: &[SweepRow]) -> Json {
-    Json::obj(vec![
-        ("kind", Json::Str("psl-sweep".to_string())),
+    super::artifact::envelope(super::artifact::ArtifactKind::Sweep, vec![
         (
             "rows",
             Json::Arr(
@@ -266,9 +266,8 @@ pub struct DiffReport {
 fn index_rows(doc: &Json) -> anyhow::Result<std::collections::BTreeMap<String, Option<f64>>> {
     // Other target/psl-bench artifacts (fleet, fleet-grid) also carry a
     // rows[]/detail array; diffing one here would silently compare
-    // nothing, so pin the kind.
-    let kind = doc.get("kind").as_str().unwrap_or("");
-    anyhow::ensure!(kind == "psl-sweep", "not a sweep artifact (kind {kind:?}, expected \"psl-sweep\")");
+    // nothing, so pin the kind through the registry.
+    super::artifact::expect_kind(doc, super::artifact::ArtifactKind::Sweep)?;
     let rows = doc.get("rows").as_arr().ok_or_else(|| anyhow::anyhow!("not a sweep artifact: missing rows[]"))?;
     let mut out = std::collections::BTreeMap::new();
     for r in rows {

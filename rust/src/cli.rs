@@ -9,7 +9,9 @@
 //!   psl sweep <grid args>             multi-threaded scenario × solver grid
 //!   psl sweep --diff <old> <new>      compare two sweep artifacts
 //!   psl fleet <churn args>            multi-round churn orchestration
-//!   psl perf [--smoke]                solve/check/replay perf trajectory
+//!   psl perf [--smoke|--full]         solve/check/replay perf trajectory
+//!   psl analyze <grid.json>           regime tables + policy frontier
+//!   psl analyze --perf-diff OLD NEW   perf trajectory gate
 //!
 //! Common scenario args: --scenario 1..6  --model resnet101|vgg19  -j N
 //! -i N  --seed S  --slot-ms X. Run `psl help` for the full list.
@@ -105,6 +107,15 @@ COMMANDS
                 families and sizes, compare the run-length schedule
                 representation against the dense baseline, and write the
                 perf-trajectory artifact target/psl-bench/perf.json.
+  analyze       Consume target/psl-bench artifacts: aggregate a fleet
+                grid into per-family regime tables, compute the
+                churn-rate policy frontier (where full re-solving
+                overtakes incremental repair) and save it as a
+                psl-policy-table artifact for `fleet --policy auto`.
+                With --perf-diff OLD NEW: compare two perf artifacts and
+                exit non-zero on solve/check/replay slowdowns. With
+                --rounds FILE: per-decision summary of a fleet
+                .rounds.jsonl sidecar.
   help          This text.
 
 SCENARIO FLAGS (gen/solve/sweep-slots)
@@ -142,7 +153,10 @@ defaults to s4-straggler-tail)
   --depart-prob P       per-client departure prob      [default 0.12]
   --arrival-rate R      expected arrivals per round    [default P*J]
   --max-clients N       roster-size cap                [default 2*J]
-  --policy NAME         incremental|full|repair-only   [default incremental]
+  --policy NAME         incremental|full|repair-only|auto [default incremental]
+  --policy-table FILE   measured frontier table for --policy auto
+                        (psl-policy-table artifact from `psl analyze`;
+                        default: the builtin table)
   --churn-threshold F   full re-solve when membership delta > F  [0.35]
   --gap-threshold F     full re-solve when repair gap > F x last full [1.75]
   --batches B           batches for the epoch period metric      [8]
@@ -150,8 +164,10 @@ defaults to s4-straggler-tail)
   --grid                run the scenario x churn-rate x policy grid
                         (--scenarios, --churn-rates, --policies, --seeds,
                         --threads as in sweep; --out default fleet-grid;
-                        single-run knobs like --policy/--depart-prob are
-                        rejected — cells use stationary defaults)
+                        --policy-table feeds auto cells when --policies
+                        includes auto; other single-run knobs like
+                        --policy/--depart-prob are rejected — cells use
+                        stationary defaults)
 
 PERF FLAGS
   --scenarios LIST      comma list of families         [default 1,2,6]
@@ -160,7 +176,17 @@ PERF FLAGS
   --seed S              RNG seed                       [default 42]
   --iters N             timed reps per phase           [default 3]
   --smoke               tiny CI grid (8x2, 1 rep)
+  --full                extended grid: + ADMM-heavy heterogeneous cells
+                        at 48x6 and a 512x32 cell
   --out NAME            output name under target/psl-bench [default perf]
+
+ANALYZE FLAGS
+  <grid.json>           positional: a psl-fleet-grid artifact to analyze
+  --out NAME            policy-table output name       [default policy-table]
+  --perf-diff OLD NEW   diff two psl-perf artifacts instead
+  --tol X               relative timing tolerance      [default 0.25]
+  --rounds FILE         summarize a fleet .rounds.jsonl sidecar per
+                        decision instead
 
 SOLVE FLAGS
   --method admm|greedy|baseline|exact|strategy|all     [default all]

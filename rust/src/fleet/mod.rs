@@ -15,6 +15,7 @@
 //! |---|---|
 //! | [`events`] | seeded arrival/departure stream, stable client ids, roster cap |
 //! | [`orchestrator`] | round loop, warm-start repair, churn/gap fallback policy |
+//! | [`policy`] | measured churn-frontier [`PolicyTable`] behind the `auto` policy |
 //! | [`report`] | per-round + summary JSON under `target/psl-bench/` |
 //!
 //! Clients are minted by the
@@ -29,8 +30,10 @@
 
 pub mod events;
 pub mod orchestrator;
+pub mod policy;
 pub mod report;
 
 pub use events::{ChurnCfg, RoundEvents};
 pub use orchestrator::{run, run_streaming, Decision, FleetCfg, Policy};
+pub use policy::{PolicyEntry, PolicyTable};
 pub use report::{FleetReport, RoundReport};

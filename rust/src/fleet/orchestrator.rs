@@ -22,7 +22,10 @@
 //! solve achieved — absolute gaps are scenario-shaped (a straggler tail
 //! inflates every round's gap), the *relative drift* is not. The
 //! `repair-only` policy disables both (the no-fallback ablation arm in
-//! the fleet grid).
+//! the fleet grid), and the `auto` policy replaces the static churn
+//! threshold with the **measured frontier** of a
+//! [`PolicyTable`](super::policy::PolicyTable) — per scenario family and
+//! fleet size — while keeping the gap safety net.
 //!
 //! Everything is deterministic in the scenario tuple + churn knobs: no
 //! wall-clock enters any decision, and re-solve cost is reported as a
@@ -31,6 +34,7 @@
 //! [`FleetWorld`]: crate::instance::scenario::FleetWorld
 
 use super::events::{self, ChurnCfg, RoundEvents};
+use super::policy::PolicyTable;
 use super::report::{FleetReport, RoundReport};
 use crate::instance::scenario::{FleetClient, FleetWorld, ScenarioCfg};
 use crate::instance::Instance;
@@ -51,16 +55,21 @@ pub enum Policy {
     FullEveryRound,
     /// Repair always, never fall back (the no-fallback ablation arm).
     RepairOnly,
+    /// Data-driven: consult a measured [`PolicyTable`] per round and go
+    /// full when the observed churn crosses the family's frontier (the
+    /// lower-bound-gap safety net stays active, as under `Incremental`).
+    Auto,
 }
 
 impl Policy {
-    pub const ALL: [Policy; 3] = [Policy::Incremental, Policy::FullEveryRound, Policy::RepairOnly];
+    pub const ALL: [Policy; 4] = [Policy::Incremental, Policy::FullEveryRound, Policy::RepairOnly, Policy::Auto];
 
     pub fn name(self) -> &'static str {
         match self {
             Policy::Incremental => "incremental",
             Policy::FullEveryRound => "full",
             Policy::RepairOnly => "repair-only",
+            Policy::Auto => "auto",
         }
     }
 
@@ -69,6 +78,7 @@ impl Policy {
             "incremental" | "inc" => Some(Policy::Incremental),
             "full" | "full-every-round" => Some(Policy::FullEveryRound),
             "repair-only" | "repair" => Some(Policy::RepairOnly),
+            "auto" => Some(Policy::Auto),
             _ => None,
         }
     }
@@ -92,6 +102,9 @@ pub struct FleetCfg {
     pub gap_threshold: f64,
     /// Batches replayed per round for the epoch-pipelined period metric.
     pub epoch_batches: usize,
+    /// Measured frontier table consulted by [`Policy::Auto`] (ignored by
+    /// the other policies). `None` → [`PolicyTable::builtin`].
+    pub policy_table: Option<PolicyTable>,
 }
 
 impl FleetCfg {
@@ -107,6 +120,7 @@ impl FleetCfg {
             // for *severe* drift. The fleet grid quantifies the tradeoff.
             gap_threshold: 1.75,
             epoch_batches: 8,
+            policy_table: None,
         }
     }
 
@@ -126,6 +140,10 @@ pub enum Decision {
     FullPolicy,
     /// Churn fraction crossed `churn_threshold`.
     FullChurn,
+    /// The `auto` policy's measured frontier fired for this round's
+    /// observed churn (distinct from `FullChurn` so grid analyses can
+    /// separate the static threshold from the data-driven one).
+    FullAuto,
     /// Repaired makespan drifted past `gap_threshold` × the last full
     /// solve's lower-bound gap.
     FullGap,
@@ -145,6 +163,7 @@ impl Decision {
             Decision::FullInitial => "full-initial",
             Decision::FullPolicy => "full-policy",
             Decision::FullChurn => "full-churn",
+            Decision::FullAuto => "full-auto",
             Decision::FullGap => "full-gap",
             Decision::FullInfeasible => "full-infeasible",
             Decision::Repair => "repair",
@@ -158,6 +177,7 @@ impl Decision {
             Decision::FullInitial
                 | Decision::FullPolicy
                 | Decision::FullChurn
+                | Decision::FullAuto
                 | Decision::FullGap
                 | Decision::FullInfeasible
         )
@@ -318,6 +338,14 @@ pub fn run_on_stream_streaming(
 ) -> FleetReport {
     let admm_cfg = AdmmCfg::default();
     let slot_ms = cfg.slot_ms();
+    // The auto policy's frontier table, resolved once: an explicit table
+    // wins, else the builtin shipped with the binary.
+    let builtin_table = if cfg.policy == Policy::Auto && cfg.policy_table.is_none() {
+        Some(PolicyTable::builtin())
+    } else {
+        None
+    };
+    let table = cfg.policy_table.as_ref().or(builtin_table.as_ref());
     let mut minted: BTreeMap<u64, FleetClient> = BTreeMap::new();
     let mut prev_assign: BTreeMap<u64, usize> = BTreeMap::new();
     let mut prev_roster_len = 0usize;
@@ -335,6 +363,23 @@ pub fn run_on_stream_streaming(
         let churn_frac = ev.churn_fraction(prev_roster_len);
         let lb_raw = inst.makespan_lower_bound();
         let lb = lb_raw.max(1);
+        // The auto policy's per-round consult (None for other policies or
+        // when nothing fires). A measured frontier firing is FullAuto; a
+        // family the table does not cover falls back to the static churn
+        // threshold and is recorded as FullChurn, so decision analyses
+        // can separate data-driven re-solves from the fallback.
+        let auto_full: Option<Decision> = if cfg.policy == Policy::Auto {
+            table.and_then(|t| match t.lookup(&cfg.scenario.spec.name, roster.len(), inst.n_helpers) {
+                Some(entry) => match entry.frontier_churn {
+                    Some(frontier) if churn_frac >= frontier => Some(Decision::FullAuto),
+                    _ => None,
+                },
+                None if churn_frac > cfg.churn_threshold => Some(Decision::FullChurn),
+                None => None,
+            })
+        } else {
+            None
+        };
         let full_solve = |work_base: u64| -> ((Schedule, Option<strategy::Method>), u64) {
             // The wedge-free world guarantees a greedy assignment exists,
             // so a full solve can never come up empty.
@@ -354,13 +399,18 @@ pub fn run_on_stream_streaming(
         } else if cfg.policy == Policy::Incremental && churn_frac > cfg.churn_threshold {
             let (s, w) = full_solve(0);
             (Decision::FullChurn, Some(s), 0, 0, w)
+        } else if let Some(d) = auto_full {
+            let (s, w) = full_solve(0);
+            (d, Some(s), 0, 0, w)
         } else {
             let mut work = 0u64;
             match repair_assignment(&inst, &ev.roster, &prev_assign, &mut work) {
                 Some(rep) => {
                     let s = fcfs_schedule(&inst, rep.assignment);
                     let gap = s.makespan(&inst) as f64 / lb as f64;
-                    if cfg.policy == Policy::Incremental && gap > cfg.gap_threshold * last_full_gap {
+                    if matches!(cfg.policy, Policy::Incremental | Policy::Auto)
+                        && gap > cfg.gap_threshold * last_full_gap
+                    {
                         // The repair is discarded: report no repair stats
                         // for the kept schedule, but its effort still
                         // counts in the work proxy (it was spent).
@@ -541,5 +591,100 @@ mod tests {
             assert_eq!(Policy::parse(p.name()), Some(p), "{}", p.name());
         }
         assert_eq!(Policy::parse("nope"), None);
+    }
+
+    /// Hand-built three-round stream: heavy churn into round 1 (4/6 ≈
+    /// 0.67), zero churn into round 2.
+    fn auto_stream() -> Vec<RoundEvents> {
+        vec![
+            RoundEvents { round: 0, departures: vec![], arrivals: vec![], roster: vec![0, 1, 2, 3, 4, 5] },
+            RoundEvents { round: 1, departures: vec![0, 1], arrivals: vec![6, 7], roster: vec![2, 3, 4, 5, 6, 7] },
+            RoundEvents { round: 2, departures: vec![], arrivals: vec![], roster: vec![2, 3, 4, 5, 6, 7] },
+        ]
+    }
+
+    fn auto_cfg(scenario: Scenario, table: Option<crate::fleet::policy::PolicyTable>) -> FleetCfg {
+        let scen = ScenarioCfg::new(scenario, Model::ResNet101, 6, 2, 5);
+        let churn = ChurnCfg { rounds: 3, arrival_rate: 0.0, departure_prob: 0.0, max_clients: 12 };
+        let mut cfg = FleetCfg::new(scen, churn, Policy::Auto);
+        cfg.policy_table = table;
+        // These tests pin the frontier consult; disarm the gap safety net
+        // so FCFS-vs-full drift can't turn a repair round into full-gap.
+        cfg.gap_threshold = f64::MAX;
+        cfg
+    }
+
+    #[test]
+    fn auto_policy_goes_full_past_the_table_frontier_and_repairs_below() {
+        use crate::fleet::policy::{PolicyEntry, PolicyTable};
+        let table = PolicyTable::new(
+            "test".into(),
+            vec![PolicyEntry { scenario: "scenario1".into(), n_clients: 6, n_helpers: 2, frontier_churn: Some(0.25) }],
+        );
+        let cfg = auto_cfg(Scenario::S1, Some(table));
+        let world = cfg.scenario.fleet_world(12);
+        let r = run_on_stream(&cfg, &world, &auto_stream());
+        assert_eq!(r.rounds[0].decision, "full-initial");
+        assert_eq!(r.rounds[1].decision, "full-auto", "churn 0.67 >= frontier 0.25");
+        assert_eq!(r.rounds[2].decision, "repair", "churn 0 < frontier 0.25");
+        assert_eq!(r.policy, "auto");
+    }
+
+    #[test]
+    fn auto_policy_open_frontier_never_fulls_on_churn() {
+        use crate::fleet::policy::{PolicyEntry, PolicyTable};
+        // frontier None = incremental won at every measured rate.
+        let table = PolicyTable::new(
+            "test".into(),
+            vec![PolicyEntry { scenario: "scenario1".into(), n_clients: 6, n_helpers: 2, frontier_churn: None }],
+        );
+        let cfg = auto_cfg(Scenario::S1, Some(table));
+        let world = cfg.scenario.fleet_world(12);
+        let r = run_on_stream(&cfg, &world, &auto_stream());
+        for x in r.rounds.iter().skip(1) {
+            assert_eq!(x.decision, "repair", "round {}: {}", x.round, x.decision);
+        }
+    }
+
+    #[test]
+    fn auto_policy_unknown_family_falls_back_to_static_threshold_as_full_churn() {
+        use crate::fleet::policy::{PolicyEntry, PolicyTable};
+        // Table knows only scenario2 → scenario1 rounds fall back to the
+        // static churn_threshold (0.35 < 0.67 → full), recorded as
+        // full-churn (NOT full-auto: no measured frontier fired).
+        let table = PolicyTable::new(
+            "test".into(),
+            vec![PolicyEntry { scenario: "scenario2".into(), n_clients: 6, n_helpers: 2, frontier_churn: Some(0.9) }],
+        );
+        let cfg = auto_cfg(Scenario::S1, Some(table));
+        let world = cfg.scenario.fleet_world(12);
+        let r = run_on_stream(&cfg, &world, &auto_stream());
+        assert_eq!(r.rounds[1].decision, "full-churn");
+        assert_eq!(r.rounds[2].decision, "repair");
+    }
+
+    #[test]
+    fn auto_policy_defaults_to_builtin_table() {
+        // s4-straggler-tail is in the builtin table with frontier 0.3
+        // (observed-fraction units): the heavy-churn round goes full
+        // without any table configured.
+        let cfg = auto_cfg(Scenario::S4StragglerTail, None);
+        let world = cfg.scenario.fleet_world(12);
+        let r = run_on_stream(&cfg, &world, &auto_stream());
+        assert_eq!(r.rounds[1].decision, "full-auto", "builtin frontier 0.3 < churn 0.67");
+        assert_eq!(r.rounds[2].decision, "repair");
+    }
+
+    #[test]
+    fn auto_runs_are_deterministic() {
+        let mk = || {
+            let scen = ScenarioCfg::new(Scenario::S4StragglerTail, Model::Vgg19, 10, 3, 7);
+            let mut churn = ChurnCfg::stationary(10);
+            churn.rounds = 8;
+            FleetCfg::new(scen, churn, Policy::Auto)
+        };
+        let a = run(&mk());
+        let b = run(&mk());
+        assert_eq!(a.to_json().pretty(), b.to_json().pretty(), "same seed + table → byte-identical report");
     }
 }

@@ -1,0 +1,276 @@
+//! The data-driven `auto` re-solve policy: a [`PolicyTable`] maps
+//! (scenario family, fleet size) to the **churn-rate frontier** where a
+//! full re-solve overtakes incremental repair, and the orchestrator
+//! consults it per round instead of a hard-coded churn threshold.
+//!
+//! Tables are *measured*, not designed: [`crate::analyze`] computes them
+//! from a `psl fleet --grid` artifact by finding, per family × size, the
+//! lowest grid churn rate at which the `full` arm's work-discounted
+//! makespan beats the `incremental` arm's (the §VII strategy rule,
+//! rebuilt empirically at the fleet layer). A [`builtin`](PolicyTable::builtin)
+//! table derived from the default grid ships with the binary so
+//! `psl fleet --policy auto` works out of the box; `--policy-table PATH`
+//! swaps in a freshly measured one.
+//!
+//! Serialization uses the artifact registry
+//! ([`crate::bench::artifact`], kind `psl-policy-table`), so the table
+//! `psl analyze` writes is byte-stable and directly loadable here.
+
+use crate::bench::artifact::{self, ArtifactKind};
+use crate::util::json::Json;
+use anyhow::{Context, Result};
+
+/// One measured regime: for this scenario family at this fleet size,
+/// full re-solving starts winning at `frontier_churn`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PolicyEntry {
+    /// Scenario family name (`Scenario::name`, or a custom spec's name).
+    pub scenario: String,
+    /// Base fleet size of the measured grid cell.
+    pub n_clients: usize,
+    pub n_helpers: usize,
+    /// *Observed* per-round churn fraction (membership delta over the
+    /// previous roster — the orchestrator's `churn_frac` signal, ≈ 2×
+    /// the grid's stationary rate axis) at/above which a full re-solve
+    /// wins. `None` = incremental won at every measured churn rate
+    /// (never trigger full from churn alone; the gap safety net still
+    /// applies).
+    pub frontier_churn: Option<f64>,
+}
+
+/// The serialized policy frontier consumed by `Policy::Auto`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PolicyTable {
+    /// Provenance label — "builtin" or the grid artifact it was computed
+    /// from. Informational only; never enters decisions.
+    pub source: String,
+    /// Sorted by (scenario, n_clients, n_helpers) for determinism.
+    pub entries: Vec<PolicyEntry>,
+}
+
+impl PolicyTable {
+    pub fn new(source: String, mut entries: Vec<PolicyEntry>) -> PolicyTable {
+        entries.sort_by(|a, b| {
+            (&a.scenario, a.n_clients, a.n_helpers).cmp(&(&b.scenario, b.n_clients, b.n_helpers))
+        });
+        PolicyTable { source, entries }
+    }
+
+    /// The table shipped with the binary, covering the default
+    /// `psl fleet --grid` axes (scenario1 / s4-straggler-tail at 10×2,
+    /// churn rates 0.05 / 0.15 / 0.3 — observed per-round fractions ≈
+    /// 0.1 / 0.3 / 0.6 under the stationary mapping).
+    ///
+    /// **These values are PROVISIONAL, not measured**: they encode the
+    /// expected shape (the low-heterogeneity family's cheap full solves
+    /// only pay off at heavy churn; the straggler-tail family's
+    /// preemptive full solves win from moderate churn up) but were never
+    /// produced by an actual grid run — replace them with the output of
+    /// `psl analyze <fleet-grid.json>` on a real multi-seed grid and
+    /// update the golden snapshot in `tests/analyze_policy.rs`
+    /// (tracked in ROADMAP.md).
+    pub fn builtin() -> PolicyTable {
+        PolicyTable::new(
+            "builtin".to_string(),
+            vec![
+                PolicyEntry {
+                    scenario: "scenario1".to_string(),
+                    n_clients: 10,
+                    n_helpers: 2,
+                    frontier_churn: Some(0.6),
+                },
+                PolicyEntry {
+                    scenario: "s4-straggler-tail".to_string(),
+                    n_clients: 10,
+                    n_helpers: 2,
+                    frontier_churn: Some(0.3),
+                },
+            ],
+        )
+    }
+
+    /// The frontier governing a round: the entry of the same scenario
+    /// family whose measured size is closest to the live fleet — client
+    /// count first (the axis rosters actually move along), helper count
+    /// as the secondary distance, final ties toward the smaller measured
+    /// size. Returns `None` when the table has no entry for the family
+    /// at all — the orchestrator then falls back to its static churn
+    /// threshold (recorded as `full-churn`, not `full-auto`, so analyses
+    /// can separate data-driven decisions from the fallback).
+    pub fn lookup(&self, scenario: &str, n_clients: usize, n_helpers: usize) -> Option<&PolicyEntry> {
+        self.entries
+            .iter()
+            .filter(|e| e.scenario == scenario)
+            .min_by_key(|e| {
+                (
+                    e.n_clients.abs_diff(n_clients),
+                    e.n_helpers.abs_diff(n_helpers),
+                    e.n_clients,
+                    e.n_helpers,
+                )
+            })
+    }
+
+    // ---- serialization ---------------------------------------------------
+
+    pub fn to_json(&self) -> Json {
+        artifact::envelope(ArtifactKind::PolicyTable, vec![
+            ("source", Json::Str(self.source.clone())),
+            (
+                "entries",
+                Json::Arr(
+                    self.entries
+                        .iter()
+                        .map(|e| {
+                            Json::obj(vec![
+                                ("scenario", Json::Str(e.scenario.clone())),
+                                ("n_clients", Json::Num(e.n_clients as f64)),
+                                ("n_helpers", Json::Num(e.n_helpers as f64)),
+                                (
+                                    "frontier_churn",
+                                    e.frontier_churn.map(Json::Num).unwrap_or(Json::Null),
+                                ),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    pub fn from_json(doc: &Json) -> Result<PolicyTable> {
+        artifact::expect_kind(doc, ArtifactKind::PolicyTable)?;
+        let source = doc.get("source").as_str().unwrap_or("unknown").to_string();
+        let rows = doc.get("entries").as_arr().context("policy table missing entries[]")?;
+        let mut entries = Vec::with_capacity(rows.len());
+        for (k, e) in rows.iter().enumerate() {
+            // A missing key reads as Null; only frontier_churn may be null.
+            let frontier = match e.get("frontier_churn") {
+                Json::Null => None,
+                v => {
+                    let f = v.as_f64().with_context(|| format!("entry {k}: bad frontier_churn {v}"))?;
+                    anyhow::ensure!(
+                        f.is_finite() && f >= 0.0,
+                        "entry {k}: frontier_churn {f} must be finite and >= 0"
+                    );
+                    Some(f)
+                }
+            };
+            entries.push(PolicyEntry {
+                scenario: e
+                    .get("scenario")
+                    .as_str()
+                    .with_context(|| format!("entry {k}: missing/bad scenario"))?
+                    .to_string(),
+                n_clients: e.get("n_clients").as_usize().with_context(|| format!("entry {k}: missing/bad n_clients"))?,
+                n_helpers: e.get("n_helpers").as_usize().with_context(|| format!("entry {k}: missing/bad n_helpers"))?,
+                frontier_churn: frontier,
+            });
+        }
+        Ok(PolicyTable::new(source, entries))
+    }
+
+    /// Load from a file through the registry ([`artifact::load_expecting`]).
+    pub fn load(path: &str) -> Result<PolicyTable> {
+        PolicyTable::from_json(&artifact::load_expecting(path, ArtifactKind::PolicyTable)?)
+    }
+
+    /// Persist under `target/psl-bench/<name>.json`. Returns the path.
+    pub fn save(&self, name: &str) -> std::io::Result<std::path::PathBuf> {
+        artifact::save(name, &self.to_json())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn table() -> PolicyTable {
+        PolicyTable::new(
+            "test".to_string(),
+            vec![
+                PolicyEntry { scenario: "scenario1".into(), n_clients: 10, n_helpers: 2, frontier_churn: Some(0.3) },
+                PolicyEntry { scenario: "scenario1".into(), n_clients: 40, n_helpers: 4, frontier_churn: Some(0.2) },
+                PolicyEntry { scenario: "s5-memory-starved".into(), n_clients: 10, n_helpers: 2, frontier_churn: None },
+            ],
+        )
+    }
+
+    #[test]
+    fn entries_sort_canonically() {
+        let t = table();
+        assert_eq!(t.entries[0].n_clients, 10);
+        assert_eq!(t.entries[1].n_clients, 40);
+        assert_eq!(t.entries[2].scenario, "s5-memory-starved");
+    }
+
+    #[test]
+    fn lookup_picks_nearest_size_within_family() {
+        let t = table();
+        assert_eq!(t.lookup("scenario1", 12, 2).unwrap().n_clients, 10);
+        assert_eq!(t.lookup("scenario1", 30, 4).unwrap().n_clients, 40);
+        // Client counts equidistant (25 from both) → the run's helper
+        // count breaks the tie toward the matching measurement.
+        assert_eq!(t.lookup("scenario1", 25, 4).unwrap().n_clients, 40);
+        assert_eq!(t.lookup("scenario1", 25, 2).unwrap().n_clients, 10);
+        // Helper count also equidistant (3 from both) → smaller size.
+        assert_eq!(t.lookup("scenario1", 25, 3).unwrap().n_clients, 10);
+        assert!(t.lookup("scenario2", 10, 2).is_none());
+    }
+
+    #[test]
+    fn lookup_exposes_open_frontiers_and_misses_distinctly() {
+        let t = table();
+        // Covered family with a measured frontier.
+        assert_eq!(t.lookup("scenario1", 10, 2).unwrap().frontier_churn, Some(0.3));
+        // Covered family where incremental won everywhere → Some(entry)
+        // with an open (None) frontier — not the same as a table miss.
+        assert_eq!(t.lookup("s5-memory-starved", 10, 2).unwrap().frontier_churn, None);
+        // Unknown family → None (the orchestrator's static fallback).
+        assert!(t.lookup("scenario2", 10, 2).is_none());
+    }
+
+    #[test]
+    fn json_roundtrip_is_exact() {
+        let t = table();
+        let doc = t.to_json();
+        assert_eq!(doc.get("kind").as_str(), Some("psl-policy-table"));
+        let back = PolicyTable::from_json(&Json::parse(&doc.pretty()).unwrap()).unwrap();
+        assert_eq!(back, t);
+        assert_eq!(back.to_json().pretty(), doc.pretty(), "roundtrip is byte-stable");
+    }
+
+    #[test]
+    fn from_json_rejects_malformed_tables() {
+        assert!(PolicyTable::from_json(&Json::Num(1.0)).is_err());
+        let wrong_kind = artifact::envelope(ArtifactKind::Sweep, vec![("entries", Json::Arr(vec![]))]);
+        assert!(PolicyTable::from_json(&wrong_kind).is_err());
+        let bad_entry = artifact::envelope(ArtifactKind::PolicyTable, vec![
+            ("source", Json::Str("x".into())),
+            ("entries", Json::Arr(vec![Json::obj(vec![("scenario", Json::Str("s".into()))])])),
+        ]);
+        let err = PolicyTable::from_json(&bad_entry).unwrap_err().to_string();
+        assert!(err.contains("n_clients"), "{err}");
+        let bad_frontier = artifact::envelope(ArtifactKind::PolicyTable, vec![
+            ("source", Json::Str("x".into())),
+            (
+                "entries",
+                Json::Arr(vec![Json::obj(vec![
+                    ("scenario", Json::Str("s".into())),
+                    ("n_clients", Json::Num(4.0)),
+                    ("n_helpers", Json::Num(2.0)),
+                    ("frontier_churn", Json::Str("lots".into())),
+                ])]),
+            ),
+        ]);
+        assert!(PolicyTable::from_json(&bad_frontier).is_err());
+    }
+
+    #[test]
+    fn builtin_covers_default_grid_families() {
+        let t = PolicyTable::builtin();
+        assert_eq!(t.source, "builtin");
+        assert!(t.lookup("scenario1", 10, 2).is_some());
+        assert!(t.lookup("s4-straggler-tail", 10, 2).is_some());
+    }
+}

@@ -13,8 +13,8 @@ pub struct RoundReport {
     pub n_clients: usize,
     pub arrivals: usize,
     pub departures: usize,
-    /// "full-initial" | "full-policy" | "full-churn" | "full-gap" |
-    /// "full-infeasible" | "repair" | "empty" (see
+    /// "full-initial" | "full-policy" | "full-churn" | "full-auto" |
+    /// "full-gap" | "full-infeasible" | "repair" | "empty" (see
     /// `orchestrator::Decision`).
     pub decision: &'static str,
     /// §VII method the strategy routed to on full rounds (None for
@@ -128,9 +128,23 @@ impl FleetReport {
         self.rounds.iter().map(|r| r.work_units).sum()
     }
 
+    /// Mean *observed* membership-churn fraction over rounds after the
+    /// first (round 0 has no previous roster to churn against). This is
+    /// the unit the analyze frontier — and therefore the `auto` policy's
+    /// per-round comparison — is measured in; note it is roughly twice
+    /// the grid's stationary churn-rate axis (departures at rate r plus
+    /// arrivals at r·J both count toward the membership delta).
+    pub fn mean_churn_frac(&self) -> f64 {
+        let xs: Vec<f64> = self.rounds.iter().filter(|r| r.round > 0).map(|r| r.churn_frac).collect();
+        if xs.is_empty() {
+            0.0
+        } else {
+            xs.iter().sum::<f64>() / xs.len() as f64
+        }
+    }
+
     pub fn to_json(&self) -> Json {
-        Json::obj(vec![
-            ("kind", Json::Str("psl-fleet".to_string())),
+        crate::bench::artifact::envelope(crate::bench::artifact::ArtifactKind::Fleet, vec![
             ("label", Json::Str(self.label.clone())),
             ("policy", Json::Str(self.policy.clone())),
             ("slot_ms", Json::Num(self.slot_ms)),
@@ -207,6 +221,7 @@ mod tests {
         assert_eq!(r.empty_rounds(), 1);
         assert_eq!(r.total_work_units(), 1010);
         assert!((r.mean_makespan_ms() - 1000.0).abs() < 1e-9, "empty rounds excluded");
+        assert!((r.mean_churn_frac() - 0.25).abs() < 1e-9, "round 0 excluded");
     }
 
     #[test]

@@ -47,6 +47,17 @@
 //! JSONL sidecar); [`bench::fleet`] runs the scenario × churn-rate ×
 //! policy grid.
 //!
+//! ## Analytics
+//!
+//! Every runner persists through one artifact registry
+//! ([`bench::artifact`]: kind tag + schema version + single load/validate
+//! path), and [`analyze`] (`psl analyze`) consumes it: fleet-grid cells
+//! aggregate into per-family regime tables, the churn-rate **policy
+//! frontier** (where full re-solving overtakes incremental repair) is
+//! serialized as a [`fleet::policy::PolicyTable`], the fleet `auto`
+//! policy consults that table per round, and `--perf-diff` gates
+//! solve/check/replay timings across perf-trajectory points.
+//!
 //! ## Performance
 //!
 //! Schedules are run-length encoded ([`solver::schedule::SlotRuns`]):
@@ -75,6 +86,7 @@
 //! assert!(schedule.makespan(&inst) <= g.makespan(&inst));
 //! ```
 
+pub mod analyze;
 pub mod bench;
 pub mod cli;
 pub mod coordinator;

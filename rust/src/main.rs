@@ -50,6 +50,7 @@ fn dispatch(args: &Args) -> Result<()> {
         "sweep" => cmd_sweep_grid(args),
         "fleet" => cmd_fleet(args),
         "perf" => cmd_perf(args),
+        "analyze" => cmd_analyze(args),
         "train" => cmd_train(args),
         other => anyhow::bail!("unknown command {other:?}; see `psl help`"),
     }
@@ -177,9 +178,10 @@ fn cmd_sweep_diff(args: &Args, old_path: &str) -> Result<()> {
         .context("usage: psl sweep --diff <old.json> <new.json> [--tol X]")?;
     let tol: f64 = parsed_flag(args, "tol", 0.02)?;
     anyhow::ensure!(tol >= 0.0, "--tol must be non-negative, got {tol}");
+    // Load through the artifact registry (envelope-checked); the diff
+    // itself re-pins the sweep kind.
     let load = |path: &str| -> Result<psl::util::json::Json> {
-        let text = std::fs::read_to_string(path).with_context(|| format!("read {path}"))?;
-        psl::util::json::Json::parse(&text).with_context(|| format!("parse {path}"))
+        Ok(psl::bench::artifact::load(path)?.1)
     };
     let report = psl::bench::sweep::diff_documents(&load(old_path)?, &load(new_path)?, tol)?;
     println!(
@@ -331,7 +333,7 @@ fn cmd_fleet(args: &Args) -> Result<()> {
     let rounds: usize = parsed_flag(args, "rounds", 8)?;
     anyhow::ensure!(rounds >= 1, "--rounds must be >= 1");
     let policy = Policy::parse(&args.str_of("policy", "incremental"))
-        .context("bad --policy (incremental|full|repair-only)")?;
+        .context("bad --policy (incremental|full|repair-only|auto)")?;
     // Start from the tested stationary defaults, then apply overrides.
     let mut churn = ChurnCfg::stationary(j);
     churn.rounds = rounds;
@@ -365,6 +367,14 @@ fn cmd_fleet(args: &Args) -> Result<()> {
     cfg.churn_threshold = parsed_flag(args, "churn-threshold", cfg.churn_threshold)?;
     cfg.gap_threshold = parsed_flag(args, "gap-threshold", cfg.gap_threshold)?;
     cfg.epoch_batches = parsed_flag(args, "batches", cfg.epoch_batches)?;
+    if let Some(table_path) = args.flags.get("policy-table") {
+        anyhow::ensure!(
+            policy == Policy::Auto,
+            "--policy-table only applies to --policy auto (got --policy {})",
+            policy.name()
+        );
+        cfg.policy_table = Some(psl::fleet::PolicyTable::load(table_path)?);
+    }
 
     // Stream each finished round as a JSONL line next to the final JSON,
     // so long-horizon runs leave a usable trace even if interrupted.
@@ -435,7 +445,17 @@ fn cmd_fleet(args: &Args) -> Result<()> {
 /// or dense/run replay divergence.
 fn cmd_perf(args: &Args) -> Result<()> {
     use psl::bench::perf;
-    let mut cfg = if args.bool_of("smoke") { perf::PerfCfg::smoke() } else { perf::PerfCfg::default() };
+    anyhow::ensure!(
+        !(args.bool_of("smoke") && args.bool_of("full")),
+        "--smoke and --full are mutually exclusive"
+    );
+    let mut cfg = if args.bool_of("smoke") {
+        perf::PerfCfg::smoke()
+    } else if args.bool_of("full") {
+        perf::PerfCfg::full()
+    } else {
+        perf::PerfCfg::default()
+    };
     if args.flags.contains_key("scenarios") {
         cfg.scenarios = csv_list(args, "scenarios", "")
             .iter()
@@ -526,6 +546,158 @@ fn cmd_perf(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `psl analyze`: consume `target/psl-bench` artifacts. Two modes:
+/// default — load a fleet-grid artifact, print the per-(family × size)
+/// regime tables, compute the churn-rate policy frontier and save it as
+/// a `PolicyTable` artifact (`--out`, default `policy-table`);
+/// `--perf-diff OLD NEW` — gate two perf-trajectory points against each
+/// other (non-zero exit on solve/check/replay slowdowns beyond `--tol`).
+fn cmd_analyze(args: &Args) -> Result<()> {
+    if let Some(old_path) = args.flags.get("perf-diff") {
+        return cmd_perf_diff(args, old_path);
+    }
+    if let Some(path) = args.flags.get("rounds") {
+        return cmd_rounds_summary(path);
+    }
+    let grid_path = args.positional.first().context(
+        "usage: psl analyze <fleet-grid.json> [--out NAME]\n       psl analyze --perf-diff <old.json> <new.json> [--tol X]\n       psl analyze --rounds <file.rounds.jsonl>",
+    )?;
+    let doc = psl::bench::artifact::load_expecting(grid_path, psl::bench::ArtifactKind::FleetGrid)?;
+    let rows = psl::analyze::rows_from_doc(&doc)?;
+    let tables = psl::analyze::regime_tables(&rows);
+    println!("analyze: {} grid rows -> {} regime tables", rows.len(), tables.len());
+    for t in &tables {
+        println!("  {} {}x{}:", t.scenario, t.n_clients, t.n_helpers);
+        println!(
+            "    {:>6} {:>9} {:<12} {:>5} {:>13} {:>12} {:>14}",
+            "churn", "obs-churn", "policy", "seeds", "makespan[s]", "work", "score"
+        );
+        for c in &t.cells {
+            println!(
+                "    {:>6.2} {:>9.2} {:<12} {:>5} {:>13.1} {:>12.0} {:>14.3e}",
+                c.churn_rate,
+                c.mean_churn_frac,
+                c.policy,
+                c.seeds,
+                c.mean_makespan_ms / 1000.0,
+                c.mean_work_units,
+                c.score
+            );
+        }
+    }
+    let frontiers = psl::analyze::frontiers(&tables);
+    anyhow::ensure!(
+        !frontiers.is_empty(),
+        "no (incremental, full) pair at any churn rate in {grid_path} — run the grid with --policies incremental,full"
+    );
+    println!("policy frontier (full re-solving overtakes incremental repair at):");
+    for f in &frontiers {
+        match f.crossover {
+            Some(frac) => println!(
+                "  {} {}x{}: observed churn >= {:.2}  ({} rates compared)",
+                f.scenario, f.n_clients, f.n_helpers, frac, f.rates_compared
+            ),
+            None => println!(
+                "  {} {}x{}: incremental wins at every measured rate ({} compared)",
+                f.scenario, f.n_clients, f.n_helpers, f.rates_compared
+            ),
+        }
+    }
+    // Provenance label: the artifact filename without its directory.
+    let source = std::path::Path::new(grid_path)
+        .file_name()
+        .map(|s| s.to_string_lossy().to_string())
+        .unwrap_or_else(|| grid_path.to_string());
+    let table = psl::analyze::compute_policy_table(frontiers, &source);
+    let path = table.save(&args.str_of("out", "policy-table"))?;
+    println!(
+        "{} policy-table entries -> {} (use with: psl fleet --policy auto --policy-table {})",
+        table.entries.len(),
+        path.display(),
+        path.display()
+    );
+    Ok(())
+}
+
+/// `psl analyze --rounds <file.rounds.jsonl>`: per-decision summary of a
+/// fleet run's streamed round sidecar — what the orchestrator decided,
+/// how often, at what observed churn, and what it cost.
+fn cmd_rounds_summary(path: &str) -> Result<()> {
+    let text = std::fs::read_to_string(path).with_context(|| format!("read {path}"))?;
+    let rows = psl::analyze::rounds::rows_from_jsonl(&text)?;
+    anyhow::ensure!(!rows.is_empty(), "{path} contains no rounds");
+    println!("rounds: {} streamed from {path}", rows.len());
+    println!(
+        "  {:<14} {:>6} {:>10} {:>14} {:>12} {:>12}",
+        "decision", "rounds", "mean-churn", "makespan[s]", "period[s]", "work"
+    );
+    for s in psl::analyze::rounds::summarize(&rows) {
+        println!(
+            "  {:<14} {:>6} {:>10.2} {:>14.1} {:>12.1} {:>12}",
+            s.decision,
+            s.rounds,
+            s.mean_churn_frac,
+            s.mean_makespan_ms / 1000.0,
+            s.mean_period_ms / 1000.0,
+            s.total_work_units
+        );
+    }
+    Ok(())
+}
+
+/// `psl analyze --perf-diff <old.json> <new.json>`: cell-by-cell timing
+/// comparison of two perf artifacts; non-zero exit when a gated phase
+/// (solve/check/replay) slowed beyond `--tol` (relative, default 25% —
+/// timings are noisier than makespans).
+fn cmd_perf_diff(args: &Args, old_path: &str) -> Result<()> {
+    let new_path = args
+        .positional
+        .first()
+        .context("usage: psl analyze --perf-diff <old.json> <new.json> [--tol X]")?;
+    let tol: f64 = parsed_flag(args, "tol", 0.25)?;
+    anyhow::ensure!(tol >= 0.0, "--tol must be non-negative, got {tol}");
+    let load = |path: &str| -> Result<psl::util::json::Json> {
+        Ok(psl::bench::artifact::load(path)?.1)
+    };
+    let report = psl::analyze::perfdiff::diff_documents(&load(old_path)?, &load(new_path)?, tol)?;
+    // A gate that compared nothing must not pass green — zero overlap
+    // means the two artifacts cover disjoint grids (e.g. a --smoke point
+    // diffed against a --full point).
+    anyhow::ensure!(
+        report.compared > 0,
+        "no gated perf cell appears in both {old_path} and {new_path} ({} only-old, {} only-new) — \
+         are these the same perf grid?",
+        report.only_old,
+        report.only_new
+    );
+    println!(
+        "perf diff: {} gated cells compared (tol {:.0}%) | {} improved | {} only-old | {} only-new",
+        report.compared,
+        tol * 100.0,
+        report.improved,
+        report.only_old,
+        report.only_new
+    );
+    for r in &report.regressions {
+        println!(
+            "  REGRESSION {}: {} -> {}",
+            r.cell,
+            psl::bench::fmt_s(r.old_s),
+            psl::bench::fmt_s(r.new_s)
+        );
+    }
+    if report.regressions.is_empty() {
+        println!("no regressions");
+        Ok(())
+    } else {
+        anyhow::bail!(
+            "{} perf cell(s) regressed beyond {:.0}% tolerance",
+            report.regressions.len(),
+            tol * 100.0
+        )
+    }
+}
+
 /// `psl fleet --grid`: the scenario × churn-rate × policy grid over the
 /// worker pool (thread-count-independent JSON like `psl sweep`).
 fn cmd_fleet_grid(args: &Args) -> Result<()> {
@@ -533,7 +705,8 @@ fn cmd_fleet_grid(args: &Args) -> Result<()> {
     use psl::fleet::Policy;
     // Grid cells run the tested stationary defaults over the grid axes;
     // reject single-run knobs (including the singular --scenario/--seed
-    // spellings) instead of silently ignoring them.
+    // spellings) instead of silently ignoring them. (--policy-table is
+    // shared with single runs: it feeds the grid's auto cells.)
     for key in [
         "policy",
         "depart-prob",
@@ -566,8 +739,18 @@ fn cmd_fleet_grid(args: &Args) -> Result<()> {
         .collect::<Result<Vec<_>>>()?;
     let policies = list("policies", "incremental,full")
         .iter()
-        .map(|s| Policy::parse(s).with_context(|| format!("bad policy {s:?} (incremental|full|repair-only)")))
+        .map(|s| Policy::parse(s).with_context(|| format!("bad policy {s:?} (incremental|full|repair-only|auto)")))
         .collect::<Result<Vec<_>>>()?;
+    let policy_table = match args.flags.get("policy-table") {
+        None => None,
+        Some(path) => {
+            anyhow::ensure!(
+                policies.contains(&Policy::Auto),
+                "--policy-table only applies when --policies includes auto"
+            );
+            Some(psl::fleet::PolicyTable::load(path)?)
+        }
+    };
     let seeds = list("seeds", "42")
         .iter()
         .map(|s| s.parse::<u64>().ok().with_context(|| format!("bad seed {s:?}")))
@@ -594,6 +777,7 @@ fn cmd_fleet_grid(args: &Args) -> Result<()> {
         seeds,
         rounds,
         slot_ms,
+        policy_table,
         threads: args.usize_of("threads", psl::exec::pool::default_workers()),
     };
     let n = grid::cells(&cfg).len();

@@ -1,0 +1,281 @@
+//! End-to-end tests for the artifact analytics engine (`psl analyze`)
+//! and the data-driven `auto` fleet policy: synthetic-grid frontier
+//! determinism, the builtin `PolicyTable` golden snapshot, auto-policy
+//! round decisions through the real orchestrator, and the `--perf-diff`
+//! regression gate through the real binary.
+
+use psl::bench::artifact::{self, ArtifactKind};
+use psl::util::json::Json;
+use std::process::Command;
+
+fn psl_bin(args: &[&str]) -> (String, String, bool) {
+    let out = Command::new(env!("CARGO_BIN_EXE_psl"))
+        .args(args)
+        .output()
+        .expect("run psl binary");
+    (
+        String::from_utf8_lossy(&out.stdout).to_string(),
+        String::from_utf8_lossy(&out.stderr).to_string(),
+        out.status.success(),
+    )
+}
+
+/// One synthetic fleet-grid row in the exact artifact shape
+/// `bench::fleet::rows_to_json` writes.
+fn grid_row(scenario: &str, churn: f64, policy: &str, seed: u64, makespan: f64, work: u64) -> Json {
+    Json::obj(vec![
+        ("scenario", Json::Str(scenario.to_string())),
+        ("model", Json::Str("resnet101".to_string())),
+        ("n_clients", Json::Num(10.0)),
+        ("n_helpers", Json::Num(2.0)),
+        ("churn_rate", Json::Num(churn)),
+        ("policy", Json::Str(policy.to_string())),
+        ("seed", Json::Str(seed.to_string())),
+        ("rounds", Json::Num(8.0)),
+        ("full_rounds", Json::Num(if policy == "full" { 8.0 } else { 1.0 })),
+        ("repair_rounds", Json::Num(if policy == "full" { 0.0 } else { 7.0 })),
+        ("empty_rounds", Json::Num(0.0)),
+        ("mean_makespan_ms", Json::Num(makespan)),
+        ("mean_period_ms", Json::Num(makespan * 0.8)),
+        // Observed churn fraction: ≈ 2× the rate axis under the
+        // stationary mapping, like the real grid runner records.
+        ("mean_churn_frac", Json::Num(churn * 2.0)),
+        ("total_work_units", Json::Str(work.to_string())),
+    ])
+}
+
+/// A synthetic grid whose crossover is designed to land at churn 0.3:
+/// incremental's work-discounted makespan degrades with churn while the
+/// full arm stays flat.
+fn synthetic_grid() -> Json {
+    let mut rows = Vec::new();
+    for seed in [1u64, 2] {
+        for (churn, inc_makespan, inc_work) in [(0.05, 1000.0, 100), (0.15, 1100.0, 300), (0.3, 1400.0, 700)] {
+            rows.push(grid_row("scenario1", churn, "incremental", seed, inc_makespan, inc_work));
+            rows.push(grid_row("scenario1", churn, "full", seed, 950.0, 900));
+        }
+    }
+    artifact::envelope(ArtifactKind::FleetGrid, vec![("rows", Json::Arr(rows))])
+}
+
+#[test]
+fn synthetic_grid_frontier_is_deterministic_end_to_end() {
+    let doc = synthetic_grid();
+    let rows = psl::analyze::rows_from_doc(&doc).expect("synthetic grid parses");
+    let table_of = || {
+        psl::analyze::compute_policy_table(
+            psl::analyze::frontiers(&psl::analyze::regime_tables(&rows)),
+            "synthetic",
+        )
+    };
+    let table_a = table_of();
+    let table_b = table_of();
+    assert_eq!(table_a, table_b);
+    assert_eq!(table_a.to_json().pretty(), table_b.to_json().pretty());
+    assert_eq!(table_a.entries.len(), 1);
+    // Crossover at rate axis 0.3 → reported in observed units: 0.6.
+    assert_eq!(table_a.entries[0].frontier_churn, Some(0.6), "designed crossover");
+}
+
+#[test]
+fn builtin_policy_table_golden_snapshot() {
+    // The exact bytes of the shipped default table: any change to the
+    // builtin frontiers, the envelope, or the serialization shape must
+    // show up here as a deliberate diff.
+    let golden = r#"{
+  "entries": [
+    {
+      "frontier_churn": 0.3,
+      "n_clients": 10,
+      "n_helpers": 2,
+      "scenario": "s4-straggler-tail"
+    },
+    {
+      "frontier_churn": 0.6,
+      "n_clients": 10,
+      "n_helpers": 2,
+      "scenario": "scenario1"
+    }
+  ],
+  "kind": "psl-policy-table",
+  "schema_version": 2,
+  "source": "builtin"
+}"#;
+    assert_eq!(psl::fleet::PolicyTable::builtin().to_json().pretty(), golden);
+    // And it roundtrips through the registry loader.
+    let parsed = psl::fleet::PolicyTable::from_json(&Json::parse(golden).unwrap()).unwrap();
+    assert_eq!(parsed, psl::fleet::PolicyTable::builtin());
+}
+
+#[test]
+fn analyze_cli_writes_policy_table_from_grid_artifact() {
+    let grid_path = format!("target/psl-bench/analyze-test-grid-{}.json", std::process::id());
+    std::fs::create_dir_all("target/psl-bench").unwrap();
+    std::fs::write(&grid_path, synthetic_grid().pretty()).unwrap();
+    let out_a = format!("analyze-test-table-a-{}", std::process::id());
+    let (stdout, stderr, ok) = psl_bin(&["analyze", &grid_path, "--out", &out_a]);
+    assert!(ok, "stdout={stdout} stderr={stderr}");
+    assert!(stdout.contains("policy frontier"), "{stdout}");
+    assert!(stdout.contains("churn >= 0.60"), "designed crossover printed in observed units: {stdout}");
+    // Deterministic: a second run produces byte-identical table output.
+    let out_b = format!("analyze-test-table-b-{}", std::process::id());
+    let (_, _, ok2) = psl_bin(&["analyze", &grid_path, "--out", &out_b]);
+    assert!(ok2);
+    let a = std::fs::read_to_string(format!("target/psl-bench/{out_a}.json")).unwrap();
+    let b = std::fs::read_to_string(format!("target/psl-bench/{out_b}.json")).unwrap();
+    assert_eq!(a, b, "analyze output must be byte-identical across runs");
+    let table = psl::fleet::PolicyTable::from_json(&Json::parse(&a).unwrap()).unwrap();
+    assert_eq!(table.entries[0].frontier_churn, Some(0.6));
+    assert!(table.source.starts_with("analyze-test-grid-"), "provenance = artifact filename: {}", table.source);
+    std::fs::remove_file(&grid_path).ok();
+    std::fs::remove_file(format!("target/psl-bench/{out_a}.json")).ok();
+    std::fs::remove_file(format!("target/psl-bench/{out_b}.json")).ok();
+}
+
+#[test]
+fn analyze_cli_rejects_non_grid_artifacts() {
+    let path = format!("target/psl-bench/analyze-test-notgrid-{}.json", std::process::id());
+    std::fs::create_dir_all("target/psl-bench").unwrap();
+    let sweep = artifact::envelope(ArtifactKind::Sweep, vec![("rows", Json::Arr(vec![]))]);
+    std::fs::write(&path, sweep.pretty()).unwrap();
+    let (_, stderr, ok) = psl_bin(&["analyze", &path]);
+    assert!(!ok);
+    assert!(stderr.contains("psl-fleet-grid"), "{stderr}");
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn fleet_auto_cli_consumes_a_policy_table_deterministically() {
+    let pid = std::process::id();
+    // A table whose scenario1 frontier is tiny: every churned round under
+    // `auto` must re-solve fully (decision "full-auto").
+    let table = psl::fleet::PolicyTable::new(
+        "test".to_string(),
+        vec![psl::fleet::PolicyEntry {
+            scenario: "scenario1".to_string(),
+            n_clients: 8,
+            n_helpers: 2,
+            frontier_churn: Some(0.0),
+        }],
+    );
+    let table_name = format!("analyze-test-auto-table-{pid}");
+    table.save(&table_name).unwrap();
+    let table_path = format!("target/psl-bench/{table_name}.json");
+    let run = |out: &str| {
+        psl_bin(&[
+            "fleet", "--scenario", "1", "--model", "vgg19", "-j", "8", "-i", "2", "--seed", "5",
+            "--rounds", "6", "--policy", "auto", "--policy-table", &table_path, "--out", out,
+        ])
+    };
+    let out_a = format!("analyze-test-auto-a-{pid}");
+    let out_b = format!("analyze-test-auto-b-{pid}");
+    let (stdout, stderr, ok) = run(&out_a);
+    assert!(ok, "stdout={stdout} stderr={stderr}");
+    let (_, _, ok2) = run(&out_b);
+    assert!(ok2);
+    let a = std::fs::read_to_string(format!("target/psl-bench/{out_a}.json")).unwrap();
+    let b = std::fs::read_to_string(format!("target/psl-bench/{out_b}.json")).unwrap();
+    assert_eq!(a, b, "same seed + table -> byte-identical report");
+    let doc = Json::parse(&a).unwrap();
+    assert_eq!(doc.get("policy").as_str(), Some("auto"));
+    let decisions: Vec<String> = doc
+        .get("rounds_detail")
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|r| r.get("decision").as_str().unwrap().to_string())
+        .collect();
+    assert_eq!(decisions[0], "full-initial");
+    // frontier 0.0: every non-empty round past the first must go
+    // full-auto (churn >= 0 always crosses it).
+    for (k, d) in decisions.iter().enumerate().skip(1) {
+        assert!(d == "full-auto" || d == "empty", "round {k}: {decisions:?}");
+    }
+    assert!(decisions.iter().any(|d| d == "full-auto"), "{decisions:?}");
+    // The streamed sidecar summarizes per decision through the CLI.
+    let jsonl = format!("target/psl-bench/{out_a}.rounds.jsonl");
+    let (stdout, stderr, ok) = psl_bin(&["analyze", "--rounds", &jsonl]);
+    assert!(ok, "stdout={stdout} stderr={stderr}");
+    assert!(stdout.contains("full-auto"), "{stdout}");
+    assert!(stdout.contains("full-initial"), "{stdout}");
+    for name in [&out_a, &out_b] {
+        std::fs::remove_file(format!("target/psl-bench/{name}.json")).ok();
+        std::fs::remove_file(format!("target/psl-bench/{name}.rounds.jsonl")).ok();
+    }
+    std::fs::remove_file(&table_path).ok();
+}
+
+#[test]
+fn fleet_rejects_policy_table_without_auto() {
+    let (_, stderr, ok) = psl_bin(&["fleet", "--policy", "incremental", "--policy-table", "nope.json"]);
+    assert!(!ok);
+    assert!(stderr.contains("--policy auto"), "{stderr}");
+}
+
+/// Multiply-and-offset a phase's `min_s` so it regresses regardless of
+/// how small the measured timing was.
+fn doctor_min_s(doc: &mut Json, phase: &str) {
+    let Json::Obj(o) = doc else { panic!("artifact is an object") };
+    let Some(Json::Arr(rows)) = o.get_mut("rows") else { panic!("rows[]") };
+    let mut hit = false;
+    for r in rows {
+        let Json::Obj(ro) = r else { continue };
+        if ro.get("phase").and_then(|p| p.as_str()) == Some(phase) {
+            if let Some(Json::Num(v)) = ro.get_mut("min_s") {
+                *v = *v * 10.0 + 10.0;
+                hit = true;
+            }
+        }
+    }
+    assert!(hit, "no {phase} row to doctor");
+}
+
+#[test]
+fn perf_diff_cli_regression_and_non_regression_pair() {
+    let pid = std::process::id();
+    let base_name = format!("analyze-test-perf-{pid}");
+    let (stdout, stderr, ok) = psl_bin(&["perf", "--smoke", "--out", &base_name]);
+    assert!(ok, "stdout={stdout} stderr={stderr}");
+    let base = format!("target/psl-bench/{base_name}.json");
+
+    // Non-regression: self-diff exits zero.
+    let (stdout, stderr, ok) = psl_bin(&["analyze", "--perf-diff", &base, &base]);
+    assert!(ok, "self-diff must exit 0: stdout={stdout} stderr={stderr}");
+    assert!(stdout.contains("no regressions"), "{stdout}");
+
+    // Regression: a gated phase (solve) slowed -> non-zero exit.
+    let mut doc = Json::parse(&std::fs::read_to_string(&base).unwrap()).unwrap();
+    doctor_min_s(&mut doc, "solve");
+    let worse = format!("target/psl-bench/analyze-test-perf-worse-{pid}.json");
+    std::fs::write(&worse, doc.pretty()).unwrap();
+    let (stdout, stderr, ok) = psl_bin(&["analyze", "--perf-diff", &base, &worse]);
+    assert!(!ok, "slowdown must exit non-zero: stdout={stdout}");
+    assert!(stdout.contains("REGRESSION"), "{stdout}");
+    assert!(stderr.contains("regressed"), "{stderr}");
+    // The reverse direction (new is faster) passes.
+    let (stdout, _, ok) = psl_bin(&["analyze", "--perf-diff", &worse, &base]);
+    assert!(ok, "{stdout}");
+
+    // A dense-baseline slowdown is NOT gated: exit zero.
+    let mut doc = Json::parse(&std::fs::read_to_string(&base).unwrap()).unwrap();
+    doctor_min_s(&mut doc, "check-dense");
+    let dense = format!("target/psl-bench/analyze-test-perf-dense-{pid}.json");
+    std::fs::write(&dense, doc.pretty()).unwrap();
+    let (stdout, stderr, ok) = psl_bin(&["analyze", "--perf-diff", &base, &dense]);
+    assert!(ok, "dense baselines are reference-only: stdout={stdout} stderr={stderr}");
+
+    // Disjoint grids (zero gated overlap) must fail, not pass green.
+    let mut doc = Json::parse(&std::fs::read_to_string(&base).unwrap()).unwrap();
+    let Json::Obj(o) = &mut doc else { panic!("artifact is an object") };
+    o.insert("rows".to_string(), Json::Arr(vec![]));
+    let empty = format!("target/psl-bench/analyze-test-perf-empty-{pid}.json");
+    std::fs::write(&empty, doc.pretty()).unwrap();
+    let (_, stderr, ok) = psl_bin(&["analyze", "--perf-diff", &base, &empty]);
+    assert!(!ok, "a gate that compared nothing must not exit 0");
+    assert!(stderr.contains("no gated perf cell"), "{stderr}");
+
+    std::fs::remove_file(&base).ok();
+    std::fs::remove_file(&worse).ok();
+    std::fs::remove_file(&dense).ok();
+    std::fs::remove_file(&empty).ok();
+}
