@@ -19,11 +19,13 @@ use anyhow::{Context, Result};
 /// History: v1 = the pre-registry shapes (artifacts from older builds
 /// carry no `schema_version` field and are read as v1); v2 added the
 /// per-row `mean_churn_frac` field to `psl-fleet-grid` rows (the
-/// observed-churn unit the analyze frontier is measured in). Readers
-/// accept anything ≤ the current version; kind-specific readers give a
+/// observed-churn unit the analyze frontier is measured in); v3 added
+/// the `psl-fleet-checkpoint` kind (fleet-session warm state + completed
+/// rounds) with no shape changes to existing kinds. Readers accept
+/// anything ≤ the current version; kind-specific readers give a
 /// "re-generate with this build" error when a field their version needs
 /// is absent.
-pub const SCHEMA_VERSION: u32 = 2;
+pub const SCHEMA_VERSION: u32 = 3;
 
 /// Every artifact kind the repo persists under `target/psl-bench/`.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -40,15 +42,20 @@ pub enum ArtifactKind {
     /// `psl analyze` — per-(family, size) churn-rate frontier table
     /// consumed by the fleet `auto` policy.
     PolicyTable,
+    /// `psl fleet --checkpoint-every` / `psl serve` — a paused fleet
+    /// session's warm state + completed rounds, resumable via
+    /// `psl fleet --resume`.
+    FleetCheckpoint,
 }
 
 impl ArtifactKind {
-    pub const ALL: [ArtifactKind; 5] = [
+    pub const ALL: [ArtifactKind; 6] = [
         ArtifactKind::Sweep,
         ArtifactKind::Fleet,
         ArtifactKind::FleetGrid,
         ArtifactKind::Perf,
         ArtifactKind::PolicyTable,
+        ArtifactKind::FleetCheckpoint,
     ];
 
     /// The `kind` tag written into the document.
@@ -59,6 +66,7 @@ impl ArtifactKind {
             ArtifactKind::FleetGrid => "psl-fleet-grid",
             ArtifactKind::Perf => "psl-perf",
             ArtifactKind::PolicyTable => "psl-policy-table",
+            ArtifactKind::FleetCheckpoint => "psl-fleet-checkpoint",
         }
     }
 

@@ -9,6 +9,8 @@
 //!   psl sweep <grid args>             multi-threaded scenario × solver grid
 //!   psl sweep --diff <old> <new>      compare two sweep artifacts
 //!   psl fleet <churn args>            multi-round churn orchestration
+//!                                     (--checkpoint-every / --resume)
+//!   psl serve <scenario args>         stdin/stdout round-decision service
 //!   psl perf [--smoke|--full]         solve/check/replay perf trajectory
 //!   psl analyze <grid.json>           regime tables + policy frontier
 //!   psl analyze --perf-diff OLD NEW   perf trajectory gate
@@ -102,7 +104,16 @@ COMMANDS
                 target/psl-bench/, plus a round-by-round JSONL stream
                 (<out>.rounds.jsonl) written as rounds finish. With
                 --grid: the scenario x churn-rate x policy grid across
-                worker threads.
+                worker threads. --checkpoint-every N snapshots the
+                session as a resumable psl-fleet-checkpoint artifact;
+                --resume CKPT continues one to the byte-identical final
+                report and sidecars.
+  serve         Run the orchestrator as a decision service: RoundEvents
+                JSONL on stdin (the .events.jsonl sidecar line format),
+                one RoundReport JSONL line per event on stdout, flushed
+                per round. {\"checkpoint\": \"name\"} control lines (or
+                --checkpoint-every N) snapshot the session; --resume
+                continues a checkpoint. Diagnostics on stderr only.
   perf          Time the solver/checker/replay hot paths across scenario
                 families and sizes, compare the run-length schedule
                 representation against the dense baseline, and write the
@@ -161,6 +172,14 @@ defaults to s4-straggler-tail)
   --gap-threshold F     full re-solve when repair gap > F x last full [1.75]
   --batches B           batches for the epoch period metric      [8]
   --out NAME            output name under target/psl-bench [default fleet]
+                        (also writes <out>.rounds.jsonl and
+                        <out>.events.jsonl sidecars)
+  --checkpoint-every N  snapshot the session every N rounds to
+                        target/psl-bench/<out>.ckpt.json
+  --resume CKPT         continue a psl-fleet-checkpoint file; the config
+                        is taken from the checkpoint, so only --rounds
+                        (same or longer horizon), --out and
+                        --checkpoint-every may accompany it
   --grid                run the scenario x churn-rate x policy grid
                         (--scenarios, --churn-rates, --policies, --seeds,
                         --threads as in sweep; --out default fleet-grid;
@@ -168,6 +187,22 @@ defaults to s4-straggler-tail)
                         includes auto; other single-run knobs like
                         --policy/--depart-prob are rejected — cells use
                         stationary defaults)
+
+SERVE FLAGS (plus --scenario/--model/-j/-i/--seed/--slot-ms and the
+fleet policy knobs --policy/--policy-table/--churn-threshold/
+--gap-threshold/--batches; scenario defaults to s4-straggler-tail)
+  --max-clients N       roster cap the world is sized for  [default 2*J]
+  --checkpoint-every N  snapshot the session every N stepped rounds to
+                        target/psl-bench/<out>.ckpt.json (ack on stderr)
+  --resume CKPT         continue a psl-fleet-checkpoint file (config
+                        comes from the checkpoint; recorded knobs are
+                        rejected)
+  --out NAME            checkpoint name stem               [default serve]
+
+  Event lines: {\"arrivals\": [ids], \"departures\": [ids]} with optional
+  \"round\" and \"roster\" consistency fields; round 0's implicit previous
+  roster is the base population 0..J. A {\"checkpoint\": \"name\"} line
+  snapshots instead of stepping and acks on stdout.
 
 PERF FLAGS
   --scenarios LIST      comma list of families         [default 1,2,6]

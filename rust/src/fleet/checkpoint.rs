@@ -1,0 +1,326 @@
+//! Fleet-session checkpoints: the [`FleetSession`] warm state as a
+//! schema-checked `psl-fleet-checkpoint` artifact.
+//!
+//! A checkpoint stores the full run config (enough to rebuild the
+//! [`FleetWorld`] and regenerate the event stream), the warm state the
+//! next round's decision depends on (`prev_assign`, `prev_roster_len`,
+//! `last_full_gap`, round cursor), and the completed [`RoundReport`]s so
+//! a resumed run replays its sidecar and finishes with the byte-identical
+//! final report. Minted clients are deliberately *not* stored — they are
+//! a pure function of `(scenario tuple, id)` and re-mint on resume — so
+//! the checkpoint stays O(max_clients + completed rounds).
+//!
+//! Only the named scenario families round-trip: a custom
+//! [`ScenarioSpec`](crate::instance::scenario::ScenarioSpec) composition
+//! cannot be reconstructed from its name alone, and loading such a
+//! checkpoint fails with a clear error instead of silently re-deriving a
+//! different world.
+//!
+//! [`FleetSession`]: super::session::FleetSession
+//! [`FleetWorld`]: crate::instance::scenario::FleetWorld
+
+use super::events::ChurnCfg;
+use super::orchestrator::{FleetCfg, Policy};
+use super::policy::PolicyTable;
+use super::report::RoundReport;
+use crate::bench::artifact::{self, ArtifactKind};
+use crate::instance::profiles::Model;
+use crate::instance::scenario::{Scenario, ScenarioCfg};
+use crate::util::json::Json;
+use anyhow::{Context, Result};
+use std::collections::BTreeMap;
+
+/// A paused fleet session (see module docs).
+#[derive(Clone, Debug)]
+pub struct FleetCheckpoint {
+    pub cfg: FleetCfg,
+    /// Roster cap the world's memory repair was sized for (the session
+    /// may have been built over a world wider than `cfg.churn.max_clients`).
+    pub world_max_clients: usize,
+    /// Round the next `step` must carry (`== rounds.len()`).
+    pub next_round: usize,
+    pub prev_roster_len: usize,
+    /// Drift baseline (`f64::MAX` sentinel = no full solve yet).
+    pub last_full_gap: f64,
+    /// Previous round's kept assignment: stable client id → helper.
+    pub prev_assign: BTreeMap<u64, usize>,
+    /// Completed rounds, in order.
+    pub rounds: Vec<RoundReport>,
+}
+
+/// Non-finite knobs (`--gap-threshold inf`, disarmed thresholds in
+/// tests) have no JSON literal; `null` stands in and reads back as
+/// `f64::INFINITY`. `f64::MAX` is finite and round-trips as a number.
+fn finite_or_null(x: f64) -> Json {
+    if x.is_finite() {
+        Json::Num(x)
+    } else {
+        Json::Null
+    }
+}
+
+fn f64_or_inf(v: &Json, what: &str) -> Result<f64> {
+    match v {
+        Json::Null => Ok(f64::INFINITY),
+        _ => v.as_f64().with_context(|| format!("checkpoint: bad {what}")),
+    }
+}
+
+impl FleetCheckpoint {
+    pub fn to_json(&self) -> Json {
+        let scen = &self.cfg.scenario;
+        let config = Json::obj(vec![
+            ("scenario", Json::Str(scen.spec.name.clone())),
+            ("model", Json::Str(scen.model.name().to_string())),
+            ("n_clients", Json::Num(scen.n_clients as f64)),
+            ("n_helpers", Json::Num(scen.n_helpers as f64)),
+            // String, not Num: u64 seeds can exceed 2^53.
+            ("seed", Json::Str(scen.seed.to_string())),
+            ("wire_factor", Json::Num(scen.wire_factor)),
+            ("switch_cost_ms", Json::Num(scen.switch_cost_ms)),
+            ("slot_ms", self.cfg.slot_ms.map(Json::Num).unwrap_or(Json::Null)),
+            ("rounds", Json::Num(self.cfg.churn.rounds as f64)),
+            ("arrival_rate", Json::Num(self.cfg.churn.arrival_rate)),
+            ("departure_prob", Json::Num(self.cfg.churn.departure_prob)),
+            ("max_clients", Json::Num(self.cfg.churn.max_clients as f64)),
+            ("policy", Json::Str(self.cfg.policy.name().to_string())),
+            ("churn_threshold", finite_or_null(self.cfg.churn_threshold)),
+            ("gap_threshold", finite_or_null(self.cfg.gap_threshold)),
+            ("epoch_batches", Json::Num(self.cfg.epoch_batches as f64)),
+            (
+                "policy_table",
+                self.cfg.policy_table.as_ref().map(|t| t.to_json()).unwrap_or(Json::Null),
+            ),
+            ("world_max_clients", Json::Num(self.world_max_clients as f64)),
+        ]);
+        let state = Json::obj(vec![
+            ("next_round", Json::Num(self.next_round as f64)),
+            ("prev_roster_len", Json::Num(self.prev_roster_len as f64)),
+            ("last_full_gap", Json::Num(self.last_full_gap)),
+            (
+                "prev_assign",
+                Json::Arr(
+                    self.prev_assign
+                        .iter()
+                        .map(|(&id, &h)| Json::Arr(vec![Json::Num(id as f64), Json::Num(h as f64)]))
+                        .collect(),
+                ),
+            ),
+        ]);
+        artifact::envelope(ArtifactKind::FleetCheckpoint, vec![
+            ("config", config),
+            ("state", state),
+            ("rounds", Json::Arr(self.rounds.iter().map(|r| r.to_json()).collect())),
+        ])
+    }
+
+    pub fn from_json(doc: &Json) -> Result<FleetCheckpoint> {
+        artifact::expect_kind(doc, ArtifactKind::FleetCheckpoint)?;
+        let c = doc.get("config");
+        c.as_obj().context("checkpoint: missing config object")?;
+        let num = |v: &Json, what: &str| -> Result<f64> {
+            v.as_f64().with_context(|| format!("checkpoint: bad {what}"))
+        };
+        let int = |v: &Json, what: &str| -> Result<usize> {
+            v.as_usize().with_context(|| format!("checkpoint: bad {what}"))
+        };
+        let scenario_name = c.get("scenario").as_str().context("checkpoint: bad scenario")?;
+        let scenario = Scenario::parse(scenario_name).with_context(|| {
+            format!(
+                "checkpoint scenario {scenario_name:?} is not a named family — \
+                 custom ScenarioSpec compositions are not checkpointable"
+            )
+        })?;
+        let model_name = c.get("model").as_str().context("checkpoint: bad model")?;
+        let model = Model::parse(model_name).with_context(|| format!("checkpoint: unknown model {model_name:?}"))?;
+        let seed_str = c.get("seed").as_str().context("checkpoint: bad seed")?;
+        let seed: u64 = seed_str.parse().with_context(|| format!("checkpoint: bad seed {seed_str:?}"))?;
+        let mut scen = ScenarioCfg::new(
+            scenario,
+            model,
+            int(c.get("n_clients"), "n_clients")?,
+            int(c.get("n_helpers"), "n_helpers")?,
+            seed,
+        );
+        scen.wire_factor = num(c.get("wire_factor"), "wire_factor")?;
+        scen.switch_cost_ms = num(c.get("switch_cost_ms"), "switch_cost_ms")?;
+        let churn = ChurnCfg {
+            rounds: int(c.get("rounds"), "rounds")?,
+            arrival_rate: num(c.get("arrival_rate"), "arrival_rate")?,
+            departure_prob: num(c.get("departure_prob"), "departure_prob")?,
+            max_clients: int(c.get("max_clients"), "max_clients")?,
+        };
+        let policy_name = c.get("policy").as_str().context("checkpoint: bad policy")?;
+        let policy =
+            Policy::parse(policy_name).with_context(|| format!("checkpoint: unknown policy {policy_name:?}"))?;
+        let mut cfg = FleetCfg::new(scen, churn, policy);
+        cfg.slot_ms = match c.get("slot_ms") {
+            Json::Null => None,
+            v => Some(num(v, "slot_ms")?),
+        };
+        cfg.churn_threshold = f64_or_inf(c.get("churn_threshold"), "churn_threshold")?;
+        cfg.gap_threshold = f64_or_inf(c.get("gap_threshold"), "gap_threshold")?;
+        cfg.epoch_batches = int(c.get("epoch_batches"), "epoch_batches")?;
+        cfg.policy_table = match c.get("policy_table") {
+            Json::Null => None,
+            v => Some(PolicyTable::from_json(v).context("checkpoint: bad policy_table")?),
+        };
+        let world_max_clients = int(c.get("world_max_clients"), "world_max_clients")?;
+
+        let s = doc.get("state");
+        s.as_obj().context("checkpoint: missing state object")?;
+        let next_round = int(s.get("next_round"), "next_round")?;
+        let prev_roster_len = int(s.get("prev_roster_len"), "prev_roster_len")?;
+        let last_full_gap = num(s.get("last_full_gap"), "last_full_gap")?;
+        let mut prev_assign = BTreeMap::new();
+        for pair in s.get("prev_assign").as_arr().context("checkpoint: bad prev_assign")? {
+            let pair = pair.as_arr().context("checkpoint: prev_assign entry is not a pair")?;
+            anyhow::ensure!(pair.len() == 2, "checkpoint: prev_assign entry is not an [id, helper] pair");
+            let id = num(&pair[0], "prev_assign id")?;
+            anyhow::ensure!(id >= 0.0 && id.fract() == 0.0, "checkpoint: bad client id {id}");
+            let helper = int(&pair[1], "prev_assign helper")?;
+            anyhow::ensure!(
+                prev_assign.insert(id as u64, helper).is_none(),
+                "checkpoint: duplicate client id {id} in prev_assign"
+            );
+        }
+        let rounds = doc
+            .get("rounds")
+            .as_arr()
+            .context("checkpoint: missing rounds array")?
+            .iter()
+            .map(RoundReport::from_json)
+            .collect::<Result<Vec<_>>>()?;
+        anyhow::ensure!(
+            next_round == rounds.len(),
+            "checkpoint cursor (round {next_round}) does not match its {} completed rounds",
+            rounds.len()
+        );
+        anyhow::ensure!(
+            prev_assign.len() == prev_roster_len,
+            "checkpoint roster ({} assigned) does not match prev_roster_len {prev_roster_len}",
+            prev_assign.len()
+        );
+        Ok(FleetCheckpoint {
+            cfg,
+            world_max_clients,
+            next_round,
+            prev_roster_len,
+            last_full_gap,
+            prev_assign,
+            rounds,
+        })
+    }
+
+    /// Load from a file path (envelope-checked like every artifact).
+    pub fn load(path: &str) -> Result<FleetCheckpoint> {
+        let doc = artifact::load_expecting(path, ArtifactKind::FleetCheckpoint)?;
+        FleetCheckpoint::from_json(&doc).with_context(|| format!("load {path}"))
+    }
+
+    /// Persist under `target/psl-bench/<name>.json`. Returns the path.
+    pub fn save(&self, name: &str) -> std::io::Result<std::path::PathBuf> {
+        artifact::save(name, &self.to_json())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fleet::session::FleetSession;
+    use crate::instance::profiles::Model;
+
+    fn session_cfg() -> FleetCfg {
+        let scen = ScenarioCfg::new(Scenario::S4StragglerTail, Model::Vgg19, 6, 2, 11);
+        let mut churn = ChurnCfg::stationary(6);
+        churn.rounds = 6;
+        FleetCfg::new(scen, churn, Policy::Incremental)
+    }
+
+    fn mid_run_checkpoint() -> FleetCheckpoint {
+        let mut session = FleetSession::new(session_cfg());
+        let stream = session.event_stream();
+        for ev in &stream[..3] {
+            session.step(ev);
+        }
+        session.checkpoint()
+    }
+
+    #[test]
+    fn json_roundtrip_is_exact() {
+        let ckpt = mid_run_checkpoint();
+        let doc = ckpt.to_json();
+        assert_eq!(doc.get("kind").as_str(), Some("psl-fleet-checkpoint"));
+        let text = doc.pretty();
+        let back = FleetCheckpoint::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.to_json().pretty(), text, "checkpoint JSON is a fixed point");
+        assert_eq!(back.next_round, 3);
+        assert_eq!(back.prev_assign, ckpt.prev_assign);
+        assert_eq!(back.rounds, ckpt.rounds);
+    }
+
+    #[test]
+    fn resume_after_roundtrip_matches_straight_run(){
+        let straight = crate::fleet::orchestrator::run(&session_cfg());
+        let text = mid_run_checkpoint().to_json().pretty();
+        let ckpt = FleetCheckpoint::from_json(&Json::parse(&text).unwrap()).unwrap();
+        let mut session = FleetSession::resume(ckpt).unwrap();
+        let stream = session.event_stream();
+        for ev in &stream[session.next_round()..] {
+            session.step(ev);
+        }
+        assert_eq!(session.into_report().to_json().pretty(), straight.to_json().pretty());
+    }
+
+    #[test]
+    fn non_finite_thresholds_serialize_as_null() {
+        let mut ckpt = mid_run_checkpoint();
+        ckpt.cfg.gap_threshold = f64::INFINITY;
+        let doc = ckpt.to_json();
+        assert_eq!(doc.get("config").get("gap_threshold"), &Json::Null);
+        let back = FleetCheckpoint::from_json(&doc).unwrap();
+        assert!(back.cfg.gap_threshold.is_infinite());
+        // f64::MAX (the untouched last_full_gap sentinel) stays a number.
+        assert!(doc.get("state").get("last_full_gap").as_f64().is_some());
+    }
+
+    #[test]
+    fn rejects_wrong_kind_and_inconsistent_state() {
+        let fleet_doc = crate::fleet::orchestrator::run(&session_cfg()).to_json();
+        let err = FleetCheckpoint::from_json(&fleet_doc).unwrap_err().to_string();
+        assert!(err.contains("psl-fleet-checkpoint"), "{err}");
+
+        let ckpt = mid_run_checkpoint();
+        let mut doc = ckpt.to_json();
+        if let Json::Obj(obj) = &mut doc {
+            if let Some(Json::Obj(state)) = obj.get_mut("state") {
+                state.insert("next_round".into(), Json::Num(99.0));
+            }
+        }
+        let err = FleetCheckpoint::from_json(&doc).unwrap_err().to_string();
+        assert!(err.contains("completed rounds"), "{err}");
+    }
+
+    #[test]
+    fn custom_specs_are_not_checkpointable() {
+        let mut ckpt = mid_run_checkpoint();
+        ckpt.cfg.scenario.spec.name = "my-custom-mix".to_string();
+        let err = FleetCheckpoint::from_json(&ckpt.to_json()).unwrap_err().to_string();
+        assert!(err.contains("not checkpointable") || err.contains("my-custom-mix"), "{err}");
+    }
+
+    #[test]
+    fn policy_table_rides_along() {
+        let mut cfg = session_cfg();
+        cfg.policy = Policy::Auto;
+        cfg.policy_table = Some(PolicyTable::builtin());
+        let mut session = FleetSession::new(cfg);
+        let stream = session.event_stream();
+        for ev in &stream[..2] {
+            session.step(ev);
+        }
+        let doc = session.checkpoint().to_json();
+        let back = FleetCheckpoint::from_json(&doc).unwrap();
+        assert_eq!(back.cfg.policy_table, Some(PolicyTable::builtin()));
+    }
+}

@@ -14,7 +14,9 @@
 //!
 //! [`FleetWorld`]: crate::instance::scenario::FleetWorld
 
+use crate::util::json::Json;
 use crate::util::rng::{fnv64 as fnv, Rng};
+use anyhow::{Context, Result};
 
 /// Churn-process knobs for a fleet run.
 #[derive(Clone, Debug)]
@@ -69,12 +71,105 @@ impl RoundEvents {
     pub fn churn_fraction(&self, prev_roster_len: usize) -> f64 {
         (self.arrivals.len() + self.departures.len()) as f64 / prev_roster_len.max(1) as f64
     }
+
+    /// The event's JSON object — one line of the `<out>.events.jsonl`
+    /// sidecar, and the line format `psl serve` consumes on stdin.
+    pub fn to_json(&self) -> Json {
+        let ids = |v: &[u64]| Json::Arr(v.iter().map(|&x| Json::Num(x as f64)).collect());
+        Json::obj(vec![
+            ("round", Json::Num(self.round as f64)),
+            ("arrivals", ids(&self.arrivals)),
+            ("departures", ids(&self.departures)),
+            ("roster", ids(&self.roster)),
+        ])
+    }
+
+    /// Single-line JSON for event-log streaming (JSONL).
+    pub fn jsonl_line(&self) -> String {
+        self.to_json().dump()
+    }
+
+    /// Parse one event line against the session's expected position.
+    /// `round` and `roster` are optional on the wire (a hand-written
+    /// event only needs `arrivals`/`departures`); when present they must
+    /// agree with `expect_round` and with the membership delta applied to
+    /// `prev_roster` (which must be sorted — it is the previous event's
+    /// `roster`).
+    pub fn from_json(doc: &Json, expect_round: usize, prev_roster: &[u64]) -> Result<RoundEvents> {
+        doc.as_obj().context("event is not a JSON object")?;
+        let ids = |key: &str| -> Result<Vec<u64>> {
+            let mut out = Vec::new();
+            match doc.get(key) {
+                Json::Null => {}
+                v => {
+                    for x in v.as_arr().with_context(|| format!("event {key:?} is not an array"))? {
+                        let f = x.as_f64().with_context(|| format!("event {key:?} entry {x} is not a number"))?;
+                        anyhow::ensure!(
+                            f >= 0.0 && f.fract() == 0.0 && f <= u64::MAX as f64,
+                            "event {key:?} entry {f} is not a client id"
+                        );
+                        out.push(f as u64);
+                    }
+                }
+            }
+            out.sort_unstable();
+            anyhow::ensure!(out.windows(2).all(|w| w[0] != w[1]), "event {key:?} has duplicate ids");
+            Ok(out)
+        };
+        let round = match doc.get("round") {
+            Json::Null => expect_round,
+            v => v.as_usize().with_context(|| format!("event round {v} is not an integer"))?,
+        };
+        anyhow::ensure!(
+            round == expect_round,
+            "event round {round} does not continue the session (expected round {expect_round})"
+        );
+        let departures = ids("departures")?;
+        for id in &departures {
+            anyhow::ensure!(
+                prev_roster.binary_search(id).is_ok(),
+                "departure id {id} is not in the previous roster"
+            );
+        }
+        let arrivals = ids("arrivals")?;
+        let mut roster: Vec<u64> =
+            prev_roster.iter().copied().filter(|id| departures.binary_search(id).is_err()).collect();
+        for id in &arrivals {
+            anyhow::ensure!(
+                roster.binary_search(id).is_err(),
+                "arrival id {id} is already in the roster (ids are never reused)"
+            );
+            roster.push(*id);
+        }
+        roster.sort_unstable();
+        if let Some(stated) = match doc.get("roster") {
+            Json::Null => None,
+            _ => Some(ids("roster")?),
+        } {
+            anyhow::ensure!(
+                stated == roster,
+                "event roster does not match previous roster - departures + arrivals"
+            );
+        }
+        Ok(RoundEvents { round, departures, arrivals, roster })
+    }
 }
 
-/// Knuth's Poisson sampler (λ small — per-round arrival rates).
+/// Poisson sampler. Knuth's multiplicative method below the split
+/// threshold; above it, additivity of the Poisson distribution: a
+/// Poisson(λ) draw is the sum of two independent Poisson(λ/2) draws, so
+/// large rates recurse into small ones instead of evaluating
+/// `(-λ).exp()`, which underflows to 0.0 near λ ≈ 745 and would spin the
+/// multiplicative loop to its draw cap. The threshold is far above every
+/// stationary per-round rate, so small-λ streams keep byte-identical
+/// draw sequences.
 fn poisson(rng: &mut Rng, lambda: f64) -> usize {
     if lambda <= 0.0 {
         return 0;
+    }
+    if lambda > 30.0 {
+        let half = lambda / 2.0;
+        return poisson(rng, half) + poisson(rng, half);
     }
     let l = (-lambda).exp();
     let mut k = 0usize;
@@ -228,5 +323,95 @@ mod tests {
         let total: usize = (0..n).map(|_| poisson(&mut rng, 2.5)).sum();
         let mean = total as f64 / n as f64;
         assert!((mean - 2.5).abs() < 0.1, "poisson mean {mean}");
+    }
+
+    /// Verbatim copy of the pre-split Knuth loop: the small-λ path must
+    /// consume the exact same uniform draws, so every existing stream and
+    /// golden stays byte-identical.
+    fn knuth_reference(rng: &mut Rng, lambda: f64) -> usize {
+        if lambda <= 0.0 {
+            return 0;
+        }
+        let l = (-lambda).exp();
+        let mut k = 0usize;
+        let mut p = 1.0;
+        loop {
+            p *= rng.f64();
+            if p <= l || k >= 10_000 {
+                return k;
+            }
+            k += 1;
+        }
+    }
+
+    #[test]
+    fn small_lambda_path_is_byte_identical_to_knuth() {
+        for seed in [1u64, 7, 42] {
+            let mut a = Rng::seeded(seed);
+            let mut b = Rng::seeded(seed);
+            for lambda in [0.3, 1.5, 2.5, 12.0, 30.0] {
+                for _ in 0..200 {
+                    assert_eq!(poisson(&mut a, lambda), knuth_reference(&mut b, lambda), "lambda {lambda}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn poisson_mean_in_ballpark_at_large_lambda() {
+        // Pre-fix, exp(-1000) underflowed to 0.0 and every draw ran the
+        // multiplicative loop to its 10 000 cap.
+        let mut rng = Rng::seeded(17);
+        let n = 400;
+        let draws: Vec<usize> = (0..n).map(|_| poisson(&mut rng, 1000.0)).collect();
+        let mean = draws.iter().sum::<usize>() as f64 / n as f64;
+        // se = sqrt(1000/400) ≈ 1.6; ±15 is ~9σ — deterministic anyway.
+        assert!((mean - 1000.0).abs() < 15.0, "poisson(1000) mean {mean}");
+        assert!(draws.iter().all(|&k| k < 10_000), "no draw hits the degenerate cap");
+    }
+
+    #[test]
+    fn event_json_roundtrips_through_from_json() {
+        let ev = generate(10, &churn(), 7);
+        for w in ev.windows(2) {
+            let (prev, next) = (&w[0], &w[1]);
+            let doc = Json::parse(&next.jsonl_line()).unwrap();
+            let back = RoundEvents::from_json(&doc, next.round, &prev.roster).unwrap();
+            assert_eq!(&back, next, "round {}", next.round);
+        }
+    }
+
+    #[test]
+    fn from_json_computes_roster_and_round_when_absent() {
+        let doc = Json::obj(vec![
+            ("arrivals", Json::Arr(vec![Json::Num(9.0)])),
+            ("departures", Json::Arr(vec![Json::Num(1.0)])),
+        ]);
+        let ev = RoundEvents::from_json(&doc, 3, &[0, 1, 2]).unwrap();
+        assert_eq!(ev.round, 3);
+        assert_eq!(ev.roster, vec![0, 2, 9]);
+    }
+
+    #[test]
+    fn from_json_rejects_inconsistent_events() {
+        let prev = [0u64, 1, 2];
+        // Wrong round.
+        let doc = Json::obj(vec![("round", Json::Num(5.0))]);
+        let err = RoundEvents::from_json(&doc, 3, &prev).unwrap_err().to_string();
+        assert!(err.contains("expected round 3"), "{err}");
+        // Departure of an id not present.
+        let doc = Json::obj(vec![("departures", Json::Arr(vec![Json::Num(7.0)]))]);
+        assert!(RoundEvents::from_json(&doc, 3, &prev).is_err());
+        // Arrival reusing a live id.
+        let doc = Json::obj(vec![("arrivals", Json::Arr(vec![Json::Num(1.0)]))]);
+        assert!(RoundEvents::from_json(&doc, 3, &prev).is_err());
+        // Stated roster that contradicts the delta.
+        let doc = Json::obj(vec![
+            ("departures", Json::Arr(vec![Json::Num(0.0)])),
+            ("roster", Json::Arr(vec![Json::Num(0.0), Json::Num(1.0), Json::Num(2.0)])),
+        ]);
+        assert!(RoundEvents::from_json(&doc, 3, &prev).is_err());
+        // Not an object at all.
+        assert!(RoundEvents::from_json(&Json::Num(1.0), 0, &[]).is_err());
     }
 }

@@ -14,7 +14,10 @@
 //! | Module | Role |
 //! |---|---|
 //! | [`events`] | seeded arrival/departure stream, stable client ids, roster cap |
-//! | [`orchestrator`] | round loop, warm-start repair, churn/gap fallback policy |
+//! | [`session`] | the round loop as a stepwise, resumable [`FleetSession`] state machine |
+//! | [`orchestrator`] | policy/repair decision logic + batch drivers over the session |
+//! | [`checkpoint`] | session warm state as a `psl-fleet-checkpoint` artifact |
+//! | [`serve`] | stdin/stdout JSONL decision service (`psl serve`) |
 //! | [`policy`] | measured churn-frontier [`PolicyTable`] behind the `auto` policy |
 //! | [`report`] | per-round + summary JSON under `target/psl-bench/` |
 //!
@@ -23,17 +26,27 @@
 //! scenario's `DeviceMix`/`LinkRegime`, so arrivals follow the same
 //! distributions as the base population and every client reproduces from
 //! `(scenario tuple, id)` alone. The `psl fleet` subcommand drives a
-//! single run — streaming each finished round as a JSONL line next to the
-//! final JSON via [`orchestrator::run_streaming`] — while
-//! [`crate::bench::fleet`] fans a scenario × churn-rate × policy grid
-//! across worker threads like `psl sweep`.
+//! [`FleetSession`] round by round — streaming each finished round as a
+//! JSONL line next to the final JSON, snapshotting with
+//! `--checkpoint-every` and continuing byte-identically with `--resume` —
+//! `psl serve` ([`serve`]) feeds the same session from external event
+//! lines, and [`crate::bench::fleet`] fans a scenario × churn-rate ×
+//! policy grid across worker threads like `psl sweep`
+//! (library callers can still use the one-shot
+//! [`orchestrator::run`]/[`orchestrator::run_streaming`] drivers).
 
+pub mod checkpoint;
 pub mod events;
 pub mod orchestrator;
 pub mod policy;
 pub mod report;
+pub mod serve;
+pub mod session;
 
+pub use checkpoint::FleetCheckpoint;
 pub use events::{ChurnCfg, RoundEvents};
 pub use orchestrator::{run, run_streaming, Decision, FleetCfg, Policy};
 pub use policy::{PolicyEntry, PolicyTable};
 pub use report::{FleetReport, RoundReport};
+pub use serve::{serve, ServeOpts, ServeSummary};
+pub use session::FleetSession;

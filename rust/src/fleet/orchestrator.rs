@@ -36,12 +36,11 @@
 use super::events::{self, ChurnCfg, RoundEvents};
 use super::policy::PolicyTable;
 use super::report::{FleetReport, RoundReport};
-use crate::instance::scenario::{FleetClient, FleetWorld, ScenarioCfg};
+use super::session::FleetSession;
+use crate::instance::scenario::{FleetWorld, ScenarioCfg};
 use crate::instance::Instance;
-use crate::sim::epoch::replay_epoch;
 use crate::solver::admm::AdmmCfg;
-use crate::solver::greedy;
-use crate::solver::schedule::{fcfs_schedule, Assignment, Schedule};
+use crate::solver::schedule::Assignment;
 use crate::solver::strategy;
 use crate::util::rng::fnv64 as fnv;
 use std::collections::BTreeMap;
@@ -158,6 +157,17 @@ pub enum Decision {
 }
 
 impl Decision {
+    pub const ALL: [Decision; 8] = [
+        Decision::FullInitial,
+        Decision::FullPolicy,
+        Decision::FullChurn,
+        Decision::FullAuto,
+        Decision::FullGap,
+        Decision::FullInfeasible,
+        Decision::Repair,
+        Decision::Empty,
+    ];
+
     pub fn name(self) -> &'static str {
         match self {
             Decision::FullInitial => "full-initial",
@@ -169,6 +179,12 @@ impl Decision {
             Decision::Repair => "repair",
             Decision::Empty => "empty",
         }
+    }
+
+    /// Inverse of [`Decision::name`] — fleet checkpoints round-trip the
+    /// recorded decision string through this.
+    pub fn parse(s: &str) -> Option<Decision> {
+        Decision::ALL.into_iter().find(|d| d.name() == s)
     }
 
     pub fn is_full(self) -> bool {
@@ -187,10 +203,10 @@ impl Decision {
 /// Outcome of the incremental repair pass. Candidate-evaluation counts
 /// (the deterministic work proxy) accumulate into the caller's `work`
 /// out-param.
-struct Repaired {
-    assignment: Assignment,
-    moves: usize,
-    placed: usize,
+pub(super) struct Repaired {
+    pub(super) assignment: Assignment,
+    pub(super) moves: usize,
+    pub(super) placed: usize,
 }
 
 /// Warm-start repair: survivors keep their helper, arrivals are placed on
@@ -198,14 +214,19 @@ struct Repaired {
 /// overloaded helpers. `prev` maps stable client id → helper of the
 /// previous round. Returns None only if an arrival fits no helper (cannot
 /// happen under the world's wedge-free repair and roster cap, but the
-/// caller falls back to a full solve defensively).
-fn repair_assignment(
+/// caller falls back to a full solve defensively). A helper-less instance
+/// is a construction error, not an infeasibility signal — rejected up
+/// front in [`ScenarioCfg::fleet_world`], and asserted here so it can
+/// never masquerade as a `full-infeasible` round (pre-fix, the `?` on the
+/// empty rebalance argmax silently conflated the two).
+pub(super) fn repair_assignment(
     inst: &Instance,
     roster_ids: &[u64],
     prev: &BTreeMap<u64, usize>,
     work: &mut u64,
 ) -> Option<Repaired> {
     let i_n = inst.n_helpers;
+    assert!(i_n >= 1, "repair on a helper-less instance (fleet worlds require I >= 1)");
     let mut free = inst.mem.clone();
     let mut count = vec![0usize; i_n];
     let mut load = vec![0f64; i_n]; // estimated slot-load Σ (p + pp)
@@ -253,7 +274,9 @@ fn repair_assignment(
         // Recompute each iteration: moves change per-edge weights, so
         // the total (and mean) drifts as clients relocate.
         let mean = load.iter().sum::<f64>() / i_n.max(1) as f64;
-        let imax = (0..i_n).max_by(|&a, &b| load[a].partial_cmp(&load[b]).unwrap().then(b.cmp(&a)))?;
+        let imax = (0..i_n)
+            .max_by(|&a, &b| load[a].partial_cmp(&load[b]).unwrap().then(b.cmp(&a)))
+            .expect("i_n >= 1 asserted above");
         if load[imax] <= 1.15 * mean + 1e-9 {
             break;
         }
@@ -295,7 +318,7 @@ fn repair_assignment(
 /// Deterministic work proxy for a full strategy solve: every method at
 /// least scans all edges; ADMM additionally iterates up to `max_iters`
 /// times over them.
-fn full_work(inst: &Instance, method: strategy::Method, admm: &AdmmCfg) -> u64 {
+pub(super) fn full_work(inst: &Instance, method: strategy::Method, admm: &AdmmCfg) -> u64 {
     let edges = (inst.n_clients * inst.n_helpers) as u64;
     match method {
         strategy::Method::Admm => edges * admm.max_iters as u64,
@@ -330,160 +353,22 @@ pub fn run_on_stream(cfg: &FleetCfg, world: &FleetWorld, stream: &[RoundEvents])
 }
 
 /// [`run_on_stream`] with a per-round sink (see [`run_streaming`]).
+///
+/// This is now a thin driver over [`FleetSession`]: one `step` per event,
+/// then [`FleetSession::into_report`]. Callers that need to pause,
+/// checkpoint, or feed events interactively hold the session directly.
 pub fn run_on_stream_streaming(
     cfg: &FleetCfg,
     world: &FleetWorld,
     stream: &[RoundEvents],
     sink: &mut dyn FnMut(&RoundReport),
 ) -> FleetReport {
-    let admm_cfg = AdmmCfg::default();
-    let slot_ms = cfg.slot_ms();
-    // The auto policy's frontier table, resolved once: an explicit table
-    // wins, else the builtin shipped with the binary.
-    let builtin_table = if cfg.policy == Policy::Auto && cfg.policy_table.is_none() {
-        Some(PolicyTable::builtin())
-    } else {
-        None
-    };
-    let table = cfg.policy_table.as_ref().or(builtin_table.as_ref());
-    let mut minted: BTreeMap<u64, FleetClient> = BTreeMap::new();
-    let mut prev_assign: BTreeMap<u64, usize> = BTreeMap::new();
-    let mut prev_roster_len = 0usize;
-    // Lower-bound gap of the last full solve — the drift baseline.
-    let mut last_full_gap = f64::MAX;
-    let mut rounds = Vec::with_capacity(stream.len());
-
+    let mut session = FleetSession::with_world(cfg.clone(), world.clone());
     for ev in stream {
-        for &id in &ev.roster {
-            minted.entry(id).or_insert_with(|| world.mint_client(id));
-        }
-        let roster: Vec<&FleetClient> = ev.roster.iter().map(|id| &minted[id]).collect();
-        let ms = world.instance(&roster);
-        let inst = ms.quantize(slot_ms);
-        let churn_frac = ev.churn_fraction(prev_roster_len);
-        let lb_raw = inst.makespan_lower_bound();
-        let lb = lb_raw.max(1);
-        // The auto policy's per-round consult (None for other policies or
-        // when nothing fires). A measured frontier firing is FullAuto; a
-        // family the table does not cover falls back to the static churn
-        // threshold and is recorded as FullChurn, so decision analyses
-        // can separate data-driven re-solves from the fallback.
-        let auto_full: Option<Decision> = if cfg.policy == Policy::Auto {
-            table.and_then(|t| match t.lookup(&cfg.scenario.spec.name, roster.len(), inst.n_helpers) {
-                Some(entry) => match entry.frontier_churn {
-                    Some(frontier) if churn_frac >= frontier => Some(Decision::FullAuto),
-                    _ => None,
-                },
-                None if churn_frac > cfg.churn_threshold => Some(Decision::FullChurn),
-                None => None,
-            })
-        } else {
-            None
-        };
-        let full_solve = |work_base: u64| -> ((Schedule, Option<strategy::Method>), u64) {
-            // The wedge-free world guarantees a greedy assignment exists,
-            // so a full solve can never come up empty.
-            let (s, m) = strategy::solve(&inst, &admm_cfg)
-                .or_else(|| greedy::solve(&inst).map(|s| (s, strategy::Method::BalancedGreedy)))
-                .expect("wedge-free world must admit a greedy assignment");
-            let w = work_base + full_work(&inst, m, &admm_cfg);
-            ((s, Some(m)), w)
-        };
-
-        let (decision, schedule, repair_moves, placed, work) = if roster.is_empty() {
-            (Decision::Empty, None, 0, 0, 0u64)
-        } else if ev.round == 0 || cfg.policy == Policy::FullEveryRound {
-            let d = if ev.round == 0 { Decision::FullInitial } else { Decision::FullPolicy };
-            let (s, w) = full_solve(0);
-            (d, Some(s), 0, 0, w)
-        } else if cfg.policy == Policy::Incremental && churn_frac > cfg.churn_threshold {
-            let (s, w) = full_solve(0);
-            (Decision::FullChurn, Some(s), 0, 0, w)
-        } else if let Some(d) = auto_full {
-            let (s, w) = full_solve(0);
-            (d, Some(s), 0, 0, w)
-        } else {
-            let mut work = 0u64;
-            match repair_assignment(&inst, &ev.roster, &prev_assign, &mut work) {
-                Some(rep) => {
-                    let s = fcfs_schedule(&inst, rep.assignment);
-                    let gap = s.makespan(&inst) as f64 / lb as f64;
-                    if matches!(cfg.policy, Policy::Incremental | Policy::Auto)
-                        && gap > cfg.gap_threshold * last_full_gap
-                    {
-                        // The repair is discarded: report no repair stats
-                        // for the kept schedule, but its effort still
-                        // counts in the work proxy (it was spent).
-                        let (s, w) = full_solve(work);
-                        (Decision::FullGap, Some(s), 0, 0, w)
-                    } else {
-                        (Decision::Repair, Some((s, None)), rep.moves, rep.placed, work)
-                    }
-                }
-                // Defensive: the wedge-free world makes this unreachable,
-                // but an unplaceable arrival must trigger a full solve,
-                // not a panic.
-                None => {
-                    let (s, w) = full_solve(work);
-                    (Decision::FullInfeasible, Some(s), 0, 0, w)
-                }
-            }
-        };
-        if decision.is_full() {
-            if let Some((s, _)) = &schedule {
-                last_full_gap = s.makespan(&inst) as f64 / lb as f64;
-            }
-        }
-
-        let (makespan_slots, preemptions, period_ms, method) = match &schedule {
-            Some((s, m)) => {
-                debug_assert!(s.is_feasible(&inst), "round {} schedule infeasible", ev.round);
-                let e = replay_epoch(&ms, s, cfg.epoch_batches.max(1));
-                (s.makespan(&inst), s.preemptions(), e.period_ms, m.map(|m| m.name()))
-            }
-            None => (0, 0, 0.0, None),
-        };
-
-        let round_report = RoundReport {
-            round: ev.round,
-            n_clients: roster.len(),
-            arrivals: ev.arrivals.len(),
-            departures: ev.departures.len(),
-            decision: decision.name(),
-            method,
-            makespan_slots,
-            makespan_ms: makespan_slots as f64 * slot_ms,
-            lower_bound: lb_raw,
-            churn_frac,
-            repair_moves,
-            placed_arrivals: placed,
-            work_units: work,
-            period_ms,
-            preemptions,
-        };
-        sink(&round_report);
-        rounds.push(round_report);
-
-        prev_assign = match &schedule {
-            Some((s, _)) => roster.iter().zip(&s.assignment.helper_of).map(|(c, &i)| (c.id, i)).collect(),
-            None => BTreeMap::new(),
-        };
-        prev_roster_len = roster.len();
+        let round = session.step(ev);
+        sink(&round);
     }
-
-    FleetReport::new(
-        format!(
-            "fleet:{}/{} J={} I={} seed={}",
-            cfg.scenario.spec.name,
-            cfg.scenario.model.name(),
-            cfg.scenario.n_clients,
-            cfg.scenario.n_helpers,
-            cfg.scenario.seed
-        ),
-        cfg.policy.name().to_string(),
-        slot_ms,
-        rounds,
-    )
+    session.into_report()
 }
 
 #[cfg(test)]
@@ -591,6 +476,30 @@ mod tests {
             assert_eq!(Policy::parse(p.name()), Some(p), "{}", p.name());
         }
         assert_eq!(Policy::parse("nope"), None);
+    }
+
+    #[test]
+    fn decision_parse_roundtrip() {
+        for d in Decision::ALL {
+            assert_eq!(Decision::parse(d.name()), Some(d), "{}", d.name());
+        }
+        assert_eq!(Decision::parse("nope"), None);
+    }
+
+    #[test]
+    #[should_panic(expected = "helper-less")]
+    fn repair_rejects_helper_less_instance_instead_of_full_infeasible() {
+        // Pre-fix, i_n == 0 fell out of the rebalance argmax `?` and was
+        // reported as a full-infeasible round.
+        let scen = ScenarioCfg::new(Scenario::S1, Model::ResNet101, 2, 1, 3);
+        let inst = {
+            let mut ms = scen.generate();
+            ms.n_helpers = 0;
+            ms.mem_gb = vec![];
+            ms.quantize(100.0)
+        };
+        let mut work = 0u64;
+        let _ = repair_assignment(&inst, &[0, 1], &BTreeMap::new(), &mut work);
     }
 
     /// Hand-built three-round stream: heavy churn into round 1 (4/6 ≈

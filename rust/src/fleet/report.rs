@@ -73,6 +73,65 @@ impl RoundReport {
     pub fn jsonl_line(&self) -> String {
         self.to_json().dump()
     }
+
+    /// Inverse of [`RoundReport::to_json`] — fleet checkpoints carry the
+    /// completed rounds so a resumed run can replay its sidecar and
+    /// finish with the byte-identical report. `decision`/`method` strings
+    /// are interned back through the enum name tables (the struct fields
+    /// are `&'static str`).
+    pub fn from_json(doc: &Json) -> anyhow::Result<RoundReport> {
+        use anyhow::Context;
+        doc.as_obj().context("round report is not a JSON object")?;
+        let num = |key: &str| -> anyhow::Result<f64> {
+            doc.get(key).as_f64().with_context(|| format!("round report: bad {key:?}"))
+        };
+        let int = |key: &str| -> anyhow::Result<usize> {
+            doc.get(key).as_usize().with_context(|| format!("round report: bad {key:?}"))
+        };
+        let decision_str = doc.get("decision").as_str().context("round report: bad \"decision\"")?;
+        let decision = super::orchestrator::Decision::parse(decision_str)
+            .with_context(|| format!("round report: unknown decision {decision_str:?}"))?
+            .name();
+        let method = match doc.get("method") {
+            Json::Null => None,
+            v => {
+                let s = v.as_str().context("round report: bad \"method\"")?;
+                Some(
+                    crate::solver::strategy::Method::parse(s)
+                        .with_context(|| format!("round report: unknown method {s:?}"))?
+                        .name(),
+                )
+            }
+        };
+        // work_units is serialized as a string (u64 totals can exceed
+        // 2^53); accept an integral number leniently for hand-written
+        // lines.
+        let work_units = match doc.get("work_units") {
+            Json::Str(s) => s.parse::<u64>().with_context(|| format!("round report: bad work_units {s:?}"))?,
+            v => {
+                let f = v.as_f64().context("round report: bad \"work_units\"")?;
+                anyhow::ensure!(f >= 0.0 && f.fract() == 0.0, "round report: bad work_units {f}");
+                f as u64
+            }
+        };
+        Ok(RoundReport {
+            round: int("round")?,
+            n_clients: int("n_clients")?,
+            arrivals: int("arrivals")?,
+            departures: int("departures")?,
+            decision,
+            method,
+            makespan_slots: int("makespan_slots")? as u32,
+            makespan_ms: num("makespan_ms")?,
+            lower_bound: int("lower_bound")? as u32,
+            churn_frac: num("churn_frac")?,
+            repair_moves: int("repair_moves")?,
+            placed_arrivals: int("placed_arrivals")?,
+            work_units,
+            period_ms: num("period_ms")?,
+            preemptions: int("preemptions")? as u32,
+        })
+    }
 }
 
 /// A whole fleet run.
@@ -235,6 +294,20 @@ mod tests {
             let parsed = Json::parse(&line).unwrap();
             assert_eq!(parsed.pretty(), row.pretty(), "JSONL line equals the detail entry");
         }
+    }
+
+    #[test]
+    fn round_report_roundtrips_through_from_json() {
+        for r in &report().rounds {
+            let back = RoundReport::from_json(&Json::parse(&r.jsonl_line()).unwrap()).unwrap();
+            assert_eq!(&back, r, "round {}", r.round);
+        }
+        // Unknown decision / method strings are rejected, not interned.
+        let mut doc = report().rounds[0].to_json();
+        if let Json::Obj(obj) = &mut doc {
+            obj.insert("decision".into(), Json::Str("nope".into()));
+        }
+        assert!(RoundReport::from_json(&doc).is_err());
     }
 
     #[test]

@@ -1,0 +1,227 @@
+//! The fleet decision service: a [`FleetSession`] driven over
+//! stdin/stdout JSONL.
+//!
+//! Each input line is one [`RoundEvents`] object (the same line format
+//! `psl fleet` records in its `<out>.events.jsonl` sidecar — `round` and
+//! `roster` may be omitted and are derived from the session's cursor and
+//! previous roster). For every event the session steps one round and
+//! writes that round's [`RoundReport`] as a single JSONL line, flushed
+//! immediately, so a driving process sees each decision before it must
+//! produce the next event.
+//!
+//! A control line `{"checkpoint": "name"}` snapshots the session under
+//! `target/psl-bench/<name>.json` instead of stepping a round; the
+//! acknowledgement line `{"checkpointed": path, "round": N}` keeps the
+//! stdout stream strictly line-per-input. Periodic `checkpoint_every`
+//! snapshots acknowledge on stderr instead, so stdout stays exactly one
+//! report line per event — diffable against a batch run's
+//! `.rounds.jsonl`.
+
+use super::events::RoundEvents;
+use super::session::FleetSession;
+use crate::util::json::Json;
+use anyhow::{Context, Result};
+use std::io::{BufRead, Write};
+
+/// Serving knobs (all optional).
+#[derive(Clone, Debug, Default)]
+pub struct ServeOpts {
+    /// Snapshot every N stepped rounds (None = only on demand).
+    pub checkpoint_every: Option<usize>,
+    /// Artifact name periodic snapshots are saved under.
+    pub checkpoint_name: String,
+}
+
+/// What a serve loop did (for the caller's closing diagnostics).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ServeSummary {
+    pub rounds: usize,
+    pub checkpoints: usize,
+}
+
+/// Drive `session` over `input` lines until EOF, writing one report line
+/// per event to `out`. Any malformed or discontinuous event aborts with
+/// a line-numbered error — the session's committed rounds stay valid (a
+/// periodic checkpoint, if configured, allows resuming).
+pub fn serve<R: BufRead, W: Write>(
+    session: &mut FleetSession,
+    input: R,
+    mut out: W,
+    opts: &ServeOpts,
+) -> Result<ServeSummary> {
+    let mut summary = ServeSummary::default();
+    for (k, line) in input.lines().enumerate() {
+        let lineno = k + 1;
+        let line = line.with_context(|| format!("read event line {lineno}"))?;
+        let text = line.trim();
+        if text.is_empty() {
+            continue;
+        }
+        let doc = Json::parse(text).with_context(|| format!("event line {lineno}"))?;
+        if let Some(name) = checkpoint_request(&doc) {
+            let path = session
+                .checkpoint()
+                .save(name)
+                .with_context(|| format!("save checkpoint {name:?} (event line {lineno})"))?;
+            let ack = Json::obj(vec![
+                ("checkpointed", Json::Str(path.display().to_string())),
+                ("round", Json::Num(session.next_round() as f64)),
+            ]);
+            writeln!(out, "{}", ack.dump()).context("write checkpoint ack")?;
+            out.flush().context("flush checkpoint ack")?;
+            summary.checkpoints += 1;
+            continue;
+        }
+        // Round 0's implicit previous roster is the base population (the
+        // generated stream states it in `roster` without arrival events).
+        let prev_roster =
+            if session.next_round() == 0 { session.base_roster() } else { session.roster() };
+        let ev = RoundEvents::from_json(&doc, session.next_round(), &prev_roster)
+            .with_context(|| format!("event line {lineno}"))?;
+        anyhow::ensure!(
+            ev.roster.len() <= session.max_clients(),
+            "event line {lineno}: roster of {} exceeds the world's max-clients {} — \
+             restart serve with a larger --max-clients (the memory repair is sized at construction)",
+            ev.roster.len(),
+            session.max_clients()
+        );
+        let report = session.step(&ev);
+        writeln!(out, "{}", report.jsonl_line()).with_context(|| format!("write round {}", report.round))?;
+        out.flush().with_context(|| format!("flush round {}", report.round))?;
+        summary.rounds += 1;
+        if let Some(every) = opts.checkpoint_every {
+            if every >= 1 && session.next_round() % every == 0 {
+                let path = session
+                    .checkpoint()
+                    .save(&opts.checkpoint_name)
+                    .with_context(|| format!("save periodic checkpoint after round {}", report.round))?;
+                eprintln!("serve: checkpoint -> {} (round {})", path.display(), session.next_round());
+                summary.checkpoints += 1;
+            }
+        }
+    }
+    Ok(summary)
+}
+
+/// A `{"checkpoint": "name"}` control line (no other event fields carry
+/// that key).
+fn checkpoint_request(doc: &Json) -> Option<&str> {
+    doc.get("checkpoint").as_str()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fleet::checkpoint::FleetCheckpoint;
+    use crate::fleet::events::ChurnCfg;
+    use crate::fleet::orchestrator::{run, FleetCfg, Policy};
+    use crate::instance::profiles::Model;
+    use crate::instance::scenario::{Scenario, ScenarioCfg};
+
+    fn cfg(rounds: usize) -> FleetCfg {
+        let scen = ScenarioCfg::new(Scenario::S4StragglerTail, Model::Vgg19, 6, 2, 9);
+        let mut churn = ChurnCfg::stationary(6);
+        churn.rounds = rounds;
+        FleetCfg::new(scen, churn, Policy::Incremental)
+    }
+
+    fn event_log(cfg: &FleetCfg) -> String {
+        let session = FleetSession::new(cfg.clone());
+        session.event_stream().iter().map(|ev| ev.jsonl_line() + "\n").collect()
+    }
+
+    #[test]
+    fn serve_replays_the_batch_run_byte_identically() {
+        let batch = run(&cfg(6));
+        let input = event_log(&cfg(6));
+        let mut out = Vec::new();
+        let mut session = FleetSession::new(cfg(6));
+        let summary = serve(&mut session, input.as_bytes(), &mut out, &ServeOpts::default()).unwrap();
+        assert_eq!(summary, ServeSummary { rounds: 6, checkpoints: 0 });
+        let expect: String = batch.rounds.iter().map(|r| r.jsonl_line() + "\n").collect();
+        assert_eq!(String::from_utf8(out).unwrap(), expect, "stdout == the batch run's rounds_detail");
+    }
+
+    #[test]
+    fn serve_accepts_minimal_event_lines() {
+        // Lines carrying only arrivals/departures (no round, no roster)
+        // — the schema a human or an external controller writes.
+        let input = "\
+{\"arrivals\": [], \"departures\": []}\n\
+\n\
+{\"departures\": [0, 3]}\n\
+{\"arrivals\": [6]}\n";
+        let mut out = Vec::new();
+        let mut session = FleetSession::new(cfg(4));
+        let summary = serve(&mut session, input.as_bytes(), &mut out, &ServeOpts::default()).unwrap();
+        assert_eq!(summary.rounds, 3, "blank lines are skipped");
+        assert_eq!(session.roster(), vec![1, 2, 4, 5, 6]);
+    }
+
+    #[test]
+    fn serve_rejects_bad_events_with_line_numbers() {
+        let mut session = FleetSession::new(cfg(4));
+        let err = serve(&mut session, "not json\n".as_bytes(), &mut Vec::new(), &ServeOpts::default())
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("line 1"), "{err}");
+
+        let mut session = FleetSession::new(cfg(4));
+        let input = "{\"arrivals\": []}\n{\"round\": 7}\n";
+        let err = serve(&mut session, input.as_bytes(), &mut Vec::new(), &ServeOpts::default())
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("line 2"), "{err}");
+        assert_eq!(session.next_round(), 1, "committed rounds survive the abort");
+    }
+
+    #[test]
+    fn serve_rejects_rosters_beyond_the_world_cap() {
+        let mut session = FleetSession::new(cfg(4));
+        let cap = session.max_clients();
+        let arrivals: Vec<String> = (6..2 + cap as u64).map(|id| id.to_string()).collect();
+        let input = format!("{{\"arrivals\": [{}]}}\n", arrivals.join(", "));
+        let err = serve(&mut session, input.as_bytes(), &mut Vec::new(), &ServeOpts::default())
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("max-clients"), "{err}");
+    }
+
+    #[test]
+    fn checkpoint_control_line_snapshots_and_acks() {
+        let name = format!("serve-ckpt-test-{}", std::process::id());
+        let input = format!(
+            "{}\n{{\"checkpoint\": \"{name}\"}}\n",
+            FleetSession::new(cfg(4)).event_stream()[0].jsonl_line()
+        );
+        let mut out = Vec::new();
+        let mut session = FleetSession::new(cfg(4));
+        let summary = serve(&mut session, input.as_bytes(), &mut out, &ServeOpts::default()).unwrap();
+        assert_eq!(summary, ServeSummary { rounds: 1, checkpoints: 1 });
+        let text = String::from_utf8(out).unwrap();
+        let ack = Json::parse(text.lines().last().unwrap()).unwrap();
+        let path = ack.get("checkpointed").as_str().unwrap().to_string();
+        assert_eq!(ack.get("round").as_usize(), Some(1));
+        let ckpt = FleetCheckpoint::load(&path).unwrap();
+        assert_eq!(ckpt.next_round, 1);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn periodic_checkpoints_keep_stdout_clean() {
+        let name = format!("serve-ckpt-periodic-{}", std::process::id());
+        let input = event_log(&cfg(5));
+        let mut out = Vec::new();
+        let mut session = FleetSession::new(cfg(5));
+        let opts = ServeOpts { checkpoint_every: Some(2), checkpoint_name: name.clone() };
+        let summary = serve(&mut session, input.as_bytes(), &mut out, &opts).unwrap();
+        assert_eq!(summary, ServeSummary { rounds: 5, checkpoints: 2 });
+        let text = String::from_utf8(out).unwrap();
+        assert_eq!(text.lines().count(), 5, "one report line per event, acks on stderr only");
+        assert!(text.lines().all(|l| Json::parse(l).unwrap().get("round").as_usize().is_some()));
+        let path = format!("target/psl-bench/{name}.json");
+        let ckpt = FleetCheckpoint::load(&path).unwrap();
+        assert_eq!(ckpt.next_round, 4, "last periodic snapshot is after round 4");
+        std::fs::remove_file(&path).ok();
+    }
+}

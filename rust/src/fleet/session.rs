@@ -1,0 +1,468 @@
+//! The stepwise fleet session: the orchestrator's round loop promoted to
+//! an explicit state machine.
+//!
+//! [`FleetSession`] owns everything `run_on_stream_streaming`'s loop used
+//! to keep in locals — the minted-client cache, the previous round's
+//! assignment, the last full solve's lower-bound gap, the round cursor —
+//! and exposes one transition: [`step`](FleetSession::step) consumes a
+//! [`RoundEvents`] and returns that round's [`RoundReport`]. Batch runs
+//! (`psl fleet`), the fleet grid, and the stdin/stdout decision service
+//! (`psl serve`) are all thin drivers over the same session, so every
+//! entry point makes byte-identical decisions.
+//!
+//! Two invariants make long horizons and checkpointing work:
+//!
+//! * **Bounded state.** The `minted` cache holds exactly the live roster:
+//!   departures are evicted in `step` (ids are never reused, so dropping
+//!   them is safe) and `prev_assign` is rebuilt from the kept schedule
+//!   each round. A 10⁵-round run holds O(`max_clients`) state, not
+//!   O(total ids ever seen).
+//! * **Small, sufficient warm state.** Minted clients are a pure function
+//!   of `(scenario tuple, id)`, so a checkpoint
+//!   ([`FleetSession::checkpoint`]) records only the config, the round
+//!   cursor, `prev_assign` (ids → helpers), `last_full_gap`, and the
+//!   completed rounds — [`FleetSession::resume`] re-mints the roster and
+//!   continues byte-identically.
+
+use super::checkpoint::FleetCheckpoint;
+use super::events::{self, RoundEvents};
+use super::orchestrator::{full_work, repair_assignment, Decision, FleetCfg, Policy};
+use super::policy::PolicyTable;
+use super::report::{FleetReport, RoundReport};
+use crate::instance::scenario::{FleetClient, FleetWorld};
+use crate::sim::epoch::replay_epoch;
+use crate::solver::admm::AdmmCfg;
+use crate::solver::greedy;
+use crate::solver::schedule::{fcfs_schedule, Schedule};
+use crate::solver::strategy;
+use crate::util::rng::fnv64 as fnv;
+use anyhow::Result;
+use std::collections::BTreeMap;
+
+/// A resumable multi-round orchestration session (see module docs).
+pub struct FleetSession {
+    cfg: FleetCfg,
+    world: FleetWorld,
+    admm_cfg: AdmmCfg,
+    slot_ms: f64,
+    /// Frontier table resolved once at construction: an explicit
+    /// `cfg.policy_table` wins, else the builtin when the policy is
+    /// `auto` (other policies never consult it).
+    table: Option<PolicyTable>,
+    /// Live minted clients — exactly the current roster.
+    minted: BTreeMap<u64, FleetClient>,
+    // ---- warm state (the checkpoint payload) ---------------------------
+    /// Previous round's kept assignment: stable client id → helper.
+    prev_assign: BTreeMap<u64, usize>,
+    prev_roster_len: usize,
+    /// Lower-bound gap of the last full solve — the drift baseline
+    /// (`f64::MAX` until the first full solve).
+    last_full_gap: f64,
+    /// Round the next `step` must carry (`== completed.len()`).
+    next_round: usize,
+    completed: Vec<RoundReport>,
+}
+
+impl FleetSession {
+    /// Fresh session; the world is derived from the config exactly as the
+    /// batch entry points derive it.
+    pub fn new(cfg: FleetCfg) -> FleetSession {
+        let world = cfg.scenario.fleet_world(cfg.churn.max_clients);
+        FleetSession::with_world(cfg, world)
+    }
+
+    /// Fresh session over an explicitly-built world (tests inject worlds
+    /// sized independently of `cfg.churn.max_clients`).
+    pub fn with_world(cfg: FleetCfg, world: FleetWorld) -> FleetSession {
+        let table = match (&cfg.policy_table, cfg.policy) {
+            (Some(t), _) => Some(t.clone()),
+            (None, Policy::Auto) => Some(PolicyTable::builtin()),
+            (None, _) => None,
+        };
+        let slot_ms = cfg.slot_ms();
+        FleetSession {
+            cfg,
+            world,
+            admm_cfg: AdmmCfg::default(),
+            slot_ms,
+            table,
+            minted: BTreeMap::new(),
+            prev_assign: BTreeMap::new(),
+            prev_roster_len: 0,
+            last_full_gap: f64::MAX,
+            next_round: 0,
+            completed: Vec::new(),
+        }
+    }
+
+    /// Rebuild a session from a checkpoint. The world is re-derived from
+    /// the stored config (clients re-mint from ids), the warm state is
+    /// restored verbatim, and the next `step` continues exactly where the
+    /// checkpointed run stopped.
+    pub fn resume(ckpt: FleetCheckpoint) -> Result<FleetSession> {
+        anyhow::ensure!(
+            ckpt.next_round == ckpt.rounds.len(),
+            "checkpoint cursor (round {}) does not match its {} completed rounds",
+            ckpt.next_round,
+            ckpt.rounds.len()
+        );
+        anyhow::ensure!(
+            ckpt.prev_assign.len() == ckpt.prev_roster_len,
+            "checkpoint roster ({} assigned) does not match prev_roster_len {}",
+            ckpt.prev_assign.len(),
+            ckpt.prev_roster_len
+        );
+        let world = ckpt.cfg.scenario.fleet_world(ckpt.world_max_clients);
+        let n_helpers = world.n_helpers();
+        for (&id, &h) in &ckpt.prev_assign {
+            anyhow::ensure!(
+                h < n_helpers,
+                "checkpoint assigns client {id} to helper {h}, but the world has {n_helpers} helpers"
+            );
+        }
+        let mut session = FleetSession::with_world(ckpt.cfg, world);
+        session.minted =
+            ckpt.prev_assign.keys().map(|&id| (id, session.world.mint_client(id))).collect();
+        session.prev_assign = ckpt.prev_assign;
+        session.prev_roster_len = ckpt.prev_roster_len;
+        session.last_full_gap = ckpt.last_full_gap;
+        session.next_round = ckpt.next_round;
+        session.completed = ckpt.rounds;
+        Ok(session)
+    }
+
+    /// Snapshot the warm state (plus the completed rounds, so a resumed
+    /// run's final report and sidecars are self-contained).
+    pub fn checkpoint(&self) -> FleetCheckpoint {
+        FleetCheckpoint {
+            cfg: self.cfg.clone(),
+            world_max_clients: self.world.max_clients,
+            next_round: self.next_round,
+            prev_roster_len: self.prev_roster_len,
+            last_full_gap: self.last_full_gap,
+            prev_assign: self.prev_assign.clone(),
+            rounds: self.completed.clone(),
+        }
+    }
+
+    pub fn cfg(&self) -> &FleetCfg {
+        &self.cfg
+    }
+
+    /// Round the next [`step`](FleetSession::step) must carry.
+    pub fn next_round(&self) -> usize {
+        self.next_round
+    }
+
+    /// Rounds already stepped (the resumed prefix included).
+    pub fn completed(&self) -> &[RoundReport] {
+        &self.completed
+    }
+
+    /// Live roster ids (sorted) — the membership the next event's
+    /// departures are validated against.
+    pub fn roster(&self) -> Vec<u64> {
+        self.prev_assign.keys().copied().collect()
+    }
+
+    /// Round-0 membership (ids `0..base_clients`). The generated stream's
+    /// first event lists the base population in `roster` without arrival
+    /// events, so external round-0 lines are validated against this
+    /// implicit previous roster rather than an empty one.
+    pub fn base_roster(&self) -> Vec<u64> {
+        (0..self.world.base_clients() as u64).collect()
+    }
+
+    /// Roster cap the world's wedge-free memory repair was sized for.
+    pub fn max_clients(&self) -> usize {
+        self.world.max_clients
+    }
+
+    /// Size of the minted-client cache (== live roster size; exposed for
+    /// the long-horizon bounded-state tests).
+    pub fn minted_len(&self) -> usize {
+        self.minted.len()
+    }
+
+    /// The full event stream this session's config generates — the same
+    /// stream the batch entry points replay. Because rounds are drawn
+    /// sequentially from one seeded RNG, a stream generated for N rounds
+    /// is a byte-identical prefix of the stream for M > N rounds, which
+    /// is what makes `--resume` with a longer `--rounds` horizon sound.
+    pub fn event_stream(&self) -> Vec<RoundEvents> {
+        events::generate(
+            self.world.base_clients(),
+            &self.cfg.churn,
+            self.cfg.scenario.seed ^ fnv(&self.cfg.scenario.spec.name),
+        )
+    }
+
+    /// Extend (or confirm) the run horizon — used by `psl fleet --resume
+    /// --rounds N`. Rejects horizons behind the cursor.
+    pub fn extend_rounds(&mut self, rounds: usize) -> Result<()> {
+        anyhow::ensure!(
+            rounds >= self.next_round,
+            "--rounds {rounds} is behind the checkpoint (already completed {} rounds)",
+            self.next_round
+        );
+        self.cfg.churn.rounds = rounds;
+        Ok(())
+    }
+
+    /// Advance one round: mint/evict clients to match the event's roster,
+    /// decide repair vs full re-solve exactly as the orchestrator policy
+    /// dictates, and record the round. Panics if the event does not carry
+    /// the expected round number (external inputs are validated upstream
+    /// by [`RoundEvents::from_json`]).
+    pub fn step(&mut self, ev: &RoundEvents) -> RoundReport {
+        assert_eq!(
+            ev.round, self.next_round,
+            "event round {} does not continue the session (expected {})",
+            ev.round, self.next_round
+        );
+        // Evict departures before minting arrivals: ids are never reused,
+        // so the cache tracks the live roster exactly and a long run
+        // holds O(max_clients) state.
+        for id in &ev.departures {
+            self.minted.remove(id);
+        }
+        let world = &self.world;
+        for &id in &ev.roster {
+            self.minted.entry(id).or_insert_with(|| world.mint_client(id));
+        }
+        debug_assert_eq!(self.minted.len(), ev.roster.len(), "minted cache out of sync with roster");
+
+        let cfg = &self.cfg;
+        let admm_cfg = &self.admm_cfg;
+        let slot_ms = self.slot_ms;
+        let table = self.table.as_ref();
+        let last_full_gap = self.last_full_gap;
+        let roster: Vec<&FleetClient> = ev.roster.iter().map(|id| &self.minted[id]).collect();
+        let ms = world.instance(&roster);
+        let inst = ms.quantize(slot_ms);
+        let churn_frac = ev.churn_fraction(self.prev_roster_len);
+        let lb_raw = inst.makespan_lower_bound();
+        let lb = lb_raw.max(1);
+        // The auto policy's per-round consult (None for other policies or
+        // when nothing fires). A measured frontier firing is FullAuto; a
+        // family the table does not cover falls back to the static churn
+        // threshold and is recorded as FullChurn, so decision analyses
+        // can separate data-driven re-solves from the fallback.
+        let auto_full: Option<Decision> = if cfg.policy == Policy::Auto {
+            table.and_then(|t| match t.lookup(&cfg.scenario.spec.name, roster.len(), inst.n_helpers) {
+                Some(entry) => match entry.frontier_churn {
+                    Some(frontier) if churn_frac >= frontier => Some(Decision::FullAuto),
+                    _ => None,
+                },
+                None if churn_frac > cfg.churn_threshold => Some(Decision::FullChurn),
+                None => None,
+            })
+        } else {
+            None
+        };
+        let full_solve = |work_base: u64| -> ((Schedule, Option<strategy::Method>), u64) {
+            // The wedge-free world guarantees a greedy assignment exists,
+            // so a full solve can never come up empty.
+            let (s, m) = strategy::solve(&inst, admm_cfg)
+                .or_else(|| greedy::solve(&inst).map(|s| (s, strategy::Method::BalancedGreedy)))
+                .expect("wedge-free world must admit a greedy assignment");
+            let w = work_base + full_work(&inst, m, admm_cfg);
+            ((s, Some(m)), w)
+        };
+
+        let (decision, schedule, repair_moves, placed, work) = if roster.is_empty() {
+            (Decision::Empty, None, 0, 0, 0u64)
+        } else if ev.round == 0 || cfg.policy == Policy::FullEveryRound {
+            let d = if ev.round == 0 { Decision::FullInitial } else { Decision::FullPolicy };
+            let (s, w) = full_solve(0);
+            (d, Some(s), 0, 0, w)
+        } else if cfg.policy == Policy::Incremental && churn_frac > cfg.churn_threshold {
+            let (s, w) = full_solve(0);
+            (Decision::FullChurn, Some(s), 0, 0, w)
+        } else if let Some(d) = auto_full {
+            let (s, w) = full_solve(0);
+            (d, Some(s), 0, 0, w)
+        } else {
+            let mut work = 0u64;
+            match repair_assignment(&inst, &ev.roster, &self.prev_assign, &mut work) {
+                Some(rep) => {
+                    let s = fcfs_schedule(&inst, rep.assignment);
+                    let gap = s.makespan(&inst) as f64 / lb as f64;
+                    if matches!(cfg.policy, Policy::Incremental | Policy::Auto)
+                        && gap > cfg.gap_threshold * last_full_gap
+                    {
+                        // The repair is discarded: report no repair stats
+                        // for the kept schedule, but its effort still
+                        // counts in the work proxy (it was spent).
+                        let (s, w) = full_solve(work);
+                        (Decision::FullGap, Some(s), 0, 0, w)
+                    } else {
+                        (Decision::Repair, Some((s, None)), rep.moves, rep.placed, work)
+                    }
+                }
+                // Defensive: the wedge-free world makes this unreachable,
+                // but an unplaceable arrival must trigger a full solve,
+                // not a panic.
+                None => {
+                    let (s, w) = full_solve(work);
+                    (Decision::FullInfeasible, Some(s), 0, 0, w)
+                }
+            }
+        };
+        if decision.is_full() {
+            if let Some((s, _)) = &schedule {
+                self.last_full_gap = s.makespan(&inst) as f64 / lb as f64;
+            }
+        }
+
+        let (makespan_slots, preemptions, period_ms, method) = match &schedule {
+            Some((s, m)) => {
+                debug_assert!(s.is_feasible(&inst), "round {} schedule infeasible", ev.round);
+                let e = replay_epoch(&ms, s, cfg.epoch_batches.max(1));
+                (s.makespan(&inst), s.preemptions(), e.period_ms, m.map(|m| m.name()))
+            }
+            None => (0, 0, 0.0, None),
+        };
+
+        let round_report = RoundReport {
+            round: ev.round,
+            n_clients: roster.len(),
+            arrivals: ev.arrivals.len(),
+            departures: ev.departures.len(),
+            decision: decision.name(),
+            method,
+            makespan_slots,
+            makespan_ms: makespan_slots as f64 * slot_ms,
+            lower_bound: lb_raw,
+            churn_frac,
+            repair_moves,
+            placed_arrivals: placed,
+            work_units: work,
+            period_ms,
+            preemptions,
+        };
+
+        self.prev_assign = match &schedule {
+            Some((s, _)) => roster.iter().zip(&s.assignment.helper_of).map(|(c, &i)| (c.id, i)).collect(),
+            None => BTreeMap::new(),
+        };
+        self.prev_roster_len = roster.len();
+        self.next_round += 1;
+        self.completed.push(round_report.clone());
+        round_report
+    }
+
+    /// Finish the session: the same [`FleetReport`] the batch entry
+    /// points produce (resumed prefixes included).
+    pub fn into_report(self) -> FleetReport {
+        FleetReport::new(
+            format!(
+                "fleet:{}/{} J={} I={} seed={}",
+                self.cfg.scenario.spec.name,
+                self.cfg.scenario.model.name(),
+                self.cfg.scenario.n_clients,
+                self.cfg.scenario.n_helpers,
+                self.cfg.scenario.seed
+            ),
+            self.cfg.policy.name().to_string(),
+            self.slot_ms,
+            self.completed,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fleet::events::ChurnCfg;
+    use crate::fleet::orchestrator::run;
+    use crate::instance::profiles::Model;
+    use crate::instance::scenario::{Scenario, ScenarioCfg};
+
+    fn cfg(policy: Policy, rounds: usize) -> FleetCfg {
+        let scen = ScenarioCfg::new(Scenario::S4StragglerTail, Model::Vgg19, 10, 3, 7);
+        let mut churn = ChurnCfg::stationary(10);
+        churn.rounds = rounds;
+        FleetCfg::new(scen, churn, policy)
+    }
+
+    #[test]
+    fn stepping_the_session_matches_the_batch_run() {
+        for policy in [Policy::Incremental, Policy::Auto, Policy::FullEveryRound] {
+            let batch = run(&cfg(policy, 8));
+            let mut session = FleetSession::new(cfg(policy, 8));
+            let stream = session.event_stream();
+            for ev in &stream {
+                session.step(ev);
+            }
+            let stepped = session.into_report();
+            assert_eq!(
+                stepped.to_json().pretty(),
+                batch.to_json().pretty(),
+                "policy {}",
+                policy.name()
+            );
+        }
+    }
+
+    #[test]
+    fn checkpoint_resume_continues_byte_identically() {
+        let straight = run(&cfg(Policy::Incremental, 8));
+        let mut first = FleetSession::new(cfg(Policy::Incremental, 8));
+        let stream = first.event_stream();
+        for ev in &stream[..4] {
+            first.step(ev);
+        }
+        let ckpt = first.checkpoint();
+        assert_eq!(ckpt.next_round, 4);
+        let mut resumed = FleetSession::resume(ckpt).unwrap();
+        assert_eq!(resumed.next_round(), 4);
+        // The resumed session regenerates the same stream and continues.
+        let stream2 = resumed.event_stream();
+        assert_eq!(stream2, stream, "config regenerates the identical event stream");
+        for ev in &stream2[4..] {
+            resumed.step(ev);
+        }
+        assert_eq!(resumed.into_report().to_json().pretty(), straight.to_json().pretty());
+    }
+
+    #[test]
+    fn departures_evict_minted_clients() {
+        let scen = ScenarioCfg::new(Scenario::S1, Model::ResNet101, 4, 2, 3);
+        let world = scen.fleet_world(8);
+        let stream = vec![
+            RoundEvents { round: 0, departures: vec![], arrivals: vec![], roster: vec![0, 1, 2, 3] },
+            RoundEvents { round: 1, departures: vec![0, 1, 2, 3], arrivals: vec![], roster: vec![] },
+            RoundEvents { round: 2, departures: vec![], arrivals: vec![4, 5], roster: vec![4, 5] },
+        ];
+        let churn = ChurnCfg { rounds: 3, arrival_rate: 0.0, departure_prob: 0.0, max_clients: 8 };
+        let mut session = FleetSession::with_world(FleetCfg::new(scen, churn, Policy::Incremental), world);
+        session.step(&stream[0]);
+        assert_eq!(session.minted_len(), 4);
+        session.step(&stream[1]);
+        assert_eq!(session.minted_len(), 0, "departed clients are evicted, not retained forever");
+        session.step(&stream[2]);
+        assert_eq!(session.minted_len(), 2);
+        assert_eq!(session.roster(), vec![4, 5]);
+    }
+
+    #[test]
+    fn extend_rounds_rejects_horizons_behind_the_cursor() {
+        let mut session = FleetSession::new(cfg(Policy::Incremental, 4));
+        let stream = session.event_stream();
+        for ev in &stream {
+            session.step(ev);
+        }
+        assert!(session.extend_rounds(2).is_err());
+        session.extend_rounds(6).unwrap();
+        assert_eq!(session.cfg().churn.rounds, 6);
+    }
+
+    #[test]
+    #[should_panic(expected = "does not continue the session")]
+    fn step_rejects_out_of_order_events() {
+        let mut session = FleetSession::new(cfg(Policy::Incremental, 4));
+        let stream = session.event_stream();
+        session.step(&stream[1]);
+    }
+}

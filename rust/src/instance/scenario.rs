@@ -686,6 +686,11 @@ impl ScenarioCfg {
     /// bounds the roster size the world's memory repair must support (the
     /// churn process enforces the same cap on arrivals).
     pub fn fleet_world(&self, max_clients: usize) -> FleetWorld {
+        // A helper-less world can never place anyone: the wedge-free
+        // guarantee below (and every repair built on it) assumes I ≥ 1,
+        // so reject the configuration here instead of letting repair
+        // misreport each round as full-infeasible.
+        assert!(self.n_helpers >= 1, "fleet worlds require at least one helper (I >= 1), got I = 0");
         let max_clients = max_clients.max(self.n_clients).max(1);
         let mut rng = Rng::seeded(
             self.seed ^ fnv(&self.spec.name) ^ fnv(self.model.name()).rotate_left(13) ^ fnv("fleet-helpers"),
@@ -1233,6 +1238,16 @@ mod tests {
                 assert!(w.mint_client(id).d_gb <= w.d_cap + 1e-12);
             }
         }
+    }
+
+    #[test]
+    #[should_panic(expected = "at least one helper")]
+    fn fleet_world_rejects_helper_less_configs() {
+        // I = 0 breaks the wedge-free guarantee the repair relies on, so
+        // construction must fail loudly instead of every later round
+        // reporting full-infeasible.
+        let cfg = ScenarioCfg::new(Scenario::S1, Model::ResNet101, 4, 0, 6);
+        cfg.fleet_world(8);
     }
 
     #[test]

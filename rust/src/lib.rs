@@ -43,9 +43,14 @@
 //! distributions with stable client ids, departures evicted), warm-started
 //! incremental re-solving with a drift-triggered full-solve fallback, and
 //! per-round reports (makespan, re-solve cost proxy, epoch-pipelined
-//! period). `psl fleet` drives a single run (streaming a round-by-round
-//! JSONL sidecar); [`bench::fleet`] runs the scenario × churn-rate ×
-//! policy grid.
+//! period). The round loop is a stepwise state machine
+//! ([`fleet::session::FleetSession`]) whose warm state checkpoints as a
+//! schema-checked artifact ([`fleet::checkpoint`]): `psl fleet` drives a
+//! single run (streaming round and event JSONL sidecars, snapshotting
+//! with `--checkpoint-every`, continuing byte-identically with
+//! `--resume`), `psl serve` ([`fleet::serve`]) exposes the same session
+//! as a stdin/stdout JSONL decision service, and [`bench::fleet`] runs
+//! the scenario × churn-rate × policy grid.
 //!
 //! ## Analytics
 //!

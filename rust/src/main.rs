@@ -49,6 +49,7 @@ fn dispatch(args: &Args) -> Result<()> {
         "sweep-slots" => cmd_sweep(args),
         "sweep" => cmd_sweep_grid(args),
         "fleet" => cmd_fleet(args),
+        "serve" => cmd_serve(args),
         "perf" => cmd_perf(args),
         "analyze" => cmd_analyze(args),
         "train" => cmd_train(args),
@@ -213,6 +214,48 @@ fn parsed_flag<T: std::str::FromStr>(args: &Args, key: &str, default: T) -> Resu
     }
 }
 
+/// `--checkpoint-every N`: absent → None, present → a count ≥ 1.
+fn optional_count_flag(args: &Args, key: &str) -> Result<Option<usize>> {
+    match args.flags.get(key) {
+        None => Ok(None),
+        Some(v) => {
+            let n: usize = v.parse().ok().with_context(|| format!("bad --{key} {v:?}"))?;
+            anyhow::ensure!(n >= 1, "--{key} must be >= 1, got {n}");
+            Ok(Some(n))
+        }
+    }
+}
+
+/// A checkpoint records the full run config; letting `--resume` override
+/// any of it would silently fork the run from its own history. Reject
+/// every recorded knob (only --rounds/--out/--checkpoint-every may
+/// accompany --resume).
+fn reject_recorded_flags(args: &Args) -> Result<()> {
+    for key in [
+        "scenario",
+        "model",
+        "j",
+        "i",
+        "seed",
+        "slot-ms",
+        "depart-prob",
+        "arrival-rate",
+        "max-clients",
+        "policy",
+        "policy-table",
+        "churn-threshold",
+        "gap-threshold",
+        "batches",
+    ] {
+        anyhow::ensure!(
+            !args.flags.contains_key(key),
+            "--{key} is recorded in the checkpoint and cannot be overridden on --resume \
+             (only --rounds, --out and --checkpoint-every apply)"
+        );
+    }
+    Ok(())
+}
+
 /// Parse a comma-separated list flag (`--scenarios 1,2,3`) into trimmed,
 /// non-empty items.
 fn csv_list(args: &Args, key: &str, default: &str) -> Vec<String> {
@@ -320,73 +363,119 @@ fn cmd_sweep_grid(args: &Args) -> Result<()> {
 
 /// `psl fleet`: one deterministic multi-round churn run (or, with
 /// `--grid`, the scenario × churn-rate × policy grid across threads).
+/// `--checkpoint-every N` snapshots the session as a resumable
+/// `psl-fleet-checkpoint` artifact; `--resume CKPT` continues one to the
+/// same final report and sidecars, byte for byte.
 fn cmd_fleet(args: &Args) -> Result<()> {
-    use psl::fleet::{ChurnCfg, FleetCfg, Policy};
+    use psl::fleet::{ChurnCfg, FleetCfg, FleetCheckpoint, FleetSession, Policy};
     if args.bool_of("grid") {
         return cmd_fleet_grid(args);
     }
-    let scenario = Scenario::parse(&args.str_of("scenario", "4")).context("bad --scenario")?;
-    let model = Model::parse(&args.str_of("model", "resnet101")).context("bad --model")?;
-    let j = args.usize_of("j", 10);
-    let i = args.usize_of("i", 2);
-    anyhow::ensure!(j >= 1 && i >= 1, "fleet needs -j >= 1 and -i >= 1");
-    let rounds: usize = parsed_flag(args, "rounds", 8)?;
-    anyhow::ensure!(rounds >= 1, "--rounds must be >= 1");
-    let policy = Policy::parse(&args.str_of("policy", "incremental"))
-        .context("bad --policy (incremental|full|repair-only|auto)")?;
-    // Start from the tested stationary defaults, then apply overrides.
-    let mut churn = ChurnCfg::stationary(j);
-    churn.rounds = rounds;
-    churn.departure_prob = parsed_flag(args, "depart-prob", churn.departure_prob)?;
-    anyhow::ensure!(
-        (0.0..=1.0).contains(&churn.departure_prob),
-        "--depart-prob must be in [0, 1], got {}",
-        churn.departure_prob
-    );
-    churn.arrival_rate = match args.flags.get("arrival-rate") {
-        Some(v) => v.parse().ok().with_context(|| format!("bad --arrival-rate {v:?}"))?,
-        // Stationary default: expected arrivals balance expected departures.
-        None => churn.departure_prob * j as f64,
-    };
-    anyhow::ensure!(
-        churn.arrival_rate >= 0.0 && churn.arrival_rate.is_finite(),
-        "--arrival-rate must be finite and >= 0, got {}",
-        churn.arrival_rate
-    );
-    churn.max_clients = parsed_flag(args, "max-clients", churn.max_clients)?;
-    let scen = psl::instance::scenario::ScenarioCfg::new(scenario, model, j, i, args.u64_of("seed", 42));
-    let mut cfg = FleetCfg::new(scen, churn, policy);
-    cfg.slot_ms = match args.flags.get("slot-ms") {
-        None => None,
-        Some(v) => {
-            let ms: f64 = v.parse().ok().with_context(|| format!("bad --slot-ms {v:?}"))?;
-            anyhow::ensure!(ms > 0.0, "--slot-ms must be positive, got {ms}");
-            Some(ms)
+    let checkpoint_every = optional_count_flag(args, "checkpoint-every")?;
+    let mut session = if let Some(ckpt_path) = args.flags.get("resume") {
+        reject_recorded_flags(args)?;
+        let mut session = FleetSession::resume(FleetCheckpoint::load(ckpt_path)?)?;
+        if let Some(v) = args.flags.get("rounds") {
+            let rounds: usize = v.parse().ok().with_context(|| format!("bad --rounds {v:?}"))?;
+            session.extend_rounds(rounds)?;
         }
-    };
-    cfg.churn_threshold = parsed_flag(args, "churn-threshold", cfg.churn_threshold)?;
-    cfg.gap_threshold = parsed_flag(args, "gap-threshold", cfg.gap_threshold)?;
-    cfg.epoch_batches = parsed_flag(args, "batches", cfg.epoch_batches)?;
-    if let Some(table_path) = args.flags.get("policy-table") {
+        // A serve-produced checkpoint may sit past its recorded horizon
+        // (serve ignores `rounds`); never regenerate a stream shorter
+        // than the cursor.
+        let horizon = session.cfg().churn.rounds.max(session.next_round());
+        session.extend_rounds(horizon)?;
+        session
+    } else {
+        let scenario = Scenario::parse(&args.str_of("scenario", "4")).context("bad --scenario")?;
+        let model = Model::parse(&args.str_of("model", "resnet101")).context("bad --model")?;
+        let j = args.usize_of("j", 10);
+        let i = args.usize_of("i", 2);
+        anyhow::ensure!(j >= 1 && i >= 1, "fleet needs -j >= 1 and -i >= 1");
+        let rounds: usize = parsed_flag(args, "rounds", 8)?;
+        anyhow::ensure!(rounds >= 1, "--rounds must be >= 1");
+        let policy = Policy::parse(&args.str_of("policy", "incremental"))
+            .context("bad --policy (incremental|full|repair-only|auto)")?;
+        // Start from the tested stationary defaults, then apply overrides.
+        let mut churn = ChurnCfg::stationary(j);
+        churn.rounds = rounds;
+        churn.departure_prob = parsed_flag(args, "depart-prob", churn.departure_prob)?;
         anyhow::ensure!(
-            policy == Policy::Auto,
-            "--policy-table only applies to --policy auto (got --policy {})",
-            policy.name()
+            (0.0..=1.0).contains(&churn.departure_prob),
+            "--depart-prob must be in [0, 1], got {}",
+            churn.departure_prob
         );
-        cfg.policy_table = Some(psl::fleet::PolicyTable::load(table_path)?);
+        churn.arrival_rate = match args.flags.get("arrival-rate") {
+            Some(v) => v.parse().ok().with_context(|| format!("bad --arrival-rate {v:?}"))?,
+            // Stationary default: expected arrivals balance expected departures.
+            None => churn.departure_prob * j as f64,
+        };
+        anyhow::ensure!(
+            churn.arrival_rate >= 0.0 && churn.arrival_rate.is_finite(),
+            "--arrival-rate must be finite and >= 0, got {}",
+            churn.arrival_rate
+        );
+        churn.max_clients = parsed_flag(args, "max-clients", churn.max_clients)?;
+        let scen = psl::instance::scenario::ScenarioCfg::new(scenario, model, j, i, args.u64_of("seed", 42));
+        let mut cfg = FleetCfg::new(scen, churn, policy);
+        cfg.slot_ms = match args.flags.get("slot-ms") {
+            None => None,
+            Some(v) => {
+                let ms: f64 = v.parse().ok().with_context(|| format!("bad --slot-ms {v:?}"))?;
+                anyhow::ensure!(ms > 0.0, "--slot-ms must be positive, got {ms}");
+                Some(ms)
+            }
+        };
+        cfg.churn_threshold = parsed_flag(args, "churn-threshold", cfg.churn_threshold)?;
+        cfg.gap_threshold = parsed_flag(args, "gap-threshold", cfg.gap_threshold)?;
+        cfg.epoch_batches = parsed_flag(args, "batches", cfg.epoch_batches)?;
+        if let Some(table_path) = args.flags.get("policy-table") {
+            anyhow::ensure!(
+                policy == Policy::Auto,
+                "--policy-table only applies to --policy auto (got --policy {})",
+                policy.name()
+            );
+            cfg.policy_table = Some(psl::fleet::PolicyTable::load(table_path)?);
+        }
+        FleetSession::new(cfg)
+    };
+
+    let out_name = args.str_of("out", "fleet");
+    let dir = std::path::Path::new("target/psl-bench");
+    std::fs::create_dir_all(dir)?;
+    let stream = session.event_stream();
+    let rounds = stream.len();
+    let start = session.next_round();
+    if start >= 1 {
+        // A resumed session must continue the stream its config
+        // regenerates; a serve checkpoint driven by external events has a
+        // different membership history and must go back through serve.
+        anyhow::ensure!(
+            stream[start - 1].roster == session.roster(),
+            "checkpoint roster does not match the generated event stream at round {} — \
+             this checkpoint was driven by external events; resume it with `psl serve --resume`",
+            start - 1
+        );
+    }
+
+    // Event-log sidecar: the full membership stream, in the exact line
+    // format `psl serve` consumes on stdin.
+    let events_path = dir.join(format!("{out_name}.events.jsonl"));
+    let events_text: String = stream.iter().map(|ev| ev.jsonl_line() + "\n").collect();
+    let events_err = std::fs::write(&events_path, &events_text).err();
+    if let Some(e) = &events_err {
+        eprintln!("warning: events log {} not written: {e}", events_path.display());
     }
 
     // Stream each finished round as a JSONL line next to the final JSON,
-    // so long-horizon runs leave a usable trace even if interrupted.
-    let out_name = args.str_of("out", "fleet");
-    let jsonl_dir = std::path::Path::new("target/psl-bench");
-    std::fs::create_dir_all(jsonl_dir)?;
-    let jsonl_path = jsonl_dir.join(format!("{out_name}.rounds.jsonl"));
+    // so long-horizon runs leave a usable trace even if interrupted. A
+    // resumed run replays its completed prefix first, so the sidecar is
+    // complete either way.
+    let jsonl_path = dir.join(format!("{out_name}.rounds.jsonl"));
     let jsonl_file = std::fs::File::create(&jsonl_path)
         .with_context(|| format!("create {}", jsonl_path.display()))?;
     let mut writer = std::io::BufWriter::new(jsonl_file);
     let mut io_err: Option<std::io::Error> = None;
-    let report = psl::fleet::run_streaming(&cfg, &mut |round| {
+    let mut sink = |round: &psl::fleet::RoundReport| {
         use std::io::Write;
         if io_err.is_none() {
             let res = writeln!(writer, "{}", round.jsonl_line()).and_then(|_| writer.flush());
@@ -394,12 +483,33 @@ fn cmd_fleet(args: &Args) -> Result<()> {
                 io_err = Some(e);
             }
         }
-    });
+    };
+    for r in session.completed() {
+        sink(r);
+    }
+    let ckpt_name = format!("{out_name}.ckpt");
+    for ev in &stream[start..] {
+        let round = session.step(ev);
+        sink(&round);
+        if let Some(every) = checkpoint_every {
+            // Unlike the sidecars, a failed snapshot defeats the point of
+            // checkpointing — fail the run.
+            if session.next_round() % every == 0 {
+                let path = session
+                    .checkpoint()
+                    .save(&ckpt_name)
+                    .with_context(|| format!("save checkpoint after round {}", round.round))?;
+                println!("checkpoint -> {}", path.display());
+            }
+        }
+    }
+    drop(sink);
     // The sidecar is a convenience trace: a write failure must not throw
     // away the completed run — warn and still save the final report.
     if let Some(e) = &io_err {
         eprintln!("warning: rounds stream {} truncated: {e}", jsonl_path.display());
     }
+    let report = session.into_report();
     println!("{} | policy {} | slot {} ms | {} rounds", report.label, report.policy, report.slot_ms, rounds);
     println!(
         "  {:>5} {:>3} {:>4} {:>4} {:<13} {:<8} {:>8} {:>12} {:>11} {:>6} {:>10}",
@@ -435,6 +545,89 @@ fn cmd_fleet(args: &Args) -> Result<()> {
     if io_err.is_none() {
         println!("rounds stream -> {}", jsonl_path.display());
     }
+    if events_err.is_none() {
+        println!("events log -> {}", events_path.display());
+    }
+    Ok(())
+}
+
+/// `psl serve`: the orchestrator as a long-lived decision service.
+/// [`RoundEvents`](psl::fleet::RoundEvents) JSONL on stdin (the
+/// `.events.jsonl` sidecar line format), one
+/// [`RoundReport`](psl::fleet::RoundReport) JSONL line per event on
+/// stdout, flushed per round. A `{"checkpoint": "name"}` control line —
+/// or `--checkpoint-every N` — snapshots the session as a resumable
+/// `psl-fleet-checkpoint` artifact. Diagnostics go to stderr, so stdout
+/// stays a pure report stream (diffable against a batch run's
+/// `.rounds.jsonl`).
+fn cmd_serve(args: &Args) -> Result<()> {
+    use psl::fleet::{serve, ChurnCfg, FleetCfg, FleetCheckpoint, FleetSession, Policy, ServeOpts};
+    let out_name = args.str_of("out", "serve");
+    let mut session = if let Some(ckpt_path) = args.flags.get("resume") {
+        reject_recorded_flags(args)?;
+        FleetSession::resume(FleetCheckpoint::load(ckpt_path)?)?
+    } else {
+        let scenario = Scenario::parse(&args.str_of("scenario", "4")).context("bad --scenario")?;
+        let model = Model::parse(&args.str_of("model", "resnet101")).context("bad --model")?;
+        let j = args.usize_of("j", 10);
+        let i = args.usize_of("i", 2);
+        anyhow::ensure!(j >= 1 && i >= 1, "serve needs -j >= 1 and -i >= 1");
+        let policy = Policy::parse(&args.str_of("policy", "incremental"))
+            .context("bad --policy (incremental|full|repair-only|auto)")?;
+        let max_clients: usize = parsed_flag(args, "max-clients", (2 * j).max(1))?;
+        // Events arrive on stdin, so the churn-process knobs are moot;
+        // the cap still sizes the world's wedge-free memory repair (and
+        // matches `psl fleet`'s default, so serve over a recorded
+        // `.events.jsonl` reproduces the batch run's reports exactly).
+        let churn = ChurnCfg { rounds: 1, arrival_rate: 0.0, departure_prob: 0.0, max_clients };
+        let scen = psl::instance::scenario::ScenarioCfg::new(scenario, model, j, i, args.u64_of("seed", 42));
+        let mut cfg = FleetCfg::new(scen, churn, policy);
+        cfg.slot_ms = match args.flags.get("slot-ms") {
+            None => None,
+            Some(v) => {
+                let ms: f64 = v.parse().ok().with_context(|| format!("bad --slot-ms {v:?}"))?;
+                anyhow::ensure!(ms > 0.0, "--slot-ms must be positive, got {ms}");
+                Some(ms)
+            }
+        };
+        cfg.churn_threshold = parsed_flag(args, "churn-threshold", cfg.churn_threshold)?;
+        cfg.gap_threshold = parsed_flag(args, "gap-threshold", cfg.gap_threshold)?;
+        cfg.epoch_batches = parsed_flag(args, "batches", cfg.epoch_batches)?;
+        if let Some(table_path) = args.flags.get("policy-table") {
+            anyhow::ensure!(
+                policy == Policy::Auto,
+                "--policy-table only applies to --policy auto (got --policy {})",
+                policy.name()
+            );
+            cfg.policy_table = Some(psl::fleet::PolicyTable::load(table_path)?);
+        }
+        FleetSession::new(cfg)
+    };
+    let opts = ServeOpts {
+        checkpoint_every: optional_count_flag(args, "checkpoint-every")?,
+        checkpoint_name: format!("{out_name}.ckpt"),
+    };
+    let cfg = session.cfg();
+    eprintln!(
+        "serve: fleet:{}/{} J={} I={} seed={} | policy {} | round {} | roster cap {} — events on stdin, reports on stdout",
+        cfg.scenario.spec.name,
+        cfg.scenario.model.name(),
+        cfg.scenario.n_clients,
+        cfg.scenario.n_helpers,
+        cfg.scenario.seed,
+        cfg.policy.name(),
+        session.next_round(),
+        session.max_clients()
+    );
+    let stdin = std::io::stdin();
+    let stdout = std::io::stdout();
+    let summary = serve(&mut session, stdin.lock(), stdout.lock(), &opts)?;
+    eprintln!(
+        "serve: {} rounds stepped, {} checkpoints (cursor at round {})",
+        summary.rounds,
+        summary.checkpoints,
+        session.next_round()
+    );
     Ok(())
 }
 

@@ -34,6 +34,16 @@ impl Method {
             Method::BalancedGreedy => "balanced-greedy",
         }
     }
+
+    /// Inverse of [`Method::name`] — fleet checkpoints round-trip the
+    /// recorded method string through this.
+    pub fn parse(s: &str) -> Option<Method> {
+        match s {
+            "admm" => Some(Method::Admm),
+            "balanced-greedy" => Some(Method::BalancedGreedy),
+            _ => None,
+        }
+    }
 }
 
 /// Instance-shape signals consumed by the §VII pick rule (and recorded in

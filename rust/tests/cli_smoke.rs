@@ -14,6 +14,21 @@ fn psl(args: &[&str]) -> (String, String, bool) {
     )
 }
 
+/// Like [`psl`], but with stdin wired to a file (for `psl serve`).
+fn psl_with_stdin(args: &[&str], stdin_path: &str) -> (String, String, bool) {
+    let file = std::fs::File::open(stdin_path).expect("open stdin file");
+    let out = Command::new(env!("CARGO_BIN_EXE_psl"))
+        .args(args)
+        .stdin(std::process::Stdio::from(file))
+        .output()
+        .expect("run psl binary");
+    (
+        String::from_utf8_lossy(&out.stdout).to_string(),
+        String::from_utf8_lossy(&out.stderr).to_string(),
+        out.status.success(),
+    )
+}
+
 #[test]
 fn help_prints_usage() {
     let (stdout, _, ok) = psl(&["help"]);
@@ -171,6 +186,95 @@ fn fleet_runs_and_is_byte_identical_across_runs() {
     std::fs::remove_file("target/psl-bench/cli-smoke-fleet-b.json").ok();
     std::fs::remove_file("target/psl-bench/cli-smoke-fleet-a.rounds.jsonl").ok();
     std::fs::remove_file("target/psl-bench/cli-smoke-fleet-b.rounds.jsonl").ok();
+}
+
+#[test]
+fn fleet_checkpoint_resume_is_byte_identical() {
+    let scenario = |extra: &[&str], out: &str| {
+        let mut v = vec![
+            "fleet", "--scenario", "4", "--model", "vgg19", "-j", "6", "-i", "2", "--seed", "5",
+        ];
+        v.extend_from_slice(extra);
+        v.extend_from_slice(&["--out", out]);
+        v
+    };
+    // Straight 8-round run.
+    let (stdout, stderr, ok) = psl(&scenario(&["--rounds", "8"], "cli-smoke-ckpt-straight"));
+    assert!(ok, "stdout={stdout} stderr={stderr}");
+    // Same run stopped at round 4 with a checkpoint.
+    let (stdout, stderr, ok) =
+        psl(&scenario(&["--rounds", "4", "--checkpoint-every", "4"], "cli-smoke-ckpt-part"));
+    assert!(ok, "stdout={stdout} stderr={stderr}");
+    assert!(stdout.contains("checkpoint ->"), "{stdout}");
+    let ckpt_path = "target/psl-bench/cli-smoke-ckpt-part.ckpt.json";
+    let ckpt_text = std::fs::read_to_string(ckpt_path).expect("checkpoint written");
+    assert!(ckpt_text.contains("\"kind\": \"psl-fleet-checkpoint\""), "schema-checked artifact");
+    // Resume to the full horizon.
+    let (stdout, stderr, ok) = psl(&[
+        "fleet", "--resume", ckpt_path, "--rounds", "8", "--out", "cli-smoke-ckpt-resumed",
+    ]);
+    assert!(ok, "stdout={stdout} stderr={stderr}");
+    // Final report and both sidecars must be byte-identical.
+    for suffix in [".json", ".rounds.jsonl", ".events.jsonl"] {
+        let a = std::fs::read_to_string(format!("target/psl-bench/cli-smoke-ckpt-straight{suffix}")).unwrap();
+        let b = std::fs::read_to_string(format!("target/psl-bench/cli-smoke-ckpt-resumed{suffix}")).unwrap();
+        assert_eq!(a, b, "resumed {suffix} differs from the straight run");
+    }
+    for name in ["cli-smoke-ckpt-straight", "cli-smoke-ckpt-part", "cli-smoke-ckpt-resumed"] {
+        for suffix in [".json", ".rounds.jsonl", ".events.jsonl", ".ckpt.json"] {
+            std::fs::remove_file(format!("target/psl-bench/{name}{suffix}")).ok();
+        }
+    }
+}
+
+#[test]
+fn fleet_resume_rejects_recorded_flags() {
+    let (stdout, stderr, ok) = psl(&[
+        "fleet", "--scenario", "4", "-j", "4", "-i", "2", "--seed", "3", "--rounds", "2",
+        "--checkpoint-every", "2", "--out", "cli-smoke-ckpt-conflict",
+    ]);
+    assert!(ok, "stdout={stdout} stderr={stderr}");
+    let ckpt = "target/psl-bench/cli-smoke-ckpt-conflict.ckpt.json";
+    let (_, stderr, ok) = psl(&["fleet", "--resume", ckpt, "--seed", "9"]);
+    assert!(!ok, "overriding a recorded knob must fail");
+    assert!(stderr.contains("recorded in the checkpoint"), "{stderr}");
+    for suffix in [".json", ".rounds.jsonl", ".events.jsonl", ".ckpt.json"] {
+        std::fs::remove_file(format!("target/psl-bench/cli-smoke-ckpt-conflict{suffix}")).ok();
+    }
+}
+
+#[test]
+fn serve_replays_a_recorded_event_log_byte_identically() {
+    // A batch run records its event stream; piping that stream through
+    // `psl serve` with the same scenario flags must reproduce the batch
+    // run's round reports exactly on stdout.
+    let (stdout, stderr, ok) = psl(&[
+        "fleet", "--scenario", "4", "--model", "vgg19", "-j", "6", "-i", "2", "--seed", "5",
+        "--rounds", "6", "--out", "cli-smoke-serve-src",
+    ]);
+    assert!(ok, "stdout={stdout} stderr={stderr}");
+    let rounds = std::fs::read_to_string("target/psl-bench/cli-smoke-serve-src.rounds.jsonl").unwrap();
+    let (stdout, stderr, ok) = psl_with_stdin(
+        &["serve", "--scenario", "4", "--model", "vgg19", "-j", "6", "-i", "2", "--seed", "5"],
+        "target/psl-bench/cli-smoke-serve-src.events.jsonl",
+    );
+    assert!(ok, "stdout={stdout} stderr={stderr}");
+    assert_eq!(stdout, rounds, "serve stdout == the batch run's rounds sidecar");
+    assert!(stderr.contains("6 rounds stepped"), "{stderr}");
+    for suffix in [".json", ".rounds.jsonl", ".events.jsonl"] {
+        std::fs::remove_file(format!("target/psl-bench/cli-smoke-serve-src{suffix}")).ok();
+    }
+}
+
+#[test]
+fn serve_rejects_discontinuous_events() {
+    let path = std::env::temp_dir().join(format!("psl-cli-serve-bad-{}.jsonl", std::process::id()));
+    std::fs::write(&path, "{\"round\": 7, \"arrivals\": [], \"departures\": []}\n").unwrap();
+    let (_, stderr, ok) = psl_with_stdin(&["serve", "-j", "4", "-i", "2"], path.to_str().unwrap());
+    assert!(!ok, "an out-of-order event must fail the serve loop");
+    assert!(stderr.contains("does not continue the session"), "{stderr}");
+    assert!(stderr.contains("event line 1"), "{stderr}");
+    std::fs::remove_file(&path).ok();
 }
 
 #[test]

@@ -1,0 +1,88 @@
+//! Long-horizon fleet-session guarantees: checkpoint/resume is
+//! byte-identical, and session state stays O(max_clients) no matter how
+//! many clients ever existed.
+
+use psl::fleet::{ChurnCfg, FleetCfg, FleetCheckpoint, FleetSession, Policy};
+use psl::instance::profiles::Model;
+use psl::instance::scenario::{Scenario, ScenarioCfg};
+use psl::util::json::Json;
+
+fn golden_cfg() -> FleetCfg {
+    let scen = ScenarioCfg::new(Scenario::S4StragglerTail, Model::Vgg19, 6, 2, 11);
+    let mut churn = ChurnCfg::stationary(6);
+    churn.rounds = 2000;
+    let mut cfg = FleetCfg::new(scen, churn, Policy::Incremental);
+    // One batch pair per round keeps the replay cost linear in rounds.
+    cfg.epoch_batches = 2;
+    cfg
+}
+
+/// The resume golden: a straight 2000-round run vs the same run
+/// checkpointed — through the full JSON text round trip — and resumed
+/// every 500 rounds. Final report and the round JSONL stream must match
+/// byte for byte.
+#[test]
+fn checkpointed_run_matches_straight_run_over_2000_rounds() {
+    let mut straight = FleetSession::new(golden_cfg());
+    let stream = straight.event_stream();
+    assert_eq!(stream.len(), 2000);
+    for ev in &stream {
+        straight.step(ev);
+    }
+    let straight_lines: Vec<String> = straight.completed().iter().map(|r| r.jsonl_line()).collect();
+    let straight_report = straight.into_report().to_json().pretty();
+
+    let mut session = FleetSession::new(golden_cfg());
+    let mut resumes = 0;
+    while session.next_round() < 2000 {
+        session.step(&stream[session.next_round()]);
+        let done = session.next_round();
+        if done % 500 == 0 && done < 2000 {
+            // Through the serialized text, exactly as the CLI would.
+            let text = session.checkpoint().to_json().pretty();
+            let ckpt = FleetCheckpoint::from_json(&Json::parse(&text).unwrap()).unwrap();
+            session = FleetSession::resume(ckpt).unwrap();
+            assert_eq!(session.next_round(), done, "resume keeps the cursor");
+            assert_eq!(session.event_stream(), stream, "config regenerates the identical stream");
+            resumes += 1;
+        }
+    }
+    assert_eq!(resumes, 3, "checkpointed at rounds 500, 1000, 1500");
+
+    let lines: Vec<String> = session.completed().iter().map(|r| r.jsonl_line()).collect();
+    assert_eq!(lines, straight_lines, "round JSONL stream is byte-identical");
+    assert_eq!(session.into_report().to_json().pretty(), straight_report, "final report is byte-identical");
+}
+
+/// Heavy churn for 1500 rounds: hundreds of distinct client ids pass
+/// through, but the session must only ever hold the live roster — the
+/// minted cache and the checkpointed warm state are bounded by the
+/// roster cap, not by the total ids seen.
+#[test]
+fn long_horizon_state_is_bounded_by_the_roster_cap() {
+    let cap = 8;
+    let scen = ScenarioCfg::new(Scenario::S1, Model::ResNet101, 4, 2, 5);
+    let churn = ChurnCfg { rounds: 1500, arrival_rate: 1.2, departure_prob: 0.3, max_clients: cap };
+    let mut cfg = FleetCfg::new(scen, churn, Policy::RepairOnly);
+    cfg.epoch_batches = 1;
+    let mut session = FleetSession::new(cfg);
+    let stream = session.event_stream();
+    let total_arrivals: usize = stream.iter().map(|ev| ev.arrivals.len()).sum();
+    assert!(
+        total_arrivals > 20 * cap,
+        "churn not heavy enough to expose a leak ({total_arrivals} arrivals)"
+    );
+    for ev in &stream {
+        let round = session.step(ev);
+        assert!(
+            session.minted_len() <= cap,
+            "round {}: minted cache grew to {} (> cap {cap})",
+            ev.round,
+            session.minted_len()
+        );
+        assert_eq!(session.minted_len(), round.n_clients, "cache tracks the live roster exactly");
+    }
+    let ckpt = session.checkpoint();
+    assert!(ckpt.prev_assign.len() <= cap, "warm state bounded: {} assignments", ckpt.prev_assign.len());
+    assert_eq!(ckpt.rounds.len(), 1500);
+}
