@@ -10,8 +10,9 @@
 //! re-solving overtakes incremental repair and serialize it as the
 //! [`PolicyTable`](crate::fleet::policy::PolicyTable) the fleet `auto`
 //! policy consults ([`frontier`]), diff perf-trajectory points across
-//! PRs ([`perfdiff`]), and summarize a fleet run's streamed
-//! `.rounds.jsonl` sidecar per decision ([`rounds`]).
+//! PRs ([`perfdiff`]), summarize a fleet run's streamed
+//! `.rounds.jsonl` sidecar per decision ([`rounds`]), and reduce
+//! `psl-shard` artifacts to per-cell stitching costs ([`shard`]).
 //!
 //! | Module | Role |
 //! |---|---|
@@ -19,6 +20,7 @@
 //! | [`frontier`] | churn-rate crossover scan → `PolicyTable` |
 //! | [`perfdiff`] | `--perf-diff` gate on solve/check/replay timings |
 //! | [`rounds`] | `--rounds` per-decision summary of `.rounds.jsonl` sidecars |
+//! | [`shard`] | `--shard` stitch-gap / migration summary of `psl-shard` artifacts |
 //!
 //! Everything is deterministic: the same artifact bytes always produce
 //! the same tables, frontiers and `PolicyTable` bytes, so analysis
@@ -28,8 +30,10 @@ pub mod frontier;
 pub mod grid;
 pub mod perfdiff;
 pub mod rounds;
+pub mod shard;
 
 pub use frontier::{compute_policy_table, frontiers, Frontier};
 pub use grid::{regime_tables, rows_from_doc, GridRow, RegimeCell, RegimeTable};
 pub use perfdiff::{PerfDiffReport, PerfRegression};
 pub use rounds::{summarize, DecisionSummary, RoundRow};
+pub use shard::{summaries_from_doc, ShardCellSummary};

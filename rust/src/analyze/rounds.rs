@@ -122,6 +122,9 @@ mod tests {
             work_units: work,
             period_ms: makespan * 0.8,
             preemptions: 0,
+            heterogeneity: 0.3,
+            placement_flexibility: 1.0,
+            tail_ratio: 1.1,
         }
         .jsonl_line()
     }

@@ -1,0 +1,139 @@
+//! `psl analyze --shard`: summarize a `psl-shard` artifact — where the
+//! stitched solve sits relative to its bounds, per grid cell.
+
+use crate::bench::artifact::{self, ArtifactKind};
+use crate::util::json::Json;
+use anyhow::{Context, Result};
+
+/// One grid cell of a shard artifact, reduced to the numbers that answer
+/// "what did sharding cost here?".
+#[derive(Clone, Debug, PartialEq)]
+pub struct ShardCellSummary {
+    pub scenario: String,
+    pub n_clients: usize,
+    pub n_helpers: usize,
+    pub n_shards: usize,
+    pub migrations: usize,
+    pub stitched_makespan_slots: usize,
+    /// stitched / max per-shard lower bound.
+    pub stitch_gap: f64,
+    /// stitched / monolithic lower bound — an upper bound on what
+    /// sharding can have cost vs. a perfect monolithic solve.
+    pub monolithic_gap: f64,
+    /// Max − min shard makespan, slots: the imbalance rebalancing works
+    /// against.
+    pub shard_spread_slots: usize,
+    /// Methods the shards picked, deduplicated in first-seen order.
+    pub methods: Vec<String>,
+}
+
+/// Parse the rows of a validated `psl-shard` document.
+pub fn summaries_from_doc(doc: &Json) -> Result<Vec<ShardCellSummary>> {
+    artifact::expect_kind(doc, ArtifactKind::Shard)?;
+    let rows = doc.get("rows").as_arr().context("psl-shard artifact: missing \"rows\"")?;
+    rows.iter().enumerate().map(|(k, row)| summary_of(row).with_context(|| format!("row {k}"))).collect()
+}
+
+fn summary_of(row: &Json) -> Result<ShardCellSummary> {
+    let int = |key: &str| -> Result<usize> {
+        row.get(key).as_usize().with_context(|| format!("bad {key:?}"))
+    };
+    let num = |key: &str| -> Result<f64> {
+        row.get(key).as_f64().with_context(|| format!("bad {key:?}"))
+    };
+    let shards = row.get("shards").as_arr().context("bad \"shards\"")?;
+    let mut methods: Vec<String> = Vec::new();
+    let mut min_mk = usize::MAX;
+    let mut max_mk = 0usize;
+    for s in shards {
+        let m = s.get("method").as_str().context("bad shard method")?.to_string();
+        if !methods.contains(&m) {
+            methods.push(m);
+        }
+        let mk = s.get("makespan_slots").as_usize().context("bad shard makespan")?;
+        min_mk = min_mk.min(mk);
+        max_mk = max_mk.max(mk);
+    }
+    let stitched = int("stitched_makespan_slots")?;
+    let mono_lb = int("monolithic_lb_slots")?.max(1);
+    Ok(ShardCellSummary {
+        scenario: row.get("scenario").as_str().context("bad \"scenario\"")?.to_string(),
+        n_clients: int("n_clients")?,
+        n_helpers: int("n_helpers")?,
+        n_shards: int("n_shards")?,
+        migrations: int("migrations")?,
+        stitched_makespan_slots: stitched,
+        stitch_gap: num("stitch_gap")?,
+        monolithic_gap: stitched as f64 / mono_lb as f64,
+        shard_spread_slots: if shards.is_empty() { 0 } else { max_mk - min_mk },
+        methods,
+    })
+}
+
+/// Render the summaries as the table `psl analyze --shard` prints.
+pub fn render_table(rows: &[ShardCellSummary]) -> String {
+    let mut out = String::new();
+    out.push_str(
+        "scenario              JxI        shards  migr  stitched  stitch-gap  mono-gap  spread  methods\n",
+    );
+    for r in rows {
+        out.push_str(&format!(
+            "{:<20}  {:>5}x{:<3}  {:>6}  {:>4}  {:>8}  {:>10.3}  {:>8.3}  {:>6}  {}\n",
+            r.scenario,
+            r.n_clients,
+            r.n_helpers,
+            r.n_shards,
+            r.migrations,
+            r.stitched_makespan_slots,
+            r.stitch_gap,
+            r.monolithic_gap,
+            r.shard_spread_slots,
+            r.methods.join(","),
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::instance::profiles::Model;
+    use crate::instance::scenario::Scenario;
+    use crate::shard::grid::{self, ShardGridCfg};
+    use crate::shard::ShardCfg;
+
+    /// Summaries are pinned to the real producer's bytes, not a
+    /// hand-written fixture.
+    fn real_doc() -> Json {
+        let cfg = ShardGridCfg {
+            scenarios: vec![Scenario::S6MegaHomogeneous],
+            model: Model::ResNet101,
+            sizes: vec![(80, 4)],
+            seed: 7,
+            slot_ms: None,
+            shard: ShardCfg { shard_clients: 20, ..ShardCfg::default() },
+            threads: 2,
+        };
+        grid::rows_to_json(&grid::run(&cfg).unwrap())
+    }
+
+    #[test]
+    fn summarizes_producer_rows() {
+        let rows = summaries_from_doc(&real_doc()).unwrap();
+        assert_eq!(rows.len(), 1);
+        let r = &rows[0];
+        assert_eq!(r.scenario, "s6-mega-homogeneous");
+        assert_eq!(r.n_shards, 4);
+        assert!(r.stitch_gap >= 1.0);
+        assert!(r.monolithic_gap >= 1.0);
+        assert!(!r.methods.is_empty());
+        let table = render_table(&rows);
+        assert!(table.contains("s6-mega-homogeneous"), "{table}");
+    }
+
+    #[test]
+    fn rejects_wrong_kind() {
+        let doc = artifact::envelope(artifact::ArtifactKind::Sweep, vec![("rows", Json::Arr(vec![]))]);
+        assert!(summaries_from_doc(&doc).is_err());
+    }
+}

@@ -21,11 +21,14 @@ use anyhow::{Context, Result};
 /// per-row `mean_churn_frac` field to `psl-fleet-grid` rows (the
 /// observed-churn unit the analyze frontier is measured in); v3 added
 /// the `psl-fleet-checkpoint` kind (fleet-session warm state + completed
-/// rounds) with no shape changes to existing kinds. Readers accept
-/// anything ≤ the current version; kind-specific readers give a
-/// "re-generate with this build" error when a field their version needs
-/// is absent.
-pub const SCHEMA_VERSION: u32 = 3;
+/// rounds) with no shape changes to existing kinds; v4 added the
+/// `psl-shard` kind (sharded hierarchical solve: per-shard + stitched
+/// metrics) and the per-round instance signals (`heterogeneity`,
+/// `placement_flexibility`, `tail_ratio`) in fleet round reports.
+/// Readers accept anything ≤ the current version; kind-specific readers
+/// give a "re-generate with this build" error when a field their version
+/// needs is absent.
+pub const SCHEMA_VERSION: u32 = 4;
 
 /// Every artifact kind the repo persists under `target/psl-bench/`.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -46,16 +49,20 @@ pub enum ArtifactKind {
     /// session's warm state + completed rounds, resumable via
     /// `psl fleet --resume`.
     FleetCheckpoint,
+    /// `psl shard` — sharded hierarchical solve rows: per-shard makespans
+    /// and methods plus the stitched global makespan and stitch gap.
+    Shard,
 }
 
 impl ArtifactKind {
-    pub const ALL: [ArtifactKind; 6] = [
+    pub const ALL: [ArtifactKind; 7] = [
         ArtifactKind::Sweep,
         ArtifactKind::Fleet,
         ArtifactKind::FleetGrid,
         ArtifactKind::Perf,
         ArtifactKind::PolicyTable,
         ArtifactKind::FleetCheckpoint,
+        ArtifactKind::Shard,
     ];
 
     /// The `kind` tag written into the document.
@@ -67,6 +74,7 @@ impl ArtifactKind {
             ArtifactKind::Perf => "psl-perf",
             ArtifactKind::PolicyTable => "psl-policy-table",
             ArtifactKind::FleetCheckpoint => "psl-fleet-checkpoint",
+            ArtifactKind::Shard => "psl-shard",
         }
     }
 

@@ -63,8 +63,14 @@ impl PerfCfg {
     /// still diffs cleanly against earlier default-grid points) plus the
     /// heterogeneous families at an ADMM-heavy size — (48, 6) keeps
     /// every family under the §VII greedy cutoff, so the preemptive ADMM
-    /// solve path is what gets timed — and a J=512 cell that stresses
-    /// the O(runs)-vs-O(slots) read paths beyond the default 256.
+    /// solve path is what gets timed — a J=512 cell that stresses the
+    /// O(runs)-vs-O(slots) read paths beyond the default 256, and two
+    /// mega cells (J=8192 and J=65536, both over the
+    /// [`SHARD_CLIENT_FRONTIER`](crate::solver::strategy::SHARD_CLIENT_FRONTIER))
+    /// that route through `Method::Sharded`, so the perf trajectory
+    /// measures where stitching loses vs. the monolithic solve. I=64
+    /// keeps the edge matrices O(J·64) — the mega axis is clients, not
+    /// the helper count.
     pub fn full() -> PerfCfg {
         PerfCfg {
             scenarios: vec![
@@ -74,7 +80,7 @@ impl PerfCfg {
                 Scenario::S6MegaHomogeneous,
             ],
             model: Model::ResNet101,
-            sizes: vec![(32, 4), (48, 6), (256, 16), (512, 32)],
+            sizes: vec![(32, 4), (48, 6), (256, 16), (512, 32), (8192, 64), (65536, 64)],
             seed: 42,
             iters: 3,
             warmup: 1,
@@ -464,9 +470,35 @@ mod tests {
             assert!(full.scenarios.contains(scenario), "default family {scenario:?} must stay in --full");
         }
         assert!(full.sizes.contains(&(48, 6)), "the ADMM-heavy size");
-        assert!(full.sizes.contains(&(512, 32)), "the new large cell");
+        assert!(full.sizes.contains(&(512, 32)), "the large monolithic cell");
+        assert!(full.sizes.contains(&(8192, 64)), "the first sharded mega cell");
+        assert!(full.sizes.contains(&(65536, 64)), "the second sharded mega cell");
         assert!(full.scenarios.contains(&Scenario::S3Clustered), "heterogeneous family added");
         assert_eq!(full.seed, dflt.seed, "same seed as the default trajectory");
+    }
+
+    #[test]
+    fn full_grid_mega_cells_route_to_sharded_and_large_stays_flat() {
+        use crate::solver::strategy::{pick_from_signals, Method, Signals, SHARD_CLIENT_FRONTIER};
+        // Signals-level check (generating a real 65536-client instance is
+        // a --full job, not a unit test): both mega sizes are over the
+        // frontier with ≥ 2 helpers, the J=512 cell is not.
+        for &(j, i) in &PerfCfg::full().sizes {
+            let s = Signals {
+                n_clients: j,
+                n_helpers: i,
+                heterogeneity: 0.2,
+                placement_flexibility: 1.0,
+                tail_ratio: 1.2,
+            };
+            let picked = pick_from_signals(&s);
+            if j >= SHARD_CLIENT_FRONTIER {
+                assert_eq!(picked, Method::Sharded, "{j}x{i}");
+            } else {
+                assert_ne!(picked, Method::Sharded, "{j}x{i}");
+            }
+        }
+        assert!(PerfCfg::full().sizes.iter().any(|&(j, _)| j >= SHARD_CLIENT_FRONTIER));
     }
 
     #[test]

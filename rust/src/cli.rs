@@ -12,8 +12,10 @@
 //!                                     (--checkpoint-every / --resume)
 //!   psl serve <scenario args>         stdin/stdout round-decision service
 //!   psl perf [--smoke|--full]         solve/check/replay perf trajectory
+//!   psl shard <grid args>             sharded hierarchical solve grid
 //!   psl analyze <grid.json>           regime tables + policy frontier
 //!   psl analyze --perf-diff OLD NEW   perf trajectory gate
+//!   psl analyze --shard FILE          stitch-gap summary of a shard artifact
 //!
 //! Common scenario args: --scenario 1..6  --model resnet101|vgg19  -j N
 //! -i N  --seed S  --slot-ms X. Run `psl help` for the full list.
@@ -118,6 +120,13 @@ COMMANDS
                 families and sizes, compare the run-length schedule
                 representation against the dense baseline, and write the
                 perf-trajectory artifact target/psl-bench/perf.json.
+                --full adds mega cells (8192x64, 65536x64) that route
+                through the sharded hierarchical solver.
+  shard         Partition mega-scale instances into helper cells, solve
+                the cells concurrently, stitch the per-shard schedules
+                into one global schedule and report the stitching gap.
+                Writes a deterministic psl-shard artifact under
+                target/psl-bench/ (thread-count independent).
   analyze       Consume target/psl-bench artifacts: aggregate a fleet
                 grid into per-family regime tables, compute the
                 churn-rate policy frontier (where full re-solving
@@ -126,7 +135,8 @@ COMMANDS
                 With --perf-diff OLD NEW: compare two perf artifacts and
                 exit non-zero on solve/check/replay slowdowns. With
                 --rounds FILE: per-decision summary of a fleet
-                .rounds.jsonl sidecar.
+                .rounds.jsonl sidecar. With --shard FILE: per-cell
+                stitch-gap / migration summary of a psl-shard artifact.
   help          This text.
 
 SCENARIO FLAGS (gen/solve/sweep-slots)
@@ -212,8 +222,21 @@ PERF FLAGS
   --iters N             timed reps per phase           [default 3]
   --smoke               tiny CI grid (8x2, 1 rep)
   --full                extended grid: + ADMM-heavy heterogeneous cells
-                        at 48x6 and a 512x32 cell
+                        at 48x6, a 512x32 cell, and sharded mega cells
+                        at 8192x64 and 65536x64
   --out NAME            output name under target/psl-bench [default perf]
+
+SHARD FLAGS
+  --scenarios LIST      comma list of families         [default 6]
+  --model NAME          resnet101|vgg19                [default resnet101]
+  --sizes LIST          comma list of JxI cells        [default 8192x64]
+  --seed S              RNG seed                       [default 42]
+  --slot-ms X           slot length |S_t| in ms        [default: model's]
+  --shard-clients N     target clients per cell        [default 1024]
+  --rebalance-gap X     rebalance when stitched/max-shard-lb > X [1.25]
+  --max-migrations N    cross-shard client moves cap   [default 4]
+  --threads N           worker threads                 [default: all cores]
+  --out NAME            output name under target/psl-bench [default shard]
 
 ANALYZE FLAGS
   <grid.json>           positional: a psl-fleet-grid artifact to analyze
@@ -222,6 +245,8 @@ ANALYZE FLAGS
   --tol X               relative timing tolerance      [default 0.25]
   --rounds FILE         summarize a fleet .rounds.jsonl sidecar per
                         decision instead
+  --shard FILE          summarize a psl-shard artifact (stitch gap,
+                        migrations, shard spread) instead
 
 SOLVE FLAGS
   --method admm|greedy|baseline|exact|strategy|all     [default all]

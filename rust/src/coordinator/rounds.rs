@@ -53,10 +53,7 @@ pub fn run(req: &TrainRequest) -> Result<TrainOutcome> {
     let inst = fleet_instance(req);
     let (schedule, method) =
         strategy::solve(&inst, &admm::AdmmCfg::default()).context("schedule infeasible")?;
-    let method = match method {
-        strategy::Method::Admm => "admm",
-        strategy::Method::BalancedGreedy => "balanced-greedy",
-    };
+    let method = method.name();
     let makespan = schedule.makespan(&inst);
     crate::log_info!(
         "fleet J={} I={}: method {method}, makespan {} slots ({:.1} s nominal)",

@@ -1,13 +1,29 @@
 //! A small fixed-size worker pool for CPU-parallel solving (per-helper
 //! subproblems are independent — Theorem 2's parallelization point).
 //! On this 1-core image it degenerates gracefully to sequential execution.
+//!
+//! Nested use is oversubscription-guarded: a job already running on a
+//! pool worker that calls [`run_parallel`] again gets the sequential
+//! fast path, so layered parallelism (a shard grid over shard solves
+//! over per-helper subproblems) multiplies to `workers`, not
+//! `workers^depth`.
 
+use std::cell::Cell;
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
 use std::thread;
 
+thread_local! {
+    /// True on threads spawned by [`run_parallel`] — nested calls on such
+    /// threads must not fan out again.
+    static IN_POOL: Cell<bool> = Cell::new(false);
+}
+
 /// Run `jobs` across up to `workers` threads; returns results in job
-/// order. Each job is an independent closure.
+/// order. Each job is an independent closure. When called from inside a
+/// pool worker (nested parallelism), the jobs run sequentially on the
+/// calling worker regardless of `workers` — the outer pool already owns
+/// the machine's parallelism.
 pub fn run_parallel<T, F>(workers: usize, jobs: Vec<F>) -> Vec<T>
 where
     T: Send + 'static,
@@ -17,7 +33,7 @@ where
     if n == 0 {
         return Vec::new();
     }
-    let workers = workers.max(1).min(n);
+    let workers = if IN_POOL.with(|f| f.get()) { 1 } else { workers.max(1).min(n) };
     if workers == 1 {
         return jobs.into_iter().map(|f| f()).collect();
     }
@@ -30,13 +46,16 @@ where
         handles.push(
             thread::Builder::new()
                 .name(format!("psl-pool-{w}"))
-                .spawn(move || loop {
-                    let job = queue.lock().unwrap().pop();
-                    match job {
-                        Some((idx, f)) => {
-                            let _ = tx.send((idx, f()));
+                .spawn(move || {
+                    IN_POOL.with(|f| f.set(true));
+                    loop {
+                        let job = queue.lock().unwrap().pop();
+                        match job {
+                            Some((idx, f)) => {
+                                let _ = tx.send((idx, f()));
+                            }
+                            None => break,
                         }
-                        None => break,
                     }
                 })
                 .expect("spawn pool worker"),
@@ -80,5 +99,31 @@ mod tests {
     fn empty_jobs() {
         let jobs: Vec<fn() -> u8> = vec![];
         assert!(run_parallel(4, jobs).is_empty());
+    }
+
+    #[test]
+    fn nested_calls_run_sequentially_on_the_outer_worker() {
+        // Each outer job asks for 8 more workers; the guard must keep all
+        // of its inner jobs on the outer worker's own thread.
+        let outer: Vec<Box<dyn FnOnce() -> bool + Send>> = (0..4usize)
+            .map(|_| {
+                Box::new(move || {
+                    let me = thread::current().id();
+                    let inner: Vec<Box<dyn FnOnce() -> thread::ThreadId + Send>> =
+                        (0..6usize).map(|_| Box::new(|| thread::current().id()) as _).collect();
+                    run_parallel(8, inner).into_iter().all(|id| id == me)
+                }) as _
+            })
+            .collect();
+        assert!(run_parallel(4, outer).into_iter().all(|ok| ok));
+    }
+
+    #[test]
+    fn guard_clears_for_fresh_top_level_calls() {
+        // The guard is a property of pool-spawned threads, not global
+        // state: a top-level call after a nested one still fans out.
+        let jobs: Vec<Box<dyn FnOnce() -> usize + Send>> =
+            (0..8usize).map(|k| Box::new(move || k + 1) as _).collect();
+        assert_eq!(run_parallel(4, jobs), (1..=8usize).collect::<Vec<_>>());
     }
 }

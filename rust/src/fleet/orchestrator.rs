@@ -323,6 +323,9 @@ pub(super) fn full_work(inst: &Instance, method: strategy::Method, admm: &AdmmCf
     match method {
         strategy::Method::Admm => edges * admm.max_iters as u64,
         strategy::Method::BalancedGreedy => edges,
+        // Sharded solves scan every edge once to partition, then solve
+        // cells whose edge sets partition the full edge set.
+        strategy::Method::Sharded => edges * 2,
     }
 }
 

@@ -39,6 +39,16 @@ pub struct RoundReport {
     /// [`crate::sim::epoch::replay_epoch`].
     pub period_ms: f64,
     pub preemptions: u32,
+    /// Instance-shape signal (§VII): CV of helper processing times.
+    /// Recorded every round so analyze can fold signal trajectories into
+    /// the policy frontier.
+    pub heterogeneity: f64,
+    /// Instance-shape signal: mean fraction of helpers whose memory can
+    /// host each client.
+    pub placement_flexibility: f64,
+    /// Instance-shape signal: p95/median of per-client best-edge
+    /// end-to-end times.
+    pub tail_ratio: f64,
 }
 
 impl RoundReport {
@@ -66,6 +76,9 @@ impl RoundReport {
             ("work_units", Json::Str(self.work_units.to_string())),
             ("period_ms", Json::Num(self.period_ms)),
             ("preemptions", Json::Num(self.preemptions as f64)),
+            ("heterogeneity", Json::Num(self.heterogeneity)),
+            ("placement_flexibility", Json::Num(self.placement_flexibility)),
+            ("tail_ratio", Json::Num(self.tail_ratio)),
         ])
     }
 
@@ -114,6 +127,19 @@ impl RoundReport {
                 f as u64
             }
         };
+        // The instance signals arrived with schema v4; a checkpoint
+        // without them cannot replay byte-identically, so fail with the
+        // registry's standard advice instead of inventing values.
+        let signal = |key: &str| -> anyhow::Result<f64> {
+            match doc.get(key) {
+                Json::Null => anyhow::bail!(
+                    "round report: no {key:?} — this artifact predates schema v{} signals; \
+                     re-generate it with this build",
+                    crate::bench::artifact::SCHEMA_VERSION
+                ),
+                v => v.as_f64().with_context(|| format!("round report: bad {key:?}")),
+            }
+        };
         Ok(RoundReport {
             round: int("round")?,
             n_clients: int("n_clients")?,
@@ -130,6 +156,9 @@ impl RoundReport {
             work_units,
             period_ms: num("period_ms")?,
             preemptions: int("preemptions")? as u32,
+            heterogeneity: signal("heterogeneity")?,
+            placement_flexibility: signal("placement_flexibility")?,
+            tail_ratio: signal("tail_ratio")?,
         })
     }
 }
@@ -255,6 +284,9 @@ mod tests {
             work_units: work,
             period_ms: makespan_ms * 0.8,
             preemptions: 0,
+            heterogeneity: 0.42,
+            placement_flexibility: 0.9,
+            tail_ratio: 1.5,
         }
     }
 
@@ -308,6 +340,22 @@ mod tests {
             obj.insert("decision".into(), Json::Str("nope".into()));
         }
         assert!(RoundReport::from_json(&doc).is_err());
+    }
+
+    #[test]
+    fn rounds_surface_instance_signals() {
+        let doc = report().rounds[0].to_json();
+        assert_eq!(doc.get("heterogeneity").as_f64(), Some(0.42));
+        assert_eq!(doc.get("placement_flexibility").as_f64(), Some(0.9));
+        assert_eq!(doc.get("tail_ratio").as_f64(), Some(1.5));
+        // Pre-v4 rounds (no signals) must fail loudly: a resumed run
+        // could not replay them byte-identically.
+        let mut old = doc.clone();
+        if let Json::Obj(obj) = &mut old {
+            obj.remove("heterogeneity");
+        }
+        let err = RoundReport::from_json(&old).unwrap_err().to_string();
+        assert!(err.contains("re-generate"), "{err}");
     }
 
     #[test]

@@ -243,6 +243,10 @@ impl FleetSession {
         let churn_frac = ev.churn_fraction(self.prev_roster_len);
         let lb_raw = inst.makespan_lower_bound();
         let lb = lb_raw.max(1);
+        // Instance-shape signals, computed once per round: full solves
+        // consume them for the §VII pick and the round report surfaces
+        // them for the analyze layer (ROADMAP item 5).
+        let sig = strategy::signals(&inst);
         // The auto policy's per-round consult (None for other policies or
         // when nothing fires). A measured frontier firing is FullAuto; a
         // family the table does not cover falls back to the static churn
@@ -263,7 +267,7 @@ impl FleetSession {
         let full_solve = |work_base: u64| -> ((Schedule, Option<strategy::Method>), u64) {
             // The wedge-free world guarantees a greedy assignment exists,
             // so a full solve can never come up empty.
-            let (s, m) = strategy::solve(&inst, admm_cfg)
+            let (s, m) = strategy::solve_with_signals(&inst, admm_cfg, &sig)
                 .or_else(|| greedy::solve(&inst).map(|s| (s, strategy::Method::BalancedGreedy)))
                 .expect("wedge-free world must admit a greedy assignment");
             let w = work_base + full_work(&inst, m, admm_cfg);
@@ -340,6 +344,9 @@ impl FleetSession {
             work_units: work,
             period_ms,
             preemptions,
+            heterogeneity: sig.heterogeneity,
+            placement_flexibility: sig.placement_flexibility,
+            tail_ratio: sig.tail_ratio,
         };
 
         self.prev_assign = match &schedule {

@@ -166,6 +166,40 @@ impl InstanceMs {
         inst
     }
 
+    /// Project the instance onto a subset of helpers (the shard layer's
+    /// helper cells). `keep` holds original helper indices, in the order
+    /// the projected instance should use. Clients are unchanged — pair
+    /// with [`restrict_clients`](Self::restrict_clients) to carve out a
+    /// full sub-instance. Callers must leave every remaining client a
+    /// feasible helper (the shard partitioner's memory fix-up guarantees
+    /// this); the debug-path validation enforces it.
+    pub fn restrict_helpers(&self, keep: &[usize]) -> InstanceMs {
+        assert!(keep.iter().all(|&i| i < self.n_helpers), "helper index out of range");
+        let pick = |v: &Vec<f64>| -> Vec<f64> {
+            let mut out = Vec::with_capacity(keep.len() * self.n_clients);
+            for &i in keep {
+                out.extend_from_slice(&v[i * self.n_clients..(i + 1) * self.n_clients]);
+            }
+            out
+        };
+        let inst = InstanceMs {
+            n_clients: self.n_clients,
+            n_helpers: keep.len(),
+            r_ms: pick(&self.r_ms),
+            l_ms: pick(&self.l_ms),
+            lp_ms: pick(&self.lp_ms),
+            rp_ms: pick(&self.rp_ms),
+            p_ms: pick(&self.p_ms),
+            pp_ms: pick(&self.pp_ms),
+            d_gb: self.d_gb.clone(),
+            mem_gb: keep.iter().map(|&i| self.mem_gb[i]).collect(),
+            mu_ms: keep.iter().map(|&i| self.mu_ms[i]).collect(),
+            label: format!("{} [I'={}]", self.label, keep.len()),
+        };
+        inst.validate().expect("helper restriction must keep every client a feasible helper");
+        inst
+    }
+
     /// Structural sanity: vector lengths, positivity, memory feasibility.
     pub fn validate(&self) -> anyhow::Result<()> {
         let e = self.n_clients * self.n_helpers;
@@ -275,6 +309,40 @@ impl Instance {
     pub fn feasible_helpers(&self, j: usize) -> Vec<usize> {
         (0..self.n_helpers).filter(|&i| self.mem[i] >= self.d[j]).collect()
     }
+
+    /// Quantization-stable lift back to the continuous domain: the shard
+    /// layer partitions an already-quantized instance with the ms-level
+    /// projections ([`InstanceMs::restrict_clients`] /
+    /// [`InstanceMs::restrict_helpers`]) and re-quantizes each cell, so
+    /// `inst.to_ms().quantize(inst.slot_ms)` must reproduce `inst`
+    /// **exactly** — otherwise a stitched schedule could violate the
+    /// original slot counts. Each `s`-slot delay lifts to the midpoint
+    /// `(s - ½)·|S_t|` rather than `s·|S_t|`: `ceil` of the midpoint is
+    /// robustly `s` under floating-point division, while `ceil(s·|S_t| /
+    /// |S_t|)` can land on `s + 1` when the quotient rounds up. Zero-slot
+    /// delays stay 0; the 1-slot processing minimum is preserved by the
+    /// same midpoint argument.
+    pub fn to_ms(&self) -> InstanceMs {
+        let lift = |v: &Vec<u32>| -> Vec<f64> {
+            v.iter().map(|&s| (s as f64 - 0.5).max(0.0) * self.slot_ms).collect()
+        };
+        let ms = InstanceMs {
+            n_clients: self.n_clients,
+            n_helpers: self.n_helpers,
+            r_ms: lift(&self.r),
+            l_ms: lift(&self.l),
+            lp_ms: lift(&self.lp),
+            rp_ms: lift(&self.rp),
+            p_ms: lift(&self.p),
+            pp_ms: lift(&self.pp),
+            d_gb: self.d.clone(),
+            mem_gb: self.mem.clone(),
+            mu_ms: lift(&self.mu),
+            label: self.label.clone(),
+        };
+        debug_assert!(ms.validate().is_ok());
+        ms
+    }
 }
 
 #[cfg(test)]
@@ -353,6 +421,56 @@ mod tests {
         assert_eq!(sub.mem_gb, small().mem_gb, "helpers unchanged");
         assert!(sub.validate().is_ok());
         assert_eq!(sub.quantize(180.0).horizon(), 0);
+    }
+
+    #[test]
+    fn restrict_helpers_projects_rows() {
+        let ms = small(); // 6 clients, 2 helpers
+        let sub = ms.restrict_helpers(&[1]);
+        assert_eq!(sub.n_clients, 6);
+        assert_eq!(sub.n_helpers, 1);
+        for j in 0..6 {
+            assert_eq!(sub.p_ms[j], ms.p_ms[6 + j]);
+            assert_eq!(sub.r_ms[j], ms.r_ms[6 + j]);
+            assert_eq!(sub.lp_ms[j], ms.lp_ms[6 + j]);
+        }
+        assert_eq!(sub.d_gb, ms.d_gb);
+        assert_eq!(sub.mem_gb, vec![ms.mem_gb[1]]);
+        assert_eq!(sub.mu_ms, vec![ms.mu_ms[1]]);
+    }
+
+    #[test]
+    fn restrict_helpers_then_clients_commute() {
+        let ms = small();
+        let a = ms.restrict_helpers(&[0]).restrict_clients(&[1, 3]);
+        let b = ms.restrict_clients(&[1, 3]).restrict_helpers(&[0]);
+        assert_eq!(a.p_ms, b.p_ms);
+        assert_eq!(a.r_ms, b.r_ms);
+        assert_eq!(a.d_gb, b.d_gb);
+        assert_eq!(a.mem_gb, b.mem_gb);
+    }
+
+    #[test]
+    fn to_ms_quantize_roundtrips_exactly() {
+        // The shard layer depends on this being *exact*, including at slot
+        // lengths whose reciprocal is not a power of two.
+        for scenario in [Scenario::S1, Scenario::S2, Scenario::S4StragglerTail] {
+            for slot_ms in [0.1, 50.0, 180.0, 187.5, 550.0] {
+                let inst = ScenarioCfg::new(scenario, Model::ResNet101, 10, 3, 7)
+                    .generate()
+                    .quantize(slot_ms);
+                let back = inst.to_ms().quantize(slot_ms);
+                assert_eq!(back.r, inst.r, "slot {slot_ms}");
+                assert_eq!(back.l, inst.l);
+                assert_eq!(back.lp, inst.lp);
+                assert_eq!(back.rp, inst.rp);
+                assert_eq!(back.p, inst.p);
+                assert_eq!(back.pp, inst.pp);
+                assert_eq!(back.mu, inst.mu);
+                assert_eq!(back.d, inst.d);
+                assert_eq!(back.mem, inst.mem);
+            }
+        }
     }
 
     #[test]

@@ -63,6 +63,20 @@
 //! policy consults that table per round, and `--perf-diff` gates
 //! solve/check/replay timings across perf-trajectory points.
 //!
+//! ## Sharding
+//!
+//! Above the monolithic solvers sits the sharded hierarchical layer
+//! ([`shard`]): mega-scale instances (≥
+//! [`strategy::SHARD_CLIENT_FRONTIER`](solver::strategy::SHARD_CLIENT_FRONTIER)
+//! clients) partition into helper cells by link-regime/device-tier
+//! affinity, cells solve concurrently over [`exec::pool`] (each picking
+//! its own method from its own signals), and a coordinator stitching
+//! pass merges the per-cell schedules, measures the **stitch gap**
+//! (stitched makespan / max per-shard lower bound) and migrates
+//! boundary clients out of the worst cell when the gap warrants it.
+//! `psl shard` runs a scenario × size grid through this pipeline and
+//! persists the `psl-shard` artifact.
+//!
 //! ## Performance
 //!
 //! Schedules are run-length encoded ([`solver::schedule::SlotRuns`]):
@@ -100,6 +114,7 @@ pub mod exec;
 pub mod fleet;
 pub mod instance;
 pub mod runtime;
+pub mod shard;
 pub mod sim;
 pub mod slexec;
 pub mod solver;

@@ -51,6 +51,7 @@ fn dispatch(args: &Args) -> Result<()> {
         "fleet" => cmd_fleet(args),
         "serve" => cmd_serve(args),
         "perf" => cmd_perf(args),
+        "shard" => cmd_shard(args),
         "analyze" => cmd_analyze(args),
         "train" => cmd_train(args),
         other => anyhow::bail!("unknown command {other:?}; see `psl help`"),
@@ -739,6 +740,93 @@ fn cmd_perf(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `psl shard`: the sharded hierarchical solver as a grid runner —
+/// partition each scenario × size cell into helper cells, solve the
+/// cells concurrently over the worker pool, stitch the per-shard
+/// schedules into one global schedule and save the deterministic
+/// `psl-shard` artifact (per-shard makespans, stitched makespan,
+/// stitch gap vs. the per-shard and monolithic lower bounds).
+fn cmd_shard(args: &Args) -> Result<()> {
+    use psl::shard::{grid, ShardCfg, ShardGridCfg};
+    let scenarios = csv_list(args, "scenarios", "6")
+        .iter()
+        .map(|s| Scenario::parse(s).with_context(|| format!("bad scenario {s:?} in --scenarios")))
+        .collect::<Result<Vec<_>>>()?;
+    let sizes = csv_list(args, "sizes", "8192x64")
+        .iter()
+        .map(|s| {
+            let (j, i) = s.split_once('x').with_context(|| format!("size {s:?} is not JxI"))?;
+            let j = j.trim().parse::<usize>().ok().with_context(|| format!("bad J in {s:?}"))?;
+            let i = i.trim().parse::<usize>().ok().with_context(|| format!("bad I in {s:?}"))?;
+            anyhow::ensure!(j >= 1 && i >= 1, "size {s:?} needs J >= 1 and I >= 1");
+            Ok((j, i))
+        })
+        .collect::<Result<Vec<_>>>()?;
+    let slot_ms = match args.flags.get("slot-ms") {
+        None => None,
+        Some(v) => {
+            let ms: f64 = v.parse().ok().with_context(|| format!("bad --slot-ms {v:?}"))?;
+            anyhow::ensure!(ms > 0.0, "--slot-ms must be positive, got {ms}");
+            Some(ms)
+        }
+    };
+    let mut shard = ShardCfg::default();
+    shard.shard_clients = parsed_flag(args, "shard-clients", shard.shard_clients)?;
+    anyhow::ensure!(shard.shard_clients >= 1, "--shard-clients must be >= 1");
+    shard.rebalance_gap = parsed_flag(args, "rebalance-gap", shard.rebalance_gap)?;
+    anyhow::ensure!(
+        shard.rebalance_gap >= 1.0 && shard.rebalance_gap.is_finite(),
+        "--rebalance-gap must be >= 1, got {}",
+        shard.rebalance_gap
+    );
+    shard.max_migrations = parsed_flag(args, "max-migrations", shard.max_migrations)?;
+    let cfg = ShardGridCfg {
+        scenarios,
+        model: Model::parse(&args.str_of("model", "resnet101")).context("bad --model")?,
+        sizes,
+        seed: args.u64_of("seed", 42),
+        slot_ms,
+        shard,
+        threads: args.usize_of("threads", psl::exec::pool::default_workers()),
+    };
+    println!(
+        "shard: {} scenarios x {} sizes | target {} clients/cell | rebalance gap {} | <= {} migrations | {} threads",
+        cfg.scenarios.len(),
+        cfg.sizes.len(),
+        cfg.shard.shard_clients,
+        cfg.shard.rebalance_gap,
+        cfg.shard.max_migrations,
+        cfg.threads
+    );
+    let start = std::time::Instant::now();
+    let rows = grid::run(&cfg)?;
+    let wall = start.elapsed().as_secs_f64();
+    for r in &rows {
+        println!(
+            "  {} {}x{} (seed {}): {} shards, {} migrations -> stitched {} slots ({:.1} s) | stitch gap {:.3} | mono lb {} slots",
+            r.scenario.name(),
+            r.n_clients,
+            r.n_helpers,
+            r.seed,
+            r.n_shards,
+            r.migrations,
+            r.stitched_makespan_slots,
+            r.stitched_makespan_ms / 1000.0,
+            r.stitch_gap,
+            r.monolithic_lb_slots
+        );
+        for s in &r.shards {
+            println!(
+                "    shard {:>2} [helper {:>4}+]: {:>5} clients x {:>3} helpers | {:<8} | makespan {:>6} | lb {:>6}",
+                s.shard, s.min_helper, s.n_clients, s.n_helpers, s.method.name(), s.makespan_slots, s.lower_bound_slots
+            );
+        }
+    }
+    let path = grid::save(&args.str_of("out", "shard"), &rows)?;
+    println!("{} rows -> {} in {} ({} threads)", rows.len(), path.display(), psl::bench::fmt_s(wall), cfg.threads);
+    Ok(())
+}
+
 /// `psl analyze`: consume `target/psl-bench` artifacts. Two modes:
 /// default — load a fleet-grid artifact, print the per-(family × size)
 /// regime tables, compute the churn-rate policy frontier and save it as
@@ -752,8 +840,11 @@ fn cmd_analyze(args: &Args) -> Result<()> {
     if let Some(path) = args.flags.get("rounds") {
         return cmd_rounds_summary(path);
     }
+    if let Some(path) = args.flags.get("shard") {
+        return cmd_shard_summary(path);
+    }
     let grid_path = args.positional.first().context(
-        "usage: psl analyze <fleet-grid.json> [--out NAME]\n       psl analyze --perf-diff <old.json> <new.json> [--tol X]\n       psl analyze --rounds <file.rounds.jsonl>",
+        "usage: psl analyze <fleet-grid.json> [--out NAME]\n       psl analyze --perf-diff <old.json> <new.json> [--tol X]\n       psl analyze --rounds <file.rounds.jsonl>\n       psl analyze --shard <shard.json>",
     )?;
     let doc = psl::bench::artifact::load_expecting(grid_path, psl::bench::ArtifactKind::FleetGrid)?;
     let rows = psl::analyze::rows_from_doc(&doc)?;
@@ -835,6 +926,19 @@ fn cmd_rounds_summary(path: &str) -> Result<()> {
             s.total_work_units
         );
     }
+    Ok(())
+}
+
+/// `psl analyze --shard <shard.json>`: per-cell summary of a `psl-shard`
+/// artifact — where the stitched solve sits against its per-shard and
+/// monolithic lower bounds, how much rebalancing fired, and which
+/// methods the shards picked.
+fn cmd_shard_summary(path: &str) -> Result<()> {
+    let doc = psl::bench::artifact::load_expecting(path, psl::bench::ArtifactKind::Shard)?;
+    let rows = psl::analyze::summaries_from_doc(&doc)?;
+    anyhow::ensure!(!rows.is_empty(), "{path} contains no shard rows");
+    println!("shard: {} cells from {path}", rows.len());
+    print!("{}", psl::analyze::shard::render_table(&rows));
     Ok(())
 }
 

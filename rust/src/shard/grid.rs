@@ -1,0 +1,236 @@
+//! The `psl shard` grid runner: scenario × size cells solved through the
+//! full shard pipeline (partition → concurrent per-shard solves →
+//! stitch + rebalance), emitted as the `psl-shard` artifact.
+//!
+//! Like `psl sweep`, output is **thread-count invariant**: per-cell
+//! seeds are a pure function of the cell coordinates, cells run
+//! sequentially (the parallelism lives inside each cell's shard solves),
+//! and the artifact records no worker counts — the same grid config
+//! always produces the same bytes.
+
+use crate::bench::artifact::{self, ArtifactKind};
+use crate::instance::profiles::Model;
+use crate::instance::scenario::{Scenario, ScenarioCfg};
+use crate::solver::admm::AdmmCfg;
+use crate::solver::strategy::Method;
+use crate::util::json::Json;
+use crate::util::rng::fnv64;
+
+use super::partition::ShardCfg;
+use super::{solve_ms, ShardOutcome};
+
+/// Grid configuration for `psl shard`.
+#[derive(Clone, Debug)]
+pub struct ShardGridCfg {
+    pub scenarios: Vec<Scenario>,
+    pub model: Model,
+    /// (n_clients, n_helpers) cells.
+    pub sizes: Vec<(usize, usize)>,
+    pub seed: u64,
+    /// Slot length; `None` = the model profile's default.
+    pub slot_ms: Option<f64>,
+    pub shard: ShardCfg,
+    pub threads: usize,
+}
+
+/// One shard of one grid cell, as reported in the artifact.
+#[derive(Clone, Debug)]
+pub struct ShardRowShard {
+    pub shard: usize,
+    pub n_clients: usize,
+    pub n_helpers: usize,
+    /// Smallest original helper id — the shard's order-invariant identity.
+    pub min_helper: usize,
+    pub method: Method,
+    pub makespan_slots: u32,
+    pub lower_bound_slots: u32,
+}
+
+/// One grid cell: the partition's shape, per-shard metrics, and the
+/// stitched result.
+#[derive(Clone, Debug)]
+pub struct ShardRow {
+    pub scenario: Scenario,
+    pub model: Model,
+    pub n_clients: usize,
+    pub n_helpers: usize,
+    pub seed: u64,
+    pub slot_ms: f64,
+    pub n_shards: usize,
+    pub migrations: usize,
+    pub shards: Vec<ShardRowShard>,
+    pub stitched_makespan_slots: u32,
+    pub stitched_makespan_ms: f64,
+    pub max_shard_lb_slots: u32,
+    /// stitched makespan / max per-shard lower bound.
+    pub stitch_gap: f64,
+    /// The monolithic instance's trivial lower bound — what a perfect
+    /// unsharded solve could not beat.
+    pub monolithic_lb_slots: u32,
+}
+
+/// Per-cell seed: a pure function of the grid seed and the cell
+/// coordinates, so adding/removing/reordering cells never changes any
+/// other cell's instance (same discipline as `psl sweep`).
+pub fn cell_seed(seed: u64, scenario: Scenario, model: Model, j: usize, i: usize) -> u64 {
+    seed ^ fnv64(scenario.name())
+        ^ fnv64(model.name()).rotate_left(13)
+        ^ (j as u64).wrapping_mul(0x9e37_79b9_7f4a_7c15).rotate_left(29)
+        ^ (i as u64).wrapping_mul(0xc2b2_ae3d_27d4_eb4f).rotate_left(43)
+}
+
+fn row_of(cfg: &ShardGridCfg, scenario: Scenario, j: usize, i: usize) -> anyhow::Result<ShardRow> {
+    let seed = cell_seed(cfg.seed, scenario, cfg.model, j, i);
+    let ms = ScenarioCfg::new(scenario, cfg.model, j, i, seed).generate();
+    let slot_ms = cfg.slot_ms.unwrap_or(cfg.model.profile().default_slot_ms);
+    let out: ShardOutcome =
+        solve_ms(&ms, slot_ms, &cfg.shard, &AdmmCfg::default(), cfg.threads).ok_or_else(|| {
+            anyhow::anyhow!("{} {j}x{i}: shard solve failed (memory-wedged cell)", scenario.name())
+        })?;
+    let shards = out
+        .shards
+        .iter()
+        .enumerate()
+        .map(|(k, sh)| ShardRowShard {
+            shard: k,
+            n_clients: sh.cell.clients.len(),
+            n_helpers: sh.cell.helpers.len(),
+            min_helper: sh.cell.min_helper(),
+            method: sh.method,
+            makespan_slots: sh.makespan,
+            lower_bound_slots: sh.lower_bound,
+        })
+        .collect();
+    Ok(ShardRow {
+        scenario,
+        model: cfg.model,
+        n_clients: j,
+        n_helpers: i,
+        seed,
+        slot_ms,
+        n_shards: out.shards.len(),
+        migrations: out.stitch.migrations,
+        shards,
+        stitched_makespan_slots: out.stitch.makespan,
+        stitched_makespan_ms: out.stitch.makespan as f64 * slot_ms,
+        max_shard_lb_slots: out.stitch.max_shard_lb,
+        stitch_gap: out.stitch.stitch_gap,
+        monolithic_lb_slots: out.monolithic_lb,
+    })
+}
+
+/// Run the grid. Cells run sequentially in canonical (scenario, size)
+/// order; the shard-level parallelism inside each cell uses
+/// `cfg.threads` workers.
+pub fn run(cfg: &ShardGridCfg) -> anyhow::Result<Vec<ShardRow>> {
+    let mut rows = Vec::new();
+    for &scenario in &cfg.scenarios {
+        for &(j, i) in &cfg.sizes {
+            rows.push(row_of(cfg, scenario, j, i)?);
+        }
+    }
+    Ok(rows)
+}
+
+/// Serialize rows as the `psl-shard` artifact document.
+pub fn rows_to_json(rows: &[ShardRow]) -> Json {
+    let arr = rows
+        .iter()
+        .map(|r| {
+            let shards = r
+                .shards
+                .iter()
+                .map(|s| {
+                    Json::obj(vec![
+                        ("shard", Json::Num(s.shard as f64)),
+                        ("n_clients", Json::Num(s.n_clients as f64)),
+                        ("n_helpers", Json::Num(s.n_helpers as f64)),
+                        ("min_helper", Json::Num(s.min_helper as f64)),
+                        ("method", Json::Str(s.method.name().to_string())),
+                        ("makespan_slots", Json::Num(s.makespan_slots as f64)),
+                        ("lower_bound_slots", Json::Num(s.lower_bound_slots as f64)),
+                    ])
+                })
+                .collect();
+            Json::obj(vec![
+                ("scenario", Json::Str(r.scenario.name().to_string())),
+                ("model", Json::Str(r.model.name().to_string())),
+                ("n_clients", Json::Num(r.n_clients as f64)),
+                ("n_helpers", Json::Num(r.n_helpers as f64)),
+                ("seed", Json::Str(r.seed.to_string())),
+                ("slot_ms", Json::Num(r.slot_ms)),
+                ("n_shards", Json::Num(r.n_shards as f64)),
+                ("migrations", Json::Num(r.migrations as f64)),
+                ("shards", Json::Arr(shards)),
+                ("stitched_makespan_slots", Json::Num(r.stitched_makespan_slots as f64)),
+                ("stitched_makespan_ms", Json::Num(r.stitched_makespan_ms)),
+                ("max_shard_lb_slots", Json::Num(r.max_shard_lb_slots as f64)),
+                ("stitch_gap", Json::Num(r.stitch_gap)),
+                ("monolithic_lb_slots", Json::Num(r.monolithic_lb_slots as f64)),
+            ])
+        })
+        .collect();
+    artifact::envelope(ArtifactKind::Shard, vec![("rows", Json::Arr(arr))])
+}
+
+/// Persist under `target/psl-bench/<name>.json`.
+pub fn save(name: &str, rows: &[ShardRow]) -> std::io::Result<std::path::PathBuf> {
+    artifact::save(name, &rows_to_json(rows))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_cfg(threads: usize) -> ShardGridCfg {
+        ShardGridCfg {
+            scenarios: vec![Scenario::S6MegaHomogeneous],
+            model: Model::ResNet101,
+            sizes: vec![(96, 4)],
+            seed: 42,
+            slot_ms: None,
+            shard: ShardCfg { shard_clients: 24, ..ShardCfg::default() },
+            threads,
+        }
+    }
+
+    #[test]
+    fn grid_rows_carry_per_shard_and_stitched_metrics() {
+        let rows = run(&small_cfg(2)).unwrap();
+        assert_eq!(rows.len(), 1);
+        let r = &rows[0];
+        assert_eq!(r.n_shards, 4);
+        assert_eq!(r.shards.len(), 4);
+        assert_eq!(
+            r.stitched_makespan_slots,
+            r.shards.iter().map(|s| s.makespan_slots).max().unwrap()
+        );
+        assert!(r.stitch_gap >= 1.0);
+        assert!(r.stitched_makespan_slots >= r.monolithic_lb_slots);
+        assert!(r.stitched_makespan_ms > 0.0);
+    }
+
+    #[test]
+    fn grid_bytes_are_thread_count_invariant() {
+        let a = rows_to_json(&run(&small_cfg(1)).unwrap()).pretty();
+        let b = rows_to_json(&run(&small_cfg(8)).unwrap()).pretty();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn artifact_has_shard_kind_and_validates() {
+        let doc = rows_to_json(&run(&small_cfg(2)).unwrap());
+        assert_eq!(artifact::validate(&doc).unwrap(), ArtifactKind::Shard);
+        assert_eq!(doc.get("kind").as_str(), Some("psl-shard"));
+    }
+
+    #[test]
+    fn cell_seed_depends_on_every_coordinate() {
+        let base = cell_seed(1, Scenario::S1, Model::ResNet101, 32, 4);
+        assert_ne!(base, cell_seed(2, Scenario::S1, Model::ResNet101, 32, 4));
+        assert_ne!(base, cell_seed(1, Scenario::S2, Model::ResNet101, 32, 4));
+        assert_ne!(base, cell_seed(1, Scenario::S1, Model::Vgg19, 32, 4));
+        assert_ne!(base, cell_seed(1, Scenario::S1, Model::ResNet101, 64, 4));
+        assert_ne!(base, cell_seed(1, Scenario::S1, Model::ResNet101, 32, 8));
+    }
+}

@@ -1,0 +1,167 @@
+//! Sharded hierarchical solving for mega-scale instances — the repo's
+//! first above-the-solver hierarchy.
+//!
+//! The paper reaches near-optimality by decomposing ℙ per helper
+//! (Theorem 2); this layer applies the same idea one level up, where
+//! the monolithic solvers stop being affordable: partition the instance
+//! into **helper cells** by link-regime/device-tier affinity
+//! ([`partition`]), solve every cell concurrently with the flat §VII
+//! strategy ([`solve`]), and stitch the per-cell schedules into one
+//! global schedule with a bounded cross-cell rebalancing pass
+//! ([`stitch`]). MP-SL's multihop helper chains (PAPERS.md,
+//! arxiv 2402.00208) are exactly such cells with internal structure.
+//!
+//! | Module | Role |
+//! |---|---|
+//! | [`partition`] | deterministic helper cells, memory fix-up, [`ShardCfg`] |
+//! | [`solve`] | concurrent per-shard solves over [`crate::exec::pool`] |
+//! | [`stitch`] | merge → stitch gap → bounded boundary-client migration |
+//! | [`grid`] | `psl shard` grid runner + `psl-shard` artifact rows |
+//!
+//! Entry points: [`solve_ms`] from the continuous domain, and
+//! [`solve_quantized`] from an already-slotted [`Instance`] (what
+//! [`Method::Sharded`](crate::solver::strategy::Method) routes through —
+//! the instance is lifted with the quantization-stable
+//! [`Instance::to_ms`] so every cell re-quantizes to exactly the
+//! original slot counts). Results are thread-count and shard-order
+//! invariant; the worker count only changes wall-clock time.
+
+pub mod grid;
+pub mod partition;
+pub mod solve;
+pub mod stitch;
+
+pub use grid::{ShardGridCfg, ShardRow};
+pub use partition::{partition as partition_cells, sub_instance, ShardCell, ShardCfg, ShardPlan};
+pub use solve::{solve_shards, ShardSolved};
+pub use stitch::{merge, stitch_and_rebalance, StitchReport};
+
+use crate::instance::{Instance, InstanceMs};
+use crate::solver::admm::AdmmCfg;
+
+/// Everything one sharded solve produces: the final per-shard solutions
+/// (post-rebalance), the stitch report (with the merged global
+/// schedule), and the monolithic lower bound for context.
+#[derive(Clone, Debug)]
+pub struct ShardOutcome {
+    pub shards: Vec<ShardSolved>,
+    pub stitch: StitchReport,
+    /// Trivial lower bound of the *unsharded* instance, slots — the
+    /// floor a perfect monolithic solve could not beat. `stitch.makespan
+    /// / monolithic_lb` bounds what sharding can have cost.
+    pub monolithic_lb: u32,
+}
+
+/// Monolithic trivial lower bound computed edge-wise from the ms-level
+/// instance (same quantization as [`InstanceMs::quantize`]) without
+/// materializing the full slotted instance — at mega scale that
+/// materialization is the dominant allocation.
+fn monolithic_lb_ms(ms: &InstanceMs, slot_ms: f64) -> u32 {
+    let q = |v: f64| (v / slot_ms).ceil() as u32;
+    let q1 = |v: f64| q(v).max(1);
+    let mut lb = 0u32;
+    for j in 0..ms.n_clients {
+        let mut best = u32::MAX;
+        for i in 0..ms.n_helpers {
+            let e = ms.edge(i, j);
+            best = best.min(
+                q(ms.r_ms[e])
+                    + q1(ms.p_ms[e])
+                    + q(ms.l_ms[e])
+                    + q(ms.lp_ms[e])
+                    + q1(ms.pp_ms[e])
+                    + q(ms.rp_ms[e]),
+            );
+        }
+        lb = lb.max(best);
+    }
+    if ms.n_clients == 0 {
+        0
+    } else {
+        lb
+    }
+}
+
+/// Full pipeline from the continuous domain: partition → concurrent
+/// per-shard solves (`threads` pool workers) → stitch + rebalance.
+/// Returns `None` if some cell is unsolvable (memory-wedged beyond the
+/// partitioner's best-effort repair).
+pub fn solve_ms(
+    ms: &InstanceMs,
+    slot_ms: f64,
+    cfg: &ShardCfg,
+    admm_cfg: &AdmmCfg,
+    threads: usize,
+) -> Option<ShardOutcome> {
+    let plan = partition::partition(ms, cfg);
+    let shards = solve::solve_shards(ms, slot_ms, admm_cfg, &plan, threads)?;
+    let (stitch, shards) = stitch::stitch_and_rebalance(ms, slot_ms, admm_cfg, cfg, shards);
+    Some(ShardOutcome { shards, stitch, monolithic_lb: monolithic_lb_ms(ms, slot_ms) })
+}
+
+/// [`solve_ms`] from an already-quantized instance — the
+/// [`Method::Sharded`](crate::solver::strategy::Method) path. The lift
+/// through [`Instance::to_ms`] is quantization-stable, so the stitched
+/// schedule's slot counts match `inst` exactly and the returned
+/// schedule drops into any consumer of the original instance.
+pub fn solve_quantized(inst: &Instance, cfg: &ShardCfg, threads: usize) -> Option<ShardOutcome> {
+    solve_quantized_with(inst, cfg, &AdmmCfg::default(), threads)
+}
+
+/// [`solve_quantized`] with an explicit ADMM config.
+pub fn solve_quantized_with(
+    inst: &Instance,
+    cfg: &ShardCfg,
+    admm_cfg: &AdmmCfg,
+    threads: usize,
+) -> Option<ShardOutcome> {
+    let ms = inst.to_ms();
+    let mut out = solve_ms(&ms, inst.slot_ms, cfg, admm_cfg, threads)?;
+    // The edge-wise bound on the lifted instance equals the original's by
+    // quantization stability; use the original's directly for clarity.
+    out.monolithic_lb = inst.makespan_lower_bound();
+    Some(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::instance::profiles::Model;
+    use crate::instance::scenario::{Scenario, ScenarioCfg};
+
+    #[test]
+    fn outcome_is_feasible_and_bounded_below() {
+        let ms = ScenarioCfg::new(Scenario::S3Clustered, Model::ResNet101, 180, 6, 21).generate();
+        let cfg = ShardCfg { shard_clients: 45, ..ShardCfg::default() };
+        let out = solve_ms(&ms, 180.0, &cfg, &AdmmCfg::default(), 3).unwrap();
+        let inst = ms.quantize(180.0);
+        assert!(out.stitch.schedule.is_feasible(&inst));
+        assert_eq!(out.stitch.makespan, out.stitch.schedule.makespan(&inst));
+        assert!(out.stitch.makespan >= out.monolithic_lb);
+        assert_eq!(out.monolithic_lb, inst.makespan_lower_bound());
+    }
+
+    #[test]
+    fn quantized_entry_matches_ms_entry() {
+        let ms = ScenarioCfg::new(Scenario::S1, Model::ResNet101, 120, 4, 8).generate();
+        let inst = ms.quantize(180.0);
+        let cfg = ShardCfg { shard_clients: 30, ..ShardCfg::default() };
+        let out = solve_quantized(&inst, &cfg, 2).unwrap();
+        // The stitched schedule must be feasible against the *original*
+        // quantized instance — the whole point of the stable lift.
+        assert!(out.stitch.schedule.is_feasible(&inst));
+        assert!(out.stitch.makespan >= inst.makespan_lower_bound());
+    }
+
+    #[test]
+    fn strategy_sharded_arm_returns_full_indexing() {
+        // Through solver::strategy with a forced-small frontier we cannot
+        // go (the const is fixed); call the arm directly instead.
+        let ms = ScenarioCfg::new(Scenario::S6MegaHomogeneous, Model::ResNet101, 96, 4, 2).generate();
+        let inst = ms.quantize(180.0);
+        let out = solve_quantized(&inst, &ShardCfg { shard_clients: 24, ..ShardCfg::default() }, 2).unwrap();
+        assert_eq!(out.stitch.schedule.assignment.helper_of.len(), inst.n_clients);
+        assert_eq!(out.stitch.schedule.fwd.len(), inst.n_clients);
+        assert!(out.stitch.schedule.assignment.helper_of.iter().all(|&i| i < inst.n_helpers));
+    }
+}

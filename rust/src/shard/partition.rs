@@ -1,0 +1,290 @@
+//! Deterministic partitioning of an [`InstanceMs`] into **helper cells**.
+//!
+//! A cell is a (helpers, clients) pair; the union of cells covers every
+//! helper and every client exactly once, so solving each cell
+//! independently and merging the per-cell schedules yields a complete
+//! (and, because helper sets are disjoint, capacity-feasible) global
+//! schedule — the decomposition MP-SL exploits with its multihop helper
+//! chains.
+//!
+//! Cells form by **affinity**, not arbitrarily:
+//!
+//! 1. Helpers sort by mean part-2 forward processing time (the device-tier
+//!    axis) and split into contiguous balanced groups — similar-tier
+//!    helpers land in the same cell.
+//! 2. Clients sort by their best-edge client-side round trip
+//!    `min_i (r + l + l' + r')` (the link-regime axis) and split into
+//!    contiguous balanced slices, pairing the best-connected clients with
+//!    the fastest helper tier.
+//! 3. Two deterministic fix-up passes repair memory: every client must
+//!    fit some helper in its cell (hard, always reparable because the
+//!    globally largest helper lives in some cell), and cells whose
+//!    aggregate footprint exceeds aggregate capacity shed their largest
+//!    clients to the slackest fitting cell (best-effort).
+//!
+//! Everything is a pure function of the instance and the
+//! [`ShardCfg`] — no RNG — so a partition is reproducible from the
+//! instance bytes alone.
+
+use crate::instance::InstanceMs;
+
+/// Shard-layer knobs: cell sizing and the stitching rebalance bounds.
+#[derive(Clone, Debug)]
+pub struct ShardCfg {
+    /// Target clients per cell; the cell count is
+    /// `ceil(J / shard_clients)` clamped to `[1, I]`.
+    pub shard_clients: usize,
+    /// Stitch-gap threshold (stitched makespan / max per-shard lower
+    /// bound) above which the coordinator attempts boundary-client
+    /// migrations.
+    pub rebalance_gap: f64,
+    /// Maximum migrations the coordinator commits per stitch.
+    pub max_migrations: usize,
+}
+
+impl Default for ShardCfg {
+    fn default() -> Self {
+        ShardCfg { shard_clients: 1024, rebalance_gap: 1.25, max_migrations: 4 }
+    }
+}
+
+/// One helper cell: original helper and client indices, both sorted
+/// ascending (the canonical form every consumer relies on).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ShardCell {
+    pub helpers: Vec<usize>,
+    pub clients: Vec<usize>,
+}
+
+impl ShardCell {
+    /// Smallest original helper id — the order-invariant identity used
+    /// for tie-breaking across cells (cell *positions* depend on
+    /// enumeration order; helper ids do not).
+    pub fn min_helper(&self) -> usize {
+        self.helpers.first().copied().unwrap_or(usize::MAX)
+    }
+}
+
+/// A complete partition: every helper in exactly one cell, every client
+/// in exactly one cell.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ShardPlan {
+    pub cells: Vec<ShardCell>,
+}
+
+impl ShardPlan {
+    pub fn n_cells(&self) -> usize {
+        self.cells.len()
+    }
+}
+
+/// Carve the cell's sub-instance out of the full instance: client
+/// columns first, then helper rows.
+pub fn sub_instance(ms: &InstanceMs, cell: &ShardCell) -> InstanceMs {
+    ms.restrict_clients(&cell.clients).restrict_helpers(&cell.helpers)
+}
+
+/// Build the partition. See the module docs for the three passes.
+pub fn partition(ms: &InstanceMs, cfg: &ShardCfg) -> ShardPlan {
+    let j_n = ms.n_clients;
+    let i_n = ms.n_helpers;
+    let target = cfg.shard_clients.max(1);
+    let k = if j_n == 0 { 1 } else { ((j_n + target - 1) / target).max(1).min(i_n.max(1)) };
+    if k <= 1 || i_n < 2 {
+        return ShardPlan {
+            cells: vec![ShardCell { helpers: (0..i_n).collect(), clients: (0..j_n).collect() }],
+        };
+    }
+
+    // Pass 1: helpers by device tier (mean p), contiguous balanced groups.
+    let mut helper_order: Vec<usize> = (0..i_n).collect();
+    let helper_key: Vec<f64> = (0..i_n)
+        .map(|i| {
+            let row = &ms.p_ms[i * j_n..(i + 1) * j_n];
+            if j_n == 0 { 0.0 } else { row.iter().sum::<f64>() / j_n as f64 }
+        })
+        .collect();
+    helper_order.sort_by(|&a, &b| {
+        helper_key[a].partial_cmp(&helper_key[b]).unwrap().then(a.cmp(&b))
+    });
+
+    // Pass 2: clients by best-edge link round trip, contiguous balanced
+    // slices aligned with the helper tiers.
+    let mut client_order: Vec<usize> = (0..j_n).collect();
+    let client_key: Vec<f64> = (0..j_n)
+        .map(|j| {
+            (0..i_n)
+                .map(|i| {
+                    let e = i * j_n + j;
+                    ms.r_ms[e] + ms.l_ms[e] + ms.lp_ms[e] + ms.rp_ms[e]
+                })
+                .fold(f64::MAX, f64::min)
+        })
+        .collect();
+    client_order.sort_by(|&a, &b| {
+        client_key[a].partial_cmp(&client_key[b]).unwrap().then(a.cmp(&b))
+    });
+
+    let slice = |order: &[usize], t: usize| -> Vec<usize> {
+        let n = order.len();
+        let base = n / k;
+        let rem = n % k;
+        let start = t * base + t.min(rem);
+        let len = base + usize::from(t < rem);
+        order[start..start + len].to_vec()
+    };
+    let mut cells: Vec<ShardCell> = (0..k)
+        .map(|t| ShardCell { helpers: slice(&helper_order, t), clients: slice(&client_order, t) })
+        .collect();
+
+    // Pass 3a: hard memory fix-up — every client must fit some helper in
+    // its cell. The cell holding the globally largest helper always fits,
+    // so this never fails.
+    let cell_max_mem = |cell: &ShardCell| -> f64 {
+        cell.helpers.iter().map(|&i| ms.mem_gb[i]).fold(0.0, f64::max)
+    };
+    for t in 0..k {
+        let misfits: Vec<usize> = {
+            let max_mem = cell_max_mem(&cells[t]);
+            cells[t].clients.iter().copied().filter(|&j| ms.d_gb[j] > max_mem).collect()
+        };
+        for j in misfits {
+            let dest = (0..k)
+                .find(|&u| u != t && ms.d_gb[j] <= cell_max_mem(&cells[u]))
+                .expect("validated instance: some cell holds a helper that fits every client");
+            cells[t].clients.retain(|&x| x != j);
+            cells[dest].clients.push(j);
+        }
+    }
+
+    // Pass 3b: best-effort capacity fix-up — shed the largest clients of
+    // aggregate-overloaded cells to the slackest cell that fits them.
+    let sum_d = |cell: &ShardCell| -> f64 { cell.clients.iter().map(|&j| ms.d_gb[j]).sum() };
+    let sum_mem = |cell: &ShardCell| -> f64 { cell.helpers.iter().map(|&i| ms.mem_gb[i]).sum() };
+    let mut moves_left = j_n;
+    for t in 0..k {
+        while sum_d(&cells[t]) > sum_mem(&cells[t]) && moves_left > 0 {
+            let donor = cells[t]
+                .clients
+                .iter()
+                .copied()
+                .max_by(|&a, &b| {
+                    ms.d_gb[a].partial_cmp(&ms.d_gb[b]).unwrap().then(b.cmp(&a))
+                });
+            let Some(j) = donor else { break };
+            let dest = (0..k)
+                .filter(|&u| u != t && ms.d_gb[j] <= cell_max_mem(&cells[u]))
+                .max_by(|&a, &b| {
+                    let sa = sum_mem(&cells[a]) - sum_d(&cells[a]);
+                    let sb = sum_mem(&cells[b]) - sum_d(&cells[b]);
+                    sa.partial_cmp(&sb).unwrap().then(b.cmp(&a))
+                });
+            let Some(u) = dest else { break };
+            if sum_mem(&cells[u]) - sum_d(&cells[u]) < ms.d_gb[j] {
+                break; // nowhere has real slack; leave it to the solver
+            }
+            cells[t].clients.retain(|&x| x != j);
+            cells[u].clients.push(j);
+            moves_left -= 1;
+        }
+    }
+
+    for cell in &mut cells {
+        cell.helpers.sort_unstable();
+        cell.clients.sort_unstable();
+    }
+    ShardPlan { cells }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::instance::profiles::Model;
+    use crate::instance::scenario::{Scenario, ScenarioCfg};
+
+    fn gen(scenario: Scenario, j: usize, i: usize, seed: u64) -> InstanceMs {
+        ScenarioCfg::new(scenario, Model::ResNet101, j, i, seed).generate()
+    }
+
+    fn assert_is_partition(ms: &InstanceMs, plan: &ShardPlan) {
+        let mut helpers: Vec<usize> = plan.cells.iter().flat_map(|c| c.helpers.clone()).collect();
+        let mut clients: Vec<usize> = plan.cells.iter().flat_map(|c| c.clients.clone()).collect();
+        helpers.sort_unstable();
+        clients.sort_unstable();
+        assert_eq!(helpers, (0..ms.n_helpers).collect::<Vec<_>>());
+        assert_eq!(clients, (0..ms.n_clients).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn small_instances_stay_monolithic() {
+        let ms = gen(Scenario::S1, 40, 4, 1);
+        let plan = partition(&ms, &ShardCfg::default());
+        assert_eq!(plan.n_cells(), 1);
+        assert_is_partition(&ms, &plan);
+    }
+
+    #[test]
+    fn cell_count_and_balance() {
+        let ms = gen(Scenario::S6MegaHomogeneous, 300, 6, 2);
+        let cfg = ShardCfg { shard_clients: 100, ..ShardCfg::default() };
+        let plan = partition(&ms, &cfg);
+        assert_eq!(plan.n_cells(), 3);
+        assert_is_partition(&ms, &plan);
+        for cell in &plan.cells {
+            assert_eq!(cell.helpers.len(), 2);
+            // Balanced up to the memory fix-up passes.
+            assert!(cell.clients.len() >= 90 && cell.clients.len() <= 110, "{}", cell.clients.len());
+        }
+    }
+
+    #[test]
+    fn partition_is_deterministic() {
+        let ms = gen(Scenario::S2, 200, 5, 9);
+        let cfg = ShardCfg { shard_clients: 50, ..ShardCfg::default() };
+        assert_eq!(partition(&ms, &cfg), partition(&ms, &cfg));
+    }
+
+    #[test]
+    fn every_client_fits_some_helper_in_its_cell() {
+        // S5 is the memory-starved family — the hard fix-up must hold there.
+        let ms = gen(Scenario::S5MemoryStarved, 240, 8, 3);
+        let cfg = ShardCfg { shard_clients: 60, ..ShardCfg::default() };
+        let plan = partition(&ms, &cfg);
+        assert_is_partition(&ms, &plan);
+        for cell in &plan.cells {
+            let max_mem = cell.helpers.iter().map(|&i| ms.mem_gb[i]).fold(0.0, f64::max);
+            for &j in &cell.clients {
+                assert!(ms.d_gb[j] <= max_mem, "client {j} does not fit its cell");
+            }
+            // And sub-instance construction must therefore not panic.
+            let sub = sub_instance(&ms, cell);
+            assert_eq!(sub.n_clients, cell.clients.len());
+            assert_eq!(sub.n_helpers, cell.helpers.len());
+        }
+    }
+
+    #[test]
+    fn helper_tiers_are_contiguous_in_capability() {
+        let ms = gen(Scenario::S2, 200, 6, 4);
+        let cfg = ShardCfg { shard_clients: 50, ..ShardCfg::default() };
+        let plan = partition(&ms, &cfg);
+        // Mean-p ranges of distinct cells must not interleave: sort cells
+        // by their mean helper key and check ranges are ordered.
+        let key = |i: usize| -> f64 {
+            let row = &ms.p_ms[i * ms.n_clients..(i + 1) * ms.n_clients];
+            row.iter().sum::<f64>() / ms.n_clients as f64
+        };
+        let mut ranges: Vec<(f64, f64)> = plan
+            .cells
+            .iter()
+            .map(|c| {
+                let ks: Vec<f64> = c.helpers.iter().map(|&i| key(i)).collect();
+                (ks.iter().cloned().fold(f64::MAX, f64::min), ks.iter().cloned().fold(f64::MIN, f64::max))
+            })
+            .collect();
+        ranges.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        for w in ranges.windows(2) {
+            assert!(w[0].1 <= w[1].0 + 1e-9, "tier ranges interleave: {:?}", ranges);
+        }
+    }
+}

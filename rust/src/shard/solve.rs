@@ -1,0 +1,166 @@
+//! Concurrent per-shard solves over [`exec::pool::run_parallel`].
+//!
+//! Each cell becomes an independent sub-instance (client columns ×
+//! helper rows of the parent), quantized at the parent's slot length and
+//! solved with the flat §VII strategy rule — each shard picks its own
+//! method from its own [`Signals`](crate::solver::strategy::Signals), so
+//! a heterogeneous cell can run ADMM while its mega-homogeneous sibling
+//! runs balanced-greedy.
+//!
+//! Results are **thread-count invariant** the same way `psl sweep` is:
+//! jobs are pure functions of `(instance, cell, slot length, solver
+//! config)` and [`run_parallel`](crate::exec::pool::run_parallel)
+//! returns them in job order, so the worker count only changes
+//! wall-clock time, never bytes. Nested parallelism (a solver using the
+//! pool inside a shard job) is collapsed to sequential by the pool's
+//! oversubscription guard.
+
+use crate::exec::pool;
+use crate::instance::InstanceMs;
+use crate::solver::admm::AdmmCfg;
+use crate::solver::schedule::{Assignment, Schedule};
+use crate::solver::strategy::{self, Method};
+
+use super::partition::{sub_instance, ShardCell, ShardPlan};
+
+/// One solved shard: the cell, its schedule in **local** (cell-relative)
+/// indexing, and the metrics the stitcher and the psl-shard artifact
+/// need.
+#[derive(Clone, Debug)]
+pub struct ShardSolved {
+    pub cell: ShardCell,
+    /// Local indexing: client `jj` is original `cell.clients[jj]`,
+    /// helper `ii` is original `cell.helpers[ii]`.
+    pub schedule: Schedule,
+    pub method: Method,
+    /// Shard makespan in slots (slot origin 0, like every shard's).
+    pub makespan: u32,
+    /// Shard-local trivial lower bound, slots.
+    pub lower_bound: u32,
+    /// Per-client completions, local order — the stitcher's boundary-
+    /// client selection reads these without re-materializing the
+    /// sub-instance.
+    pub completions: Vec<u32>,
+}
+
+/// Solve one cell. Pure; safe to call from any thread.
+pub fn solve_one(
+    ms: &InstanceMs,
+    slot_ms: f64,
+    admm_cfg: &AdmmCfg,
+    cell: ShardCell,
+) -> Option<ShardSolved> {
+    let sub_ms = sub_instance(ms, &cell);
+    solve_prepared(&sub_ms, slot_ms, admm_cfg, cell)
+}
+
+fn solve_prepared(
+    sub_ms: &InstanceMs,
+    slot_ms: f64,
+    admm_cfg: &AdmmCfg,
+    cell: ShardCell,
+) -> Option<ShardSolved> {
+    if cell.clients.is_empty() {
+        return Some(ShardSolved {
+            cell,
+            schedule: Schedule { assignment: Assignment::new(vec![]), fwd: vec![], bwd: vec![] },
+            method: Method::BalancedGreedy,
+            makespan: 0,
+            lower_bound: 0,
+            completions: vec![],
+        });
+    }
+    let sub = sub_ms.quantize(slot_ms);
+    let s = strategy::signals(&sub);
+    // One hierarchy level only: a cell that is still above the shard
+    // frontier (a degenerate partition can produce one) solves flat
+    // instead of recursing into another shard layer.
+    let (schedule, method) = match strategy::pick_from_signals(&s) {
+        Method::Sharded => strategy::solve_flat(&sub, admm_cfg, &s)?,
+        _ => strategy::solve_with_signals(&sub, admm_cfg, &s)?,
+    };
+    let makespan = schedule.makespan(&sub);
+    let lower_bound = sub.makespan_lower_bound();
+    let completions = (0..sub.n_clients).map(|jj| schedule.completion(&sub, jj)).collect();
+    Some(ShardSolved { cell, schedule, method, makespan, lower_bound, completions })
+}
+
+/// Solve every cell of `plan` across up to `threads` pool workers.
+/// Returns `None` if any cell is unsolvable (a memory-wedged cell the
+/// partitioner's best-effort capacity pass could not repair).
+pub fn solve_shards(
+    ms: &InstanceMs,
+    slot_ms: f64,
+    admm_cfg: &AdmmCfg,
+    plan: &ShardPlan,
+    threads: usize,
+) -> Option<Vec<ShardSolved>> {
+    // Sub-instances are carved sequentially (cheap: one pass over the
+    // parent's edges in total) so jobs own their data and the parent is
+    // never shared across threads.
+    let jobs: Vec<Box<dyn FnOnce() -> Option<ShardSolved> + Send>> = plan
+        .cells
+        .iter()
+        .map(|cell| {
+            let cell = cell.clone();
+            let sub_ms = sub_instance(ms, &cell);
+            let admm_cfg = admm_cfg.clone();
+            Box::new(move || solve_prepared(&sub_ms, slot_ms, &admm_cfg, cell)) as _
+        })
+        .collect();
+    pool::run_parallel(threads, jobs).into_iter().collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::instance::profiles::Model;
+    use crate::instance::scenario::{Scenario, ScenarioCfg};
+    use crate::shard::partition::{partition, ShardCfg};
+
+    fn plan_and_ms(j: usize, i: usize, per_shard: usize) -> (InstanceMs, ShardPlan) {
+        let ms = ScenarioCfg::new(Scenario::S6MegaHomogeneous, Model::ResNet101, j, i, 11).generate();
+        let cfg = ShardCfg { shard_clients: per_shard, ..ShardCfg::default() };
+        let plan = partition(&ms, &cfg);
+        (ms, plan)
+    }
+
+    #[test]
+    fn every_shard_solves_and_is_locally_feasible() {
+        let (ms, plan) = plan_and_ms(160, 4, 40);
+        assert_eq!(plan.n_cells(), 4);
+        let shards = solve_shards(&ms, 180.0, &AdmmCfg::default(), &plan, 2).unwrap();
+        assert_eq!(shards.len(), 4);
+        for sh in &shards {
+            let sub = sub_instance(&ms, &sh.cell).quantize(180.0);
+            assert!(sh.schedule.is_feasible(&sub), "shard infeasible");
+            assert_eq!(sh.makespan, sh.schedule.makespan(&sub));
+            assert!(sh.makespan >= sh.lower_bound);
+            assert_eq!(sh.completions.len(), sh.cell.clients.len());
+        }
+    }
+
+    #[test]
+    fn shard_results_are_thread_count_invariant() {
+        let (ms, plan) = plan_and_ms(120, 4, 30);
+        let a = solve_shards(&ms, 180.0, &AdmmCfg::default(), &plan, 1).unwrap();
+        let b = solve_shards(&ms, 180.0, &AdmmCfg::default(), &plan, 7).unwrap();
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.cell, y.cell);
+            assert_eq!(x.method, y.method);
+            assert_eq!(x.makespan, y.makespan);
+            assert_eq!(x.completions, y.completions);
+            assert_eq!(x.schedule.assignment, y.schedule.assignment);
+        }
+    }
+
+    #[test]
+    fn empty_cell_yields_empty_schedule() {
+        let ms = ScenarioCfg::new(Scenario::S1, Model::ResNet101, 4, 2, 5).generate();
+        let cell = ShardCell { helpers: vec![0], clients: vec![] };
+        let sh = solve_one(&ms, 180.0, &AdmmCfg::default(), cell).unwrap();
+        assert_eq!(sh.makespan, 0);
+        assert!(sh.schedule.fwd.is_empty());
+    }
+}

@@ -1,0 +1,256 @@
+//! The coordinator's stitching pass: merge per-shard schedules into one
+//! global [`Schedule`], measure the stitching gap, and rebalance.
+//!
+//! **Merging is exact, not heuristic**: cells own disjoint helper sets,
+//! so re-indexing each shard's local helpers/clients back to original
+//! ids and keeping every slot origin at 0 yields a global schedule in
+//! which constraint (3) — one task per helper per slot — holds slot for
+//! slot because it held inside each cell. The stitched makespan is
+//! therefore simply the max over shard makespans, and what sharding
+//! *costs* is visible in the **stitch gap**: stitched makespan divided
+//! by the max per-shard lower bound. A gap of 1 means the dominant shard
+//! is already at its own bound; a large gap means one cell is overloaded
+//! relative to its helpers — exactly the case the bounded rebalancing
+//! pass attacks by migrating the worst shard's boundary client (its
+//! makespan-defining one) to the least-loaded cell that can host it,
+//! re-solving only the two touched cells, and keeping the move only if
+//! the global makespan strictly improves.
+//!
+//! Every choice in the pass tie-breaks on order-invariant keys (shard
+//! identity = smallest original helper id, client identity = original
+//! client id), so a permuted `Vec<ShardSolved>` stitches to byte-
+//! identical output — pinned by the shard property suite.
+
+use crate::instance::InstanceMs;
+use crate::solver::admm::AdmmCfg;
+use crate::solver::schedule::{Assignment, Schedule, SlotRuns};
+
+use super::partition::ShardCfg;
+use super::solve::{solve_one, ShardSolved};
+
+/// Outcome of the stitching pass.
+#[derive(Clone, Debug)]
+pub struct StitchReport {
+    /// The merged global schedule, in original instance indexing.
+    pub schedule: Schedule,
+    /// Global makespan = max over shard makespans, slots.
+    pub makespan: u32,
+    /// Max per-shard trivial lower bound, slots.
+    pub max_shard_lb: u32,
+    /// `makespan / max(max_shard_lb, 1)` — the cost of solving shards
+    /// independently instead of monolithically.
+    pub stitch_gap: f64,
+    /// Boundary-client migrations the rebalancing pass committed.
+    pub migrations: usize,
+}
+
+/// Merge per-shard schedules into one schedule over the full instance.
+/// Panics (debug) if the shards do not partition the client set.
+pub fn merge(n_clients: usize, shards: &[ShardSolved]) -> Schedule {
+    let mut helper_of = vec![usize::MAX; n_clients];
+    let mut fwd = vec![SlotRuns::new(); n_clients];
+    let mut bwd = vec![SlotRuns::new(); n_clients];
+    for sh in shards {
+        for (jj, &j) in sh.cell.clients.iter().enumerate() {
+            debug_assert_eq!(helper_of[j], usize::MAX, "client {j} in two shards");
+            helper_of[j] = sh.cell.helpers[sh.schedule.assignment.helper_of[jj]];
+            fwd[j] = sh.schedule.fwd[jj].clone();
+            bwd[j] = sh.schedule.bwd[jj].clone();
+        }
+    }
+    debug_assert!(helper_of.iter().all(|&i| i != usize::MAX), "unassigned client after merge");
+    Schedule { assignment: Assignment::new(helper_of), fwd, bwd }
+}
+
+fn global_makespan(shards: &[ShardSolved]) -> u32 {
+    shards.iter().map(|s| s.makespan).max().unwrap_or(0)
+}
+
+fn gap_of(makespan: u32, max_lb: u32) -> f64 {
+    makespan as f64 / max_lb.max(1) as f64
+}
+
+/// Order-invariant "worst shard" choice: highest makespan, ties to the
+/// smallest original helper id.
+fn worst_shard(shards: &[ShardSolved]) -> Option<usize> {
+    let mut best: Option<usize> = None;
+    for (k, sh) in shards.iter().enumerate() {
+        if sh.cell.clients.is_empty() {
+            continue;
+        }
+        best = match best {
+            None => Some(k),
+            Some(b) => {
+                let (bm, bh) = (shards[b].makespan, shards[b].cell.min_helper());
+                if (sh.makespan, bh) > (bm, sh.cell.min_helper()) {
+                    // sh.makespan > bm, or equal makespan with smaller id.
+                    Some(k)
+                } else {
+                    Some(b)
+                }
+            }
+        };
+    }
+    best
+}
+
+/// Stitch `shards` and run the bounded rebalancing pass. Returns the
+/// report plus the (possibly re-solved) shards so callers can surface
+/// final per-shard metrics.
+pub fn stitch_and_rebalance(
+    ms: &InstanceMs,
+    slot_ms: f64,
+    admm_cfg: &AdmmCfg,
+    cfg: &ShardCfg,
+    mut shards: Vec<ShardSolved>,
+) -> (StitchReport, Vec<ShardSolved>) {
+    let mut migrations = 0usize;
+    while migrations < cfg.max_migrations && shards.len() >= 2 {
+        let makespan = global_makespan(&shards);
+        let max_lb = shards.iter().map(|s| s.lower_bound).max().unwrap_or(0);
+        if gap_of(makespan, max_lb) <= cfg.rebalance_gap {
+            break;
+        }
+        let Some(w) = worst_shard(&shards) else { break };
+        if shards[w].makespan < makespan {
+            break; // worst client-bearing shard is not the bottleneck
+        }
+        // Boundary client: the makespan-defining one, ties to the
+        // smallest original client id.
+        let Some(jj) = (0..shards[w].completions.len()).max_by_key(|&jj| {
+            (shards[w].completions[jj], usize::MAX - shards[w].cell.clients[jj])
+        }) else {
+            break;
+        };
+        let j = shards[w].cell.clients[jj];
+        // Receiver: the least-loaded other shard whose largest helper can
+        // host the client; ties to the smallest helper id.
+        let mut recv: Option<usize> = None;
+        for (k, sh) in shards.iter().enumerate() {
+            if k == w {
+                continue;
+            }
+            let fits = sh.cell.helpers.iter().any(|&i| ms.mem_gb[i] >= ms.d_gb[j]);
+            if !fits {
+                continue;
+            }
+            recv = match recv {
+                None => Some(k),
+                Some(b) => {
+                    let (bm, bh) = (shards[b].makespan, shards[b].cell.min_helper());
+                    if (sh.makespan, sh.cell.min_helper()) < (bm, bh) {
+                        Some(k)
+                    } else {
+                        Some(b)
+                    }
+                }
+            };
+        }
+        let Some(r) = recv else { break };
+
+        let mut donor_cell = shards[w].cell.clone();
+        donor_cell.clients.retain(|&x| x != j);
+        let mut recv_cell = shards[r].cell.clone();
+        let pos = recv_cell.clients.partition_point(|&x| x < j);
+        recv_cell.clients.insert(pos, j);
+
+        let resolved = solve_one(ms, slot_ms, admm_cfg, donor_cell)
+            .zip(solve_one(ms, slot_ms, admm_cfg, recv_cell));
+        let Some((new_donor, new_recv)) = resolved else { break };
+        let candidate = shards
+            .iter()
+            .enumerate()
+            .map(|(k, sh)| {
+                if k == w {
+                    new_donor.makespan
+                } else if k == r {
+                    new_recv.makespan
+                } else {
+                    sh.makespan
+                }
+            })
+            .max()
+            .unwrap_or(0);
+        if candidate >= makespan {
+            break; // migration does not strictly help; stop rebalancing
+        }
+        shards[w] = new_donor;
+        shards[r] = new_recv;
+        migrations += 1;
+    }
+
+    let makespan = global_makespan(&shards);
+    let max_shard_lb = shards.iter().map(|s| s.lower_bound).max().unwrap_or(0);
+    let report = StitchReport {
+        schedule: merge(ms.n_clients, &shards),
+        makespan,
+        max_shard_lb,
+        stitch_gap: gap_of(makespan, max_shard_lb),
+        migrations,
+    };
+    (report, shards)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::instance::profiles::Model;
+    use crate::instance::scenario::{Scenario, ScenarioCfg};
+    use crate::shard::partition::partition;
+    use crate::shard::solve::solve_shards;
+
+    fn solved(j: usize, i: usize, per_shard: usize, seed: u64) -> (InstanceMs, Vec<ShardSolved>) {
+        let ms = ScenarioCfg::new(Scenario::S2, Model::ResNet101, j, i, seed).generate();
+        let cfg = ShardCfg { shard_clients: per_shard, ..ShardCfg::default() };
+        let plan = partition(&ms, &cfg);
+        let shards = solve_shards(&ms, 180.0, &AdmmCfg::default(), &plan, 2).unwrap();
+        (ms, shards)
+    }
+
+    #[test]
+    fn merged_schedule_is_feasible_on_the_full_instance() {
+        let (ms, shards) = solved(120, 4, 30, 7);
+        let inst = ms.quantize(180.0);
+        let sched = merge(inst.n_clients, &shards);
+        let v = sched.violations(&inst);
+        assert!(v.is_empty(), "stitched violations: {v:?}");
+        assert_eq!(
+            sched.makespan(&inst),
+            shards.iter().map(|s| s.makespan).max().unwrap(),
+            "global makespan must equal the max shard makespan"
+        );
+    }
+
+    #[test]
+    fn stitch_is_shard_order_invariant() {
+        let (ms, shards) = solved(150, 5, 30, 13);
+        let cfg = ShardCfg { shard_clients: 30, ..ShardCfg::default() };
+        let admm = AdmmCfg::default();
+        let (a, _) = stitch_and_rebalance(&ms, 180.0, &admm, &cfg, shards.clone());
+        let mut rev = shards;
+        rev.reverse();
+        let (b, _) = stitch_and_rebalance(&ms, 180.0, &admm, &cfg, rev);
+        assert_eq!(a.makespan, b.makespan);
+        assert_eq!(a.migrations, b.migrations);
+        assert_eq!(a.schedule.assignment, b.schedule.assignment);
+        for j in 0..ms.n_clients {
+            assert_eq!(a.schedule.fwd[j].runs(), b.schedule.fwd[j].runs());
+            assert_eq!(a.schedule.bwd[j].runs(), b.schedule.bwd[j].runs());
+        }
+    }
+
+    #[test]
+    fn rebalance_never_worsens_and_respects_the_bound() {
+        let (ms, shards) = solved(200, 5, 40, 3);
+        let before = shards.iter().map(|s| s.makespan).max().unwrap();
+        // Force rebalancing on: any gap over 1.0 triggers it.
+        let cfg = ShardCfg { shard_clients: 40, rebalance_gap: 1.0, max_migrations: 3 };
+        let (rep, after) = stitch_and_rebalance(&ms, 180.0, &AdmmCfg::default(), &cfg, shards);
+        assert!(rep.makespan <= before, "rebalancing worsened the makespan");
+        assert!(rep.migrations <= 3);
+        let inst = ms.quantize(180.0);
+        assert!(rep.schedule.is_feasible(&inst), "post-rebalance stitched schedule infeasible");
+        // Shards returned are the ones the report was computed from.
+        assert_eq!(rep.makespan, after.iter().map(|s| s.makespan).max().unwrap());
+    }
+}

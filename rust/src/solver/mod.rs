@@ -11,7 +11,7 @@
 //! | [`baseline`] | random + FCFS baseline (§VII) |
 //! | [`exact`] | the exact/anytime reference optimum (Gurobi's role) |
 //! | [`lp`], [`milp`], [`model`] | time-indexed ILP of §IV + own solver |
-//! | [`strategy`] | the signal-driven solution strategy (Obs. 3): picks a method from instance shape — size, heterogeneity, placement flexibility, straggler tail ([`strategy::Signals`]) — never from the scenario label |
+//! | [`strategy`] | the signal-driven solution strategy (Obs. 3): picks a method from instance shape — size, heterogeneity, placement flexibility, straggler tail ([`strategy::Signals`]) — never from the scenario label; ≥ [`strategy::SHARD_CLIENT_FRONTIER`] clients routes to `Method::Sharded` ([`crate::shard`]: helper-cell partition → concurrent per-cell solves → stitched global schedule) |
 //! | [`preemption`] | §VI switching-cost extension |
 //!
 //! **Schedule representation.** Every schedule stores per-client sorted

@@ -11,6 +11,10 @@
 //! * Memory-starved shapes (few helpers can host a typical client) →
 //!   ADMM regardless of size: assignment feasibility is the binding
 //!   constraint and load balancing alone can wedge.
+//! * Mega-scale instances (≥ [`SHARD_CLIENT_FRONTIER`] clients with at
+//!   least two helpers) → the sharded hierarchical solver
+//!   ([`crate::shard`]): partition into helper cells, solve cells
+//!   concurrently, stitch.
 //!
 //! The raw signals are exposed as [`Signals`] so sweeps and reports can
 //! record *why* a method was picked.
@@ -20,11 +24,21 @@ use super::greedy;
 use super::schedule::Schedule;
 use crate::instance::Instance;
 
+/// Client count at and above which [`pick_from_signals`] routes to the
+/// sharded hierarchical solver (provided ≥ 2 helpers exist to form
+/// cells). Below it the monolithic solvers are both affordable and at
+/// least as good — sharding only forfeits cross-cell assignment freedom
+/// to buy solve-time parallelism.
+pub const SHARD_CLIENT_FRONTIER: usize = 4096;
+
 /// Which method the strategy picked.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Method {
     Admm,
     BalancedGreedy,
+    /// Hierarchical: partition into helper cells, solve per cell, stitch
+    /// ([`crate::shard`]).
+    Sharded,
 }
 
 impl Method {
@@ -32,6 +46,7 @@ impl Method {
         match self {
             Method::Admm => "admm",
             Method::BalancedGreedy => "balanced-greedy",
+            Method::Sharded => "sharded",
         }
     }
 
@@ -41,6 +56,7 @@ impl Method {
         match s {
             "admm" => Some(Method::Admm),
             "balanced-greedy" => Some(Method::BalancedGreedy),
+            "sharded" => Some(Method::Sharded),
             _ => None,
         }
     }
@@ -135,7 +151,20 @@ pub fn pick(inst: &Instance) -> Method {
 
 /// The pick rule on precomputed signals (kept separate so sweeps can
 /// record the signals alongside the decision without recomputing).
+/// Mega-scale shapes route to [`Method::Sharded`] before the flat rule
+/// is consulted — at that size the question is no longer *which*
+/// monolithic solver but whether to decompose at all.
 pub fn pick_from_signals(s: &Signals) -> Method {
+    if s.n_clients >= SHARD_CLIENT_FRONTIER && s.n_helpers >= 2 {
+        return Method::Sharded;
+    }
+    pick_flat(s)
+}
+
+/// The flat (single-level) §VII rule: Admm vs. balanced-greedy only,
+/// never [`Method::Sharded`]. The shard layer consults this per cell so
+/// one hierarchy level cannot nest another indefinitely.
+pub fn pick_flat(s: &Signals) -> Method {
     if s.placement_flexibility < 0.35 {
         return Method::Admm;
     }
@@ -158,6 +187,25 @@ pub fn solve(inst: &Instance, admm_cfg: &AdmmCfg) -> Option<(Schedule, Method)> 
 /// O(J·I) scan.
 pub fn solve_with_signals(inst: &Instance, admm_cfg: &AdmmCfg, s: &Signals) -> Option<(Schedule, Method)> {
     match pick_from_signals(s) {
+        Method::Sharded => {
+            let out = crate::shard::solve_quantized(
+                inst,
+                &crate::shard::ShardCfg::default(),
+                crate::exec::pool::default_workers(),
+            )?;
+            Some((out.stitch.schedule, Method::Sharded))
+        }
+        _ => solve_flat(inst, admm_cfg, s),
+    }
+}
+
+/// The flat solve behind [`pick_flat`]: Admm or balanced-greedy, never
+/// sharded. Per-cell solves in [`crate::shard::solve`] land here when a
+/// degenerate partition leaves a cell above the frontier, which is what
+/// makes the hierarchy structurally non-recursive.
+pub fn solve_flat(inst: &Instance, admm_cfg: &AdmmCfg, s: &Signals) -> Option<(Schedule, Method)> {
+    match pick_flat(s) {
+        Method::Sharded => unreachable!("pick_flat never picks Sharded"),
         Method::BalancedGreedy => greedy::solve(inst).map(|s| (s, Method::BalancedGreedy)),
         Method::Admm => {
             let a = admm::solve(inst, admm_cfg)?;
@@ -275,5 +323,42 @@ mod tests {
     fn method_names_stable() {
         assert_eq!(Method::Admm.name(), "admm");
         assert_eq!(Method::BalancedGreedy.name(), "balanced-greedy");
+        assert_eq!(Method::Sharded.name(), "sharded");
+        assert_eq!(Method::parse("sharded"), Some(Method::Sharded));
+    }
+
+    #[test]
+    fn mega_scale_routes_to_sharded() {
+        let s = Signals {
+            n_clients: SHARD_CLIENT_FRONTIER,
+            n_helpers: 64,
+            heterogeneity: 0.1,
+            placement_flexibility: 1.0,
+            tail_ratio: 1.2,
+        };
+        assert_eq!(pick_from_signals(&s), Method::Sharded);
+        // The flat rule never shards, whatever the size.
+        assert_eq!(pick_flat(&s), Method::BalancedGreedy);
+    }
+
+    #[test]
+    fn sharding_needs_at_least_two_helpers() {
+        // One helper means one cell means no decomposition to exploit —
+        // a mega single-helper instance stays on the flat rule.
+        let s = Signals {
+            n_clients: SHARD_CLIENT_FRONTIER * 2,
+            n_helpers: 1,
+            heterogeneity: 0.1,
+            placement_flexibility: 1.0,
+            tail_ratio: 1.0,
+        };
+        assert_eq!(pick_from_signals(&s), Method::BalancedGreedy);
+    }
+
+    #[test]
+    fn frontier_sits_above_every_flat_grid_cell() {
+        // The J=512 perf cell and the J≤200 strategy goldens must keep
+        // routing through the flat rule.
+        assert!(SHARD_CLIENT_FRONTIER > 512);
     }
 }

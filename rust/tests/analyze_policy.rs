@@ -98,7 +98,7 @@ fn builtin_policy_table_golden_snapshot() {
     }
   ],
   "kind": "psl-policy-table",
-  "schema_version": 3,
+  "schema_version": 4,
   "source": "builtin"
 }"#;
     assert_eq!(psl::fleet::PolicyTable::builtin().to_json().pretty(), golden);

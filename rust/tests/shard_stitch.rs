@@ -1,0 +1,137 @@
+//! Shard-vs-monolithic property suite: the stitched output of the
+//! sharded hierarchical solver (`psl::shard`) must be a *first-class*
+//! schedule of the original instance — feasible under the interval-sweep
+//! checker, bounded below by the monolithic lower bound — and must be
+//! byte-identical regardless of worker-thread count or the order the
+//! per-shard solutions arrive in.
+
+use psl::instance::profiles::Model;
+use psl::instance::scenario::{Scenario, ScenarioCfg};
+use psl::shard::{self, ShardCfg};
+use psl::solver::admm::AdmmCfg;
+
+const SLOT_MS: f64 = 180.0;
+
+/// (n_clients, n_helpers, shard_clients) per family. The memory-starved
+/// family packs tightest against helper capacity, so its cells get more
+/// helpers each (coarser split) to keep the global packing headroom.
+fn family_shape(scen: Scenario) -> (usize, usize, usize) {
+    match scen {
+        Scenario::S5MemoryStarved => (120, 8, 60),
+        _ => (120, 6, 30),
+    }
+}
+
+fn shard_cfg(shard_clients: usize) -> ShardCfg {
+    ShardCfg { shard_clients, ..ShardCfg::default() }
+}
+
+#[test]
+fn stitched_schedule_is_feasible_on_every_scenario_family() {
+    for &scen in Scenario::ALL.iter() {
+        let (j, i, per_shard) = family_shape(scen);
+        let ms = ScenarioCfg::new(scen, Model::ResNet101, j, i, 11).generate();
+        let out = shard::solve_ms(&ms, SLOT_MS, &shard_cfg(per_shard), &AdmmCfg::default(), 3)
+            .unwrap_or_else(|| panic!("{}: shard solve failed", scen.name()));
+        assert!(out.shards.len() >= 2, "{}: expected a real multi-cell split", scen.name());
+        // Feasibility is judged on the FULL instance through the same
+        // interval-sweep checker every monolithic schedule passes.
+        let inst = ms.quantize(SLOT_MS);
+        let v = out.stitch.schedule.violations(&inst);
+        assert!(v.is_empty(), "{}: stitched violations: {v:?}", scen.name());
+        assert_eq!(
+            out.stitch.makespan,
+            out.stitch.schedule.makespan(&inst),
+            "{}: reported stitched makespan must match the schedule's",
+            scen.name()
+        );
+    }
+}
+
+#[test]
+fn stitched_makespan_dominates_the_monolithic_lower_bound() {
+    for &scen in Scenario::ALL.iter() {
+        let (j, i, per_shard) = family_shape(scen);
+        let ms = ScenarioCfg::new(scen, Model::ResNet101, j, i, 11).generate();
+        let out = shard::solve_ms(&ms, SLOT_MS, &shard_cfg(per_shard), &AdmmCfg::default(), 3)
+            .unwrap_or_else(|| panic!("{}: shard solve failed", scen.name()));
+        let inst = ms.quantize(SLOT_MS);
+        assert_eq!(
+            out.monolithic_lb,
+            inst.makespan_lower_bound(),
+            "{}: edge-wise monolithic bound must equal the quantized instance's",
+            scen.name()
+        );
+        assert!(
+            out.stitch.makespan >= out.monolithic_lb,
+            "{}: stitched {} beats the monolithic lower bound {}",
+            scen.name(),
+            out.stitch.makespan,
+            out.monolithic_lb
+        );
+        // The stitch gap is reported against the max per-shard bound.
+        assert!(out.stitch.stitch_gap >= 1.0, "{}: gap {}", scen.name(), out.stitch.stitch_gap);
+    }
+}
+
+#[test]
+fn outcome_is_identical_across_thread_counts() {
+    let ms = ScenarioCfg::new(Scenario::S2, Model::ResNet101, 150, 5, 13).generate();
+    let cfg = shard_cfg(30);
+    let admm = AdmmCfg::default();
+    let a = shard::solve_ms(&ms, SLOT_MS, &cfg, &admm, 1).unwrap();
+    let b = shard::solve_ms(&ms, SLOT_MS, &cfg, &admm, 6).unwrap();
+    assert_eq!(a.stitch.makespan, b.stitch.makespan);
+    assert_eq!(a.stitch.migrations, b.stitch.migrations);
+    assert_eq!(a.stitch.schedule.assignment, b.stitch.schedule.assignment);
+    for j in 0..ms.n_clients {
+        assert_eq!(a.stitch.schedule.fwd[j].runs(), b.stitch.schedule.fwd[j].runs(), "client {j} fwd");
+        assert_eq!(a.stitch.schedule.bwd[j].runs(), b.stitch.schedule.bwd[j].runs(), "client {j} bwd");
+    }
+    assert_eq!(a.shards.len(), b.shards.len());
+    for (sa, sb) in a.shards.iter().zip(&b.shards) {
+        assert_eq!(sa.cell, sb.cell);
+        assert_eq!(sa.makespan, sb.makespan);
+        assert_eq!(sa.method, sb.method);
+    }
+}
+
+#[test]
+fn outcome_is_identical_across_shard_orderings() {
+    // Same pipeline, but the per-shard solutions are handed to the
+    // stitching pass in reversed order — every coordinator tie-break must
+    // key on order-invariant identities (helper/client ids), so the
+    // stitched output may not move.
+    let ms = ScenarioCfg::new(Scenario::S3Clustered, Model::ResNet101, 160, 8, 5).generate();
+    let cfg = shard_cfg(40);
+    let admm = AdmmCfg::default();
+    let plan = shard::partition_cells(&ms, &cfg);
+    assert!(plan.n_cells() >= 3, "want a non-trivial permutation space");
+    let shards = shard::solve_shards(&ms, SLOT_MS, &admm, &plan, 2).unwrap();
+    let mut reversed = shards.clone();
+    reversed.reverse();
+    let (a, _) = shard::stitch_and_rebalance(&ms, SLOT_MS, &admm, &cfg, shards);
+    let (b, _) = shard::stitch_and_rebalance(&ms, SLOT_MS, &admm, &cfg, reversed);
+    assert_eq!(a.makespan, b.makespan);
+    assert_eq!(a.max_shard_lb, b.max_shard_lb);
+    assert_eq!(a.migrations, b.migrations);
+    assert_eq!(a.schedule.assignment, b.schedule.assignment);
+    for j in 0..ms.n_clients {
+        assert_eq!(a.schedule.fwd[j].runs(), b.schedule.fwd[j].runs(), "client {j} fwd");
+        assert_eq!(a.schedule.bwd[j].runs(), b.schedule.bwd[j].runs(), "client {j} bwd");
+    }
+}
+
+#[test]
+fn quantized_entry_point_round_trips_through_the_original_instance() {
+    // The Method::Sharded arm enters from an already-slotted Instance;
+    // the lift back to milliseconds must be quantization-stable so the
+    // stitched schedule lands in the original slot domain exactly.
+    let ms = ScenarioCfg::new(Scenario::S4StragglerTail, Model::ResNet101, 140, 7, 23).generate();
+    let inst = ms.quantize(SLOT_MS);
+    let out = shard::solve_quantized(&inst, &shard_cfg(35), 2).unwrap();
+    assert!(out.stitch.schedule.is_feasible(&inst));
+    assert_eq!(out.stitch.makespan, out.stitch.schedule.makespan(&inst));
+    assert!(out.stitch.makespan >= inst.makespan_lower_bound());
+    assert_eq!(out.monolithic_lb, inst.makespan_lower_bound());
+}
