@@ -22,6 +22,10 @@ pub struct Frontier {
     pub scenario: String,
     pub n_clients: usize,
     pub n_helpers: usize,
+    /// Helper outage rate of the regime the frontier was measured in
+    /// (0.0 = static pool) — carried into the policy entry so the `auto`
+    /// policy can pick the frontier matching a run's helper churn.
+    pub helper_down_rate: f64,
     /// The *observed* per-round churn fraction at the lowest measured
     /// rate where `full` beats `incremental` on score — the same unit
     /// the orchestrator's per-round `churn_frac` signal uses, so the
@@ -58,6 +62,7 @@ pub fn frontier(table: &RegimeTable) -> Frontier {
         scenario: table.scenario.clone(),
         n_clients: table.n_clients,
         n_helpers: table.n_helpers,
+        helper_down_rate: table.helper_down_rate,
         crossover,
         rates_compared,
     }
@@ -84,6 +89,7 @@ pub fn compute_policy_table(frontiers: Vec<Frontier>, source: &str) -> PolicyTab
             n_clients: f.n_clients,
             n_helpers: f.n_helpers,
             frontier_churn: f.crossover,
+            helper_down_rate: f.helper_down_rate,
         })
         .collect();
     PolicyTable::new(source.to_string(), entries)
@@ -179,6 +185,29 @@ mod tests {
         assert_eq!(t.entries.len(), 1, "only s4 compared both arms");
         assert_eq!(t.entries[0].scenario, "s4-straggler-tail");
         assert_eq!(t.source, "partial");
+    }
+
+    #[test]
+    fn helper_regimes_get_their_own_frontiers() {
+        // The same family at two helper outage rates: the static regime
+        // crosses over, the churned regime never does — two entries, each
+        // tagged with its regime's rate.
+        let mut rows = vec![
+            row("scenario1", 0.1, "incremental", 1, 1000.0, 100),
+            row("scenario1", 0.1, "full", 1, 900.0, 50),
+        ];
+        for base in [
+            row("scenario1", 0.1, "incremental", 1, 1000.0, 100),
+            row("scenario1", 0.1, "full", 1, 990.0, 900),
+        ] {
+            rows.push(GridRow { helper_down_rate: 0.2, ..base });
+        }
+        let t = table_of(&rows, "regimes");
+        assert_eq!(t.entries.len(), 2);
+        assert_eq!(t.entries[0].helper_down_rate, 0.0);
+        assert!(t.entries[0].frontier_churn.is_some());
+        assert_eq!(t.entries[1].helper_down_rate, 0.2);
+        assert_eq!(t.entries[1].frontier_churn, None);
     }
 
     #[test]

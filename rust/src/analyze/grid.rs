@@ -1,11 +1,12 @@
 //! Typed loading and aggregation of `psl fleet --grid` artifacts.
 //!
 //! The grid runner writes one summary row per (scenario, churn rate,
-//! policy, seed) cell; this module parses those rows back into a typed
-//! form through the artifact registry and collapses them into per-
-//! (family × fleet size) **regime tables**: one aggregate per
-//! (churn rate, policy) with seeds averaged out, scored by the
-//! work-discounted makespan the frontier computation compares.
+//! helper outage rate, policy, seed) cell; this module parses those rows
+//! back into a typed form through the artifact registry and collapses
+//! them into per-(family × fleet size × helper outage rate) **regime
+//! tables**: one aggregate per (churn rate, policy) with seeds averaged
+//! out, scored by the work-discounted makespan the frontier computation
+//! compares.
 
 use crate::bench::artifact::{self, ArtifactKind};
 use crate::util::json::Json;
@@ -20,6 +21,9 @@ pub struct GridRow {
     pub n_clients: usize,
     pub n_helpers: usize,
     pub churn_rate: f64,
+    /// Effective per-round helper outage probability the cell ran (v5's
+    /// helper-churn grid axis; 0.0 = a static helper pool).
+    pub helper_down_rate: f64,
     pub policy: String,
     pub seed: String,
     pub rounds: usize,
@@ -77,6 +81,19 @@ pub fn rows_from_doc(doc: &Json) -> Result<Vec<GridRow>> {
         ] {
             anyhow::ensure!(v.is_finite() && v >= 0.0, "row {k}: non-finite/negative {name} {v}");
         }
+        // Absent = a pre-v5 artifact (no helper-churn axis): say so.
+        let helper_down_rate = match r.get("helper_down_rate") {
+            Json::Null => anyhow::bail!(
+                "row {k}: no helper_down_rate — this fleet-grid artifact predates schema v{} \
+                 (re-run `psl fleet --grid` with this build)",
+                artifact::SCHEMA_VERSION
+            ),
+            v => v.as_f64().with_context(|| format!("row {k}: bad helper_down_rate {v}"))?,
+        };
+        anyhow::ensure!(
+            helper_down_rate.is_finite() && (0.0..=1.0).contains(&helper_down_rate),
+            "row {k}: helper_down_rate {helper_down_rate} outside [0, 1]"
+        );
         let work = str_field("total_work_units")?;
         out.push(GridRow {
             scenario: str_field("scenario")?,
@@ -84,6 +101,7 @@ pub fn rows_from_doc(doc: &Json) -> Result<Vec<GridRow>> {
             n_clients: count("n_clients")?,
             n_helpers: count("n_helpers")?,
             churn_rate,
+            helper_down_rate,
             policy: str_field("policy")?,
             seed: str_field("seed")?,
             rounds: count("rounds")?,
@@ -119,12 +137,16 @@ pub struct RegimeCell {
 }
 
 /// All measured (churn rate, policy) arms for one scenario family at one
-/// fleet size, in ascending (churn rate, policy) order.
+/// fleet size and helper outage rate, in ascending (churn rate, policy)
+/// order.
 #[derive(Clone, Debug, PartialEq)]
 pub struct RegimeTable {
     pub scenario: String,
     pub n_clients: usize,
     pub n_helpers: usize,
+    /// Helper outage rate shared by every cell in this table (the v5
+    /// grouping axis — frontiers are measured per outage regime).
+    pub helper_down_rate: f64,
     pub cells: Vec<RegimeCell>,
 }
 
@@ -143,17 +165,19 @@ impl RegimeTable {
     }
 }
 
-/// Collapse grid rows into regime tables: group by (scenario, J, I), then
-/// average seeds within each (churn rate, policy) arm. Ordering is fully
-/// deterministic (BTreeMap on bit-exact churn keys), so the same artifact
-/// always yields the same tables.
+/// Collapse grid rows into regime tables: group by (scenario, J, I,
+/// helper outage rate), then average seeds within each (churn rate,
+/// policy) arm. Ordering is fully deterministic (BTreeMap on bit-exact
+/// rate keys), so the same artifact always yields the same tables.
 pub fn regime_tables(rows: &[GridRow]) -> Vec<RegimeTable> {
-    // Churn rates come verbatim from one artifact, so bit-exact f64 keys
-    // group correctly (no arithmetic touches them between rows).
-    let mut groups: BTreeMap<(String, usize, usize), BTreeMap<(u64, String), Vec<&GridRow>>> = BTreeMap::new();
+    // Churn/outage rates come verbatim from one artifact, so bit-exact
+    // f64 keys group correctly (no arithmetic touches them between rows;
+    // they are non-negative, so bit order is value order).
+    let mut groups: BTreeMap<(String, usize, usize, u64), BTreeMap<(u64, String), Vec<&GridRow>>> =
+        BTreeMap::new();
     for r in rows {
         groups
-            .entry((r.scenario.clone(), r.n_clients, r.n_helpers))
+            .entry((r.scenario.clone(), r.n_clients, r.n_helpers, r.helper_down_rate.to_bits()))
             .or_default()
             .entry((r.churn_rate.to_bits(), r.policy.clone()))
             .or_default()
@@ -161,7 +185,7 @@ pub fn regime_tables(rows: &[GridRow]) -> Vec<RegimeTable> {
     }
     groups
         .into_iter()
-        .map(|((scenario, n_clients, n_helpers), arms)| {
+        .map(|((scenario, n_clients, n_helpers, helper_bits), arms)| {
             let cells = arms
                 .into_iter()
                 .map(|((churn_bits, policy), members)| {
@@ -180,7 +204,13 @@ pub fn regime_tables(rows: &[GridRow]) -> Vec<RegimeTable> {
                     }
                 })
                 .collect();
-            RegimeTable { scenario, n_clients, n_helpers, cells }
+            RegimeTable {
+                scenario,
+                n_clients,
+                n_helpers,
+                helper_down_rate: f64::from_bits(helper_bits),
+                cells,
+            }
         })
         .collect()
 }
@@ -199,6 +229,7 @@ pub(crate) mod tests {
             n_clients: 10,
             n_helpers: 2,
             churn_rate: churn,
+            helper_down_rate: 0.0,
             policy: policy.to_string(),
             seed: seed.to_string(),
             rounds: 8,
@@ -240,15 +271,18 @@ pub(crate) mod tests {
     }
 
     #[test]
-    fn tables_split_by_family_and_size() {
+    fn tables_split_by_family_size_and_helper_rate() {
         let mut rows = vec![row("scenario1", 0.1, "full", 1, 900.0, 10), row("s4-straggler-tail", 0.1, "full", 1, 900.0, 10)];
         rows.push(GridRow { n_clients: 20, ..rows[0].clone() });
+        rows.push(GridRow { helper_down_rate: 0.2, ..rows[0].clone() });
         let tables = regime_tables(&rows);
-        assert_eq!(tables.len(), 3);
-        // BTreeMap order: s4 sorts after scenario1; sizes ascend within.
-        assert_eq!(tables[0].n_clients, 10);
-        assert_eq!(tables[1].n_clients, 20);
-        assert_eq!(tables[2].scenario, "s4-straggler-tail");
+        assert_eq!(tables.len(), 4);
+        // BTreeMap order: s4 sorts after scenario1; sizes ascend within a
+        // family, helper outage rates ascend within a size.
+        assert_eq!((tables[0].n_clients, tables[0].helper_down_rate), (10, 0.0));
+        assert_eq!((tables[1].n_clients, tables[1].helper_down_rate), (10, 0.2));
+        assert_eq!(tables[2].n_clients, 20);
+        assert_eq!(tables[3].scenario, "s4-straggler-tail");
     }
 
     #[test]
@@ -269,6 +303,7 @@ pub(crate) mod tests {
             model: crate::instance::profiles::Model::Vgg19,
             size: (4, 2),
             churn_rates: vec![0.2],
+            helper_down_rates: vec![0.0],
             policies: vec![crate::fleet::Policy::Incremental],
             seeds: vec![3],
             rounds: 3,
@@ -285,6 +320,7 @@ pub(crate) mod tests {
         assert_eq!(parsed[0].total_work_units, grid_rows[0].total_work_units);
         assert!((parsed[0].mean_makespan_ms - grid_rows[0].mean_makespan_ms).abs() < 1e-9);
         assert_eq!(parsed[0].mean_churn_frac, grid_rows[0].mean_churn_frac, "observed churn roundtrips");
+        assert_eq!(parsed[0].helper_down_rate, 0.0, "static pool rows carry the zero axis");
     }
 
     #[test]
@@ -300,6 +336,7 @@ pub(crate) mod tests {
                 ("n_clients", Json::Num(bad.n_clients as f64)),
                 ("n_helpers", Json::Num(bad.n_helpers as f64)),
                 ("churn_rate", Json::Num(bad.churn_rate)),
+                ("helper_down_rate", Json::Num(bad.helper_down_rate)),
                 ("policy", Json::Str(bad.policy.clone())),
                 ("seed", Json::Str(bad.seed.clone())),
                 ("rounds", Json::Num(bad.rounds as f64)),
@@ -340,6 +377,35 @@ pub(crate) mod tests {
             ])]),
         )]);
         let err = rows_from_doc(&doc).unwrap_err().to_string();
+        assert!(err.contains("predates schema"), "{err}");
+    }
+
+    #[test]
+    fn pre_v5_artifact_gets_a_regenerate_error() {
+        // A v4 fleet-grid row (mean_churn_frac present, no
+        // helper_down_rate) must name the missing helper axis.
+        let doc = crate::bench::artifact::envelope(ArtifactKind::FleetGrid, vec![(
+            "rows",
+            Json::Arr(vec![Json::obj(vec![
+                ("scenario", Json::Str("scenario1".into())),
+                ("model", Json::Str("resnet101".into())),
+                ("n_clients", Json::Num(10.0)),
+                ("n_helpers", Json::Num(2.0)),
+                ("churn_rate", Json::Num(0.1)),
+                ("policy", Json::Str("incremental".into())),
+                ("seed", Json::Str("1".into())),
+                ("rounds", Json::Num(8.0)),
+                ("full_rounds", Json::Num(1.0)),
+                ("repair_rounds", Json::Num(7.0)),
+                ("empty_rounds", Json::Num(0.0)),
+                ("mean_makespan_ms", Json::Num(1000.0)),
+                ("mean_period_ms", Json::Num(800.0)),
+                ("mean_churn_frac", Json::Num(0.2)),
+                ("total_work_units", Json::Str("100".into())),
+            ])]),
+        )]);
+        let err = rows_from_doc(&doc).unwrap_err().to_string();
+        assert!(err.contains("helper_down_rate"), "{err}");
         assert!(err.contains("predates schema"), "{err}");
     }
 

@@ -25,6 +25,12 @@ pub struct RoundRow {
     pub churn_frac: f64,
     pub period_ms: f64,
     pub work_units: u64,
+    /// Clients orphaned by helper outages this round (0 on pre-v5 lines,
+    /// which carried no helper dynamics).
+    pub orphaned_clients: usize,
+    /// Whether part of the helper pool was down this round (false on
+    /// pre-v5 lines).
+    pub degraded: bool,
 }
 
 /// Parse a `.rounds.jsonl` stream (blank lines ignored). Errors name the
@@ -59,6 +65,10 @@ pub fn rows_from_jsonl(text: &str) -> Result<Vec<RoundRow>> {
             churn_frac: num("churn_frac")?,
             period_ms: num("period_ms")?,
             work_units: work.parse().with_context(|| format!("line {n}: bad work_units {work:?}"))?,
+            // Absent on pre-v5 sidecars: default rather than reject — a
+            // bare stream has no schema envelope to version-gate on.
+            orphaned_clients: doc.get("orphaned_clients").as_usize().unwrap_or(0),
+            degraded: matches!(doc.get("degraded"), Json::Bool(true)),
         });
     }
     Ok(out)
@@ -73,6 +83,10 @@ pub struct DecisionSummary {
     pub mean_makespan_ms: f64,
     pub mean_period_ms: f64,
     pub total_work_units: u64,
+    /// Rounds of this decision that ran on a degraded helper pool.
+    pub degraded_rounds: usize,
+    /// Total clients this decision re-homed after helper outages.
+    pub orphaned_clients: usize,
 }
 
 /// Collapse rows into per-decision summaries, in decision-name order
@@ -93,6 +107,8 @@ pub fn summarize(rows: &[RoundRow]) -> Vec<DecisionSummary> {
                 mean_makespan_ms: members.iter().map(|m| m.makespan_ms).sum::<f64>() / n,
                 mean_period_ms: members.iter().map(|m| m.period_ms).sum::<f64>() / n,
                 total_work_units: members.iter().map(|m| m.work_units).sum(),
+                degraded_rounds: members.iter().filter(|m| m.degraded).count(),
+                orphaned_clients: members.iter().map(|m| m.orphaned_clients).sum(),
             }
         })
         .collect()
@@ -125,6 +141,10 @@ mod tests {
             heterogeneity: 0.3,
             placement_flexibility: 1.0,
             tail_ratio: 1.1,
+            helpers_live: 2,
+            orphaned_clients: if decision == "helper-degraded" { 1 } else { 0 },
+            migrations: if decision == "helper-degraded" { 1 } else { 0 },
+            degraded: decision.starts_with("helper"),
         }
         .jsonl_line()
     }
@@ -137,22 +157,29 @@ mod tests {
             line(1, "repair", 0.2, 1100.0, 30),
             line(2, "repair", 0.4, 1200.0, 40),
             line(3, "full-auto", 0.6, 950.0, 480),
+            line(4, "helper-degraded", 0.0, 1300.0, 60),
         ]
         .join("\n");
         let rows = rows_from_jsonl(&text).unwrap();
-        assert_eq!(rows.len(), 4);
+        assert_eq!(rows.len(), 5);
         assert_eq!(rows[1].decision, "repair");
         assert_eq!(rows[1].method, None);
         assert_eq!(rows[3].work_units, 480);
+        assert_eq!(rows[4].orphaned_clients, 1);
+        assert!(rows[4].degraded);
         let summary = summarize(&rows);
-        // BTreeMap order: full-auto, full-initial, repair.
-        assert_eq!(summary.len(), 3);
+        // BTreeMap order: full-auto, full-initial, helper-degraded, repair.
+        assert_eq!(summary.len(), 4);
         assert_eq!(summary[0].decision, "full-auto");
-        assert_eq!(summary[2].decision, "repair");
-        assert_eq!(summary[2].rounds, 2);
-        assert!((summary[2].mean_churn_frac - 0.3).abs() < 1e-9);
-        assert!((summary[2].mean_makespan_ms - 1150.0).abs() < 1e-9);
-        assert_eq!(summary[2].total_work_units, 70);
+        assert_eq!(summary[2].decision, "helper-degraded");
+        assert_eq!(summary[2].degraded_rounds, 1);
+        assert_eq!(summary[2].orphaned_clients, 1);
+        assert_eq!(summary[3].decision, "repair");
+        assert_eq!(summary[3].rounds, 2);
+        assert_eq!(summary[3].degraded_rounds, 0);
+        assert!((summary[3].mean_churn_frac - 0.3).abs() < 1e-9);
+        assert!((summary[3].mean_makespan_ms - 1150.0).abs() < 1e-9);
+        assert_eq!(summary[3].total_work_units, 70);
     }
 
     #[test]

@@ -24,11 +24,17 @@ use anyhow::{Context, Result};
 /// rounds) with no shape changes to existing kinds; v4 added the
 /// `psl-shard` kind (sharded hierarchical solve: per-shard + stitched
 /// metrics) and the per-round instance signals (`heterogeneity`,
-/// `placement_flexibility`, `tail_ratio`) in fleet round reports.
+/// `placement_flexibility`, `tail_ratio`) in fleet round reports; v5
+/// added helper dynamics — per-round `helpers_live` /
+/// `orphaned_clients` / `migrations` / `degraded` fields in fleet round
+/// reports, the helper roster (live / down / id watermark) and
+/// helper-churn knobs in `psl-fleet-checkpoint`, the `helper_down_rate`
+/// axis in `psl-fleet-grid` rows, and the optional per-entry
+/// `helper_down_rate` in `psl-policy-table`.
 /// Readers accept anything ≤ the current version; kind-specific readers
 /// give a "re-generate with this build" error when a field their version
 /// needs is absent.
-pub const SCHEMA_VERSION: u32 = 4;
+pub const SCHEMA_VERSION: u32 = 5;
 
 /// Every artifact kind the repo persists under `target/psl-bench/`.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]

@@ -9,7 +9,7 @@
 //! output JSON is byte-identical regardless of thread count.
 
 use crate::exec::pool;
-use crate::fleet::events::ChurnCfg;
+use crate::fleet::events::{ChurnCfg, HelperChurnCfg};
 use crate::fleet::orchestrator::{self, FleetCfg, Policy};
 use crate::instance::profiles::Model;
 use crate::instance::scenario::{Scenario, ScenarioCfg};
@@ -25,6 +25,11 @@ pub struct FleetGridCfg {
     /// Per-round departure probability; arrivals balance at `rate × J`
     /// so the expected roster stays stationary.
     pub churn_rates: Vec<f64>,
+    /// Per-round helper outage probabilities (the helper-churn axis).
+    /// 0.0 = the scenario's own default (static pool for most families,
+    /// bursts for `s7-helper-bursts`); > 0.0 overrides with a transient
+    /// outage model at that rate.
+    pub helper_down_rates: Vec<f64>,
     pub policies: Vec<Policy>,
     pub seeds: Vec<u64>,
     pub rounds: usize,
@@ -44,6 +49,7 @@ impl Default for FleetGridCfg {
             model: Model::ResNet101,
             size: (10, 2),
             churn_rates: vec![0.05, 0.15, 0.3],
+            helper_down_rates: vec![0.0],
             policies: vec![Policy::Incremental, Policy::FullEveryRound],
             seeds: vec![42],
             rounds: 8,
@@ -59,6 +65,9 @@ impl Default for FleetGridCfg {
 pub struct FleetCell {
     pub scenario: Scenario,
     pub churn_rate: f64,
+    /// The grid axis value (0.0 = scenario default; the row records the
+    /// *effective* rate the cell actually ran).
+    pub helper_down_rate: f64,
     pub policy: Policy,
     pub seed: u64,
 }
@@ -71,6 +80,9 @@ pub struct FleetGridRow {
     pub n_clients: usize,
     pub n_helpers: usize,
     pub churn_rate: f64,
+    /// Effective per-round helper outage probability the cell ran (the
+    /// axis value, or the scenario's default when the axis is 0.0).
+    pub helper_down_rate: f64,
     pub policy: &'static str,
     pub seed: u64,
     pub rounds: usize,
@@ -87,14 +99,16 @@ pub struct FleetGridRow {
 }
 
 /// Enumerate the grid in canonical order:
-/// scenario → churn rate → policy → seed.
+/// scenario → churn rate → helper outage rate → policy → seed.
 pub fn cells(cfg: &FleetGridCfg) -> Vec<FleetCell> {
     let mut out = Vec::new();
     for &scenario in &cfg.scenarios {
         for &churn_rate in &cfg.churn_rates {
-            for &policy in &cfg.policies {
-                for &seed in &cfg.seeds {
-                    out.push(FleetCell { scenario, churn_rate, policy, seed });
+            for &helper_down_rate in &cfg.helper_down_rates {
+                for &policy in &cfg.policies {
+                    for &seed in &cfg.seeds {
+                        out.push(FleetCell { scenario, churn_rate, helper_down_rate, policy, seed });
+                    }
                 }
             }
         }
@@ -114,18 +128,29 @@ pub fn cell_cfg(grid: &FleetGridCfg, c: &FleetCell) -> FleetCfg {
     let mut cfg = FleetCfg::new(scen, churn, c.policy);
     cfg.slot_ms = grid.slot_ms;
     cfg.policy_table = grid.policy_table.clone();
+    if c.helper_down_rate > 0.0 {
+        cfg.helper_churn = HelperChurnCfg {
+            down_rate: c.helper_down_rate,
+            outage_rounds: 2,
+            join_rate: 0.0,
+            max_helpers: 0,
+            diurnal_period: 0,
+        };
+    }
     cfg
 }
 
 /// Run one cell: a full fleet simulation, summarized.
 pub fn run_cell(grid: &FleetGridCfg, c: &FleetCell) -> FleetGridRow {
-    let report = orchestrator::run(&cell_cfg(grid, c));
+    let cfg = cell_cfg(grid, c);
+    let report = orchestrator::run(&cfg);
     FleetGridRow {
         scenario: c.scenario.name(),
         model: grid.model.name(),
         n_clients: grid.size.0,
         n_helpers: grid.size.1,
         churn_rate: c.churn_rate,
+        helper_down_rate: cfg.helper_churn.down_rate,
         policy: c.policy.name(),
         seed: c.seed,
         rounds: report.rounds.len(),
@@ -168,6 +193,7 @@ pub fn rows_to_json(rows: &[FleetGridRow]) -> Json {
                             ("n_clients", Json::Num(r.n_clients as f64)),
                             ("n_helpers", Json::Num(r.n_helpers as f64)),
                             ("churn_rate", Json::Num(r.churn_rate)),
+                            ("helper_down_rate", Json::Num(r.helper_down_rate)),
                             ("policy", Json::Str(r.policy.to_string())),
                             // Seeds replay exactly → string (sweep precedent).
                             ("seed", Json::Str(r.seed.to_string())),
@@ -202,6 +228,7 @@ mod tests {
             model: Model::Vgg19,
             size: (6, 2),
             churn_rates: vec![0.1, 0.25],
+            helper_down_rates: vec![0.0],
             policies: vec![Policy::Incremental, Policy::FullEveryRound],
             seeds: vec![7],
             rounds: 5,
@@ -226,10 +253,51 @@ mod tests {
     fn canonical_cell_order() {
         let cs = cells(&tiny(1));
         assert_eq!(cs.len(), 8);
-        assert_eq!(cs[0], FleetCell { scenario: Scenario::S1, churn_rate: 0.1, policy: Policy::Incremental, seed: 7 });
+        assert_eq!(
+            cs[0],
+            FleetCell {
+                scenario: Scenario::S1,
+                churn_rate: 0.1,
+                helper_down_rate: 0.0,
+                policy: Policy::Incremental,
+                seed: 7,
+            }
+        );
         assert_eq!(cs[1].policy, Policy::FullEveryRound);
         assert_eq!(cs[2].churn_rate, 0.25);
         assert_eq!(cs[4].scenario, Scenario::S4StragglerTail);
+    }
+
+    #[test]
+    fn helper_axis_multiplies_cells_and_overrides_the_churn_model() {
+        let mut cfg = tiny(1);
+        cfg.helper_down_rates = vec![0.0, 0.2];
+        let cs = cells(&cfg);
+        assert_eq!(cs.len(), 16, "helper axis doubles the grid");
+        // Axis 0.0 keeps the scenario default (static for S1)...
+        let static_cell = cell_cfg(&cfg, &cs[0]);
+        assert!(static_cell.helper_churn.is_none());
+        // ...and a positive axis value switches on transient outages.
+        assert_eq!(cs[2].helper_down_rate, 0.2);
+        let churned_cell = cell_cfg(&cfg, &cs[2]);
+        assert_eq!(churned_cell.helper_churn.down_rate, 0.2);
+        assert_eq!(churned_cell.helper_churn.outage_rounds, 2);
+    }
+
+    #[test]
+    fn s7_cells_record_their_effective_outage_rate() {
+        // An s7-helper-bursts cell at axis 0.0 still runs the family's
+        // burst model; the row reports the rate that actually ran.
+        let mut cfg = tiny(1);
+        cfg.scenarios = vec![Scenario::S7HelperBursts];
+        cfg.churn_rates = vec![0.1];
+        cfg.policies = vec![Policy::Incremental];
+        cfg.rounds = 3;
+        let rows = run(&cfg);
+        assert_eq!(rows.len(), 1);
+        assert_eq!(rows[0].scenario, "s7-helper-bursts");
+        assert!(rows[0].helper_down_rate > 0.0, "{rows:?}");
+        assert_eq!(rows[0].full_rounds + rows[0].repair_rounds + rows[0].empty_rounds, rows[0].rounds);
     }
 
     #[test]

@@ -17,7 +17,7 @@
 //!   psl analyze --perf-diff OLD NEW   perf trajectory gate
 //!   psl analyze --shard FILE          stitch-gap summary of a shard artifact
 //!
-//! Common scenario args: --scenario 1..6  --model resnet101|vgg19  -j N
+//! Common scenario args: --scenario 1..7  --model resnet101|vgg19  -j N
 //! -i N  --seed S  --slot-ms X. Run `psl help` for the full list.
 
 use std::collections::HashMap;
@@ -100,9 +100,11 @@ COMMANDS
                 With --diff OLD NEW: compare two sweep artifacts cell by
                 cell and exit non-zero on makespan regressions.
   fleet         Run a seeded multi-round churn simulation: clients arrive
-                and depart between rounds; the orchestrator repairs the
-                previous assignment incrementally and falls back to a
-                full re-solve on drift. Deterministic JSON report under
+                and depart between rounds — and, when a helper model is
+                enabled, helpers drop out and return; orphaned clients
+                are migrated to survivors (helper-degraded) or the round
+                falls back to a full re-solve on the reduced pool
+                (helper-resolve). Deterministic JSON report under
                 target/psl-bench/, plus a round-by-round JSONL stream
                 (<out>.rounds.jsonl) written as rounds finish. With
                 --grid: the scenario x churn-rate x policy grid across
@@ -155,6 +157,8 @@ SCENARIO FAMILIES
   4|s4-straggler-tail   heavy straggler tail + client churn
   5|s5-memory-starved   tight varied helper memory, random cuts
   6|s6-mega-homogeneous huge identical fleet, uniform links
+  7|s7-helper-bursts    s4 clients + bursty helper outages (fleet/serve
+                        model transient helper downtime by default here)
 
 SWEEP FLAGS
   --scenarios LIST      comma list of families         [default 1,2,3,4]
@@ -181,6 +185,15 @@ defaults to s4-straggler-tail)
   --churn-threshold F   full re-solve when membership delta > F  [0.35]
   --gap-threshold F     full re-solve when repair gap > F x last full [1.75]
   --batches B           batches for the epoch period metric      [8]
+  --helper-down-rate P  per-round helper outage probability [0; s7: 0.12]
+  --helper-outage-rounds K  rounds a downed helper stays out   [default 2]
+  --helper-join-rate R  expected helper arrivals per round     [default 0]
+                        (needs --max-helpers above the base count)
+  --max-helpers N       helper-pool cap for joins              [default 0]
+  --diurnal-period N    if > 0, nights (second half of each period)
+                        double the outage rate                 [default 0]
+  --capacity-threshold F  full re-solve on the reduced helper set when
+                        live capacity fraction drops below F   [0.5]
   --out NAME            output name under target/psl-bench [default fleet]
                         (also writes <out>.rounds.jsonl and
                         <out>.events.jsonl sidecars)
@@ -190,29 +203,41 @@ defaults to s4-straggler-tail)
                         is taken from the checkpoint, so only --rounds
                         (same or longer horizon), --out and
                         --checkpoint-every may accompany it
-  --grid                run the scenario x churn-rate x policy grid
-                        (--scenarios, --churn-rates, --policies, --seeds,
+  --grid                run the scenario x churn-rate x helper-down-rate
+                        x policy grid (--scenarios, --churn-rates,
+                        --helper-down-rates, --policies, --seeds,
                         --threads as in sweep; --out default fleet-grid;
                         --policy-table feeds auto cells when --policies
                         includes auto; other single-run knobs like
-                        --policy/--depart-prob are rejected — cells use
-                        stationary defaults)
+                        --policy/--helper-down-rate are rejected — cells
+                        use stationary defaults)
+  --helper-down-rates LIST  (--grid only) helper outage-rate axis
+                        [default 0]; 0 keeps the scenario's own helper
+                        model, > 0 overrides it with 2-round outages
 
-SERVE FLAGS (plus --scenario/--model/-j/-i/--seed/--slot-ms and the
-fleet policy knobs --policy/--policy-table/--churn-threshold/
---gap-threshold/--batches; scenario defaults to s4-straggler-tail)
+SERVE FLAGS (plus --scenario/--model/-j/-i/--seed/--slot-ms, the fleet
+policy knobs --policy/--policy-table/--churn-threshold/--gap-threshold/
+--batches and the helper knobs --helper-down-rate/--helper-outage-rounds/
+--helper-join-rate/--max-helpers/--diurnal-period/--capacity-threshold;
+scenario defaults to s4-straggler-tail)
   --max-clients N       roster cap the world is sized for  [default 2*J]
   --checkpoint-every N  snapshot the session every N stepped rounds to
                         target/psl-bench/<out>.ckpt.json (ack on stderr)
   --resume CKPT         continue a psl-fleet-checkpoint file (config
                         comes from the checkpoint; recorded knobs are
                         rejected)
+  --strict              exit non-zero on the first bad event line instead
+                        of answering it with an {\"error\": ...} line and
+                        continuing (the lenient default)
   --out NAME            checkpoint name stem               [default serve]
 
   Event lines: {\"arrivals\": [ids], \"departures\": [ids]} with optional
-  \"round\" and \"roster\" consistency fields; round 0's implicit previous
-  roster is the base population 0..J. A {\"checkpoint\": \"name\"} line
-  snapshots instead of stepping and acks on stdout.
+  \"round\" and \"roster\" consistency fields and, on helper-modeled
+  worlds, optional \"helper_down\"/\"helper_up\"/\"helper_join\" id lists;
+  round 0's implicit previous roster is the base population 0..J. A
+  {\"checkpoint\": \"name\"} line snapshots instead of stepping and acks
+  on stdout. Under the lenient default a bad line answers with
+  {\"error\": ..., \"line\": N} on stdout and the stream keeps serving.
 
 PERF FLAGS
   --scenarios LIST      comma list of families         [default 1,2,6]

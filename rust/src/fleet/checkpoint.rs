@@ -2,13 +2,16 @@
 //! schema-checked `psl-fleet-checkpoint` artifact.
 //!
 //! A checkpoint stores the full run config (enough to rebuild the
-//! [`FleetWorld`] and regenerate the event stream), the warm state the
-//! next round's decision depends on (`prev_assign`, `prev_roster_len`,
-//! `last_full_gap`, round cursor), and the completed [`RoundReport`]s so
-//! a resumed run replays its sidecar and finishes with the byte-identical
-//! final report. Minted clients are deliberately *not* stored — they are
-//! a pure function of `(scenario tuple, id)` and re-mint on resume — so
-//! the checkpoint stays O(max_clients + completed rounds).
+//! [`FleetWorld`] and regenerate the event stream, helper-churn knobs
+//! included), the warm state the next round's decision depends on
+//! (`prev_assign`, `prev_roster_len`, `last_full_gap`, the helper roster
+//! — live ids, in-outage ids, and the never-reused id watermark — and the
+//! round cursor), and the completed [`RoundReport`]s so a resumed run
+//! replays its sidecar and finishes with the byte-identical final
+//! report, including across a `helper_down`/`helper_up` boundary. Minted
+//! clients and helpers are deliberately *not* stored — they are a pure
+//! function of `(scenario tuple, id)` and re-mint on resume — so the
+//! checkpoint stays O(max_clients + max_helpers + completed rounds).
 //!
 //! Only the named scenario families round-trip: a custom
 //! [`ScenarioSpec`](crate::instance::scenario::ScenarioSpec) composition
@@ -42,8 +45,17 @@ pub struct FleetCheckpoint {
     pub prev_roster_len: usize,
     /// Drift baseline (`f64::MAX` sentinel = no full solve yet).
     pub last_full_gap: f64,
-    /// Previous round's kept assignment: stable client id → helper.
+    /// Previous round's kept assignment: stable client id → helper *id*
+    /// (== position for base helpers, so static worlds are unchanged).
     pub prev_assign: BTreeMap<u64, usize>,
+    /// Helper ids live when the snapshot landed (sorted).
+    pub helpers_live: Vec<u64>,
+    /// Helper ids in an outage when the snapshot landed (sorted). Their
+    /// return rounds are *not* stored: the regenerated event stream (or
+    /// the external serve feed) carries the `helper_up` events.
+    pub helpers_down: Vec<u64>,
+    /// Never-reused helper-id watermark (joins mint from here).
+    pub helper_next_id: u64,
     /// Completed rounds, in order.
     pub rounds: Vec<RoundReport>,
 }
@@ -87,6 +99,12 @@ impl FleetCheckpoint {
             ("churn_threshold", finite_or_null(self.cfg.churn_threshold)),
             ("gap_threshold", finite_or_null(self.cfg.gap_threshold)),
             ("epoch_batches", Json::Num(self.cfg.epoch_batches as f64)),
+            ("helper_down_rate", Json::Num(self.cfg.helper_churn.down_rate)),
+            ("helper_outage_rounds", Json::Num(self.cfg.helper_churn.outage_rounds as f64)),
+            ("helper_join_rate", Json::Num(self.cfg.helper_churn.join_rate)),
+            ("max_helpers", Json::Num(self.cfg.helper_churn.max_helpers as f64)),
+            ("diurnal_period", Json::Num(self.cfg.helper_churn.diurnal_period as f64)),
+            ("capacity_threshold", Json::Num(self.cfg.capacity_threshold)),
             (
                 "policy_table",
                 self.cfg.policy_table.as_ref().map(|t| t.to_json()).unwrap_or(Json::Null),
@@ -106,6 +124,15 @@ impl FleetCheckpoint {
                         .collect(),
                 ),
             ),
+            (
+                "helpers_live",
+                Json::Arr(self.helpers_live.iter().map(|&h| Json::Num(h as f64)).collect()),
+            ),
+            (
+                "helpers_down",
+                Json::Arr(self.helpers_down.iter().map(|&h| Json::Num(h as f64)).collect()),
+            ),
+            ("helper_next_id", Json::Num(self.helper_next_id as f64)),
         ]);
         artifact::envelope(ArtifactKind::FleetCheckpoint, vec![
             ("config", config),
@@ -123,6 +150,34 @@ impl FleetCheckpoint {
         };
         let int = |v: &Json, what: &str| -> Result<usize> {
             v.as_usize().with_context(|| format!("checkpoint: bad {what}"))
+        };
+        // The helper-dynamics fields arrived with schema v5: a checkpoint
+        // without them cannot restore the helper roster, so fail with the
+        // registry's standard advice instead of inventing state.
+        let required = |v: &Json, what: &str| -> Result<&Json> {
+            match v {
+                Json::Null => anyhow::bail!(
+                    "checkpoint: no {what:?} — this artifact predates schema v{} helper \
+                     dynamics; re-generate it with this build",
+                    artifact::SCHEMA_VERSION
+                ),
+                v => Ok(v),
+            }
+        };
+        let helper_ids = |v: &Json, what: &str| -> Result<Vec<u64>> {
+            let arr = required(v, what)?
+                .as_arr()
+                .with_context(|| format!("checkpoint: bad {what}"))?;
+            let mut out = Vec::with_capacity(arr.len());
+            for x in arr {
+                let f = num(x, what)?;
+                anyhow::ensure!(
+                    f >= 0.0 && f.fract() == 0.0,
+                    "checkpoint: bad helper id {f} in {what}"
+                );
+                out.push(f as u64);
+            }
+            Ok(out)
         };
         let scenario_name = c.get("scenario").as_str().context("checkpoint: bad scenario")?;
         let scenario = Scenario::parse(scenario_name).with_context(|| {
@@ -165,6 +220,22 @@ impl FleetCheckpoint {
             Json::Null => None,
             v => Some(PolicyTable::from_json(v).context("checkpoint: bad policy_table")?),
         };
+        cfg.helper_churn.down_rate =
+            num(required(c.get("helper_down_rate"), "helper_down_rate")?, "helper_down_rate")?;
+        cfg.helper_churn.outage_rounds = int(
+            required(c.get("helper_outage_rounds"), "helper_outage_rounds")?,
+            "helper_outage_rounds",
+        )?;
+        cfg.helper_churn.join_rate =
+            num(required(c.get("helper_join_rate"), "helper_join_rate")?, "helper_join_rate")?;
+        cfg.helper_churn.max_helpers =
+            int(required(c.get("max_helpers"), "max_helpers")?, "max_helpers")?;
+        cfg.helper_churn.diurnal_period =
+            int(required(c.get("diurnal_period"), "diurnal_period")?, "diurnal_period")?;
+        cfg.capacity_threshold = num(
+            required(c.get("capacity_threshold"), "capacity_threshold")?,
+            "capacity_threshold",
+        )?;
         let world_max_clients = int(c.get("world_max_clients"), "world_max_clients")?;
 
         let s = doc.get("state");
@@ -184,6 +255,14 @@ impl FleetCheckpoint {
                 "checkpoint: duplicate client id {id} in prev_assign"
             );
         }
+        let helpers_live = helper_ids(s.get("helpers_live"), "helpers_live")?;
+        let helpers_down = helper_ids(s.get("helpers_down"), "helpers_down")?;
+        let next_id_f = num(required(s.get("helper_next_id"), "helper_next_id")?, "helper_next_id")?;
+        anyhow::ensure!(
+            next_id_f >= 0.0 && next_id_f.fract() == 0.0,
+            "checkpoint: bad helper_next_id {next_id_f}"
+        );
+        let helper_next_id = next_id_f as u64;
         let rounds = doc
             .get("rounds")
             .as_arr()
@@ -208,6 +287,9 @@ impl FleetCheckpoint {
             prev_roster_len,
             last_full_gap,
             prev_assign,
+            helpers_live,
+            helpers_down,
+            helper_next_id,
             rounds,
         })
     }
@@ -307,6 +389,48 @@ mod tests {
         ckpt.cfg.scenario.spec.name = "my-custom-mix".to_string();
         let err = FleetCheckpoint::from_json(&ckpt.to_json()).unwrap_err().to_string();
         assert!(err.contains("not checkpointable") || err.contains("my-custom-mix"), "{err}");
+    }
+
+    #[test]
+    fn helper_state_roundtrips_exactly() {
+        let mut ckpt = mid_run_checkpoint();
+        assert_eq!(ckpt.helpers_live, vec![0, 1], "static worlds snapshot the base roster");
+        assert_eq!(ckpt.helper_next_id, 2);
+        // Forge a mid-outage snapshot of a dynamic world (3 helpers, one
+        // dark, one joined) and check the state survives the JSON trip.
+        ckpt.cfg.helper_churn.max_helpers = 6;
+        ckpt.cfg.helper_churn.down_rate = 0.25;
+        ckpt.helpers_live = vec![0, 2];
+        ckpt.helpers_down = vec![1];
+        ckpt.helper_next_id = 3;
+        let text = ckpt.to_json().pretty();
+        let back = FleetCheckpoint::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.helpers_live, vec![0, 2]);
+        assert_eq!(back.helpers_down, vec![1]);
+        assert_eq!(back.helper_next_id, 3);
+        assert_eq!(back.cfg.helper_churn.down_rate, 0.25);
+        assert_eq!(back.to_json().pretty(), text, "helper state is a JSON fixed point");
+    }
+
+    #[test]
+    fn pre_v5_checkpoints_are_rejected_with_advice() {
+        let ckpt = mid_run_checkpoint();
+        for (section, key) in [
+            ("state", "helpers_live"),
+            ("state", "helpers_down"),
+            ("state", "helper_next_id"),
+            ("config", "helper_down_rate"),
+            ("config", "capacity_threshold"),
+        ] {
+            let mut doc = ckpt.to_json();
+            if let Json::Obj(obj) = &mut doc {
+                if let Some(Json::Obj(sec)) = obj.get_mut(section) {
+                    sec.remove(key);
+                }
+            }
+            let err = FleetCheckpoint::from_json(&doc).unwrap_err().to_string();
+            assert!(err.contains("re-generate"), "{section}.{key}: {err}");
+        }
     }
 
     #[test]

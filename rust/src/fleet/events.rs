@@ -8,6 +8,15 @@
 //! reused, so a client's identity — and every draw behind it — is stable
 //! across the whole run.
 //!
+//! Helpers have their own fault process layered on the same stream
+//! (see [`HelperChurnCfg`]): a live helper goes down with probability
+//! `down_rate` per round (`helper_down`), deterministically returns
+//! exactly `outage_rounds` rounds later (`helper_up`), and fresh helpers
+//! join permanently at Poisson rate `join_rate` (`helper_join`) under a
+//! `max_helpers` pool cap. Helper ids, like client ids, are never
+//! reused. Helper draws come from a separate RNG stream, so enabling
+//! helper churn leaves the client membership history byte-identical.
+//!
 //! The stream is a pure function of `(base population, churn knobs,
 //! seed)`: replaying a fleet run with the same tuple reproduces the exact
 //! same membership history, independent of thread count or wall clock.
@@ -51,6 +60,119 @@ impl ChurnCfg {
     }
 }
 
+/// Helper fault-process knobs for a fleet run. All-zero rates (the
+/// [`HelperChurnCfg::none`] default) disable helper modeling entirely:
+/// the event stream, the world, and every artifact stay byte-identical
+/// to a run built before helper dynamics existed.
+#[derive(Clone, Debug)]
+pub struct HelperChurnCfg {
+    /// Per-helper per-round transient-outage probability.
+    pub down_rate: f64,
+    /// Outage length: a helper that goes down before round `r` comes
+    /// back before round `r + outage_rounds` (clamped to ≥ 1). The
+    /// return is deterministic — no draw is spent on it.
+    pub outage_rounds: usize,
+    /// Expected permanent helper arrivals per round (Poisson rate).
+    pub join_rate: f64,
+    /// Pool cap counting live *and* down helpers (outaged helpers come
+    /// back, so they keep their slot). A base helper set larger than
+    /// the cap raises the effective cap to the base size, mirroring
+    /// [`ChurnCfg::max_clients`]. `0` means "base size".
+    pub max_helpers: usize,
+    /// Diurnal availability period in rounds (`0` disables). In the
+    /// second half of each period ("night") the outage rate doubles
+    /// (clamped to 1.0) and no helpers join.
+    pub diurnal_period: usize,
+}
+
+impl HelperChurnCfg {
+    /// Helper dynamics disabled: no draws, no events, no world changes.
+    pub fn none() -> HelperChurnCfg {
+        HelperChurnCfg {
+            down_rate: 0.0,
+            outage_rounds: 2,
+            join_rate: 0.0,
+            max_helpers: 0,
+            diurnal_period: 0,
+        }
+    }
+
+    /// True when helper dynamics are fully disabled. `max_helpers` and
+    /// `diurnal_period` count as enabling knobs so a serve session can
+    /// opt into helper modeling (accepting helper events on stdin)
+    /// without any seeded faults of its own.
+    pub fn is_none(&self) -> bool {
+        self.down_rate == 0.0
+            && self.join_rate == 0.0
+            && self.max_helpers == 0
+            && self.diurnal_period == 0
+    }
+
+    /// The `s7-helper-bursts` default: frequent short transient
+    /// outages, no joins.
+    pub fn bursts() -> HelperChurnCfg {
+        HelperChurnCfg {
+            down_rate: 0.12,
+            outage_rounds: 2,
+            join_rate: 0.0,
+            max_helpers: 0,
+            diurnal_period: 0,
+        }
+    }
+}
+
+/// Live/down partition of the helper pool, evolved by applying each
+/// round's helper events in order. `live` and `down` are sorted and
+/// disjoint; `next_id` is the first never-used helper id (join ids are
+/// never reused, mirroring the client id space).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct HelperRoster {
+    /// Helpers currently serving, sorted by id.
+    pub live: Vec<u64>,
+    /// Helpers in a transient outage, sorted by id.
+    pub down: Vec<u64>,
+    /// First never-used helper id.
+    pub next_id: u64,
+}
+
+impl HelperRoster {
+    /// The round-0 roster: base helpers `0..I`, all live.
+    pub fn base(n_helpers: usize) -> HelperRoster {
+        assert!(n_helpers >= 1, "a fleet world needs at least one helper");
+        HelperRoster {
+            live: (0..n_helpers as u64).collect(),
+            down: vec![],
+            next_id: n_helpers as u64,
+        }
+    }
+
+    /// Apply one round's helper events. Panics on an inconsistent event
+    /// — callers feeding untrusted input must validate through
+    /// [`RoundEvents::from_json`] first, which rejects every case these
+    /// asserts would hit.
+    pub fn apply(&mut self, ev: &RoundEvents) {
+        for &id in &ev.helper_up {
+            let k = self.down.binary_search(&id).expect("helper-up id must be in an outage");
+            self.down.remove(k);
+            let k = self.live.binary_search(&id).unwrap_err();
+            self.live.insert(k, id);
+        }
+        for &id in &ev.helper_down {
+            let k = self.live.binary_search(&id).expect("helper-down id must be live");
+            self.live.remove(k);
+            let k = self.down.binary_search(&id).unwrap_err();
+            self.down.insert(k, id);
+        }
+        for &id in &ev.helper_join {
+            assert!(id >= self.next_id, "helper ids are never reused");
+            let k = self.live.binary_search(&id).unwrap_err();
+            self.live.insert(k, id);
+            self.next_id = id + 1;
+        }
+        assert!(!self.live.is_empty(), "helper events left no live helper");
+    }
+}
+
 /// Membership delta and resulting roster for one round.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct RoundEvents {
@@ -62,26 +184,73 @@ pub struct RoundEvents {
     pub arrivals: Vec<u64>,
     /// Membership for this round, sorted by id.
     pub roster: Vec<u64>,
+    /// Helpers entering a transient outage before this round (subset of
+    /// the previously live helpers).
+    pub helper_down: Vec<u64>,
+    /// Helpers returning from an outage before this round (subset of
+    /// the previously down helpers).
+    pub helper_up: Vec<u64>,
+    /// Fresh helpers joining permanently before this round (ids
+    /// strictly above every helper id seen so far).
+    pub helper_join: Vec<u64>,
 }
 
 impl RoundEvents {
+    /// A client-only event — the constructor every helper-free call
+    /// site and test literal uses; helper fields are empty.
+    pub fn clients(
+        round: usize,
+        departures: Vec<u64>,
+        arrivals: Vec<u64>,
+        roster: Vec<u64>,
+    ) -> RoundEvents {
+        RoundEvents {
+            round,
+            departures,
+            arrivals,
+            roster,
+            helper_down: vec![],
+            helper_up: vec![],
+            helper_join: vec![],
+        }
+    }
+
     /// Fraction of the previous roster that changed (arrivals +
     /// departures over the previous size) — the orchestrator's churn
-    /// drift signal.
+    /// drift signal. Helper events are tracked separately (capacity
+    /// fraction, not churn fraction).
     pub fn churn_fraction(&self, prev_roster_len: usize) -> f64 {
         (self.arrivals.len() + self.departures.len()) as f64 / prev_roster_len.max(1) as f64
     }
 
+    /// True when this round carries any helper event.
+    pub fn has_helper_events(&self) -> bool {
+        !(self.helper_down.is_empty() && self.helper_up.is_empty() && self.helper_join.is_empty())
+    }
+
     /// The event's JSON object — one line of the `<out>.events.jsonl`
     /// sidecar, and the line format `psl serve` consumes on stdin.
+    /// Helper keys are emitted only when non-empty, so helper-free
+    /// streams serialize byte-identically to builds that predate helper
+    /// dynamics.
     pub fn to_json(&self) -> Json {
         let ids = |v: &[u64]| Json::Arr(v.iter().map(|&x| Json::Num(x as f64)).collect());
-        Json::obj(vec![
+        let mut fields = vec![
             ("round", Json::Num(self.round as f64)),
             ("arrivals", ids(&self.arrivals)),
             ("departures", ids(&self.departures)),
             ("roster", ids(&self.roster)),
-        ])
+        ];
+        if !self.helper_down.is_empty() {
+            fields.push(("helper_down", ids(&self.helper_down)));
+        }
+        if !self.helper_up.is_empty() {
+            fields.push(("helper_up", ids(&self.helper_up)));
+        }
+        if !self.helper_join.is_empty() {
+            fields.push(("helper_join", ids(&self.helper_join)));
+        }
+        Json::obj(fields)
     }
 
     /// Single-line JSON for event-log streaming (JSONL).
@@ -94,8 +263,14 @@ impl RoundEvents {
     /// event only needs `arrivals`/`departures`); when present they must
     /// agree with `expect_round` and with the membership delta applied to
     /// `prev_roster` (which must be sorted — it is the previous event's
-    /// `roster`).
-    pub fn from_json(doc: &Json, expect_round: usize, prev_roster: &[u64]) -> Result<RoundEvents> {
+    /// `roster`). Helper events are validated against `prev_helpers`,
+    /// the roster state after the previous round's events.
+    pub fn from_json(
+        doc: &Json,
+        expect_round: usize,
+        prev_roster: &[u64],
+        prev_helpers: &HelperRoster,
+    ) -> Result<RoundEvents> {
         doc.as_obj().context("event is not a JSON object")?;
         let ids = |key: &str| -> Result<Vec<u64>> {
             let mut out = Vec::new();
@@ -106,7 +281,7 @@ impl RoundEvents {
                         let f = x.as_f64().with_context(|| format!("event {key:?} entry {x} is not a number"))?;
                         anyhow::ensure!(
                             f >= 0.0 && f.fract() == 0.0 && f <= u64::MAX as f64,
-                            "event {key:?} entry {f} is not a client id"
+                            "event {key:?} entry {f} is not an id"
                         );
                         out.push(f as u64);
                     }
@@ -136,6 +311,10 @@ impl RoundEvents {
             prev_roster.iter().copied().filter(|id| departures.binary_search(id).is_err()).collect();
         for id in &arrivals {
             anyhow::ensure!(
+                departures.binary_search(id).is_err(),
+                "arrival id {id} also departs in the same event (inconsistent roster)"
+            );
+            anyhow::ensure!(
                 roster.binary_search(id).is_err(),
                 "arrival id {id} is already in the roster (ids are never reused)"
             );
@@ -151,7 +330,36 @@ impl RoundEvents {
                 "event roster does not match previous roster - departures + arrivals"
             );
         }
-        Ok(RoundEvents { round, departures, arrivals, roster })
+        let helper_down = ids("helper_down")?;
+        let helper_up = ids("helper_up")?;
+        let helper_join = ids("helper_join")?;
+        for id in &helper_down {
+            anyhow::ensure!(
+                prev_helpers.live.binary_search(id).is_ok(),
+                "helper-down id {id} is not a live helper"
+            );
+            anyhow::ensure!(
+                helper_up.binary_search(id).is_err(),
+                "helper id {id} cannot go down and come back in the same event"
+            );
+        }
+        for id in &helper_up {
+            anyhow::ensure!(
+                prev_helpers.down.binary_search(id).is_ok(),
+                "helper-up id {id} is not in an outage"
+            );
+        }
+        for id in &helper_join {
+            anyhow::ensure!(
+                *id >= prev_helpers.next_id,
+                "helper-join id {id} is not fresh (helper ids are never reused)"
+            );
+        }
+        anyhow::ensure!(
+            prev_helpers.live.len() + helper_up.len() + helper_join.len() > helper_down.len(),
+            "helper events would leave no live helper"
+        );
+        Ok(RoundEvents { round, departures, arrivals, roster, helper_down, helper_up, helper_join })
     }
 }
 
@@ -194,7 +402,7 @@ pub fn generate(base_clients: usize, churn: &ChurnCfg, seed: u64) -> Vec<RoundEv
     let mut roster: Vec<u64> = (0..base_clients as u64).collect();
     let mut next_id = base_clients as u64;
     let mut out = Vec::with_capacity(churn.rounds);
-    out.push(RoundEvents { round: 0, departures: vec![], arrivals: vec![], roster: roster.clone() });
+    out.push(RoundEvents::clients(0, vec![], vec![], roster.clone()));
     for round in 1..churn.rounds {
         let mut departures = Vec::new();
         let mut stayed = Vec::with_capacity(roster.len());
@@ -212,7 +420,73 @@ pub fn generate(base_clients: usize, churn: &ChurnCfg, seed: u64) -> Vec<RoundEv
         roster = stayed;
         roster.extend(&arrivals);
         roster.sort_unstable();
-        out.push(RoundEvents { round, departures, arrivals, roster: roster.clone() });
+        out.push(RoundEvents::clients(round, departures, arrivals, roster.clone()));
+    }
+    out
+}
+
+/// [`generate`] plus the helper fault process. Client draws come from
+/// the same stream as [`generate`] and helper draws from a separate one
+/// (`seed ^ fnv("fleet-helper-events")`), so the client half of the
+/// output is byte-identical with helper churn on or off; with
+/// `helper.is_none()` the whole stream is byte-identical to
+/// [`generate`].
+///
+/// Per round, in draw order: helpers whose outage ends this round come
+/// back (deterministic, no draw), each previously-live helper draws one
+/// outage chance (the draw is always consumed; a hit is suppressed if
+/// it would leave no live helper), then `Poisson(join_rate)` fresh
+/// helpers join under the pool cap. Each round's draws depend only on
+/// the history, never the horizon, so a resumed or extended run
+/// reproduces the same prefix.
+pub fn generate_with_helpers(
+    base_clients: usize,
+    churn: &ChurnCfg,
+    helper: &HelperChurnCfg,
+    base_helpers: usize,
+    seed: u64,
+) -> Vec<RoundEvents> {
+    let mut out = generate(base_clients, churn, seed);
+    if helper.is_none() {
+        return out;
+    }
+    let cap = helper.max_helpers.max(base_helpers);
+    let mut rng = Rng::seeded(seed ^ fnv("fleet-helper-events"));
+    let mut roster = HelperRoster::base(base_helpers);
+    // (helper id, round it returns before) — outages in flight.
+    let mut returns: Vec<(u64, usize)> = Vec::new();
+    for round in 1..out.len() {
+        let mut ups: Vec<u64> =
+            returns.iter().filter(|&&(_, r)| r == round).map(|&(id, _)| id).collect();
+        returns.retain(|&(_, r)| r != round);
+        ups.sort_unstable();
+        let (mut down_rate, mut join_rate) = (helper.down_rate, helper.join_rate);
+        if helper.diurnal_period >= 2 {
+            let phase = round % helper.diurnal_period;
+            if 2 * phase >= helper.diurnal_period {
+                down_rate = (down_rate * 2.0).min(1.0);
+                join_rate = 0.0;
+            }
+        }
+        let mut downs = Vec::new();
+        for &id in &roster.live {
+            // The chance draw is always consumed (left operand of &&),
+            // so suppression near the last live helper never shifts
+            // later draws. A returning helper is not live yet, so it
+            // cannot fail again before serving one round.
+            if rng.chance(down_rate) && roster.live.len() + ups.len() - downs.len() > 1 {
+                downs.push(id);
+                returns.push((id, round + helper.outage_rounds.max(1)));
+            }
+        }
+        let want = poisson(&mut rng, join_rate);
+        let total = roster.live.len() + roster.down.len();
+        let admit = want.min(cap.saturating_sub(total));
+        let joins: Vec<u64> = (0..admit as u64).map(|k| roster.next_id + k).collect();
+        out[round].helper_down = downs;
+        out[round].helper_up = ups;
+        out[round].helper_join = joins;
+        roster.apply(&out[round]);
     }
     out
 }
@@ -223,6 +497,16 @@ mod tests {
 
     fn churn() -> ChurnCfg {
         ChurnCfg { rounds: 12, arrival_rate: 1.5, departure_prob: 0.2, max_clients: 20 }
+    }
+
+    fn helper_churn() -> HelperChurnCfg {
+        HelperChurnCfg {
+            down_rate: 0.25,
+            outage_rounds: 3,
+            join_rate: 0.4,
+            max_helpers: 6,
+            diurnal_period: 0,
+        }
     }
 
     #[test]
@@ -311,7 +595,7 @@ mod tests {
 
     #[test]
     fn churn_fraction_counts_both_directions() {
-        let r = RoundEvents { round: 1, departures: vec![0, 1], arrivals: vec![9], roster: vec![2, 9] };
+        let r = RoundEvents::clients(1, vec![0, 1], vec![9], vec![2, 9]);
         assert!((r.churn_fraction(3) - 1.0).abs() < 1e-12);
         assert!((r.churn_fraction(0) - 3.0).abs() < 1e-12, "empty previous roster guards the division");
     }
@@ -373,10 +657,11 @@ mod tests {
     #[test]
     fn event_json_roundtrips_through_from_json() {
         let ev = generate(10, &churn(), 7);
+        let helpers = HelperRoster::base(2);
         for w in ev.windows(2) {
             let (prev, next) = (&w[0], &w[1]);
             let doc = Json::parse(&next.jsonl_line()).unwrap();
-            let back = RoundEvents::from_json(&doc, next.round, &prev.roster).unwrap();
+            let back = RoundEvents::from_json(&doc, next.round, &prev.roster, &helpers).unwrap();
             assert_eq!(&back, next, "round {}", next.round);
         }
     }
@@ -387,7 +672,7 @@ mod tests {
             ("arrivals", Json::Arr(vec![Json::Num(9.0)])),
             ("departures", Json::Arr(vec![Json::Num(1.0)])),
         ]);
-        let ev = RoundEvents::from_json(&doc, 3, &[0, 1, 2]).unwrap();
+        let ev = RoundEvents::from_json(&doc, 3, &[0, 1, 2], &HelperRoster::base(2)).unwrap();
         assert_eq!(ev.round, 3);
         assert_eq!(ev.roster, vec![0, 2, 9]);
     }
@@ -395,23 +680,219 @@ mod tests {
     #[test]
     fn from_json_rejects_inconsistent_events() {
         let prev = [0u64, 1, 2];
+        let helpers = HelperRoster::base(2);
         // Wrong round.
         let doc = Json::obj(vec![("round", Json::Num(5.0))]);
-        let err = RoundEvents::from_json(&doc, 3, &prev).unwrap_err().to_string();
+        let err = RoundEvents::from_json(&doc, 3, &prev, &helpers).unwrap_err().to_string();
         assert!(err.contains("expected round 3"), "{err}");
         // Departure of an id not present.
         let doc = Json::obj(vec![("departures", Json::Arr(vec![Json::Num(7.0)]))]);
-        assert!(RoundEvents::from_json(&doc, 3, &prev).is_err());
+        assert!(RoundEvents::from_json(&doc, 3, &prev, &helpers).is_err());
         // Arrival reusing a live id.
         let doc = Json::obj(vec![("arrivals", Json::Arr(vec![Json::Num(1.0)]))]);
-        assert!(RoundEvents::from_json(&doc, 3, &prev).is_err());
+        assert!(RoundEvents::from_json(&doc, 3, &prev, &helpers).is_err());
         // Stated roster that contradicts the delta.
         let doc = Json::obj(vec![
             ("departures", Json::Arr(vec![Json::Num(0.0)])),
             ("roster", Json::Arr(vec![Json::Num(0.0), Json::Num(1.0), Json::Num(2.0)])),
         ]);
-        assert!(RoundEvents::from_json(&doc, 3, &prev).is_err());
+        assert!(RoundEvents::from_json(&doc, 3, &prev, &helpers).is_err());
         // Not an object at all.
-        assert!(RoundEvents::from_json(&Json::Num(1.0), 0, &[]).is_err());
+        assert!(RoundEvents::from_json(&Json::Num(1.0), 0, &[], &helpers).is_err());
+    }
+
+    #[test]
+    fn from_json_rejects_arrival_that_also_departs() {
+        // Regression: an id in both lists used to slip through because
+        // arrivals were only checked against the already-filtered
+        // roster — the "arrival" of a simultaneous departer rebuilt the
+        // roster it claimed to leave.
+        let doc = Json::obj(vec![
+            ("departures", Json::Arr(vec![Json::Num(1.0)])),
+            ("arrivals", Json::Arr(vec![Json::Num(1.0)])),
+        ]);
+        let err = RoundEvents::from_json(&doc, 3, &[0, 1, 2], &HelperRoster::base(2))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("arrival id 1 also departs in the same event"), "{err}");
+    }
+
+    #[test]
+    fn helper_stream_deterministic_and_client_draws_untouched() {
+        let a = generate_with_helpers(10, &churn(), &helper_churn(), 3, 7);
+        let b = generate_with_helpers(10, &churn(), &helper_churn(), 3, 7);
+        assert_eq!(a, b);
+        assert!(a.iter().any(|r| r.has_helper_events()), "fault process must fire at these rates");
+        // The client half is byte-identical to the helper-free stream.
+        let plain = generate(10, &churn(), 7);
+        for (h, p) in a.iter().zip(&plain) {
+            assert_eq!(h.round, p.round);
+            assert_eq!(h.departures, p.departures);
+            assert_eq!(h.arrivals, p.arrivals);
+            assert_eq!(h.roster, p.roster);
+        }
+    }
+
+    #[test]
+    fn disabled_helper_churn_is_byte_identical_to_generate() {
+        let a = generate_with_helpers(10, &churn(), &HelperChurnCfg::none(), 3, 7);
+        let b = generate(10, &churn(), 7);
+        assert_eq!(a, b);
+        for r in &a {
+            assert!(!r.jsonl_line().contains("helper"), "no helper keys on the wire");
+        }
+    }
+
+    #[test]
+    fn downs_return_exactly_outage_rounds_later() {
+        let cfg = ChurnCfg { rounds: 40, arrival_rate: 0.5, departure_prob: 0.1, max_clients: 16 };
+        let hc = helper_churn(); // outage_rounds: 3
+        let ev = generate_with_helpers(8, &cfg, &hc, 4, 21);
+        for (r, round) in ev.iter().enumerate() {
+            for &id in &round.helper_down {
+                let back = r + hc.outage_rounds;
+                if back < ev.len() {
+                    assert!(
+                        ev[back].helper_up.binary_search(&id).is_ok(),
+                        "helper {id} down at round {r} must return at round {back}"
+                    );
+                    for mid in ev[r + 1..back].iter() {
+                        assert!(!mid.helper_up.contains(&id) && !mid.helper_down.contains(&id));
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn last_live_helper_never_goes_down() {
+        let cfg = ChurnCfg { rounds: 20, arrival_rate: 0.5, departure_prob: 0.1, max_clients: 16 };
+        let hc = HelperChurnCfg {
+            down_rate: 1.0,
+            outage_rounds: 5,
+            join_rate: 0.0,
+            max_helpers: 0,
+            diurnal_period: 0,
+        };
+        let ev = generate_with_helpers(8, &cfg, &hc, 3, 9);
+        let mut roster = HelperRoster::base(3);
+        for r in &ev[1..] {
+            roster.apply(r); // panics if any event empties the live set
+            assert!(!roster.live.is_empty(), "round {}", r.round);
+        }
+    }
+
+    #[test]
+    fn join_ids_monotone_and_pool_cap_respected() {
+        let cfg = ChurnCfg { rounds: 30, arrival_rate: 0.5, departure_prob: 0.1, max_clients: 16 };
+        let hc = HelperChurnCfg {
+            down_rate: 0.3,
+            outage_rounds: 4,
+            join_rate: 2.0,
+            max_helpers: 7,
+            diurnal_period: 0,
+        };
+        let ev = generate_with_helpers(8, &cfg, &hc, 3, 13);
+        let mut roster = HelperRoster::base(3);
+        let mut last_join = 2u64;
+        let mut joined = false;
+        for r in &ev[1..] {
+            for &id in &r.helper_join {
+                assert!(id > last_join, "join id {id} not fresh");
+                last_join = id;
+                joined = true;
+            }
+            roster.apply(r);
+            assert!(
+                roster.live.len() + roster.down.len() <= 7,
+                "round {}: pool {} + {} exceeds cap",
+                r.round,
+                roster.live.len(),
+                roster.down.len()
+            );
+        }
+        assert!(joined, "join process must fire at rate 2.0 over 30 rounds");
+        assert_eq!(roster.live.len() + roster.down.len(), 7, "pool fills to the cap at this rate");
+    }
+
+    #[test]
+    fn diurnal_nights_suppress_joins() {
+        let cfg = ChurnCfg { rounds: 24, arrival_rate: 0.5, departure_prob: 0.1, max_clients: 16 };
+        let hc = HelperChurnCfg {
+            down_rate: 0.2,
+            outage_rounds: 2,
+            join_rate: 3.0,
+            max_helpers: 40,
+            diurnal_period: 6,
+        };
+        let ev = generate_with_helpers(8, &cfg, &hc, 3, 31);
+        let mut day_joins = 0usize;
+        for r in &ev[1..] {
+            if 2 * (r.round % 6) >= 6 {
+                assert!(r.helper_join.is_empty(), "night round {} admitted joins", r.round);
+            } else {
+                day_joins += r.helper_join.len();
+            }
+        }
+        assert!(day_joins > 0, "day rounds must admit joins at rate 3.0");
+    }
+
+    #[test]
+    fn helper_events_roundtrip_through_from_json() {
+        let ev = generate_with_helpers(10, &churn(), &helper_churn(), 3, 7);
+        let mut helpers = HelperRoster::base(3);
+        for w in ev.windows(2) {
+            let (prev, next) = (&w[0], &w[1]);
+            let doc = Json::parse(&next.jsonl_line()).unwrap();
+            let back = RoundEvents::from_json(&doc, next.round, &prev.roster, &helpers).unwrap();
+            assert_eq!(&back, next, "round {}", next.round);
+            helpers.apply(next);
+        }
+    }
+
+    #[test]
+    fn from_json_rejects_inconsistent_helper_events() {
+        let prev = [0u64, 1, 2];
+        let mut helpers = HelperRoster::base(3); // live 0,1,2 — next_id 3
+        helpers.apply(&RoundEvents {
+            helper_down: vec![2],
+            ..RoundEvents::clients(0, vec![], vec![], vec![])
+        }); // live 0,1 — down 2
+        let one = |key: &str, id: f64| Json::obj(vec![(key, Json::Arr(vec![Json::Num(id)]))]);
+        // Down of a helper that is not live.
+        let err = RoundEvents::from_json(&one("helper_down", 2.0), 3, &prev, &helpers)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("helper-down id 2 is not a live helper"), "{err}");
+        // Up of a helper that is not in an outage.
+        let err = RoundEvents::from_json(&one("helper_up", 1.0), 3, &prev, &helpers)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("helper-up id 1 is not in an outage"), "{err}");
+        // Down and up of the same helper in one event.
+        let doc = Json::obj(vec![
+            ("helper_down", Json::Arr(vec![Json::Num(1.0)])),
+            ("helper_up", Json::Arr(vec![Json::Num(1.0)])),
+        ]);
+        let err = RoundEvents::from_json(&doc, 3, &prev, &helpers).unwrap_err().to_string();
+        assert!(err.contains("cannot go down and come back"), "{err}");
+        // Join reusing a helper id.
+        let err = RoundEvents::from_json(&one("helper_join", 2.0), 3, &prev, &helpers)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("helper-join id 2 is not fresh"), "{err}");
+        // Downing every live helper.
+        let doc = Json::obj(vec![(
+            "helper_down",
+            Json::Arr(vec![Json::Num(0.0), Json::Num(1.0)]),
+        )]);
+        let err = RoundEvents::from_json(&doc, 3, &prev, &helpers).unwrap_err().to_string();
+        assert!(err.contains("would leave no live helper"), "{err}");
+        // ... unless an up or join keeps the set non-empty.
+        let doc = Json::obj(vec![
+            ("helper_down", Json::Arr(vec![Json::Num(0.0), Json::Num(1.0)])),
+            ("helper_up", Json::Arr(vec![Json::Num(2.0)])),
+        ]);
+        assert!(RoundEvents::from_json(&doc, 3, &prev, &helpers).is_ok());
     }
 }

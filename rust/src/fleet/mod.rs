@@ -44,7 +44,7 @@ pub mod serve;
 pub mod session;
 
 pub use checkpoint::FleetCheckpoint;
-pub use events::{ChurnCfg, RoundEvents};
+pub use events::{ChurnCfg, HelperChurnCfg, HelperRoster, RoundEvents};
 pub use orchestrator::{run, run_streaming, Decision, FleetCfg, Policy};
 pub use policy::{PolicyEntry, PolicyTable};
 pub use report::{FleetReport, RoundReport};

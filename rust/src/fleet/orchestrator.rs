@@ -33,7 +33,7 @@
 //!
 //! [`FleetWorld`]: crate::instance::scenario::FleetWorld
 
-use super::events::{self, ChurnCfg, RoundEvents};
+use super::events::{self, ChurnCfg, HelperChurnCfg, RoundEvents};
 use super::policy::PolicyTable;
 use super::report::{FleetReport, RoundReport};
 use super::session::FleetSession;
@@ -104,10 +104,24 @@ pub struct FleetCfg {
     /// Measured frontier table consulted by [`Policy::Auto`] (ignored by
     /// the other policies). `None` → [`PolicyTable::builtin`].
     pub policy_table: Option<PolicyTable>,
+    /// Helper fault process. [`HelperChurnCfg::none`] (the default for
+    /// every family except `s7-helper-bursts`) disables helper modeling
+    /// entirely: the world, event stream, and artifacts stay
+    /// byte-identical to builds that predate helper dynamics.
+    pub helper_churn: HelperChurnCfg,
+    /// Surviving-capacity fraction (live helper memory over live + down)
+    /// below which a degraded round abandons repair and fully re-solves
+    /// on the reduced helper set (`helper-resolve`).
+    pub capacity_threshold: f64,
 }
 
 impl FleetCfg {
     pub fn new(scenario: ScenarioCfg, churn: ChurnCfg, policy: Policy) -> FleetCfg {
+        let helper_churn = if scenario.spec.name == "s7-helper-bursts" {
+            HelperChurnCfg::bursts()
+        } else {
+            HelperChurnCfg::none()
+        };
         FleetCfg {
             scenario,
             slot_ms: None,
@@ -120,11 +134,31 @@ impl FleetCfg {
             gap_threshold: 1.75,
             epoch_batches: 8,
             policy_table: None,
+            helper_churn,
+            capacity_threshold: 0.5,
         }
     }
 
     pub fn slot_ms(&self) -> f64 {
         self.slot_ms.unwrap_or(self.scenario.model.profile().default_slot_ms)
+    }
+
+    /// Build the world this run orchestrates over, sized for `max_clients`
+    /// admitted clients: the static world when helper dynamics are off
+    /// (byte-identical to historical runs), the outage-proof dynamic
+    /// world otherwise.
+    pub fn build_world_sized(&self, max_clients: usize) -> FleetWorld {
+        if self.helper_churn.is_none() {
+            self.scenario.fleet_world(max_clients)
+        } else {
+            self.scenario.fleet_world_dynamic(max_clients)
+        }
+    }
+
+    /// [`build_world_sized`](FleetCfg::build_world_sized) at the churn
+    /// process's roster cap — how every batch entry point builds it.
+    pub fn build_world(&self) -> FleetWorld {
+        self.build_world_sized(self.churn.max_clients)
     }
 }
 
@@ -152,12 +186,21 @@ pub enum Decision {
     FullInfeasible,
     /// Warm-started incremental repair was kept.
     Repair,
+    /// A round at degraded helper capacity (outages live) kept the
+    /// warm-started repair: orphaned clients migrated to surviving
+    /// helpers, everyone else stayed put.
+    HelperDegraded,
+    /// A degraded round abandoned the warm state and fully re-solved on
+    /// the reduced helper set — the surviving-capacity fraction fell
+    /// below `capacity_threshold`, the repair drifted past the gap
+    /// fallback, or migration could not place an orphan.
+    HelperResolve,
     /// Empty roster: nothing to schedule.
     Empty,
 }
 
 impl Decision {
-    pub const ALL: [Decision; 8] = [
+    pub const ALL: [Decision; 10] = [
         Decision::FullInitial,
         Decision::FullPolicy,
         Decision::FullChurn,
@@ -165,6 +208,8 @@ impl Decision {
         Decision::FullGap,
         Decision::FullInfeasible,
         Decision::Repair,
+        Decision::HelperDegraded,
+        Decision::HelperResolve,
         Decision::Empty,
     ];
 
@@ -177,6 +222,8 @@ impl Decision {
             Decision::FullGap => "full-gap",
             Decision::FullInfeasible => "full-infeasible",
             Decision::Repair => "repair",
+            Decision::HelperDegraded => "helper-degraded",
+            Decision::HelperResolve => "helper-resolve",
             Decision::Empty => "empty",
         }
     }
@@ -196,6 +243,7 @@ impl Decision {
                 | Decision::FullAuto
                 | Decision::FullGap
                 | Decision::FullInfeasible
+                | Decision::HelperResolve
         )
     }
 }
@@ -340,10 +388,12 @@ pub fn run(cfg: &FleetCfg) -> FleetReport {
 /// solves — long-horizon runs can stream a JSONL sidecar instead of
 /// waiting for the final report.
 pub fn run_streaming(cfg: &FleetCfg, sink: &mut dyn FnMut(&RoundReport)) -> FleetReport {
-    let world = cfg.scenario.fleet_world(cfg.churn.max_clients);
-    let stream = events::generate(
+    let world = cfg.build_world();
+    let stream = events::generate_with_helpers(
         world.base_clients(),
         &cfg.churn,
+        &cfg.helper_churn,
+        world.n_helpers(),
         cfg.scenario.seed ^ fnv(&cfg.scenario.spec.name),
     );
     run_on_stream_streaming(cfg, &world, &stream, sink)
@@ -436,9 +486,9 @@ mod tests {
         let scen = ScenarioCfg::new(Scenario::S1, Model::ResNet101, 4, 2, 3);
         let world = scen.fleet_world(8);
         let stream = vec![
-            RoundEvents { round: 0, departures: vec![], arrivals: vec![], roster: vec![0, 1, 2, 3] },
-            RoundEvents { round: 1, departures: vec![0, 1, 2, 3], arrivals: vec![], roster: vec![] },
-            RoundEvents { round: 2, departures: vec![], arrivals: vec![4, 5], roster: vec![4, 5] },
+            RoundEvents::clients(0, vec![], vec![], vec![0, 1, 2, 3]),
+            RoundEvents::clients(1, vec![0, 1, 2, 3], vec![], vec![]),
+            RoundEvents::clients(2, vec![], vec![4, 5], vec![4, 5]),
         ];
         let churn = ChurnCfg { rounds: 3, arrival_rate: 0.0, departure_prob: 0.0, max_clients: 8 };
         let r = run_on_stream(&FleetCfg::new(scen, churn, Policy::Incremental), &world, &stream);
@@ -454,8 +504,8 @@ mod tests {
         let world = scen.fleet_world(12);
         // Round 1 replaces most of the fleet → churn fraction 1.0 > 0.35.
         let stream = vec![
-            RoundEvents { round: 0, departures: vec![], arrivals: vec![], roster: vec![0, 1, 2, 3, 4, 5] },
-            RoundEvents { round: 1, departures: vec![0, 1, 2], arrivals: vec![6, 7, 8], roster: vec![3, 4, 5, 6, 7, 8] },
+            RoundEvents::clients(0, vec![], vec![], vec![0, 1, 2, 3, 4, 5]),
+            RoundEvents::clients(1, vec![0, 1, 2], vec![6, 7, 8], vec![3, 4, 5, 6, 7, 8]),
         ];
         let churn = ChurnCfg { rounds: 2, arrival_rate: 0.0, departure_prob: 0.0, max_clients: 12 };
         let r = run_on_stream(&FleetCfg::new(scen, churn, Policy::Incremental), &world, &stream);
@@ -509,9 +559,9 @@ mod tests {
     /// 0.67), zero churn into round 2.
     fn auto_stream() -> Vec<RoundEvents> {
         vec![
-            RoundEvents { round: 0, departures: vec![], arrivals: vec![], roster: vec![0, 1, 2, 3, 4, 5] },
-            RoundEvents { round: 1, departures: vec![0, 1], arrivals: vec![6, 7], roster: vec![2, 3, 4, 5, 6, 7] },
-            RoundEvents { round: 2, departures: vec![], arrivals: vec![], roster: vec![2, 3, 4, 5, 6, 7] },
+            RoundEvents::clients(0, vec![], vec![], vec![0, 1, 2, 3, 4, 5]),
+            RoundEvents::clients(1, vec![0, 1], vec![6, 7], vec![2, 3, 4, 5, 6, 7]),
+            RoundEvents::clients(2, vec![], vec![], vec![2, 3, 4, 5, 6, 7]),
         ]
     }
 
@@ -531,7 +581,13 @@ mod tests {
         use crate::fleet::policy::{PolicyEntry, PolicyTable};
         let table = PolicyTable::new(
             "test".into(),
-            vec![PolicyEntry { scenario: "scenario1".into(), n_clients: 6, n_helpers: 2, frontier_churn: Some(0.25) }],
+            vec![PolicyEntry {
+                scenario: "scenario1".into(),
+                n_clients: 6,
+                n_helpers: 2,
+                helper_down_rate: 0.0,
+                frontier_churn: Some(0.25),
+            }],
         );
         let cfg = auto_cfg(Scenario::S1, Some(table));
         let world = cfg.scenario.fleet_world(12);
@@ -548,7 +604,13 @@ mod tests {
         // frontier None = incremental won at every measured rate.
         let table = PolicyTable::new(
             "test".into(),
-            vec![PolicyEntry { scenario: "scenario1".into(), n_clients: 6, n_helpers: 2, frontier_churn: None }],
+            vec![PolicyEntry {
+                scenario: "scenario1".into(),
+                n_clients: 6,
+                n_helpers: 2,
+                helper_down_rate: 0.0,
+                frontier_churn: None,
+            }],
         );
         let cfg = auto_cfg(Scenario::S1, Some(table));
         let world = cfg.scenario.fleet_world(12);
@@ -566,7 +628,13 @@ mod tests {
         // full-churn (NOT full-auto: no measured frontier fired).
         let table = PolicyTable::new(
             "test".into(),
-            vec![PolicyEntry { scenario: "scenario2".into(), n_clients: 6, n_helpers: 2, frontier_churn: Some(0.9) }],
+            vec![PolicyEntry {
+                scenario: "scenario2".into(),
+                n_clients: 6,
+                n_helpers: 2,
+                helper_down_rate: 0.0,
+                frontier_churn: Some(0.9),
+            }],
         );
         let cfg = auto_cfg(Scenario::S1, Some(table));
         let world = cfg.scenario.fleet_world(12);

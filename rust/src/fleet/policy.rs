@@ -36,6 +36,11 @@ pub struct PolicyEntry {
     /// (never trigger full from churn alone; the gap safety net still
     /// applies).
     pub frontier_churn: Option<f64>,
+    /// Helper outage rate of the measured grid cell (the `psl fleet
+    /// --grid --helper-down-rates` axis). 0.0 = a static helper pool —
+    /// the pre-v5 measurement, serialized without the key so older
+    /// tables load unchanged and new zero-rate tables stay byte-stable.
+    pub helper_down_rate: f64,
 }
 
 /// The serialized policy frontier consumed by `Policy::Auto`.
@@ -44,14 +49,17 @@ pub struct PolicyTable {
     /// Provenance label — "builtin" or the grid artifact it was computed
     /// from. Informational only; never enters decisions.
     pub source: String,
-    /// Sorted by (scenario, n_clients, n_helpers) for determinism.
+    /// Sorted by (scenario, n_clients, n_helpers, helper_down_rate) for
+    /// determinism.
     pub entries: Vec<PolicyEntry>,
 }
 
 impl PolicyTable {
     pub fn new(source: String, mut entries: Vec<PolicyEntry>) -> PolicyTable {
         entries.sort_by(|a, b| {
-            (&a.scenario, a.n_clients, a.n_helpers).cmp(&(&b.scenario, b.n_clients, b.n_helpers))
+            (&a.scenario, a.n_clients, a.n_helpers)
+                .cmp(&(&b.scenario, b.n_clients, b.n_helpers))
+                .then(a.helper_down_rate.total_cmp(&b.helper_down_rate))
         });
         PolicyTable { source, entries }
     }
@@ -78,12 +86,14 @@ impl PolicyTable {
                     n_clients: 10,
                     n_helpers: 2,
                     frontier_churn: Some(0.6),
+                    helper_down_rate: 0.0,
                 },
                 PolicyEntry {
                     scenario: "s4-straggler-tail".to_string(),
                     n_clients: 10,
                     n_helpers: 2,
                     frontier_churn: Some(0.3),
+                    helper_down_rate: 0.0,
                 },
             ],
         )
@@ -98,16 +108,36 @@ impl PolicyTable {
     /// threshold (recorded as `full-churn`, not `full-auto`, so analyses
     /// can separate data-driven decisions from the fallback).
     pub fn lookup(&self, scenario: &str, n_clients: usize, n_helpers: usize) -> Option<&PolicyEntry> {
+        self.lookup_at(scenario, n_clients, n_helpers, 0.0)
+    }
+
+    /// [`lookup`](PolicyTable::lookup) with the helper-outage axis: among
+    /// the family's entries, nearest client count wins first, then
+    /// nearest helper count, then nearest measured `helper_down_rate`
+    /// (so a static-pool table still governs churned runs, and a
+    /// churn-measured table still governs static runs), final ties
+    /// toward the smaller measurement.
+    pub fn lookup_at(
+        &self,
+        scenario: &str,
+        n_clients: usize,
+        n_helpers: usize,
+        helper_down_rate: f64,
+    ) -> Option<&PolicyEntry> {
         self.entries
             .iter()
             .filter(|e| e.scenario == scenario)
-            .min_by_key(|e| {
-                (
-                    e.n_clients.abs_diff(n_clients),
-                    e.n_helpers.abs_diff(n_helpers),
-                    e.n_clients,
-                    e.n_helpers,
-                )
+            .min_by(|a, b| {
+                let size = |e: &PolicyEntry| {
+                    (e.n_clients.abs_diff(n_clients), e.n_helpers.abs_diff(n_helpers))
+                };
+                let rate_gap = |e: &PolicyEntry| (e.helper_down_rate - helper_down_rate).abs();
+                size(a)
+                    .cmp(&size(b))
+                    .then(rate_gap(a).total_cmp(&rate_gap(b)))
+                    .then(a.n_clients.cmp(&b.n_clients))
+                    .then(a.n_helpers.cmp(&b.n_helpers))
+                    .then(a.helper_down_rate.total_cmp(&b.helper_down_rate))
             })
     }
 
@@ -122,7 +152,7 @@ impl PolicyTable {
                     self.entries
                         .iter()
                         .map(|e| {
-                            Json::obj(vec![
+                            let mut pairs = vec![
                                 ("scenario", Json::Str(e.scenario.clone())),
                                 ("n_clients", Json::Num(e.n_clients as f64)),
                                 ("n_helpers", Json::Num(e.n_helpers as f64)),
@@ -130,7 +160,13 @@ impl PolicyTable {
                                     "frontier_churn",
                                     e.frontier_churn.map(Json::Num).unwrap_or(Json::Null),
                                 ),
-                            ])
+                            ];
+                            // 0.0 = static pool: omitted, so tables with
+                            // no helper axis keep their pre-v5 bytes.
+                            if e.helper_down_rate > 0.0 {
+                                pairs.push(("helper_down_rate", Json::Num(e.helper_down_rate)));
+                            }
+                            Json::obj(pairs)
                         })
                         .collect(),
                 ),
@@ -156,6 +192,20 @@ impl PolicyTable {
                     Some(f)
                 }
             };
+            // Absent in pre-v5 tables (and in zero-rate entries) = 0.0.
+            let helper_down_rate = match e.get("helper_down_rate") {
+                Json::Null => 0.0,
+                v => {
+                    let f = v
+                        .as_f64()
+                        .with_context(|| format!("entry {k}: bad helper_down_rate {v}"))?;
+                    anyhow::ensure!(
+                        f.is_finite() && (0.0..=1.0).contains(&f),
+                        "entry {k}: helper_down_rate {f} must be a probability"
+                    );
+                    f
+                }
+            };
             entries.push(PolicyEntry {
                 scenario: e
                     .get("scenario")
@@ -165,6 +215,7 @@ impl PolicyTable {
                 n_clients: e.get("n_clients").as_usize().with_context(|| format!("entry {k}: missing/bad n_clients"))?,
                 n_helpers: e.get("n_helpers").as_usize().with_context(|| format!("entry {k}: missing/bad n_helpers"))?,
                 frontier_churn: frontier,
+                helper_down_rate,
             });
         }
         Ok(PolicyTable::new(source, entries))
@@ -185,13 +236,23 @@ impl PolicyTable {
 mod tests {
     use super::*;
 
+    fn entry(scenario: &str, n_clients: usize, frontier: Option<f64>) -> PolicyEntry {
+        PolicyEntry {
+            scenario: scenario.into(),
+            n_clients,
+            n_helpers: 2,
+            frontier_churn: frontier,
+            helper_down_rate: 0.0,
+        }
+    }
+
     fn table() -> PolicyTable {
         PolicyTable::new(
             "test".to_string(),
             vec![
-                PolicyEntry { scenario: "scenario1".into(), n_clients: 10, n_helpers: 2, frontier_churn: Some(0.3) },
-                PolicyEntry { scenario: "scenario1".into(), n_clients: 40, n_helpers: 4, frontier_churn: Some(0.2) },
-                PolicyEntry { scenario: "s5-memory-starved".into(), n_clients: 10, n_helpers: 2, frontier_churn: None },
+                entry("scenario1", 10, Some(0.3)),
+                PolicyEntry { n_helpers: 4, ..entry("scenario1", 40, Some(0.2)) },
+                entry("s5-memory-starved", 10, None),
             ],
         )
     }
@@ -228,6 +289,60 @@ mod tests {
         assert_eq!(t.lookup("s5-memory-starved", 10, 2).unwrap().frontier_churn, None);
         // Unknown family → None (the orchestrator's static fallback).
         assert!(t.lookup("scenario2", 10, 2).is_none());
+    }
+
+    #[test]
+    fn lookup_at_prefers_the_nearest_helper_outage_rate() {
+        let t = PolicyTable::new(
+            "test".to_string(),
+            vec![
+                entry("scenario1", 10, Some(0.3)),
+                PolicyEntry { helper_down_rate: 0.12, ..entry("scenario1", 10, Some(0.15)) },
+            ],
+        );
+        assert_eq!(t.lookup_at("scenario1", 10, 2, 0.0).unwrap().frontier_churn, Some(0.3));
+        assert_eq!(t.lookup_at("scenario1", 10, 2, 0.1).unwrap().frontier_churn, Some(0.15));
+        // lookup() is the zero-rate view of the same table.
+        assert_eq!(t.lookup("scenario1", 10, 2).unwrap().frontier_churn, Some(0.3));
+        // Size proximity still dominates the rate axis.
+        let far = PolicyTable::new(
+            "test".to_string(),
+            vec![
+                PolicyEntry { helper_down_rate: 0.12, ..entry("scenario1", 40, Some(0.15)) },
+                entry("scenario1", 10, Some(0.3)),
+            ],
+        );
+        assert_eq!(far.lookup_at("scenario1", 12, 2, 0.12).unwrap().n_clients, 10);
+    }
+
+    #[test]
+    fn helper_down_rate_serializes_only_when_set() {
+        let t = PolicyTable::new(
+            "test".to_string(),
+            vec![
+                entry("scenario1", 10, Some(0.3)),
+                PolicyEntry { helper_down_rate: 0.12, ..entry("scenario1", 10, Some(0.15)) },
+            ],
+        );
+        let text = t.to_json().pretty();
+        assert_eq!(text.matches("helper_down_rate").count(), 1, "{text}");
+        let back = PolicyTable::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back, t, "absent key reads back as 0.0");
+        let bad = artifact::envelope(ArtifactKind::PolicyTable, vec![
+            ("source", Json::Str("x".into())),
+            (
+                "entries",
+                Json::Arr(vec![Json::obj(vec![
+                    ("scenario", Json::Str("s".into())),
+                    ("n_clients", Json::Num(4.0)),
+                    ("n_helpers", Json::Num(2.0)),
+                    ("frontier_churn", Json::Null),
+                    ("helper_down_rate", Json::Num(1.5)),
+                ])]),
+            ),
+        ]);
+        let err = PolicyTable::from_json(&bad).unwrap_err().to_string();
+        assert!(err.contains("probability"), "{err}");
     }
 
     #[test]

@@ -14,8 +14,8 @@ pub struct RoundReport {
     pub arrivals: usize,
     pub departures: usize,
     /// "full-initial" | "full-policy" | "full-churn" | "full-auto" |
-    /// "full-gap" | "full-infeasible" | "repair" | "empty" (see
-    /// `orchestrator::Decision`).
+    /// "full-gap" | "full-infeasible" | "repair" | "helper-degraded" |
+    /// "helper-resolve" | "empty" (see `orchestrator::Decision`).
     pub decision: &'static str,
     /// §VII method the strategy routed to on full rounds (None for
     /// repaired / empty rounds).
@@ -49,6 +49,15 @@ pub struct RoundReport {
     /// Instance-shape signal: p95/median of per-client best-edge
     /// end-to-end times.
     pub tail_ratio: f64,
+    /// Helpers live (not in an outage) when this round scheduled.
+    pub helpers_live: usize,
+    /// Roster clients whose previous-round helper was dark this round.
+    pub orphaned_clients: usize,
+    /// Orphans re-seated on surviving helpers by a *kept* repair (0 on
+    /// full and empty rounds — a full re-solve reseats everyone).
+    pub migrations: usize,
+    /// At least one helper was in an outage when this round scheduled.
+    pub degraded: bool,
 }
 
 impl RoundReport {
@@ -79,6 +88,10 @@ impl RoundReport {
             ("heterogeneity", Json::Num(self.heterogeneity)),
             ("placement_flexibility", Json::Num(self.placement_flexibility)),
             ("tail_ratio", Json::Num(self.tail_ratio)),
+            ("helpers_live", Json::Num(self.helpers_live as f64)),
+            ("orphaned_clients", Json::Num(self.orphaned_clients as f64)),
+            ("migrations", Json::Num(self.migrations as f64)),
+            ("degraded", Json::Bool(self.degraded)),
         ])
     }
 
@@ -133,12 +146,31 @@ impl RoundReport {
         let signal = |key: &str| -> anyhow::Result<f64> {
             match doc.get(key) {
                 Json::Null => anyhow::bail!(
-                    "round report: no {key:?} — this artifact predates schema v{} signals; \
-                     re-generate it with this build",
-                    crate::bench::artifact::SCHEMA_VERSION
+                    "round report: no {key:?} — this artifact predates schema v4 signals; \
+                     re-generate it with this build"
                 ),
                 v => v.as_f64().with_context(|| format!("round report: bad {key:?}")),
             }
+        };
+        // The helper-dynamics fields arrived with schema v5 — same rule.
+        let helper_int = |key: &str| -> anyhow::Result<usize> {
+            match doc.get(key) {
+                Json::Null => anyhow::bail!(
+                    "round report: no {key:?} — this artifact predates schema v{} helper \
+                     dynamics; re-generate it with this build",
+                    crate::bench::artifact::SCHEMA_VERSION
+                ),
+                v => v.as_usize().with_context(|| format!("round report: bad {key:?}")),
+            }
+        };
+        let degraded = match doc.get("degraded") {
+            Json::Null => anyhow::bail!(
+                "round report: no \"degraded\" — this artifact predates schema v{} helper \
+                 dynamics; re-generate it with this build",
+                crate::bench::artifact::SCHEMA_VERSION
+            ),
+            Json::Bool(b) => *b,
+            _ => anyhow::bail!("round report: bad \"degraded\""),
         };
         Ok(RoundReport {
             round: int("round")?,
@@ -159,6 +191,10 @@ impl RoundReport {
             heterogeneity: signal("heterogeneity")?,
             placement_flexibility: signal("placement_flexibility")?,
             tail_ratio: signal("tail_ratio")?,
+            helpers_live: helper_int("helpers_live")?,
+            orphaned_clients: helper_int("orphaned_clients")?,
+            migrations: helper_int("migrations")?,
+            degraded,
         })
     }
 }
@@ -179,16 +215,37 @@ impl FleetReport {
 
     // ---- summary accessors ----------------------------------------------
 
+    /// Rounds that ran a full solve — the `full-*` tags plus
+    /// `helper-resolve` (a full solve on the reduced helper set), so
+    /// full + repair + empty still partitions every round.
     pub fn full_rounds(&self) -> usize {
-        self.rounds.iter().filter(|r| r.decision.starts_with("full")).count()
+        self.rounds
+            .iter()
+            .filter(|r| r.decision.starts_with("full") || r.decision == "helper-resolve")
+            .count()
     }
 
+    /// Rounds that kept a warm-started repair — `repair` plus
+    /// `helper-degraded` (a kept repair that migrated orphans).
     pub fn repair_rounds(&self) -> usize {
-        self.rounds.iter().filter(|r| r.decision == "repair").count()
+        self.rounds
+            .iter()
+            .filter(|r| r.decision == "repair" || r.decision == "helper-degraded")
+            .count()
     }
 
     pub fn empty_rounds(&self) -> usize {
         self.rounds.iter().filter(|r| r.decision == "empty").count()
+    }
+
+    /// Rounds scheduled with at least one helper in an outage.
+    pub fn degraded_rounds(&self) -> usize {
+        self.rounds.iter().filter(|r| r.degraded).count()
+    }
+
+    /// Total orphaned clients re-seated by kept repairs across the run.
+    pub fn total_migrations(&self) -> usize {
+        self.rounds.iter().map(|r| r.migrations).sum()
     }
 
     /// Mean makespan (ms) over non-empty rounds (0.0 if all empty).
@@ -243,6 +300,8 @@ impl FleetReport {
                     ("full_rounds", Json::Num(self.full_rounds() as f64)),
                     ("repair_rounds", Json::Num(self.repair_rounds() as f64)),
                     ("empty_rounds", Json::Num(self.empty_rounds() as f64)),
+                    ("degraded_rounds", Json::Num(self.degraded_rounds() as f64)),
+                    ("migrations", Json::Num(self.total_migrations() as f64)),
                     ("mean_makespan_ms", Json::Num(self.mean_makespan_ms())),
                     ("mean_period_ms", Json::Num(self.mean_period_ms())),
                     // String, not Num: u64 work totals can exceed 2^53.
@@ -287,6 +346,10 @@ mod tests {
             heterogeneity: 0.42,
             placement_flexibility: 0.9,
             tail_ratio: 1.5,
+            helpers_live: 2,
+            orphaned_clients: if decision == "helper-degraded" { 1 } else { 0 },
+            migrations: if decision == "helper-degraded" { 1 } else { 0 },
+            degraded: decision.starts_with("helper"),
         }
     }
 
@@ -300,6 +363,8 @@ mod tests {
                 round(1, "repair", 1100.0, 30),
                 round(2, "empty", 0.0, 0),
                 round(3, "full-gap", 900.0, 480),
+                round(4, "helper-degraded", 1200.0, 40),
+                round(5, "helper-resolve", 1000.0, 510),
             ],
         )
     }
@@ -307,11 +372,18 @@ mod tests {
     #[test]
     fn summary_counts() {
         let r = report();
-        assert_eq!(r.full_rounds(), 2);
-        assert_eq!(r.repair_rounds(), 1);
+        assert_eq!(r.full_rounds(), 3, "helper-resolve is a full solve");
+        assert_eq!(r.repair_rounds(), 2, "helper-degraded is a kept repair");
         assert_eq!(r.empty_rounds(), 1);
-        assert_eq!(r.total_work_units(), 1010);
-        assert!((r.mean_makespan_ms() - 1000.0).abs() < 1e-9, "empty rounds excluded");
+        assert_eq!(
+            r.full_rounds() + r.repair_rounds() + r.empty_rounds(),
+            r.rounds.len(),
+            "the three decision classes partition every round"
+        );
+        assert_eq!(r.degraded_rounds(), 2);
+        assert_eq!(r.total_migrations(), 1);
+        assert_eq!(r.total_work_units(), 1560);
+        assert!((r.mean_makespan_ms() - 1040.0).abs() < 1e-9, "empty rounds excluded");
         assert!((r.mean_churn_frac() - 0.25).abs() < 1e-9, "round 0 excluded");
     }
 
@@ -359,6 +431,25 @@ mod tests {
     }
 
     #[test]
+    fn rounds_surface_helper_dynamics() {
+        let doc = report().rounds[4].to_json();
+        assert_eq!(doc.get("helpers_live").as_usize(), Some(2));
+        assert_eq!(doc.get("orphaned_clients").as_usize(), Some(1));
+        assert_eq!(doc.get("migrations").as_usize(), Some(1));
+        assert_eq!(doc.get("degraded"), &Json::Bool(true));
+        // Pre-v5 rounds (no helper fields) fail loudly, like pre-v4
+        // signal-less rounds do.
+        for key in ["helpers_live", "orphaned_clients", "migrations", "degraded"] {
+            let mut old = doc.clone();
+            if let Json::Obj(obj) = &mut old {
+                obj.remove(key);
+            }
+            let err = RoundReport::from_json(&old).unwrap_err().to_string();
+            assert!(err.contains("re-generate"), "{key}: {err}");
+        }
+    }
+
+    #[test]
     fn json_shape_and_determinism() {
         let r = report();
         let a = r.to_json().pretty();
@@ -366,8 +457,9 @@ mod tests {
         assert_eq!(a, b);
         let doc = Json::parse(&a).unwrap();
         assert_eq!(doc.get("kind").as_str(), Some("psl-fleet"));
-        assert_eq!(doc.get("rounds_detail").as_arr().unwrap().len(), 4);
-        assert_eq!(doc.get("summary").get("repair_rounds").as_usize(), Some(1));
-        assert_eq!(doc.get("summary").get("total_work_units").as_str(), Some("1010"));
+        assert_eq!(doc.get("rounds_detail").as_arr().unwrap().len(), 6);
+        assert_eq!(doc.get("summary").get("repair_rounds").as_usize(), Some(2));
+        assert_eq!(doc.get("summary").get("degraded_rounds").as_usize(), Some(2));
+        assert_eq!(doc.get("summary").get("total_work_units").as_str(), Some("1560"));
     }
 }

@@ -16,6 +16,14 @@
 //! snapshots acknowledge on stderr instead, so stdout stays exactly one
 //! report line per event — diffable against a batch run's
 //! `.rounds.jsonl`.
+//!
+//! **Fault tolerance.** By default a line that fails (unparseable JSON,
+//! an event that does not continue the session, a roster beyond the
+//! world cap, helper events against a world that does not model them)
+//! emits a structured `{"error": ..., "line": N}` JSONL line and the
+//! loop keeps serving subsequent lines — the session never steps a bad
+//! round, so committed state stays valid. `ServeOpts::strict` restores
+//! fail-fast: the first bad line aborts with a line-numbered error.
 
 use super::events::RoundEvents;
 use super::session::FleetSession;
@@ -30,6 +38,9 @@ pub struct ServeOpts {
     pub checkpoint_every: Option<usize>,
     /// Artifact name periodic snapshots are saved under.
     pub checkpoint_name: String,
+    /// Fail fast on the first bad line instead of emitting a structured
+    /// `{"error": ...}` line and continuing.
+    pub strict: bool,
 }
 
 /// What a serve loop did (for the caller's closing diagnostics).
@@ -37,12 +48,22 @@ pub struct ServeOpts {
 pub struct ServeSummary {
     pub rounds: usize,
     pub checkpoints: usize,
+    /// Bad lines answered with `{"error": ...}` (always 0 under strict).
+    pub errors: usize,
 }
 
-/// Drive `session` over `input` lines until EOF, writing one report line
-/// per event to `out`. Any malformed or discontinuous event aborts with
-/// a line-numbered error — the session's committed rounds stay valid (a
-/// periodic checkpoint, if configured, allows resuming).
+/// A successfully handled line's stdout payload.
+enum LineOut {
+    Report(String),
+    Ack(String),
+}
+
+/// Drive `session` over `input` lines until EOF, writing one line per
+/// input line to `out` (a round report, a checkpoint ack, or — lenient
+/// mode — a structured error). A bad line never steps the session, so
+/// committed rounds stay valid either way; under `ServeOpts::strict` it
+/// aborts with a line-numbered error instead. I/O failures on the
+/// streams themselves are always fatal.
 pub fn serve<R: BufRead, W: Write>(
     session: &mut FleetSession,
     input: R,
@@ -57,46 +78,84 @@ pub fn serve<R: BufRead, W: Write>(
         if text.is_empty() {
             continue;
         }
-        let doc = Json::parse(text).with_context(|| format!("event line {lineno}"))?;
-        if let Some(name) = checkpoint_request(&doc) {
-            let path = session
-                .checkpoint()
-                .save(name)
-                .with_context(|| format!("save checkpoint {name:?} (event line {lineno})"))?;
-            let ack = Json::obj(vec![
-                ("checkpointed", Json::Str(path.display().to_string())),
-                ("round", Json::Num(session.next_round() as f64)),
-            ]);
-            writeln!(out, "{}", ack.dump()).context("write checkpoint ack")?;
-            out.flush().context("flush checkpoint ack")?;
-            summary.checkpoints += 1;
-            continue;
-        }
-        // Round 0's implicit previous roster is the base population (the
-        // generated stream states it in `roster` without arrival events).
-        let prev_roster =
-            if session.next_round() == 0 { session.base_roster() } else { session.roster() };
-        let ev = RoundEvents::from_json(&doc, session.next_round(), &prev_roster)
-            .with_context(|| format!("event line {lineno}"))?;
-        anyhow::ensure!(
-            ev.roster.len() <= session.max_clients(),
-            "event line {lineno}: roster of {} exceeds the world's max-clients {} — \
-             restart serve with a larger --max-clients (the memory repair is sized at construction)",
-            ev.roster.len(),
-            session.max_clients()
-        );
-        let report = session.step(&ev);
-        writeln!(out, "{}", report.jsonl_line()).with_context(|| format!("write round {}", report.round))?;
-        out.flush().with_context(|| format!("flush round {}", report.round))?;
-        summary.rounds += 1;
-        if let Some(every) = opts.checkpoint_every {
-            if every >= 1 && session.next_round() % every == 0 {
+        // Everything fallible about this line lands in one Result; the
+        // match below decides structured-error-line vs strict abort.
+        let outcome: Result<LineOut> = (|| {
+            let doc = Json::parse(text)?;
+            if let Some(name) = checkpoint_request(&doc) {
                 let path = session
                     .checkpoint()
-                    .save(&opts.checkpoint_name)
-                    .with_context(|| format!("save periodic checkpoint after round {}", report.round))?;
-                eprintln!("serve: checkpoint -> {} (round {})", path.display(), session.next_round());
+                    .save(name)
+                    .with_context(|| format!("save checkpoint {name:?}"))?;
+                let ack = Json::obj(vec![
+                    ("checkpointed", Json::Str(path.display().to_string())),
+                    ("round", Json::Num(session.next_round() as f64)),
+                ]);
                 summary.checkpoints += 1;
+                return Ok(LineOut::Ack(ack.dump()));
+            }
+            // Round 0's implicit previous roster is the base population
+            // (the generated stream states it in `roster` without
+            // arrival events).
+            let prev_roster =
+                if session.next_round() == 0 { session.base_roster() } else { session.roster() };
+            let ev = RoundEvents::from_json(
+                &doc,
+                session.next_round(),
+                &prev_roster,
+                session.helper_roster(),
+            )?;
+            anyhow::ensure!(
+                ev.roster.len() <= session.max_clients(),
+                "roster of {} exceeds the world's max-clients {} — restart serve with a \
+                 larger --max-clients (the memory repair is sized at construction)",
+                ev.roster.len(),
+                session.max_clients()
+            );
+            anyhow::ensure!(
+                !ev.has_helper_events() || session.helper_modeled(),
+                "helper events need a world that models helper dynamics — restart serve \
+                 with a helper knob (--max-helpers, --helper-down-rate, ...)"
+            );
+            let report = session.step(&ev);
+            summary.rounds += 1;
+            Ok(LineOut::Report(report.jsonl_line()))
+        })();
+        match outcome {
+            Ok(LineOut::Ack(ack)) => {
+                writeln!(out, "{ack}").context("write checkpoint ack")?;
+                out.flush().context("flush checkpoint ack")?;
+            }
+            Ok(LineOut::Report(line)) => {
+                let round = session.next_round() - 1;
+                writeln!(out, "{line}").with_context(|| format!("write round {round}"))?;
+                out.flush().with_context(|| format!("flush round {round}"))?;
+                if let Some(every) = opts.checkpoint_every {
+                    if every >= 1 && session.next_round() % every == 0 {
+                        let path = session
+                            .checkpoint()
+                            .save(&opts.checkpoint_name)
+                            .with_context(|| format!("save periodic checkpoint after round {round}"))?;
+                        eprintln!(
+                            "serve: checkpoint -> {} (round {})",
+                            path.display(),
+                            session.next_round()
+                        );
+                        summary.checkpoints += 1;
+                    }
+                }
+            }
+            Err(e) => {
+                if opts.strict {
+                    return Err(e.context(format!("event line {lineno}")));
+                }
+                let err_line = Json::obj(vec![
+                    ("error", Json::Str(format!("{e:#}"))),
+                    ("line", Json::Num(lineno as f64)),
+                ]);
+                writeln!(out, "{}", err_line.dump()).context("write error line")?;
+                out.flush().context("flush error line")?;
+                summary.errors += 1;
             }
         }
     }
@@ -137,7 +196,7 @@ mod tests {
         let mut out = Vec::new();
         let mut session = FleetSession::new(cfg(6));
         let summary = serve(&mut session, input.as_bytes(), &mut out, &ServeOpts::default()).unwrap();
-        assert_eq!(summary, ServeSummary { rounds: 6, checkpoints: 0 });
+        assert_eq!(summary, ServeSummary { rounds: 6, checkpoints: 0, errors: 0 });
         let expect: String = batch.rounds.iter().map(|r| r.jsonl_line() + "\n").collect();
         assert_eq!(String::from_utf8(out).unwrap(), expect, "stdout == the batch run's rounds_detail");
     }
@@ -158,17 +217,21 @@ mod tests {
         assert_eq!(session.roster(), vec![1, 2, 4, 5, 6]);
     }
 
+    fn strict() -> ServeOpts {
+        ServeOpts { strict: true, ..ServeOpts::default() }
+    }
+
     #[test]
-    fn serve_rejects_bad_events_with_line_numbers() {
+    fn strict_mode_rejects_bad_events_with_line_numbers() {
         let mut session = FleetSession::new(cfg(4));
-        let err = serve(&mut session, "not json\n".as_bytes(), &mut Vec::new(), &ServeOpts::default())
+        let err = serve(&mut session, "not json\n".as_bytes(), &mut Vec::new(), &strict())
             .unwrap_err()
             .to_string();
         assert!(err.contains("line 1"), "{err}");
 
         let mut session = FleetSession::new(cfg(4));
         let input = "{\"arrivals\": []}\n{\"round\": 7}\n";
-        let err = serve(&mut session, input.as_bytes(), &mut Vec::new(), &ServeOpts::default())
+        let err = serve(&mut session, input.as_bytes(), &mut Vec::new(), &strict())
             .unwrap_err()
             .to_string();
         assert!(err.contains("line 2"), "{err}");
@@ -176,15 +239,79 @@ mod tests {
     }
 
     #[test]
-    fn serve_rejects_rosters_beyond_the_world_cap() {
+    fn strict_mode_rejects_rosters_beyond_the_world_cap() {
         let mut session = FleetSession::new(cfg(4));
         let cap = session.max_clients();
         let arrivals: Vec<String> = (6..2 + cap as u64).map(|id| id.to_string()).collect();
         let input = format!("{{\"arrivals\": [{}]}}\n", arrivals.join(", "));
-        let err = serve(&mut session, input.as_bytes(), &mut Vec::new(), &ServeOpts::default())
+        let err = serve(&mut session, input.as_bytes(), &mut Vec::new(), &strict())
             .unwrap_err()
             .to_string();
         assert!(err.contains("max-clients"), "{err}");
+    }
+
+    #[test]
+    fn lenient_mode_answers_bad_lines_and_keeps_serving() {
+        // Default (lenient) mode: line 1 is garbage, line 2 names the
+        // wrong round, lines 3-4 are fine — the bad lines get structured
+        // error answers and the good lines still step rounds.
+        let input = "not json\n{\"round\": 7}\n{\"arrivals\": []}\n{\"departures\": [0]}\n";
+        let mut out = Vec::new();
+        let mut session = FleetSession::new(cfg(4));
+        let summary = serve(&mut session, input.as_bytes(), &mut out, &ServeOpts::default()).unwrap();
+        assert_eq!(summary, ServeSummary { rounds: 2, checkpoints: 0, errors: 2 });
+        let text = String::from_utf8(out).unwrap();
+        let lines: Vec<Json> = text.lines().map(|l| Json::parse(l).unwrap()).collect();
+        assert_eq!(lines.len(), 4, "one answer line per input line");
+        assert!(lines[0].get("error").as_str().is_some());
+        assert_eq!(lines[0].get("line").as_usize(), Some(1));
+        assert!(lines[1].get("error").as_str().unwrap().contains("round 7"), "{}", text);
+        assert_eq!(lines[1].get("line").as_usize(), Some(2));
+        assert_eq!(lines[2].get("round").as_usize(), Some(0));
+        assert_eq!(lines[3].get("round").as_usize(), Some(1));
+        assert_eq!(session.next_round(), 2);
+    }
+
+    #[test]
+    fn helper_events_are_rejected_on_a_static_world() {
+        // cfg() is an S4 scenario: no helper churn is modeled, so a
+        // helper event must be refused before it can reach step() —
+        // leniently as an error line, strictly as an abort.
+        let input = "{\"helper_down\": [0]}\n{\"arrivals\": []}\n";
+        let mut out = Vec::new();
+        let mut session = FleetSession::new(cfg(4));
+        let summary = serve(&mut session, input.as_bytes(), &mut out, &ServeOpts::default()).unwrap();
+        assert_eq!(summary, ServeSummary { rounds: 1, checkpoints: 0, errors: 1 });
+        let text = String::from_utf8(out).unwrap();
+        let first = Json::parse(text.lines().next().unwrap()).unwrap();
+        assert!(first.get("error").as_str().unwrap().contains("--max-helpers"), "{text}");
+
+        let mut session = FleetSession::new(cfg(4));
+        let err = serve(&mut session, input.as_bytes(), &mut Vec::new(), &strict())
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("line 1"), "{err}");
+    }
+
+    #[test]
+    fn serve_replays_helper_outages_byte_identically() {
+        // An s7-helper-bursts session's generated stream carries helper
+        // events; feeding it back through serve must reproduce the batch
+        // run's report lines exactly (closing the serve half of the
+        // helper-dynamics loop).
+        let scen = ScenarioCfg::new(Scenario::S7HelperBursts, Model::Vgg19, 6, 3, 9);
+        let mut churn = ChurnCfg::stationary(6);
+        churn.rounds = 20;
+        let cfg = FleetCfg::new(scen, churn, Policy::Incremental);
+        let input = event_log(&cfg);
+        assert!(input.contains("helper_down"), "stream carries helper outages:\n{input}");
+        let batch = run(&cfg);
+        let mut out = Vec::new();
+        let mut session = FleetSession::new(cfg.clone());
+        let summary = serve(&mut session, input.as_bytes(), &mut out, &ServeOpts::default()).unwrap();
+        assert_eq!(summary, ServeSummary { rounds: 20, checkpoints: 0, errors: 0 });
+        let expect: String = batch.rounds.iter().map(|r| r.jsonl_line() + "\n").collect();
+        assert_eq!(String::from_utf8(out).unwrap(), expect);
     }
 
     #[test]
@@ -197,7 +324,7 @@ mod tests {
         let mut out = Vec::new();
         let mut session = FleetSession::new(cfg(4));
         let summary = serve(&mut session, input.as_bytes(), &mut out, &ServeOpts::default()).unwrap();
-        assert_eq!(summary, ServeSummary { rounds: 1, checkpoints: 1 });
+        assert_eq!(summary, ServeSummary { rounds: 1, checkpoints: 1, errors: 0 });
         let text = String::from_utf8(out).unwrap();
         let ack = Json::parse(text.lines().last().unwrap()).unwrap();
         let path = ack.get("checkpointed").as_str().unwrap().to_string();
@@ -213,9 +340,10 @@ mod tests {
         let input = event_log(&cfg(5));
         let mut out = Vec::new();
         let mut session = FleetSession::new(cfg(5));
-        let opts = ServeOpts { checkpoint_every: Some(2), checkpoint_name: name.clone() };
+        let opts =
+            ServeOpts { checkpoint_every: Some(2), checkpoint_name: name.clone(), strict: false };
         let summary = serve(&mut session, input.as_bytes(), &mut out, &opts).unwrap();
-        assert_eq!(summary, ServeSummary { rounds: 5, checkpoints: 2 });
+        assert_eq!(summary, ServeSummary { rounds: 5, checkpoints: 2, errors: 0 });
         let text = String::from_utf8(out).unwrap();
         assert_eq!(text.lines().count(), 5, "one report line per event, acks on stderr only");
         assert!(text.lines().all(|l| Json::parse(l).unwrap().get("round").as_usize().is_some()));

@@ -17,19 +17,21 @@
 //!   them is safe) and `prev_assign` is rebuilt from the kept schedule
 //!   each round. A 10⁵-round run holds O(`max_clients`) state, not
 //!   O(total ids ever seen).
-//! * **Small, sufficient warm state.** Minted clients are a pure function
-//!   of `(scenario tuple, id)`, so a checkpoint
+//! * **Small, sufficient warm state.** Minted clients (and helpers) are a
+//!   pure function of `(scenario tuple, id)`, so a checkpoint
 //!   ([`FleetSession::checkpoint`]) records only the config, the round
-//!   cursor, `prev_assign` (ids → helpers), `last_full_gap`, and the
+//!   cursor, `prev_assign` (client ids → helper ids), the helper roster
+//!   (live / in-outage / id watermark), `last_full_gap`, and the
 //!   completed rounds — [`FleetSession::resume`] re-mints the roster and
-//!   continues byte-identically.
+//!   continues byte-identically, including across a
+//!   `helper_down`/`helper_up` outage boundary.
 
 use super::checkpoint::FleetCheckpoint;
-use super::events::{self, RoundEvents};
+use super::events::{self, HelperRoster, RoundEvents};
 use super::orchestrator::{full_work, repair_assignment, Decision, FleetCfg, Policy};
 use super::policy::PolicyTable;
 use super::report::{FleetReport, RoundReport};
-use crate::instance::scenario::{FleetClient, FleetWorld};
+use crate::instance::scenario::{FleetClient, FleetHelper, FleetWorld};
 use crate::sim::epoch::replay_epoch;
 use crate::solver::admm::AdmmCfg;
 use crate::solver::greedy;
@@ -52,7 +54,14 @@ pub struct FleetSession {
     /// Live minted clients — exactly the current roster.
     minted: BTreeMap<u64, FleetClient>,
     // ---- warm state (the checkpoint payload) ---------------------------
-    /// Previous round's kept assignment: stable client id → helper.
+    /// Current helper roster (live / in-outage / id watermark). For
+    /// worlds without helper dynamics this stays at
+    /// [`HelperRoster::base`] forever, so it holds O(`max_helpers`)
+    /// state alongside the O(`max_clients`) client cache.
+    helpers: HelperRoster,
+    /// Previous round's kept assignment: stable client id → *helper id*.
+    /// Base helpers have `id == position`, so for static worlds this is
+    /// byte-identical to the historical positional encoding.
     prev_assign: BTreeMap<u64, usize>,
     prev_roster_len: usize,
     /// Lower-bound gap of the last full solve — the drift baseline
@@ -67,7 +76,7 @@ impl FleetSession {
     /// Fresh session; the world is derived from the config exactly as the
     /// batch entry points derive it.
     pub fn new(cfg: FleetCfg) -> FleetSession {
-        let world = cfg.scenario.fleet_world(cfg.churn.max_clients);
+        let world = cfg.build_world();
         FleetSession::with_world(cfg, world)
     }
 
@@ -80,6 +89,7 @@ impl FleetSession {
             (None, _) => None,
         };
         let slot_ms = cfg.slot_ms();
+        let helpers = HelperRoster::base(world.n_helpers());
         FleetSession {
             cfg,
             world,
@@ -87,6 +97,7 @@ impl FleetSession {
             slot_ms,
             table,
             minted: BTreeMap::new(),
+            helpers,
             prev_assign: BTreeMap::new(),
             prev_roster_len: 0,
             last_full_gap: f64::MAX,
@@ -112,17 +123,43 @@ impl FleetSession {
             ckpt.prev_assign.len(),
             ckpt.prev_roster_len
         );
-        let world = ckpt.cfg.scenario.fleet_world(ckpt.world_max_clients);
-        let n_helpers = world.n_helpers();
+        let world = ckpt.cfg.build_world_sized(ckpt.world_max_clients);
+        let helpers = HelperRoster {
+            live: ckpt.helpers_live.clone(),
+            down: ckpt.helpers_down.clone(),
+            next_id: ckpt.helper_next_id,
+        };
+        anyhow::ensure!(!helpers.live.is_empty(), "checkpoint helper roster has no live helper");
+        anyhow::ensure!(
+            helpers.live.windows(2).all(|w| w[0] < w[1])
+                && helpers.down.windows(2).all(|w| w[0] < w[1]),
+            "checkpoint helper roster ids must be strictly sorted"
+        );
+        anyhow::ensure!(
+            helpers.live.iter().chain(&helpers.down).all(|&h| h < helpers.next_id),
+            "checkpoint helper id exceeds the next-id watermark {}",
+            helpers.next_id
+        );
+        anyhow::ensure!(
+            helpers.down.iter().all(|h| helpers.live.binary_search(h).is_err()),
+            "checkpoint helper roster lists an id as both live and down"
+        );
+        if !world.helper_modeled() {
+            anyhow::ensure!(
+                helpers.down.is_empty() && helpers.next_id == world.n_helpers() as u64,
+                "checkpoint carries helper dynamics but its config models none"
+            );
+        }
         for (&id, &h) in &ckpt.prev_assign {
             anyhow::ensure!(
-                h < n_helpers,
-                "checkpoint assigns client {id} to helper {h}, but the world has {n_helpers} helpers"
+                helpers.live.binary_search(&(h as u64)).is_ok(),
+                "checkpoint assigns client {id} to helper {h}, which is not live in the checkpoint roster"
             );
         }
         let mut session = FleetSession::with_world(ckpt.cfg, world);
         session.minted =
             ckpt.prev_assign.keys().map(|&id| (id, session.world.mint_client(id))).collect();
+        session.helpers = helpers;
         session.prev_assign = ckpt.prev_assign;
         session.prev_roster_len = ckpt.prev_roster_len;
         session.last_full_gap = ckpt.last_full_gap;
@@ -141,6 +178,9 @@ impl FleetSession {
             prev_roster_len: self.prev_roster_len,
             last_full_gap: self.last_full_gap,
             prev_assign: self.prev_assign.clone(),
+            helpers_live: self.helpers.live.clone(),
+            helpers_down: self.helpers.down.clone(),
+            helper_next_id: self.helpers.next_id,
             rounds: self.completed.clone(),
         }
     }
@@ -178,6 +218,18 @@ impl FleetSession {
         self.world.max_clients
     }
 
+    /// Current helper roster — external event lines (`psl serve`) are
+    /// validated against this before they reach [`step`].
+    pub fn helper_roster(&self) -> &HelperRoster {
+        &self.helpers
+    }
+
+    /// Whether this session's world models helper dynamics (down/up/join
+    /// events are only accepted when it does).
+    pub fn helper_modeled(&self) -> bool {
+        self.world.helper_modeled()
+    }
+
     /// Size of the minted-client cache (== live roster size; exposed for
     /// the long-horizon bounded-state tests).
     pub fn minted_len(&self) -> usize {
@@ -190,9 +242,11 @@ impl FleetSession {
     /// is a byte-identical prefix of the stream for M > N rounds, which
     /// is what makes `--resume` with a longer `--rounds` horizon sound.
     pub fn event_stream(&self) -> Vec<RoundEvents> {
-        events::generate(
+        events::generate_with_helpers(
             self.world.base_clients(),
             &self.cfg.churn,
+            &self.cfg.helper_churn,
+            self.world.n_helpers(),
             self.cfg.scenario.seed ^ fnv(&self.cfg.scenario.spec.name),
         )
     }
@@ -220,6 +274,15 @@ impl FleetSession {
             "event round {} does not continue the session (expected {})",
             ev.round, self.next_round
         );
+        assert!(
+            !ev.has_helper_events() || self.world.helper_modeled(),
+            "round {} carries helper events but this session's world does not model helper \
+             dynamics (external inputs are validated upstream by `psl serve`)",
+            ev.round
+        );
+        // Helper events first: the roster they leave behind is the helper
+        // set this round schedules on.
+        self.helpers.apply(ev);
         // Evict departures before minting arrivals: ids are never reused,
         // so the cache tracks the live roster exactly and a long run
         // holds O(max_clients) state.
@@ -238,8 +301,47 @@ impl FleetSession {
         let table = self.table.as_ref();
         let last_full_gap = self.last_full_gap;
         let roster: Vec<&FleetClient> = ev.roster.iter().map(|id| &self.minted[id]).collect();
-        let ms = world.instance(&roster);
+        let live_ids: Vec<u64> = self.helpers.live.clone();
+        let ms = if world.helper_modeled() {
+            let live: Vec<FleetHelper> =
+                live_ids.iter().map(|&id| world.mint_helper(id)).collect();
+            world.instance_on(&roster, &live)
+        } else {
+            world.instance(&roster)
+        };
         let inst = ms.quantize(slot_ms);
+        // Translate the warm state (client id → helper id) into positions
+        // on this round's live helper list. Clients whose helper is in an
+        // outage drop out — they are the orphans the repair re-places on
+        // survivors. For static worlds ids == positions and nothing drops,
+        // so this is byte-identical to the historical positional map.
+        let helper_pos: BTreeMap<u64, usize> =
+            live_ids.iter().enumerate().map(|(k, &h)| (h, k)).collect();
+        let mut orphaned = 0usize;
+        let mut prev_pos: BTreeMap<u64, usize> = BTreeMap::new();
+        for &id in &ev.roster {
+            if let Some(&h) = self.prev_assign.get(&id) {
+                match helper_pos.get(&(h as u64)) {
+                    Some(&k) => {
+                        prev_pos.insert(id, k);
+                    }
+                    None => orphaned += 1,
+                }
+            }
+        }
+        // Degraded = at least one helper is dark this round. The capacity
+        // fraction weighs surviving helper memory against the full pool
+        // (live + in-outage); below `capacity_threshold` repair is not
+        // attempted at all.
+        let degraded = !self.helpers.down.is_empty();
+        let capacity_fraction = if degraded {
+            let live_mem: f64 = live_ids.iter().map(|&h| world.mint_helper(h).mem_gb).sum();
+            let down_mem: f64 =
+                self.helpers.down.iter().map(|&h| world.mint_helper(h).mem_gb).sum();
+            live_mem / (live_mem + down_mem)
+        } else {
+            1.0
+        };
         let churn_frac = ev.churn_fraction(self.prev_roster_len);
         let lb_raw = inst.makespan_lower_bound();
         let lb = lb_raw.max(1);
@@ -253,13 +355,20 @@ impl FleetSession {
         // threshold and is recorded as FullChurn, so decision analyses
         // can separate data-driven re-solves from the fallback.
         let auto_full: Option<Decision> = if cfg.policy == Policy::Auto {
-            table.and_then(|t| match t.lookup(&cfg.scenario.spec.name, roster.len(), inst.n_helpers) {
+            table.and_then(|t| {
+                match t.lookup_at(
+                    &cfg.scenario.spec.name,
+                    roster.len(),
+                    inst.n_helpers,
+                    cfg.helper_churn.down_rate,
+                ) {
                 Some(entry) => match entry.frontier_churn {
                     Some(frontier) if churn_frac >= frontier => Some(Decision::FullAuto),
                     _ => None,
                 },
-                None if churn_frac > cfg.churn_threshold => Some(Decision::FullChurn),
-                None => None,
+                    None if churn_frac > cfg.churn_threshold => Some(Decision::FullChurn),
+                    None => None,
+                }
             })
         } else {
             None
@@ -274,21 +383,31 @@ impl FleetSession {
             ((s, Some(m)), w)
         };
 
-        let (decision, schedule, repair_moves, placed, work) = if roster.is_empty() {
-            (Decision::Empty, None, 0, 0, 0u64)
+        let (decision, schedule, repair_moves, placed, migrations, work) = if roster.is_empty() {
+            (Decision::Empty, None, 0, 0, 0, 0u64)
         } else if ev.round == 0 || cfg.policy == Policy::FullEveryRound {
             let d = if ev.round == 0 { Decision::FullInitial } else { Decision::FullPolicy };
             let (s, w) = full_solve(0);
-            (d, Some(s), 0, 0, w)
+            (d, Some(s), 0, 0, 0, w)
         } else if cfg.policy == Policy::Incremental && churn_frac > cfg.churn_threshold {
             let (s, w) = full_solve(0);
-            (Decision::FullChurn, Some(s), 0, 0, w)
+            (Decision::FullChurn, Some(s), 0, 0, 0, w)
         } else if let Some(d) = auto_full {
             let (s, w) = full_solve(0);
-            (d, Some(s), 0, 0, w)
+            (d, Some(s), 0, 0, 0, w)
+        } else if degraded && capacity_fraction < cfg.capacity_threshold {
+            // Too much of the helper pool is dark: a repair onto the
+            // survivors would concentrate load pathologically, so the
+            // session abandons the warm state and fully re-solves on the
+            // reduced helper set. This applies to every warm policy,
+            // `repair-only` included (the documented feasibility
+            // exception — a repair baseline that ignores capacity loss
+            // would be measuring a different, broken system).
+            let (s, w) = full_solve(0);
+            (Decision::HelperResolve, Some(s), 0, 0, 0, w)
         } else {
             let mut work = 0u64;
-            match repair_assignment(&inst, &ev.roster, &self.prev_assign, &mut work) {
+            match repair_assignment(&inst, &ev.roster, &prev_pos, &mut work) {
                 Some(rep) => {
                     let s = fcfs_schedule(&inst, rep.assignment);
                     let gap = s.makespan(&inst) as f64 / lb as f64;
@@ -297,22 +416,45 @@ impl FleetSession {
                     {
                         // The repair is discarded: report no repair stats
                         // for the kept schedule, but its effort still
-                        // counts in the work proxy (it was spent).
+                        // counts in the work proxy (it was spent). On a
+                        // degraded round the fallback solves the reduced
+                        // helper set, which gets its own tag.
+                        let d = if degraded { Decision::HelperResolve } else { Decision::FullGap };
                         let (s, w) = full_solve(work);
-                        (Decision::FullGap, Some(s), 0, 0, w)
+                        (d, Some(s), 0, 0, 0, w)
+                    } else if degraded {
+                        // `rep.placed` counts every client the greedy
+                        // placement seated: genuine arrivals plus the
+                        // orphans migrated off down helpers.
+                        (
+                            Decision::HelperDegraded,
+                            Some((s, None)),
+                            rep.moves,
+                            rep.placed - orphaned,
+                            orphaned,
+                            work,
+                        )
                     } else {
-                        (Decision::Repair, Some((s, None)), rep.moves, rep.placed, work)
+                        (Decision::Repair, Some((s, None)), rep.moves, rep.placed, 0, work)
                     }
                 }
-                // Defensive: the wedge-free world makes this unreachable,
-                // but an unplaceable arrival must trigger a full solve,
-                // not a panic.
+                // Defensive: the wedge-free (and, under helper dynamics,
+                // outage-proof) world makes this unreachable, but an
+                // unplaceable client must trigger a full solve, not a
+                // panic.
                 None => {
+                    let d =
+                        if degraded { Decision::HelperResolve } else { Decision::FullInfeasible };
                     let (s, w) = full_solve(work);
-                    (Decision::FullInfeasible, Some(s), 0, 0, w)
+                    (d, Some(s), 0, 0, 0, w)
                 }
             }
         };
+        // Orphans lose their in-flight forward/backward batch when their
+        // helper drops: the retry is re-enqueued and charged to this
+        // round's work proxy (one forward + one backward edge evaluation
+        // per orphan), whichever path scheduled the round.
+        let work = work + 2 * orphaned as u64;
         if decision.is_full() {
             if let Some((s, _)) = &schedule {
                 self.last_full_gap = s.makespan(&inst) as f64 / lb as f64;
@@ -347,10 +489,20 @@ impl FleetSession {
             heterogeneity: sig.heterogeneity,
             placement_flexibility: sig.placement_flexibility,
             tail_ratio: sig.tail_ratio,
+            helpers_live: live_ids.len(),
+            orphaned_clients: orphaned,
+            migrations,
+            degraded,
         };
 
+        // Rebuild the warm state in helper-*id* space: positions in this
+        // round's schedule index the live helper list, not 0..I.
         self.prev_assign = match &schedule {
-            Some((s, _)) => roster.iter().zip(&s.assignment.helper_of).map(|(c, &i)| (c.id, i)).collect(),
+            Some((s, _)) => roster
+                .iter()
+                .zip(&s.assignment.helper_of)
+                .map(|(c, &i)| (c.id, live_ids[i] as usize))
+                .collect(),
             None => BTreeMap::new(),
         };
         self.prev_roster_len = roster.len();
@@ -438,9 +590,9 @@ mod tests {
         let scen = ScenarioCfg::new(Scenario::S1, Model::ResNet101, 4, 2, 3);
         let world = scen.fleet_world(8);
         let stream = vec![
-            RoundEvents { round: 0, departures: vec![], arrivals: vec![], roster: vec![0, 1, 2, 3] },
-            RoundEvents { round: 1, departures: vec![0, 1, 2, 3], arrivals: vec![], roster: vec![] },
-            RoundEvents { round: 2, departures: vec![], arrivals: vec![4, 5], roster: vec![4, 5] },
+            RoundEvents::clients(0, vec![], vec![], vec![0, 1, 2, 3]),
+            RoundEvents::clients(1, vec![0, 1, 2, 3], vec![], vec![]),
+            RoundEvents::clients(2, vec![], vec![4, 5], vec![4, 5]),
         ];
         let churn = ChurnCfg { rounds: 3, arrival_rate: 0.0, departure_prob: 0.0, max_clients: 8 };
         let mut session = FleetSession::with_world(FleetCfg::new(scen, churn, Policy::Incremental), world);
@@ -471,5 +623,165 @@ mod tests {
         let mut session = FleetSession::new(cfg(Policy::Incremental, 4));
         let stream = session.event_stream();
         session.step(&stream[1]);
+    }
+
+    // ---- helper dynamics ----------------------------------------------
+
+    fn down(ev: RoundEvents, ids: Vec<u64>) -> RoundEvents {
+        RoundEvents { helper_down: ids, ..ev }
+    }
+
+    fn up(ev: RoundEvents, ids: Vec<u64>) -> RoundEvents {
+        RoundEvents { helper_up: ids, ..ev }
+    }
+
+    /// A 6-client, 3-helper config whose world models helper dynamics
+    /// (via the `max_helpers` knob alone — no seeded faults, events are
+    /// injected by hand) with the gap and capacity fallbacks disarmed,
+    /// so decision assertions isolate the helper ladder.
+    fn helper_cfg() -> FleetCfg {
+        let scen = ScenarioCfg::new(Scenario::S1, Model::ResNet101, 6, 3, 3);
+        let churn = ChurnCfg { rounds: 4, arrival_rate: 0.0, departure_prob: 0.0, max_clients: 8 };
+        let mut cfg = FleetCfg::new(scen, churn, Policy::Incremental);
+        cfg.gap_threshold = f64::MAX;
+        cfg.capacity_threshold = 0.0;
+        cfg.helper_churn.max_helpers = 8;
+        cfg
+    }
+
+    fn helper_session() -> FleetSession {
+        FleetSession::new(helper_cfg())
+    }
+
+    #[test]
+    fn helper_outage_degrades_and_recovers() {
+        let roster: Vec<u64> = (0..6).collect();
+        let mut s = helper_session();
+        let r0 = s.step(&RoundEvents::clients(0, vec![], vec![], roster.clone()));
+        assert_eq!(r0.helpers_live, 3);
+        assert!(!r0.degraded);
+        let r1 = s.step(&down(RoundEvents::clients(1, vec![], vec![], roster.clone()), vec![1]));
+        assert_eq!(r1.decision, "helper-degraded", "an outage round keeps the repair");
+        assert!(r1.degraded);
+        assert_eq!(r1.helpers_live, 2);
+        assert_eq!(
+            r1.orphaned_clients, r1.migrations,
+            "every orphan is migrated when the repair is kept"
+        );
+        assert_eq!(r1.placed_arrivals, 0, "migrations are not double-counted as arrivals");
+        let r2 = s.step(&up(RoundEvents::clients(2, vec![], vec![], roster.clone()), vec![1]));
+        assert_eq!(r2.helpers_live, 3);
+        assert!(!r2.degraded, "after the outage ends the round is not degraded");
+        assert_eq!(r2.decision, "repair", "recovered rounds carry the plain repair tag");
+        assert_eq!(r2.orphaned_clients, 0);
+    }
+
+    #[test]
+    fn capacity_collapse_forces_helper_resolve() {
+        let roster: Vec<u64> = (0..6).collect();
+        let mut cfg = helper_cfg();
+        // Any capacity loss at all is below this threshold, so the first
+        // outage round must abandon repair deterministically (the drawn
+        // helper memories never enter the comparison).
+        cfg.capacity_threshold = 1.0;
+        let mut s = FleetSession::new(cfg);
+        s.step(&RoundEvents::clients(0, vec![], vec![], roster.clone()));
+        let r1 = s.step(&down(RoundEvents::clients(1, vec![], vec![], roster.clone()), vec![0, 2]));
+        assert_eq!(r1.decision, "helper-resolve");
+        assert!(r1.degraded);
+        assert_eq!(r1.helpers_live, 1);
+        assert_eq!(r1.migrations, 0, "a full re-solve reseats everyone; nothing counts as migration");
+        assert!(r1.makespan_slots >= r1.lower_bound);
+    }
+
+    #[test]
+    fn orphan_retry_work_is_charged() {
+        let roster: Vec<u64> = (0..6).collect();
+        let mut s = helper_session();
+        s.step(&RoundEvents::clients(0, vec![], vec![], roster.clone()));
+        // Down everything but helper 0: a makespan-minimizing round-0
+        // solve spreads 6 clients over 3 helpers, so some client must
+        // orphan here.
+        let r1 = s.step(&down(RoundEvents::clients(1, vec![], vec![], roster.clone()), vec![1, 2]));
+        assert_eq!(r1.decision, "helper-degraded");
+        assert!(r1.orphaned_clients >= 1, "collapsing to one helper must orphan someone");
+        // Work = per-orphan greedy placement (1 live helper each) + the
+        // 2-unit forward/backward retry per orphan.
+        assert!(
+            r1.work_units >= 3 * r1.orphaned_clients as u64,
+            "round 1 work {} does not cover {} orphans' placement + retry",
+            r1.work_units,
+            r1.orphaned_clients
+        );
+    }
+
+    #[test]
+    fn helper_join_expands_the_pool_without_degrading() {
+        let roster: Vec<u64> = (0..6).collect();
+        let mut s = helper_session();
+        s.step(&RoundEvents::clients(0, vec![], vec![], roster.clone()));
+        let ev = RoundEvents {
+            helper_join: vec![3],
+            ..RoundEvents::clients(1, vec![], vec![], roster.clone())
+        };
+        let r1 = s.step(&ev);
+        assert_eq!(r1.helpers_live, 4);
+        assert!(!r1.degraded, "a join is growth, not degradation");
+        assert_eq!(r1.decision, "repair");
+        assert_eq!(s.helper_roster().next_id, 4, "the id watermark advances past the join");
+    }
+
+    #[test]
+    fn checkpoint_resume_crosses_an_outage_boundary() {
+        let roster: Vec<u64> = (0..6).collect();
+        let stream = vec![
+            RoundEvents::clients(0, vec![], vec![], roster.clone()),
+            down(RoundEvents::clients(1, vec![], vec![], roster.clone()), vec![1]),
+            up(RoundEvents::clients(2, vec![], vec![], roster.clone()), vec![1]),
+            RoundEvents::clients(3, vec![], vec![], roster.clone()),
+        ];
+        let mut straight = helper_session();
+        for ev in &stream {
+            straight.step(ev);
+        }
+        let want = straight.into_report();
+        // Checkpoint mid-outage: helper 1 is down when the snapshot lands.
+        let mut first = helper_session();
+        first.step(&stream[0]);
+        first.step(&stream[1]);
+        let ckpt = first.checkpoint();
+        assert_eq!(ckpt.helpers_down, vec![1]);
+        let mut resumed = FleetSession::resume(ckpt).unwrap();
+        assert_eq!(resumed.helper_roster().down, vec![1]);
+        resumed.step(&stream[2]);
+        resumed.step(&stream[3]);
+        assert_eq!(
+            resumed.into_report().to_json().pretty(),
+            want.to_json().pretty(),
+            "resume across a HelperDown/HelperUp boundary is byte-identical"
+        );
+    }
+
+    #[test]
+    fn resume_rejects_assignments_to_non_live_helpers() {
+        let roster: Vec<u64> = (0..6).collect();
+        let mut s = helper_session();
+        s.step(&RoundEvents::clients(0, vec![], vec![], roster.clone()));
+        let mut ckpt = s.checkpoint();
+        // Forge a client pinned to a helper the forged roster marks down.
+        ckpt.helpers_live = vec![0, 1];
+        ckpt.helpers_down = vec![2];
+        ckpt.prev_assign.insert(999, 2);
+        ckpt.prev_roster_len += 1;
+        let err = FleetSession::resume(ckpt).unwrap_err().to_string();
+        assert!(err.contains("not live"), "{err}");
+    }
+
+    #[test]
+    #[should_panic(expected = "does not model helper")]
+    fn step_rejects_helper_events_on_a_static_world() {
+        let mut session = FleetSession::new(cfg(Policy::Incremental, 4));
+        let stream = session.event_stream();
+        session.step(&down(stream[0].clone(), vec![0]));
     }
 }

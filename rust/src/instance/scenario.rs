@@ -46,17 +46,19 @@ pub enum Scenario {
     S4StragglerTail,
     S5MemoryStarved,
     S6MegaHomogeneous,
+    S7HelperBursts,
 }
 
 impl Scenario {
     /// Every named family, in canonical order (sweep grids iterate this).
-    pub const ALL: [Scenario; 6] = [
+    pub const ALL: [Scenario; 7] = [
         Scenario::S1,
         Scenario::S2,
         Scenario::S3Clustered,
         Scenario::S4StragglerTail,
         Scenario::S5MemoryStarved,
         Scenario::S6MegaHomogeneous,
+        Scenario::S7HelperBursts,
     ];
 
     pub fn name(self) -> &'static str {
@@ -67,6 +69,7 @@ impl Scenario {
             Scenario::S4StragglerTail => "s4-straggler-tail",
             Scenario::S5MemoryStarved => "s5-memory-starved",
             Scenario::S6MegaHomogeneous => "s6-mega-homogeneous",
+            Scenario::S7HelperBursts => "s7-helper-bursts",
         }
     }
 
@@ -78,6 +81,7 @@ impl Scenario {
             "4" | "s4" | "s4-straggler-tail" | "straggler-tail" | "stragglers" => Some(Scenario::S4StragglerTail),
             "5" | "s5" | "s5-memory-starved" | "memory-starved" => Some(Scenario::S5MemoryStarved),
             "6" | "s6" | "s6-mega-homogeneous" | "mega-homogeneous" => Some(Scenario::S6MegaHomogeneous),
+            "7" | "s7" | "s7-helper-bursts" | "helper-bursts" => Some(Scenario::S7HelperBursts),
             _ => None,
         }
     }
@@ -91,6 +95,7 @@ impl Scenario {
             Scenario::S4StragglerTail => ScenarioSpec::s4_straggler_tail(),
             Scenario::S5MemoryStarved => ScenarioSpec::s5_memory_starved(),
             Scenario::S6MegaHomogeneous => ScenarioSpec::s6_mega_homogeneous(),
+            Scenario::S7HelperBursts => ScenarioSpec::s7_helper_bursts(),
         }
     }
 }
@@ -345,6 +350,27 @@ impl ScenarioSpec {
             link: LinkRegime::AkamaiFrance,
             jitter_sigma: 0.08,
             churn: 0.0,
+            packable: true,
+        }
+    }
+
+    /// Helper-fault stress family: an s1-like client fleet whose
+    /// *helpers* blink. The fleet orchestrator pairs this family with
+    /// transient helper-outage bursts
+    /// ([`HelperChurnCfg::bursts`](crate::fleet::events::HelperChurnCfg::bursts));
+    /// the client side stays mild so degraded rounds isolate the
+    /// helper-loss effect. Packable, so repair keeps its wedge-free
+    /// guarantee on the surviving helpers.
+    pub fn s7_helper_bursts() -> ScenarioSpec {
+        ScenarioSpec {
+            name: "s7-helper-bursts".to_string(),
+            client_mix: DeviceMix::Pool,
+            helper_mix: DeviceMix::Pool,
+            cut_policy: CutPolicy::Default,
+            memory: MemoryModel::FullRam,
+            link: LinkRegime::AkamaiFrance,
+            jitter_sigma: 0.10,
+            churn: 0.10,
             packable: true,
         }
     }
@@ -656,12 +682,35 @@ pub struct FleetClient {
     pub pp_ms: Vec<f64>,
 }
 
+/// One fleet helper minted by a [`FleetWorld`]: its stable id, its
+/// whole-model batch time and its memory capacity. Base helpers
+/// (`id < I`) carry the world's stored draws; joined helpers (dynamic
+/// worlds only) reproduce from `(scenario tuple, id)` alone, like
+/// clients.
+#[derive(Clone, Debug)]
+pub struct FleetHelper {
+    /// Stable fleet-wide id (base helpers are `0..I`; joins continue the
+    /// sequence and ids are never reused).
+    pub id: u64,
+    /// Whole-model batch time drawn from the spec's helper [`DeviceMix`].
+    pub batch_ms: f64,
+    /// Memory capacity (GB). In dynamic worlds this is floored to the
+    /// outage-proof level [`FleetWorld::helper_mem_floor`].
+    pub mem_gb: f64,
+}
+
 /// A persistent multi-round fleet: fixed helpers (speeds, memory, switch
 /// costs) plus a deterministic client factory. Where [`ScenarioCfg::
 /// generate`] draws one closed instance, a world mints clients *by stable
 /// id* from the same spec distributions, so clients can arrive and depart
 /// between rounds while every minted client reproduces byte-identically
 /// from the `(scenario, model, J, I, seed, id)` tuple alone.
+///
+/// [`ScenarioCfg::fleet_world_dynamic`] builds a *dynamic* world whose
+/// helper roster may change at runtime (outages, joins): every helper is
+/// provisioned to host the whole roster alone, so any non-empty
+/// surviving subset keeps repair memory-feasible, and joined helpers
+/// mint from per-id streams ([`FleetWorld::mint_helper`]).
 #[derive(Clone, Debug)]
 pub struct FleetWorld {
     cfg: ScenarioCfg,
@@ -679,6 +728,14 @@ pub struct FleetWorld {
     pub d_cap: f64,
     /// Roster-size cap the memory repair was sized for.
     pub max_clients: usize,
+    /// True when the helper roster may change at runtime (built by
+    /// [`ScenarioCfg::fleet_world_dynamic`]).
+    helper_dynamic: bool,
+    /// Outage-proof per-helper capacity floor for dynamic worlds:
+    /// `(max_clients + 1)·d_cap·1.001`, so a *single* surviving helper
+    /// can host the entire admitted roster and helper loss can never
+    /// wedge the repair. `0.0` in static worlds.
+    pub helper_mem_floor: f64,
 }
 
 impl ScenarioCfg {
@@ -686,6 +743,23 @@ impl ScenarioCfg {
     /// bounds the roster size the world's memory repair must support (the
     /// churn process enforces the same cap on arrivals).
     pub fn fleet_world(&self, max_clients: usize) -> FleetWorld {
+        self.fleet_world_impl(max_clients, false)
+    }
+
+    /// Build a *dynamic* fleet world: same draws as [`fleet_world`], but
+    /// every base helper's capacity is floored to the outage-proof level
+    /// `(max_clients + 1)·d_cap·1.001` — any single surviving helper can
+    /// host the whole admitted roster, so no sequence of helper outages
+    /// can make the memory repair infeasible. Joined helpers mint at the
+    /// same floor. Static runs keep [`fleet_world`]'s exact bytes, so
+    /// enabling helper dynamics never perturbs helper-free artifacts.
+    ///
+    /// [`fleet_world`]: ScenarioCfg::fleet_world
+    pub fn fleet_world_dynamic(&self, max_clients: usize) -> FleetWorld {
+        self.fleet_world_impl(max_clients, true)
+    }
+
+    fn fleet_world_impl(&self, max_clients: usize, dynamic: bool) -> FleetWorld {
         // A helper-less world can never place anyone: the wedge-free
         // guarantee below (and every repair built on it) assumes I ≥ 1,
         // so reject the configuration here instead of letting repair
@@ -713,6 +787,8 @@ impl ScenarioCfg {
             mem_gb: helper_ram,
             d_cap: f64::MAX,
             max_clients,
+            helper_dynamic: dynamic,
+            helper_mem_floor: 0.0,
         };
         // Admission cap = the largest raw footprint over the base
         // population (ids 0..J). Minting with d_cap = MAX leaves base
@@ -744,6 +820,18 @@ impl ScenarioCfg {
                 .unwrap();
             world.mem_gb[k] = d_cap * 1.05;
         }
+        if dynamic {
+            // Outage-proof floor: the sum-based wedge-free guarantee
+            // above breaks the moment a helper goes down, so dynamic
+            // worlds provision each helper to host the whole roster
+            // alone. The floor subsumes both repairs (per-helper ≥
+            // (max_clients + 1)·d_cap implies the sum bound for any
+            // non-empty subset).
+            world.helper_mem_floor = (max_clients + 1) as f64 * d_cap * 1.001;
+            for m in &mut world.mem_gb {
+                *m = m.max(world.helper_mem_floor);
+            }
+        }
         world
     }
 }
@@ -755,6 +843,12 @@ impl FleetWorld {
 
     pub fn base_clients(&self) -> usize {
         self.cfg.n_clients
+    }
+
+    /// True when this world supports a runtime-changing helper roster
+    /// (built by [`ScenarioCfg::fleet_world_dynamic`]).
+    pub fn helper_modeled(&self) -> bool {
+        self.helper_dynamic
     }
 
     /// The client's private draw stream: a pure function of the scenario
@@ -802,6 +896,50 @@ impl FleetWorld {
         FleetClient { id, cut, batch_ms, d_gb, rates_mbps, r_ms, l_ms, lp_ms, rp_ms, p_ms, pp_ms }
     }
 
+    /// A joined helper's private draw stream (same label-mixing idiom as
+    /// [`FleetWorld::mint_client`]'s).
+    fn helper_seed(&self, id: u64) -> u64 {
+        self.cfg.seed
+            ^ fnv(&self.cfg.spec.name)
+            ^ fnv(self.cfg.model.name()).rotate_left(13)
+            ^ fnv("fleet-helper-join").rotate_left(29)
+            ^ (id + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15)
+    }
+
+    /// A (client, joined helper) edge's private draw stream: pure in the
+    /// scenario tuple and both stable ids, so extension columns never
+    /// depend on when the helper joined or who else is in the fleet.
+    fn edge_seed(&self, client_id: u64, helper_id: u64) -> u64 {
+        self.client_seed(client_id)
+            ^ fnv("fleet-helper-edge").rotate_left(17)
+            ^ (helper_id + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15)
+    }
+
+    /// Mint the helper with stable id `id`. Base helpers (`id < I`)
+    /// return the world's stored draws; joined helpers (dynamic worlds
+    /// only) draw batch time and memory from the spec's helper
+    /// distributions on a private per-id stream, with memory floored to
+    /// the outage-proof level.
+    pub fn mint_helper(&self, id: u64) -> FleetHelper {
+        if (id as usize) < self.cfg.n_helpers {
+            return FleetHelper {
+                id,
+                batch_ms: self.helper_batch_ms[id as usize],
+                mem_gb: self.mem_gb[id as usize],
+            };
+        }
+        assert!(
+            self.helper_dynamic,
+            "joined helpers require a dynamic world (ScenarioCfg::fleet_world_dynamic)"
+        );
+        let mut rng = Rng::seeded(self.helper_seed(id));
+        let pool = Device::helper_pool();
+        let batch_ms = self.cfg.spec.helper_mix.draw_batch_ms(&mut rng, pool, self.cfg.model);
+        let ram = pool[id as usize % pool.len()].profile().ram_gb;
+        let mem_gb = self.cfg.spec.memory.draw(&mut rng, ram).max(self.helper_mem_floor);
+        FleetHelper { id, batch_ms, mem_gb }
+    }
+
     /// Assemble the instance for a roster of minted clients (columns in
     /// roster order; callers keep rosters sorted by id for canonical
     /// layouts). Accepts owned clients or references (the orchestrator
@@ -838,6 +976,96 @@ impl FleetWorld {
                 })
                 .collect(),
             mem_gb: self.mem_gb.clone(),
+            mu_ms: vec![self.cfg.switch_cost_ms; i_n],
+            label: format!(
+                "fleet:{}/{} J={} I={} seed={}",
+                self.cfg.spec.name,
+                self.cfg.model.name(),
+                j_n,
+                i_n,
+                self.cfg.seed
+            ),
+        };
+        inst.validate().expect("fleet world produced invalid instance");
+        inst
+    }
+
+    /// Assemble the instance for a roster of minted clients on an
+    /// explicit helper set (sorted by id). With exactly the base helper
+    /// set this delegates to [`FleetWorld::instance`] and is
+    /// byte-identical to it; with a changed set (outages, joins) the
+    /// clients' cached base columns are reused for base helpers and
+    /// joined-helper columns are drawn on the fly from pure per-edge
+    /// streams ([`FleetWorld::edge_seed`]), so the instance is a pure
+    /// function of `(scenario tuple, roster ids, helper ids)`.
+    pub fn instance_on<C: std::borrow::Borrow<FleetClient>>(
+        &self,
+        roster: &[C],
+        helpers: &[FleetHelper],
+    ) -> InstanceMs {
+        let base_i = self.cfg.n_helpers;
+        if helpers.len() == base_i && helpers.iter().enumerate().all(|(k, h)| h.id == k as u64) {
+            return self.instance(roster);
+        }
+        assert!(
+            self.helper_dynamic,
+            "changed helper sets require a dynamic world (ScenarioCfg::fleet_world_dynamic)"
+        );
+        let j_n = roster.len();
+        let i_n = helpers.len();
+        let e_n = i_n * j_n;
+        let (mut r_ms, mut l_ms, mut lp_ms, mut rp_ms, mut p_ms, mut pp_ms) = (
+            vec![0.0; e_n],
+            vec![0.0; e_n],
+            vec![0.0; e_n],
+            vec![0.0; e_n],
+            vec![0.0; e_n],
+            vec![0.0; e_n],
+        );
+        let prof = self.cfg.model.profile();
+        for (jj, c) in roster.iter().enumerate() {
+            let c: &FleetClient = c.borrow();
+            let dm = ClientDelayModel::new(&prof, c.cut, c.batch_ms, self.cfg.wire_factor);
+            for (i, h) in helpers.iter().enumerate() {
+                let e = i * j_n + jj;
+                if (h.id as usize) < base_i {
+                    let k = h.id as usize;
+                    r_ms[e] = c.r_ms[k];
+                    l_ms[e] = c.l_ms[k];
+                    lp_ms[e] = c.lp_ms[k];
+                    rp_ms[e] = c.rp_ms[k];
+                    p_ms[e] = c.p_ms[k];
+                    pp_ms[e] = c.pp_ms[k];
+                } else {
+                    let mut rng = Rng::seeded(self.edge_seed(c.id, h.id));
+                    let rate = self.link.draw_rate(&mut rng);
+                    let d = dm.draw_edge(&mut rng, &self.link, h.batch_ms, rate, self.cfg.spec.jitter_sigma);
+                    r_ms[e] = d[0];
+                    l_ms[e] = d[1];
+                    lp_ms[e] = d[2];
+                    rp_ms[e] = d[3];
+                    p_ms[e] = d[4];
+                    pp_ms[e] = d[5];
+                }
+            }
+        }
+        let inst = InstanceMs {
+            n_clients: j_n,
+            n_helpers: i_n,
+            r_ms,
+            l_ms,
+            lp_ms,
+            rp_ms,
+            p_ms,
+            pp_ms,
+            d_gb: roster
+                .iter()
+                .map(|c| {
+                    let c: &FleetClient = c.borrow();
+                    c.d_gb
+                })
+                .collect(),
+            mem_gb: helpers.iter().map(|h| h.mem_gb).collect(),
             mu_ms: vec![self.cfg.switch_cost_ms; i_n],
             label: format!(
                 "fleet:{}/{} J={} I={} seed={}",
@@ -1015,7 +1243,7 @@ mod tests {
     #[test]
     fn families_differ_from_presets() {
         let base = ScenarioCfg::new(Scenario::S1, Model::ResNet101, 12, 3, 5).generate();
-        for scen in [Scenario::S3Clustered, Scenario::S4StragglerTail, Scenario::S5MemoryStarved, Scenario::S6MegaHomogeneous] {
+        for scen in [Scenario::S3Clustered, Scenario::S4StragglerTail, Scenario::S5MemoryStarved, Scenario::S6MegaHomogeneous, Scenario::S7HelperBursts] {
             let inst = ScenarioCfg::new(scen, Model::ResNet101, 12, 3, 5).generate();
             assert_ne!(inst.p_ms, base.p_ms, "{} should not clone scenario1", scen.name());
         }
@@ -1248,6 +1476,106 @@ mod tests {
         // reporting full-infeasible.
         let cfg = ScenarioCfg::new(Scenario::S1, Model::ResNet101, 4, 0, 6);
         cfg.fleet_world(8);
+    }
+
+    // ---- dynamic worlds (runtime helper roster) --------------------------
+
+    #[test]
+    fn dynamic_world_leaves_client_minting_and_speeds_unchanged() {
+        let cfg = ScenarioCfg::new(Scenario::S7HelperBursts, Model::Vgg19, 6, 3, 11);
+        let (w, d) = (cfg.fleet_world(12), cfg.fleet_world_dynamic(12));
+        assert!(!w.helper_modeled() && d.helper_modeled());
+        assert_eq!(w.d_cap, d.d_cap);
+        for id in 0..12u64 {
+            assert_eq!(w.mint_client(id).p_ms, d.mint_client(id).p_ms);
+        }
+        for id in 0..3u64 {
+            assert_eq!(w.mint_helper(id).batch_ms, d.mint_helper(id).batch_ms);
+        }
+    }
+
+    #[test]
+    fn dynamic_world_is_outage_proof() {
+        // Every helper alone must host the whole admitted roster: mem ≥
+        // (max_clients + 1)·d_cap, so no sequence of outages can wedge
+        // the repair.
+        for scen in [Scenario::S5MemoryStarved, Scenario::S7HelperBursts] {
+            let cfg = ScenarioCfg::new(scen, Model::ResNet101, 8, 3, 6);
+            let w = cfg.fleet_world_dynamic(16);
+            for (k, &m) in w.mem_gb.iter().enumerate() {
+                assert!(m >= 17.0 * w.d_cap, "{}: helper {k} mem {m} below floor", scen.name());
+            }
+            // Joined helpers mint at (or above) the same floor.
+            let h = w.mint_helper(40);
+            assert!(h.mem_gb >= w.helper_mem_floor);
+        }
+    }
+
+    #[test]
+    fn mint_helper_deterministic_and_base_ids_match_world() {
+        let cfg = ScenarioCfg::new(Scenario::S2, Model::Vgg19, 6, 3, 11);
+        let w = cfg.fleet_world_dynamic(12);
+        for id in 0..3u64 {
+            let h = w.mint_helper(id);
+            assert_eq!(h.mem_gb, w.mem_gb[id as usize]);
+        }
+        let a = w.mint_helper(7);
+        let b = w.mint_helper(7);
+        assert_eq!(a.batch_ms, b.batch_ms);
+        assert_eq!(a.mem_gb, b.mem_gb);
+        assert_ne!(a.batch_ms, w.mint_helper(8).batch_ms, "distinct ids, distinct streams");
+    }
+
+    #[test]
+    fn instance_on_base_set_is_byte_identical_to_instance() {
+        let cfg = ScenarioCfg::new(Scenario::S4StragglerTail, Model::ResNet101, 5, 3, 9);
+        let w = cfg.fleet_world_dynamic(10);
+        let roster: Vec<FleetClient> = (0..5u64).map(|id| w.mint_client(id)).collect();
+        let helpers: Vec<FleetHelper> = (0..3u64).map(|id| w.mint_helper(id)).collect();
+        let a = w.instance(&roster);
+        let b = w.instance_on(&roster, &helpers);
+        assert_eq!(a.p_ms, b.p_ms);
+        assert_eq!(a.mem_gb, b.mem_gb);
+        assert_eq!(a.mu_ms, b.mu_ms);
+    }
+
+    #[test]
+    fn instance_on_survivor_subset_keeps_cached_columns() {
+        let cfg = ScenarioCfg::new(Scenario::S1, Model::ResNet101, 4, 3, 9);
+        let w = cfg.fleet_world_dynamic(8);
+        let roster: Vec<FleetClient> = (0..4u64).map(|id| w.mint_client(id)).collect();
+        // Helper 1 is down: columns must be the clients' cached columns
+        // for helpers 0 and 2, in that order.
+        let helpers = vec![w.mint_helper(0), w.mint_helper(2)];
+        let inst = w.instance_on(&roster, &helpers);
+        assert_eq!(inst.n_helpers, 2);
+        for (jj, c) in roster.iter().enumerate() {
+            assert_eq!(inst.p_ms[jj], c.p_ms[0]);
+            assert_eq!(inst.p_ms[4 + jj], c.p_ms[2]);
+            assert_eq!(inst.r_ms[4 + jj], c.r_ms[2]);
+        }
+        assert_eq!(inst.mem_gb, vec![w.mem_gb[0], w.mem_gb[2]]);
+    }
+
+    #[test]
+    fn instance_on_joined_helper_columns_are_pure_and_deterministic() {
+        let cfg = ScenarioCfg::new(Scenario::S2, Model::Vgg19, 4, 2, 5);
+        let w = cfg.fleet_world_dynamic(8);
+        let roster: Vec<FleetClient> = (0..4u64).map(|id| w.mint_client(id)).collect();
+        let helpers = vec![w.mint_helper(0), w.mint_helper(1), w.mint_helper(4)];
+        let a = w.instance_on(&roster, &helpers); // validate() runs inside
+        let b = w.instance_on(&roster, &helpers);
+        assert_eq!(a.p_ms, b.p_ms);
+        // The joined helper's columns do not depend on which other
+        // helpers are present.
+        let c = w.instance_on(&roster, &[w.mint_helper(4)]);
+        for jj in 0..4 {
+            assert_eq!(a.p_ms[2 * 4 + jj], c.p_ms[jj]);
+            assert_eq!(a.l_ms[2 * 4 + jj], c.l_ms[jj]);
+        }
+        // And differ per joined helper id.
+        let d = w.instance_on(&roster, &[w.mint_helper(5)]);
+        assert_ne!(c.p_ms, d.p_ms);
     }
 
     #[test]

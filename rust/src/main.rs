@@ -247,6 +247,12 @@ fn reject_recorded_flags(args: &Args) -> Result<()> {
         "churn-threshold",
         "gap-threshold",
         "batches",
+        "helper-down-rate",
+        "helper-outage-rounds",
+        "helper-join-rate",
+        "max-helpers",
+        "diurnal-period",
+        "capacity-threshold",
     ] {
         anyhow::ensure!(
             !args.flags.contains_key(key),
@@ -254,6 +260,46 @@ fn reject_recorded_flags(args: &Args) -> Result<()> {
              (only --rounds, --out and --checkpoint-every apply)"
         );
     }
+    Ok(())
+}
+
+/// Helper-dynamics knobs shared by `psl fleet` and `psl serve`, applied
+/// on top of the scenario's default helper model (static for most
+/// families, bursts for s7-helper-bursts). Strict validation: a typo'd
+/// value errors instead of silently keeping the default.
+fn apply_helper_flags(args: &Args, cfg: &mut psl::fleet::FleetCfg) -> Result<()> {
+    let mut hc = cfg.helper_churn.clone();
+    hc.down_rate = parsed_flag(args, "helper-down-rate", hc.down_rate)?;
+    anyhow::ensure!(
+        hc.down_rate.is_finite() && (0.0..=1.0).contains(&hc.down_rate),
+        "--helper-down-rate must be in [0, 1], got {}",
+        hc.down_rate
+    );
+    hc.outage_rounds = parsed_flag(args, "helper-outage-rounds", hc.outage_rounds)?;
+    anyhow::ensure!(hc.outage_rounds >= 1, "--helper-outage-rounds must be >= 1");
+    hc.join_rate = parsed_flag(args, "helper-join-rate", hc.join_rate)?;
+    anyhow::ensure!(
+        hc.join_rate.is_finite() && hc.join_rate >= 0.0,
+        "--helper-join-rate must be finite and >= 0, got {}",
+        hc.join_rate
+    );
+    hc.max_helpers = parsed_flag(args, "max-helpers", hc.max_helpers)?;
+    hc.diurnal_period = parsed_flag(args, "diurnal-period", hc.diurnal_period)?;
+    if hc.join_rate > 0.0 {
+        anyhow::ensure!(
+            hc.max_helpers > cfg.scenario.n_helpers,
+            "--helper-join-rate needs --max-helpers above the base helper count {} (got {})",
+            cfg.scenario.n_helpers,
+            hc.max_helpers
+        );
+    }
+    cfg.helper_churn = hc;
+    cfg.capacity_threshold = parsed_flag(args, "capacity-threshold", cfg.capacity_threshold)?;
+    anyhow::ensure!(
+        cfg.capacity_threshold.is_finite() && (0.0..=1.0).contains(&cfg.capacity_threshold),
+        "--capacity-threshold must be in [0, 1], got {}",
+        cfg.capacity_threshold
+    );
     Ok(())
 }
 
@@ -429,6 +475,7 @@ fn cmd_fleet(args: &Args) -> Result<()> {
         cfg.churn_threshold = parsed_flag(args, "churn-threshold", cfg.churn_threshold)?;
         cfg.gap_threshold = parsed_flag(args, "gap-threshold", cfg.gap_threshold)?;
         cfg.epoch_batches = parsed_flag(args, "batches", cfg.epoch_batches)?;
+        apply_helper_flags(args, &mut cfg)?;
         if let Some(table_path) = args.flags.get("policy-table") {
             anyhow::ensure!(
                 policy == Policy::Auto,
@@ -513,16 +560,18 @@ fn cmd_fleet(args: &Args) -> Result<()> {
     let report = session.into_report();
     println!("{} | policy {} | slot {} ms | {} rounds", report.label, report.policy, report.slot_ms, rounds);
     println!(
-        "  {:>5} {:>3} {:>4} {:>4} {:<13} {:<8} {:>8} {:>12} {:>11} {:>6} {:>10}",
-        "round", "J", "arr", "dep", "decision", "method", "slots", "makespan[s]", "period[s]", "moves", "work"
+        "  {:>5} {:>3} {:>4} {:>4} {:>4} {:>4} {:<15} {:<8} {:>8} {:>12} {:>11} {:>6} {:>10}",
+        "round", "J", "arr", "dep", "live", "orph", "decision", "method", "slots", "makespan[s]", "period[s]", "moves", "work"
     );
     for r in &report.rounds {
         println!(
-            "  {:>5} {:>3} {:>4} {:>4} {:<13} {:<8} {:>8} {:>12.1} {:>11.1} {:>6} {:>10}",
+            "  {:>5} {:>3} {:>4} {:>4} {:>4} {:>4} {:<15} {:<8} {:>8} {:>12.1} {:>11.1} {:>6} {:>10}",
             r.round,
             r.n_clients,
             r.arrivals,
             r.departures,
+            r.helpers_live,
+            r.orphaned_clients,
             r.decision,
             r.method.unwrap_or("-"),
             r.makespan_slots,
@@ -533,10 +582,12 @@ fn cmd_fleet(args: &Args) -> Result<()> {
         );
     }
     println!(
-        "summary: {} full / {} repair / {} empty | mean makespan {:.1} s | mean period {:.1} s | total work {}",
+        "summary: {} full / {} repair / {} empty | {} degraded, {} migrations | mean makespan {:.1} s | mean period {:.1} s | total work {}",
         report.full_rounds(),
         report.repair_rounds(),
         report.empty_rounds(),
+        report.degraded_rounds(),
+        report.total_migrations(),
         report.mean_makespan_ms() / 1000.0,
         report.mean_period_ms() / 1000.0,
         report.total_work_units()
@@ -594,6 +645,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         cfg.churn_threshold = parsed_flag(args, "churn-threshold", cfg.churn_threshold)?;
         cfg.gap_threshold = parsed_flag(args, "gap-threshold", cfg.gap_threshold)?;
         cfg.epoch_batches = parsed_flag(args, "batches", cfg.epoch_batches)?;
+        apply_helper_flags(args, &mut cfg)?;
         if let Some(table_path) = args.flags.get("policy-table") {
             anyhow::ensure!(
                 policy == Policy::Auto,
@@ -607,6 +659,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let opts = ServeOpts {
         checkpoint_every: optional_count_flag(args, "checkpoint-every")?,
         checkpoint_name: format!("{out_name}.ckpt"),
+        strict: args.bool_of("strict"),
     };
     let cfg = session.cfg();
     eprintln!(
@@ -624,9 +677,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let stdout = std::io::stdout();
     let summary = serve(&mut session, stdin.lock(), stdout.lock(), &opts)?;
     eprintln!(
-        "serve: {} rounds stepped, {} checkpoints (cursor at round {})",
+        "serve: {} rounds stepped, {} checkpoints, {} errored lines (cursor at round {})",
         summary.rounds,
         summary.checkpoints,
+        summary.errors,
         session.next_round()
     );
     Ok(())
@@ -912,18 +966,20 @@ fn cmd_rounds_summary(path: &str) -> Result<()> {
     anyhow::ensure!(!rows.is_empty(), "{path} contains no rounds");
     println!("rounds: {} streamed from {path}", rows.len());
     println!(
-        "  {:<14} {:>6} {:>10} {:>14} {:>12} {:>12}",
-        "decision", "rounds", "mean-churn", "makespan[s]", "period[s]", "work"
+        "  {:<15} {:>6} {:>10} {:>14} {:>12} {:>12} {:>5} {:>5}",
+        "decision", "rounds", "mean-churn", "makespan[s]", "period[s]", "work", "degr", "orph"
     );
     for s in psl::analyze::rounds::summarize(&rows) {
         println!(
-            "  {:<14} {:>6} {:>10.2} {:>14.1} {:>12.1} {:>12}",
+            "  {:<15} {:>6} {:>10.2} {:>14.1} {:>12.1} {:>12} {:>5} {:>5}",
             s.decision,
             s.rounds,
             s.mean_churn_frac,
             s.mean_makespan_ms / 1000.0,
             s.mean_period_ms / 1000.0,
-            s.total_work_units
+            s.total_work_units,
+            s.degraded_rounds,
+            s.orphaned_clients
         );
     }
     Ok(())
@@ -1014,10 +1070,16 @@ fn cmd_fleet_grid(args: &Args) -> Result<()> {
         "batches",
         "scenario",
         "seed",
+        "helper-down-rate",
+        "helper-outage-rounds",
+        "helper-join-rate",
+        "max-helpers",
+        "diurnal-period",
+        "capacity-threshold",
     ] {
         anyhow::ensure!(
             !args.flags.contains_key(key),
-            "--{key} applies to single fleet runs, not --grid (grid axes: --scenarios/--churn-rates/--policies/--seeds)"
+            "--{key} applies to single fleet runs, not --grid (grid axes: --scenarios/--churn-rates/--helper-down-rates/--policies/--seeds)"
         );
     }
     let list = |key: &str, default: &str| csv_list(args, key, default);
@@ -1032,6 +1094,17 @@ fn cmd_fleet_grid(args: &Args) -> Result<()> {
             let c: f64 = s.parse().ok().with_context(|| format!("bad churn rate {s:?}"))?;
             anyhow::ensure!((0.0..=1.0).contains(&c), "churn rate {c} outside [0, 1]");
             Ok(c)
+        })
+        .collect::<Result<Vec<_>>>()?;
+    let helper_down_rates = list("helper-down-rates", "0")
+        .iter()
+        .map(|s| {
+            let r: f64 = s.parse().ok().with_context(|| format!("bad helper down rate {s:?}"))?;
+            anyhow::ensure!(
+                r.is_finite() && (0.0..=1.0).contains(&r),
+                "helper down rate {r} outside [0, 1]"
+            );
+            Ok(r)
         })
         .collect::<Result<Vec<_>>>()?;
     let policies = list("policies", "incremental,full")
@@ -1070,6 +1143,7 @@ fn cmd_fleet_grid(args: &Args) -> Result<()> {
         model,
         size: (j, i),
         churn_rates,
+        helper_down_rates,
         policies,
         seeds,
         rounds,
@@ -1079,9 +1153,10 @@ fn cmd_fleet_grid(args: &Args) -> Result<()> {
     };
     let n = grid::cells(&cfg).len();
     println!(
-        "fleet grid: {} scenarios x {} churn rates x {} policies x {} seeds = {} cells on {} threads",
+        "fleet grid: {} scenarios x {} churn rates x {} helper rates x {} policies x {} seeds = {} cells on {} threads",
         cfg.scenarios.len(),
         cfg.churn_rates.len(),
+        cfg.helper_down_rates.len(),
         cfg.policies.len(),
         cfg.seeds.len(),
         n,
@@ -1089,14 +1164,15 @@ fn cmd_fleet_grid(args: &Args) -> Result<()> {
     );
     let rows = grid::run(&cfg);
     println!(
-        "  {:<20} {:>6} {:<12} {:>6} {:>5} {:>7} {:>6} {:>13} {:>11} {:>12}",
-        "scenario", "churn", "policy", "seed", "full", "repair", "empty", "makespan[s]", "period[s]", "work"
+        "  {:<20} {:>6} {:>6} {:<12} {:>6} {:>5} {:>7} {:>6} {:>13} {:>11} {:>12}",
+        "scenario", "churn", "h-down", "policy", "seed", "full", "repair", "empty", "makespan[s]", "period[s]", "work"
     );
     for r in &rows {
         println!(
-            "  {:<20} {:>6.2} {:<12} {:>6} {:>5} {:>7} {:>6} {:>13.1} {:>11.1} {:>12}",
+            "  {:<20} {:>6.2} {:>6.2} {:<12} {:>6} {:>5} {:>7} {:>6} {:>13.1} {:>11.1} {:>12}",
             r.scenario,
             r.churn_rate,
+            r.helper_down_rate,
             r.policy,
             r.seed,
             r.full_rounds,

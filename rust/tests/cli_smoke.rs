@@ -267,13 +267,38 @@ fn serve_replays_a_recorded_event_log_byte_identically() {
 }
 
 #[test]
-fn serve_rejects_discontinuous_events() {
+fn serve_strict_rejects_discontinuous_events() {
     let path = std::env::temp_dir().join(format!("psl-cli-serve-bad-{}.jsonl", std::process::id()));
     std::fs::write(&path, "{\"round\": 7, \"arrivals\": [], \"departures\": []}\n").unwrap();
-    let (_, stderr, ok) = psl_with_stdin(&["serve", "-j", "4", "-i", "2"], path.to_str().unwrap());
-    assert!(!ok, "an out-of-order event must fail the serve loop");
+    let (_, stderr, ok) =
+        psl_with_stdin(&["serve", "-j", "4", "-i", "2", "--strict"], path.to_str().unwrap());
+    assert!(!ok, "under --strict an out-of-order event must fail the serve loop");
     assert!(stderr.contains("does not continue the session"), "{stderr}");
     assert!(stderr.contains("event line 1"), "{stderr}");
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn serve_lenient_answers_bad_lines_and_keeps_serving() {
+    // Without --strict the same bad line becomes a structured error
+    // answer on stdout and the next (valid) round still steps.
+    let path = std::env::temp_dir().join(format!("psl-cli-serve-lenient-{}.jsonl", std::process::id()));
+    std::fs::write(
+        &path,
+        "{\"round\": 7, \"arrivals\": [], \"departures\": []}\n{\"arrivals\": [], \"departures\": []}\n",
+    )
+    .unwrap();
+    let (stdout, stderr, ok) = psl_with_stdin(&["serve", "-j", "4", "-i", "2"], path.to_str().unwrap());
+    assert!(ok, "lenient serve must survive a bad line: stderr={stderr}");
+    let lines: Vec<&str> = stdout.lines().collect();
+    assert_eq!(lines.len(), 2, "one error answer + one report: {stdout}");
+    let err = psl::util::json::Json::parse(lines[0]).unwrap();
+    assert!(err.get("error").as_str().unwrap().contains("does not continue the session"), "{stdout}");
+    assert_eq!(err.get("line").as_f64(), Some(1.0));
+    let report = psl::util::json::Json::parse(lines[1]).unwrap();
+    assert_eq!(report.get("round").as_f64(), Some(0.0), "round 0 still stepped");
+    assert!(stderr.contains("1 rounds stepped"), "{stderr}");
+    assert!(stderr.contains("1 errored lines"), "{stderr}");
     std::fs::remove_file(&path).ok();
 }
 
@@ -336,6 +361,73 @@ fn fleet_rejects_bad_policy_and_probability() {
     let (_, stderr2, ok2) = psl(&["fleet", "--depart-prob", "1.5"]);
     assert!(!ok2);
     assert!(stderr2.contains("depart-prob"), "{stderr2}");
+}
+
+#[test]
+fn fleet_rejects_bad_helper_knobs() {
+    let (_, stderr, ok) = psl(&["fleet", "--helper-down-rate", "1.5"]);
+    assert!(!ok, "out-of-range outage probability must fail");
+    assert!(stderr.contains("helper-down-rate"), "{stderr}");
+    let (_, stderr, ok) = psl(&["fleet", "--helper-outage-rounds", "0"]);
+    assert!(!ok);
+    assert!(stderr.contains("helper-outage-rounds"), "{stderr}");
+    // A join process needs headroom above the base pool.
+    let (_, stderr, ok) = psl(&["fleet", "-i", "2", "--helper-join-rate", "0.5"]);
+    assert!(!ok);
+    assert!(stderr.contains("max-helpers"), "{stderr}");
+    let (_, stderr, ok) = psl(&["fleet", "--capacity-threshold", "2.0"]);
+    assert!(!ok);
+    assert!(stderr.contains("capacity-threshold"), "{stderr}");
+    // Serve validates the same knobs the same way.
+    let (_, stderr, ok) = psl(&["serve", "--helper-down-rate", "nope"]);
+    assert!(!ok);
+    assert!(stderr.contains("helper-down-rate"), "{stderr}");
+}
+
+#[test]
+fn fleet_grid_rejects_singular_helper_knobs_and_bad_axis_values() {
+    // Singular helper knobs belong to single runs; the grid has its own
+    // --helper-down-rates axis — exactly like the client-churn flags.
+    let (_, stderr, ok) = psl(&["fleet", "--grid", "--helper-down-rate", "0.2"]);
+    assert!(!ok);
+    assert!(stderr.contains("single fleet runs"), "{stderr}");
+    assert!(stderr.contains("helper-down-rates"), "hint names the axis: {stderr}");
+    let (_, stderr, ok) = psl(&["fleet", "--grid", "--helper-down-rates", "0.1,1.5"]);
+    assert!(!ok);
+    assert!(stderr.contains("outside [0, 1]"), "{stderr}");
+}
+
+#[test]
+fn fleet_s7_helper_bursts_degrades_and_stays_deterministic() {
+    // The s7 family models bursty helper outages by default; crank the
+    // rate so degradation is certain within the horizon, and check the
+    // new per-round fields land in the sidecar.
+    let args = |out: &str| {
+        vec![
+            "fleet", "--scenario", "7", "--model", "vgg19", "-j", "6", "-i", "3", "--seed", "5",
+            "--rounds", "6", "--helper-down-rate", "0.9", "--helper-outage-rounds", "1",
+            "--out", out,
+        ]
+    };
+    let (stdout, stderr, ok) = psl(&args("cli-smoke-fleet-s7-a"));
+    assert!(ok, "stdout={stdout} stderr={stderr}");
+    assert!(stdout.contains("s7-helper-bursts"), "{stdout}");
+    assert!(stdout.contains("degraded"), "summary reports degradation: {stdout}");
+    let (_, _, ok2) = psl(&args("cli-smoke-fleet-s7-b"));
+    assert!(ok2);
+    let a = std::fs::read_to_string("target/psl-bench/cli-smoke-fleet-s7-a.json").unwrap();
+    let b = std::fs::read_to_string("target/psl-bench/cli-smoke-fleet-s7-b.json").unwrap();
+    assert_eq!(a, b, "helper-churn fleet JSON must be byte-identical across runs");
+    let jsonl = std::fs::read_to_string("target/psl-bench/cli-smoke-fleet-s7-a.rounds.jsonl").unwrap();
+    assert!(jsonl.contains("\"helpers_live\""), "per-round helper fields in the sidecar");
+    // At a 0.9 per-helper outage rate some round is degraded for any
+    // seed that draws a single outage in 6 rounds x 3 helpers.
+    assert!(jsonl.contains("\"degraded\": true"), "{jsonl}");
+    for name in ["cli-smoke-fleet-s7-a", "cli-smoke-fleet-s7-b"] {
+        for suffix in [".json", ".rounds.jsonl", ".events.jsonl"] {
+            std::fs::remove_file(format!("target/psl-bench/{name}{suffix}")).ok();
+        }
+    }
 }
 
 #[test]

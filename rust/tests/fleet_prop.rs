@@ -139,10 +139,10 @@ fn injected_total_churn_recovers() {
     let scen = ScenarioCfg::new(Scenario::S2, Model::ResNet101, 5, 2, 17);
     let world = scen.fleet_world(10);
     let stream = vec![
-        RoundEvents { round: 0, departures: vec![], arrivals: vec![], roster: vec![0, 1, 2, 3, 4] },
-        RoundEvents { round: 1, departures: vec![0, 1, 2, 3, 4], arrivals: vec![], roster: vec![] },
-        RoundEvents { round: 2, departures: vec![], arrivals: vec![5, 6, 7], roster: vec![5, 6, 7] },
-        RoundEvents { round: 3, departures: vec![5], arrivals: vec![8], roster: vec![6, 7, 8] },
+        RoundEvents::clients(0, vec![], vec![], vec![0, 1, 2, 3, 4]),
+        RoundEvents::clients(1, vec![0, 1, 2, 3, 4], vec![], vec![]),
+        RoundEvents::clients(2, vec![], vec![5, 6, 7], vec![5, 6, 7]),
+        RoundEvents::clients(3, vec![5], vec![8], vec![6, 7, 8]),
     ];
     let churn = ChurnCfg { rounds: 4, arrival_rate: 0.0, departure_prob: 0.0, max_clients: 10 };
     let report = run_on_stream(&FleetCfg::new(scen, churn, Policy::Incremental), &world, &stream);

@@ -2,7 +2,7 @@
 //! byte-identical, and session state stays O(max_clients) no matter how
 //! many clients ever existed.
 
-use psl::fleet::{ChurnCfg, FleetCfg, FleetCheckpoint, FleetSession, Policy};
+use psl::fleet::{ChurnCfg, FleetCfg, FleetCheckpoint, FleetSession, HelperChurnCfg, Policy};
 use psl::instance::profiles::Model;
 use psl::instance::scenario::{Scenario, ScenarioCfg};
 use psl::util::json::Json;
@@ -85,4 +85,72 @@ fn long_horizon_state_is_bounded_by_the_roster_cap() {
     let ckpt = session.checkpoint();
     assert!(ckpt.prev_assign.len() <= cap, "warm state bounded: {} assignments", ckpt.prev_assign.len());
     assert_eq!(ckpt.rounds.len(), 1500);
+}
+
+/// The same long-horizon guarantee with helper churn enabled: 1500
+/// rounds of outages, returns, diurnal rate swings and permanent joins.
+/// Every round must still step (the session debug-asserts schedule
+/// feasibility on the surviving helper set before reporting), the live
+/// pool never empties, warm state stays O(max_clients + max_helpers),
+/// and an independent session over the same config replays the report
+/// byte for byte.
+#[test]
+fn long_horizon_helper_churn_stays_feasible_and_bounded() {
+    let cap = 8;
+    let helper_cap = 6; // max(--max-helpers, base I=3)
+    let cfg = || {
+        let scen = ScenarioCfg::new(Scenario::S1, Model::ResNet101, 4, 3, 5);
+        let churn = ChurnCfg { rounds: 1500, arrival_rate: 1.2, departure_prob: 0.3, max_clients: cap };
+        let mut cfg = FleetCfg::new(scen, churn, Policy::Incremental);
+        cfg.epoch_batches = 1;
+        cfg.helper_churn = HelperChurnCfg {
+            down_rate: 0.12,
+            outage_rounds: 2,
+            join_rate: 0.05,
+            max_helpers: helper_cap,
+            diurnal_period: 50,
+        };
+        cfg
+    };
+    let mut session = FleetSession::new(cfg());
+    let stream = session.event_stream();
+    let outages: usize = stream.iter().map(|ev| ev.helper_down.len()).sum();
+    let joins: usize = stream.iter().map(|ev| ev.helper_join.len()).sum();
+    assert!(outages > 50, "helper churn not heavy enough to exercise degradation ({outages} outages)");
+    assert!(joins > 0, "the join process never fired");
+    let mut degraded = 0usize;
+    for ev in &stream {
+        let round = session.step(ev);
+        assert!(round.helpers_live >= 1, "round {}: no live helper survived", ev.round);
+        assert!(round.helpers_live <= helper_cap, "round {}: pool cap breached", ev.round);
+        if round.degraded {
+            degraded += 1;
+        } else {
+            assert_eq!(round.orphaned_clients, 0, "round {}: orphans without degradation", ev.round);
+        }
+        assert!(
+            session.minted_len() <= cap,
+            "round {}: minted cache grew to {} (> cap {cap})",
+            ev.round,
+            session.minted_len()
+        );
+    }
+    assert!(degraded > 0, "outages never produced a degraded round");
+    let ckpt = session.checkpoint();
+    assert!(ckpt.prev_assign.len() <= cap, "warm state bounded: {} assignments", ckpt.prev_assign.len());
+    assert!(
+        ckpt.helpers_live.len() + ckpt.helpers_down.len() <= helper_cap,
+        "helper roster bounded by the pool cap"
+    );
+    assert_eq!(ckpt.rounds.len(), 1500);
+
+    let mut twin = FleetSession::new(cfg());
+    for ev in &twin.event_stream() {
+        twin.step(ev);
+    }
+    assert_eq!(
+        twin.into_report().to_json().pretty(),
+        session.into_report().to_json().pretty(),
+        "helper-churn run must replay byte-identically"
+    );
 }
