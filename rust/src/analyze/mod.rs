@@ -11,16 +11,19 @@
 //! [`PolicyTable`](crate::fleet::policy::PolicyTable) the fleet `auto`
 //! policy consults ([`frontier`]), diff perf-trajectory points across
 //! PRs ([`perfdiff`]), summarize a fleet run's streamed
-//! `.rounds.jsonl` sidecar per decision ([`rounds`]), and reduce
-//! `psl-shard` artifacts to per-cell stitching costs ([`shard`]).
+//! `.rounds.jsonl` sidecar per decision ([`rounds`]), reduce
+//! `psl-shard` artifacts to per-cell stitching costs ([`shard`]), and
+//! reduce `psl-trace` captures to per-phase duration + counter tables
+//! ([`trace`]).
 //!
 //! | Module | Role |
 //! |---|---|
 //! | [`grid`] | typed fleet-grid rows, per-(family × size) regime tables |
 //! | [`frontier`] | churn-rate crossover scan → `PolicyTable` |
-//! | [`perfdiff`] | `--perf-diff` gate on solve/check/replay timings |
+//! | [`perfdiff`] | `--perf-diff` gate on solve/check/replay timings + solver counters |
 //! | [`rounds`] | `--rounds` per-decision summary of `.rounds.jsonl` sidecars |
 //! | [`shard`] | `--shard` stitch-gap / migration summary of `psl-shard` artifacts |
+//! | [`trace`] | `--trace` per-phase duration + counter summary of `psl-trace` captures |
 //!
 //! Everything is deterministic: the same artifact bytes always produce
 //! the same tables, frontiers and `PolicyTable` bytes, so analysis
@@ -31,9 +34,11 @@ pub mod grid;
 pub mod perfdiff;
 pub mod rounds;
 pub mod shard;
+pub mod trace;
 
 pub use frontier::{compute_policy_table, frontiers, Frontier};
 pub use grid::{regime_tables, rows_from_doc, GridRow, RegimeCell, RegimeTable};
-pub use perfdiff::{PerfDiffReport, PerfRegression};
+pub use perfdiff::{CounterRegression, PerfDiffReport, PerfRegression};
 pub use rounds::{summarize, DecisionSummary, RoundRow};
 pub use shard::{summaries_from_doc, ShardCellSummary};
+pub use trace::{summarize_doc, summarize_file, PhaseSummary, TraceSummary};

@@ -8,6 +8,14 @@
 //! show up in `only_*` counts when the grid shape moves). The compared
 //! statistic is `min_s`, the standard low-noise benchmark statistic —
 //! means absorb scheduler jitter that would flap CI.
+//!
+//! Since schema v6 the solve rows also carry deterministic solver
+//! counters ([`GATED_COUNTERS`]: `exact_nodes`, `admm_iters`); those
+//! diff exactly (no timing noise), so a blow-up in search effort —
+//! pruning broken, convergence lost — fails the gate even when
+//! wall-clock on the CI runner happens to absorb it. Counter gating
+//! skips silently when either artifact predates v6 or the old value is
+//! zero (a routing change, not an efficiency regression).
 
 use crate::bench::artifact::{self, ArtifactKind};
 use crate::util::json::Json;
@@ -16,6 +24,11 @@ use std::collections::BTreeMap;
 
 /// Phases whose slowdown fails the diff.
 pub const GATED_PHASES: [&str; 3] = ["solve", "check", "replay"];
+
+/// Deterministic solver-counter columns (schema v6) gated on `solve`
+/// rows: search-effort blow-ups fail the diff exactly, without timing
+/// noise.
+pub const GATED_COUNTERS: [&str; 2] = ["exact_nodes", "admm_iters"];
 
 /// One per-cell timing regression.
 #[derive(Clone, Debug, PartialEq)]
@@ -26,6 +39,17 @@ pub struct PerfRegression {
     pub new_s: f64,
 }
 
+/// One per-cell solver-counter regression (search effort grew beyond
+/// tolerance on a solve row).
+#[derive(Clone, Debug, PartialEq)]
+pub struct CounterRegression {
+    pub cell: String,
+    /// Which [`GATED_COUNTERS`] column regressed.
+    pub counter: &'static str,
+    pub old: u64,
+    pub new: u64,
+}
+
 /// Cell-by-cell comparison of two perf artifacts.
 #[derive(Clone, Debug, Default)]
 pub struct PerfDiffReport {
@@ -33,6 +57,9 @@ pub struct PerfDiffReport {
     pub compared: usize,
     /// Gated cells whose new `min_s` exceeds old × (1 + tol).
     pub regressions: Vec<PerfRegression>,
+    /// Solve cells whose deterministic solver counters grew beyond
+    /// tolerance (empty when either artifact predates the v6 columns).
+    pub counter_regressions: Vec<CounterRegression>,
     /// Gated cells that sped up beyond the tolerance.
     pub improved: usize,
     /// Cells (gated or not) present in only one artifact — grid drift,
@@ -41,11 +68,28 @@ pub struct PerfDiffReport {
     pub only_new: usize,
 }
 
-/// Index a perf document's rows by cell key → (`min_s`, gated), keeping
-/// every phase (so grid drift on dense baselines is still visible). The
-/// gated flag comes from the row's `phase` field directly — the display
-/// key is never re-parsed.
-fn index_rows(doc: &Json) -> Result<BTreeMap<String, (f64, bool)>> {
+impl PerfDiffReport {
+    /// True when nothing gated regressed (timings or counters).
+    pub fn clean(&self) -> bool {
+        self.regressions.is_empty() && self.counter_regressions.is_empty()
+    }
+}
+
+/// One indexed perf row: the compared timing, the gated flag, and — on
+/// solve rows of v6+ artifacts — the deterministic counter columns.
+struct IndexedRow {
+    min_s: f64,
+    gated: bool,
+    /// `(column, value)` for each [`GATED_COUNTERS`] column present in
+    /// the row (absent on pre-v6 artifacts and non-solve phases).
+    counters: Vec<(&'static str, u64)>,
+}
+
+/// Index a perf document's rows by cell key, keeping every phase (so
+/// grid drift on dense baselines is still visible). The gated flag comes
+/// from the row's `phase` field directly — the display key is never
+/// re-parsed.
+fn index_rows(doc: &Json) -> Result<BTreeMap<String, IndexedRow>> {
     artifact::expect_kind(doc, ArtifactKind::Perf)?;
     let rows = doc.get("rows").as_arr().context("perf artifact missing rows[]")?;
     let mut out = BTreeMap::new();
@@ -64,10 +108,21 @@ fn index_rows(doc: &Json) -> Result<BTreeMap<String, (f64, bool)>> {
         let min_s = r.get("min_s").as_f64().with_context(|| format!("row {k}: missing/bad min_s"))?;
         anyhow::ensure!(min_s.is_finite() && min_s >= 0.0, "row {k}: non-finite min_s {min_s}");
         let gated = GATED_PHASES.contains(&phase);
+        // Counter columns gate only on the solve row (they repeat on
+        // every phase row of a cell; comparing once avoids 5× duplicate
+        // findings) and only when actually present (pre-v6 compat).
+        let counters = if phase == "solve" {
+            GATED_COUNTERS
+                .iter()
+                .filter_map(|&c| r.get(c).as_f64().map(|v| (c, v as u64)))
+                .collect()
+        } else {
+            Vec::new()
+        };
         // A silently-overwritten duplicate would shadow a row from the
         // comparison entirely (e.g. `--scenarios 1,1`): reject instead.
         anyhow::ensure!(
-            out.insert(key.clone(), (min_s, gated)).is_none(),
+            out.insert(key.clone(), IndexedRow { min_s, gated, counters }).is_none(),
             "duplicate perf cell {key:?} in artifact"
         );
     }
@@ -81,15 +136,41 @@ pub fn diff_documents(old: &Json, new: &Json, tol: f64) -> Result<PerfDiffReport
     let old_rows = index_rows(old)?;
     let new_rows = index_rows(new)?;
     let mut report = PerfDiffReport::default();
-    for (key, (old_s, gated)) in &old_rows {
+    for (key, old_row) in &old_rows {
         match new_rows.get(key) {
             None => report.only_old += 1,
-            Some((new_s, _)) if *gated => {
+            Some(new_row) if old_row.gated => {
                 report.compared += 1;
-                if *new_s > old_s * (1.0 + tol) {
-                    report.regressions.push(PerfRegression { cell: key.clone(), old_s: *old_s, new_s: *new_s });
-                } else if *new_s < old_s * (1.0 - tol) {
+                if new_row.min_s > old_row.min_s * (1.0 + tol) {
+                    report.regressions.push(PerfRegression {
+                        cell: key.clone(),
+                        old_s: old_row.min_s,
+                        new_s: new_row.min_s,
+                    });
+                } else if new_row.min_s < old_row.min_s * (1.0 - tol) {
                     report.improved += 1;
+                }
+                // Counter gating: deterministic, so the same tolerance is
+                // generous — a genuine pruning/convergence regression
+                // jumps far past it. `old == 0` means the cell's strategy
+                // did not enter that search before (routing change, not
+                // an efficiency loss): skip.
+                for &(c, old_v) in &old_row.counters {
+                    if old_v == 0 {
+                        continue;
+                    }
+                    if let Some(&(_, new_v)) =
+                        new_row.counters.iter().find(|&&(name, _)| name == c)
+                    {
+                        if new_v as f64 > old_v as f64 * (1.0 + tol) {
+                            report.counter_regressions.push(CounterRegression {
+                                cell: key.clone(),
+                                counter: c,
+                                old: old_v,
+                                new: new_v,
+                            });
+                        }
+                    }
                 }
             }
             Some(_) => {}
@@ -121,6 +202,10 @@ mod tests {
             makespan_slots: 40,
             total_runs: 16,
             total_slots: 200,
+            exact_nodes: 120,
+            exact_cutoffs: 40,
+            exact_max_depth: 9,
+            admm_iters: 4,
         }
     }
 
@@ -138,7 +223,71 @@ mod tests {
         let r = diff_documents(&d, &d, 0.25).unwrap();
         assert_eq!(r.compared, 2, "dense baseline rows are not gated");
         assert!(r.regressions.is_empty());
+        assert!(r.counter_regressions.is_empty());
+        assert!(r.clean());
         assert_eq!(r.improved + r.only_old + r.only_new, 0);
+    }
+
+    #[test]
+    fn counter_blowup_regresses_even_when_timing_is_flat() {
+        let old = doc(0.1, 0.01);
+        let mut rows = vec![
+            perf_row("scenario1", "solve", 0.1),
+            perf_row("scenario1", "check", 0.01),
+            perf_row("scenario1", "check-dense", 0.5),
+        ];
+        // Pruning broke: 10× the exact-search nodes at identical timings.
+        rows[0].exact_nodes = 1200;
+        let r = diff_documents(&old, &rows_to_json(&rows), 0.25).unwrap();
+        assert!(r.regressions.is_empty(), "timings did not move");
+        assert_eq!(r.counter_regressions.len(), 1, "{:?}", r.counter_regressions);
+        assert_eq!(r.counter_regressions[0].counter, "exact_nodes");
+        assert_eq!(r.counter_regressions[0].old, 120);
+        assert_eq!(r.counter_regressions[0].new, 1200);
+        assert!(!r.clean());
+    }
+
+    #[test]
+    fn counter_gating_skips_pre_v6_artifacts_and_zero_baselines() {
+        // Pre-v6 old artifact: strip the counter columns from the rows.
+        let strip = |doc: &Json| -> Json {
+            let mut d = doc.clone();
+            if let Json::Obj(m) = &mut d {
+                if let Some(Json::Arr(rows)) = m.get_mut("rows") {
+                    for r in rows.iter_mut() {
+                        if let Json::Obj(rm) = r {
+                            for c in GATED_COUNTERS {
+                                rm.remove(c);
+                            }
+                        }
+                    }
+                }
+            }
+            d
+        };
+        let old_pre_v6 = strip(&doc(0.1, 0.01));
+        let mut rows = vec![
+            perf_row("scenario1", "solve", 0.1),
+            perf_row("scenario1", "check", 0.01),
+            perf_row("scenario1", "check-dense", 0.5),
+        ];
+        rows[0].exact_nodes = 999_999;
+        let r = diff_documents(&old_pre_v6, &rows_to_json(&rows), 0.25).unwrap();
+        assert!(r.clean(), "no counter columns in the old artifact → no counter gate");
+
+        // Zero baseline (the cell's strategy never entered the exact
+        // search before): new activity is a routing change, not gated.
+        let mut old_rows = vec![
+            perf_row("scenario1", "solve", 0.1),
+            perf_row("scenario1", "check", 0.01),
+        ];
+        old_rows[0].exact_nodes = 0;
+        let r2 = diff_documents(&rows_to_json(&old_rows), &rows_to_json(&rows), 0.25).unwrap();
+        assert!(
+            r2.counter_regressions.is_empty(),
+            "zero-baseline counters never gate: {:?}",
+            r2.counter_regressions
+        );
     }
 
     #[test]

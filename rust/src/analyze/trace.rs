@@ -1,0 +1,186 @@
+//! Summarization of `psl-trace` artifacts (`psl analyze --trace <file>`).
+//!
+//! A trace capture ([`crate::obs`]) is a Chrome trace-event document:
+//! great in Perfetto, unreadable in a terminal. This module reduces it to
+//! the two tables a human actually asks for — per-phase wall-clock (one
+//! row per distinct `cat/name` span: count, total/mean/max duration) and
+//! the deterministic counter map — without losing the split the artifact
+//! is built around: span durations are wall-clock and noisy, counters
+//! are exact algorithm statistics.
+//!
+//! The summary is deterministic for the same artifact bytes (phases sort
+//! by `(cat, name)`, counters are already a sorted map), so its rendered
+//! output is itself diffable.
+
+use crate::bench::artifact::{self, ArtifactKind};
+use crate::util::json::Json;
+use anyhow::{Context, Result};
+use std::collections::BTreeMap;
+
+/// Aggregated wall-clock for one distinct span name.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PhaseSummary {
+    pub cat: String,
+    pub name: String,
+    /// Completed spans with this (cat, name).
+    pub count: usize,
+    pub total_us: u64,
+    pub max_us: u64,
+}
+
+impl PhaseSummary {
+    pub fn mean_us(&self) -> f64 {
+        self.total_us as f64 / self.count.max(1) as f64
+    }
+}
+
+/// The reduced view of one `psl-trace` document.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct TraceSummary {
+    /// Per-(cat, name) span aggregates, sorted by (cat, name).
+    pub phases: Vec<PhaseSummary>,
+    /// The deterministic counter map, verbatim.
+    pub counters: BTreeMap<String, u64>,
+    /// Threads that recorded at least one span.
+    pub threads: usize,
+}
+
+/// Reduce a validated `psl-trace` document. Rejects other kinds and
+/// newer schema versions through the registry's usual validation.
+pub fn summarize_doc(doc: &Json) -> Result<TraceSummary> {
+    artifact::expect_kind(doc, ArtifactKind::Trace)?;
+    let events = doc.get("traceEvents").as_arr().context("trace artifact missing traceEvents[]")?;
+    let mut phases: BTreeMap<(String, String), PhaseSummary> = BTreeMap::new();
+    let mut tids: std::collections::BTreeSet<u64> = std::collections::BTreeSet::new();
+    for (k, e) in events.iter().enumerate() {
+        // Only complete ("X") duration events aggregate; metadata ("M")
+        // events name threads and carry no duration.
+        if e.get("ph").as_str() != Some("X") {
+            continue;
+        }
+        let cat = e.get("cat").as_str().unwrap_or("?").to_string();
+        let name = e
+            .get("name")
+            .as_str()
+            .with_context(|| format!("traceEvents[{k}]: missing span name"))?
+            .to_string();
+        let dur = e
+            .get("dur")
+            .as_f64()
+            .with_context(|| format!("traceEvents[{k}]: missing/bad dur"))? as u64;
+        if let Some(tid) = e.get("tid").as_f64() {
+            tids.insert(tid as u64);
+        }
+        let entry = phases.entry((cat.clone(), name.clone())).or_insert(PhaseSummary {
+            cat,
+            name,
+            count: 0,
+            total_us: 0,
+            max_us: 0,
+        });
+        entry.count += 1;
+        entry.total_us += dur;
+        entry.max_us = entry.max_us.max(dur);
+    }
+    let mut counters = BTreeMap::new();
+    if let Json::Obj(m) = doc.get("counters") {
+        for (k, v) in m {
+            let n = v.as_f64().with_context(|| format!("counter {k:?}: not a number"))?;
+            counters.insert(k.clone(), n as u64);
+        }
+    }
+    Ok(TraceSummary { phases: phases.into_values().collect(), counters, threads: tids.len() })
+}
+
+/// [`summarize_doc`] from a path, through the registry loader.
+pub fn summarize_file(path: &str) -> Result<TraceSummary> {
+    let doc = artifact::load_expecting(path, ArtifactKind::Trace)?;
+    summarize_doc(&doc)
+}
+
+/// Render the summary as the two aligned tables `psl analyze --trace`
+/// prints.
+pub fn render(s: &TraceSummary) -> String {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "phases ({} distinct, {} thread{}):\n",
+        s.phases.len(),
+        s.threads,
+        if s.threads == 1 { "" } else { "s" }
+    ));
+    out.push_str(&format!(
+        "  {:<10} {:<22} {:>7} {:>12} {:>12} {:>12}\n",
+        "cat", "name", "count", "total_ms", "mean_ms", "max_ms"
+    ));
+    for p in &s.phases {
+        out.push_str(&format!(
+            "  {:<10} {:<22} {:>7} {:>12.3} {:>12.3} {:>12.3}\n",
+            p.cat,
+            p.name,
+            p.count,
+            p.total_us as f64 / 1000.0,
+            p.mean_us() / 1000.0,
+            p.max_us as f64 / 1000.0
+        ));
+    }
+    out.push_str(&format!("counters ({}, deterministic):\n", s.counters.len()));
+    for (k, v) in &s.counters {
+        out.push_str(&format!("  {k:<28} {v}\n"));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::{counter_add, span, trace_to_json, Recording};
+
+    fn capture() -> Json {
+        let rec = Recording::start();
+        for k in 0..3u64 {
+            let mut sp = span("solver", "solver/admm");
+            sp.arg("k", k);
+        }
+        {
+            let _sp = span("fleet", "fleet/decide");
+        }
+        counter_add("admm.iters", 12);
+        counter_add("exact.nodes", 400);
+        trace_to_json(&rec.finish())
+    }
+
+    #[test]
+    fn summarizes_phases_and_counters() {
+        let doc = capture();
+        let s = summarize_doc(&doc).unwrap();
+        assert_eq!(s.phases.len(), 2, "{:?}", s.phases);
+        // Sorted by (cat, name): fleet first.
+        assert_eq!(s.phases[0].name, "fleet/decide");
+        assert_eq!(s.phases[0].count, 1);
+        assert_eq!(s.phases[1].name, "solver/admm");
+        assert_eq!(s.phases[1].count, 3);
+        assert!(s.phases[1].total_us >= s.phases[1].max_us);
+        assert_eq!(s.counters.get("admm.iters"), Some(&12));
+        assert_eq!(s.counters.get("exact.nodes"), Some(&400));
+        assert_eq!(s.threads, 1);
+    }
+
+    #[test]
+    fn render_is_deterministic_and_names_everything() {
+        let doc = capture();
+        let s = summarize_doc(&doc).unwrap();
+        let text = render(&s);
+        assert_eq!(text, render(&summarize_doc(&doc).unwrap()));
+        assert!(text.contains("solver/admm"), "{text}");
+        assert!(text.contains("fleet/decide"), "{text}");
+        assert!(text.contains("admm.iters"), "{text}");
+        assert!(text.contains("deterministic"), "{text}");
+    }
+
+    #[test]
+    fn rejects_wrong_kinds() {
+        let sweep = artifact::envelope(ArtifactKind::Sweep, vec![("rows", Json::Arr(vec![]))]);
+        let err = summarize_doc(&sweep).unwrap_err().to_string();
+        assert!(err.contains("psl-sweep"), "{err}");
+    }
+}

@@ -30,11 +30,15 @@ use anyhow::{Context, Result};
 /// reports, the helper roster (live / down / id watermark) and
 /// helper-churn knobs in `psl-fleet-checkpoint`, the `helper_down_rate`
 /// axis in `psl-fleet-grid` rows, and the optional per-entry
-/// `helper_down_rate` in `psl-policy-table`.
+/// `helper_down_rate` in `psl-policy-table`; v6 added the observability
+/// surface — the `psl-trace` kind (Chrome trace-event spans + the
+/// deterministic counter map) and the deterministic solver-counter
+/// columns (`exact_nodes` / `exact_cutoffs` / `exact_max_depth` /
+/// `admm_iters`) in `psl-perf` rows.
 /// Readers accept anything ≤ the current version; kind-specific readers
 /// give a "re-generate with this build" error when a field their version
 /// needs is absent.
-pub const SCHEMA_VERSION: u32 = 5;
+pub const SCHEMA_VERSION: u32 = 6;
 
 /// Every artifact kind the repo persists under `target/psl-bench/`.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -58,10 +62,14 @@ pub enum ArtifactKind {
     /// `psl shard` — sharded hierarchical solve rows: per-shard makespans
     /// and methods plus the stitched global makespan and stitch gap.
     Shard,
+    /// `psl solve|fleet|shard|serve --trace` — a Chrome trace-event
+    /// capture ([`crate::obs`]): wall-clock spans (non-deterministic)
+    /// plus the deterministic counter map.
+    Trace,
 }
 
 impl ArtifactKind {
-    pub const ALL: [ArtifactKind; 7] = [
+    pub const ALL: [ArtifactKind; 8] = [
         ArtifactKind::Sweep,
         ArtifactKind::Fleet,
         ArtifactKind::FleetGrid,
@@ -69,6 +77,7 @@ impl ArtifactKind {
         ArtifactKind::PolicyTable,
         ArtifactKind::FleetCheckpoint,
         ArtifactKind::Shard,
+        ArtifactKind::Trace,
     ];
 
     /// The `kind` tag written into the document.
@@ -81,6 +90,7 @@ impl ArtifactKind {
             ArtifactKind::PolicyTable => "psl-policy-table",
             ArtifactKind::FleetCheckpoint => "psl-fleet-checkpoint",
             ArtifactKind::Shard => "psl-shard",
+            ArtifactKind::Trace => "psl-trace",
         }
     }
 

@@ -14,7 +14,15 @@
 //! Artifact schema (`kind: "psl-perf"`) is stable across PRs: one row per
 //! (cell, phase) with summary timing statistics plus the structural
 //! fields (`makespan_slots`, `total_runs`, `total_slots`) that make the
-//! O(runs)-vs-O(slots) memory story visible in the data.
+//! O(runs)-vs-O(slots) memory story visible in the data. Since schema v6
+//! each row also carries the deterministic solver counters of the cell's
+//! structural solve (`exact_nodes` / `exact_cutoffs` / `exact_max_depth`
+//! / `admm_iters`, captured via a [`crate::obs::Recording`]), so
+//! `psl analyze --perf-diff` can gate pruning efficiency alongside
+//! wall-clock. The exact counters are legitimately 0 on cells whose
+//! strategy never enters the exact search (it runs inside the sharded
+//! stitch on mega cells); because the capture holds the global recording
+//! lock, `psl perf` itself deliberately takes no `--trace` flag.
 
 use super::harness::time_fn;
 use crate::instance::profiles::Model;
@@ -122,6 +130,14 @@ pub struct PerfRow {
     pub makespan_slots: u32,
     pub total_runs: usize,
     pub total_slots: u64,
+    /// Deterministic solver counters of the cell's structural solve
+    /// (schema v6; identical across the cell's phases, like the
+    /// structural fields). Zero when the cell's strategy never enters
+    /// the corresponding search.
+    pub exact_nodes: u64,
+    pub exact_cutoffs: u64,
+    pub exact_max_depth: u64,
+    pub admm_iters: u64,
 }
 
 // ---------------------------------------------------------------------------
@@ -271,8 +287,13 @@ pub fn run(cfg: &PerfCfg) -> Vec<PerfRow> {
             let inst = ms.quantize(slot_ms);
 
             // Solve once for the structural fields + the timed schedule.
+            // The recording captures the deterministic solver counters of
+            // exactly this one solve (the timed repetitions below run
+            // outside it, so their counts never leak into the row).
+            let rec = crate::obs::Recording::start();
             let (schedule, _method) = strategy::solve(&inst, &AdmmCfg::default())
                 .expect("scenario generators guarantee a feasible instance");
+            let counters = rec.finish();
             let makespan = schedule.makespan(&inst);
             let total_runs = schedule.total_runs();
             let total_slots = schedule.total_slots();
@@ -310,6 +331,10 @@ pub fn run(cfg: &PerfCfg) -> Vec<PerfRow> {
                     makespan_slots: makespan,
                     total_runs,
                     total_slots,
+                    exact_nodes: counters.counter("exact.nodes"),
+                    exact_cutoffs: counters.counter("exact.cutoffs"),
+                    exact_max_depth: counters.counter("exact.max_depth"),
+                    admm_iters: counters.counter("admm.iters"),
                 });
             };
 
@@ -411,6 +436,10 @@ pub fn rows_to_json(rows: &[PerfRow]) -> Json {
                             ("makespan_slots", Json::Num(r.makespan_slots as f64)),
                             ("total_runs", Json::Num(r.total_runs as f64)),
                             ("total_slots", Json::Num(r.total_slots as f64)),
+                            ("exact_nodes", Json::Num(r.exact_nodes as f64)),
+                            ("exact_cutoffs", Json::Num(r.exact_cutoffs as f64)),
+                            ("exact_max_depth", Json::Num(r.exact_max_depth as f64)),
+                            ("admm_iters", Json::Num(r.admm_iters as f64)),
                         ])
                     })
                     .collect(),
@@ -440,10 +469,14 @@ mod tests {
             assert!(r.total_runs > 0);
             assert!(r.total_slots >= r.total_runs as u64, "a run covers ≥ 1 slot");
         }
+        // The smoke cells route through ADMM, so the solver-counter
+        // columns must be populated (and serialized).
+        assert!(rows.iter().any(|r| r.admm_iters > 0), "ADMM iteration counter missing");
         let doc = rows_to_json(&rows);
         assert_eq!(doc.get("kind").as_str(), Some("psl-perf"));
         let parsed = Json::parse(&doc.pretty()).unwrap();
         assert_eq!(parsed.get("rows").as_arr().unwrap().len(), 15);
+        assert!(parsed.get("rows").as_arr().unwrap()[0].get("admm_iters").as_f64().is_some());
     }
 
     #[test]
@@ -529,6 +562,10 @@ mod tests {
             makespan_slots: 10,
             total_runs: 8,
             total_slots: 40,
+            exact_nodes: 0,
+            exact_cutoffs: 0,
+            exact_max_depth: 0,
+            admm_iters: 3,
         }];
         assert!(validate(&rows).is_ok());
         rows[0].p50_s = f64::NAN;

@@ -14,8 +14,13 @@
 //!   psl perf [--smoke|--full]         solve/check/replay perf trajectory
 //!   psl shard <grid args>             sharded hierarchical solve grid
 //!   psl analyze <grid.json>           regime tables + policy frontier
-//!   psl analyze --perf-diff OLD NEW   perf trajectory gate
+//!   psl analyze --perf-diff OLD NEW   perf trajectory + counter gate
 //!   psl analyze --shard FILE          stitch-gap summary of a shard artifact
+//!   psl analyze --trace FILE          phase/counter summary of a trace capture
+//!
+//! `solve`, `fleet`, `shard` and `serve` accept `--trace FILE`: record
+//! spans + solver counters ([`crate::obs`]) and write a `psl-trace`
+//! Chrome trace-event artifact without changing any decision output.
 //!
 //! Common scenario args: --scenario 1..7  --model resnet101|vgg19  -j N
 //! -i N  --seed S  --slot-ms X. Run `psl help` for the full list.
@@ -135,11 +140,24 @@ COMMANDS
                 overtakes incremental repair) and save it as a
                 psl-policy-table artifact for `fleet --policy auto`.
                 With --perf-diff OLD NEW: compare two perf artifacts and
-                exit non-zero on solve/check/replay slowdowns. With
-                --rounds FILE: per-decision summary of a fleet
+                exit non-zero on solve/check/replay slowdowns or
+                solver-counter blowups (exact nodes, ADMM iterations).
+                With --rounds FILE: per-decision summary of a fleet
                 .rounds.jsonl sidecar. With --shard FILE: per-cell
                 stitch-gap / migration summary of a psl-shard artifact.
+                With --trace FILE: per-phase duration + counter summary
+                of a psl-trace capture.
   help          This text.
+
+TRACING (solve/fleet/shard/serve)
+  --trace FILE          record spans + solver counters while the command
+                        runs and write a psl-trace artifact (Chrome
+                        trace-event JSON; open in Perfetto or
+                        chrome://tracing). Decision artifacts stay
+                        byte-identical with or without it. `serve`
+                        prints the trace path on stderr to keep stdout
+                        pure. `perf` captures counters internally and
+                        takes no --trace.
 
 SCENARIO FLAGS (gen/solve/sweep-slots)
   --scenario NAME       scenario family (see below)    [default 1]
@@ -272,6 +290,8 @@ ANALYZE FLAGS
                         decision instead
   --shard FILE          summarize a psl-shard artifact (stitch gap,
                         migrations, shard spread) instead
+  --trace FILE          summarize a psl-trace artifact (per-phase span
+                        durations + deterministic counters) instead
 
 SOLVE FLAGS
   --method admm|greedy|baseline|exact|strategy|all     [default all]

@@ -33,10 +33,17 @@ where
     if n == 0 {
         return Vec::new();
     }
+    // Deterministic observability: invocation/job totals are independent
+    // of how many workers actually run (counted before the branch).
+    crate::obs::counter_add("pool.invocations", 1);
+    crate::obs::counter_add("pool.jobs", n as u64);
     let workers = if IN_POOL.with(|f| f.get()) { 1 } else { workers.max(1).min(n) };
     if workers == 1 {
         return jobs.into_iter().map(|f| f()).collect();
     }
+    // Workers inherit the spawning thread's recording enrollment, so
+    // spans/counters from pool jobs land in the active recording.
+    let token = crate::obs::current_token();
     let queue: Arc<Mutex<Vec<(usize, F)>>> = Arc::new(Mutex::new(jobs.into_iter().enumerate().collect()));
     let (tx, rx) = mpsc::channel::<(usize, T)>();
     let mut handles = Vec::new();
@@ -48,15 +55,27 @@ where
                 .name(format!("psl-pool-{w}"))
                 .spawn(move || {
                     IN_POOL.with(|f| f.set(true));
-                    loop {
-                        let job = queue.lock().unwrap().pop();
-                        match job {
-                            Some((idx, f)) => {
-                                let _ = tx.send((idx, f()));
+                    crate::obs::adopt_token(token);
+                    {
+                        // Worker-utilization span: lifetime of this worker
+                        // within the pool call, jobs-run annotated (the
+                        // which-worker-ran-what split is wall-clock detail
+                        // and deliberately stays out of the counter map).
+                        let mut span = crate::obs::span("exec", "pool/worker");
+                        let mut jobs_run = 0u64;
+                        loop {
+                            let job = queue.lock().unwrap().pop();
+                            match job {
+                                Some((idx, f)) => {
+                                    let _ = tx.send((idx, f()));
+                                    jobs_run += 1;
+                                }
+                                None => break,
                             }
-                            None => break,
                         }
+                        span.arg("jobs", jobs_run);
                     }
+                    crate::obs::flush_thread();
                 })
                 .expect("spawn pool worker"),
         );

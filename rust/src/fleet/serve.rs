@@ -117,7 +117,18 @@ pub fn serve<R: BufRead, W: Write>(
                 "helper events need a world that models helper dynamics — restart serve \
                  with a helper knob (--max-helpers, --helper-down-rate, ...)"
             );
+            // The serve-side latency measurement (ROADMAP: measured
+            // per-event decision latency): wall-clock around the step,
+            // logged at debug level and recorded on the round's trace
+            // span. Diagnostics only — the report line is untouched.
+            let t0 = std::time::Instant::now();
+            let mut sp = crate::obs::span("serve", "serve/round");
             let report = session.step(&ev);
+            let us = t0.elapsed().as_micros() as u64;
+            sp.arg("round", report.round as u64);
+            sp.arg("latency_us", us);
+            drop(sp);
+            crate::log_debug!("round {} stepped in {} us", report.round, us);
             summary.rounds += 1;
             Ok(LineOut::Report(report.jsonl_line()))
         })();

@@ -280,19 +280,23 @@ impl FleetSession {
              dynamics (external inputs are validated upstream by `psl serve`)",
             ev.round
         );
-        // Helper events first: the roster they leave behind is the helper
-        // set this round schedules on.
-        self.helpers.apply(ev);
-        // Evict departures before minting arrivals: ids are never reused,
-        // so the cache tracks the live roster exactly and a long run
-        // holds O(max_clients) state.
-        for id in &ev.departures {
-            self.minted.remove(id);
+        {
+            let _sp = crate::obs::span("fleet", "fleet/events-apply");
+            // Helper events first: the roster they leave behind is the
+            // helper set this round schedules on.
+            self.helpers.apply(ev);
+            // Evict departures before minting arrivals: ids are never
+            // reused, so the cache tracks the live roster exactly and a
+            // long run holds O(max_clients) state.
+            for id in &ev.departures {
+                self.minted.remove(id);
+            }
+            let world = &self.world;
+            for &id in &ev.roster {
+                self.minted.entry(id).or_insert_with(|| world.mint_client(id));
+            }
         }
         let world = &self.world;
-        for &id in &ev.roster {
-            self.minted.entry(id).or_insert_with(|| world.mint_client(id));
-        }
         debug_assert_eq!(self.minted.len(), ev.roster.len(), "minted cache out of sync with roster");
 
         let cfg = &self.cfg;
@@ -302,14 +306,18 @@ impl FleetSession {
         let last_full_gap = self.last_full_gap;
         let roster: Vec<&FleetClient> = ev.roster.iter().map(|id| &self.minted[id]).collect();
         let live_ids: Vec<u64> = self.helpers.live.clone();
-        let ms = if world.helper_modeled() {
-            let live: Vec<FleetHelper> =
-                live_ids.iter().map(|&id| world.mint_helper(id)).collect();
-            world.instance_on(&roster, &live)
-        } else {
-            world.instance(&roster)
+        let (ms, inst) = {
+            let _sp = crate::obs::span("fleet", "fleet/instance-build");
+            let ms = if world.helper_modeled() {
+                let live: Vec<FleetHelper> =
+                    live_ids.iter().map(|&id| world.mint_helper(id)).collect();
+                world.instance_on(&roster, &live)
+            } else {
+                world.instance(&roster)
+            };
+            let inst = ms.quantize(slot_ms);
+            (ms, inst)
         };
-        let inst = ms.quantize(slot_ms);
         // Translate the warm state (client id → helper id) into positions
         // on this round's live helper list. Clients whose helper is in an
         // outage drop out — they are the orphans the repair re-places on
@@ -383,6 +391,7 @@ impl FleetSession {
             ((s, Some(m)), w)
         };
 
+        let decide_span = crate::obs::span("fleet", "fleet/decide");
         let (decision, schedule, repair_moves, placed, migrations, work) = if roster.is_empty() {
             (Decision::Empty, None, 0, 0, 0, 0u64)
         } else if ev.round == 0 || cfg.policy == Policy::FullEveryRound {
@@ -450,6 +459,7 @@ impl FleetSession {
                 }
             }
         };
+        drop(decide_span);
         // Orphans lose their in-flight forward/backward batch when their
         // helper drops: the retry is re-enqueued and charged to this
         // round's work proxy (one forward + one backward edge evaluation
@@ -464,11 +474,15 @@ impl FleetSession {
         let (makespan_slots, preemptions, period_ms, method) = match &schedule {
             Some((s, m)) => {
                 debug_assert!(s.is_feasible(&inst), "round {} schedule infeasible", ev.round);
+                let _sp = crate::obs::span("fleet", "fleet/replay-epoch");
                 let e = replay_epoch(&ms, s, cfg.epoch_batches.max(1));
                 (s.makespan(&inst), s.preemptions(), e.period_ms, m.map(|m| m.name()))
             }
             None => (0, 0, 0.0, None),
         };
+        crate::obs::counter_add("fleet.rounds", 1);
+        crate::obs::counter_add("fleet.repair_moves", repair_moves as u64);
+        crate::obs::counter_add("fleet.migrations", migrations as u64);
 
         let round_report = RoundReport {
             round: ev.round,

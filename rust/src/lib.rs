@@ -86,6 +86,22 @@
 //! against the dense baseline and writes the repo's perf trajectory to
 //! `target/psl-bench/perf.json`.
 //!
+//! ## Observability
+//!
+//! [`obs`] is the in-process tracing and metrics layer: RAII span guards
+//! measure the solver / shard / fleet / exec phases on per-thread
+//! buffers, and a counter registry records deterministic algorithm
+//! statistics (exact-solver nodes / cutoffs / depth, ADMM iterations and
+//! residuals, repair moves, shard migrations). Counters are commutative
+//! totals, so they are byte-identical across thread counts; spans are
+//! wall-clock and explicitly non-deterministic; neither is ever read by
+//! a decision path, so artifacts are byte-identical with tracing on or
+//! off. `--trace FILE` on `psl solve|fleet|shard|serve` emits the
+//! Chrome trace-event `psl-trace` artifact, `psl analyze --trace`
+//! summarizes it, and `psl perf` folds the solver counters into
+//! `psl-perf` rows so `analyze --perf-diff` gates pruning efficiency
+//! alongside wall-clock.
+//!
 //! ## Quickstart
 //!
 //! ```no_run
@@ -113,6 +129,7 @@ pub mod data;
 pub mod exec;
 pub mod fleet;
 pub mod instance;
+pub mod obs;
 pub mod runtime;
 pub mod shard;
 pub mod sim;

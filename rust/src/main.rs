@@ -45,13 +45,13 @@ fn dispatch(args: &Args) -> Result<()> {
         }
         "profiles" => cmd_profiles(),
         "gen" => cmd_gen(args),
-        "solve" => cmd_solve(args),
+        "solve" => with_trace(args, false, cmd_solve),
         "sweep-slots" => cmd_sweep(args),
         "sweep" => cmd_sweep_grid(args),
-        "fleet" => cmd_fleet(args),
-        "serve" => cmd_serve(args),
+        "fleet" => with_trace(args, false, cmd_fleet),
+        "serve" => with_trace(args, true, cmd_serve),
         "perf" => cmd_perf(args),
-        "shard" => cmd_shard(args),
+        "shard" => with_trace(args, false, cmd_shard),
         "analyze" => cmd_analyze(args),
         "train" => cmd_train(args),
         other => anyhow::bail!("unknown command {other:?}; see `psl help`"),
@@ -204,6 +204,39 @@ fn cmd_sweep_diff(args: &Args, old_path: &str) -> Result<()> {
     } else {
         anyhow::bail!("{} cell(s) regressed beyond {:.1}% tolerance", report.regressions.len(), tol * 100.0)
     }
+}
+
+/// `--trace FILE` (solve/fleet/shard/serve): run the command inside a
+/// process-wide [`Recording`](psl::obs::Recording) and write the capture
+/// as a `psl-trace` artifact afterwards. Instrumentation never feeds
+/// back into decisions, so every other artifact the command writes is
+/// byte-identical with or without it (CI diffs a traced fleet run
+/// against an untraced one). `to_stderr` routes the confirmation line to
+/// stderr for `serve`, whose stdout is a pure report stream. On error
+/// the capture is dropped (discarding it also releases the recording),
+/// so no partial trace file is left behind.
+fn with_trace(args: &Args, to_stderr: bool, run: fn(&Args) -> Result<()>) -> Result<()> {
+    let capture = args
+        .flags
+        .get("trace")
+        .map(|path| (path.clone(), psl::obs::Recording::start()));
+    run(args)?;
+    if let Some((path, rec)) = capture {
+        let data = rec.finish();
+        let written = psl::obs::write_trace(&path, &data)?;
+        let line = format!(
+            "trace -> {} ({} spans, {} counters)",
+            written.display(),
+            data.spans.len(),
+            data.counters.len()
+        );
+        if to_stderr {
+            eprintln!("{line}");
+        } else {
+            println!("{line}");
+        }
+    }
+    Ok(())
 }
 
 /// Parse an optional flag strictly: absent → default, present-but-
@@ -697,6 +730,13 @@ fn cmd_perf(args: &Args) -> Result<()> {
         !(args.bool_of("smoke") && args.bool_of("full")),
         "--smoke and --full are mutually exclusive"
     );
+    // perf captures solver counters through its own per-cell Recording
+    // (which holds the process-wide recording lock), so an outer --trace
+    // recording would deadlock; the counters land in the psl-perf rows.
+    anyhow::ensure!(
+        !args.flags.contains_key("trace"),
+        "psl perf records solver counters internally (see the psl-perf rows) and takes no --trace"
+    );
     let mut cfg = if args.bool_of("smoke") {
         perf::PerfCfg::smoke()
     } else if args.bool_of("full") {
@@ -886,7 +926,9 @@ fn cmd_shard(args: &Args) -> Result<()> {
 /// regime tables, compute the churn-rate policy frontier and save it as
 /// a `PolicyTable` artifact (`--out`, default `policy-table`);
 /// `--perf-diff OLD NEW` — gate two perf-trajectory points against each
-/// other (non-zero exit on solve/check/replay slowdowns beyond `--tol`).
+/// other (non-zero exit on solve/check/replay slowdowns or solver-counter
+/// blowups beyond `--tol`); `--rounds` / `--shard` / `--trace` — summary
+/// tables for the respective sidecar / artifact kinds.
 fn cmd_analyze(args: &Args) -> Result<()> {
     if let Some(old_path) = args.flags.get("perf-diff") {
         return cmd_perf_diff(args, old_path);
@@ -897,8 +939,11 @@ fn cmd_analyze(args: &Args) -> Result<()> {
     if let Some(path) = args.flags.get("shard") {
         return cmd_shard_summary(path);
     }
+    if let Some(path) = args.flags.get("trace") {
+        return cmd_trace_summary(path);
+    }
     let grid_path = args.positional.first().context(
-        "usage: psl analyze <fleet-grid.json> [--out NAME]\n       psl analyze --perf-diff <old.json> <new.json> [--tol X]\n       psl analyze --rounds <file.rounds.jsonl>\n       psl analyze --shard <shard.json>",
+        "usage: psl analyze <fleet-grid.json> [--out NAME]\n       psl analyze --perf-diff <old.json> <new.json> [--tol X]\n       psl analyze --rounds <file.rounds.jsonl>\n       psl analyze --shard <shard.json>\n       psl analyze --trace <trace.json>",
     )?;
     let doc = psl::bench::artifact::load_expecting(grid_path, psl::bench::ArtifactKind::FleetGrid)?;
     let rows = psl::analyze::rows_from_doc(&doc)?;
@@ -998,10 +1043,25 @@ fn cmd_shard_summary(path: &str) -> Result<()> {
     Ok(())
 }
 
+/// `psl analyze --trace <trace.json>`: reduce a `psl-trace` capture to
+/// its per-phase duration table (wall-clock, non-deterministic) and its
+/// deterministic counter table.
+fn cmd_trace_summary(path: &str) -> Result<()> {
+    let s = psl::analyze::summarize_file(path)?;
+    anyhow::ensure!(
+        !s.phases.is_empty() || !s.counters.is_empty(),
+        "{path} recorded no spans or counters"
+    );
+    println!("trace: {path}");
+    print!("{}", psl::analyze::trace::render(&s));
+    Ok(())
+}
+
 /// `psl analyze --perf-diff <old.json> <new.json>`: cell-by-cell timing
 /// comparison of two perf artifacts; non-zero exit when a gated phase
 /// (solve/check/replay) slowed beyond `--tol` (relative, default 25% —
-/// timings are noisier than makespans).
+/// timings are noisier than makespans) or a deterministic solver counter
+/// (exact nodes, ADMM iterations) blew past the same tolerance.
 fn cmd_perf_diff(args: &Args, old_path: &str) -> Result<()> {
     let new_path = args
         .positional
@@ -1039,13 +1099,17 @@ fn cmd_perf_diff(args: &Args, old_path: &str) -> Result<()> {
             psl::bench::fmt_s(r.new_s)
         );
     }
-    if report.regressions.is_empty() {
+    for r in &report.counter_regressions {
+        println!("  COUNTER REGRESSION {} {}: {} -> {}", r.cell, r.counter, r.old, r.new);
+    }
+    if report.clean() {
         println!("no regressions");
         Ok(())
     } else {
         anyhow::bail!(
-            "{} perf cell(s) regressed beyond {:.0}% tolerance",
+            "{} timing / {} counter regression(s) beyond {:.0}% tolerance",
             report.regressions.len(),
+            report.counter_regressions.len(),
             tol * 100.0
         )
     }

@@ -1,0 +1,60 @@
+//! # obs — in-process tracing & counter subsystem
+//!
+//! Zero-dependency, thread-aware observability for the solver, shard,
+//! fleet and exec layers. Two kinds of signal flow through one
+//! [`Recording`]:
+//!
+//! * **Spans** — RAII guards ([`span`] / the [`obs_span!`](crate::obs_span)
+//!   macro) that measure wall-clock phase durations on per-thread buffers,
+//!   merged deterministically (sorted by start time, thread, name) at
+//!   flush. Durations are **non-deterministic** by nature and are never
+//!   read by any decision path.
+//! * **Counters** — deterministic algorithm statistics ([`counter_add`] /
+//!   [`counter_max`]): exact-solver nodes expanded / cutoffs / max depth,
+//!   ADMM iterations and residuals, repair moves, shard cells and
+//!   migrations, pool invocations. Counter updates are commutative
+//!   (sums and maxes of per-phase totals), so the final counter map is
+//!   **byte-identical across thread counts** — pinned by
+//!   `tests/obs_equiv.rs`.
+//!
+//! ## The determinism contract
+//!
+//! Instrumentation is strictly *read-only* with respect to scheduling:
+//! no solver, shard, fleet or serve decision ever reads a span or a
+//! counter, so every decision-bearing artifact (`psl-sweep`, `psl-fleet`,
+//! `psl-shard`, checkpoints, rounds JSONL) is byte-identical with tracing
+//! on or off. CI diffs a traced `psl fleet` run against an untraced one
+//! to hold the line.
+//!
+//! ## Recording model
+//!
+//! [`Recording::start`] claims a process-wide exclusive recording (a
+//! second concurrent `start` blocks — recordings serialize), enrolls the
+//! calling thread, and clears the sink. Worker threads join a recording
+//! by adopting the spawner's token ([`current_token`] /
+//! [`adopt_token`] — [`crate::exec::pool`] does this automatically), so
+//! spans and counters from pool workers land in the active recording
+//! while unrelated threads (e.g. parallel test threads) stay invisible.
+//! [`Recording::finish`] returns the merged [`TraceData`].
+//!
+//! ## Export
+//!
+//! [`write_trace`] serializes a [`TraceData`] as a Chrome trace-event
+//! JSON document (the `psl-trace` artifact kind, schema-versioned via
+//! [`crate::bench::artifact`]) loadable in `chrome://tracing` or
+//! Perfetto. `psl solve|fleet|shard|serve --trace FILE` emit it;
+//! `psl analyze --trace FILE` renders per-phase duration and counter
+//! summary tables ([`crate::analyze::trace`]).
+//!
+//! The logger ([`crate::util::logger`]) shares this module's relative
+//! clock ([`epoch`]), so stderr log timestamps and span `ts` values are
+//! directly comparable.
+
+mod recorder;
+pub mod trace;
+
+pub use recorder::{
+    adopt_token, counter_add, counter_max, current_token, enabled, epoch, flush_thread, now_us,
+    span, Recording, Span, SpanRec, TraceData,
+};
+pub use trace::{trace_to_json, write_trace};

@@ -1,0 +1,396 @@
+//! The span + counter recorder behind [`crate::obs`].
+//!
+//! One global sink, one active recording at a time (recordings hold an
+//! exclusivity lock and therefore serialize — `cargo test`'s parallel
+//! test threads cannot pollute each other's counters). Threads
+//! participate only when enrolled: the recording's starter is enrolled
+//! automatically, pool workers adopt the spawner's token, and everything
+//! else no-ops at the price of one thread-local read.
+
+use std::cell::{Cell, RefCell};
+use std::collections::{BTreeMap, BTreeSet};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Mutex, MutexGuard, OnceLock};
+use std::time::Instant;
+
+/// The process-wide relative-clock epoch shared by trace spans and the
+/// stderr logger, so log-line timestamps and span `ts` values line up.
+pub fn epoch() -> Instant {
+    static EPOCH: OnceLock<Instant> = OnceLock::new();
+    *EPOCH.get_or_init(Instant::now)
+}
+
+/// Microseconds since [`epoch`].
+pub fn now_us() -> u64 {
+    epoch().elapsed().as_micros() as u64
+}
+
+/// Per-thread span buffer capacity before an automatic flush to the sink.
+const BUF_FLUSH: usize = 256;
+
+/// One finished span, as merged into [`TraceData`].
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct SpanRec {
+    /// Category (the subsystem: "solver", "shard", "fleet", "exec", …).
+    pub cat: &'static str,
+    /// Phase name ("fleet/decide", "admm/solve-fwd", …).
+    pub name: &'static str,
+    /// Recorder-assigned thread id (0 = first thread that ever recorded).
+    pub tid: u64,
+    /// Start, µs since [`epoch`].
+    pub start_us: u64,
+    /// Duration, µs (wall-clock — non-deterministic).
+    pub dur_us: u64,
+    /// Optional integer annotations (e.g. serve round latency).
+    pub args: Vec<(&'static str, u64)>,
+}
+
+/// Everything one [`Recording`] captured.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct TraceData {
+    /// Spans from every enrolled thread, sorted by (start, tid, name).
+    pub spans: Vec<SpanRec>,
+    /// Deterministic counters (sums / maxes of per-phase totals).
+    pub counters: BTreeMap<&'static str, u64>,
+    /// `(tid, thread name)` for every tid appearing in `spans`.
+    pub threads: Vec<(u64, String)>,
+}
+
+impl TraceData {
+    /// A counter's value, 0 when it was never touched.
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters.get(name).copied().unwrap_or(0)
+    }
+}
+
+struct Sink {
+    spans: Vec<SpanRec>,
+    counters: BTreeMap<&'static str, u64>,
+}
+
+static SINK: Mutex<Sink> = Mutex::new(Sink { spans: Vec::new(), counters: BTreeMap::new() });
+/// Serializes recordings process-wide; held for a [`Recording`]'s lifetime.
+static EXCLUSIVE: Mutex<()> = Mutex::new(());
+/// Id of the active recording (0 = none).
+static ACTIVE: AtomicU64 = AtomicU64::new(0);
+static NEXT_RECORDING: AtomicU64 = AtomicU64::new(1);
+static NEXT_TID: AtomicU64 = AtomicU64::new(0);
+static THREAD_NAMES: Mutex<BTreeMap<u64, String>> = Mutex::new(BTreeMap::new());
+
+thread_local! {
+    /// The recording id this thread is enrolled in (0 = none).
+    static ENROLLED: Cell<u64> = Cell::new(0);
+    /// Recorder-assigned thread id (lazy; `u64::MAX` = unassigned).
+    static TID: Cell<u64> = Cell::new(u64::MAX);
+    /// This thread's unflushed spans.
+    static BUF: RefCell<Vec<SpanRec>> = RefCell::new(Vec::new());
+}
+
+/// Lock a recorder mutex, surviving poison (a panicking instrumented
+/// thread must not take observability down with it).
+fn lock<T>(m: &'static Mutex<T>) -> MutexGuard<'static, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn thread_tid() -> u64 {
+    TID.with(|t| {
+        if t.get() == u64::MAX {
+            let id = NEXT_TID.fetch_add(1, Ordering::Relaxed);
+            t.set(id);
+            let name = std::thread::current().name().unwrap_or("thread").to_string();
+            lock(&THREAD_NAMES).insert(id, name);
+        }
+        t.get()
+    })
+}
+
+/// True when the calling thread is enrolled in the active recording —
+/// the fast path every instrumentation site checks first.
+pub fn enabled() -> bool {
+    let tok = ENROLLED.with(|e| e.get());
+    tok != 0 && tok == ACTIVE.load(Ordering::Relaxed)
+}
+
+/// The calling thread's enrollment token, for handing to spawned
+/// workers ([`adopt_token`]). 0 when not enrolled.
+pub fn current_token() -> u64 {
+    ENROLLED.with(|e| e.get())
+}
+
+/// Enroll the calling thread under a token captured on the spawning
+/// thread via [`current_token`]. Adopting 0 un-enrolls.
+pub fn adopt_token(token: u64) {
+    ENROLLED.with(|e| e.set(token));
+}
+
+/// Add to a deterministic counter. No-op unless enrolled in the active
+/// recording. Only commutative totals belong here (per-phase sums),
+/// never per-thread detail — that is what keeps the counter map
+/// thread-count invariant.
+pub fn counter_add(name: &'static str, delta: u64) {
+    if delta == 0 || !enabled() {
+        return;
+    }
+    *lock(&SINK).counters.entry(name).or_insert(0) += delta;
+}
+
+/// Raise a deterministic counter to at least `v` (max-merge — also
+/// commutative, hence thread-count invariant).
+pub fn counter_max(name: &'static str, v: u64) {
+    if v == 0 || !enabled() {
+        return;
+    }
+    let mut s = lock(&SINK);
+    let e = s.counters.entry(name).or_insert(0);
+    if v > *e {
+        *e = v;
+    }
+}
+
+/// An in-flight RAII span. Created by [`span`]; records on drop. A span
+/// created outside an active recording is inert (token 0).
+pub struct Span {
+    token: u64,
+    cat: &'static str,
+    name: &'static str,
+    start_us: u64,
+    args: Vec<(&'static str, u64)>,
+}
+
+/// Open a span; it records its duration when dropped.
+pub fn span(cat: &'static str, name: &'static str) -> Span {
+    let token = if enabled() { ENROLLED.with(|e| e.get()) } else { 0 };
+    Span {
+        token,
+        cat,
+        name,
+        start_us: if token != 0 { now_us() } else { 0 },
+        args: Vec::new(),
+    }
+}
+
+impl Span {
+    /// Attach an integer annotation (shown in the trace viewer's args
+    /// panel). No-op on inert spans.
+    pub fn arg(&mut self, key: &'static str, value: u64) {
+        if self.token != 0 {
+            self.args.push((key, value));
+        }
+    }
+}
+
+impl Drop for Span {
+    fn drop(&mut self) {
+        // Re-check at drop: if the recording finished while this span was
+        // open, the record must not leak into the next recording's sink.
+        if self.token == 0 || self.token != ACTIVE.load(Ordering::Relaxed) {
+            return;
+        }
+        let rec = SpanRec {
+            cat: self.cat,
+            name: self.name,
+            tid: thread_tid(),
+            start_us: self.start_us,
+            dur_us: now_us().saturating_sub(self.start_us),
+            args: std::mem::take(&mut self.args),
+        };
+        BUF.with(|b| {
+            let mut buf = b.borrow_mut();
+            buf.push(rec);
+            if buf.len() >= BUF_FLUSH {
+                flush_buf(&mut buf);
+            }
+        });
+    }
+}
+
+fn flush_buf(buf: &mut Vec<SpanRec>) {
+    if buf.is_empty() {
+        return;
+    }
+    if enabled() {
+        lock(&SINK).spans.append(buf);
+    } else {
+        // Stale spans from a recording that already finished: discard.
+        buf.clear();
+    }
+}
+
+/// Flush the calling thread's span buffer into the sink. Pool workers
+/// call this before exiting; the recording's own thread is flushed by
+/// [`Recording::finish`].
+pub fn flush_thread() {
+    BUF.with(|b| flush_buf(&mut b.borrow_mut()));
+}
+
+/// An exclusive, process-wide recording session. Dropping without
+/// [`finish`](Recording::finish) discards the data and releases the
+/// exclusivity lock.
+pub struct Recording {
+    guard: Option<MutexGuard<'static, ()>>,
+}
+
+impl Recording {
+    /// Start recording: blocks until any other recording finishes,
+    /// clears the sink, enrolls the calling thread.
+    pub fn start() -> Recording {
+        let guard = EXCLUSIVE.lock().unwrap_or_else(|e| e.into_inner());
+        let id = NEXT_RECORDING.fetch_add(1, Ordering::Relaxed);
+        {
+            let mut s = lock(&SINK);
+            s.spans.clear();
+            s.counters.clear();
+        }
+        BUF.with(|b| b.borrow_mut().clear());
+        ACTIVE.store(id, Ordering::SeqCst);
+        ENROLLED.with(|e| e.set(id));
+        Recording { guard: Some(guard) }
+    }
+
+    /// Stop recording and return the merged, deterministically ordered
+    /// capture.
+    pub fn finish(mut self) -> TraceData {
+        let data = finish_active();
+        self.guard = None; // releases the exclusivity lock; Drop no-ops
+        data
+    }
+}
+
+impl Drop for Recording {
+    fn drop(&mut self) {
+        if self.guard.is_some() {
+            let _ = finish_active();
+        }
+    }
+}
+
+fn finish_active() -> TraceData {
+    flush_thread();
+    ACTIVE.store(0, Ordering::SeqCst);
+    ENROLLED.with(|e| e.set(0));
+    let (mut spans, counters) = {
+        let mut s = lock(&SINK);
+        (std::mem::take(&mut s.spans), std::mem::take(&mut s.counters))
+    };
+    spans.sort_by(|a, b| (a.start_us, a.tid, a.name).cmp(&(b.start_us, b.tid, b.name)));
+    let names = lock(&THREAD_NAMES);
+    let threads = spans
+        .iter()
+        .map(|s| s.tid)
+        .collect::<BTreeSet<u64>>()
+        .into_iter()
+        .map(|tid| (tid, names.get(&tid).cloned().unwrap_or_else(|| format!("thread-{tid}"))))
+        .collect();
+    TraceData { spans, counters, threads }
+}
+
+/// RAII span guard: `let _s = obs_span!("fleet", "fleet/decide");`.
+/// Bind it to a named variable (not `_`) so it lives to scope end.
+#[macro_export]
+macro_rules! obs_span {
+    ($cat:expr, $name:expr) => {
+        $crate::obs::span($cat, $name)
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate_and_max_merge() {
+        let rec = Recording::start();
+        counter_add("t.sum", 3);
+        counter_add("t.sum", 4);
+        counter_max("t.max", 5);
+        counter_max("t.max", 2);
+        let data = rec.finish();
+        assert_eq!(data.counter("t.sum"), 7);
+        assert_eq!(data.counter("t.max"), 5);
+        assert_eq!(data.counter("t.absent"), 0);
+    }
+
+    #[test]
+    fn everything_is_inert_outside_a_recording() {
+        counter_add("t.noise", 99);
+        {
+            let _s = span("test", "t/noise");
+        }
+        let rec = Recording::start();
+        let data = rec.finish();
+        assert!(data.counters.is_empty(), "{:?}", data.counters);
+        assert!(data.spans.is_empty());
+    }
+
+    #[test]
+    fn spans_record_name_cat_and_order() {
+        let rec = Recording::start();
+        {
+            let mut s = span("test", "t/outer");
+            s.arg("k", 42);
+            let _inner = span("test", "t/inner");
+        }
+        let data = rec.finish();
+        assert_eq!(data.spans.len(), 2);
+        // Outer opened first → sorts first on start_us (ties break on name).
+        assert_eq!(data.spans[0].name, "t/outer");
+        assert_eq!(data.spans[0].cat, "test");
+        assert_eq!(data.spans[0].args, vec![("k", 42)]);
+        assert_eq!(data.spans[1].name, "t/inner");
+        assert_eq!(data.threads.len(), 1);
+    }
+
+    #[test]
+    fn unenrolled_threads_stay_invisible_enrolled_threads_count() {
+        let rec = Recording::start();
+        let token = current_token();
+        assert_ne!(token, 0);
+        // A thread that never adopts the token contributes nothing.
+        std::thread::spawn(|| {
+            counter_add("t.ghost", 1);
+            let _s = span("test", "t/ghost");
+        })
+        .join()
+        .unwrap();
+        // A thread that adopts the token contributes (and flushes).
+        std::thread::spawn(move || {
+            adopt_token(token);
+            counter_add("t.worker", 2);
+            {
+                let _s = span("test", "t/worker");
+            }
+            flush_thread();
+        })
+        .join()
+        .unwrap();
+        let data = rec.finish();
+        assert_eq!(data.counter("t.ghost"), 0);
+        assert_eq!(data.counter("t.worker"), 2);
+        assert!(data.spans.iter().all(|s| s.name != "t/ghost"));
+        assert_eq!(data.spans.iter().filter(|s| s.name == "t/worker").count(), 1);
+    }
+
+    #[test]
+    fn sequential_recordings_are_isolated() {
+        let rec = Recording::start();
+        counter_add("t.first", 1);
+        let first = rec.finish();
+        assert_eq!(first.counter("t.first"), 1);
+        let rec = Recording::start();
+        counter_add("t.second", 1);
+        let second = rec.finish();
+        assert_eq!(second.counter("t.first"), 0);
+        assert_eq!(second.counter("t.second"), 1);
+    }
+
+    #[test]
+    fn dropping_a_recording_discards_and_unlocks() {
+        {
+            let _rec = Recording::start();
+            counter_add("t.dropped", 1);
+        } // dropped without finish
+        let rec = Recording::start(); // would deadlock if the lock leaked
+        let data = rec.finish();
+        assert_eq!(data.counter("t.dropped"), 0);
+    }
+}

@@ -1,0 +1,126 @@
+//! Chrome trace-event export: [`TraceData`] → the `psl-trace` artifact.
+//!
+//! The document is the Chrome trace-event JSON "object format" — a
+//! top-level `traceEvents` array of complete (`"ph": "X"`) duration
+//! events plus `thread_name` metadata events — so it loads directly in
+//! `chrome://tracing` or <https://ui.perfetto.dev>. Both viewers ignore
+//! unknown top-level keys, which is where the artifact envelope (`kind`,
+//! `schema_version`) and the deterministic `counters` object live.
+//!
+//! Span `ts`/`dur` values are wall-clock microseconds since the process
+//! epoch and are **non-deterministic**; the `counters` object carries the
+//! deterministic algorithm statistics (see [`crate::obs`]'s determinism
+//! contract). The `note` field restates this split for human readers.
+
+use super::recorder::TraceData;
+use crate::bench::artifact::{self, ArtifactKind};
+use crate::util::json::Json;
+use anyhow::{Context, Result};
+
+/// Serialize a capture as a `psl-trace` artifact document.
+pub fn trace_to_json(data: &TraceData) -> Json {
+    let mut events: Vec<Json> = Vec::new();
+    for (tid, name) in &data.threads {
+        events.push(Json::obj(vec![
+            ("args", Json::obj(vec![("name", Json::Str(name.clone()))])),
+            ("name", Json::Str("thread_name".to_string())),
+            ("ph", Json::Str("M".to_string())),
+            ("pid", Json::Num(1.0)),
+            ("tid", Json::Num(*tid as f64)),
+        ]));
+    }
+    for s in &data.spans {
+        let mut pairs = vec![
+            ("cat", Json::Str(s.cat.to_string())),
+            ("dur", Json::Num(s.dur_us as f64)),
+            ("name", Json::Str(s.name.to_string())),
+            ("ph", Json::Str("X".to_string())),
+            ("pid", Json::Num(1.0)),
+            ("tid", Json::Num(s.tid as f64)),
+            ("ts", Json::Num(s.start_us as f64)),
+        ];
+        if !s.args.is_empty() {
+            pairs.push(("args", Json::obj(s.args.iter().map(|(k, v)| (*k, Json::Num(*v as f64))).collect())));
+        }
+        events.push(Json::obj(pairs));
+    }
+    let counters = Json::obj(data.counters.iter().map(|(k, v)| (*k, Json::Num(*v as f64))).collect());
+    artifact::envelope(
+        ArtifactKind::Trace,
+        vec![
+            ("counters", counters),
+            ("displayTimeUnit", Json::Str("ms".to_string())),
+            (
+                "note",
+                Json::Str(
+                    "traceEvents ts/dur are wall-clock microseconds (non-deterministic); \
+                     counters are deterministic algorithm statistics"
+                        .to_string(),
+                ),
+            ),
+            ("traceEvents", Json::Arr(events)),
+        ],
+    )
+}
+
+/// Write a capture as pretty-printed trace JSON at a user-chosen path
+/// (unlike the registry's `save`, `--trace FILE` takes a full path;
+/// parent directories are created). Returns the path written.
+pub fn write_trace(path: &str, data: &TraceData) -> Result<std::path::PathBuf> {
+    let doc = trace_to_json(data);
+    let p = std::path::Path::new(path);
+    if let Some(dir) = p.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir).with_context(|| format!("create {}", dir.display()))?;
+        }
+    }
+    std::fs::write(p, doc.pretty()).with_context(|| format!("write trace {path}"))?;
+    Ok(p.to_path_buf())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::{counter_add, span, Recording};
+
+    fn sample() -> TraceData {
+        let rec = Recording::start();
+        {
+            let mut s = span("test", "trace/sample");
+            s.arg("n", 7);
+        }
+        counter_add("trace.count", 3);
+        rec.finish()
+    }
+
+    #[test]
+    fn export_is_valid_trace_event_json() {
+        let data = sample();
+        let doc = trace_to_json(&data);
+        assert_eq!(artifact::validate(&doc).unwrap(), ArtifactKind::Trace);
+        let events = doc.get("traceEvents").as_arr().unwrap();
+        // One thread_name metadata event + one duration event.
+        assert_eq!(events.len(), 2);
+        assert_eq!(events[0].get("ph").as_str(), Some("M"));
+        let e = &events[1];
+        assert_eq!(e.get("ph").as_str(), Some("X"));
+        assert_eq!(e.get("name").as_str(), Some("trace/sample"));
+        assert_eq!(e.get("cat").as_str(), Some("test"));
+        assert_eq!(e.get("args").get("n").as_usize(), Some(7));
+        assert!(e.get("ts").as_f64().is_some() && e.get("dur").as_f64().is_some());
+        assert_eq!(doc.get("counters").get("trace.count").as_usize(), Some(3));
+        // Round-trips through the parser (what the CI smoke validates).
+        assert_eq!(Json::parse(&doc.pretty()).unwrap(), doc);
+    }
+
+    #[test]
+    fn write_trace_creates_parent_dirs_and_roundtrips() {
+        let data = sample();
+        let dir = std::env::temp_dir().join(format!("psl-trace-test-{}", std::process::id()));
+        let path = dir.join("nested").join("t.json");
+        let written = write_trace(path.to_str().unwrap(), &data).unwrap();
+        let doc = artifact::load_expecting(written.to_str().unwrap(), ArtifactKind::Trace).unwrap();
+        assert_eq!(doc, trace_to_json(&data));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -93,9 +93,21 @@ pub fn solve_ms(
     admm_cfg: &AdmmCfg,
     threads: usize,
 ) -> Option<ShardOutcome> {
-    let plan = partition::partition(ms, cfg);
-    let shards = solve::solve_shards(ms, slot_ms, admm_cfg, &plan, threads)?;
-    let (stitch, shards) = stitch::stitch_and_rebalance(ms, slot_ms, admm_cfg, cfg, shards);
+    let plan = {
+        let _sp = crate::obs::span("shard", "shard/partition");
+        partition::partition(ms, cfg)
+    };
+    crate::obs::counter_add("shard.cells", plan.cells.len() as u64);
+    let shards = {
+        let mut sp = crate::obs::span("shard", "shard/solve-cells");
+        sp.arg("cells", plan.cells.len() as u64);
+        solve::solve_shards(ms, slot_ms, admm_cfg, &plan, threads)?
+    };
+    let (stitch, shards) = {
+        let _sp = crate::obs::span("shard", "shard/stitch");
+        stitch::stitch_and_rebalance(ms, slot_ms, admm_cfg, cfg, shards)
+    };
+    crate::obs::counter_add("shard.migrations", stitch.migrations as u64);
     Some(ShardOutcome { shards, stitch, monolithic_lb: monolithic_lb_ms(ms, slot_ms) })
 }
 

@@ -70,6 +70,8 @@ fn solve_prepared(
             completions: vec![],
         });
     }
+    let mut sp = crate::obs::span("shard", "shard/cell-solve");
+    sp.arg("clients", cell.clients.len() as u64);
     let sub = sub_ms.quantize(slot_ms);
     let s = strategy::signals(&sub);
     // One hierarchy level only: a cell that is still above the shard

@@ -97,6 +97,10 @@ pub fn solve_fwd(inst: &Instance, cfg: &AdmmCfg) -> Option<(Assignment, Vec<Slot
     let mut converged = false;
     let mut prev_obj: Option<u32> = None;
     let mut scratch = WScratch::default();
+    // ℓ1 dual residual Σ|n_ij − y_ij p_ij| accumulated across iterations
+    // (slot units are integral, so the u64 cast at report time is exact).
+    let mut residual_sum = 0.0f64;
+    let mut sp = crate::obs::span("solver", "admm/solve-fwd");
 
     for _tau in 0..cfg.max_iters {
         iters += 1;
@@ -116,6 +120,7 @@ pub fn solve_fwd(inst: &Instance, cfg: &AdmmCfg) -> Option<(Assignment, Vec<Slot
                 let n = if kappa[j] == i { inst.p[e] as f64 } else { 0.0 };
                 let target = if new_y[j] == Some(i) { inst.p[e] as f64 } else { 0.0 };
                 lambda[e] += n - target;
+                residual_sum += (n - target).abs();
             }
         }
 
@@ -129,6 +134,10 @@ pub fn solve_fwd(inst: &Instance, cfg: &AdmmCfg) -> Option<(Assignment, Vec<Slot
             break;
         }
     }
+    sp.arg("iters", iters as u64);
+    drop(sp);
+    crate::obs::counter_add("admm.iters", iters as u64);
+    crate::obs::counter_add("admm.residual", residual_sum as u64);
 
     // --- line 6: feasibility correction (19) — impose (6): κ := y* -----
     let final_assignment: Vec<usize> = (0..jn)
@@ -498,6 +507,7 @@ fn solve_y(inst: &Instance, cfg: &AdmmCfg, lambda: &[f64], kappa: &[usize]) -> O
     let mut free = inst.mem.clone();
     let mut cur = vec![usize::MAX; jn];
     bb.dfs(0, &mut free, &mut cur, 0.0);
+    crate::obs::counter_add("admm.y_nodes", bb.nodes as u64);
     Some(bb.best.into_iter().map(Some).collect())
 }
 

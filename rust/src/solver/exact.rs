@@ -91,6 +91,10 @@ pub fn helper_exact(
         nodes: usize,
         cap: usize,
         capped: bool,
+        /// Nodes pruned by the admissible bound (search statistics — the
+        /// DFS is deterministic, so these are too).
+        cutoffs: usize,
+        max_depth: usize,
     }
 
     #[derive(Clone)]
@@ -136,13 +140,15 @@ pub fn helper_exact(
             lb
         }
 
-        fn dfs(&mut self, s: &mut State) {
+        fn dfs(&mut self, s: &mut State, depth: usize) {
             self.nodes += 1;
+            self.max_depth = self.max_depth.max(depth);
             if self.nodes > self.cap {
                 self.capped = true;
                 return;
             }
             if self.lower_bound(s) >= self.best {
+                self.cutoffs += 1;
                 return;
             }
             let n = self.r.len();
@@ -183,7 +189,7 @@ pub fn helper_exact(
                 debug_assert!(next_event != u32::MAX, "deadlock in helper_exact");
                 let old_t = s.t;
                 s.t = next_event;
-                self.dfs(s);
+                self.dfs(s, depth + 1);
                 s.t = old_t;
                 return;
             }
@@ -211,7 +217,7 @@ pub fn helper_exact(
                         s.fin_f[k] = s.t;
                     }
                 }
-                self.dfs(s);
+                self.dfs(s, depth + 1);
                 // Undo.
                 s.log.truncate(log_len);
                 s.t = old_t;
@@ -253,6 +259,8 @@ pub fn helper_exact(
         nodes: 0,
         cap: node_cap,
         capped: false,
+        cutoffs: 0,
+        max_depth: 0,
     };
     let mut state = State {
         t: 0,
@@ -262,7 +270,12 @@ pub fn helper_exact(
         done_max: 0,
         log: Vec::new(),
     };
-    search.dfs(&mut state);
+    search.dfs(&mut state, 0);
+    // Search statistics (deterministic: the DFS order and bounds depend
+    // only on the instance, never on wall clock).
+    crate::obs::counter_add("exact.nodes", search.nodes as u64);
+    crate::obs::counter_add("exact.cutoffs", search.cutoffs as u64);
+    crate::obs::counter_max("exact.max_depth", search.max_depth as u64);
     let best = search.best.min(inc_cost);
     (best, search.best_f, search.best_b, !search.capped)
 }
@@ -389,6 +402,7 @@ pub fn solve(inst: &Instance, cfg: &ExactCfg) -> ExactResult {
         best_assignment: Option<Assignment>,
         nodes: usize,
         capped: bool,
+        cutoffs: usize,
         start: Instant,
     }
     impl<'a> Outer<'a> {
@@ -412,6 +426,7 @@ pub fn solve(inst: &Instance, cfg: &ExactCfg) -> ExactResult {
                 lb = lb.max(client_lb(self.inst, j, &allowed));
             }
             if lb >= self.best {
+                self.cutoffs += 1;
                 return;
             }
             if k == self.order.len() {
@@ -458,12 +473,22 @@ pub fn solve(inst: &Instance, cfg: &ExactCfg) -> ExactResult {
         best_assignment: best_assignment.clone(),
         nodes: 0,
         capped: false,
+        cutoffs: 0,
         start,
     };
     let mut helper_of = vec![0usize; jn];
     let mut per_helper = vec![Vec::new(); in_];
     let mut free = inst.mem.clone();
-    outer.dfs(0, &mut helper_of, &mut per_helper, &mut free);
+    {
+        let mut sp = crate::obs::span("solver", "exact/outer-dfs");
+        outer.dfs(0, &mut helper_of, &mut per_helper, &mut free);
+        sp.arg("nodes", outer.nodes as u64);
+    }
+    // Outer assignment-search statistics. Depth is bounded by the client
+    // count, so the outer contribution to exact.max_depth is the number
+    // of assigned clients on the deepest explored branch.
+    crate::obs::counter_add("exact.nodes", outer.nodes as u64);
+    crate::obs::counter_add("exact.cutoffs", outer.cutoffs as u64);
 
     let assignment = outer.best_assignment.expect("at least the incumbent exists");
     let (schedule, makespan, leaf_proven) = schedule_given_assignment(inst, &assignment, cfg.helper_node_cap);

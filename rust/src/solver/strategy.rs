@@ -188,6 +188,7 @@ pub fn solve(inst: &Instance, admm_cfg: &AdmmCfg) -> Option<(Schedule, Method)> 
 pub fn solve_with_signals(inst: &Instance, admm_cfg: &AdmmCfg, s: &Signals) -> Option<(Schedule, Method)> {
     match pick_from_signals(s) {
         Method::Sharded => {
+            let _sp = crate::obs::span("solver", "solver/sharded");
             let out = crate::shard::solve_quantized(
                 inst,
                 &crate::shard::ShardCfg::default(),
@@ -206,8 +207,12 @@ pub fn solve_with_signals(inst: &Instance, admm_cfg: &AdmmCfg, s: &Signals) -> O
 pub fn solve_flat(inst: &Instance, admm_cfg: &AdmmCfg, s: &Signals) -> Option<(Schedule, Method)> {
     match pick_flat(s) {
         Method::Sharded => unreachable!("pick_flat never picks Sharded"),
-        Method::BalancedGreedy => greedy::solve(inst).map(|s| (s, Method::BalancedGreedy)),
+        Method::BalancedGreedy => {
+            let _sp = crate::obs::span("solver", "solver/greedy");
+            greedy::solve(inst).map(|s| (s, Method::BalancedGreedy))
+        }
         Method::Admm => {
+            let _sp = crate::obs::span("solver", "solver/admm");
             let a = admm::solve(inst, admm_cfg)?;
             // Defensive: if greedy happens to beat ADMM here, take it —
             // the strategy is free to keep the better of its two tools.

@@ -1,12 +1,15 @@
-//! Leveled stderr logger with wall-clock-relative timestamps.
+//! Leveled stderr logger with timestamps on the shared relative clock.
 //!
 //! No `log`/`env_logger` wiring is needed for a binary this size; the
 //! coordinator and the SL runtime log through these macros. Level is
-//! controlled by `PSL_LOG` (error|warn|info|debug|trace), default `info`.
+//! controlled by `PSL_LOG` (`off|error|warn|info|debug|trace`, default
+//! `info`); an unknown value warns once on stderr (naming the bad value)
+//! and falls back to `info`. Timestamps are seconds since
+//! [`crate::obs::epoch`] — the same relative clock trace spans use, so a
+//! log line and a span covering the same work show the same time.
 
 use std::sync::atomic::{AtomicU8, Ordering};
-use std::sync::OnceLock;
-use std::time::Instant;
+use std::sync::Once;
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
 pub enum Level {
@@ -17,33 +20,66 @@ pub enum Level {
     Trace = 4,
 }
 
-static LEVEL: AtomicU8 = AtomicU8::new(u8::MAX);
-static START: OnceLock<Instant> = OnceLock::new();
+/// Encoded as a *threshold*: the count of enabled levels (0 = off,
+/// 1 = error only, …, 5 = trace). `u8::MAX` = not yet initialized.
+static THRESHOLD: AtomicU8 = AtomicU8::new(u8::MAX);
 
-fn level() -> u8 {
-    let cur = LEVEL.load(Ordering::Relaxed);
+const DEFAULT_THRESHOLD: u8 = Level::Info as u8 + 1;
+
+/// Parse a `PSL_LOG` value into a threshold (enabled-level count).
+/// `None` for unrecognized values — the caller decides the fallback.
+pub fn parse_threshold(s: &str) -> Option<u8> {
+    Some(match s.trim().to_ascii_lowercase().as_str() {
+        "off" | "none" => 0,
+        "error" => Level::Error as u8 + 1,
+        "warn" | "warning" => Level::Warn as u8 + 1,
+        "info" => Level::Info as u8 + 1,
+        "debug" => Level::Debug as u8 + 1,
+        "trace" => Level::Trace as u8 + 1,
+        _ => return None,
+    })
+}
+
+fn threshold() -> u8 {
+    let cur = THRESHOLD.load(Ordering::Relaxed);
     if cur != u8::MAX {
         return cur;
     }
-    let parsed = match std::env::var("PSL_LOG").unwrap_or_default().to_lowercase().as_str() {
-        "error" => 0,
-        "warn" => 1,
-        "debug" => 3,
-        "trace" => 4,
-        _ => 2,
+    let parsed = match std::env::var("PSL_LOG") {
+        Err(_) => DEFAULT_THRESHOLD,
+        Ok(v) if v.is_empty() => DEFAULT_THRESHOLD,
+        Ok(v) => match parse_threshold(&v) {
+            Some(t) => t,
+            None => {
+                // Warn exactly once, naming the value — a typo'd PSL_LOG
+                // must not silently read as `info`.
+                static WARN_ONCE: Once = Once::new();
+                WARN_ONCE.call_once(|| {
+                    eprintln!(
+                        "psl: unknown PSL_LOG value {v:?} (expected off|error|warn|info|debug|trace); using info"
+                    );
+                });
+                DEFAULT_THRESHOLD
+            }
+        },
     };
-    LEVEL.store(parsed, Ordering::Relaxed);
+    THRESHOLD.store(parsed, Ordering::Relaxed);
     parsed
 }
 
 /// Force the level programmatically (CLI `-v` flags).
 pub fn set_level(l: Level) {
-    LEVEL.store(l as u8, Ordering::Relaxed);
+    THRESHOLD.store(l as u8 + 1, Ordering::Relaxed);
+}
+
+/// Silence the logger entirely (the programmatic `off`).
+pub fn set_off() {
+    THRESHOLD.store(0, Ordering::Relaxed);
 }
 
 /// True if `l` is enabled.
 pub fn enabled(l: Level) -> bool {
-    (l as u8) <= level()
+    (l as u8) < threshold()
 }
 
 /// Log a preformatted line (used by the macros).
@@ -51,8 +87,8 @@ pub fn log_line(l: Level, target: &str, msg: std::fmt::Arguments<'_>) {
     if !enabled(l) {
         return;
     }
-    let start = START.get_or_init(Instant::now);
-    let t = start.elapsed().as_secs_f64();
+    // Shared timebase with the span recorder: one epoch for both.
+    let t = crate::obs::epoch().elapsed().as_secs_f64();
     let tag = match l {
         Level::Error => "ERROR",
         Level::Warn => "WARN ",
@@ -78,13 +114,41 @@ macro_rules! log_trace { ($($a:tt)*) => { $crate::util::logger::log_line($crate:
 mod tests {
     use super::*;
 
+    /// Serializes the tests that mutate the global threshold.
+    static LEVEL_LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
     #[test]
     fn level_ordering() {
+        let _g = LEVEL_LOCK.lock().unwrap_or_else(|e| e.into_inner());
         set_level(Level::Warn);
         assert!(enabled(Level::Error));
         assert!(enabled(Level::Warn));
         assert!(!enabled(Level::Info));
         set_level(Level::Trace);
         assert!(enabled(Level::Debug));
+        // Restore the default so parallel tests see stock behavior.
+        set_level(Level::Info);
+    }
+
+    #[test]
+    fn off_disables_everything() {
+        let _g = LEVEL_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        assert_eq!(parse_threshold("off"), Some(0));
+        assert_eq!(parse_threshold("OFF"), Some(0));
+        // Threshold 0 enables nothing, not even Error.
+        set_off();
+        assert!(!enabled(Level::Error));
+        set_level(Level::Info);
+    }
+
+    #[test]
+    fn parse_threshold_accepts_known_and_rejects_unknown() {
+        assert_eq!(parse_threshold("error"), Some(1));
+        assert_eq!(parse_threshold("warn"), Some(2));
+        assert_eq!(parse_threshold(" Info "), Some(3));
+        assert_eq!(parse_threshold("debug"), Some(4));
+        assert_eq!(parse_threshold("trace"), Some(5));
+        assert_eq!(parse_threshold("verbose"), None);
+        assert_eq!(parse_threshold("inf0"), None);
     }
 }

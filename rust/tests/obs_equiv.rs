@@ -1,0 +1,111 @@
+//! Observability determinism contract (`crate::obs`), pinned end to end:
+//!
+//! * the deterministic counter map is **byte-identical across worker
+//!   thread counts** (counters are commutative per-phase totals);
+//! * an active recording **never changes a decision** — fleet round
+//!   reports serialize to the same bytes with tracing on or off;
+//! * the `psl-trace` artifact round-trips through the schema-checked
+//!   registry loader and rejects documents from a newer schema;
+//! * the exact solver actually journals its search (nodes, cutoffs,
+//!   depth — the branch-and-bound statistics the perf gate diffs).
+
+use psl::bench::artifact::{self, ArtifactKind, SCHEMA_VERSION};
+use psl::instance::profiles::Model;
+use psl::instance::scenario::{Scenario, ScenarioCfg};
+use psl::obs::{trace_to_json, Recording};
+use psl::shard::{solve_quantized, ShardCfg};
+use psl::solver::exact::{self, ExactCfg};
+
+#[test]
+fn shard_counters_are_thread_count_invariant() {
+    let inst = ScenarioCfg::new(Scenario::S6MegaHomogeneous, Model::ResNet101, 96, 4, 11)
+        .generate()
+        .quantize(200.0);
+    let mut cfg = ShardCfg::default();
+    cfg.shard_clients = 24;
+    let capture = |threads: usize| {
+        let rec = Recording::start();
+        let outcome = solve_quantized(&inst, &cfg, threads).expect("shard solve");
+        (rec.finish(), outcome.shards.len(), outcome.stitch.migrations)
+    };
+    let (seq, seq_shards, seq_migrations) = capture(1);
+    let (par, par_shards, par_migrations) = capture(7);
+    assert_eq!(seq.counters, par.counters, "counter map must not depend on thread count");
+    assert_eq!((seq_shards, seq_migrations), (par_shards, par_migrations));
+    assert!(seq.counter("shard.cells") >= 2, "96 clients / 24 per cell: {:?}", seq.counters);
+    assert_eq!(seq.counter("shard.cells"), seq_shards as u64);
+    // The parallel run went through the pool; the sequential one did not.
+    assert_eq!(seq.counter("pool.invocations"), par.counter("pool.invocations"));
+    assert!(par.spans.iter().any(|s| s.name == "shard/cell-solve"), "per-cell spans recorded");
+}
+
+#[test]
+fn fleet_reports_are_byte_identical_with_and_without_recording() {
+    use psl::fleet::{ChurnCfg, FleetCfg, FleetSession, Policy};
+    let run = || {
+        let scen = ScenarioCfg::new(Scenario::parse("4").unwrap(), Model::ResNet101, 8, 2, 7);
+        let mut churn = ChurnCfg::stationary(8);
+        churn.rounds = 5;
+        let mut session = FleetSession::new(FleetCfg::new(scen, churn, Policy::parse("incremental").unwrap()));
+        let stream = session.event_stream();
+        stream.iter().map(|ev| session.step(ev).jsonl_line()).collect::<Vec<String>>()
+    };
+    let untraced = run();
+    let rec = Recording::start();
+    let traced = run();
+    let data = rec.finish();
+    assert_eq!(untraced, traced, "recording must not perturb any decision");
+    assert_eq!(data.counter("fleet.rounds"), 5);
+    assert!(data.spans.iter().any(|s| s.name == "fleet/decide"), "{:?}", data.spans.len());
+}
+
+#[test]
+fn trace_artifact_roundtrips_and_rejects_newer_schema() {
+    let rec = Recording::start();
+    {
+        let mut sp = psl::obs::span("test", "equiv/roundtrip");
+        sp.arg("n", 1);
+    }
+    psl::obs::counter_add("equiv.count", 2);
+    let data = rec.finish();
+    let dir = std::env::temp_dir().join(format!("psl-obs-equiv-{}", std::process::id()));
+    let path = dir.join("t.json");
+    let written = psl::obs::write_trace(path.to_str().unwrap(), &data).unwrap();
+    let doc = artifact::load_expecting(written.to_str().unwrap(), ArtifactKind::Trace).unwrap();
+    assert_eq!(doc, trace_to_json(&data));
+    assert_eq!(doc.get("counters").get("equiv.count").as_usize(), Some(2));
+    // A trace is not a perf artifact.
+    assert!(artifact::load_expecting(written.to_str().unwrap(), ArtifactKind::Perf).is_err());
+    // Same document claiming a future schema must be refused.
+    let future = doc
+        .pretty()
+        .replace(&format!("\"schema_version\": {SCHEMA_VERSION}"), "\"schema_version\": 999");
+    let err = artifact::validate(&psl::util::json::Json::parse(&future).unwrap())
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("newer"), "{err}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn exact_solver_records_search_counters() {
+    let inst = ScenarioCfg::new(Scenario::parse("2").unwrap(), Model::ResNet101, 6, 2, 42)
+        .generate()
+        .quantize(200.0);
+    let rec = Recording::start();
+    let result = exact::solve(&inst, &ExactCfg::default());
+    let data = rec.finish();
+    assert!(result.makespan >= result.lower_bound);
+    assert!(data.counter("exact.nodes") > 0, "{:?}", data.counters);
+    assert!(data.counter("exact.max_depth") >= 1, "{:?}", data.counters);
+    // The journal mirrors the search the result reports: the outer span
+    // carries the outer node count, and the counter total includes it.
+    let outer = data
+        .spans
+        .iter()
+        .find(|s| s.name == "exact/outer-dfs")
+        .expect("outer search span");
+    let outer_nodes = outer.args.iter().find(|(k, _)| *k == "nodes").map(|(_, v)| *v).unwrap();
+    assert_eq!(outer_nodes, result.nodes as u64);
+    assert!(data.counter("exact.nodes") >= outer_nodes);
+}
