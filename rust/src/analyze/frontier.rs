@@ -26,6 +26,11 @@ pub struct Frontier {
     /// (0.0 = static pool) — carried into the policy entry so the `auto`
     /// policy can pick the frontier matching a run's helper churn.
     pub helper_down_rate: f64,
+    /// Uplink pool capacity of the regime the frontier was measured in
+    /// (0.0 = dedicated transport) — carried into the policy entry so
+    /// the `auto` policy can pick the frontier matching a run's link
+    /// model.
+    pub uplink_capacity: f64,
     /// The *observed* per-round churn fraction at the lowest measured
     /// rate where `full` beats `incremental` on score — the same unit
     /// the orchestrator's per-round `churn_frac` signal uses, so the
@@ -63,6 +68,7 @@ pub fn frontier(table: &RegimeTable) -> Frontier {
         n_clients: table.n_clients,
         n_helpers: table.n_helpers,
         helper_down_rate: table.helper_down_rate,
+        uplink_capacity: table.uplink_capacity,
         crossover,
         rates_compared,
     }
@@ -90,6 +96,7 @@ pub fn compute_policy_table(frontiers: Vec<Frontier>, source: &str) -> PolicyTab
             n_helpers: f.n_helpers,
             frontier_churn: f.crossover,
             helper_down_rate: f.helper_down_rate,
+            uplink_capacity: f.uplink_capacity,
         })
         .collect();
     PolicyTable::new(source.to_string(), entries)
@@ -208,6 +215,30 @@ mod tests {
         assert!(t.entries[0].frontier_churn.is_some());
         assert_eq!(t.entries[1].helper_down_rate, 0.2);
         assert_eq!(t.entries[1].frontier_churn, None);
+    }
+
+    #[test]
+    fn transport_regimes_get_their_own_frontiers() {
+        // The same family under the dedicated transport and a shared
+        // uplink pool: contention makes incremental's degradation
+        // steeper, so the regimes can cross over differently — each
+        // entry carries its capacity axis.
+        let mut rows = vec![
+            row("scenario1", 0.1, "incremental", 1, 1000.0, 100),
+            row("scenario1", 0.1, "full", 1, 990.0, 900),
+        ];
+        for base in [
+            row("scenario1", 0.1, "incremental", 1, 1500.0, 100),
+            row("scenario1", 0.1, "full", 1, 990.0, 50),
+        ] {
+            rows.push(GridRow { uplink_capacity: 2.0, ..base });
+        }
+        let t = table_of(&rows, "transport");
+        assert_eq!(t.entries.len(), 2);
+        assert_eq!(t.entries[0].uplink_capacity, 0.0);
+        assert_eq!(t.entries[0].frontier_churn, None, "dedicated regime: incremental wins");
+        assert_eq!(t.entries[1].uplink_capacity, 2.0);
+        assert!(t.entries[1].frontier_churn.is_some(), "contended regime crosses over");
     }
 
     #[test]

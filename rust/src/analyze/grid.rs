@@ -24,6 +24,9 @@ pub struct GridRow {
     /// Effective per-round helper outage probability the cell ran (v5's
     /// helper-churn grid axis; 0.0 = a static helper pool).
     pub helper_down_rate: f64,
+    /// Shared-uplink pool capacity the cell ran (v7's transport grid
+    /// axis; 0.0 = the dedicated transport).
+    pub uplink_capacity: f64,
     pub policy: String,
     pub seed: String,
     pub rounds: usize,
@@ -94,6 +97,19 @@ pub fn rows_from_doc(doc: &Json) -> Result<Vec<GridRow>> {
             helper_down_rate.is_finite() && (0.0..=1.0).contains(&helper_down_rate),
             "row {k}: helper_down_rate {helper_down_rate} outside [0, 1]"
         );
+        // Absent = a pre-v7 artifact (no transport axis): say so.
+        let uplink_capacity = match r.get("uplink_capacity") {
+            Json::Null => anyhow::bail!(
+                "row {k}: no uplink_capacity — this fleet-grid artifact predates schema v{} \
+                 (re-run `psl fleet --grid` with this build)",
+                artifact::SCHEMA_VERSION
+            ),
+            v => v.as_f64().with_context(|| format!("row {k}: bad uplink_capacity {v}"))?,
+        };
+        anyhow::ensure!(
+            uplink_capacity.is_finite() && uplink_capacity >= 0.0,
+            "row {k}: uplink_capacity {uplink_capacity} must be finite and >= 0"
+        );
         let work = str_field("total_work_units")?;
         out.push(GridRow {
             scenario: str_field("scenario")?,
@@ -102,6 +118,7 @@ pub fn rows_from_doc(doc: &Json) -> Result<Vec<GridRow>> {
             n_helpers: count("n_helpers")?,
             churn_rate,
             helper_down_rate,
+            uplink_capacity,
             policy: str_field("policy")?,
             seed: str_field("seed")?,
             rounds: count("rounds")?,
@@ -147,6 +164,10 @@ pub struct RegimeTable {
     /// Helper outage rate shared by every cell in this table (the v5
     /// grouping axis — frontiers are measured per outage regime).
     pub helper_down_rate: f64,
+    /// Uplink pool capacity shared by every cell in this table (the v7
+    /// grouping axis; 0.0 = dedicated — frontiers are measured per
+    /// transport regime).
+    pub uplink_capacity: f64,
     pub cells: Vec<RegimeCell>,
 }
 
@@ -166,18 +187,25 @@ impl RegimeTable {
 }
 
 /// Collapse grid rows into regime tables: group by (scenario, J, I,
-/// helper outage rate), then average seeds within each (churn rate,
-/// policy) arm. Ordering is fully deterministic (BTreeMap on bit-exact
-/// rate keys), so the same artifact always yields the same tables.
+/// helper outage rate, uplink capacity), then average seeds within each
+/// (churn rate, policy) arm. Ordering is fully deterministic (BTreeMap
+/// on bit-exact rate keys), so the same artifact always yields the same
+/// tables.
 pub fn regime_tables(rows: &[GridRow]) -> Vec<RegimeTable> {
-    // Churn/outage rates come verbatim from one artifact, so bit-exact
-    // f64 keys group correctly (no arithmetic touches them between rows;
-    // they are non-negative, so bit order is value order).
-    let mut groups: BTreeMap<(String, usize, usize, u64), BTreeMap<(u64, String), Vec<&GridRow>>> =
+    // Churn/outage/capacity values come verbatim from one artifact, so
+    // bit-exact f64 keys group correctly (no arithmetic touches them
+    // between rows; they are non-negative, so bit order is value order).
+    let mut groups: BTreeMap<(String, usize, usize, u64, u64), BTreeMap<(u64, String), Vec<&GridRow>>> =
         BTreeMap::new();
     for r in rows {
         groups
-            .entry((r.scenario.clone(), r.n_clients, r.n_helpers, r.helper_down_rate.to_bits()))
+            .entry((
+                r.scenario.clone(),
+                r.n_clients,
+                r.n_helpers,
+                r.helper_down_rate.to_bits(),
+                r.uplink_capacity.to_bits(),
+            ))
             .or_default()
             .entry((r.churn_rate.to_bits(), r.policy.clone()))
             .or_default()
@@ -185,7 +213,7 @@ pub fn regime_tables(rows: &[GridRow]) -> Vec<RegimeTable> {
     }
     groups
         .into_iter()
-        .map(|((scenario, n_clients, n_helpers, helper_bits), arms)| {
+        .map(|((scenario, n_clients, n_helpers, helper_bits, cap_bits), arms)| {
             let cells = arms
                 .into_iter()
                 .map(|((churn_bits, policy), members)| {
@@ -209,6 +237,7 @@ pub fn regime_tables(rows: &[GridRow]) -> Vec<RegimeTable> {
                 n_clients,
                 n_helpers,
                 helper_down_rate: f64::from_bits(helper_bits),
+                uplink_capacity: f64::from_bits(cap_bits),
                 cells,
             }
         })
@@ -230,6 +259,7 @@ pub(crate) mod tests {
             n_helpers: 2,
             churn_rate: churn,
             helper_down_rate: 0.0,
+            uplink_capacity: 0.0,
             policy: policy.to_string(),
             seed: seed.to_string(),
             rounds: 8,
@@ -275,14 +305,17 @@ pub(crate) mod tests {
         let mut rows = vec![row("scenario1", 0.1, "full", 1, 900.0, 10), row("s4-straggler-tail", 0.1, "full", 1, 900.0, 10)];
         rows.push(GridRow { n_clients: 20, ..rows[0].clone() });
         rows.push(GridRow { helper_down_rate: 0.2, ..rows[0].clone() });
+        rows.push(GridRow { uplink_capacity: 2.0, ..rows[0].clone() });
         let tables = regime_tables(&rows);
-        assert_eq!(tables.len(), 4);
+        assert_eq!(tables.len(), 5);
         // BTreeMap order: s4 sorts after scenario1; sizes ascend within a
-        // family, helper outage rates ascend within a size.
-        assert_eq!((tables[0].n_clients, tables[0].helper_down_rate), (10, 0.0));
-        assert_eq!((tables[1].n_clients, tables[1].helper_down_rate), (10, 0.2));
-        assert_eq!(tables[2].n_clients, 20);
-        assert_eq!(tables[3].scenario, "s4-straggler-tail");
+        // family, helper outage rates ascend within a size, uplink
+        // capacities within an outage rate.
+        assert_eq!((tables[0].n_clients, tables[0].helper_down_rate, tables[0].uplink_capacity), (10, 0.0, 0.0));
+        assert_eq!((tables[1].n_clients, tables[1].helper_down_rate, tables[1].uplink_capacity), (10, 0.0, 2.0));
+        assert_eq!((tables[2].n_clients, tables[2].helper_down_rate), (10, 0.2));
+        assert_eq!(tables[3].n_clients, 20);
+        assert_eq!(tables[4].scenario, "s4-straggler-tail");
     }
 
     #[test]
@@ -304,6 +337,7 @@ pub(crate) mod tests {
             size: (4, 2),
             churn_rates: vec![0.2],
             helper_down_rates: vec![0.0],
+            uplink_capacities: vec![0.0],
             policies: vec![crate::fleet::Policy::Incremental],
             seeds: vec![3],
             rounds: 3,
@@ -406,6 +440,36 @@ pub(crate) mod tests {
         )]);
         let err = rows_from_doc(&doc).unwrap_err().to_string();
         assert!(err.contains("helper_down_rate"), "{err}");
+        assert!(err.contains("predates schema"), "{err}");
+    }
+
+    #[test]
+    fn pre_v7_artifact_gets_a_regenerate_error() {
+        // A v6 fleet-grid row (helper_down_rate present, no
+        // uplink_capacity) must name the missing transport axis.
+        let doc = crate::bench::artifact::envelope(ArtifactKind::FleetGrid, vec![(
+            "rows",
+            Json::Arr(vec![Json::obj(vec![
+                ("scenario", Json::Str("scenario1".into())),
+                ("model", Json::Str("resnet101".into())),
+                ("n_clients", Json::Num(10.0)),
+                ("n_helpers", Json::Num(2.0)),
+                ("churn_rate", Json::Num(0.1)),
+                ("helper_down_rate", Json::Num(0.0)),
+                ("policy", Json::Str("incremental".into())),
+                ("seed", Json::Str("1".into())),
+                ("rounds", Json::Num(8.0)),
+                ("full_rounds", Json::Num(1.0)),
+                ("repair_rounds", Json::Num(7.0)),
+                ("empty_rounds", Json::Num(0.0)),
+                ("mean_makespan_ms", Json::Num(1000.0)),
+                ("mean_period_ms", Json::Num(800.0)),
+                ("mean_churn_frac", Json::Num(0.2)),
+                ("total_work_units", Json::Str("100".into())),
+            ])]),
+        )]);
+        let err = rows_from_doc(&doc).unwrap_err().to_string();
+        assert!(err.contains("uplink_capacity"), "{err}");
         assert!(err.contains("predates schema"), "{err}");
     }
 

@@ -31,6 +31,13 @@ pub struct RoundRow {
     /// Whether part of the helper pool was down this round (false on
     /// pre-v5 lines).
     pub degraded: bool,
+    /// Shared-uplink contention signal (0.0 on dedicated-transport and
+    /// pre-v7 lines, which omit the key).
+    pub contention: f64,
+    /// Arrival-placement source of a kept repair (`"admm-y"` when the
+    /// ADMM warm start placed the arrivals; None on FCFS repairs,
+    /// non-repair rounds, and pre-v7 lines).
+    pub repair_source: Option<String>,
 }
 
 /// Parse a `.rounds.jsonl` stream (blank lines ignored). Errors name the
@@ -69,6 +76,10 @@ pub fn rows_from_jsonl(text: &str) -> Result<Vec<RoundRow>> {
             // bare stream has no schema envelope to version-gate on.
             orphaned_clients: doc.get("orphaned_clients").as_usize().unwrap_or(0),
             degraded: matches!(doc.get("degraded"), Json::Bool(true)),
+            // Absent on dedicated-transport (and pre-v7) lines: the
+            // producer emits these keys only when non-default.
+            contention: doc.get("contention").as_f64().unwrap_or(0.0),
+            repair_source: doc.get("repair_source").as_str().map(str::to_string),
         });
     }
     Ok(out)
@@ -87,6 +98,12 @@ pub struct DecisionSummary {
     pub degraded_rounds: usize,
     /// Total clients this decision re-homed after helper outages.
     pub orphaned_clients: usize,
+    /// Rounds of this decision whose kept repair placed arrivals with
+    /// the ADMM y-assignment warm start (`repair_source == "admm-y"`).
+    pub admm_y_repairs: usize,
+    /// Mean shared-uplink contention signal over this decision's rounds
+    /// (0.0 for dedicated-transport streams).
+    pub mean_contention: f64,
 }
 
 /// Collapse rows into per-decision summaries, in decision-name order
@@ -109,6 +126,11 @@ pub fn summarize(rows: &[RoundRow]) -> Vec<DecisionSummary> {
                 total_work_units: members.iter().map(|m| m.work_units).sum(),
                 degraded_rounds: members.iter().filter(|m| m.degraded).count(),
                 orphaned_clients: members.iter().map(|m| m.orphaned_clients).sum(),
+                admm_y_repairs: members
+                    .iter()
+                    .filter(|m| m.repair_source.as_deref() == Some("admm-y"))
+                    .count(),
+                mean_contention: members.iter().map(|m| m.contention).sum::<f64>() / n,
             }
         })
         .collect()
@@ -145,6 +167,8 @@ mod tests {
             orphaned_clients: if decision == "helper-degraded" { 1 } else { 0 },
             migrations: if decision == "helper-degraded" { 1 } else { 0 },
             degraded: decision.starts_with("helper"),
+            contention: 0.0,
+            repair_source: None,
         }
         .jsonl_line()
     }
@@ -180,6 +204,45 @@ mod tests {
         assert!((summary[3].mean_churn_frac - 0.3).abs() < 1e-9);
         assert!((summary[3].mean_makespan_ms - 1150.0).abs() < 1e-9);
         assert_eq!(summary[3].total_work_units, 70);
+    }
+
+    #[test]
+    fn repair_source_and_contention_summarize_per_decision() {
+        // Forge a shared-transport stream through the real producer:
+        // two admm-y repairs, one FCFS repair, contention on every line.
+        let mk = |round: usize, src: Option<&'static str>, contention: f64| {
+            let doc = Json::parse(&line(round, "repair", 0.2, 1000.0, 20)).unwrap();
+            let mut obj = match doc {
+                Json::Obj(o) => o,
+                _ => unreachable!(),
+            };
+            if let Some(s) = src {
+                obj.insert("repair_source".into(), Json::Str(s.into()));
+            }
+            if contention > 0.0 {
+                obj.insert("contention".into(), Json::Num(contention));
+            }
+            Json::Obj(obj).dump()
+        };
+        let text = [
+            mk(0, Some("admm-y"), 0.5),
+            mk(1, None, 0.25),
+            mk(2, Some("admm-y"), 0.75),
+        ]
+        .join("\n");
+        let rows = rows_from_jsonl(&text).unwrap();
+        assert_eq!(rows[0].repair_source.as_deref(), Some("admm-y"));
+        assert_eq!(rows[1].repair_source, None);
+        assert_eq!(rows[1].contention, 0.25);
+        let summary = summarize(&rows);
+        assert_eq!(summary.len(), 1);
+        assert_eq!(summary[0].admm_y_repairs, 2);
+        assert!((summary[0].mean_contention - 0.5).abs() < 1e-9);
+        // Dedicated streams (no keys) default cleanly.
+        let plain = rows_from_jsonl(&line(0, "repair", 0.1, 500.0, 10)).unwrap();
+        assert_eq!(plain[0].contention, 0.0);
+        assert_eq!(plain[0].repair_source, None);
+        assert_eq!(summarize(&plain)[0].admm_y_repairs, 0);
     }
 
     #[test]

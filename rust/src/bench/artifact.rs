@@ -34,11 +34,18 @@ use anyhow::{Context, Result};
 /// surface — the `psl-trace` kind (Chrome trace-event spans + the
 /// deterministic counter map) and the deterministic solver-counter
 /// columns (`exact_nodes` / `exact_cutoffs` / `exact_max_depth` /
-/// `admm_iters`) in `psl-perf` rows.
+/// `admm_iters`) in `psl-perf` rows; v7 added the transport layer —
+/// optional per-round `contention` / `repair_source` fields in fleet
+/// round reports, the optional `link_model` / `uplink_capacity` config
+/// and `last_full_method` state in `psl-fleet-checkpoint`, the
+/// `uplink_capacity` axis in `psl-fleet-grid` rows, and the optional
+/// per-entry `uplink_capacity` in `psl-policy-table` (all emitted only
+/// when non-default, so dedicated-transport artifacts keep their v6
+/// bytes).
 /// Readers accept anything ≤ the current version; kind-specific readers
 /// give a "re-generate with this build" error when a field their version
 /// needs is absent.
-pub const SCHEMA_VERSION: u32 = 6;
+pub const SCHEMA_VERSION: u32 = 7;
 
 /// Every artifact kind the repo persists under `target/psl-bench/`.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]

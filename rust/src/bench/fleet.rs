@@ -30,6 +30,10 @@ pub struct FleetGridCfg {
     /// bursts for `s7-helper-bursts`); > 0.0 overrides with a transient
     /// outage model at that rate.
     pub helper_down_rates: Vec<f64>,
+    /// Shared-uplink pool capacities (the transport axis). 0.0 = the
+    /// dedicated transport (today's fixed per-edge delays); > 0.0 runs
+    /// the cell under a shared uplink pool of that capacity.
+    pub uplink_capacities: Vec<f64>,
     pub policies: Vec<Policy>,
     pub seeds: Vec<u64>,
     pub rounds: usize,
@@ -50,6 +54,7 @@ impl Default for FleetGridCfg {
             size: (10, 2),
             churn_rates: vec![0.05, 0.15, 0.3],
             helper_down_rates: vec![0.0],
+            uplink_capacities: vec![0.0],
             policies: vec![Policy::Incremental, Policy::FullEveryRound],
             seeds: vec![42],
             rounds: 8,
@@ -68,6 +73,8 @@ pub struct FleetCell {
     /// The grid axis value (0.0 = scenario default; the row records the
     /// *effective* rate the cell actually ran).
     pub helper_down_rate: f64,
+    /// The transport axis value (0.0 = dedicated).
+    pub uplink_capacity: f64,
     pub policy: Policy,
     pub seed: u64,
 }
@@ -83,6 +90,8 @@ pub struct FleetGridRow {
     /// Effective per-round helper outage probability the cell ran (the
     /// axis value, or the scenario's default when the axis is 0.0).
     pub helper_down_rate: f64,
+    /// Shared-uplink pool capacity the cell ran (0.0 = dedicated).
+    pub uplink_capacity: f64,
     pub policy: &'static str,
     pub seed: u64,
     pub rounds: usize,
@@ -98,16 +107,25 @@ pub struct FleetGridRow {
     pub total_work_units: u64,
 }
 
-/// Enumerate the grid in canonical order:
-/// scenario → churn rate → helper outage rate → policy → seed.
+/// Enumerate the grid in canonical order: scenario → churn rate →
+/// helper outage rate → uplink capacity → policy → seed.
 pub fn cells(cfg: &FleetGridCfg) -> Vec<FleetCell> {
     let mut out = Vec::new();
     for &scenario in &cfg.scenarios {
         for &churn_rate in &cfg.churn_rates {
             for &helper_down_rate in &cfg.helper_down_rates {
-                for &policy in &cfg.policies {
-                    for &seed in &cfg.seeds {
-                        out.push(FleetCell { scenario, churn_rate, helper_down_rate, policy, seed });
+                for &uplink_capacity in &cfg.uplink_capacities {
+                    for &policy in &cfg.policies {
+                        for &seed in &cfg.seeds {
+                            out.push(FleetCell {
+                                scenario,
+                                churn_rate,
+                                helper_down_rate,
+                                uplink_capacity,
+                                policy,
+                                seed,
+                            });
+                        }
                     }
                 }
             }
@@ -137,6 +155,9 @@ pub fn cell_cfg(grid: &FleetGridCfg, c: &FleetCell) -> FleetCfg {
             diurnal_period: 0,
         };
     }
+    if c.uplink_capacity > 0.0 {
+        cfg.transport = crate::transport::TransportCfg::shared(c.uplink_capacity);
+    }
     cfg
 }
 
@@ -151,6 +172,7 @@ pub fn run_cell(grid: &FleetGridCfg, c: &FleetCell) -> FleetGridRow {
         n_helpers: grid.size.1,
         churn_rate: c.churn_rate,
         helper_down_rate: cfg.helper_churn.down_rate,
+        uplink_capacity: c.uplink_capacity,
         policy: c.policy.name(),
         seed: c.seed,
         rounds: report.rounds.len(),
@@ -194,6 +216,7 @@ pub fn rows_to_json(rows: &[FleetGridRow]) -> Json {
                             ("n_helpers", Json::Num(r.n_helpers as f64)),
                             ("churn_rate", Json::Num(r.churn_rate)),
                             ("helper_down_rate", Json::Num(r.helper_down_rate)),
+                            ("uplink_capacity", Json::Num(r.uplink_capacity)),
                             ("policy", Json::Str(r.policy.to_string())),
                             // Seeds replay exactly → string (sweep precedent).
                             ("seed", Json::Str(r.seed.to_string())),
@@ -229,6 +252,7 @@ mod tests {
             size: (6, 2),
             churn_rates: vec![0.1, 0.25],
             helper_down_rates: vec![0.0],
+            uplink_capacities: vec![0.0],
             policies: vec![Policy::Incremental, Policy::FullEveryRound],
             seeds: vec![7],
             rounds: 5,
@@ -259,6 +283,7 @@ mod tests {
                 scenario: Scenario::S1,
                 churn_rate: 0.1,
                 helper_down_rate: 0.0,
+                uplink_capacity: 0.0,
                 policy: Policy::Incremental,
                 seed: 7,
             }
@@ -282,6 +307,37 @@ mod tests {
         let churned_cell = cell_cfg(&cfg, &cs[2]);
         assert_eq!(churned_cell.helper_churn.down_rate, 0.2);
         assert_eq!(churned_cell.helper_churn.outage_rounds, 2);
+    }
+
+    #[test]
+    fn uplink_axis_multiplies_cells_and_switches_the_transport() {
+        let mut cfg = tiny(1);
+        cfg.uplink_capacities = vec![0.0, 2.0];
+        let cs = cells(&cfg);
+        assert_eq!(cs.len(), 16, "uplink axis doubles the grid");
+        // Axis 0.0 keeps the dedicated transport (the byte-identical
+        // historical path)...
+        let dedicated_cell = cell_cfg(&cfg, &cs[0]);
+        assert!(dedicated_cell.transport.is_dedicated());
+        // ...and a positive axis value switches the cell to a shared
+        // uplink pool of that capacity.
+        assert_eq!(cs[2].uplink_capacity, 2.0);
+        let shared_cell = cell_cfg(&cfg, &cs[2]);
+        assert!(!shared_cell.transport.is_dedicated());
+        assert_eq!(shared_cell.transport.capacity, 2.0);
+        // The rows record the axis so analyze can split transport
+        // regimes.
+        cfg.scenarios = vec![Scenario::S1];
+        cfg.churn_rates = vec![0.1];
+        cfg.policies = vec![Policy::Incremental];
+        cfg.rounds = 3;
+        let rows = run(&cfg);
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[0].uplink_capacity, 0.0);
+        assert_eq!(rows[1].uplink_capacity, 2.0);
+        for r in &rows {
+            assert_eq!(r.full_rounds + r.repair_rounds + r.empty_rounds, r.rounds);
+        }
     }
 
     #[test]

@@ -523,6 +523,7 @@ mod tests {
                 heterogeneity: 0.2,
                 placement_flexibility: 1.0,
                 tail_ratio: 1.2,
+                contention: 0.0,
             };
             let picked = pick_from_signals(&s);
             if j >= SHARD_CLIENT_FRONTIER {

@@ -16,7 +16,10 @@
 use crate::exec::pool;
 use crate::instance::profiles::Model;
 use crate::instance::scenario::{Scenario, ScenarioCfg};
+use crate::solver::bwd;
+use crate::solver::schedule::{fcfs_schedule, Schedule};
 use crate::solver::{admm, baseline, greedy, strategy};
+use crate::transport::TransportCfg;
 use crate::util::json::Json;
 use crate::util::rng::{fnv64 as fnv, Rng};
 
@@ -32,6 +35,10 @@ pub struct SweepCfg {
     pub methods: Vec<String>,
     /// None → each model's default |S_t|.
     pub slot_ms: Option<f64>,
+    /// Link model every cell solves and is evaluated under. The default
+    /// ([`TransportCfg::dedicated`](crate::transport::TransportCfg::dedicated))
+    /// keeps the historical byte-identical rows.
+    pub transport: crate::transport::TransportCfg,
     pub threads: usize,
 }
 
@@ -49,6 +56,7 @@ impl Default for SweepCfg {
             seeds: vec![42],
             methods: vec!["admm".to_string(), "greedy".to_string()],
             slot_ms: None,
+            transport: crate::transport::TransportCfg::dedicated(),
             threads: pool::default_workers(),
         }
     }
@@ -86,6 +94,9 @@ pub struct SweepRow {
     pub heterogeneity: f64,
     pub placement_flexibility: f64,
     pub tail_ratio: f64,
+    /// Shared-uplink capacity the cell ran under (0.0 = dedicated links;
+    /// serialized only when > 0 so default sweeps keep their v6 bytes).
+    pub uplink_capacity: f64,
 }
 
 /// Enumerate the grid in canonical (deterministic) order:
@@ -126,27 +137,71 @@ pub fn cell_seed(c: &Cell) -> u64 {
         ^ (c.n_helpers as u64).wrapping_mul(0xC2B2_AE3D_27D4_EB4F)
 }
 
-/// Solve one cell. Panics only on unknown method names (validated by the
-/// CLI before fan-out).
-pub fn run_cell(c: &Cell, slot_override: Option<f64>) -> SweepRow {
+/// Solve one cell under a transport model. Panics only on unknown method
+/// names (validated by the CLI before fan-out). The dedicated mode keeps
+/// every solver path byte-identical to the historical (transport-free)
+/// runner.
+pub fn run_cell(c: &Cell, slot_override: Option<f64>, transport: &TransportCfg) -> SweepRow {
     let ms = ScenarioCfg::new(c.scenario, c.model, c.n_clients, c.n_helpers, c.seed).generate();
     let slot_ms = slot_override.unwrap_or(c.model.profile().default_slot_ms);
     let inst = ms.quantize(slot_ms);
-    let sig = strategy::signals(&inst);
+    let sig = strategy::signals_under(&inst, transport);
+
+    // Re-schedule a shaped assignment against its actual per-helper pool
+    // loads (FCFS forward + optimal ℙ_b backward) — the same construction
+    // as `strategy::solve_under`, so shared-mode rows are feasible under
+    // `Schedule::violations_under` by construction. Identity when
+    // dedicated.
+    let under_transport = |s: Schedule| -> Schedule {
+        if transport.is_dedicated() {
+            return s;
+        }
+        let eff = transport.inflate_for_assignment(&inst, &s.assignment);
+        let f = fcfs_schedule(&eff, s.assignment);
+        bwd::complete_with_optimal_bwd(&eff, f.assignment, f.fwd)
+    };
 
     let mut picked: Option<&'static str> = None;
     let schedule = match c.method.as_str() {
-        "admm" => admm::solve(&inst, &admm::AdmmCfg::default()).map(|r| r.schedule),
-        "greedy" => greedy::solve(&inst),
-        "baseline" => baseline::solve(&inst, &mut Rng::seeded(cell_seed(c))),
-        "strategy" => strategy::solve_with_signals(&inst, &admm::AdmmCfg::default(), &sig).map(|(s, m)| {
-            picked = Some(m.name());
-            s
-        }),
+        "admm" => {
+            if transport.is_dedicated() {
+                admm::solve(&inst, &admm::AdmmCfg::default()).map(|r| r.schedule)
+            } else {
+                // Shape the assignment on the uniform-load contention
+                // estimate, then re-schedule under the actual loads.
+                let est = transport.inflate_uniform(&inst);
+                admm::solve(&est, &admm::AdmmCfg::default()).map(|r| under_transport(r.schedule))
+            }
+        }
+        "greedy" => greedy::solve_under(&inst, transport),
+        "baseline" => {
+            baseline::solve(&inst, &mut Rng::seeded(cell_seed(c))).map(|s| under_transport(s))
+        }
+        "strategy" => {
+            if transport.is_dedicated() {
+                strategy::solve_with_signals(&inst, &admm::AdmmCfg::default(), &sig).map(|(s, m)| {
+                    picked = Some(m.name());
+                    s
+                })
+            } else {
+                strategy::solve_under(&inst, transport, &admm::AdmmCfg::default()).map(|(s, m)| {
+                    picked = Some(m.name());
+                    s
+                })
+            }
+        }
         other => panic!("unknown sweep method {other:?} (admm|greedy|baseline|strategy)"),
     };
 
-    let makespan_slots = schedule.as_ref().map(|s| s.makespan(&inst));
+    // Shared-mode makespans are read off the transport-inflated instance
+    // the schedule was actually built against.
+    let makespan_slots = schedule.as_ref().map(|s| {
+        if transport.is_dedicated() {
+            s.makespan(&inst)
+        } else {
+            s.makespan(&transport.inflate_for_assignment(&inst, &s.assignment))
+        }
+    });
     SweepRow {
         scenario: c.scenario.name(),
         model: c.model.name(),
@@ -164,6 +219,7 @@ pub fn run_cell(c: &Cell, slot_override: Option<f64>) -> SweepRow {
         heterogeneity: sig.heterogeneity,
         placement_flexibility: sig.placement_flexibility,
         tail_ratio: sig.tail_ratio,
+        uplink_capacity: if transport.is_dedicated() { 0.0 } else { transport.capacity },
     }
 }
 
@@ -175,7 +231,10 @@ pub fn run(cfg: &SweepCfg) -> Vec<SweepRow> {
     let slot = cfg.slot_ms;
     let jobs: Vec<Box<dyn FnOnce() -> SweepRow + Send>> = grid
         .into_iter()
-        .map(|c| Box::new(move || run_cell(&c, slot)) as Box<dyn FnOnce() -> SweepRow + Send>)
+        .map(|c| {
+            let transport = cfg.transport.clone();
+            Box::new(move || run_cell(&c, slot, &transport)) as Box<dyn FnOnce() -> SweepRow + Send>
+        })
         .collect();
     pool::run_parallel(cfg.threads, jobs)
 }
@@ -194,7 +253,7 @@ pub fn rows_to_json(rows: &[SweepRow]) -> Json {
             Json::Arr(
                 rows.iter()
                     .map(|r| {
-                        Json::obj(vec![
+                        let mut fields = vec![
                             ("scenario", Json::Str(r.scenario.to_string())),
                             ("model", Json::Str(r.model.to_string())),
                             ("n_clients", Json::Num(r.n_clients as f64)),
@@ -220,7 +279,13 @@ pub fn rows_to_json(rows: &[SweepRow]) -> Json {
                             ("heterogeneity", Json::Num(r.heterogeneity)),
                             ("placement_flexibility", Json::Num(r.placement_flexibility)),
                             ("tail_ratio", Json::Num(r.tail_ratio)),
-                        ])
+                        ];
+                        // Emit only under the shared link model so
+                        // dedicated sweeps keep their pre-v7 bytes.
+                        if r.uplink_capacity > 0.0 {
+                            fields.push(("uplink_capacity", Json::Num(r.uplink_capacity)));
+                        }
+                        Json::obj(fields)
                     })
                     .collect(),
             ),
@@ -271,7 +336,7 @@ fn index_rows(doc: &Json) -> anyhow::Result<std::collections::BTreeMap<String, O
     let rows = doc.get("rows").as_arr().ok_or_else(|| anyhow::anyhow!("not a sweep artifact: missing rows[]"))?;
     let mut out = std::collections::BTreeMap::new();
     for r in rows {
-        let key = format!(
+        let mut key = format!(
             "{}/{} {}x{} seed={} slot={} {}",
             r.get("scenario").as_str().unwrap_or("?"),
             r.get("model").as_str().unwrap_or("?"),
@@ -281,6 +346,13 @@ fn index_rows(doc: &Json) -> anyhow::Result<std::collections::BTreeMap<String, O
             r.get("slot_ms").as_f64().unwrap_or(-1.0),
             r.get("method").as_str().unwrap_or("?"),
         );
+        // The link model is part of the cell's identity: a shared-uplink
+        // makespan must never be diffed against a dedicated one. The
+        // suffix appears only when the row carries the (v7, shared-only)
+        // key, so old-vs-old diffs keep their historical keys.
+        if let Some(cap) = r.get("uplink_capacity").as_f64() {
+            key.push_str(&format!(" cap={cap}"));
+        }
         out.insert(key, r.get("makespan_ms").as_f64());
     }
     Ok(out)
@@ -339,6 +411,7 @@ mod tests {
             seeds: vec![11],
             methods: vec!["greedy".to_string(), "baseline".to_string()],
             slot_ms: Some(550.0),
+            transport: TransportCfg::dedicated(),
             threads,
         }
     }
@@ -445,11 +518,60 @@ mod tests {
             seeds: vec![3],
             methods: vec!["strategy".to_string()],
             slot_ms: Some(550.0),
+            transport: TransportCfg::dedicated(),
             threads: 1,
         };
         let rows = run(&cfg);
         assert_eq!(rows.len(), 1);
         assert!(rows[0].picked.is_some());
         assert!(rows[0].makespan_slots.is_some());
+    }
+
+    #[test]
+    fn shared_transport_rows_are_feasible_deterministic_and_tagged() {
+        let mut cfg = tiny_cfg(1);
+        cfg.transport = TransportCfg::shared(2.0);
+        let a = run(&cfg);
+        let b = run(&SweepCfg { threads: 4, ..cfg.clone() });
+        assert_eq!(a, b, "shared-mode sweep must be thread-invariant");
+        for r in &a {
+            assert_eq!(r.uplink_capacity, 2.0);
+            assert!(r.makespan_slots.is_some(), "{}/{} infeasible under shared uplink", r.scenario, r.method);
+            // Contention only inflates transfer times; the dedicated
+            // lower bound still holds.
+            assert!(r.makespan_slots.unwrap() >= r.lower_bound);
+        }
+        let shared_doc = rows_to_json(&a);
+        assert!(shared_doc.pretty().contains("\"uplink_capacity\""));
+        // Dedicated rows keep their historical shape: no transport key.
+        let plain_doc = rows_to_json(&run(&tiny_cfg(1)));
+        assert!(!plain_doc.pretty().contains("uplink_capacity"));
+        // The link model is part of the cell identity: diffing across
+        // modes compares nothing instead of silently mixing them.
+        let d = diff_documents(&plain_doc, &shared_doc, 0.02).unwrap();
+        assert_eq!(d.compared, 0);
+        assert_eq!(d.only_old, 4);
+        assert_eq!(d.only_new, 4);
+    }
+
+    #[test]
+    fn strategy_and_admm_route_under_shared_transport() {
+        let cfg = SweepCfg {
+            scenarios: vec![Scenario::S1],
+            models: vec![Model::Vgg19],
+            sizes: vec![(4, 2)],
+            seeds: vec![3],
+            methods: vec!["strategy".to_string(), "admm".to_string()],
+            slot_ms: Some(550.0),
+            transport: TransportCfg::shared(1.5),
+            threads: 1,
+        };
+        let rows = run(&cfg);
+        assert_eq!(rows.len(), 2);
+        assert!(rows[0].picked.is_some(), "strategy must record its routed method under contention");
+        for r in &rows {
+            assert!(r.makespan_slots.is_some());
+            assert!(r.makespan_slots.unwrap() >= r.lower_bound);
+        }
     }
 }

@@ -177,6 +177,9 @@ SCENARIO FAMILIES
   6|s6-mega-homogeneous huge identical fleet, uniform links
   7|s7-helper-bursts    s4 clients + bursty helper outages (fleet/serve
                         model transient helper downtime by default here)
+  8|s8-flash-crowd      s4 clients + periodic flash-crowd arrival spikes
+                        (fleet/serve multiply the arrival rate 4x every
+                        4th round by default here)
 
 SWEEP FLAGS
   --scenarios LIST      comma list of families         [default 1,2,3,4]
@@ -185,6 +188,10 @@ SWEEP FLAGS
   --seeds LIST          comma list of seeds            [default 42]
   --methods LIST        admm|greedy|baseline|strategy  [default admm,greedy]
   --slot-ms X           override every model's |S_t|
+  --link-model M        dedicated|shared transfer links [default dedicated]
+  --uplink-capacity C   shared-pool capacity (concurrent full-rate
+                        transfers per helper; needs --link-model shared)
+                        [default 4]
   --threads N           worker threads                 [default: all cores]
   --out NAME            output name under target/psl-bench [default sweep]
   --diff OLD NEW        diff two sweep JSONs instead of running a grid
@@ -212,6 +219,9 @@ defaults to s4-straggler-tail)
                         double the outage rate                 [default 0]
   --capacity-threshold F  full re-solve on the reduced helper set when
                         live capacity fraction drops below F   [0.5]
+  --link-model M        dedicated|shared transfer links    [default dedicated]
+  --uplink-capacity C   shared-pool capacity per helper (needs
+                        --link-model shared)               [default 4]
   --out NAME            output name under target/psl-bench [default fleet]
                         (also writes <out>.rounds.jsonl and
                         <out>.events.jsonl sidecars)
@@ -232,12 +242,18 @@ defaults to s4-straggler-tail)
   --helper-down-rates LIST  (--grid only) helper outage-rate axis
                         [default 0]; 0 keeps the scenario's own helper
                         model, > 0 overrides it with 2-round outages
+  --uplink-capacities LIST  (--grid only) shared-uplink capacity axis
+                        [default 0]; 0 runs the cell on dedicated links,
+                        > 0 on a shared pool of that capacity — frontiers
+                        are computed per transport regime and the policy
+                        table records the axis
 
 SERVE FLAGS (plus --scenario/--model/-j/-i/--seed/--slot-ms, the fleet
 policy knobs --policy/--policy-table/--churn-threshold/--gap-threshold/
---batches and the helper knobs --helper-down-rate/--helper-outage-rounds/
---helper-join-rate/--max-helpers/--diurnal-period/--capacity-threshold;
-scenario defaults to s4-straggler-tail)
+--batches, the helper knobs --helper-down-rate/--helper-outage-rounds/
+--helper-join-rate/--max-helpers/--diurnal-period/--capacity-threshold
+and the transport knobs --link-model/--uplink-capacity; scenario
+defaults to s4-straggler-tail)
   --max-clients N       roster cap the world is sized for  [default 2*J]
   --checkpoint-every N  snapshot the session every N stepped rounds to
                         target/psl-bench/<out>.ckpt.json (ack on stderr)

@@ -56,6 +56,12 @@ pub struct FleetCheckpoint {
     pub helpers_down: Vec<u64>,
     /// Never-reused helper-id watermark (joins mint from here).
     pub helper_next_id: u64,
+    /// §VII method the most recent full solve routed to (`None` before
+    /// the first full round). The ADMM-y repair warm start keys off this,
+    /// so it must survive a pause. Serialized only when `Some`, keeping
+    /// pre-transport checkpoints byte-identical; absent reads back as
+    /// `None` (lenient, unlike the v5 helper-dynamics hard gate).
+    pub last_full_method: Option<&'static str>,
     /// Completed rounds, in order.
     pub rounds: Vec<RoundReport>,
 }
@@ -81,7 +87,7 @@ fn f64_or_inf(v: &Json, what: &str) -> Result<f64> {
 impl FleetCheckpoint {
     pub fn to_json(&self) -> Json {
         let scen = &self.cfg.scenario;
-        let config = Json::obj(vec![
+        let mut config_fields = vec![
             ("scenario", Json::Str(scen.spec.name.clone())),
             ("model", Json::Str(scen.model.name().to_string())),
             ("n_clients", Json::Num(scen.n_clients as f64)),
@@ -110,8 +116,15 @@ impl FleetCheckpoint {
                 self.cfg.policy_table.as_ref().map(|t| t.to_json()).unwrap_or(Json::Null),
             ),
             ("world_max_clients", Json::Num(self.world_max_clients as f64)),
-        ]);
-        let state = Json::obj(vec![
+        ];
+        // Transport config is emitted only when non-default so dedicated
+        // checkpoints keep their historical bytes.
+        if !self.cfg.transport.is_dedicated() {
+            config_fields.push(("link_model", Json::Str(self.cfg.transport.mode.name().to_string())));
+            config_fields.push(("uplink_capacity", Json::Num(self.cfg.transport.capacity)));
+        }
+        let config = Json::obj(config_fields);
+        let mut state_fields = vec![
             ("next_round", Json::Num(self.next_round as f64)),
             ("prev_roster_len", Json::Num(self.prev_roster_len as f64)),
             ("last_full_gap", Json::Num(self.last_full_gap)),
@@ -133,7 +146,11 @@ impl FleetCheckpoint {
                 Json::Arr(self.helpers_down.iter().map(|&h| Json::Num(h as f64)).collect()),
             ),
             ("helper_next_id", Json::Num(self.helper_next_id as f64)),
-        ]);
+        ];
+        if let Some(m) = self.last_full_method {
+            state_fields.push(("last_full_method", Json::Str(m.to_string())));
+        }
+        let state = Json::obj(state_fields);
         artifact::envelope(ArtifactKind::FleetCheckpoint, vec![
             ("config", config),
             ("state", state),
@@ -236,6 +253,31 @@ impl FleetCheckpoint {
             required(c.get("capacity_threshold"), "capacity_threshold")?,
             "capacity_threshold",
         )?;
+        // Transport config is lenient (absent → dedicated): it is emitted
+        // only when non-default, so pre-transport checkpoints stay
+        // loadable.
+        cfg.transport = match c.get("link_model") {
+            Json::Null => crate::transport::TransportCfg::dedicated(),
+            v => {
+                let name = v.as_str().context("checkpoint: bad link_model")?;
+                let mode = crate::transport::LinkMode::parse(name)
+                    .with_context(|| format!("checkpoint: unknown link_model {name:?}"))?;
+                match mode {
+                    crate::transport::LinkMode::Dedicated => crate::transport::TransportCfg::dedicated(),
+                    crate::transport::LinkMode::Shared => {
+                        let cap = match c.get("uplink_capacity") {
+                            Json::Null => crate::transport::DEFAULT_UPLINK_CAPACITY,
+                            v => num(v, "uplink_capacity")?,
+                        };
+                        anyhow::ensure!(
+                            cap.is_finite() && cap > 0.0,
+                            "checkpoint: bad uplink_capacity {cap}"
+                        );
+                        crate::transport::TransportCfg::shared(cap)
+                    }
+                }
+            }
+        };
         let world_max_clients = int(c.get("world_max_clients"), "world_max_clients")?;
 
         let s = doc.get("state");
@@ -263,6 +305,17 @@ impl FleetCheckpoint {
             "checkpoint: bad helper_next_id {next_id_f}"
         );
         let helper_next_id = next_id_f as u64;
+        let last_full_method = match s.get("last_full_method") {
+            Json::Null => None,
+            v => {
+                let name = v.as_str().context("checkpoint: bad last_full_method")?;
+                Some(
+                    crate::solver::strategy::Method::parse(name)
+                        .with_context(|| format!("checkpoint: unknown last_full_method {name:?}"))?
+                        .name(),
+                )
+            }
+        };
         let rounds = doc
             .get("rounds")
             .as_arr()
@@ -290,6 +343,7 @@ impl FleetCheckpoint {
             helpers_live,
             helpers_down,
             helper_next_id,
+            last_full_method,
             rounds,
         })
     }
@@ -431,6 +485,60 @@ mod tests {
             let err = FleetCheckpoint::from_json(&doc).unwrap_err().to_string();
             assert!(err.contains("re-generate"), "{section}.{key}: {err}");
         }
+    }
+
+    #[test]
+    fn transport_config_is_emitted_only_when_shared() {
+        // Dedicated checkpoints keep the historical key set.
+        let ded = mid_run_checkpoint();
+        let text = ded.to_json().pretty();
+        assert!(!text.contains("link_model"), "dedicated checkpoints omit transport keys");
+        assert!(!text.contains("uplink_capacity"));
+        let back = FleetCheckpoint::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert!(back.cfg.transport.is_dedicated(), "absent link_model reads back as dedicated");
+        // A shared-uplink checkpoint round-trips its pool capacity and is
+        // a JSON fixed point.
+        let mut cfg = session_cfg();
+        cfg.transport = crate::transport::TransportCfg::shared(2.5);
+        let mut session = FleetSession::new(cfg);
+        let stream = session.event_stream();
+        for ev in &stream[..3] {
+            session.step(ev);
+        }
+        let doc = session.checkpoint().to_json();
+        assert_eq!(doc.get("config").get("link_model").as_str(), Some("shared"));
+        assert_eq!(doc.get("config").get("uplink_capacity").as_f64(), Some(2.5));
+        let text = doc.pretty();
+        let back = FleetCheckpoint::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert!(!back.cfg.transport.is_dedicated());
+        assert_eq!(back.cfg.transport.capacity, 2.5);
+        assert_eq!(back.to_json().pretty(), text, "shared transport is a JSON fixed point");
+    }
+
+    #[test]
+    fn last_full_method_rides_along_and_is_lenient() {
+        let ckpt = mid_run_checkpoint();
+        // This fleet ran a full solve by round 3, so the warm-start key
+        // is populated and survives the JSON trip.
+        let method = ckpt.last_full_method.expect("round 0 is always a full solve");
+        let text = ckpt.to_json().pretty();
+        let back = FleetCheckpoint::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.last_full_method, Some(method));
+        // Absent (pre-transport checkpoints) reads back as None...
+        let mut doc = ckpt.to_json();
+        if let Json::Obj(obj) = &mut doc {
+            if let Some(Json::Obj(state)) = obj.get_mut("state") {
+                state.remove("last_full_method");
+            }
+        }
+        assert_eq!(FleetCheckpoint::from_json(&doc).unwrap().last_full_method, None);
+        // ...but an unknown method name is rejected, not interned.
+        if let Json::Obj(obj) = &mut doc {
+            if let Some(Json::Obj(state)) = obj.get_mut("state") {
+                state.insert("last_full_method".into(), Json::Str("oracle".into()));
+            }
+        }
+        assert!(FleetCheckpoint::from_json(&doc).is_err());
     }
 
     #[test]

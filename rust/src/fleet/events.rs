@@ -121,6 +121,54 @@ impl HelperChurnCfg {
     }
 }
 
+/// Flash-crowd knobs: periodic burst spikes layered on the arrival
+/// process. During a spike round the Poisson arrival rate is multiplied
+/// by `multiplier`; departures and every other draw are untouched. The
+/// [`FlashCrowdCfg::none`] default disables the process entirely —
+/// the stream is byte-identical to one generated before flash crowds
+/// existed. The `s8-flash-crowd` family turns this on by default
+/// ([`FlashCrowdCfg::spikes`]).
+#[derive(Clone, Debug)]
+pub struct FlashCrowdCfg {
+    /// Rounds between spike onsets (`0` disables the process).
+    pub period: usize,
+    /// Length of each spike in rounds (clamped to ≥ 1).
+    pub spike_rounds: usize,
+    /// Arrival-rate multiplier during a spike (≤ 1.0 disables).
+    pub multiplier: f64,
+}
+
+impl FlashCrowdCfg {
+    /// Flash crowds disabled: every round uses the base arrival rate.
+    pub fn none() -> FlashCrowdCfg {
+        FlashCrowdCfg { period: 0, spike_rounds: 1, multiplier: 1.0 }
+    }
+
+    /// True when the process is fully disabled.
+    pub fn is_none(&self) -> bool {
+        self.period == 0 || self.multiplier <= 1.0
+    }
+
+    /// The `s8-flash-crowd` default: every 4th round opens a 1-round
+    /// spike at 4× the stationary arrival rate — enough pressure to hit
+    /// the roster cap and exercise admission + repair under surge.
+    pub fn spikes() -> FlashCrowdCfg {
+        FlashCrowdCfg { period: 4, spike_rounds: 1, multiplier: 4.0 }
+    }
+
+    /// Arrival-rate multiplier for `round` (1.0 off-spike or disabled).
+    pub fn multiplier_for(&self, round: usize) -> f64 {
+        if self.is_none() {
+            return 1.0;
+        }
+        if round % self.period < self.spike_rounds.max(1).min(self.period) {
+            self.multiplier
+        } else {
+            1.0
+        }
+    }
+}
+
 /// Live/down partition of the helper pool, evolved by applying each
 /// round's helper events in order. `live` and `down` are sorted and
 /// disjoint; `next_id` is the first never-used helper id (join ids are
@@ -396,6 +444,21 @@ fn poisson(rng: &mut Rng, lambda: f64) -> usize {
 /// tuple (the orchestrator passes `cfg.seed ^ fnv(spec.name)`); the
 /// stream label is mixed in here.
 pub fn generate(base_clients: usize, churn: &ChurnCfg, seed: u64) -> Vec<RoundEvents> {
+    generate_with_flash(base_clients, churn, &FlashCrowdCfg::none(), seed)
+}
+
+/// [`generate`] with flash-crowd arrival spikes: on spike rounds the
+/// Poisson arrival rate is multiplied by
+/// [`FlashCrowdCfg::multiplier_for`]; departures draw exactly as in
+/// [`generate`]. With `flash.is_none()` the output is byte-identical to
+/// [`generate`] — the spike multiplier only changes the λ handed to the
+/// same sampler, never the draw structure.
+pub fn generate_with_flash(
+    base_clients: usize,
+    churn: &ChurnCfg,
+    flash: &FlashCrowdCfg,
+    seed: u64,
+) -> Vec<RoundEvents> {
     assert!(churn.rounds >= 1, "a fleet run needs at least one round");
     let cap = churn.max_clients.max(base_clients);
     let mut rng = Rng::seeded(seed ^ fnv("fleet-events"));
@@ -413,7 +476,7 @@ pub fn generate(base_clients: usize, churn: &ChurnCfg, seed: u64) -> Vec<RoundEv
                 stayed.push(id);
             }
         }
-        let want = poisson(&mut rng, churn.arrival_rate);
+        let want = poisson(&mut rng, churn.arrival_rate * flash.multiplier_for(round));
         let admit = want.min(cap.saturating_sub(stayed.len()));
         let arrivals: Vec<u64> = (0..admit as u64).map(|k| next_id + k).collect();
         next_id += admit as u64;
@@ -446,7 +509,22 @@ pub fn generate_with_helpers(
     base_helpers: usize,
     seed: u64,
 ) -> Vec<RoundEvents> {
-    let mut out = generate(base_clients, churn, seed);
+    generate_fleet(base_clients, churn, helper, &FlashCrowdCfg::none(), base_helpers, seed)
+}
+
+/// The full stream: flash-crowd client arrivals plus the helper fault
+/// process. Each layer draws from its own RNG stream, so enabling
+/// either leaves the other's half byte-identical; with both disabled
+/// the output is byte-identical to [`generate`].
+pub fn generate_fleet(
+    base_clients: usize,
+    churn: &ChurnCfg,
+    helper: &HelperChurnCfg,
+    flash: &FlashCrowdCfg,
+    base_helpers: usize,
+    seed: u64,
+) -> Vec<RoundEvents> {
+    let mut out = generate_with_flash(base_clients, churn, flash, seed);
     if helper.is_none() {
         return out;
     }
@@ -715,6 +793,90 @@ mod tests {
             .unwrap_err()
             .to_string();
         assert!(err.contains("arrival id 1 also departs in the same event"), "{err}");
+    }
+
+    #[test]
+    fn disabled_flash_crowd_is_byte_identical_to_generate() {
+        let a = generate_with_flash(10, &churn(), &FlashCrowdCfg::none(), 7);
+        let b = generate(10, &churn(), 7);
+        assert_eq!(a, b);
+        // multiplier ≤ 1.0 also counts as disabled.
+        let c = generate_with_flash(
+            10,
+            &churn(),
+            &FlashCrowdCfg { period: 4, spike_rounds: 1, multiplier: 1.0 },
+            7,
+        );
+        assert_eq!(b, c);
+    }
+
+    #[test]
+    fn flash_crowd_spikes_inflate_spike_round_arrivals() {
+        // Deterministic per seed, and across many seeds the spike rounds
+        // must admit clearly more arrivals than the off-spike rounds.
+        let cfg = ChurnCfg { rounds: 16, arrival_rate: 1.0, departure_prob: 0.3, max_clients: 200 };
+        let flash = FlashCrowdCfg { period: 4, spike_rounds: 1, multiplier: 6.0 };
+        let a = generate_with_flash(12, &cfg, &flash, 7);
+        assert_eq!(a, generate_with_flash(12, &cfg, &flash, 7));
+        let (mut spike, mut calm, mut spike_n, mut calm_n) = (0usize, 0usize, 0usize, 0usize);
+        for seed in 0..30u64 {
+            for r in &generate_with_flash(12, &cfg, &flash, seed)[1..] {
+                if flash.multiplier_for(r.round) > 1.0 {
+                    spike += r.arrivals.len();
+                    spike_n += 1;
+                } else {
+                    calm += r.arrivals.len();
+                    calm_n += 1;
+                }
+            }
+        }
+        let (spike_mean, calm_mean) = (spike as f64 / spike_n as f64, calm as f64 / calm_n as f64);
+        assert!(
+            spike_mean > 3.0 * calm_mean,
+            "spike mean {spike_mean} vs calm mean {calm_mean}"
+        );
+    }
+
+    #[test]
+    fn flash_crowd_respects_roster_cap() {
+        let cfg = ChurnCfg { rounds: 20, arrival_rate: 2.0, departure_prob: 0.05, max_clients: 15 };
+        let flash = FlashCrowdCfg::spikes();
+        for r in generate_with_flash(10, &cfg, &flash, 3) {
+            assert!(r.roster.len() <= 15, "round {} roster {}", r.round, r.roster.len());
+        }
+    }
+
+    #[test]
+    fn multiplier_for_windows() {
+        let f = FlashCrowdCfg { period: 5, spike_rounds: 2, multiplier: 3.0 };
+        for round in 0..20 {
+            let want = if round % 5 < 2 { 3.0 } else { 1.0 };
+            assert_eq!(f.multiplier_for(round), want, "round {round}");
+        }
+        // spike_rounds ≥ period degenerates to every round spiking.
+        let g = FlashCrowdCfg { period: 3, spike_rounds: 9, multiplier: 2.0 };
+        assert!((0..9).all(|r| g.multiplier_for(r) == 2.0));
+        assert_eq!(FlashCrowdCfg::none().multiplier_for(4), 1.0);
+    }
+
+    #[test]
+    fn generate_fleet_layers_compose_independently() {
+        // Flash spikes draw from the client stream, faults from the
+        // helper stream: turning flash on must leave helper events
+        // byte-identical, and turning helpers on must leave the flashed
+        // client half byte-identical.
+        let flash = FlashCrowdCfg::spikes();
+        let full = generate_fleet(10, &churn(), &helper_churn(), &flash, 3, 7);
+        let flash_only = generate_with_flash(10, &churn(), &flash, 7);
+        let helpers_only = generate_with_helpers(10, &churn(), &helper_churn(), 3, 7);
+        for ((f, c), h) in full.iter().zip(&flash_only).zip(&helpers_only) {
+            assert_eq!(f.arrivals, c.arrivals);
+            assert_eq!(f.departures, c.departures);
+            assert_eq!(f.roster, c.roster);
+            assert_eq!(f.helper_down, h.helper_down);
+            assert_eq!(f.helper_up, h.helper_up);
+            assert_eq!(f.helper_join, h.helper_join);
+        }
     }
 
     #[test]

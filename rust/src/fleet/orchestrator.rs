@@ -33,7 +33,7 @@
 //!
 //! [`FleetWorld`]: crate::instance::scenario::FleetWorld
 
-use super::events::{self, ChurnCfg, HelperChurnCfg, RoundEvents};
+use super::events::{self, ChurnCfg, FlashCrowdCfg, HelperChurnCfg, RoundEvents};
 use super::policy::PolicyTable;
 use super::report::{FleetReport, RoundReport};
 use super::session::FleetSession;
@@ -113,6 +113,17 @@ pub struct FleetCfg {
     /// below which a degraded round abandons repair and fully re-solves
     /// on the reduced helper set (`helper-resolve`).
     pub capacity_threshold: f64,
+    /// Flash-crowd arrival spikes layered on the client event stream.
+    /// [`FlashCrowdCfg::none`] (the default for every family except
+    /// `s8-flash-crowd`) leaves the stream byte-identical to runs that
+    /// predate flash crowds.
+    pub flash: FlashCrowdCfg,
+    /// Transport model for every transfer phase: solve, repair, replay,
+    /// and checker all route through it. The dedicated default keeps
+    /// each run byte-identical to builds that predate the transport
+    /// layer; shared mode prices per-helper uplink contention into all
+    /// of them ([`crate::transport`]).
+    pub transport: crate::transport::TransportCfg,
 }
 
 impl FleetCfg {
@@ -121,6 +132,11 @@ impl FleetCfg {
             HelperChurnCfg::bursts()
         } else {
             HelperChurnCfg::none()
+        };
+        let flash = if scenario.spec.name == "s8-flash-crowd" {
+            FlashCrowdCfg::spikes()
+        } else {
+            FlashCrowdCfg::none()
         };
         FleetCfg {
             scenario,
@@ -136,6 +152,8 @@ impl FleetCfg {
             policy_table: None,
             helper_churn,
             capacity_threshold: 0.5,
+            flash,
+            transport: crate::transport::TransportCfg::dedicated(),
         }
     }
 
@@ -273,6 +291,26 @@ pub(super) fn repair_assignment(
     prev: &BTreeMap<u64, usize>,
     work: &mut u64,
 ) -> Option<Repaired> {
+    repair_assignment_guided(inst, roster_ids, prev, work, false)
+}
+
+/// [`repair_assignment`] with an optional ADMM-style placement rule.
+/// With `admm_y` false this is the historical FCFS warm start: arrivals
+/// go to the helper with the smallest accumulated slot-load. With
+/// `admm_y` true — the session sets it when the *last full solve* routed
+/// to ADMM, reusing that solve's assignment-step objective as the warm
+/// start — each arrival instead minimizes the helper's load *plus its
+/// own marginal cost on that helper* (the per-edge `p + p'` term), the
+/// same completion-cost argmin ADMM's y-update greedily descends.
+/// Survivor pinning, rebalance moves, and the work proxy are identical
+/// in both modes, so decision analyses compare like for like.
+pub(super) fn repair_assignment_guided(
+    inst: &Instance,
+    roster_ids: &[u64],
+    prev: &BTreeMap<u64, usize>,
+    work: &mut u64,
+    admm_y: bool,
+) -> Option<Repaired> {
     let i_n = inst.n_helpers;
     assert!(i_n >= 1, "repair on a helper-less instance (fleet worlds require I >= 1)");
     let mut free = inst.mem.clone();
@@ -295,11 +333,18 @@ pub(super) fn repair_assignment(
             continue;
         }
         *work += i_n as u64;
+        let key = |i: usize| -> f64 {
+            if admm_y {
+                load[i] + (inst.p[inst.edge(i, j)] + inst.pp[inst.edge(i, j)]) as f64
+            } else {
+                load[i]
+            }
+        };
         let i = (0..i_n)
             .filter(|&i| free[i] >= inst.d[j])
             .min_by(|&a, &b| {
-                load[a]
-                    .partial_cmp(&load[b])
+                key(a)
+                    .partial_cmp(&key(b))
                     .unwrap()
                     .then(count[a].cmp(&count[b]))
                     .then(a.cmp(&b))
@@ -389,10 +434,11 @@ pub fn run(cfg: &FleetCfg) -> FleetReport {
 /// waiting for the final report.
 pub fn run_streaming(cfg: &FleetCfg, sink: &mut dyn FnMut(&RoundReport)) -> FleetReport {
     let world = cfg.build_world();
-    let stream = events::generate_with_helpers(
+    let stream = events::generate_fleet(
         world.base_clients(),
         &cfg.churn,
         &cfg.helper_churn,
+        &cfg.flash,
         world.n_helpers(),
         cfg.scenario.seed ^ fnv(&cfg.scenario.spec.name),
     );
@@ -524,6 +570,81 @@ mod tests {
     }
 
     #[test]
+    fn s8_flash_crowd_wires_spikes_and_other_families_do_not() {
+        let s8 = ScenarioCfg::new(Scenario::S8FlashCrowd, Model::ResNet101, 8, 2, 5);
+        let cfg8 = FleetCfg::new(s8, ChurnCfg::stationary(8), Policy::Incremental);
+        assert!(!cfg8.flash.is_none(), "s8-flash-crowd defaults to arrival spikes");
+        assert!(cfg8.helper_churn.is_none(), "s8 stresses arrivals, not helper faults");
+        assert!(cfg8.transport.is_dedicated(), "transport stays opt-in");
+        let s1 = ScenarioCfg::new(Scenario::S1, Model::ResNet101, 8, 2, 5);
+        let cfg1 = FleetCfg::new(s1, ChurnCfg::stationary(8), Policy::Incremental);
+        assert!(cfg1.flash.is_none());
+    }
+
+    #[test]
+    fn s8_flash_crowd_run_is_deterministic_and_surges() {
+        let scen = ScenarioCfg::new(Scenario::S8FlashCrowd, Model::ResNet101, 8, 2, 11);
+        let mut churn = ChurnCfg::stationary(8);
+        churn.rounds = 12;
+        let mk = || FleetCfg::new(scen.clone(), churn.clone(), Policy::Incremental);
+        let a = run(&mk());
+        let b = run(&mk());
+        assert_eq!(a.to_json().pretty(), b.to_json().pretty());
+        assert_eq!(a.rounds.len(), 12);
+        // Spike rounds admit visibly more arrivals than the stationary
+        // rate alone would: some round must beat the calm expectation.
+        let max_arrivals = a.rounds.iter().map(|r| r.arrivals).max().unwrap();
+        assert!(max_arrivals >= 2, "no arrival surge in a flash-crowd run (max {max_arrivals})");
+        for r in &a.rounds {
+            assert!(r.n_clients <= churn.max_clients, "round {} over the cap", r.round);
+        }
+    }
+
+    #[test]
+    fn admm_y_guided_repair_places_by_marginal_cost() {
+        use crate::instance::Instance;
+        // Three clients, two helpers. Clients 0 and 2 are pinned
+        // survivors (loads 8 on helper 0, 10 on helper 1); client 1 is
+        // the arrival, cheap on helper 1 (p+p' = 4) and expensive on
+        // helper 0 (18). The FCFS rule sees only loads (8 < 10) and
+        // seats it on helper 0, then needs a rebalance move to undo the
+        // mistake; the ADMM-y rule prices the marginal edge
+        // (8+18 = 26 vs 10+4 = 14) and seats it right immediately.
+        let inst = Instance {
+            n_clients: 3,
+            n_helpers: 2,
+            slot_ms: 100.0,
+            r: vec![1; 6],
+            l: vec![0; 6],
+            lp: vec![0; 6],
+            rp: vec![1; 6],
+            //       (0,0)(0,1)(0,2)(1,0)(1,1)(1,2)
+            p: vec![4, 9, 9, 9, 2, 5],
+            pp: vec![4, 9, 9, 9, 2, 5],
+            d: vec![1.0, 1.0, 1.0],
+            mem: vec![10.0, 10.0],
+            mu: vec![4, 4],
+            label: "guided".into(),
+        };
+        let prev: BTreeMap<u64, usize> = [(0u64, 0usize), (2u64, 1usize)].into_iter().collect();
+        let mut w = 0u64;
+        let fcfs = repair_assignment_guided(&inst, &[0, 1, 2], &prev, &mut w, false).unwrap();
+        let mut w2 = 0u64;
+        let guided = repair_assignment_guided(&inst, &[0, 1, 2], &prev, &mut w2, true).unwrap();
+        assert_eq!(guided.assignment.helper_of[1], 1, "guided placement prices the marginal edge");
+        assert_eq!(guided.moves, 0, "no rebalance needed when the warm start prices edges");
+        assert!(
+            fcfs.moves > 0 || fcfs.assignment.helper_of[1] == 0,
+            "FCFS either misplaces the arrival or pays a move to fix it"
+        );
+        // Survivors never move under either rule.
+        for rep in [&fcfs, &guided] {
+            assert_eq!(rep.assignment.helper_of[0], 0);
+            assert_eq!(rep.assignment.helper_of[2], 1);
+        }
+    }
+
+    #[test]
     fn policy_parse_roundtrip() {
         for p in Policy::ALL {
             assert_eq!(Policy::parse(p.name()), Some(p), "{}", p.name());
@@ -586,6 +707,7 @@ mod tests {
                 n_clients: 6,
                 n_helpers: 2,
                 helper_down_rate: 0.0,
+                uplink_capacity: 0.0,
                 frontier_churn: Some(0.25),
             }],
         );
@@ -609,6 +731,7 @@ mod tests {
                 n_clients: 6,
                 n_helpers: 2,
                 helper_down_rate: 0.0,
+                uplink_capacity: 0.0,
                 frontier_churn: None,
             }],
         );
@@ -633,6 +756,7 @@ mod tests {
                 n_clients: 6,
                 n_helpers: 2,
                 helper_down_rate: 0.0,
+                uplink_capacity: 0.0,
                 frontier_churn: Some(0.9),
             }],
         );

@@ -41,6 +41,11 @@ pub struct PolicyEntry {
     /// the pre-v5 measurement, serialized without the key so older
     /// tables load unchanged and new zero-rate tables stay byte-stable.
     pub helper_down_rate: f64,
+    /// Shared-uplink pool capacity of the measured grid cell (the
+    /// `psl fleet --grid --uplink-capacities` axis). 0.0 = the dedicated
+    /// transport — the pre-v7 measurement, serialized without the key
+    /// (same byte-stability rule as `helper_down_rate`).
+    pub uplink_capacity: f64,
 }
 
 /// The serialized policy frontier consumed by `Policy::Auto`.
@@ -49,8 +54,8 @@ pub struct PolicyTable {
     /// Provenance label — "builtin" or the grid artifact it was computed
     /// from. Informational only; never enters decisions.
     pub source: String,
-    /// Sorted by (scenario, n_clients, n_helpers, helper_down_rate) for
-    /// determinism.
+    /// Sorted by (scenario, n_clients, n_helpers, helper_down_rate,
+    /// uplink_capacity) for determinism.
     pub entries: Vec<PolicyEntry>,
 }
 
@@ -60,6 +65,7 @@ impl PolicyTable {
             (&a.scenario, a.n_clients, a.n_helpers)
                 .cmp(&(&b.scenario, b.n_clients, b.n_helpers))
                 .then(a.helper_down_rate.total_cmp(&b.helper_down_rate))
+                .then(a.uplink_capacity.total_cmp(&b.uplink_capacity))
         });
         PolicyTable { source, entries }
     }
@@ -87,6 +93,7 @@ impl PolicyTable {
                     n_helpers: 2,
                     frontier_churn: Some(0.6),
                     helper_down_rate: 0.0,
+                    uplink_capacity: 0.0,
                 },
                 PolicyEntry {
                     scenario: "s4-straggler-tail".to_string(),
@@ -94,6 +101,7 @@ impl PolicyTable {
                     n_helpers: 2,
                     frontier_churn: Some(0.3),
                     helper_down_rate: 0.0,
+                    uplink_capacity: 0.0,
                 },
             ],
         )
@@ -108,21 +116,23 @@ impl PolicyTable {
     /// threshold (recorded as `full-churn`, not `full-auto`, so analyses
     /// can separate data-driven decisions from the fallback).
     pub fn lookup(&self, scenario: &str, n_clients: usize, n_helpers: usize) -> Option<&PolicyEntry> {
-        self.lookup_at(scenario, n_clients, n_helpers, 0.0)
+        self.lookup_at(scenario, n_clients, n_helpers, 0.0, 0.0)
     }
 
-    /// [`lookup`](PolicyTable::lookup) with the helper-outage axis: among
-    /// the family's entries, nearest client count wins first, then
-    /// nearest helper count, then nearest measured `helper_down_rate`
-    /// (so a static-pool table still governs churned runs, and a
-    /// churn-measured table still governs static runs), final ties
-    /// toward the smaller measurement.
+    /// [`lookup`](PolicyTable::lookup) with the helper-outage and
+    /// uplink-capacity axes: among the family's entries, nearest client
+    /// count wins first, then nearest helper count, then nearest measured
+    /// `helper_down_rate`, then nearest measured `uplink_capacity`
+    /// (0.0 = dedicated — so a dedicated-measured table still governs
+    /// shared runs and vice versa), final ties toward the smaller
+    /// measurement.
     pub fn lookup_at(
         &self,
         scenario: &str,
         n_clients: usize,
         n_helpers: usize,
         helper_down_rate: f64,
+        uplink_capacity: f64,
     ) -> Option<&PolicyEntry> {
         self.entries
             .iter()
@@ -132,12 +142,15 @@ impl PolicyTable {
                     (e.n_clients.abs_diff(n_clients), e.n_helpers.abs_diff(n_helpers))
                 };
                 let rate_gap = |e: &PolicyEntry| (e.helper_down_rate - helper_down_rate).abs();
+                let cap_gap = |e: &PolicyEntry| (e.uplink_capacity - uplink_capacity).abs();
                 size(a)
                     .cmp(&size(b))
                     .then(rate_gap(a).total_cmp(&rate_gap(b)))
+                    .then(cap_gap(a).total_cmp(&cap_gap(b)))
                     .then(a.n_clients.cmp(&b.n_clients))
                     .then(a.n_helpers.cmp(&b.n_helpers))
                     .then(a.helper_down_rate.total_cmp(&b.helper_down_rate))
+                    .then(a.uplink_capacity.total_cmp(&b.uplink_capacity))
             })
     }
 
@@ -165,6 +178,12 @@ impl PolicyTable {
                             // no helper axis keep their pre-v5 bytes.
                             if e.helper_down_rate > 0.0 {
                                 pairs.push(("helper_down_rate", Json::Num(e.helper_down_rate)));
+                            }
+                            // 0.0 = dedicated transport: omitted, so
+                            // tables with no uplink axis keep their
+                            // pre-v7 bytes.
+                            if e.uplink_capacity > 0.0 {
+                                pairs.push(("uplink_capacity", Json::Num(e.uplink_capacity)));
                             }
                             Json::obj(pairs)
                         })
@@ -206,6 +225,20 @@ impl PolicyTable {
                     f
                 }
             };
+            // Absent in pre-v7 tables (and in dedicated entries) = 0.0.
+            let uplink_capacity = match e.get("uplink_capacity") {
+                Json::Null => 0.0,
+                v => {
+                    let f = v
+                        .as_f64()
+                        .with_context(|| format!("entry {k}: bad uplink_capacity {v}"))?;
+                    anyhow::ensure!(
+                        f.is_finite() && f >= 0.0,
+                        "entry {k}: uplink_capacity {f} must be finite and >= 0"
+                    );
+                    f
+                }
+            };
             entries.push(PolicyEntry {
                 scenario: e
                     .get("scenario")
@@ -216,6 +249,7 @@ impl PolicyTable {
                 n_helpers: e.get("n_helpers").as_usize().with_context(|| format!("entry {k}: missing/bad n_helpers"))?,
                 frontier_churn: frontier,
                 helper_down_rate,
+                uplink_capacity,
             });
         }
         Ok(PolicyTable::new(source, entries))
@@ -243,6 +277,7 @@ mod tests {
             n_helpers: 2,
             frontier_churn: frontier,
             helper_down_rate: 0.0,
+            uplink_capacity: 0.0,
         }
     }
 
@@ -300,8 +335,8 @@ mod tests {
                 PolicyEntry { helper_down_rate: 0.12, ..entry("scenario1", 10, Some(0.15)) },
             ],
         );
-        assert_eq!(t.lookup_at("scenario1", 10, 2, 0.0).unwrap().frontier_churn, Some(0.3));
-        assert_eq!(t.lookup_at("scenario1", 10, 2, 0.1).unwrap().frontier_churn, Some(0.15));
+        assert_eq!(t.lookup_at("scenario1", 10, 2, 0.0, 0.0).unwrap().frontier_churn, Some(0.3));
+        assert_eq!(t.lookup_at("scenario1", 10, 2, 0.1, 0.0).unwrap().frontier_churn, Some(0.15));
         // lookup() is the zero-rate view of the same table.
         assert_eq!(t.lookup("scenario1", 10, 2).unwrap().frontier_churn, Some(0.3));
         // Size proximity still dominates the rate axis.
@@ -312,7 +347,61 @@ mod tests {
                 entry("scenario1", 10, Some(0.3)),
             ],
         );
-        assert_eq!(far.lookup_at("scenario1", 12, 2, 0.12).unwrap().n_clients, 10);
+        assert_eq!(far.lookup_at("scenario1", 12, 2, 0.12, 0.0).unwrap().n_clients, 10);
+    }
+
+    #[test]
+    fn lookup_at_prefers_the_nearest_uplink_capacity() {
+        let t = PolicyTable::new(
+            "test".to_string(),
+            vec![
+                entry("scenario1", 10, Some(0.3)),
+                PolicyEntry { uplink_capacity: 2.0, ..entry("scenario1", 10, Some(0.1)) },
+            ],
+        );
+        // A dedicated run (capacity axis 0.0) matches the dedicated
+        // measurement; a shared run matches the nearest measured pool.
+        assert_eq!(t.lookup_at("scenario1", 10, 2, 0.0, 0.0).unwrap().frontier_churn, Some(0.3));
+        assert_eq!(t.lookup_at("scenario1", 10, 2, 0.0, 2.5).unwrap().frontier_churn, Some(0.1));
+        // The helper-outage axis still dominates the capacity axis.
+        let mixed = PolicyTable::new(
+            "test".to_string(),
+            vec![
+                PolicyEntry { helper_down_rate: 0.12, uplink_capacity: 2.0, ..entry("scenario1", 10, Some(0.2)) },
+                PolicyEntry { uplink_capacity: 4.0, ..entry("scenario1", 10, Some(0.1)) },
+            ],
+        );
+        assert_eq!(mixed.lookup_at("scenario1", 10, 2, 0.12, 4.0).unwrap().frontier_churn, Some(0.2));
+    }
+
+    #[test]
+    fn uplink_capacity_serializes_only_when_set() {
+        let t = PolicyTable::new(
+            "test".to_string(),
+            vec![
+                entry("scenario1", 10, Some(0.3)),
+                PolicyEntry { uplink_capacity: 2.0, ..entry("scenario1", 10, Some(0.1)) },
+            ],
+        );
+        let text = t.to_json().pretty();
+        assert_eq!(text.matches("uplink_capacity").count(), 1, "{text}");
+        let back = PolicyTable::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back, t, "absent key reads back as 0.0");
+        let bad = artifact::envelope(ArtifactKind::PolicyTable, vec![
+            ("source", Json::Str("x".into())),
+            (
+                "entries",
+                Json::Arr(vec![Json::obj(vec![
+                    ("scenario", Json::Str("s".into())),
+                    ("n_clients", Json::Num(4.0)),
+                    ("n_helpers", Json::Num(2.0)),
+                    ("frontier_churn", Json::Null),
+                    ("uplink_capacity", Json::Num(-1.0)),
+                ])]),
+            ),
+        ]);
+        let err = PolicyTable::from_json(&bad).unwrap_err().to_string();
+        assert!(err.contains("uplink_capacity"), "{err}");
     }
 
     #[test]

@@ -58,6 +58,17 @@ pub struct RoundReport {
     pub migrations: usize,
     /// At least one helper was in an outage when this round scheduled.
     pub degraded: bool,
+    /// Excess transfer slowdown from shared-uplink contention
+    /// ([`crate::solver::strategy::Signals::contention`]): 0.0 under the
+    /// dedicated transport, `factor(ceil(J/I)) − 1` under a shared pool.
+    /// Serialized only when positive so dedicated artifacts keep their
+    /// historical bytes.
+    pub contention: f64,
+    /// `Some("admm-y")` when a *kept* repair placed its arrivals with the
+    /// ADMM y-assignment warm start (the previous full solve routed to
+    /// ADMM); `None` for FCFS-placed repairs and all non-repair rounds.
+    /// Serialized only when `Some`.
+    pub repair_source: Option<&'static str>,
 }
 
 impl RoundReport {
@@ -66,7 +77,7 @@ impl RoundReport {
     /// the JSONL concatenation is exactly the final report's detail
     /// array).
     pub fn to_json(&self) -> Json {
-        Json::obj(vec![
+        let mut fields = vec![
             ("round", Json::Num(self.round as f64)),
             ("n_clients", Json::Num(self.n_clients as f64)),
             ("arrivals", Json::Num(self.arrivals as f64)),
@@ -92,7 +103,17 @@ impl RoundReport {
             ("orphaned_clients", Json::Num(self.orphaned_clients as f64)),
             ("migrations", Json::Num(self.migrations as f64)),
             ("degraded", Json::Bool(self.degraded)),
-        ])
+        ];
+        // Transport fields are emitted only when non-default so every
+        // dedicated-mode artifact stays byte-identical to pre-transport
+        // builds.
+        if self.contention > 0.0 {
+            fields.push(("contention", Json::Num(self.contention)));
+        }
+        if let Some(src) = self.repair_source {
+            fields.push(("repair_source", Json::Str(src.to_string())));
+        }
+        Json::obj(fields)
     }
 
     /// Single-line JSON for round-by-round streaming (JSONL).
@@ -172,6 +193,25 @@ impl RoundReport {
             Json::Bool(b) => *b,
             _ => anyhow::bail!("round report: bad \"degraded\""),
         };
+        // Transport fields are lenient (absent → default): they are
+        // emitted only when non-default, so every dedicated round omits
+        // them by design.
+        let contention = match doc.get("contention") {
+            Json::Null => 0.0,
+            v => {
+                let c = v.as_f64().context("round report: bad \"contention\"")?;
+                anyhow::ensure!(c.is_finite() && c >= 0.0, "round report: bad contention {c}");
+                c
+            }
+        };
+        let repair_source = match doc.get("repair_source") {
+            Json::Null => None,
+            v => match v.as_str().context("round report: bad \"repair_source\"")? {
+                "admm-y" => Some("admm-y"),
+                "fcfs" => Some("fcfs"),
+                s => anyhow::bail!("round report: unknown repair_source {s:?}"),
+            },
+        };
         Ok(RoundReport {
             round: int("round")?,
             n_clients: int("n_clients")?,
@@ -195,6 +235,8 @@ impl RoundReport {
             orphaned_clients: helper_int("orphaned_clients")?,
             migrations: helper_int("migrations")?,
             degraded,
+            contention,
+            repair_source,
         })
     }
 }
@@ -350,6 +392,8 @@ mod tests {
             orphaned_clients: if decision == "helper-degraded" { 1 } else { 0 },
             migrations: if decision == "helper-degraded" { 1 } else { 0 },
             degraded: decision.starts_with("helper"),
+            contention: 0.0,
+            repair_source: None,
         }
     }
 
@@ -447,6 +491,36 @@ mod tests {
             let err = RoundReport::from_json(&old).unwrap_err().to_string();
             assert!(err.contains("re-generate"), "{key}: {err}");
         }
+    }
+
+    #[test]
+    fn transport_fields_are_emitted_only_when_non_default() {
+        // A dedicated-mode round serializes without the transport keys —
+        // the historical byte shape.
+        let base = report().rounds[0].to_json();
+        assert_eq!(base.get("contention"), &Json::Null);
+        assert_eq!(base.get("repair_source"), &Json::Null);
+        assert!(!base.dump().contains("contention"));
+        assert!(!base.dump().contains("repair_source"));
+        // Absent keys parse to the defaults (lenient, unlike the v4/v5
+        // hard gates: pre-transport artifacts stay loadable).
+        let back = RoundReport::from_json(&base).unwrap();
+        assert_eq!(back.contention, 0.0);
+        assert_eq!(back.repair_source, None);
+        // Non-default values round-trip exactly.
+        let mut shared = round(1, "repair", 1100.0, 30);
+        shared.contention = 0.75;
+        shared.repair_source = Some("admm-y");
+        let doc = shared.to_json();
+        assert_eq!(doc.get("contention").as_f64(), Some(0.75));
+        assert_eq!(doc.get("repair_source").as_str(), Some("admm-y"));
+        assert_eq!(RoundReport::from_json(&doc).unwrap(), shared);
+        // Unknown sources are rejected, not interned.
+        let mut bad = doc.clone();
+        if let Json::Obj(obj) = &mut bad {
+            obj.insert("repair_source".into(), Json::Str("oracle".into()));
+        }
+        assert!(RoundReport::from_json(&bad).is_err());
     }
 
     #[test]

@@ -326,6 +326,24 @@ mod tests {
     }
 
     #[test]
+    fn serve_replays_shared_transport_byte_identically() {
+        // A shared-uplink session served over JSONL must reproduce the
+        // batch run's report lines exactly — the transport model lives
+        // in FleetCfg, so serve needs no knowledge of it beyond the
+        // session it drives.
+        let mut shared_cfg = cfg(6);
+        shared_cfg.transport = crate::transport::TransportCfg::shared(2.0);
+        let input = event_log(&shared_cfg);
+        let batch = run(&shared_cfg);
+        let mut out = Vec::new();
+        let mut session = FleetSession::new(shared_cfg);
+        let summary = serve(&mut session, input.as_bytes(), &mut out, &ServeOpts::default()).unwrap();
+        assert_eq!(summary, ServeSummary { rounds: 6, checkpoints: 0, errors: 0 });
+        let expect: String = batch.rounds.iter().map(|r| r.jsonl_line() + "\n").collect();
+        assert_eq!(String::from_utf8(out).unwrap(), expect);
+    }
+
+    #[test]
     fn checkpoint_control_line_snapshots_and_acks() {
         let name = format!("serve-ckpt-test-{}", std::process::id());
         let input = format!(

@@ -28,17 +28,17 @@
 
 use super::checkpoint::FleetCheckpoint;
 use super::events::{self, HelperRoster, RoundEvents};
-use super::orchestrator::{full_work, repair_assignment, Decision, FleetCfg, Policy};
+use super::orchestrator::{full_work, repair_assignment_guided, Decision, FleetCfg, Policy};
 use super::policy::PolicyTable;
 use super::report::{FleetReport, RoundReport};
 use crate::instance::scenario::{FleetClient, FleetHelper, FleetWorld};
-use crate::sim::epoch::replay_epoch;
+use crate::sim::epoch::replay_epoch_under;
 use crate::solver::admm::AdmmCfg;
 use crate::solver::greedy;
 use crate::solver::schedule::{fcfs_schedule, Schedule};
 use crate::solver::strategy;
 use crate::util::rng::fnv64 as fnv;
-use anyhow::Result;
+use anyhow::{Context, Result};
 use std::collections::BTreeMap;
 
 /// A resumable multi-round orchestration session (see module docs).
@@ -67,6 +67,11 @@ pub struct FleetSession {
     /// Lower-bound gap of the last full solve — the drift baseline
     /// (`f64::MAX` until the first full solve).
     last_full_gap: f64,
+    /// §VII method the last full solve routed to (`None` until one
+    /// lands). When it was ADMM, repair rounds reuse its assignment-step
+    /// objective to place arrivals (the `admm-y` warm start recorded in
+    /// [`RoundReport::repair_source`]).
+    last_full_method: Option<strategy::Method>,
     /// Round the next `step` must carry (`== completed.len()`).
     next_round: usize,
     completed: Vec<RoundReport>,
@@ -101,6 +106,7 @@ impl FleetSession {
             prev_assign: BTreeMap::new(),
             prev_roster_len: 0,
             last_full_gap: f64::MAX,
+            last_full_method: None,
             next_round: 0,
             completed: Vec::new(),
         }
@@ -163,6 +169,12 @@ impl FleetSession {
         session.prev_assign = ckpt.prev_assign;
         session.prev_roster_len = ckpt.prev_roster_len;
         session.last_full_gap = ckpt.last_full_gap;
+        session.last_full_method = match ckpt.last_full_method {
+            None => None,
+            Some(name) => Some(strategy::Method::parse(name).with_context(|| {
+                format!("checkpoint: unknown last_full_method {name:?}")
+            })?),
+        };
         session.next_round = ckpt.next_round;
         session.completed = ckpt.rounds;
         Ok(session)
@@ -177,6 +189,7 @@ impl FleetSession {
             next_round: self.next_round,
             prev_roster_len: self.prev_roster_len,
             last_full_gap: self.last_full_gap,
+            last_full_method: self.last_full_method.map(|m| m.name()),
             prev_assign: self.prev_assign.clone(),
             helpers_live: self.helpers.live.clone(),
             helpers_down: self.helpers.down.clone(),
@@ -242,10 +255,11 @@ impl FleetSession {
     /// is a byte-identical prefix of the stream for M > N rounds, which
     /// is what makes `--resume` with a longer `--rounds` horizon sound.
     pub fn event_stream(&self) -> Vec<RoundEvents> {
-        events::generate_with_helpers(
+        events::generate_fleet(
             self.world.base_clients(),
             &self.cfg.churn,
             &self.cfg.helper_churn,
+            &self.cfg.flash,
             self.world.n_helpers(),
             self.cfg.scenario.seed ^ fnv(&self.cfg.scenario.spec.name),
         )
@@ -355,8 +369,43 @@ impl FleetSession {
         let lb = lb_raw.max(1);
         // Instance-shape signals, computed once per round: full solves
         // consume them for the §VII pick and the round report surfaces
-        // them for the analyze layer (ROADMAP item 5).
-        let sig = strategy::signals(&inst);
+        // them for the analyze layer (ROADMAP item 5). Under the
+        // dedicated transport default the contention signal is exactly
+        // 0.0 and this is byte-identical to `strategy::signals`.
+        let sig = strategy::signals_under(&inst, &cfg.transport);
+        // Deterministic surcharge for pricing contention: every shared-
+        // mode schedule (full or repaired) pays one inflation pass over
+        // the edge set before FCFS can run. Zero under dedicated, so
+        // historical work proxies are untouched.
+        let transport_work: u64 = if cfg.transport.is_dedicated() {
+            0
+        } else {
+            (inst.n_clients * inst.n_helpers) as u64
+        };
+        // Makespan of a schedule on the instance it was actually built
+        // against: the contention-inflated projection in shared mode,
+        // the raw instance under the dedicated default.
+        let makespan_under = |s: &Schedule| -> u32 {
+            if cfg.transport.is_dedicated() {
+                s.makespan(&inst)
+            } else {
+                s.makespan(&cfg.transport.inflate_for_assignment(&inst, &s.assignment))
+            }
+        };
+        // FCFS against the transport-effective instance for a repaired
+        // assignment (identity in dedicated mode).
+        let fcfs_under = |a: crate::solver::schedule::Assignment| -> Schedule {
+            if cfg.transport.is_dedicated() {
+                fcfs_schedule(&inst, a)
+            } else {
+                let eff = cfg.transport.inflate_for_assignment(&inst, &a);
+                fcfs_schedule(&eff, a)
+            }
+        };
+        // Whether repair rounds reuse the last full ADMM solve's
+        // assignment objective for arrival placement (the `admm-y` warm
+        // start); read *before* this round possibly replaces it.
+        let admm_y = matches!(self.last_full_method, Some(strategy::Method::Admm));
         // The auto policy's per-round consult (None for other policies or
         // when nothing fires). A measured frontier firing is FullAuto; a
         // family the table does not cover falls back to the static churn
@@ -369,6 +418,9 @@ impl FleetSession {
                     roster.len(),
                     inst.n_helpers,
                     cfg.helper_churn.down_rate,
+                    // 0.0 is the dedicated-transport axis value, matching
+                    // the grid's `--uplink-capacities 0` cell.
+                    if cfg.transport.is_dedicated() { 0.0 } else { cfg.transport.capacity },
                 ) {
                 Some(entry) => match entry.frontier_churn {
                     Some(frontier) if churn_frac >= frontier => Some(Decision::FullAuto),
@@ -383,11 +435,22 @@ impl FleetSession {
         };
         let full_solve = |work_base: u64| -> ((Schedule, Option<strategy::Method>), u64) {
             // The wedge-free world guarantees a greedy assignment exists,
-            // so a full solve can never come up empty.
-            let (s, m) = strategy::solve_with_signals(&inst, admm_cfg, &sig)
-                .or_else(|| greedy::solve(&inst).map(|s| (s, strategy::Method::BalancedGreedy)))
-                .expect("wedge-free world must admit a greedy assignment");
-            let w = work_base + full_work(&inst, m, admm_cfg);
+            // so a full solve can never come up empty. Shared mode
+            // routes through the transport-aware solve path (shape the
+            // assignment on the contention estimate, schedule on the
+            // per-assignment effective rates); dedicated mode is the
+            // historical byte-identical path.
+            let solved = if cfg.transport.is_dedicated() {
+                strategy::solve_with_signals(&inst, admm_cfg, &sig)
+                    .or_else(|| greedy::solve(&inst).map(|s| (s, strategy::Method::BalancedGreedy)))
+            } else {
+                strategy::solve_under(&inst, &cfg.transport, admm_cfg).or_else(|| {
+                    greedy::solve_under(&inst, &cfg.transport)
+                        .map(|s| (s, strategy::Method::BalancedGreedy))
+                })
+            };
+            let (s, m) = solved.expect("wedge-free world must admit a greedy assignment");
+            let w = work_base + full_work(&inst, m, admm_cfg) + transport_work;
             ((s, Some(m)), w)
         };
 
@@ -416,10 +479,11 @@ impl FleetSession {
             (Decision::HelperResolve, Some(s), 0, 0, 0, w)
         } else {
             let mut work = 0u64;
-            match repair_assignment(&inst, &ev.roster, &prev_pos, &mut work) {
+            match repair_assignment_guided(&inst, &ev.roster, &prev_pos, &mut work, admm_y) {
                 Some(rep) => {
-                    let s = fcfs_schedule(&inst, rep.assignment);
-                    let gap = s.makespan(&inst) as f64 / lb as f64;
+                    let s = fcfs_under(rep.assignment);
+                    work += transport_work;
+                    let gap = makespan_under(&s) as f64 / lb as f64;
                     if matches!(cfg.policy, Policy::Incremental | Policy::Auto)
                         && gap > cfg.gap_threshold * last_full_gap
                     {
@@ -466,17 +530,33 @@ impl FleetSession {
         // per orphan), whichever path scheduled the round.
         let work = work + 2 * orphaned as u64;
         if decision.is_full() {
-            if let Some((s, _)) = &schedule {
-                self.last_full_gap = s.makespan(&inst) as f64 / lb as f64;
+            if let Some((s, m)) = &schedule {
+                self.last_full_gap = makespan_under(s) as f64 / lb as f64;
+                if m.is_some() {
+                    self.last_full_method = *m;
+                }
             }
         }
+        // The kept repair's warm-start source, for `analyze --rounds`
+        // repair-source counts. `None` (the FCFS default and every
+        // non-repair round) is not serialized, so dedicated runs that
+        // never route to ADMM keep historical bytes.
+        let repair_source: Option<&'static str> =
+            match (decision, admm_y) {
+                (Decision::Repair | Decision::HelperDegraded, true) => Some("admm-y"),
+                _ => None,
+            };
 
         let (makespan_slots, preemptions, period_ms, method) = match &schedule {
             Some((s, m)) => {
-                debug_assert!(s.is_feasible(&inst), "round {} schedule infeasible", ev.round);
+                debug_assert!(
+                    s.violations_under(&inst, &cfg.transport).is_empty(),
+                    "round {} schedule infeasible under the transport checker",
+                    ev.round
+                );
                 let _sp = crate::obs::span("fleet", "fleet/replay-epoch");
-                let e = replay_epoch(&ms, s, cfg.epoch_batches.max(1));
-                (s.makespan(&inst), s.preemptions(), e.period_ms, m.map(|m| m.name()))
+                let e = replay_epoch_under(&ms, s, cfg.epoch_batches.max(1), &cfg.transport);
+                (makespan_under(s), s.preemptions(), e.period_ms, m.map(|m| m.name()))
             }
             None => (0, 0, 0.0, None),
         };
@@ -503,6 +583,8 @@ impl FleetSession {
             heterogeneity: sig.heterogeneity,
             placement_flexibility: sig.placement_flexibility,
             tail_ratio: sig.tail_ratio,
+            contention: sig.contention,
+            repair_source,
             helpers_live: live_ids.len(),
             orphaned_clients: orphaned,
             migrations,
@@ -528,19 +610,20 @@ impl FleetSession {
     /// Finish the session: the same [`FleetReport`] the batch entry
     /// points produce (resumed prefixes included).
     pub fn into_report(self) -> FleetReport {
-        FleetReport::new(
-            format!(
-                "fleet:{}/{} J={} I={} seed={}",
-                self.cfg.scenario.spec.name,
-                self.cfg.scenario.model.name(),
-                self.cfg.scenario.n_clients,
-                self.cfg.scenario.n_helpers,
-                self.cfg.scenario.seed
-            ),
-            self.cfg.policy.name().to_string(),
-            self.slot_ms,
-            self.completed,
-        )
+        let mut label = format!(
+            "fleet:{}/{} J={} I={} seed={}",
+            self.cfg.scenario.spec.name,
+            self.cfg.scenario.model.name(),
+            self.cfg.scenario.n_clients,
+            self.cfg.scenario.n_helpers,
+            self.cfg.scenario.seed
+        );
+        // Shared-uplink runs tag the label; the dedicated default keeps
+        // the historical label bytes.
+        if !self.cfg.transport.is_dedicated() {
+            label.push_str(&format!(" link=shared cap={}", self.cfg.transport.capacity));
+        }
+        FleetReport::new(label, self.cfg.policy.name().to_string(), self.slot_ms, self.completed)
     }
 }
 
@@ -629,6 +712,73 @@ mod tests {
         assert!(session.extend_rounds(2).is_err());
         session.extend_rounds(6).unwrap();
         assert_eq!(session.cfg().churn.rounds, 6);
+    }
+
+    #[test]
+    fn repair_source_tracks_the_last_full_method() {
+        let mut session = FleetSession::new(cfg(Policy::Incremental, 10));
+        let stream = session.event_stream();
+        let reports: Vec<_> = stream.iter().map(|ev| session.step(ev)).collect();
+        for (k, r) in reports.iter().enumerate() {
+            if r.decision == "repair" || r.decision == "helper-degraded" {
+                // The warm-start source is admm-y exactly when the most
+                // recent full solve routed to ADMM.
+                let last_full = reports[..k].iter().rev().find_map(|p| p.method);
+                let want = if last_full == Some("admm") { Some("admm-y") } else { None };
+                assert_eq!(r.repair_source, want, "round {k}");
+            } else {
+                assert_eq!(r.repair_source, None, "round {k}: non-repair rounds have no source");
+            }
+        }
+        // J = 10 routes full solves to ADMM (§VII), so this fleet must
+        // actually exercise the admm-y warm start at least once.
+        assert!(
+            reports.iter().any(|r| r.repair_source == Some("admm-y")),
+            "no admm-y repair in a fleet whose full solves route to ADMM"
+        );
+    }
+
+    #[test]
+    fn checkpoint_carries_last_full_method_across_resume() {
+        let straight = run(&cfg(Policy::Incremental, 8));
+        let mut first = FleetSession::new(cfg(Policy::Incremental, 8));
+        let stream = first.event_stream();
+        // Stop right after round 0: the resumed session's first repair
+        // decision depends on last_full_method being restored.
+        first.step(&stream[0]);
+        let ckpt = first.checkpoint();
+        assert_eq!(ckpt.last_full_method, Some("admm"), "round 0 routes to ADMM at J=10");
+        let mut resumed = FleetSession::resume(ckpt).unwrap();
+        for ev in &stream[1..] {
+            resumed.step(ev);
+        }
+        assert_eq!(resumed.into_report().to_json().pretty(), straight.to_json().pretty());
+    }
+
+    #[test]
+    fn shared_transport_session_is_deterministic_and_checker_feasible() {
+        let mk = || {
+            let mut c = cfg(Policy::Incremental, 8);
+            c.transport = crate::transport::TransportCfg::shared(2.0);
+            c
+        };
+        let a = run(&mk());
+        let b = run(&mk());
+        assert_eq!(a.to_json().pretty(), b.to_json().pretty(), "shared mode is deterministic");
+        assert!(a.label.contains("link=shared cap=2"), "label records the link mode: {}", a.label);
+        // Contention is recorded on loaded rounds (ceil(J/I) > capacity
+        // for most of this fleet) and absent from the dedicated run.
+        assert!(
+            a.rounds.iter().any(|r| r.contention > 0.0),
+            "no round recorded uplink contention at capacity 2"
+        );
+        let ded = run(&cfg(Policy::Incremental, 8));
+        assert!(ded.rounds.iter().all(|r| r.contention == 0.0));
+        for r in &a.rounds {
+            if r.n_clients > 0 {
+                assert!(r.makespan_slots >= r.lower_bound, "round {}", r.round);
+            }
+        }
     }
 
     #[test]

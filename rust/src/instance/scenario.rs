@@ -47,11 +47,12 @@ pub enum Scenario {
     S5MemoryStarved,
     S6MegaHomogeneous,
     S7HelperBursts,
+    S8FlashCrowd,
 }
 
 impl Scenario {
     /// Every named family, in canonical order (sweep grids iterate this).
-    pub const ALL: [Scenario; 7] = [
+    pub const ALL: [Scenario; 8] = [
         Scenario::S1,
         Scenario::S2,
         Scenario::S3Clustered,
@@ -59,6 +60,7 @@ impl Scenario {
         Scenario::S5MemoryStarved,
         Scenario::S6MegaHomogeneous,
         Scenario::S7HelperBursts,
+        Scenario::S8FlashCrowd,
     ];
 
     pub fn name(self) -> &'static str {
@@ -70,6 +72,7 @@ impl Scenario {
             Scenario::S5MemoryStarved => "s5-memory-starved",
             Scenario::S6MegaHomogeneous => "s6-mega-homogeneous",
             Scenario::S7HelperBursts => "s7-helper-bursts",
+            Scenario::S8FlashCrowd => "s8-flash-crowd",
         }
     }
 
@@ -82,6 +85,7 @@ impl Scenario {
             "5" | "s5" | "s5-memory-starved" | "memory-starved" => Some(Scenario::S5MemoryStarved),
             "6" | "s6" | "s6-mega-homogeneous" | "mega-homogeneous" => Some(Scenario::S6MegaHomogeneous),
             "7" | "s7" | "s7-helper-bursts" | "helper-bursts" => Some(Scenario::S7HelperBursts),
+            "8" | "s8" | "s8-flash-crowd" | "flash-crowd" => Some(Scenario::S8FlashCrowd),
             _ => None,
         }
     }
@@ -96,6 +100,7 @@ impl Scenario {
             Scenario::S5MemoryStarved => ScenarioSpec::s5_memory_starved(),
             Scenario::S6MegaHomogeneous => ScenarioSpec::s6_mega_homogeneous(),
             Scenario::S7HelperBursts => ScenarioSpec::s7_helper_bursts(),
+            Scenario::S8FlashCrowd => ScenarioSpec::s8_flash_crowd(),
         }
     }
 }
@@ -369,6 +374,29 @@ impl ScenarioSpec {
             cut_policy: CutPolicy::Default,
             memory: MemoryModel::FullRam,
             link: LinkRegime::AkamaiFrance,
+            jitter_sigma: 0.10,
+            churn: 0.10,
+            packable: true,
+        }
+    }
+
+    /// Flash-crowd stress family: a cellular client fleet with stationary
+    /// churn whose *arrival* stream spikes in periodic bursts. The fleet
+    /// orchestrator pairs this family with burst arrival multipliers
+    /// ([`FlashCrowdCfg`](crate::fleet::events::FlashCrowdCfg)) seeded on
+    /// the existing client-event stream; the per-instance spec stays mild
+    /// so spike rounds isolate the arrival-surge effect. Cellular-like
+    /// links make it the natural companion to the shared-uplink transport
+    /// model (flash crowds contend for the same pools they flood).
+    /// Packable, so repair survives arrival surges up to `max_clients`.
+    pub fn s8_flash_crowd() -> ScenarioSpec {
+        ScenarioSpec {
+            name: "s8-flash-crowd".to_string(),
+            client_mix: DeviceMix::Pool,
+            helper_mix: DeviceMix::Pool,
+            cut_policy: CutPolicy::Default,
+            memory: MemoryModel::FullRam,
+            link: LinkRegime::CellularLike,
             jitter_sigma: 0.10,
             churn: 0.10,
             packable: true,
@@ -1243,7 +1271,7 @@ mod tests {
     #[test]
     fn families_differ_from_presets() {
         let base = ScenarioCfg::new(Scenario::S1, Model::ResNet101, 12, 3, 5).generate();
-        for scen in [Scenario::S3Clustered, Scenario::S4StragglerTail, Scenario::S5MemoryStarved, Scenario::S6MegaHomogeneous, Scenario::S7HelperBursts] {
+        for scen in [Scenario::S3Clustered, Scenario::S4StragglerTail, Scenario::S5MemoryStarved, Scenario::S6MegaHomogeneous, Scenario::S7HelperBursts, Scenario::S8FlashCrowd] {
             let inst = ScenarioCfg::new(scen, Model::ResNet101, 12, 3, 5).generate();
             assert_ne!(inst.p_ms, base.p_ms, "{} should not clone scenario1", scen.name());
         }

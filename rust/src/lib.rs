@@ -77,6 +77,22 @@
 //! `psl shard` runs a scenario × size grid through this pipeline and
 //! persists the `psl-shard` artifact.
 //!
+//! ## Transport
+//!
+//! All transfer-time computation flows through one abstraction
+//! ([`transport`]): [`transport::LinkMode::Dedicated`] is the paper's
+//! fixed per-edge delay model (byte-identical to the pre-transport code
+//! path), and [`transport::LinkMode::Shared`] models per-helper uplink
+//! pools where `k` concurrent transfers each progress at `capacity/k`
+//! of their dedicated rate (exact fluid law in [`transport::pool`];
+//! solvers consume the conservative static projection
+//! [`transport::TransportCfg::inflate`]). The `--link-model` /
+//! `--uplink-capacity` knobs on `psl solve|sweep|fleet|serve` select the
+//! mode, `Schedule::violations_under` checks feasibility against it,
+//! the sim replay engines resolve transfer phases through it, and the
+//! `--uplink-capacities` fleet-grid axis flows through `psl analyze`
+//! regime tables into per-capacity policy-table frontiers.
+//!
 //! ## Performance
 //!
 //! Schedules are run-length encoded ([`solver::schedule::SlotRuns`]):
@@ -135,4 +151,5 @@ pub mod shard;
 pub mod sim;
 pub mod slexec;
 pub mod solver;
+pub mod transport;
 pub mod util;

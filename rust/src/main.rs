@@ -286,6 +286,8 @@ fn reject_recorded_flags(args: &Args) -> Result<()> {
         "max-helpers",
         "diurnal-period",
         "capacity-threshold",
+        "link-model",
+        "uplink-capacity",
     ] {
         anyhow::ensure!(
             !args.flags.contains_key(key),
@@ -294,6 +296,39 @@ fn reject_recorded_flags(args: &Args) -> Result<()> {
         );
     }
     Ok(())
+}
+
+/// Transport-model knobs shared by `psl fleet`, `psl serve` and
+/// `psl sweep`: `--link-model dedicated|shared` plus the shared pool's
+/// `--uplink-capacity`. Absent flags keep the dedicated default — and its
+/// byte-identical artifacts.
+fn parse_transport_flags(args: &Args) -> Result<psl::transport::TransportCfg> {
+    use psl::transport::{LinkMode, TransportCfg, DEFAULT_UPLINK_CAPACITY};
+    let mode = match args.flags.get("link-model") {
+        None => LinkMode::Dedicated,
+        Some(v) => {
+            LinkMode::parse(v).with_context(|| format!("bad --link-model {v:?} (dedicated|shared)"))?
+        }
+    };
+    match mode {
+        LinkMode::Dedicated => {
+            // A capacity on dedicated links would be silently ignored —
+            // reject it so the run means what the command line says.
+            anyhow::ensure!(
+                !args.flags.contains_key("uplink-capacity"),
+                "--uplink-capacity needs --link-model shared"
+            );
+            Ok(TransportCfg::dedicated())
+        }
+        LinkMode::Shared => {
+            let cap: f64 = parsed_flag(args, "uplink-capacity", DEFAULT_UPLINK_CAPACITY)?;
+            anyhow::ensure!(
+                cap.is_finite() && cap > 0.0,
+                "--uplink-capacity must be finite and > 0, got {cap}"
+            );
+            Ok(TransportCfg::shared(cap))
+        }
+    }
 }
 
 /// Helper-dynamics knobs shared by `psl fleet` and `psl serve`, applied
@@ -395,18 +430,25 @@ fn cmd_sweep_grid(args: &Args) -> Result<()> {
         seeds,
         methods,
         slot_ms,
+        transport: parse_transport_flags(args)?,
         threads: args.usize_of("threads", psl::exec::pool::default_workers()),
     };
     let n_cells = psl::bench::sweep::cells(&cfg).len();
+    let link = if cfg.transport.is_dedicated() {
+        String::new()
+    } else {
+        format!(" | link=shared cap={}", cfg.transport.capacity)
+    };
     println!(
-        "sweep: {} scenarios x {} models x {} sizes x {} seeds x {} methods = {} cells on {} threads",
+        "sweep: {} scenarios x {} models x {} sizes x {} seeds x {} methods = {} cells on {} threads{}",
         cfg.scenarios.len(),
         cfg.models.len(),
         cfg.sizes.len(),
         cfg.seeds.len(),
         cfg.methods.len(),
         n_cells,
-        cfg.threads
+        cfg.threads,
+        link
     );
     let start = std::time::Instant::now();
     let rows = psl::bench::sweep::run(&cfg);
@@ -509,6 +551,7 @@ fn cmd_fleet(args: &Args) -> Result<()> {
         cfg.gap_threshold = parsed_flag(args, "gap-threshold", cfg.gap_threshold)?;
         cfg.epoch_batches = parsed_flag(args, "batches", cfg.epoch_batches)?;
         apply_helper_flags(args, &mut cfg)?;
+        cfg.transport = parse_transport_flags(args)?;
         if let Some(table_path) = args.flags.get("policy-table") {
             anyhow::ensure!(
                 policy == Policy::Auto,
@@ -679,6 +722,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         cfg.gap_threshold = parsed_flag(args, "gap-threshold", cfg.gap_threshold)?;
         cfg.epoch_batches = parsed_flag(args, "batches", cfg.epoch_batches)?;
         apply_helper_flags(args, &mut cfg)?;
+        cfg.transport = parse_transport_flags(args)?;
         if let Some(table_path) = args.flags.get("policy-table") {
             anyhow::ensure!(
                 policy == Policy::Auto,
@@ -949,8 +993,26 @@ fn cmd_analyze(args: &Args) -> Result<()> {
     let rows = psl::analyze::rows_from_doc(&doc)?;
     let tables = psl::analyze::regime_tables(&rows);
     println!("analyze: {} grid rows -> {} regime tables", rows.len(), tables.len());
+    // Regime axes beyond scenario/size print only when non-default, so
+    // plain grids keep their historical header lines.
+    let axes = |helper_down_rate: f64, uplink_capacity: f64| {
+        let mut s = String::new();
+        if helper_down_rate > 0.0 {
+            s.push_str(&format!(" h-down={helper_down_rate:.2}"));
+        }
+        if uplink_capacity > 0.0 {
+            s.push_str(&format!(" uplink-cap={uplink_capacity}"));
+        }
+        s
+    };
     for t in &tables {
-        println!("  {} {}x{}:", t.scenario, t.n_clients, t.n_helpers);
+        println!(
+            "  {} {}x{}{}:",
+            t.scenario,
+            t.n_clients,
+            t.n_helpers,
+            axes(t.helper_down_rate, t.uplink_capacity)
+        );
         println!(
             "    {:>6} {:>9} {:<12} {:>5} {:>13} {:>12} {:>14}",
             "churn", "obs-churn", "policy", "seeds", "makespan[s]", "work", "score"
@@ -975,14 +1037,15 @@ fn cmd_analyze(args: &Args) -> Result<()> {
     );
     println!("policy frontier (full re-solving overtakes incremental repair at):");
     for f in &frontiers {
+        let ax = axes(f.helper_down_rate, f.uplink_capacity);
         match f.crossover {
             Some(frac) => println!(
-                "  {} {}x{}: observed churn >= {:.2}  ({} rates compared)",
-                f.scenario, f.n_clients, f.n_helpers, frac, f.rates_compared
+                "  {} {}x{}{}: observed churn >= {:.2}  ({} rates compared)",
+                f.scenario, f.n_clients, f.n_helpers, ax, frac, f.rates_compared
             ),
             None => println!(
-                "  {} {}x{}: incremental wins at every measured rate ({} compared)",
-                f.scenario, f.n_clients, f.n_helpers, f.rates_compared
+                "  {} {}x{}{}: incremental wins at every measured rate ({} compared)",
+                f.scenario, f.n_clients, f.n_helpers, ax, f.rates_compared
             ),
         }
     }
@@ -1011,12 +1074,12 @@ fn cmd_rounds_summary(path: &str) -> Result<()> {
     anyhow::ensure!(!rows.is_empty(), "{path} contains no rounds");
     println!("rounds: {} streamed from {path}", rows.len());
     println!(
-        "  {:<15} {:>6} {:>10} {:>14} {:>12} {:>12} {:>5} {:>5}",
-        "decision", "rounds", "mean-churn", "makespan[s]", "period[s]", "work", "degr", "orph"
+        "  {:<15} {:>6} {:>10} {:>14} {:>12} {:>12} {:>5} {:>5} {:>6} {:>9}",
+        "decision", "rounds", "mean-churn", "makespan[s]", "period[s]", "work", "degr", "orph", "admm-y", "mean-cont"
     );
     for s in psl::analyze::rounds::summarize(&rows) {
         println!(
-            "  {:<15} {:>6} {:>10.2} {:>14.1} {:>12.1} {:>12} {:>5} {:>5}",
+            "  {:<15} {:>6} {:>10.2} {:>14.1} {:>12.1} {:>12} {:>5} {:>5} {:>6} {:>9.2}",
             s.decision,
             s.rounds,
             s.mean_churn_frac,
@@ -1024,7 +1087,9 @@ fn cmd_rounds_summary(path: &str) -> Result<()> {
             s.mean_period_ms / 1000.0,
             s.total_work_units,
             s.degraded_rounds,
-            s.orphaned_clients
+            s.orphaned_clients,
+            s.admm_y_repairs,
+            s.mean_contention
         );
     }
     Ok(())
@@ -1140,10 +1205,12 @@ fn cmd_fleet_grid(args: &Args) -> Result<()> {
         "max-helpers",
         "diurnal-period",
         "capacity-threshold",
+        "link-model",
+        "uplink-capacity",
     ] {
         anyhow::ensure!(
             !args.flags.contains_key(key),
-            "--{key} applies to single fleet runs, not --grid (grid axes: --scenarios/--churn-rates/--helper-down-rates/--policies/--seeds)"
+            "--{key} applies to single fleet runs, not --grid (grid axes: --scenarios/--churn-rates/--helper-down-rates/--uplink-capacities/--policies/--seeds)"
         );
     }
     let list = |key: &str, default: &str| csv_list(args, key, default);
@@ -1169,6 +1236,20 @@ fn cmd_fleet_grid(args: &Args) -> Result<()> {
                 "helper down rate {r} outside [0, 1]"
             );
             Ok(r)
+        })
+        .collect::<Result<Vec<_>>>()?;
+    // The transport axis: 0 = dedicated links, > 0 = a shared uplink pool
+    // of that capacity. Mirrors --helper-down-rates' shape so frontier
+    // grids can sweep both failure and contention regimes at once.
+    let uplink_capacities = list("uplink-capacities", "0")
+        .iter()
+        .map(|s| {
+            let c: f64 = s.parse().ok().with_context(|| format!("bad uplink capacity {s:?}"))?;
+            anyhow::ensure!(
+                c.is_finite() && c >= 0.0,
+                "uplink capacity {c} must be finite and >= 0 (0 = dedicated)"
+            );
+            Ok(c)
         })
         .collect::<Result<Vec<_>>>()?;
     let policies = list("policies", "incremental,full")
@@ -1208,6 +1289,7 @@ fn cmd_fleet_grid(args: &Args) -> Result<()> {
         size: (j, i),
         churn_rates,
         helper_down_rates,
+        uplink_capacities,
         policies,
         seeds,
         rounds,
@@ -1217,10 +1299,11 @@ fn cmd_fleet_grid(args: &Args) -> Result<()> {
     };
     let n = grid::cells(&cfg).len();
     println!(
-        "fleet grid: {} scenarios x {} churn rates x {} helper rates x {} policies x {} seeds = {} cells on {} threads",
+        "fleet grid: {} scenarios x {} churn rates x {} helper rates x {} uplink capacities x {} policies x {} seeds = {} cells on {} threads",
         cfg.scenarios.len(),
         cfg.churn_rates.len(),
         cfg.helper_down_rates.len(),
+        cfg.uplink_capacities.len(),
         cfg.policies.len(),
         cfg.seeds.len(),
         n,
@@ -1228,15 +1311,16 @@ fn cmd_fleet_grid(args: &Args) -> Result<()> {
     );
     let rows = grid::run(&cfg);
     println!(
-        "  {:<20} {:>6} {:>6} {:<12} {:>6} {:>5} {:>7} {:>6} {:>13} {:>11} {:>12}",
-        "scenario", "churn", "h-down", "policy", "seed", "full", "repair", "empty", "makespan[s]", "period[s]", "work"
+        "  {:<20} {:>6} {:>6} {:>6} {:<12} {:>6} {:>5} {:>7} {:>6} {:>13} {:>11} {:>12}",
+        "scenario", "churn", "h-down", "uplink", "policy", "seed", "full", "repair", "empty", "makespan[s]", "period[s]", "work"
     );
     for r in &rows {
         println!(
-            "  {:<20} {:>6.2} {:>6.2} {:<12} {:>6} {:>5} {:>7} {:>6} {:>13.1} {:>11.1} {:>12}",
+            "  {:<20} {:>6.2} {:>6.2} {:>6} {:<12} {:>6} {:>5} {:>7} {:>6} {:>13.1} {:>11.1} {:>12}",
             r.scenario,
             r.churn_rate,
             r.helper_down_rate,
+            if r.uplink_capacity > 0.0 { format!("{}", r.uplink_capacity) } else { "-".into() },
             r.policy,
             r.seed,
             r.full_rounds,

@@ -122,6 +122,24 @@ pub fn replay(inst: &InstanceMs, schedule: &Schedule, mut jitter: Option<(&mut R
     Replay { makespan_ms: makespan, completion_ms: completion, helper_busy_ms: busy, helper_util: util, queuing_ms: queuing }
 }
 
+/// [`replay`] under a transport model: transfer phases (r, l, l', r') are
+/// resolved through the same contention projection the solver scheduled
+/// against ([`crate::transport::TransportCfg::inflate_ms_for_assignment`]), so simulator
+/// and solver can never disagree about effective rates. Dedicated mode
+/// delegates directly — bitwise-identical to [`replay`].
+pub fn replay_under(
+    inst: &InstanceMs,
+    schedule: &Schedule,
+    transport: &crate::transport::TransportCfg,
+    jitter: Option<(&mut Rng, f64)>,
+) -> Replay {
+    if transport.is_dedicated() {
+        return replay(inst, schedule, jitter);
+    }
+    let eff = transport.inflate_ms_for_assignment(inst, &schedule.assignment);
+    replay(&eff, schedule, jitter)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -86,6 +86,23 @@ pub fn replay_epoch(inst: &InstanceMs, schedule: &Schedule, batches: usize) -> E
     EpochReplay { epoch_ms, batch_ms: first_batch_ms, period_ms: period }
 }
 
+/// [`replay_epoch`] under a transport model: the same contention
+/// projection the solver and the single-batch engine use
+/// ([`crate::transport::TransportCfg::inflate_ms_for_assignment`]); dedicated mode
+/// delegates directly (bitwise-identical).
+pub fn replay_epoch_under(
+    inst: &InstanceMs,
+    schedule: &Schedule,
+    batches: usize,
+    transport: &crate::transport::TransportCfg,
+) -> EpochReplay {
+    if transport.is_dedicated() {
+        return replay_epoch(inst, schedule, batches);
+    }
+    let eff = transport.inflate_ms_for_assignment(inst, &schedule.assignment);
+    replay_epoch(&eff, schedule, batches)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

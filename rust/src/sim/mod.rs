@@ -17,6 +17,6 @@ pub mod metrics;
 pub mod quantize;
 pub mod segments;
 
-pub use engine::{replay, Replay};
+pub use engine::{replay, replay_under, Replay};
 pub use metrics::{gantt_json, summarize, ScheduleMetrics};
 pub use segments::{streams, TaskSeg};

@@ -17,6 +17,7 @@ use crate::instance::Instance;
 use crate::runtime::Tensor;
 use crate::solver::schedule::Schedule;
 use anyhow::{Context, Result};
+use std::collections::BTreeMap;
 use std::time::Instant;
 
 #[derive(Clone, Debug)]
@@ -88,7 +89,12 @@ impl Driver {
 
         // Helper tasks in global slot order (cross-helper order is
         // irrelevant — helpers are independent — but this mirrors the
-        // timeline and keeps the run deterministic).
+        // timeline and keeps the run deterministic). Tasks are derived
+        // from the shared [`crate::sim::segments`] projection — the same
+        // per-helper streams the replay engines execute — so the PJRT
+        // driver and the simulators agree on what the schedule says down
+        // to preemption segments. An HLO call is atomic, so each task
+        // runs once, at its *final* segment's completion slot.
         #[derive(Clone, Copy)]
         struct Task {
             helper: usize,
@@ -96,16 +102,19 @@ impl Driver {
             is_bwd: bool,
             completion_slot: u32,
         }
-        let mut tasks: Vec<Task> = Vec::new();
-        for j in 0..self.clients.len() {
-            let i = self.schedule.assignment.helper_of[j];
-            if let Some(last) = self.schedule.fwd[j].last_slot() {
-                tasks.push(Task { helper: i, client: j, is_bwd: false, completion_slot: last });
-            }
-            if let Some(last) = self.schedule.bwd[j].last_slot() {
-                tasks.push(Task { helper: i, client: j, is_bwd: true, completion_slot: last });
+        let streams = crate::sim::segments::streams(self.helpers.len(), &self.schedule);
+        let mut completion: BTreeMap<(usize, usize, bool), u32> = BTreeMap::new();
+        for (i, stream) in streams.iter().enumerate() {
+            for seg in stream {
+                let end = seg.start + seg.len - 1;
+                let e = completion.entry((i, seg.client, seg.is_bwd)).or_insert(end);
+                *e = (*e).max(end);
             }
         }
+        let mut tasks: Vec<Task> = completion
+            .into_iter()
+            .map(|((helper, client, is_bwd), completion_slot)| Task { helper, client, is_bwd, completion_slot })
+            .collect();
         tasks.sort_by_key(|t| (t.completion_slot, t.is_bwd, t.client));
 
         let mut a2_of: Vec<Option<Tensor>> = vec![None; self.clients.len()];

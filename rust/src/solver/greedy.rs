@@ -31,6 +31,21 @@ pub fn solve(inst: &Instance) -> Option<Schedule> {
     Some(fcfs_schedule(inst, balanced_assignment(inst)?))
 }
 
+/// Balanced-greedy under a transport model. The assignment step depends
+/// only on memory, which contention never changes, so the assignment is
+/// identical to [`solve`]'s; the FCFS schedule then runs against the
+/// contention-inflated effective instance for that assignment's
+/// per-helper pool loads ([`crate::transport::TransportCfg::inflate_for_assignment`]).
+/// Dedicated mode is byte-identical to [`solve`].
+pub fn solve_under(inst: &Instance, transport: &crate::transport::TransportCfg) -> Option<Schedule> {
+    let a = balanced_assignment(inst)?;
+    if transport.is_dedicated() {
+        return Some(fcfs_schedule(inst, a));
+    }
+    let eff = transport.inflate_for_assignment(inst, &a);
+    Some(fcfs_schedule(&eff, a))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

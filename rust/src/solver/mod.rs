@@ -4,14 +4,14 @@
 //!
 //! | Module | Paper artifact |
 //! |---|---|
-//! | [`schedule`] | decision variables x, z, y as run-length [`schedule::SlotRuns`]; constraints (1)–(9) with an interval-sweep checker; FCFS |
+//! | [`schedule`] | decision variables x, z, y as run-length [`schedule::SlotRuns`]; constraints (1)–(9) with an interval-sweep checker (plus the transport-aware `violations_under` with a per-helper concurrent-transfer occupancy sweep); FCFS |
 //! | [`admm`] | Algorithm 1 (ADMM-based ℙ_f); allocation-free w-subproblem over an incremental membership structure |
 //! | [`bwd`] | Algorithm 2 (optimal ℙ_b, Theorem 2) over free *runs*, plus the cost-only preemptive-LDT evaluator |
 //! | [`greedy`] | balanced-greedy heuristic (§VI) |
 //! | [`baseline`] | random + FCFS baseline (§VII) |
 //! | [`exact`] | the exact/anytime reference optimum (Gurobi's role) |
 //! | [`lp`], [`milp`], [`model`] | time-indexed ILP of §IV + own solver |
-//! | [`strategy`] | the signal-driven solution strategy (Obs. 3): picks a method from instance shape — size, heterogeneity, placement flexibility, straggler tail ([`strategy::Signals`]) — never from the scenario label; ≥ [`strategy::SHARD_CLIENT_FRONTIER`] clients routes to `Method::Sharded` ([`crate::shard`]: helper-cell partition → concurrent per-cell solves → stitched global schedule) |
+//! | [`strategy`] | the signal-driven solution strategy (Obs. 3): picks a method from instance shape — size, heterogeneity, placement flexibility, straggler tail, uplink contention ([`strategy::Signals`]) — never from the scenario label; ≥ [`strategy::SHARD_CLIENT_FRONTIER`] clients routes to `Method::Sharded` ([`crate::shard`]: helper-cell partition → concurrent per-cell solves → stitched global schedule); `strategy::solve_under` re-schedules against the contention-inflated instance from [`crate::transport`] |
 //! | [`preemption`] | §VI switching-cost extension |
 //!
 //! **Schedule representation.** Every schedule stores per-client sorted

@@ -386,6 +386,73 @@ impl Schedule {
     pub fn is_feasible(&self, inst: &Instance) -> bool {
         self.violations(inst).is_empty()
     }
+
+    /// Peak number of *concurrent transfer windows* per helper: each
+    /// client contributes an upload window `[0, r)`, a turnaround window
+    /// `[φ^f, φ^f + l + l')` and a downlink window `[φ, φ + r')` on its
+    /// assigned helper. The sweep is O(J log J) over window endpoints and
+    /// is what the shared-uplink checker budgets its inflation factor
+    /// against (a client's three windows are sequential by construction,
+    /// so the peak never exceeds the helper's member count).
+    pub fn transfer_occupancy(&self, inst: &Instance) -> Vec<u32> {
+        let mut events: Vec<(usize, u32, i32)> = Vec::new(); // (helper, slot, ±1)
+        for j in 0..inst.n_clients.min(self.assignment.helper_of.len()) {
+            let i = self.assignment.helper_of[j];
+            if i >= inst.n_helpers {
+                continue;
+            }
+            let e = inst.edge(i, j);
+            let windows = [
+                (0u32, inst.r[e]),
+                (self.fwd_finish(j), self.fwd_finish(j) + inst.l[e] + inst.lp[e]),
+                (self.bwd_finish(j), self.bwd_finish(j) + inst.rp[e]),
+            ];
+            for (s, end) in windows {
+                if end > s {
+                    events.push((i, s, 1));
+                    events.push((i, end, -1));
+                }
+            }
+        }
+        // End events sort before start events at the same slot (−1 < +1),
+        // so back-to-back windows never double-count.
+        events.sort_unstable();
+        let mut peak = vec![0u32; inst.n_helpers];
+        let mut cur = vec![0i32; inst.n_helpers];
+        for (i, _, d) in events {
+            cur[i] += d;
+            peak[i] = peak[i].max(cur[i].max(0) as u32);
+        }
+        peak
+    }
+
+    /// [`violations`](Self::violations) under a transport model. The
+    /// dedicated mode delegates unchanged; the shared mode checks the
+    /// paper's constraints against the **effective** (contention-
+    /// inflated) instance for this schedule's per-helper pool loads, and
+    /// adds the occupancy sweep: no helper's peak concurrent-transfer
+    /// count may exceed the pool population its inflation budgeted for.
+    pub fn violations_under(
+        &self,
+        inst: &Instance,
+        transport: &crate::transport::TransportCfg,
+    ) -> Vec<String> {
+        if transport.is_dedicated() {
+            return self.violations(inst);
+        }
+        let eff = transport.inflate_for_assignment(inst, &self.assignment);
+        let mut errs = self.violations(&eff);
+        let loads = crate::transport::TransportCfg::loads_of(&self.assignment, inst.n_helpers);
+        for (i, &peak) in self.transfer_occupancy(&eff).iter().enumerate() {
+            if peak as usize > loads[i] {
+                errs.push(format!(
+                    "(T) helper {i}: {peak} concurrent transfers exceed the pool population {} budgeted by the inflation factor",
+                    loads[i]
+                ));
+            }
+        }
+        errs
+    }
 }
 
 /// Non-preemptive FCFS scheduling given an assignment (paper §VI step 2
@@ -605,6 +672,63 @@ pub(crate) mod tests {
         s3.fwd[1] = s3.fwd[0].clone();
         assert!(!s3.violations(&inst).is_empty());
         assert!(s3.violations(&inst).iter().any(|v| v.starts_with("(3)")));
+    }
+
+    #[test]
+    fn violations_under_dedicated_matches_plain_checker() {
+        prop::check(40, |rng| {
+            let jn = rng.range_usize(1, 10);
+            let inst = tiny_instance(rng, jn, 2);
+            let a = Assignment::new((0..jn).map(|_| rng.below(2)).collect());
+            let s = fcfs_schedule(&inst, a);
+            let t = crate::transport::TransportCfg::dedicated();
+            prop::assert_prop(
+                s.violations(&inst) == s.violations_under(&inst, &t),
+                "dedicated checker is the plain checker",
+            );
+        });
+    }
+
+    #[test]
+    fn transfer_occupancy_bounded_by_membership() {
+        prop::check(40, |rng| {
+            let jn = rng.range_usize(2, 12);
+            let inst = tiny_instance(rng, jn, 3);
+            let a = Assignment::new((0..jn).map(|_| rng.below(3)).collect());
+            let members = a.members_by_helper(3);
+            let s = fcfs_schedule(&inst, a);
+            let occ = s.transfer_occupancy(&inst);
+            for i in 0..3 {
+                prop::assert_prop(
+                    occ[i] as usize <= members[i].len(),
+                    "a client's windows are sequential, so peak ≤ members",
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn shared_checker_rejects_dedicated_built_schedule_under_contention() {
+        // A schedule built against the uninflated delays generally starts
+        // fwd tasks before the *effective* release under contention; the
+        // occupancy-aware checker must catch that, and a schedule rebuilt
+        // on the effective instance must pass.
+        let mut rng = Rng::seeded(21);
+        let mut inst = tiny_instance(&mut rng, 8, 2);
+        for e in inst.r.iter_mut() {
+            *e += 2; // ensure nonzero uplink so inflation bites
+        }
+        let t = crate::transport::TransportCfg::shared(1.0); // 4 members → 4× slower
+        let a = Assignment::new((0..8).map(|j| j % 2).collect());
+        let naive = fcfs_schedule(&inst, a.clone());
+        assert!(
+            !naive.violations_under(&inst, &t).is_empty(),
+            "naive schedule should violate effective releases"
+        );
+        let eff = t.inflate_for_assignment(&inst, &a);
+        let rebuilt = fcfs_schedule(&eff, a);
+        let v = rebuilt.violations_under(&inst, &t);
+        assert!(v.is_empty(), "rebuilt-on-effective schedule must pass: {v:?}");
     }
 
     #[test]

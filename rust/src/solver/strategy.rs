@@ -20,9 +20,11 @@
 //! record *why* a method was picked.
 
 use super::admm::{self, AdmmCfg};
+use super::bwd;
 use super::greedy;
-use super::schedule::Schedule;
+use super::schedule::{fcfs_schedule, Schedule};
 use crate::instance::Instance;
+use crate::transport::TransportCfg;
 
 /// Client count at and above which [`pick_from_signals`] routes to the
 /// sharded hierarchical solver (provided ≥ 2 helpers exist to form
@@ -77,6 +79,10 @@ pub struct Signals {
     /// p95 / median of the per-client best-edge end-to-end times — a
     /// straggler-tail diagnostic.
     pub tail_ratio: f64,
+    /// Excess transfer slowdown of a uniformly-loaded helper under the
+    /// active transport ([`TransportCfg::contention`]); 0 under the
+    /// dedicated link model.
+    pub contention: f64,
 }
 
 /// Heterogeneity proxy: coefficient of variation of the helper processing
@@ -105,6 +111,7 @@ pub fn signals(inst: &Instance) -> Signals {
             heterogeneity: 0.0,
             placement_flexibility: 1.0,
             tail_ratio: 1.0,
+            contention: 0.0,
         };
     }
     let j_n = inst.n_clients;
@@ -136,7 +143,17 @@ pub fn signals(inst: &Instance) -> Signals {
         heterogeneity: heterogeneity(inst),
         placement_flexibility,
         tail_ratio,
+        contention: 0.0,
     }
+}
+
+/// [`signals`] under a transport model: identical shape signals plus the
+/// transport's contention estimate (0 under the dedicated mode, so
+/// `signals_under(inst, &TransportCfg::dedicated()) == signals(inst)`).
+pub fn signals_under(inst: &Instance, transport: &TransportCfg) -> Signals {
+    let mut s = signals(inst);
+    s.contention = transport.contention(inst.n_clients, inst.n_helpers);
+    s
 }
 
 /// Decide the method per §VII from the instance's signals:
@@ -168,6 +185,12 @@ pub fn pick_flat(s: &Signals) -> Method {
     if s.placement_flexibility < 0.35 {
         return Method::Admm;
     }
+    if s.contention > 0.5 {
+        // Heavy uplink contention: how clients spread over pools is what
+        // determines the makespan, so route to the assignment-shaping
+        // solver even at sizes where queuing would favour greedy.
+        return Method::Admm;
+    }
     if s.n_clients >= 100 {
         return Method::BalancedGreedy;
     }
@@ -180,6 +203,32 @@ pub fn pick_flat(s: &Signals) -> Method {
 /// Run the strategy. Returns the schedule and the method used.
 pub fn solve(inst: &Instance, admm_cfg: &AdmmCfg) -> Option<(Schedule, Method)> {
     solve_with_signals(inst, admm_cfg, &signals(inst))
+}
+
+/// Run the strategy under a transport model. The dedicated mode
+/// delegates to [`solve`] unchanged (byte-identical decisions); the
+/// shared mode shapes the assignment on the uniform-load contention
+/// estimate ([`TransportCfg::inflate_uniform`]) and then re-schedules
+/// that assignment against its **actual** per-helper pool loads
+/// ([`TransportCfg::inflate_for_assignment`]) — FCFS forward plus the
+/// optimal ℙ_b backward pass — so the result is feasible under
+/// [`Schedule::violations_under`] by construction and deterministic
+/// regardless of thread count.
+pub fn solve_under(
+    inst: &Instance,
+    transport: &TransportCfg,
+    admm_cfg: &AdmmCfg,
+) -> Option<(Schedule, Method)> {
+    if transport.is_dedicated() {
+        return solve(inst, admm_cfg);
+    }
+    let _sp = crate::obs::span("solver", "solver/transport");
+    let sig = signals_under(inst, transport);
+    let est = transport.inflate_uniform(inst);
+    let (shaped, method) = solve_with_signals(&est, admm_cfg, &sig)?;
+    let eff = transport.inflate_for_assignment(inst, &shaped.assignment);
+    let f = fcfs_schedule(&eff, shaped.assignment);
+    Some((bwd::complete_with_optimal_bwd(&eff, f.assignment, f.fwd), method))
 }
 
 /// [`solve`] on precomputed signals — callers that already computed
@@ -340,6 +389,7 @@ mod tests {
             heterogeneity: 0.1,
             placement_flexibility: 1.0,
             tail_ratio: 1.2,
+            contention: 0.0,
         };
         assert_eq!(pick_from_signals(&s), Method::Sharded);
         // The flat rule never shards, whatever the size.
@@ -356,8 +406,66 @@ mod tests {
             heterogeneity: 0.1,
             placement_flexibility: 1.0,
             tail_ratio: 1.0,
+            contention: 0.0,
         };
         assert_eq!(pick_from_signals(&s), Method::BalancedGreedy);
+    }
+
+    #[test]
+    fn contention_routes_large_homogeneous_to_admm() {
+        // Without contention this shape is a textbook greedy pick; under
+        // a 2×-overloaded shared uplink the assignment shaping wins.
+        let mut s = Signals {
+            n_clients: 120,
+            n_helpers: 10,
+            heterogeneity: 0.1,
+            placement_flexibility: 1.0,
+            tail_ratio: 1.1,
+            contention: 0.0,
+        };
+        assert_eq!(pick_flat(&s), Method::BalancedGreedy);
+        s.contention = 1.0;
+        assert_eq!(pick_flat(&s), Method::Admm);
+    }
+
+    #[test]
+    fn signals_under_dedicated_matches_plain_signals() {
+        let inst = ScenarioCfg::new(Scenario::S2, Model::ResNet101, 20, 5, 4).generate().quantize(180.0);
+        let a = signals(&inst);
+        let b = signals_under(&inst, &crate::transport::TransportCfg::dedicated());
+        assert_eq!(a.contention, b.contention);
+        assert_eq!(a.heterogeneity, b.heterogeneity);
+        assert_eq!(a.tail_ratio, b.tail_ratio);
+        let c = signals_under(&inst, &crate::transport::TransportCfg::shared(1.0));
+        assert!(c.contention > 0.0, "ceil(20/5)=4 on a 1-pool must contend");
+    }
+
+    #[test]
+    fn solve_under_dedicated_is_solve() {
+        let inst = ScenarioCfg::new(Scenario::S2, Model::Vgg19, 12, 3, 8).generate().quantize(550.0);
+        let cfg = crate::solver::admm::AdmmCfg::default();
+        let (a, ma) = solve(&inst, &cfg).unwrap();
+        let (b, mb) = solve_under(&inst, &crate::transport::TransportCfg::dedicated(), &cfg).unwrap();
+        assert_eq!(ma, mb);
+        assert_eq!(a.assignment, b.assignment);
+        assert_eq!(a.fwd, b.fwd);
+        assert_eq!(a.bwd, b.bwd);
+    }
+
+    #[test]
+    fn solve_under_shared_is_feasible_under_checker() {
+        for seed in 0..3u64 {
+            let inst = ScenarioCfg::new(Scenario::S1, Model::ResNet101, 14, 3, 20 + seed)
+                .generate()
+                .quantize(180.0);
+            let t = crate::transport::TransportCfg::shared(2.0);
+            let (s, _) = solve_under(&inst, &t, &crate::solver::admm::AdmmCfg::default()).unwrap();
+            let v = s.violations_under(&inst, &t);
+            assert!(v.is_empty(), "shared-mode schedule infeasible: {v:?}");
+            // Contention can only lengthen the makespan measured on the
+            // effective instance vs the dedicated solve's nominal one.
+            assert!(s.makespan(&t.inflate_for_assignment(&inst, &s.assignment)) >= inst.makespan_lower_bound());
+        }
     }
 
     #[test]

@@ -1,0 +1,314 @@
+//! Transport layer: **all** transfer-time computation lives here.
+//!
+//! The paper's delay model (§III) treats each client↔helper transfer as
+//! an independent fixed-delay edge. "Split Learning over Wireless
+//! Networks" (arxiv 2204.08119, PAPERS.md) shows the dominant real-world
+//! effect is *shared* uplink capacity: concurrent activation/gradient
+//! transfers to the same helper contend for bandwidth, so transfer time
+//! depends on who else is talking. This module owns that distinction as
+//! a closed mode enum:
+//!
+//! * [`LinkMode::Dedicated`] — today's fixed per-edge delays. Every
+//!   projection through a dedicated [`TransportCfg`] is the identity, so
+//!   solver decisions and artifacts are **byte-identical** to the
+//!   pre-transport code (pinned by `tests/transport_equiv.rs` and the CI
+//!   byte-diff gate).
+//! * [`LinkMode::Shared`] — per-helper capacity pools: a helper's uplink
+//!   sustains `capacity` concurrent transfers at full rate; `k` active
+//!   transfers each progress at `capacity/k` of their dedicated rate
+//!   (capped at 1×). The exact fluid (processor-sharing) completion law
+//!   lives in [`pool`]; the solvers consume the conservative *static*
+//!   projection [`TransportCfg::inflate`], which scales a helper row's
+//!   transfer delays by the worst-case concurrency factor
+//!   `max(1, k/capacity)` — an upper bound on the pooled finish times
+//!   (proven against [`pool::finish_times`] in the property suite).
+//!
+//! Consumers: `instance/scenario.rs` expresses link regimes through the
+//! dedicated projection, `solver/strategy.rs` routes on the
+//! [`contention`](TransportCfg::contention) signal and re-schedules under
+//! the inflated instance, `Schedule::violations_under` checks feasibility
+//! against the same projection, the `sim` replay engines resolve transfer
+//! phases through [`TransportCfg::inflate_ms`], and the fleet orchestrator
+//! carries a `TransportCfg` end-to-end (CLI `--link-model` /
+//! `--uplink-capacity`, grid axis `--uplink-capacities`).
+
+pub mod pool;
+
+use crate::instance::{Instance, InstanceMs};
+use crate::solver::schedule::Assignment;
+
+/// Closed set of link models (the ISSUE's `LinkModel`; named `LinkMode`
+/// because [`crate::instance::network::LinkModel`] already names the
+/// statistical rate-draw model).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LinkMode {
+    /// Fixed per-edge delays — the paper's §III model, byte-identical to
+    /// the pre-transport code path.
+    Dedicated,
+    /// Per-helper shared uplink pools with processor-sharing contention.
+    Shared,
+}
+
+impl LinkMode {
+    pub fn name(self) -> &'static str {
+        match self {
+            LinkMode::Dedicated => "dedicated",
+            LinkMode::Shared => "shared",
+        }
+    }
+
+    /// Inverse of [`LinkMode::name`] — CLI flags and fleet checkpoints
+    /// round-trip through this.
+    pub fn parse(s: &str) -> Option<LinkMode> {
+        match s {
+            "dedicated" => Some(LinkMode::Dedicated),
+            "shared" => Some(LinkMode::Shared),
+            _ => None,
+        }
+    }
+}
+
+/// A link mode plus its capacity parameter: the one value threaded from
+/// the CLI through solver, simulator, fleet and analytics.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct TransportCfg {
+    pub mode: LinkMode,
+    /// Concurrent full-rate transfers a helper's uplink sustains
+    /// (dimensionless; > 0). Only consulted under [`LinkMode::Shared`].
+    pub capacity: f64,
+}
+
+/// Default shared-pool capacity when `--link-model shared` is given
+/// without `--uplink-capacity`.
+pub const DEFAULT_UPLINK_CAPACITY: f64 = 4.0;
+
+impl Default for TransportCfg {
+    fn default() -> Self {
+        TransportCfg::dedicated()
+    }
+}
+
+impl TransportCfg {
+    /// The identity transport: every projection returns its input.
+    pub fn dedicated() -> TransportCfg {
+        TransportCfg { mode: LinkMode::Dedicated, capacity: DEFAULT_UPLINK_CAPACITY }
+    }
+
+    /// Shared-uplink transport with the given pool capacity (> 0).
+    pub fn shared(capacity: f64) -> TransportCfg {
+        assert!(capacity.is_finite() && capacity > 0.0, "uplink capacity must be finite and > 0");
+        TransportCfg { mode: LinkMode::Shared, capacity }
+    }
+
+    #[inline]
+    pub fn is_dedicated(&self) -> bool {
+        self.mode == LinkMode::Dedicated
+    }
+
+    /// Worst-case slowdown of a transfer on a helper with `k` pool
+    /// members: `max(1, k/capacity)` under [`LinkMode::Shared`], always
+    /// `1` under [`LinkMode::Dedicated`]. This is the static projection
+    /// of the fluid pool — an upper bound on realized contention because
+    /// at most `k` transfers can ever be simultaneously active.
+    #[inline]
+    pub fn factor(&self, k: usize) -> f64 {
+        match self.mode {
+            LinkMode::Dedicated => 1.0,
+            LinkMode::Shared => (k as f64 / self.capacity).max(1.0),
+        }
+    }
+
+    /// Contention signal for the §VII pick rule: excess slowdown of a
+    /// uniformly-loaded helper (`factor(ceil(J/I)) − 1`); 0 under
+    /// [`LinkMode::Dedicated`] and whenever capacity covers the load.
+    pub fn contention(&self, n_clients: usize, n_helpers: usize) -> f64 {
+        if self.is_dedicated() || n_helpers == 0 {
+            return 0.0;
+        }
+        self.factor(n_clients.div_ceil(n_helpers)) - 1.0
+    }
+
+    /// Project a slotted instance through the transport: helper row `i`'s
+    /// transfer delays (r, l, l', r') are scaled by `factor(loads[i])`
+    /// (ceil back to whole slots); processing times (p, p') are
+    /// unchanged — contention is a *link* effect. Dedicated mode returns
+    /// a clone (byte-identical downstream decisions).
+    pub fn inflate(&self, inst: &Instance, loads: &[usize]) -> Instance {
+        if self.is_dedicated() {
+            return inst.clone();
+        }
+        assert_eq!(loads.len(), inst.n_helpers, "one load per helper");
+        let mut out = inst.clone();
+        for i in 0..inst.n_helpers {
+            let f = self.factor(loads[i]);
+            if f <= 1.0 {
+                continue;
+            }
+            for v in [&mut out.r, &mut out.l, &mut out.lp, &mut out.rp] {
+                for e in i * inst.n_clients..(i + 1) * inst.n_clients {
+                    v[e] = (v[e] as f64 * f).ceil() as u32;
+                }
+            }
+        }
+        out
+    }
+
+    /// [`inflate`](Self::inflate) for the continuous instance — the sim
+    /// replay engines resolve transfer phases through this so simulator
+    /// and solver can never disagree about effective rates.
+    pub fn inflate_ms(&self, inst: &InstanceMs, loads: &[usize]) -> InstanceMs {
+        if self.is_dedicated() {
+            return inst.clone();
+        }
+        assert_eq!(loads.len(), inst.n_helpers, "one load per helper");
+        let mut out = inst.clone();
+        for i in 0..inst.n_helpers {
+            let f = self.factor(loads[i]);
+            if f <= 1.0 {
+                continue;
+            }
+            for v in [&mut out.r_ms, &mut out.l_ms, &mut out.lp_ms, &mut out.rp_ms] {
+                for e in i * inst.n_clients..(i + 1) * inst.n_clients {
+                    v[e] *= f;
+                }
+            }
+        }
+        out
+    }
+
+    /// Inflate under the uniform-load estimate `ceil(J/I)` on every
+    /// helper — what the assignment-shaping solve uses before per-helper
+    /// member counts exist.
+    pub fn inflate_uniform(&self, inst: &Instance) -> Instance {
+        if self.is_dedicated() || inst.n_helpers == 0 {
+            return inst.clone();
+        }
+        let k = inst.n_clients.div_ceil(inst.n_helpers);
+        self.inflate(inst, &vec![k; inst.n_helpers])
+    }
+
+    /// Per-helper pool loads of a concrete assignment (member counts).
+    pub fn loads_of(assignment: &Assignment, n_helpers: usize) -> Vec<usize> {
+        let mut loads = vec![0usize; n_helpers];
+        for &i in &assignment.helper_of {
+            if i < n_helpers {
+                loads[i] += 1;
+            }
+        }
+        loads
+    }
+
+    /// Inflate for a concrete assignment's per-helper member counts.
+    pub fn inflate_for_assignment(&self, inst: &Instance, assignment: &Assignment) -> Instance {
+        if self.is_dedicated() {
+            return inst.clone();
+        }
+        self.inflate(inst, &Self::loads_of(assignment, inst.n_helpers))
+    }
+
+    /// [`inflate_for_assignment`](Self::inflate_for_assignment) on the
+    /// continuous instance.
+    pub fn inflate_ms_for_assignment(&self, inst: &InstanceMs, assignment: &Assignment) -> InstanceMs {
+        if self.is_dedicated() {
+            return inst.clone();
+        }
+        self.inflate_ms(inst, &Self::loads_of(assignment, inst.n_helpers))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::instance::profiles::Model;
+    use crate::instance::scenario::{Scenario, ScenarioCfg};
+    use crate::util::prop;
+
+    fn inst(seed: u64) -> Instance {
+        ScenarioCfg::new(Scenario::S2, Model::ResNet101, 12, 3, seed).generate().quantize(180.0)
+    }
+
+    #[test]
+    fn mode_names_roundtrip() {
+        for m in [LinkMode::Dedicated, LinkMode::Shared] {
+            assert_eq!(LinkMode::parse(m.name()), Some(m));
+        }
+        assert_eq!(LinkMode::parse("bogus"), None);
+    }
+
+    #[test]
+    fn dedicated_projections_are_identity() {
+        let t = TransportCfg::dedicated();
+        let i = inst(1);
+        let out = t.inflate(&i, &vec![100; i.n_helpers]);
+        assert_eq!(out.r, i.r);
+        assert_eq!(out.l, i.l);
+        assert_eq!(out.lp, i.lp);
+        assert_eq!(out.rp, i.rp);
+        assert_eq!(out.p, i.p);
+        assert_eq!(t.factor(1000), 1.0);
+        assert_eq!(t.contention(1000, 2), 0.0);
+        let ms = i.to_ms();
+        let out_ms = t.inflate_ms(&ms, &vec![100; i.n_helpers]);
+        assert_eq!(out_ms.r_ms, ms.r_ms);
+        assert_eq!(out_ms.l_ms, ms.l_ms);
+    }
+
+    #[test]
+    fn shared_factor_kicks_in_above_capacity() {
+        let t = TransportCfg::shared(4.0);
+        assert_eq!(t.factor(0), 1.0);
+        assert_eq!(t.factor(4), 1.0);
+        assert_eq!(t.factor(8), 2.0);
+        assert!((t.contention(16, 2) - 1.0).abs() < 1e-12); // ceil(16/2)=8 → 2× → 1.0 excess
+        assert_eq!(t.contention(4, 2), 0.0);
+    }
+
+    #[test]
+    fn inflate_scales_only_overloaded_helper_rows() {
+        let t = TransportCfg::shared(2.0);
+        let i = inst(3);
+        let loads = vec![1usize, 4, 2]; // helper 1 is 2× overloaded
+        let out = t.inflate(&i, &loads);
+        let jn = i.n_clients;
+        for e in 0..jn {
+            assert_eq!(out.r[e], i.r[e], "helper 0 untouched");
+            assert_eq!(out.r[2 * jn + e], i.r[2 * jn + e], "helper 2 at capacity");
+            assert_eq!(out.r[jn + e], (i.r[jn + e] as f64 * 2.0).ceil() as u32);
+            assert_eq!(out.l[jn + e], (i.l[jn + e] as f64 * 2.0).ceil() as u32);
+        }
+        // Processing times never inflate.
+        assert_eq!(out.p, i.p);
+        assert_eq!(out.pp, i.pp);
+        assert_eq!(out.d, i.d);
+    }
+
+    #[test]
+    fn inflate_monotone_in_capacity() {
+        prop::check(20, |rng| {
+            let i = inst(rng.next_u64());
+            let loads = vec![rng.range_usize(1, 20); i.n_helpers];
+            let lo = TransportCfg::shared(1.0).inflate(&i, &loads);
+            let hi = TransportCfg::shared(8.0).inflate(&i, &loads);
+            for e in 0..i.r.len() {
+                prop::assert_prop(lo.r[e] >= hi.r[e], "more capacity never slows a transfer");
+                prop::assert_prop(hi.r[e] >= i.r[e], "inflation never speeds up");
+            }
+        });
+    }
+
+    #[test]
+    fn loads_of_counts_members() {
+        let a = Assignment::new(vec![1, 0, 1, 1, 2]);
+        assert_eq!(TransportCfg::loads_of(&a, 4), vec![1, 3, 1, 0]);
+    }
+
+    #[test]
+    fn inflated_instance_stays_valid() {
+        let t = TransportCfg::shared(1.5);
+        let i = inst(9);
+        let out = t.inflate_uniform(&i);
+        assert!(out.to_ms().validate().is_ok());
+        assert_eq!(out.n_clients, i.n_clients);
+        assert!(out.horizon() >= i.horizon());
+    }
+}

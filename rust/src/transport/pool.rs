@@ -1,0 +1,236 @@
+//! Fluid (processor-sharing) uplink pool: the exact completion law of
+//! [`LinkMode::Shared`](super::LinkMode::Shared).
+//!
+//! A helper's uplink sustains `capacity` concurrent transfers at full
+//! rate. While `k` transfers are active each progresses at rate
+//! `min(1, capacity/k)` — the classic egalitarian processor-sharing
+//! fluid. Completion times follow by piecewise-linear advance between
+//! events (an arrival or a finish changes `k`); ties are broken
+//! deterministically by `(start, input index)`, so finish times are a
+//! pure function of the transfer list regardless of thread count or
+//! shard order.
+//!
+//! This module is the *ground truth* the static projection
+//! [`TransportCfg::inflate`](super::TransportCfg::inflate) conservatively
+//! upper-bounds: with at most `k` transfers ever active, no transfer's
+//! rate drops below `capacity/k`, so `finish ≤ start + size·max(1,
+//! k/capacity)` — the property suite pins this bound.
+
+/// One transfer offered to a pool: `start` = arrival time, `size` = the
+/// transfer's duration at full (dedicated) rate. Units are arbitrary but
+/// must match (ms and ms throughout this crate).
+#[derive(Clone, Copy, Debug)]
+pub struct Transfer {
+    pub start: f64,
+    pub size: f64,
+}
+
+/// Exact fluid finish times of `transfers` sharing one pool of the given
+/// `capacity` (> 0). Returns finish times **in input order**. Zero-size
+/// transfers finish at their start. O(n²) worst case — pools are
+/// per-helper and per-batch, so n is a helper's member count.
+pub fn finish_times(transfers: &[Transfer], capacity: f64) -> Vec<f64> {
+    assert!(capacity.is_finite() && capacity > 0.0, "capacity must be finite and > 0");
+    let n = transfers.len();
+    let mut done = vec![0.0f64; n];
+    if n == 0 {
+        return done;
+    }
+    for t in transfers {
+        assert!(t.start.is_finite() && t.start >= 0.0, "transfer start must be finite and >= 0");
+        assert!(t.size.is_finite() && t.size >= 0.0, "transfer size must be finite and >= 0");
+    }
+    // Deterministic arrival order: (start, input index).
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_by(|&a, &b| {
+        transfers[a].start.partial_cmp(&transfers[b].start).unwrap().then(a.cmp(&b))
+    });
+    let mut rem: Vec<f64> = transfers.iter().map(|t| t.size).collect();
+    let mut active: Vec<usize> = Vec::new();
+    let mut ptr = 0usize;
+    let mut now = 0.0f64;
+    const EPS: f64 = 1e-9;
+    while ptr < n || !active.is_empty() {
+        if active.is_empty() {
+            // Jump to the next arrival.
+            now = now.max(transfers[order[ptr]].start);
+        } else {
+            let rate = (capacity / active.len() as f64).min(1.0);
+            let min_rem = active.iter().map(|&i| rem[i]).fold(f64::INFINITY, f64::min);
+            let finish_at = now + min_rem / rate;
+            let next_arr = if ptr < n { transfers[order[ptr]].start } else { f64::INFINITY };
+            let step_to = finish_at.min(next_arr);
+            let dt = step_to - now;
+            if dt > 0.0 {
+                for &i in &active {
+                    rem[i] -= dt * rate;
+                }
+                now = step_to;
+            }
+        }
+        // Retire finished transfers (deterministic scan in active order).
+        let mut k = 0;
+        while k < active.len() {
+            let i = active[k];
+            if rem[i] <= EPS {
+                done[i] = now;
+                active.remove(k);
+            } else {
+                k += 1;
+            }
+        }
+        // Admit every transfer that has arrived by `now`.
+        while ptr < n && transfers[order[ptr]].start <= now + EPS {
+            let i = order[ptr];
+            ptr += 1;
+            if rem[i] <= EPS {
+                done[i] = transfers[i].start; // zero-size: instantaneous
+            } else {
+                active.push(i);
+            }
+        }
+    }
+    done
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    fn t(start: f64, size: f64) -> Transfer {
+        Transfer { start, size }
+    }
+
+    #[test]
+    fn lone_transfer_runs_at_full_rate() {
+        let f = finish_times(&[t(3.0, 10.0)], 2.0);
+        assert!((f[0] - 13.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn under_capacity_everyone_is_dedicated() {
+        // capacity ≥ concurrent transfers → finish = start + size exactly.
+        let xs = [t(0.0, 5.0), t(1.0, 3.0), t(2.0, 7.0)];
+        let f = finish_times(&xs, 3.0);
+        for (i, x) in xs.iter().enumerate() {
+            assert!((f[i] - (x.start + x.size)).abs() < 1e-9, "transfer {i}");
+        }
+    }
+
+    #[test]
+    fn two_equal_transfers_on_unit_pool_halve_rate() {
+        // Both arrive at 0, size 10, capacity 1: each runs at rate ½ and
+        // both finish at 20 (processor sharing, not FIFO).
+        let f = finish_times(&[t(0.0, 10.0), t(0.0, 10.0)], 1.0);
+        assert!((f[0] - 20.0).abs() < 1e-9);
+        assert!((f[1] - 20.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn staggered_arrival_piecewise_progress() {
+        // A(0, size 10), B(5, size 10), capacity 1. A runs alone on
+        // [0,5) (5 done), then shares: both at rate ½. A's remaining 5
+        // takes 10 → finishes 15; B then runs alone: 5 + ... B did 5 by
+        // t=15, remaining 5 at rate 1 → 20.
+        let f = finish_times(&[t(0.0, 10.0), t(5.0, 10.0)], 1.0);
+        assert!((f[0] - 15.0).abs() < 1e-9, "A {}", f[0]);
+        assert!((f[1] - 20.0).abs() < 1e-9, "B {}", f[1]);
+    }
+
+    #[test]
+    fn zero_size_is_instant() {
+        let f = finish_times(&[t(4.0, 0.0), t(0.0, 100.0)], 1.0);
+        assert_eq!(f[0], 4.0);
+    }
+
+    #[test]
+    fn bytes_conserved() {
+        // Total work equals the integral of pool throughput: for any
+        // input, Σ size = Σ over pieces of (rate × k × dt). Checked
+        // indirectly: every finish ≥ start + size (rate never exceeds 1)
+        // and the makespan lower-bounds total size / capacity.
+        prop::check(60, |rng| {
+            let n = rng.range_usize(1, 12);
+            let xs: Vec<Transfer> =
+                (0..n).map(|_| t(rng.range_f64(0.0, 50.0), rng.range_f64(0.1, 30.0))).collect();
+            let cap = rng.range_f64(0.5, 6.0);
+            let f = finish_times(&xs, cap);
+            let total: f64 = xs.iter().map(|x| x.size).sum();
+            let first = xs.iter().map(|x| x.start).fold(f64::INFINITY, f64::min);
+            let last = f.iter().cloned().fold(0.0, f64::max);
+            for (i, x) in xs.iter().enumerate() {
+                prop::assert_prop(f[i] >= x.start + x.size - 1e-6, "rate cap 1: finish >= start+size");
+            }
+            // Pool can't process faster than `capacity` in aggregate.
+            prop::assert_prop(
+                last - first >= total / cap.max(xs.len() as f64) - 1e-6,
+                "aggregate throughput bound",
+            );
+        });
+    }
+
+    #[test]
+    fn completion_monotone_in_capacity() {
+        prop::check(40, |rng| {
+            let n = rng.range_usize(1, 10);
+            let xs: Vec<Transfer> =
+                (0..n).map(|_| t(rng.range_f64(0.0, 20.0), rng.range_f64(0.1, 15.0))).collect();
+            let lo = finish_times(&xs, 1.0);
+            let hi = finish_times(&xs, 4.0);
+            for i in 0..n {
+                prop::assert_prop(hi[i] <= lo[i] + 1e-6, "more capacity never delays a transfer");
+            }
+        });
+    }
+
+    #[test]
+    fn permutation_invariant() {
+        prop::check(40, |rng| {
+            let n = rng.range_usize(2, 10);
+            let xs: Vec<Transfer> =
+                (0..n).map(|_| t(rng.range_f64(0.0, 20.0), rng.range_f64(0.1, 15.0))).collect();
+            let f = finish_times(&xs, 2.0);
+            // Reverse the input; outputs must follow the permutation.
+            let rev: Vec<Transfer> = xs.iter().rev().cloned().collect();
+            let fr = finish_times(&rev, 2.0);
+            for i in 0..n {
+                prop::assert_prop(
+                    (f[i] - fr[n - 1 - i]).abs() < 1e-6,
+                    "finish times are a function of (start,size), not input order",
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn static_inflation_upper_bounds_fluid() {
+        // The solver-side projection factor(k) with k = pool population
+        // is a true upper bound on the fluid finish.
+        prop::check(40, |rng| {
+            let n = rng.range_usize(1, 10);
+            let xs: Vec<Transfer> =
+                (0..n).map(|_| t(rng.range_f64(0.0, 10.0), rng.range_f64(0.1, 10.0))).collect();
+            let cap = rng.range_f64(0.5, 4.0);
+            let f = finish_times(&xs, cap);
+            let factor = (n as f64 / cap).max(1.0);
+            for (i, x) in xs.iter().enumerate() {
+                // A transfer is active from start to finish and its rate
+                // never drops below min(1, cap/n), so
+                // finish ≤ start + size · factor(n) exactly.
+                prop::assert_prop(
+                    f[i] <= x.start + x.size * factor + 1e-6,
+                    "static factor bounds fluid finish",
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn deterministic_across_calls() {
+        let xs = [t(0.0, 3.0), t(0.5, 2.0), t(0.5, 4.0), t(1.0, 1.0)];
+        let a = finish_times(&xs, 1.5);
+        let b = finish_times(&xs, 1.5);
+        assert_eq!(a, b, "bitwise deterministic");
+    }
+}

@@ -30,6 +30,7 @@ fn grid_row(scenario: &str, churn: f64, policy: &str, seed: u64, makespan: f64, 
         ("n_helpers", Json::Num(2.0)),
         ("churn_rate", Json::Num(churn)),
         ("helper_down_rate", Json::Num(0.0)),
+        ("uplink_capacity", Json::Num(0.0)),
         ("policy", Json::Str(policy.to_string())),
         ("seed", Json::Str(seed.to_string())),
         ("rounds", Json::Num(8.0)),
@@ -99,7 +100,7 @@ fn builtin_policy_table_golden_snapshot() {
     }
   ],
   "kind": "psl-policy-table",
-  "schema_version": 5,
+  "schema_version": 7,
   "source": "builtin"
 }"#;
     assert_eq!(psl::fleet::PolicyTable::builtin().to_json().pretty(), golden);
@@ -158,6 +159,7 @@ fn fleet_auto_cli_consumes_a_policy_table_deterministically() {
             n_helpers: 2,
             frontier_churn: Some(0.0),
             helper_down_rate: 0.0,
+            uplink_capacity: 0.0,
         }],
     );
     let table_name = format!("analyze-test-auto-table-{pid}");

@@ -465,6 +465,108 @@ fn sweep_diff_self_passes_and_regression_fails() {
 }
 
 #[test]
+fn fleet_s8_flash_crowd_runs_and_stays_deterministic() {
+    let args = |out: &str| {
+        vec![
+            "fleet", "--scenario", "8", "--model", "vgg19", "-j", "6", "-i", "2", "--seed", "5",
+            "--rounds", "10", "--out", out,
+        ]
+    };
+    let (stdout, stderr, ok) = psl(&args("cli-smoke-fleet-s8-a"));
+    assert!(ok, "stdout={stdout} stderr={stderr}");
+    assert!(stdout.contains("s8-flash-crowd"), "{stdout}");
+    let (_, _, ok2) = psl(&args("cli-smoke-fleet-s8-b"));
+    assert!(ok2);
+    let a = std::fs::read_to_string("target/psl-bench/cli-smoke-fleet-s8-a.json").unwrap();
+    let b = std::fs::read_to_string("target/psl-bench/cli-smoke-fleet-s8-b.json").unwrap();
+    assert_eq!(a, b, "flash-crowd fleet JSON must be byte-identical across runs");
+    for name in ["cli-smoke-fleet-s8-a", "cli-smoke-fleet-s8-b"] {
+        for suffix in [".json", ".rounds.jsonl", ".events.jsonl"] {
+            std::fs::remove_file(format!("target/psl-bench/{name}{suffix}")).ok();
+        }
+    }
+}
+
+#[test]
+fn fleet_link_model_flags_gate_the_transport() {
+    let base = |out: &str, extra: &[&str]| {
+        let mut v = vec![
+            "fleet", "--scenario", "4", "--model", "vgg19", "-j", "6", "-i", "2", "--seed", "5",
+            "--rounds", "5", "--out", out,
+        ];
+        v.extend_from_slice(extra);
+        v
+    };
+    // Explicit --link-model dedicated must not change a byte vs. no flag.
+    let (_, _, ok) = psl(&base("cli-smoke-fleet-link-a", &[]));
+    assert!(ok);
+    let (_, _, ok) = psl(&base("cli-smoke-fleet-link-b", &["--link-model", "dedicated"]));
+    assert!(ok);
+    let a = std::fs::read_to_string("target/psl-bench/cli-smoke-fleet-link-a.json").unwrap();
+    let b = std::fs::read_to_string("target/psl-bench/cli-smoke-fleet-link-b.json").unwrap();
+    assert_eq!(a, b, "--link-model dedicated must be the identity");
+    // Shared transport runs, tags the label, and changes the outcome.
+    let (stdout, stderr, ok) =
+        psl(&base("cli-smoke-fleet-link-c", &["--link-model", "shared", "--uplink-capacity", "2"]));
+    assert!(ok, "stdout={stdout} stderr={stderr}");
+    let c = std::fs::read_to_string("target/psl-bench/cli-smoke-fleet-link-c.json").unwrap();
+    assert!(c.contains("link=shared cap=2"), "label tags the transport");
+    assert_ne!(a, c, "a capacity-2 pool on 6 clients x 2 helpers must contend");
+    // A capacity without the shared mode is a contradiction, not a no-op.
+    let (_, stderr, ok) = psl(&base("cli-smoke-fleet-link-x", &["--uplink-capacity", "2"]));
+    assert!(!ok);
+    assert!(stderr.contains("--link-model shared"), "{stderr}");
+    let (_, stderr, ok) = psl(&base("cli-smoke-fleet-link-x", &["--link-model", "mesh"]));
+    assert!(!ok);
+    assert!(stderr.contains("bad --link-model"), "{stderr}");
+    for name in ["cli-smoke-fleet-link-a", "cli-smoke-fleet-link-b", "cli-smoke-fleet-link-c"] {
+        for suffix in [".json", ".rounds.jsonl", ".events.jsonl"] {
+            std::fs::remove_file(format!("target/psl-bench/{name}{suffix}")).ok();
+        }
+    }
+}
+
+#[test]
+fn fleet_grid_uplink_axis_flows_into_the_policy_table() {
+    let out = "cli-smoke-grid-uplink";
+    let (stdout, stderr, ok) = psl(&[
+        "fleet", "--grid", "--scenarios", "4", "--model", "vgg19", "-j", "5", "-i", "2",
+        "--churn-rates", "0.1,0.3", "--uplink-capacities", "0,2", "--policies", "incremental,full",
+        "--seeds", "7", "--rounds", "4", "--threads", "2", "--out", out,
+    ]);
+    assert!(ok, "stdout={stdout} stderr={stderr}");
+    assert!(stdout.contains("2 uplink capacities"), "{stdout}");
+    let grid_path = format!("target/psl-bench/{out}.json");
+    let text = std::fs::read_to_string(&grid_path).unwrap();
+    assert!(text.contains("\"uplink_capacity\""), "grid rows record the transport axis");
+    // analyze splits regimes by capacity and records the axis in the table.
+    let (stdout, stderr, ok) = psl(&["analyze", &grid_path, "--out", "cli-smoke-uplink-table"]);
+    assert!(ok, "stdout={stdout} stderr={stderr}");
+    assert!(stdout.contains("uplink-cap=2"), "regime/frontier lines name the shared regime: {stdout}");
+    let table = std::fs::read_to_string("target/psl-bench/cli-smoke-uplink-table.json").unwrap();
+    assert!(table.contains("\"uplink_capacity\""), "policy table carries the axis");
+    std::fs::remove_file(&grid_path).ok();
+    std::fs::remove_file("target/psl-bench/cli-smoke-uplink-table.json").ok();
+}
+
+#[test]
+fn sweep_shared_transport_tags_rows_and_rejects_orphan_capacity() {
+    let (stdout, stderr, ok) = psl(&[
+        "sweep", "--scenarios", "1", "--models", "vgg19", "--sizes", "4x2", "--seeds", "9",
+        "--methods", "greedy", "--slot-ms", "550", "--threads", "1", "--link-model", "shared",
+        "--uplink-capacity", "2", "--out", "cli-smoke-sweep-shared",
+    ]);
+    assert!(ok, "stdout={stdout} stderr={stderr}");
+    assert!(stdout.contains("link=shared cap=2"), "{stdout}");
+    let text = std::fs::read_to_string("target/psl-bench/cli-smoke-sweep-shared.json").unwrap();
+    assert!(text.contains("\"uplink_capacity\""));
+    let (_, stderr, ok) = psl(&["sweep", "--uplink-capacity", "2"]);
+    assert!(!ok);
+    assert!(stderr.contains("--link-model shared"), "{stderr}");
+    std::fs::remove_file("target/psl-bench/cli-smoke-sweep-shared.json").ok();
+}
+
+#[test]
 fn sweep_slots_runs() {
     let (stdout, stderr, ok) = psl(&[
         "sweep-slots", "-j", "6", "-i", "2", "--model", "vgg19", "--slots", "600,300",

@@ -19,6 +19,7 @@ fn grid_cfg(threads: usize) -> SweepCfg {
         seeds: vec![7, 8],
         methods: vec!["greedy".to_string(), "baseline".to_string()],
         slot_ms: Some(550.0),
+        transport: psl::transport::TransportCfg::dedicated(),
         threads,
     }
 }
@@ -109,6 +110,7 @@ fn full_family_strategy_sweep_is_deterministic() {
         seeds: vec![21],
         methods: vec!["strategy".to_string(), "greedy".to_string()],
         slot_ms: Some(550.0),
+        transport: psl::transport::TransportCfg::dedicated(),
         threads: 3,
     };
     let a = run(&cfg);

@@ -1,0 +1,130 @@
+//! Transport-layer equivalence and invariant suite.
+//!
+//! The dedicated mode must be the identity: every solver decision byte-
+//! identical to the pre-transport code path, across all scenario
+//! families. The shared mode must produce checker-feasible (occupancy
+//! sweep included), deterministic schedules whose effective makespans
+//! respond monotonically to pool capacity, and a capacity covering the
+//! whole roster must reproduce the dedicated instance exactly.
+
+use psl::instance::profiles::Model;
+use psl::instance::scenario::{Scenario, ScenarioCfg};
+use psl::instance::Instance;
+use psl::solver::schedule::{fcfs_schedule, Schedule};
+use psl::solver::{admm, greedy, strategy};
+use psl::transport::TransportCfg;
+
+fn inst_for(scen: Scenario, j: usize, i: usize, seed: u64) -> Instance {
+    ScenarioCfg::new(scen, Model::Vgg19, j, i, seed).generate().quantize(550.0)
+}
+
+fn sched_eq(a: &Schedule, b: &Schedule) -> bool {
+    a.assignment == b.assignment && a.fwd == b.fwd && a.bwd == b.bwd
+}
+
+#[test]
+fn dedicated_transport_is_the_identity_across_all_families() {
+    let ded = TransportCfg::dedicated();
+    for &scen in &Scenario::ALL {
+        let inst = inst_for(scen, 8, 2, 11);
+        // Signals: identical shape, zero contention.
+        let sig = strategy::signals(&inst);
+        let sig_t = strategy::signals_under(&inst, &ded);
+        assert_eq!(sig_t.contention, 0.0, "{}", inst.label);
+        assert_eq!(format!("{sig:?}"), format!("{sig_t:?}"), "{}", inst.label);
+        // Strategy: same method, same schedule.
+        let plain = strategy::solve(&inst, &admm::AdmmCfg::default());
+        let under = strategy::solve_under(&inst, &ded, &admm::AdmmCfg::default());
+        match (&plain, &under) {
+            (None, None) => {}
+            (Some((s1, m1)), Some((s2, m2))) => {
+                assert_eq!(m1, m2, "{}", inst.label);
+                assert!(sched_eq(s1, s2), "{}: schedule diverged under dedicated transport", inst.label);
+            }
+            _ => panic!("dedicated solve_under feasibility diverged on {}", inst.label),
+        }
+        // Greedy: byte-identical too.
+        match (greedy::solve(&inst), greedy::solve_under(&inst, &ded)) {
+            (None, None) => {}
+            (Some(s1), Some(s2)) => {
+                assert!(sched_eq(&s1, &s2), "{}: greedy diverged under dedicated transport", inst.label)
+            }
+            _ => panic!("dedicated greedy feasibility diverged on {}", inst.label),
+        }
+        // The instance projection itself is the identity.
+        let loads = TransportCfg::loads_of(
+            &plain.as_ref().map(|(s, _)| s.assignment.clone()).unwrap_or_else(|| {
+                psl::solver::schedule::Assignment::new(vec![0; inst.n_clients])
+            }),
+            inst.n_helpers,
+        );
+        assert_eq!(format!("{:?}", ded.inflate(&inst, &loads)), format!("{inst:?}"), "{}", inst.label);
+    }
+}
+
+#[test]
+fn shared_transport_schedules_are_feasible_and_deterministic() {
+    for &scen in &[Scenario::S1, Scenario::S4StragglerTail, Scenario::S8FlashCrowd] {
+        let inst = inst_for(scen, 10, 2, 7);
+        let t = TransportCfg::shared(2.0);
+        let (a, ma) = strategy::solve_under(&inst, &t, &admm::AdmmCfg::default())
+            .unwrap_or_else(|| panic!("{}: infeasible under shared uplink", inst.label));
+        let (b, mb) = strategy::solve_under(&inst, &t, &admm::AdmmCfg::default()).unwrap();
+        assert_eq!(ma, mb, "{}", inst.label);
+        assert!(sched_eq(&a, &b), "{}: shared solve must be deterministic", inst.label);
+        // Feasible under the occupancy-aware checker — and the dedicated
+        // lower bound still holds (contention only inflates transfers).
+        let v = a.violations_under(&inst, &t);
+        assert!(v.is_empty(), "{}: {v:?}", inst.label);
+        let eff = t.inflate_for_assignment(&inst, &a.assignment);
+        assert!(a.makespan(&eff) >= inst.makespan_lower_bound(), "{}", inst.label);
+        let g = greedy::solve_under(&inst, &t)
+            .unwrap_or_else(|| panic!("{}: greedy infeasible under shared uplink", inst.label));
+        let gv = g.violations_under(&inst, &t);
+        assert!(gv.is_empty(), "{}: {gv:?}", inst.label);
+    }
+}
+
+#[test]
+fn effective_makespan_is_monotone_in_uplink_capacity() {
+    // Fix the assignment (the paper's balanced placement) and watch the
+    // transport projection alone: a bigger pool can never slow a helper
+    // down, and FCFS on weakly shorter tasks can never finish later.
+    let inst = inst_for(Scenario::S2, 12, 2, 3);
+    let base = greedy::solve(&inst).expect("dedicated greedy feasible");
+    let mut last: Option<u32> = None;
+    for cap in [1.0, 2.0, 4.0, 1e9] {
+        let t = TransportCfg::shared(cap);
+        let eff = t.inflate_for_assignment(&inst, &base.assignment);
+        let f = fcfs_schedule(&eff, base.assignment.clone());
+        let m = f.makespan(&eff);
+        if let Some(prev) = last {
+            assert!(m <= prev, "capacity {cap}: makespan {m} worse than smaller pool's {prev}");
+        }
+        last = Some(m);
+    }
+    // A pool covering the whole roster reproduces the dedicated instance
+    // byte for byte — shared converges to dedicated in the limit.
+    let wide = TransportCfg::shared(1e9);
+    assert_eq!(
+        format!("{:?}", wide.inflate_for_assignment(&inst, &base.assignment)),
+        format!("{inst:?}")
+    );
+}
+
+#[test]
+fn inflation_never_shrinks_a_delay_and_spares_processing() {
+    let inst = inst_for(Scenario::S3Clustered, 9, 3, 21);
+    let base = greedy::solve(&inst).expect("feasible");
+    let t = TransportCfg::shared(1.0);
+    let eff = t.inflate_for_assignment(&inst, &base.assignment);
+    for e in 0..inst.n_clients * inst.n_helpers {
+        assert!(eff.r[e] >= inst.r[e]);
+        assert!(eff.l[e] >= inst.l[e]);
+        assert!(eff.lp[e] >= inst.lp[e]);
+        assert!(eff.rp[e] >= inst.rp[e]);
+        // Contention is a link effect: compute stays untouched.
+        assert_eq!(eff.p[e], inst.p[e]);
+        assert_eq!(eff.pp[e], inst.pp[e]);
+    }
+}
